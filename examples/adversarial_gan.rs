@@ -1,0 +1,124 @@
+//! END-TO-END DRIVER (Fig. 4 / Table 1 workload): train the adversarial-
+//! kernel OT-GAN of paper §4 on a real small workload — the structured
+//! synthetic image corpus — for a few hundred steps, logging the Sinkhorn-
+//! divergence loss curve, then reproduce the Table-1 kernel probe
+//! (learned kernel on image-vs-image, image-vs-noise, noise-vs-noise).
+//!
+//! This exercises the full stack: data pipeline -> generator/embedding MLPs
+//! -> learned positive feature map -> factored kernels -> linear-time
+//! Sinkhorn -> Prop-3.2 envelope gradients -> Adam, with per-step metrics.
+//! The run is recorded in EXPERIMENTS.md.
+//!
+//! Run with: `cargo run --release --example adversarial_gan -- [--steps 300]`
+
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::config::GanConfig;
+use linear_sinkhorn::gan::GanTrainer;
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+
+fn main() -> Result<()> {
+    let args = ArgSpec::new("adversarial_gan", "end-to-end OT-GAN training driver")
+        .opt("steps", "300", "generator steps")
+        .opt("batch", "256", "minibatch size s (linear Sinkhorn makes this cheap)")
+        .opt("features", "64", "learned positive feature count r")
+        .opt("side", "8", "image side in pixels")
+        .opt("eps", "1.0", "Sinkhorn regularisation (paper: 1.0)")
+        .opt("seed", "0", "RNG seed")
+        .opt("csv", "", "optional CSV path for the loss curve")
+        .parse();
+
+    let side = args.get_usize("side");
+    let dim = side * side;
+    let cfg = GanConfig {
+        steps: args.get_usize("steps"),
+        batch_size: args.get_usize("batch"),
+        num_features: args.get_usize("features"),
+        epsilon: args.get_f64("eps"),
+        seed: args.get_u64("seed"),
+        ..Default::default()
+    };
+
+    println!(
+        "adversarial-kernel OT-GAN: {dim}-dim images, batch s={}, r={}, eps={}, {} steps",
+        cfg.batch_size, cfg.num_features, cfg.epsilon, cfg.steps
+    );
+
+    // Data pipeline: structured image corpus (the paper's CIFAR stand-in,
+    // DESIGN.md §7) + held-out noise batch for the Table-1 probe.
+    let mut rng = Rng::seed_from(cfg.seed);
+    let corpus = data::image_corpus(cfg.batch_size * 8, side, &mut rng);
+    let mut trainer = GanTrainer::new(dim, cfg.clone(), &mut rng);
+    let mut batch_rng = Rng::seed_from(cfg.seed ^ 0x5EED);
+
+    let sw = Stopwatch::start();
+    let mut curve: Vec<(usize, f64)> = Vec::new();
+    for step in 0..cfg.steps {
+        let idx = batch_rng.sample_indices(corpus.rows(), cfg.batch_size);
+        let real = Mat::from_fn(cfg.batch_size, dim, |i, j| corpus[(idx[i], j)]);
+        let rep = trainer.train_step(step, &real)?;
+        curve.push((step, rep.divergence));
+        if step % 20 == 0 || step + 1 == cfg.steps {
+            println!(
+                "step {:>4}  loss(divergence) {:>11.6}  w_xy {:>9.5}  [{:.1}s elapsed]",
+                step,
+                rep.divergence,
+                rep.w_xy,
+                sw.elapsed_secs()
+            );
+        }
+    }
+
+    // Loss-curve summary: compare first-decile and last-decile means.
+    let decile = (curve.len() / 10).max(1);
+    let head: f64 = curve[..decile].iter().map(|x| x.1).sum::<f64>() / decile as f64;
+    let tail: f64 =
+        curve[curve.len() - decile..].iter().map(|x| x.1).sum::<f64>() / decile as f64;
+    println!(
+        "\nloss curve: first-decile mean {head:.6} -> last-decile mean {tail:.6} ({})",
+        if tail < head { "improved" } else { "did not improve" }
+    );
+
+    let csv = args.get_str("csv");
+    if !csv.is_empty() {
+        let mut text = String::from("step,divergence\n");
+        for (s, d) in &curve {
+            text.push_str(&format!("{s},{d}\n"));
+        }
+        std::fs::write(csv, text)?;
+        println!("loss curve written to {csv}");
+    }
+
+    // Table-1 probe: the learned kernel should assign much higher values
+    // within the image manifold than between images and noise.
+    let mut probe_rng = Rng::seed_from(999);
+    let imgs = data::image_corpus(5, side, &mut probe_rng);
+    let noise = data::noise_images(5, side, &mut probe_rng);
+    let k_ii = trainer.mean_kernel(&imgs, &imgs);
+    let k_in = trainer.mean_kernel(&imgs, &noise);
+    let k_nn = trainer.mean_kernel(&noise, &noise);
+    println!("\nTable-1 probe (mean learned kernel over 5x5 samples):");
+    println!("  k(image, image) = {k_ii:.4e}");
+    println!("  k(image, noise) = {k_in:.4e}");
+    println!("  k(noise, noise) = {k_nn:.4e}");
+    println!(
+        "  structure captured: k_ii/k_in = {:.2} (paper reports a large ratio)",
+        k_ii / k_in.max(1e-30)
+    );
+
+    // ASCII peek at three generated "images".
+    let samples = trainer.generate(3);
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    for s in 0..3 {
+        println!("\ngenerated sample {s}:");
+        for i in 0..side {
+            let mut line = String::new();
+            for j in 0..side {
+                let v = samples[(s, i * side + j)].clamp(0.0, 1.0);
+                line.push(RAMP[(v * (RAMP.len() - 1) as f32).round() as usize] as char);
+            }
+            println!("  {line}");
+        }
+    }
+    Ok(())
+}

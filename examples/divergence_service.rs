@@ -1,0 +1,132 @@
+//! Serving example: start the L3 coordinator (router + dynamic batcher +
+//! worker pool) and drive it with a mixed workload from multiple client
+//! threads, reporting throughput, latency quantiles and shed counts —
+//! then run the same requests through the PJRT runtime path (AOT-compiled
+//! HLO divergence graph) when artifacts are available.
+//!
+//! Run with: `cargo run --release --example divergence_service`
+
+use std::sync::Arc;
+
+use linear_sinkhorn::config::{BatcherConfig, ServiceConfig, SinkhornConfig};
+use linear_sinkhorn::coordinator::Service;
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+use linear_sinkhorn::runtime::{mat_to_literal, vec_to_literal, Engine, Registry};
+
+fn main() {
+    let cfg = ServiceConfig {
+        workers: 4,
+        batcher: BatcherConfig { max_batch: 8, max_delay_us: 300, queue_depth: 256 },
+        sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 1000, tol: 1e-4, check_every: 10 },
+        num_features: 256,
+    };
+    println!(
+        "starting divergence service: {} workers, batch<= {}, queue {}",
+        cfg.workers, cfg.batcher.max_batch, cfg.batcher.queue_depth
+    );
+    let svc = Service::start(cfg);
+    let handle = svc.handle();
+
+    // Three client threads with different workload mixes.
+    let sw = Stopwatch::start();
+    let clients: Vec<std::thread::JoinHandle<(usize, usize)>> = (0..3)
+        .map(|c| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(c as u64 + 100);
+                let mut done = 0;
+                let mut shed = 0;
+                for i in 0..20 {
+                    let n = [200, 400, 800][(c as usize + i) % 3];
+                    // High-dimensional clouds need a larger regularisation
+                    // (squared distances scale with d) — use the
+                    // per-request epsilon override for the Higgs client.
+                    let (mu, nu, eps) = if c == 0 {
+                        let (a, b) = data::gaussian_blobs(n, &mut rng);
+                        (a, b, None)
+                    } else if c == 1 {
+                        let (a, b) = data::sphere_caps(n, &mut rng);
+                        (a, b, None)
+                    } else {
+                        let (a, b) = data::higgs_pair(n, &mut rng);
+                        (a, b, Some(10.0))
+                    };
+                    match h.submit_with(mu, nu, eps) {
+                        Ok(p) => match p.wait() {
+                            Ok(resp) => {
+                                done += 1;
+                                if done == 1 {
+                                    println!(
+                                        "client {c}: first response divergence={:.5} \
+                                         latency={}us batch={}",
+                                        resp.divergence, resp.latency_us, resp.batch_size
+                                    );
+                                }
+                            }
+                            Err(e) => println!("client {c}: solve error {e}"),
+                        },
+                        Err(_) => shed += 1,
+                    }
+                }
+                (done, shed)
+            })
+        })
+        .collect();
+
+    let mut total = 0;
+    let mut shed = 0;
+    for c in clients {
+        let (d, s) = c.join().unwrap();
+        total += d;
+        shed += s;
+    }
+    let secs = sw.elapsed_secs();
+    println!(
+        "\nserved {total} requests ({shed} shed) in {secs:.2}s = {:.1} req/s",
+        total as f64 / secs
+    );
+    println!("{}", handle.metrics_text());
+    drop(handle);
+    svc.shutdown();
+
+    // PJRT runtime path: run the AOT divergence graph if artifacts exist.
+    match Registry::load("artifacts") {
+        Ok(reg) => match reg.find_prefix("rf_divergence_n256") {
+            Some(meta) => {
+                println!("PJRT path: compiling {} …", meta.name);
+                let engine = Arc::new(Engine::cpu().expect("pjrt cpu client"));
+                let exe = engine.load(meta).expect("compile artifact");
+                // Shapes from the manifest: x, y (n, d), anchors (r, d), a, b (n).
+                let n = meta.params[0].1[0];
+                let d = meta.params[0].1[1];
+                let r = meta.params[2].1[0];
+                let q = meta.constants["q"];
+                let eps = meta.constants["eps"];
+                let mut rng = Rng::seed_from(7);
+                let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+                let sigma = (q * eps / 4.0).sqrt();
+                let anchors =
+                    Mat::from_fn(r, d, |_, _| rng.normal_scaled(0.0, sigma) as f32);
+                let sw = Stopwatch::start();
+                let out = exe
+                    .run(&[
+                        mat_to_literal(&mu.points).unwrap(),
+                        mat_to_literal(&nu.points).unwrap(),
+                        mat_to_literal(&anchors).unwrap(),
+                        vec_to_literal(&mu.weights),
+                        vec_to_literal(&nu.weights),
+                    ])
+                    .expect("execute");
+                let div = out[0].to_vec::<f32>().unwrap()[0];
+                println!(
+                    "PJRT divergence (n={n}, r={r}, eps={eps}): {div:.6} in {:.1} ms \
+                     (python never ran)",
+                    sw.elapsed_secs() * 1e3
+                );
+            }
+            None => println!("no rf_divergence artifact in manifest; skipping PJRT demo"),
+        },
+        Err(e) => println!("artifacts not built ({e}); skipping PJRT demo — run `make artifacts`"),
+    }
+}

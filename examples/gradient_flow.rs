@@ -1,0 +1,97 @@
+//! Sinkhorn-divergence gradient flow: morph one point cloud into another
+//! by descending Wbar(mu(X), nu) on the support locations X — the
+//! application of Prop 3.2's differentiability that the paper contrasts
+//! against Nyström (not differentiable at the inputs).
+//!
+//! Every step is linear-time in the cloud sizes thanks to the factored
+//! kernel. Prints the divergence trace and ASCII scatter plots.
+//!
+//! Run with: `cargo run --release --example gradient_flow`
+
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+use linear_sinkhorn::sinkhorn::gradient_flow_step;
+
+/// Coarse ASCII scatter of two clouds (o = source, x = target).
+fn scatter(mu: &Measure, nu: &Measure) {
+    const W: usize = 64;
+    const H: usize = 20;
+    let mut lo = [f32::INFINITY; 2];
+    let mut hi = [f32::NEG_INFINITY; 2];
+    for m in [mu, nu] {
+        for i in 0..m.len() {
+            for c in 0..2 {
+                lo[c] = lo[c].min(m.points[(i, c)]);
+                hi[c] = hi[c].max(m.points[(i, c)]);
+            }
+        }
+    }
+    let mut grid = vec![b' '; W * H];
+    let mut plot = |m: &Measure, ch: u8| {
+        for i in 0..m.len() {
+            let x = ((m.points[(i, 0)] - lo[0]) / (hi[0] - lo[0]).max(1e-9) * (W - 1) as f32)
+                as usize;
+            let y = ((m.points[(i, 1)] - lo[1]) / (hi[1] - lo[1]).max(1e-9) * (H - 1) as f32)
+                as usize;
+            let cell = &mut grid[y * W + x];
+            *cell = if *cell == b' ' || *cell == ch { ch } else { b'#' };
+        }
+    };
+    plot(nu, b'x');
+    plot(mu, b'o');
+    for row in grid.chunks(W).rev() {
+        println!("  {}", String::from_utf8_lossy(row));
+    }
+}
+
+fn main() -> Result<()> {
+    let args = ArgSpec::new("gradient_flow", "Sinkhorn-divergence flow on point locations")
+        .opt("n", "300", "points per cloud")
+        .opt("steps", "60", "flow steps")
+        .opt("eps", "0.5", "regularisation")
+        .opt("features", "600", "positive random features r")
+        .opt("lr", "0.8", "flow step size")
+        .opt("seed", "0", "seed")
+        .parse();
+
+    let mut rng = Rng::seed_from(args.get_u64("seed"));
+    let n = args.get_usize("n");
+    let eps = args.get_f64("eps");
+
+    // Source: tight blob at the origin. Target: ring of radius 2.
+    let mut mu = data::gaussian_cloud(n, 2, 0.0, 0.25, &mut rng);
+    let ring = Mat::from_fn(n, 2, |i, c| {
+        let t = i as f64 / n as f64 * std::f64::consts::TAU;
+        let rr = 2.0 + 0.05 * rng.normal();
+        (if c == 0 { rr * t.cos() } else { rr * t.sin() }) as f32
+    });
+    let nu = Measure::uniform(ring);
+
+    // One anchor draw reused for the whole flow (radius covers both clouds
+    // plus travel slack).
+    let map = GaussianFeatureMap::new(eps, 4.0, 2, args.get_usize("features"), &mut rng);
+    let cfg = SinkhornConfig { epsilon: eps, max_iters: 1500, tol: 1e-6, check_every: 10 };
+
+    println!("before:");
+    scatter(&mu, &nu);
+
+    let lr = args.get_f64("lr") as f32;
+    let sw = Stopwatch::start();
+    for step in 0..args.get_usize("steps") {
+        let d = gradient_flow_step(&map, &mut mu, &nu, &cfg, lr)?;
+        if step % 10 == 0 {
+            println!("step {step:>3}: divergence {d:.6}");
+        }
+    }
+    let final_div = gradient_flow_step(&map, &mut mu, &nu, &cfg, 0.0)?;
+    println!(
+        "final divergence {final_div:.6} after {} steps in {:.1}s",
+        args.get_usize("steps"),
+        sw.elapsed_secs()
+    );
+
+    println!("after:");
+    scatter(&mu, &nu);
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Domain example: compare distributions across three of the paper's
+//! workloads (2-D Gaussians, sphere bands, 28-dim Higgs-like), showing the
+//! RF / Nys / Sin three-way contrast on each — including the regime where
+//! Nyström loses positivity and errors out while RF keeps running.
+//!
+//! Run with: `cargo run --release --example point_cloud_divergence`
+
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+
+fn run_case(name: &str, mu: &Measure, nu: &Measure, eps: f64, r: usize, rng: &mut Rng) {
+    println!("\n=== {name} (n={}, d={}, eps={eps}, r={r}) ===", mu.len(), mu.dim());
+    let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
+
+    // Sin: dense ground truth.
+    let sw = Stopwatch::start();
+    let dense = DenseKernel::from_measures(mu, nu, eps);
+    let truth = match sinkhorn(&dense, &mu.weights, &nu.weights, &cfg) {
+        Ok(s) => {
+            println!("  Sin: {:.6} ({:.0} ms)", s.objective, sw.elapsed_secs() * 1e3);
+            Some(s.objective)
+        }
+        Err(e) => {
+            println!("  Sin: FAILED ({e})");
+            None
+        }
+    };
+
+    // RF: positive features.
+    let sw = Stopwatch::start();
+    let map = GaussianFeatureMap::fit(mu, nu, eps, r, rng);
+    let fk = FactoredKernel::from_measures(&map, mu, nu);
+    match sinkhorn(&fk, &mu.weights, &nu.weights, &cfg) {
+        Ok(s) => {
+            let dev = truth
+                .map(|t| format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, s.objective)))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "  RF : {:.6} ({:.0} ms, deviation {dev})",
+                s.objective,
+                sw.elapsed_secs() * 1e3
+            );
+        }
+        Err(e) => println!("  RF : FAILED ({e})"),
+    }
+
+    // Nys: the low-rank baseline — may lose positivity.
+    let sw = Stopwatch::start();
+    let nk = NystromKernel::from_measures(mu, nu, eps, r.min(mu.len()), rng);
+    match nk.validate_positive(rng, 3).and_then(|_| sinkhorn(&nk, &mu.weights, &nu.weights, &cfg)) {
+        Ok(s) => {
+            let dev = truth
+                .map(|t| format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, s.objective)))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "  Nys: {:.6} ({:.0} ms, deviation {dev})",
+                s.objective,
+                sw.elapsed_secs() * 1e3
+            );
+        }
+        Err(e) => println!("  Nys: FAILED ({e}) — the positivity failure RF avoids"),
+    }
+}
+
+fn main() {
+    let mut rng = Rng::seed_from(0);
+    let n = 1500;
+
+    // Workload 1: Fig-1 Gaussians, comfortable regularisation.
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+    run_case("gaussian blobs, moderate eps", &mu, &nu, 0.5, 300, &mut rng);
+
+    // Workload 2: same data, small eps — the regime that kills Nyström.
+    run_case("gaussian blobs, small eps", &mu, &nu, 0.05, 300, &mut rng);
+
+    // Workload 3: sphere bands (Fig. 2/3 geometry).
+    let (sa, sb) = data::sphere_caps(n, &mut rng);
+    run_case("sphere bands", &sa, &sb, 0.1, 300, &mut rng);
+
+    // Workload 4: 28-dim Higgs-like (Fig. 5 substitute).
+    let (sig, bkg) = data::higgs_pair(1000, &mut rng);
+    run_case("higgs-like 28-dim", &sig, &bkg, 5.0, 500, &mut rng);
+}

@@ -1,0 +1,150 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Writes one `<name>.hlo.txt` per graph variant plus `manifest.json`
+describing parameter shapes/dtypes, output arity and the static constants
+(eps, q, iters, seed) baked into each artifact. The Rust
+`runtime::Registry` consumes the manifest.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def build_artifacts(out_dir: str, *, quick: bool = False) -> dict:
+    """Lower every graph variant; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "xla_extension": "0.5.1", "entries": {}}
+
+    # Variant grid. Kept deliberately small: CPU PJRT compile time per
+    # artifact is seconds; the native Rust path covers arbitrary sizes.
+    eps_default = 0.5
+    radius = 4.0
+
+    def emit(name, lowered, params, outputs, consts):
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "params": params,
+            "outputs": outputs,
+            "constants": consts,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"  wrote {name}.hlo.txt ({len(text)} chars)")
+
+    sizes = [(256, 64, 2)] if quick else [(256, 64, 2), (1024, 256, 2), (1024, 256, 28)]
+    for (n, r, d) in sizes:
+        q = float(ref.gaussian_q(eps_default, radius, d))
+        name = f"rf_features_n{n}_r{r}_d{d}"
+        lowered = jax.jit(
+            lambda x, u: model.features_graph(x, u, eps=eps_default, q=q)
+        ).lower(_spec(n, d), _spec(r, d))
+        emit(name, lowered,
+             params=[["x", [n, d]], ["u", [r, d]]],
+             outputs=[["phi", [n, r]]],
+             consts={"eps": eps_default, "q": q, "radius": radius})
+
+    iters = 20 if quick else 100
+    sk_sizes = [(256, 64)] if quick else [(256, 64), (1024, 256), (4096, 512)]
+    for (n, r) in sk_sizes:
+        name = f"rf_sinkhorn_n{n}_r{r}_it{iters}"
+        lowered = jax.jit(
+            lambda px, py, a, b: model.rf_sinkhorn_graph(
+                px, py, a, b, eps=eps_default, iters=iters, use_pallas=False)
+        ).lower(_spec(n, r), _spec(n, r), _spec(n), _spec(n))
+        emit(name, lowered,
+             params=[["phi_x", [n, r]], ["phi_y", [n, r]], ["a", [n]], ["b", [n]]],
+             outputs=[["u", [n]], ["v", [n]], ["w_hat", []]],
+             consts={"eps": eps_default, "iters": iters})
+
+    dn = 256 if quick else 1024
+    name = f"dense_sinkhorn_n{dn}_it{iters}"
+    lowered = jax.jit(
+        lambda k, a, b: model.dense_sinkhorn_graph(
+            k, a, b, eps=eps_default, iters=iters)
+    ).lower(_spec(dn, dn), _spec(dn), _spec(dn))
+    emit(name, lowered,
+         params=[["kmat", [dn, dn]], ["a", [dn]], ["b", [dn]]],
+         outputs=[["u", [dn]], ["v", [dn]], ["w_hat", []]],
+         consts={"eps": eps_default, "iters": iters})
+
+    # End-to-end divergence: points in, scalar out (used by the service).
+    div_sizes = [(256, 64, 2)] if quick else [(256, 64, 2), (1024, 256, 2)]
+    for (n, r, d) in div_sizes:
+        q = float(ref.gaussian_q(eps_default, radius, d))
+        name = f"rf_divergence_n{n}_r{r}_d{d}_it{iters}"
+        lowered = jax.jit(
+            lambda x, y, anchors, a, b: model.rf_divergence_graph(
+                x, y, anchors, a, b, eps=eps_default, q=q, iters=iters)
+        ).lower(_spec(n, d), _spec(n, d), _spec(r, d), _spec(n), _spec(n))
+        emit(name, lowered,
+             params=[["x", [n, d]], ["y", [n, d]], ["anchors", [r, d]],
+                     ["a", [n]], ["b", [n]]],
+             outputs=[["divergence", []]],
+             consts={"eps": eps_default, "q": q, "iters": iters})
+
+    # GAN critic gradient (Prop 3.2), batch s x features r.
+    s, r = (128, 64) if quick else (512, 128)
+    gan_iters = 20 if quick else 50
+    name = f"critic_grad_s{s}_r{r}_it{gan_iters}"
+    lowered = jax.jit(
+        lambda px, py, a, b: model.critic_grad_graph(
+            px, py, a, b, eps=1.0, iters=gan_iters)
+    ).lower(_spec(s, r), _spec(s, r), _spec(s), _spec(s))
+    emit(name, lowered,
+         params=[["phi_x", [s, r]], ["phi_y", [s, r]], ["a", [s]], ["b", [s]]],
+         outputs=[["g_phi_x", [s, r]], ["g_phi_y", [s, r]], ["w_hat", []]],
+         consts={"eps": 1.0, "iters": gan_iters})
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="small variant grid (CI / smoke)")
+    args = ap.parse_args()
+    print(f"AOT lowering to {args.out} (quick={args.quick})")
+    build_artifacts(args.out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

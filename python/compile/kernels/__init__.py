@@ -1,0 +1,2 @@
+"""L1 Pallas kernels for the linear-time Sinkhorn hot spots."""
+from . import factored_apply, gaussian_features, ref  # noqa: F401

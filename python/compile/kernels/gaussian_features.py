@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: Lemma-1 positive Gaussian feature matrix.
+
+Computes Phi[i, j] = (2q)^{d/4} exp(-2/eps ||x_i - u_j||^2 + ||u_j||^2/(eps q))
+                     / sqrt(r)
+for x in R^{n x d} (points) and u in R^{r x d} (anchors drawn from
+N(0, q*eps/4 I_d)).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the (n, r) output is tiled
+into (BLOCK_N, BLOCK_R) VMEM blocks; the squared distance is expanded as
+||x||^2 - 2 x.u + ||u||^2 so the inner contraction `x_block @ u_block.T` is
+a (BLOCK_N, d) x (d, BLOCK_R) matmul that maps onto the MXU, while the two
+norm vectors are cheap VPU reductions. This is the TPU analogue of the
+threadblock-shared-memory tiling a CUDA implementation would use.
+
+NOTE: `interpret=True` everywhere — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU numbers are estimated analytically in
+DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block shape chosen so x-block (256 x d), u-block (256 x d), the (256, 256)
+# f32 output tile and two norm vectors stay ~1.1 MB for d<=64 — comfortably
+# inside 16 MB VMEM with double-buffering headroom.
+BLOCK_N = 256
+BLOCK_R = 256
+
+
+def _features_kernel(x_ref, u_ref, o_ref, *, eps: float, q: float, d: int, r: int):
+    """One (BLOCK_N, BLOCK_R) tile of the feature matrix."""
+    x = x_ref[...]                         # (bn, d)
+    u = u_ref[...]                         # (br, d)
+    dot = jnp.dot(x, u.T, preferred_element_type=jnp.float32)   # MXU
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    uu = jnp.sum(u * u, axis=1)[None, :]
+    sq = xx - 2.0 * dot + uu
+    log_phi = (d / 4.0) * jnp.log(2.0 * q) \
+        - (2.0 / eps) * sq + uu / (eps * q) \
+        - 0.5 * jnp.log(float(r))
+    # Same clamp window as ref.LOG_FLOOR/LOG_CEIL: keeps positivity-by-
+    # construction true in f32 (exp(-80) is a normal float, exact 0 is not)
+    # and guards the anchor-norm term against overflow at extreme (eps, q).
+    o_ref[...] = jnp.exp(jnp.clip(log_phi, -80.0, 80.0))
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "q"))
+def gaussian_features(x, u, *, eps: float, q: float):
+    """Tiled positive feature matrix, shape (n, r), all entries > 0.
+
+    Pads n and r up to block multiples, runs the Pallas grid, slices back.
+    """
+    n, d = x.shape
+    r = u.shape[0]
+    bn = min(BLOCK_N, _ceil_to(n, 8))
+    br = min(BLOCK_R, _ceil_to(r, 8))
+    n_pad = _ceil_to(n, bn)
+    r_pad = _ceil_to(r, br)
+    # Zero-padding x rows is harmless (rows are sliced away); padding u rows
+    # with zeros would inject exp(+uu/(eps q)) = 1 columns — also sliced away.
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    up = jnp.pad(u, ((0, r_pad - r), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_features_kernel, eps=eps, q=q, d=d, r=r),
+        grid=(n_pad // bn, r_pad // br),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, br), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, r_pad), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), up.astype(jnp.float32))
+    return out[:n, :r]

@@ -1,0 +1,150 @@
+"""Pure-jnp reference oracle for the Pallas kernels and the L2 model.
+
+Everything here is straight-line jax.numpy with no Pallas, no tiling and no
+cleverness: it is the ground truth that `python/tests/` compares the Pallas
+kernels and the AOT'd HLO against.
+
+Math reference (Scetbon & Cuturi 2020, Lemma 1):
+    q      = eps^{-1} R^2 / (2 d W0(eps^{-1} R^2 / d))
+    rho    = N(0, (q eps / 4) I_d)
+    phi(x, u) = (2q)^{d/4} exp(-2 eps^{-1} ||x - u||^2) exp(eps^{-1}||u||^2 / q)
+    k(x, y)   = E_{u~rho}[phi(x,u) phi(y,u)] = exp(-||x-y||^2 / eps)
+Monte-Carlo with r draws and a 1/sqrt(r) normalisation gives the positive
+feature matrices  xi = Phi(X) in R_+^{n x r}  with  K ~= xi @ zeta^T.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lambert_w0(z, iters: int = 32):
+    """Principal branch of the Lambert W function via Halley iterations.
+
+    Valid for z >= 0 (all uses in Lemma 1 have z > 0). Matches
+    scipy.special.lambertw to ~1e-12 on [1e-6, 1e6].
+    """
+    z = jnp.asarray(z, dtype=jnp.float64 if jnp.asarray(z).dtype == jnp.float64 else jnp.float32)
+    # Initial guess: log-based for large z, rational for small z.
+    logz = jnp.log(jnp.maximum(z, 1e-30))
+    w = jnp.where(z > jnp.e, logz - jnp.log(jnp.maximum(logz, 1e-30)), z / (1.0 + z))
+    for _ in range(iters):
+        ew = jnp.exp(w)
+        f = w * ew - z
+        # Halley update.
+        w = w - f / (ew * (w + 1.0) - (w + 2.0) * f / (2.0 * w + 2.0))
+    return w
+
+
+def gaussian_q(eps: float, radius: float, dim: int):
+    """The Lemma-1 constant q = eps^{-1}R^2 / (2 d W0(eps^{-1}R^2/d))."""
+    z = (radius ** 2) / (eps * dim)
+    return (radius ** 2) / (eps * 2.0 * dim * lambert_w0(jnp.asarray(z)))
+
+
+# Positivity by construction is the paper's point, but exp() underflows f32
+# below ~1e-38 and would re-introduce exact zeros into the kernel (and hence
+# divisions by zero in Alg. 1). Clamping the log-feature at -80 keeps every
+# entry a normal positive float (exp(-80) ~ 1.8e-35) while perturbing no
+# value that was representable to begin with. The symmetric ceiling at +80
+# (exp(80) ~ 5.5e34) guards the anchor-norm term uu/(eps q) against f32
+# overflow for extreme (eps, q) combinations.
+LOG_FLOOR = -80.0
+LOG_CEIL = 80.0
+
+
+def sq_dists(x, u):
+    """Pairwise squared euclidean distances, (n,d) x (r,d) -> (n,r)."""
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    uu = jnp.sum(u * u, axis=1)[None, :]
+    return xx - 2.0 * x @ u.T + uu
+
+
+def gaussian_features(x, u, eps: float, q: float):
+    """Positive feature matrix Phi in R_+^{n x r} (Lemma 1, 1/sqrt(r) folded in).
+
+    x: (n, d) points; u: (r, d) random anchors drawn from N(0, q*eps/4 I).
+    """
+    n, d = x.shape
+    r = u.shape[0]
+    sq = sq_dists(x, u)                      # (n, r)
+    uu = jnp.sum(u * u, axis=1)[None, :]     # (1, r)
+    log_phi = (d / 4.0) * jnp.log(2.0 * q) \
+        - 2.0 * sq / eps + uu / (eps * q) \
+        - 0.5 * jnp.log(float(r))
+    return jnp.exp(jnp.clip(log_phi, LOG_FLOOR, LOG_CEIL))
+
+
+def arccos_features(x, u, s: int, kappa: float, sigma: float):
+    """Perturbed arc-cosine positive features (Lemma 3).
+
+    Returns (n, r+1): r rectified-projection features plus the constant
+    sqrt(kappa) column that makes the kernel bounded away from zero.
+    """
+    n, d = x.shape
+    r = u.shape[0]
+    proj = jnp.maximum(x @ u.T, 0.0) ** s                      # (n, r)
+    uu = jnp.sum(u * u, axis=1)[None, :]
+    scale = (sigma ** (d / 2.0)) * jnp.sqrt(2.0) * jnp.exp(-(uu / 4.0) * (1.0 - 1.0 / sigma ** 2))
+    feats = proj * scale / jnp.sqrt(float(r))
+    const = jnp.full((n, 1), jnp.sqrt(kappa))
+    return jnp.concatenate([feats, const], axis=1)
+
+
+def gibbs_kernel(x, y, eps: float):
+    """Dense Gibbs kernel exp(-||x-y||^2/eps) — the `Sin` baseline."""
+    return jnp.exp(-sq_dists(x, y) / eps)
+
+
+def matvec(a, v):
+    """Reference for the Pallas blocked matvec: a @ v."""
+    return a @ v
+
+
+def matvec_t(a, v):
+    """Reference for the Pallas blocked transpose-matvec: a.T @ v."""
+    return a.T @ v
+
+
+def factored_apply(phi_x, phi_y, v):
+    """K v with K = phi_x @ phi_y^T, computed in O(r(n+m))."""
+    return phi_x @ (phi_y.T @ v)
+
+
+def sinkhorn_dense(kmat, a, b, iters: int):
+    """Algorithm 1 on a dense kernel matrix; returns (u, v, w_hat/eps)."""
+    u = jnp.ones_like(a)
+    v = jnp.ones_like(b)
+    for _ in range(iters):
+        v = b / (kmat.T @ u)
+        u = a / (kmat @ v)
+    w_hat = jnp.sum(a * jnp.log(u)) + jnp.sum(b * jnp.log(v))
+    return u, v, w_hat
+
+
+def sinkhorn_factored(phi_x, phi_y, a, b, iters: int):
+    """Algorithm 1 with the factored kernel xi^T zeta; O(r(n+m)) per iter."""
+    u = jnp.ones_like(a)
+    v = jnp.ones_like(b)
+    for _ in range(iters):
+        v = b / (phi_y @ (phi_x.T @ u))
+        u = a / (phi_x @ (phi_y.T @ v))
+    w_hat = jnp.sum(a * jnp.log(u)) + jnp.sum(b * jnp.log(v))
+    return u, v, w_hat
+
+
+def rot_value(eps: float, a, b, u, v):
+    """Eq. (6): eps * (a^T log u + b^T log v) estimates W_{eps,c}."""
+    return eps * (jnp.sum(a * jnp.log(u)) + jnp.sum(b * jnp.log(v)))
+
+
+def marginal_error(kmat, a, b, u, v):
+    """L1 violation of the column marginal, Alg. 1's stopping criterion."""
+    return jnp.sum(jnp.abs(v * (kmat.T @ u) - b))
+
+
+def sinkhorn_divergence_factored(phi_x, phi_y, a, b, eps: float, iters: int):
+    """Eq. (2) with three factored transport problems."""
+    _, _, w_xy = sinkhorn_factored(phi_x, phi_y, a, b, iters)
+    _, _, w_xx = sinkhorn_factored(phi_x, phi_x, a, a, iters)
+    _, _, w_yy = sinkhorn_factored(phi_y, phi_y, b, b, iters)
+    return eps * (w_xy - 0.5 * (w_xx + w_yy))

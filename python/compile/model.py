@@ -1,0 +1,116 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+
+Build-time only — these functions are AOT-lowered by `aot.py` into HLO text
+that the Rust runtime loads; Python never runs on the request path.
+
+Graphs provided:
+  * `features_graph`        — Lemma-1 positive feature matrix (Pallas inside).
+  * `rf_sinkhorn_graph`     — fixed-iteration factored Sinkhorn (Alg. 1 with
+                              K = Phi_x Phi_y^T), O(r(n+m)) per iteration.
+  * `dense_sinkhorn_graph`  — dense baseline (`Sin`), O(nm) per iteration.
+  * `rf_divergence_graph`   — Eq. (2) Sinkhorn divergence, three factored
+                              transport problems sharing feature matrices.
+  * `critic_grad_graph`     — Prop-3.2 analytic gradient of W w.r.t. the
+                              feature matrices (no unrolling through the
+                              Sinkhorn loop), for the adversarial-kernel GAN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import factored_apply as fa
+from .kernels import gaussian_features as gf
+
+# The Sinkhorn loop body is two factored applies. We keep the loop as a
+# lax.scan so the lowered HLO is a compact While op instead of an unrolled
+# chain of `iters` matmuls (smaller artifact, same compute).
+
+
+def _rf_sinkhorn_scan(phi_x, phi_y, a, b, iters: int, use_pallas: bool):
+    apply = fa.factored_apply if use_pallas else (lambda px, py, v: px @ (py.T @ v))
+    apply_t = fa.factored_apply_t if use_pallas else (lambda px, py, u: py @ (px.T @ u))
+
+    def body(carry, _):
+        u, v = carry
+        v = b / apply_t(phi_x, phi_y, u)
+        u = a / apply(phi_x, phi_y, v)
+        return (u, v), None
+
+    u0 = jnp.ones_like(a)
+    v0 = jnp.ones_like(b)
+    (u, v), _ = jax.lax.scan(body, (u0, v0), None, length=iters)
+    return u, v
+
+
+def features_graph(x, u, *, eps: float, q: float):
+    """Positive feature matrix (n, r) — L1 Pallas kernel, jit boundary."""
+    return gf.gaussian_features(x, u, eps=eps, q=q)
+
+
+def rf_sinkhorn_graph(phi_x, phi_y, a, b, *, eps: float, iters: int,
+                      use_pallas: bool = True):
+    """Returns (u, v, w_hat) with w_hat = eps(a^T log u + b^T log v)."""
+    u, v = _rf_sinkhorn_scan(phi_x, phi_y, a, b, iters, use_pallas)
+    w_hat = eps * (jnp.sum(a * jnp.log(u)) + jnp.sum(b * jnp.log(v)))
+    return u, v, w_hat
+
+
+def dense_sinkhorn_graph(kmat, a, b, *, eps: float, iters: int):
+    """Dense Alg. 1 baseline over an explicit kernel matrix."""
+
+    def body(carry, _):
+        u, v = carry
+        v = b / (kmat.T @ u)
+        u = a / (kmat @ v)
+        return (u, v), None
+
+    u0 = jnp.ones_like(a)
+    v0 = jnp.ones_like(b)
+    (u, v), _ = jax.lax.scan(body, (u0, v0), None, length=iters)
+    w_hat = eps * (jnp.sum(a * jnp.log(u)) + jnp.sum(b * jnp.log(v)))
+    return u, v, w_hat
+
+
+def rf_divergence_graph(x, y, anchors, a, b, *, eps: float, q: float,
+                        iters: int):
+    """Eq. (2): W(mu,nu) - (W(mu,mu) + W(nu,nu))/2, all factored.
+
+    Feature matrices are computed once (Pallas) and shared by the three
+    transport problems — the xy, xx and yy kernels reuse Phi_x and Phi_y.
+    """
+    phi_x = gf.gaussian_features(x, anchors, eps=eps, q=q)
+    phi_y = gf.gaussian_features(y, anchors, eps=eps, q=q)
+    _, _, w_xy = rf_sinkhorn_graph(phi_x, phi_y, a, b, eps=eps, iters=iters,
+                                   use_pallas=False)
+    _, _, w_xx = rf_sinkhorn_graph(phi_x, phi_x, a, a, eps=eps, iters=iters,
+                                   use_pallas=False)
+    _, _, w_yy = rf_sinkhorn_graph(phi_y, phi_y, b, b, eps=eps, iters=iters,
+                                   use_pallas=False)
+    return w_xy - 0.5 * (w_xx + w_yy)
+
+
+def critic_grad_graph(phi_x, phi_y, a, b, *, eps: float, iters: int):
+    """Prop-3.2 gradient of W_{eps,c_theta} w.r.t. the feature matrices.
+
+    nabla_K G = -eps * u v^T evaluated at the Sinkhorn-output scalings,
+    chained onto K = Phi_x Phi_y^T:
+        dW/dPhi_x[i, k] = -eps * u_i * (Phi_y^T v)_k
+        dW/dPhi_y[j, k] = -eps * v_j * (Phi_x^T u)_k
+    No differentiation *through* the loop: duals are treated as constants
+    (envelope theorem), which is the paper's memory-efficient strategy.
+    """
+    u, v = _rf_sinkhorn_scan(phi_x, phi_y, a, b, iters, use_pallas=False)
+    u = jax.lax.stop_gradient(u)
+    v = jax.lax.stop_gradient(v)
+    ky_v = phi_y.T @ v                      # (r,)
+    kx_u = phi_x.T @ u                      # (r,)
+    g_phi_x = -eps * u[:, None] * ky_v[None, :]
+    g_phi_y = -eps * v[:, None] * kx_u[None, :]
+    w_hat = eps * (jnp.sum(a * jnp.log(u)) + jnp.sum(b * jnp.log(v)))
+    return g_phi_x, g_phi_y, w_hat
+
+
+def marginal_error_graph(phi_x, phi_y, b, u, v):
+    """L1 column-marginal violation for the factored kernel."""
+    return jnp.sum(jnp.abs(v * (phi_y @ (phi_x.T @ u)) - b))

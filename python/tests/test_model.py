@@ -1,0 +1,134 @@
+"""L2 correctness: Sinkhorn graphs — factored vs dense equivalence and the
+transport invariants the paper's theory relies on."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _problem(seed, n=40, m=36, r=12):
+    rng = np.random.default_rng(seed)
+    px = rng.uniform(0.2, 1.2, size=(n, r)).astype(np.float32)
+    py = rng.uniform(0.2, 1.2, size=(m, r)).astype(np.float32)
+    a = rng.uniform(0.5, 1.5, size=n).astype(np.float32)
+    b = rng.uniform(0.5, 1.5, size=m).astype(np.float32)
+    a /= a.sum()
+    b /= b.sum()
+    return jnp.array(px), jnp.array(py), jnp.array(a), jnp.array(b)
+
+
+def test_rf_sinkhorn_matches_dense_on_same_kernel():
+    """Alg. 1 over K = Phi_x Phi_y^T must give identical scalings whether
+    K is applied densely or through the factors."""
+    px, py, a, b = _problem(0)
+    kmat = px @ py.T
+    u_f, v_f, w_f = model.rf_sinkhorn_graph(px, py, a, b, eps=0.5, iters=60,
+                                            use_pallas=False)
+    u_d, v_d, w_d = model.dense_sinkhorn_graph(kmat, a, b, eps=0.5, iters=60)
+    np.testing.assert_allclose(np.asarray(u_f), np.asarray(u_d), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(v_f), np.asarray(v_d), rtol=1e-4)
+    assert abs(float(w_f) - float(w_d)) < 1e-4 * max(1.0, abs(float(w_d)))
+
+
+def test_rf_sinkhorn_pallas_path_matches_jnp_path():
+    px, py, a, b = _problem(1, n=33, m=29, r=8)
+    u_p, v_p, w_p = model.rf_sinkhorn_graph(px, py, a, b, eps=0.5, iters=30,
+                                            use_pallas=True)
+    u_j, v_j, w_j = model.rf_sinkhorn_graph(px, py, a, b, eps=0.5, iters=30,
+                                            use_pallas=False)
+    np.testing.assert_allclose(np.asarray(u_p), np.asarray(u_j), rtol=2e-4)
+    assert abs(float(w_p) - float(w_j)) < 2e-4 * max(1.0, abs(float(w_j)))
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_sinkhorn_marginals_feasible_after_convergence(seed):
+    """After enough iterations diag(u) K diag(v) has marginals (a, b)."""
+    px, py, a, b = _problem(seed, n=25, m=25, r=10)
+    u, v, _ = model.rf_sinkhorn_graph(px, py, a, b, eps=0.5, iters=300,
+                                      use_pallas=False)
+    kmat = np.asarray(px @ py.T)
+    plan = np.asarray(u)[:, None] * kmat * np.asarray(v)[None, :]
+    np.testing.assert_allclose(plan.sum(axis=1), np.asarray(a), atol=1e-4)
+    np.testing.assert_allclose(plan.sum(axis=0), np.asarray(b), atol=1e-4)
+
+
+def test_plan_mass_is_one_after_one_iteration():
+    """u^T K v = 1 after even one full Sinkhorn sweep (paper §2)."""
+    px, py, a, b = _problem(3)
+    u, v, _ = model.rf_sinkhorn_graph(px, py, a, b, eps=0.5, iters=1,
+                                      use_pallas=False)
+    mass = float(np.asarray(u) @ np.asarray(px @ py.T) @ np.asarray(v))
+    assert abs(mass - 1.0) < 1e-5
+
+
+def test_divergence_of_identical_measures_is_zero():
+    rng = np.random.default_rng(5)
+    n, r, d = 30, 16, 2
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    anchors = rng.normal(size=(r, d)).astype(np.float32) * 0.8
+    a = np.full(n, 1.0 / n, dtype=np.float32)
+    div = float(model.rf_divergence_graph(
+        jnp.array(x), jnp.array(x), jnp.array(anchors), jnp.array(a),
+        jnp.array(a), eps=0.5, q=2.0, iters=200))
+    assert abs(div) < 1e-5
+
+
+def test_divergence_positive_for_separated_measures():
+    rng = np.random.default_rng(6)
+    n, r, d = 30, 64, 2
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.normal(size=(n, d)).astype(np.float32) + 3.0
+    q = float(ref.gaussian_q(0.5, 5.0, d))
+    anchors = (rng.normal(size=(r, d)) * np.sqrt(q * 0.5 / 4)).astype(np.float32)
+    a = np.full(n, 1.0 / n, dtype=np.float32)
+    div = float(model.rf_divergence_graph(
+        jnp.array(x), jnp.array(y), jnp.array(anchors), jnp.array(a),
+        jnp.array(a), eps=0.5, q=q, iters=200))
+    assert div > 0.1
+
+
+def test_critic_grad_shapes_and_signs():
+    px, py, a, b = _problem(7, n=20, m=20, r=6)
+    gx, gy, w = model.critic_grad_graph(px, py, a, b, eps=0.5, iters=50)
+    assert gx.shape == px.shape and gy.shape == py.shape
+    # Gradient of W wrt K is -eps u v^T < 0 elementwise; chain through
+    # positive factors keeps the sign.
+    assert (np.asarray(gx) < 0).all()
+    assert (np.asarray(gy) < 0).all()
+
+
+def test_critic_grad_matches_finite_difference():
+    """Envelope-theorem gradient vs central finite differences on W(K)."""
+    px, py, a, b = _problem(8, n=12, m=12, r=4)
+    eps = 0.5
+    iters = 800  # near-exact duals so the envelope gradient is accurate
+
+    def w_of(px_, py_):
+        _, _, w = model.rf_sinkhorn_graph(px_, py_, a, b, eps=eps,
+                                          iters=iters, use_pallas=False)
+        return float(w)
+
+    gx, gy, _ = model.critic_grad_graph(px, py, a, b, eps=eps, iters=iters)
+    h = 1e-3
+    for (i, k) in [(0, 0), (3, 2), (11, 3)]:
+        pert = np.zeros_like(np.asarray(px))
+        pert[i, k] = h
+        num = (w_of(jnp.array(np.asarray(px) + pert), py)
+               - w_of(jnp.array(np.asarray(px) - pert), py)) / (2 * h)
+        got = float(np.asarray(gx)[i, k])
+        assert abs(num - got) < 5e-2 * max(0.1, abs(num)), (num, got)
+
+
+def test_marginal_error_goes_to_zero():
+    px, py, a, b = _problem(9)
+    errs = []
+    for iters in (1, 10, 100):
+        u, v, _ = model.rf_sinkhorn_graph(px, py, a, b, eps=0.5, iters=iters,
+                                          use_pallas=False)
+        errs.append(float(model.marginal_error_graph(px, py, b, u, v)))
+    assert errs[2] < errs[0]
+    assert errs[2] < 1e-4

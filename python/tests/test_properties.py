@@ -1,0 +1,190 @@
+"""Deeper property sweeps over the L1/L2 stack (hypothesis).
+
+These complement test_kernels.py: instead of fixed tolerances against the
+oracle, they assert *structural* invariants of the transport pipeline that
+must hold for any shapes/values — positivity, mass conservation, adjoint
+identities, scaling equivariances the paper's math relies on.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import factored_apply as fa
+from compile.kernels import gaussian_features as gf
+from compile.kernels import ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# Feature-map structure
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=40),
+       st.integers(min_value=1, max_value=40),
+       st.integers(min_value=1, max_value=6),
+       st.floats(min_value=0.1, max_value=4.0),
+       st.floats(min_value=0.5, max_value=6.0),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_features_always_positive_and_finite(n, r, d, eps, q, seed):
+    rng = _rng(seed)
+    x = (rng.normal(size=(n, d)) * 3).astype(np.float32)
+    u = (rng.normal(size=(r, d)) * 2).astype(np.float32)
+    phi = np.asarray(gf.gaussian_features(jnp.array(x), jnp.array(u), eps=eps, q=q))
+    assert np.isfinite(phi).all()
+    assert (phi > 0).all()
+
+
+@given(st.integers(min_value=2, max_value=30),
+       st.integers(min_value=1, max_value=20),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_kernel_symmetry_same_points(n, r, seed):
+    """k_theta(x, y) = k_theta(y, x): the factored kernel matrix built from
+    one cloud against itself is symmetric."""
+    rng = _rng(seed)
+    x = rng.normal(size=(n, 2)).astype(np.float32)
+    u = rng.normal(size=(r, 2)).astype(np.float32)
+    phi = np.asarray(ref.gaussian_features(jnp.array(x), jnp.array(u), 0.5, 2.0))
+    k = phi @ phi.T
+    np.testing.assert_allclose(k, k.T, rtol=1e-5)
+    # Diagonal dominates in the Gibbs sense: k(x,x) >= k(x,y) in expectation
+    # is NOT guaranteed per-draw, but PSD is guaranteed structurally.
+    eigs = np.linalg.eigvalsh(k.astype(np.float64))
+    assert eigs.min() > -1e-5 * max(1.0, eigs.max()), "factored kernel must be PSD"
+
+
+@given(st.integers(min_value=1, max_value=25),
+       st.integers(min_value=1, max_value=25),
+       st.integers(min_value=1, max_value=10),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_matvec_linearity(m, k, scale_i, seed):
+    """A(av + bw) == a Av + b Aw for the Pallas blocked matvec."""
+    rng = _rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    v = rng.normal(size=(k,)).astype(np.float32)
+    w = rng.normal(size=(k,)).astype(np.float32)
+    alpha = float(scale_i)
+    lhs = np.asarray(fa.matvec(jnp.array(a), jnp.array(alpha * v + w)))
+    rhs = alpha * np.asarray(fa.matvec(jnp.array(a), jnp.array(v))) + np.asarray(
+        fa.matvec(jnp.array(a), jnp.array(w)))
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Sinkhorn invariants
+# ---------------------------------------------------------------------------
+
+def _transport_problem(rng, n, m, r):
+    px = rng.uniform(0.2, 1.5, size=(n, r)).astype(np.float32)
+    py = rng.uniform(0.2, 1.5, size=(m, r)).astype(np.float32)
+    a = rng.uniform(0.3, 1.0, size=n).astype(np.float32)
+    b = rng.uniform(0.3, 1.0, size=m).astype(np.float32)
+    a /= a.sum()
+    b /= b.sum()
+    return jnp.array(px), jnp.array(py), jnp.array(a), jnp.array(b)
+
+
+@given(st.integers(min_value=2, max_value=30),
+       st.integers(min_value=2, max_value=30),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_scalings_always_positive(n, m, r, seed):
+    rng = _rng(seed)
+    px, py, a, b = _transport_problem(rng, n, m, r)
+    u, v, w = model.rf_sinkhorn_graph(px, py, a, b, eps=0.7, iters=50,
+                                      use_pallas=False)
+    assert (np.asarray(u) > 0).all(), "positivity by construction"
+    assert (np.asarray(v) > 0).all()
+    assert np.isfinite(float(w))
+
+
+@given(st.integers(min_value=3, max_value=20),
+       st.floats(min_value=0.5, max_value=4.0),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_kernel_scaling_shifts_objective_by_eps_log_c(n, c, seed):
+    """Replacing K by c*K shifts the dual estimate by exactly -eps log c
+    (the plan is unchanged: scalings absorb the constant)."""
+    rng = _rng(seed)
+    px, py, a, b = _transport_problem(rng, n, n, 5)
+    eps = 0.5
+    _, _, w1 = model.rf_sinkhorn_graph(px, py, a, b, eps=eps, iters=400,
+                                       use_pallas=False)
+    _, _, w2 = model.rf_sinkhorn_graph(
+        px * np.sqrt(c, dtype=np.float32), py * np.sqrt(c, dtype=np.float32),
+        a, b, eps=eps, iters=400, use_pallas=False)
+    shift = float(w1) - float(w2)
+    expect = eps * np.log(c)
+    assert abs(shift - expect) < 5e-3 * max(1.0, abs(expect)), (shift, expect)
+
+
+@given(st.integers(min_value=3, max_value=18),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_permutation_equivariance(n, seed):
+    """Permuting the support points permutes the scalings, leaves W."""
+    rng = _rng(seed)
+    px, py, a, b = _transport_problem(rng, n, n, 4)
+    perm = rng.permutation(n)
+    u1, v1, w1 = model.rf_sinkhorn_graph(px, py, a, b, eps=0.5, iters=200,
+                                         use_pallas=False)
+    u2, v2, w2 = model.rf_sinkhorn_graph(
+        jnp.array(np.asarray(px)[perm]), py, jnp.array(np.asarray(a)[perm]), b,
+        eps=0.5, iters=200, use_pallas=False)
+    assert abs(float(w1) - float(w2)) < 1e-4 * max(1.0, abs(float(w1)))
+    np.testing.assert_allclose(np.asarray(u2), np.asarray(u1)[perm], rtol=1e-4)
+
+
+def test_divergence_triangle_of_scales():
+    """Wbar grows with separation (sanity of the debiased divergence)."""
+    rng = _rng(0)
+    n, r, d = 24, 48, 2
+    a = np.full(n, 1.0 / n, dtype=np.float32)
+    q = float(ref.gaussian_q(0.5, 6.0, d))
+    anchors = (rng.normal(size=(r, d)) * np.sqrt(q * 0.5 / 4)).astype(np.float32)
+    base = rng.normal(size=(n, d)).astype(np.float32) * 0.3
+    prev = -1e-9
+    for shift in [0.5, 1.5, 3.0]:
+        y = base + np.array([shift, 0.0], dtype=np.float32)
+        div = float(model.rf_divergence_graph(
+            jnp.array(base), jnp.array(y), jnp.array(anchors), jnp.array(a),
+            jnp.array(a), eps=0.5, q=q, iters=300))
+        assert div > prev, f"divergence must grow with separation ({div} after {prev})"
+        prev = div
+
+
+# ---------------------------------------------------------------------------
+# Gradient structure (Prop 3.2)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=3, max_value=15),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_critic_grad_nonpositive_elementwise(n, r, seed):
+    """-eps u (Phi^T v)^T through positive factors is elementwise <= 0."""
+    rng = _rng(seed)
+    px, py, a, b = _transport_problem(rng, n, n, r)
+    gx, gy, _ = model.critic_grad_graph(px, py, a, b, eps=0.5, iters=100)
+    assert (np.asarray(gx) <= 0).all()
+    assert (np.asarray(gy) <= 0).all()
+
+
+def test_critic_grad_scale_with_eps():
+    """The envelope gradient scales linearly with eps at fixed duals
+    structure (first-order check at two nearby eps)."""
+    rng = _rng(3)
+    px, py, a, b = _transport_problem(rng, 10, 10, 4)
+    gx1, _, _ = model.critic_grad_graph(px, py, a, b, eps=1.0, iters=500)
+    gx2, _, _ = model.critic_grad_graph(px, py, a, b, eps=2.0, iters=500)
+    # Not exactly 2x (duals change too) but within a factor band.
+    ratio = float(np.mean(np.asarray(gx2) / np.asarray(gx1)))
+    assert 1.2 < ratio < 3.5, ratio

@@ -1,0 +1,83 @@
+//! L3 coordinator benchmark (ours, not a paper figure): throughput and
+//! latency quantiles of the divergence service under an open-loop burst
+//! workload, as a function of worker count and batcher policy. This is the
+//! bench the §Perf pass iterates against.
+//!
+//! Run: `cargo bench --bench coordinator_throughput`
+
+use linear_sinkhorn::bench::Table;
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::config::{BatcherConfig, ServiceConfig, SinkhornConfig};
+use linear_sinkhorn::coordinator::Service;
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+
+fn run_load(workers: usize, max_batch: usize, n_req: usize, n: usize) -> (f64, f64, f64, u64) {
+    let cfg = ServiceConfig {
+        workers,
+        batcher: BatcherConfig { max_batch, max_delay_us: 200, queue_depth: 4096 },
+        sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 500, tol: 1e-4, check_every: 10 },
+        num_features: 128,
+    };
+    let svc = Service::start(cfg);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from(1);
+    // Pre-generate the workload so generation isn't on the clock.
+    let workload: Vec<(Measure, Measure)> =
+        (0..n_req).map(|_| data::gaussian_blobs(n, &mut rng)).collect();
+    let sw = Stopwatch::start();
+    let mut pendings = Vec::with_capacity(n_req);
+    for (mu, nu) in workload {
+        if let Ok(p) = h.submit(mu, nu) {
+            pendings.push(p);
+        }
+    }
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut shed = n_req - pendings.len();
+    for p in pendings {
+        match p.wait() {
+            Ok(resp) => latencies.push(resp.latency_us),
+            Err(_) => shed += 1,
+        }
+    }
+    let total = sw.elapsed_secs();
+    latencies.sort_unstable();
+    let q = |f: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        latencies[((latencies.len() - 1) as f64 * f) as usize] as f64 / 1e3
+    };
+    drop(h);
+    svc.shutdown();
+    (latencies.len() as f64 / total, q(0.5), q(0.99), shed as u64)
+}
+
+fn main() {
+    let args = ArgSpec::new("coord", "divergence service throughput/latency")
+        .opt("requests", "64", "requests per configuration")
+        .opt("n", "400", "samples per cloud")
+        .opt("csv", "target/coordinator.csv", "csv output")
+        .parse();
+    let n_req = args.get_usize("requests");
+    let n = args.get_usize("n");
+
+    let mut t = Table::new(
+        "Coordinator throughput (open-loop burst)",
+        &["workers", "max_batch", "req/s", "p50 ms", "p99 ms", "shed"],
+    );
+    for &workers in &[1usize, 2, 4, 8] {
+        for &mb in &[1usize, 8, 32] {
+            let (rps, p50, p99, shed) = run_load(workers, mb, n_req, n);
+            t.row(vec![
+                workers.to_string(),
+                mb.to_string(),
+                format!("{rps:.1}"),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+                shed.to_string(),
+            ]);
+        }
+    }
+    t.emit(Some(args.get_str("csv")));
+}

@@ -1,0 +1,59 @@
+//! Figure 1: time–accuracy tradeoff on two 2-D Gaussians
+//! (N((1,1), I2) vs N(0, 0.1 I2)), RF vs Nys vs Sin across
+//! regularisations and feature counts.
+//!
+//! Paper setup: n = 40000 samples, 50 repetitions. Default here is a
+//! laptop-scale n = 2000 / 3 reps (the complexity contrast is identical);
+//! pass `--full` for the paper's sizes.
+//!
+//! Expected shape (paper): at eps in {0.5, 1} both RF and Nys reach ~100
+//! deviation orders of magnitude faster than Sin; at eps in {0.1, 0.05}
+//! Nys FAILS (positivity) while RF still returns ~100±few; at very small
+//! eps RF degrades to ~10% error.
+//!
+//! Run: `cargo bench --bench fig1_gaussian_tradeoff [-- --full]`
+
+use linear_sinkhorn::bench::tradeoff::{cells_to_table, run_sweep, Sweep};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::prelude::*;
+
+fn main() {
+    let args = ArgSpec::new("fig1", "Fig.1 Gaussian time-accuracy tradeoff")
+        .opt("n", "2000", "samples per cloud")
+        .opt("reps", "3", "repetitions per cell")
+        .opt("eps", "0.05,0.1,0.5,1.0,2.0", "regularisations")
+        .opt("ranks", "100,300,600,1000,2000", "feature counts / ranks")
+        .opt("seed", "0", "seed")
+        .opt("csv", "target/fig1.csv", "csv output path")
+        .flag("full", "paper-scale n=40000, 50 reps (slow)")
+        .parse();
+
+    let (n, reps) = if args.get_flag("full") {
+        (40_000, 50)
+    } else {
+        (args.get_usize("n"), args.get_usize("reps"))
+    };
+    let mut rng = Rng::seed_from(args.get_u64("seed"));
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+    println!("fig1: n={n}, reps={reps} (paper: 40000/50)");
+
+    let sweep = Sweep {
+        epsilons: args.get_f64_list("eps"),
+        ranks: args.get_usize_list("ranks"),
+        reps,
+        ..Default::default()
+    };
+    let cells = run_sweep(&mu, &nu, &sweep, args.get_u64("seed"), |c| {
+        eprintln!(
+            "  {} eps={} r={} -> dev {} ({}/{})",
+            c.method,
+            c.eps,
+            c.rank,
+            if c.deviation.is_nan() { "FAILED".into() } else { format!("{:.2}", c.deviation) },
+            c.ok,
+            c.reps
+        );
+    });
+    cells_to_table("Figure 1 — Gaussian blobs time–accuracy tradeoff", &cells)
+        .emit(Some(args.get_str("csv")));
+}

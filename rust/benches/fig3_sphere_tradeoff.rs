@@ -1,0 +1,66 @@
+//! Figure 3: time–accuracy tradeoff on two uniform distributions on the
+//! unit sphere S^2 (Figure 2's red/blue bands). Paper: n = 20000, 10 reps,
+//! eps in {0.01, 0.05, 0.1, 0.5}; default here n = 1500 / 3 reps.
+//!
+//! Expected shape: Nys fails at the three smaller regularisations while RF
+//! works at any r; both fast and accurate at eps = 0.5.
+//!
+//! Run: `cargo bench --bench fig3_sphere_tradeoff [-- --full --dump-data]`
+
+use linear_sinkhorn::bench::tradeoff::{cells_to_table, run_sweep, Sweep};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::prelude::*;
+
+fn main() {
+    let args = ArgSpec::new("fig3", "Fig.3 sphere time-accuracy tradeoff")
+        .opt("n", "1500", "samples per cloud")
+        .opt("reps", "3", "repetitions per cell")
+        .opt("eps", "0.01,0.05,0.1,0.5", "regularisations")
+        .opt("ranks", "100,300,600,1000,2000", "feature counts / ranks")
+        .opt("seed", "0", "seed")
+        .opt("csv", "target/fig3.csv", "csv output path")
+        .flag("full", "paper-scale n=20000, 10 reps (slow)")
+        .flag("dump-data", "also write the Fig.2 point clouds as CSV")
+        .parse();
+
+    let (n, reps) = if args.get_flag("full") {
+        (20_000, 10)
+    } else {
+        (args.get_usize("n"), args.get_usize("reps"))
+    };
+    let mut rng = Rng::seed_from(args.get_u64("seed"));
+    let (mu, nu) = data::sphere_caps(n, &mut rng);
+    println!("fig3: n={n} per band, reps={reps} (paper: 20000/10)");
+
+    if args.get_flag("dump-data") {
+        // Figure 2: the two sphere point sets.
+        let mut csv = String::from("band,x,y,z\n");
+        for (label, m) in [("red", &mu), ("blue", &nu)] {
+            for i in 0..m.len() {
+                let p = m.points.row(i);
+                csv.push_str(&format!("{label},{},{},{}\n", p[0], p[1], p[2]));
+            }
+        }
+        std::fs::create_dir_all("target").ok();
+        std::fs::write("target/fig2_sphere_points.csv", csv).unwrap();
+        println!("Figure 2 point clouds written to target/fig2_sphere_points.csv");
+    }
+
+    let sweep = Sweep {
+        epsilons: args.get_f64_list("eps"),
+        ranks: args.get_usize_list("ranks"),
+        reps,
+        ..Default::default()
+    };
+    let cells = run_sweep(&mu, &nu, &sweep, args.get_u64("seed"), |c| {
+        eprintln!(
+            "  {} eps={} r={} -> dev {}",
+            c.method,
+            c.eps,
+            c.rank,
+            if c.deviation.is_nan() { "FAILED".into() } else { format!("{:.2}", c.deviation) }
+        );
+    });
+    cells_to_table("Figure 3 — sphere bands time–accuracy tradeoff", &cells)
+        .emit(Some(args.get_str("csv")));
+}

@@ -1,0 +1,53 @@
+//! Figure 5 (appendix): time–accuracy tradeoff in the high-dimensional
+//! regime — 28-dim HIGGS-like two-class data (synthetic substitute, see
+//! DESIGN.md §7). Paper: 2 x 5000 samples, 10 reps,
+//! eps in {1, 5, 10, 15} (the high-dim regime needs larger eps because
+//! squared distances concentrate around 2d).
+//!
+//! Expected shape: at the larger eps both Nys and RF are fast+accurate
+//! (Nys somewhat better in high dim); at the smallest eps both degrade.
+//!
+//! Run: `cargo bench --bench fig5_higgs_tradeoff [-- --full]`
+
+use linear_sinkhorn::bench::tradeoff::{cells_to_table, run_sweep, Sweep};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::prelude::*;
+
+fn main() {
+    let args = ArgSpec::new("fig5", "Fig.5 Higgs-like high-dim tradeoff")
+        .opt("n", "1000", "samples per class")
+        .opt("reps", "3", "repetitions per cell")
+        .opt("eps", "1.0,5.0,10.0,15.0", "regularisations")
+        .opt("ranks", "100,300,600,1000", "feature counts / ranks")
+        .opt("seed", "0", "seed")
+        .opt("csv", "target/fig5.csv", "csv output path")
+        .flag("full", "paper-scale n=5000, 10 reps (slow)")
+        .parse();
+
+    let (n, reps) = if args.get_flag("full") {
+        (5_000, 10)
+    } else {
+        (args.get_usize("n"), args.get_usize("reps"))
+    };
+    let mut rng = Rng::seed_from(args.get_u64("seed"));
+    let (sig, bkg) = data::higgs_pair(n, &mut rng);
+    println!("fig5: n={n} per class, d=28, reps={reps} (paper: 5000/10 on real HIGGS)");
+
+    let sweep = Sweep {
+        epsilons: args.get_f64_list("eps"),
+        ranks: args.get_usize_list("ranks"),
+        reps,
+        ..Default::default()
+    };
+    let cells = run_sweep(&sig, &bkg, &sweep, args.get_u64("seed"), |c| {
+        eprintln!(
+            "  {} eps={} r={} -> dev {}",
+            c.method,
+            c.eps,
+            c.rank,
+            if c.deviation.is_nan() { "FAILED".into() } else { format!("{:.2}", c.deviation) }
+        );
+    });
+    cells_to_table("Figure 5 — Higgs-like high-dimensional tradeoff", &cells)
+        .emit(Some(args.get_str("csv")));
+}

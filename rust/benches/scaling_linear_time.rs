@@ -1,0 +1,85 @@
+//! Theorem 3.1's headline claim: Sinkhorn iterations cost O(r(n+m)) with
+//! the factored kernel vs O(nm) dense. Measures per-iteration wall-clock
+//! vs n at fixed r for both paths and reports the empirical scaling
+//! exponents and the crossover point.
+//!
+//! Expected shape: RF per-iteration time grows ~linearly in n (slope ~1 on
+//! log-log), dense grows ~quadratically (slope ~2); RF wins for n >> r.
+//!
+//! Run: `cargo bench --bench scaling_linear_time`
+
+use linear_sinkhorn::bench::{fmt_secs, time, Table};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::prelude::*;
+
+fn main() {
+    let args = ArgSpec::new("scaling", "per-iteration scaling: O(r(n+m)) vs O(nm)")
+        .opt("sizes", "250,500,1000,2000,4000,8000", "values of n to sweep")
+        .opt("features", "400", "fixed feature count r")
+        .opt("iters", "10", "iterations to time per measurement")
+        .opt("seed", "0", "seed")
+        .opt("csv", "target/scaling.csv", "csv output")
+        .parse();
+
+    let sizes = args.get_usize_list("sizes");
+    let r = args.get_usize("features");
+    let iters = args.get_usize("iters");
+    let eps = 0.5;
+    let mut rng = Rng::seed_from(args.get_u64("seed"));
+
+    let cfg = SinkhornConfig { epsilon: eps, max_iters: iters, tol: 0.0, check_every: iters + 1 };
+    let mut t = Table::new(
+        "Per-iteration scaling (fixed r, growing n)",
+        &["n", "RF time/iter", "Sin time/iter", "RF flops/apply", "Sin flops/apply", "speedup"],
+    );
+    let mut rf_pts = Vec::new();
+    let mut sin_pts = Vec::new();
+
+    for &n in &sizes {
+        let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
+        let fk = FactoredKernel::from_measures(&map, &mu, &nu);
+        let rf = time(1, 3, || {
+            let _ = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg).unwrap();
+        });
+        let rf_iter = rf.median_s / iters as f64;
+        rf_pts.push((n as f64, rf_iter));
+
+        // Dense path: skip the largest sizes if they would take minutes.
+        let (sin_iter, sin_flops, speedup) = if n <= 8000 {
+            let dk = DenseKernel::from_measures(&mu, &nu, eps);
+            let sin = time(1, 3, || {
+                let _ = sinkhorn(&dk, &mu.weights, &nu.weights, &cfg).unwrap();
+            });
+            let s = sin.median_s / iters as f64;
+            sin_pts.push((n as f64, s));
+            (fmt_secs(s), dk.flops_per_apply().to_string(), format!("{:.1}x", s / rf_iter))
+        } else {
+            ("skipped".into(), "-".into(), "-".into())
+        };
+        t.row(vec![
+            n.to_string(),
+            fmt_secs(rf_iter),
+            sin_iter,
+            fk.flops_per_apply().to_string(),
+            sin_flops,
+            speedup,
+        ]);
+    }
+    t.emit(Some(args.get_str("csv")));
+
+    // Log-log slope fits.
+    let slope = |pts: &[(f64, f64)]| -> f64 {
+        let n = pts.len() as f64;
+        let (sx, sy, sxx, sxy) = pts.iter().fold((0.0, 0.0, 0.0, 0.0), |(a, b, c, d), &(x, y)| {
+            let (lx, ly) = (x.ln(), y.ln());
+            (a + lx, b + ly, c + lx * lx, d + lx * ly)
+        });
+        (n * sxy - sx * sy) / (n * sxx - sx * sx)
+    };
+    println!(
+        "empirical scaling exponents: RF {:.2} (expect ~1), Sin {:.2} (expect ~2)",
+        slope(&rf_pts),
+        slope(&sin_pts)
+    );
+}

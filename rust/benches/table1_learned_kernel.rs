@@ -1,0 +1,75 @@
+//! Table 1: the learned adversarial kernel k_theta(f_gamma(x), f_gamma(z))
+//! evaluated between images and noise after GAN training — the kernel
+//! should capture the image-manifold structure: k(image, image) >>
+//! k(image, noise) >> or >> k(noise, noise).
+//!
+//! Paper: trained 84h on CIFAR-10 (Tesla K80); here: the synthetic image
+//! corpus and a few hundred CPU steps (DESIGN.md §7) — the *ordering* and
+//! the large ii/in ratio are the claims under test. Values are averages
+//! over 5x5 sample pairs exactly as in the paper.
+//!
+//! Run: `cargo bench --bench table1_learned_kernel [-- --steps 300]`
+
+use linear_sinkhorn::bench::Table;
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::config::GanConfig;
+use linear_sinkhorn::gan::GanTrainer;
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+
+fn main() {
+    let args = ArgSpec::new("table1", "Table 1 learned-kernel probe")
+        .opt("steps", "200", "generator steps to train")
+        .opt("batch", "128", "minibatch size")
+        .opt("features", "64", "learned feature count r (paper: 600)")
+        .opt("side", "8", "image side")
+        .opt("seed", "0", "seed")
+        .opt("csv", "target/table1.csv", "csv output")
+        .parse();
+
+    let side = args.get_usize("side");
+    let dim = side * side;
+    let cfg = GanConfig {
+        steps: args.get_usize("steps"),
+        batch_size: args.get_usize("batch"),
+        num_features: args.get_usize("features"),
+        epsilon: 1.0,
+        seed: args.get_u64("seed"),
+        ..Default::default()
+    };
+    let mut rng = Rng::seed_from(cfg.seed);
+    let corpus = data::image_corpus(cfg.batch_size * 6, side, &mut rng);
+    let mut trainer = GanTrainer::new(dim, cfg.clone(), &mut rng);
+    let mut batch_rng = Rng::seed_from(cfg.seed ^ 0xABCD);
+
+    println!("training {} steps (batch {}, r {}) …", cfg.steps, cfg.batch_size, cfg.num_features);
+    let sw = Stopwatch::start();
+    for step in 0..cfg.steps {
+        let idx = batch_rng.sample_indices(corpus.rows(), cfg.batch_size);
+        let real = Mat::from_fn(cfg.batch_size, dim, |i, j| corpus[(idx[i], j)]);
+        trainer.train_step(step, &real).expect("train step");
+    }
+    println!("trained in {:.1}s", sw.elapsed_secs());
+
+    // Table 1 probe: 5 held-out images, 5 noise samples.
+    let mut probe_rng = Rng::seed_from(4242);
+    let imgs = data::image_corpus(5, side, &mut probe_rng);
+    let noise = data::noise_images(5, side, &mut probe_rng);
+    let k_ii = trainer.mean_kernel(&imgs, &imgs);
+    let k_in = trainer.mean_kernel(&imgs, &noise);
+    let k_nn = trainer.mean_kernel(&noise, &noise);
+
+    let mut t = Table::new(
+        "Table 1 — learned kernel k_theta(f_gamma(.), f_gamma(.)), 5x5 averages",
+        &["", "image x", "noise z"],
+    );
+    t.row(vec!["image x".into(), format!("{k_ii:.4e}"), format!("{k_in:.4e}")]);
+    t.row(vec!["noise z".into(), format!("{k_in:.4e}"), format!("{k_nn:.4e}")]);
+    t.emit(Some(args.get_str("csv")));
+
+    println!(
+        "ordering: k_ii {} k_in, ratio k_ii/k_in = {:.2} (paper: 1802e12 vs 2961e5, ratio ~6e6)",
+        if k_ii > k_in { ">" } else { "<= (UNEXPECTED)" },
+        k_ii / k_in.max(1e-300)
+    );
+}

@@ -1,0 +1,199 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! Provides warmup + repeated timing with robust statistics, and table
+//! emitters (markdown + CSV) used by every `rust/benches/*` target to
+//! print the paper's figures as machine-readable series.
+
+pub mod tradeoff;
+
+use std::time::Instant;
+
+/// Robust summary of repeated timings.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub reps: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+/// Time `f` with `warmup` unmeasured runs then `reps` measured runs.
+pub fn time<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Summary {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Summarise raw second-valued samples.
+pub fn summarize(samples: &[f64]) -> Summary {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let median = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    };
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        reps: n,
+        mean_s: mean,
+        median_s: median,
+        min_s: sorted[0],
+        max_s: sorted[n - 1],
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// A results table rendered as aligned markdown and optionally CSV.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render as aligned markdown.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV (headers + rows).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and optionally write CSV next to it.
+    pub fn emit(&self, csv_path: Option<&str>) {
+        println!("{}", self.render());
+        if let Some(path) = csv_path {
+            if let Some(parent) = std::path::Path::new(path).parent() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+            std::fs::write(path, self.to_csv()).expect("write csv");
+            println!("(csv written to {path})");
+        }
+    }
+}
+
+/// Convenience: format seconds adaptively (s / ms / us).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_statistics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.reps, 5);
+        assert_eq!(s.median_s, 3.0);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 100.0);
+        assert!((s.mean_s - 22.0).abs() < 1e-12);
+        // Median is robust to the outlier, mean is not.
+        assert!(s.median_s < s.mean_s);
+    }
+
+    #[test]
+    fn even_count_median_interpolates() {
+        let s = summarize(&[1.0, 3.0]);
+        assert_eq!(s.median_s, 2.0);
+    }
+
+    #[test]
+    fn time_runs_function() {
+        let mut count = 0;
+        let s = time(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.min_s >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        let md = t.render();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| 1 | x |"));
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,x\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_enforced() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_secs(0.002), "2.00ms");
+        assert_eq!(fmt_secs(2e-6), "2.0us");
+    }
+}

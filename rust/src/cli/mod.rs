@@ -1,0 +1,296 @@
+//! Minimal declarative CLI substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! defaults, required keys and auto-generated `--help`. Used by the main
+//! binary and every example/bench.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+    required: bool,
+}
+
+/// Parse error.
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declarative argument parser.
+pub struct ArgSpec {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        ArgSpec { program, about, opts: Vec::new() }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    /// Render help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if o.required => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("{left:<26} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                     show this help\n");
+        s
+    }
+
+    /// Parse an argv-style iterator (excluding the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if tok == "--bench" && !self.opts.iter().any(|o| o.name == "bench") {
+                // `cargo bench` appends `--bench` to harness=false targets;
+                // swallow it so every bench binary works under cargo bench.
+                continue;
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help_text())))?;
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{name} is a flag, it takes no value")));
+                    }
+                    args.flags.insert(name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{name} expects a value")))?,
+                    };
+                    args.values.insert(name, val);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        // Defaults + required check.
+        for o in &self.opts {
+            if o.is_flag {
+                args.flags.entry(o.name.to_string()).or_insert(false);
+            } else if !args.values.contains_key(o.name) {
+                match &o.default {
+                    Some(d) => {
+                        args.values.insert(o.name.to_string(), d.clone());
+                    }
+                    None if o.required => {
+                        return Err(CliError(format!("missing required --{}", o.name)));
+                    }
+                    None => {}
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments; print help/errors and exit on failure.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("--{name}: expected unsigned integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("--{name}: expected unsigned integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("--{name}: expected float"))
+    }
+
+    pub fn get_str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_else(|| panic!("--{name}: missing"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list of floats (e.g. `--eps 0.05,0.1,0.5`).
+    pub fn get_f64_list(&self, name: &str) -> Vec<f64> {
+        self.get_str(name)
+            .split(',')
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad float list")))
+            .collect()
+    }
+
+    /// Comma-separated list of unsigned integers.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get_str(name)
+            .split(',')
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad int list")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("n", "100", "samples")
+            .opt("eps", "0.5", "regularisation")
+            .req("out", "output path")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args, CliError> {
+        spec().parse_from(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["--out", "x.csv"]).unwrap();
+        assert_eq!(a.get_usize("n"), 100);
+        assert_eq!(a.get_f64("eps"), 0.5);
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn values_override_defaults() {
+        let a = parse(&["--out", "x", "--n", "7", "--eps=0.25", "--verbose"]).unwrap();
+        assert_eq!(a.get_usize("n"), 7);
+        assert_eq!(a.get_f64("eps"), 0.25);
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(parse(&["--n", "7"]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--out", "x", "--nope", "1"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parse(&["--out", "x", "--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["--out", "x", "pos1", "pos2"]).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn help_lists_all_options() {
+        let h = spec().help_text();
+        for name in ["--n", "--eps", "--out", "--verbose", "--help"] {
+            assert!(h.contains(name), "help missing {name}");
+        }
+    }
+
+    #[test]
+    fn float_and_int_lists() {
+        let s = ArgSpec::new("t", "t").opt("eps", "0.1,0.5", "list").opt("ranks", "1,2,3", "list");
+        let a = s.parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.get_f64_list("eps"), vec![0.1, 0.5]);
+        assert_eq!(a.get_usize_list("ranks"), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn value_missing_errors() {
+        assert!(parse(&["--out"]).is_err());
+    }
+
+    #[test]
+    fn cargo_bench_flag_is_swallowed() {
+        let a = parse(&["--bench", "--out", "x"]).unwrap();
+        assert_eq!(a.get_str("out"), "x");
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,128 @@
+//! Configuration substrate: a TOML-subset parser plus the typed configs
+//! used by the binary, the service and the GAN trainer.
+//!
+//! The offline crate set has no `serde`/`toml`, so we parse a pragmatic
+//! subset ourselves: `[section]` / `[section.sub]` tables, `key = value`
+//! with strings, integers, floats, booleans and flat arrays, `#` comments.
+//! That covers every config this project ships.
+
+mod parser;
+mod types;
+
+pub use parser::{ConfigDoc, ConfigError, Value};
+pub use types::{BatcherConfig, GanConfig, ServiceConfig, SinkhornConfig, TradeoffConfig};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+name = "fig1"
+reps = 5
+eps = 0.5
+full = false
+ranks = [100, 300, 600, 1000, 2000]
+
+[sinkhorn]
+max_iters = 5000
+tol = 1e-3
+
+[service.batcher]
+max_batch = 32
+max_delay_us = 500
+"#;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("name"), Some("fig1"));
+        assert_eq!(doc.get_int("reps"), Some(5));
+        assert_eq!(doc.get_float("eps"), Some(0.5));
+        assert_eq!(doc.get_bool("full"), Some(false));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        let ranks = doc.get_int_array("ranks").unwrap();
+        assert_eq!(ranks, vec![100, 300, 600, 1000, 2000]);
+    }
+
+    #[test]
+    fn parses_nested_tables() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_int("sinkhorn.max_iters"), Some(5000));
+        assert_eq!(doc.get_float("sinkhorn.tol"), Some(1e-3));
+        assert_eq!(doc.get_int("service.batcher.max_batch"), Some(32));
+    }
+
+    #[test]
+    fn float_forms() {
+        let doc = ConfigDoc::parse("a = 1e-3\nb = -2.5\nc = 3.0\nd = 0.5").unwrap();
+        assert_eq!(doc.get_float("a"), Some(1e-3));
+        assert_eq!(doc.get_float("b"), Some(-2.5));
+        assert_eq!(doc.get_float("c"), Some(3.0));
+        assert_eq!(doc.get_float("d"), Some(0.5));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = ConfigDoc::parse("n = 7").unwrap();
+        assert_eq!(doc.get_float("n"), Some(7.0));
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = ConfigDoc::parse("a = 1").unwrap();
+        assert_eq!(doc.get_int("b"), None);
+        assert_eq!(doc.get_str("a"), None, "type-mismatched get returns None");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigDoc::parse("this is not toml").is_err());
+        assert!(ConfigDoc::parse("a = ").is_err());
+        assert!(ConfigDoc::parse("[unclosed").is_err());
+        assert!(ConfigDoc::parse("a = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn duplicate_key_is_error() {
+        assert!(ConfigDoc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = ConfigDoc::parse("# c\n\na = 1  # trailing\n").unwrap();
+        assert_eq!(doc.get_int("a"), Some(1));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = ConfigDoc::parse(r#"s = "a\"b\\c""#).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a\"b\\c"));
+    }
+
+    #[test]
+    fn float_array() {
+        let doc = ConfigDoc::parse("xs = [0.1, 1.0, 2.5]").unwrap();
+        assert_eq!(doc.get_float_array("xs").unwrap(), vec![0.1, 1.0, 2.5]);
+    }
+
+    #[test]
+    fn typed_sinkhorn_config_roundtrip() {
+        let doc = ConfigDoc::parse("[sinkhorn]\nepsilon = 0.25\nmax_iters = 123\ntol = 1e-4").unwrap();
+        let cfg = SinkhornConfig::from_doc(&doc);
+        assert_eq!(cfg.epsilon, 0.25);
+        assert_eq!(cfg.max_iters, 123);
+        assert_eq!(cfg.tol, 1e-4);
+    }
+
+    #[test]
+    fn typed_defaults_when_absent() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = SinkhornConfig::from_doc(&doc);
+        assert!(cfg.epsilon > 0.0 && cfg.max_iters > 0);
+    }
+}

@@ -1,0 +1,222 @@
+//! TOML-subset parser: sections, dotted lookup, scalars and flat arrays.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+/// Parse error with line number context.
+#[derive(Debug, Clone)]
+pub struct ConfigError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A parsed document: flat map from dotted key path to value.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigDoc {
+    values: BTreeMap<String, Value>,
+}
+
+impl ConfigDoc {
+    /// Parse a TOML-subset string.
+    pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |m: &str| ConfigError { line: lineno + 1, message: m.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+                let name = name.trim();
+                if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                    return Err(err("invalid section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+                return Err(err("invalid key"));
+            }
+            let value_text = line[eq + 1..].trim();
+            if value_text.is_empty() {
+                return Err(err("missing value"));
+            }
+            let value = parse_value(value_text).map_err(|m| err(&m))?;
+            let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            if doc.values.contains_key(&path) {
+                return Err(err(&format!("duplicate key `{path}`")));
+            }
+            doc.values.insert(path, value);
+        }
+        Ok(doc)
+    }
+
+    /// Parse a file.
+    pub fn parse_file(path: &str) -> Result<ConfigDoc, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError { line: 0, message: format!("read {path}: {e}") })?;
+        ConfigDoc::parse(&text)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        match self.values.get(path) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        match self.values.get(path) {
+            Some(Value::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`n = 7` reads as 7.0).
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        match self.values.get(path) {
+            Some(Value::Float(x)) => Some(*x),
+            Some(Value::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        match self.values.get(path) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_int_array(&self, path: &str) -> Option<Vec<i64>> {
+        match self.values.get(path) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    pub fn get_float_array(&self, path: &str) -> Option<Vec<f64>> {
+        match self.values.get(path) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(x) => Some(*x),
+                    Value::Int(i) => Some(*i as f64),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// All keys (dotted), for diagnostics.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    let t = text.trim();
+    if let Some(rest) = t.strip_prefix('"') {
+        return parse_string(rest).map(Value::Str);
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|s| parse_value(s.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    // Number: int if it parses as i64 and has no float markers.
+    let looks_float = t.contains('.') || t.contains('e') || t.contains('E');
+    if !looks_float {
+        if let Ok(i) = t.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(format!("cannot parse value `{t}`"))
+}
+
+fn parse_string(rest: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let trailing: String = chars.collect();
+                if !trailing.trim().is_empty() {
+                    return Err("trailing characters after string".into());
+                }
+                return Ok(out);
+            }
+            '\\' => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                other => return Err(format!("bad escape \\{other:?}")),
+            },
+            c => out.push(c),
+        }
+    }
+    Err("unterminated string".into())
+}

@@ -1,0 +1,199 @@
+//! Typed configuration structs with documented defaults.
+
+use super::ConfigDoc;
+
+/// Core Sinkhorn solver configuration (Alg. 1 / Alg. 2).
+#[derive(Clone, Debug)]
+pub struct SinkhornConfig {
+    /// Entropic regularisation strength epsilon.
+    pub epsilon: f64,
+    /// Hard iteration cap.
+    pub max_iters: usize,
+    /// L1 marginal-error stopping tolerance (Alg. 1's delta).
+    pub tol: f64,
+    /// Check the stopping criterion every this many iterations (the check
+    /// itself costs one kernel apply).
+    pub check_every: usize,
+}
+
+impl Default for SinkhornConfig {
+    fn default() -> Self {
+        SinkhornConfig { epsilon: 0.5, max_iters: 5000, tol: 1e-3, check_every: 10 }
+    }
+}
+
+impl SinkhornConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> Self {
+        let d = SinkhornConfig::default();
+        SinkhornConfig {
+            epsilon: doc.get_float("sinkhorn.epsilon").unwrap_or(d.epsilon),
+            max_iters: doc.get_int("sinkhorn.max_iters").unwrap_or(d.max_iters as i64) as usize,
+            tol: doc.get_float("sinkhorn.tol").unwrap_or(d.tol),
+            check_every: doc.get_int("sinkhorn.check_every").unwrap_or(d.check_every as i64) as usize,
+        }
+    }
+}
+
+/// Time–accuracy tradeoff experiment configuration (Figures 1/3/5).
+#[derive(Clone, Debug)]
+pub struct TradeoffConfig {
+    /// Samples per distribution.
+    pub n: usize,
+    /// Regularisations to sweep.
+    pub epsilons: Vec<f64>,
+    /// Feature counts / Nyström ranks to sweep.
+    pub ranks: Vec<usize>,
+    /// Repetitions per (eps, r) cell.
+    pub reps: usize,
+    /// Seed for the whole sweep.
+    pub seed: u64,
+}
+
+impl Default for TradeoffConfig {
+    fn default() -> Self {
+        TradeoffConfig {
+            n: 4000,
+            epsilons: vec![0.05, 0.1, 0.5, 1.0],
+            ranks: vec![100, 300, 600, 1000, 2000],
+            reps: 5,
+            seed: 0,
+        }
+    }
+}
+
+impl TradeoffConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> Self {
+        let d = TradeoffConfig::default();
+        TradeoffConfig {
+            n: doc.get_int("tradeoff.n").unwrap_or(d.n as i64) as usize,
+            epsilons: doc.get_float_array("tradeoff.epsilons").unwrap_or(d.epsilons),
+            ranks: doc
+                .get_int_array("tradeoff.ranks")
+                .map(|v| v.into_iter().map(|x| x as usize).collect())
+                .unwrap_or(d.ranks),
+            reps: doc.get_int("tradeoff.reps").unwrap_or(d.reps as i64) as usize,
+            seed: doc.get_int("tradeoff.seed").unwrap_or(d.seed as i64) as u64,
+        }
+    }
+}
+
+/// Dynamic batcher policy for the divergence service.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending request has waited this long (us).
+    pub max_delay_us: u64,
+    /// Bounded queue depth; beyond this the service sheds load.
+    pub queue_depth: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_delay_us: 500, queue_depth: 1024 }
+    }
+}
+
+impl BatcherConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> Self {
+        let d = BatcherConfig::default();
+        BatcherConfig {
+            max_batch: doc.get_int("service.batcher.max_batch").unwrap_or(d.max_batch as i64) as usize,
+            max_delay_us: doc.get_int("service.batcher.max_delay_us").unwrap_or(d.max_delay_us as i64) as u64,
+            queue_depth: doc.get_int("service.batcher.queue_depth").unwrap_or(d.queue_depth as i64) as usize,
+        }
+    }
+}
+
+/// Divergence service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads executing Sinkhorn solves.
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    pub sinkhorn: SinkhornConfig,
+    /// Number of random features the service uses per request.
+    pub num_features: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 4,
+            batcher: BatcherConfig::default(),
+            sinkhorn: SinkhornConfig::default(),
+            num_features: 256,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> Self {
+        let d = ServiceConfig::default();
+        ServiceConfig {
+            workers: doc.get_int("service.workers").unwrap_or(d.workers as i64) as usize,
+            batcher: BatcherConfig::from_doc(doc),
+            sinkhorn: SinkhornConfig::from_doc(doc),
+            num_features: doc.get_int("service.num_features").unwrap_or(d.num_features as i64) as usize,
+        }
+    }
+}
+
+/// Adversarial-kernel GAN training configuration (paper §4, Eq. 18).
+#[derive(Clone, Debug)]
+pub struct GanConfig {
+    /// Minibatch size s (the paper uses s = 7000 thanks to linearity).
+    pub batch_size: usize,
+    /// Number of learned random features r (paper: 600).
+    pub num_features: usize,
+    /// Latent dimension of the generator input.
+    pub latent_dim: usize,
+    /// Embedding dimension of f_gamma.
+    pub embed_dim: usize,
+    /// Sinkhorn regularisation (paper: 1.0).
+    pub epsilon: f64,
+    /// Sinkhorn iterations per divergence evaluation.
+    pub sinkhorn_iters: usize,
+    /// Critic (cost) steps per generator step (paper's n_c).
+    pub critic_steps: usize,
+    /// Total generator steps.
+    pub steps: usize,
+    /// Adam learning rate.
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Default for GanConfig {
+    fn default() -> Self {
+        GanConfig {
+            batch_size: 256,
+            num_features: 64,
+            latent_dim: 16,
+            embed_dim: 8,
+            epsilon: 1.0,
+            sinkhorn_iters: 50,
+            critic_steps: 1,
+            steps: 300,
+            lr: 1e-3,
+            seed: 0,
+        }
+    }
+}
+
+impl GanConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> Self {
+        let d = GanConfig::default();
+        GanConfig {
+            batch_size: doc.get_int("gan.batch_size").unwrap_or(d.batch_size as i64) as usize,
+            num_features: doc.get_int("gan.num_features").unwrap_or(d.num_features as i64) as usize,
+            latent_dim: doc.get_int("gan.latent_dim").unwrap_or(d.latent_dim as i64) as usize,
+            embed_dim: doc.get_int("gan.embed_dim").unwrap_or(d.embed_dim as i64) as usize,
+            epsilon: doc.get_float("gan.epsilon").unwrap_or(d.epsilon),
+            sinkhorn_iters: doc.get_int("gan.sinkhorn_iters").unwrap_or(d.sinkhorn_iters as i64) as usize,
+            critic_steps: doc.get_int("gan.critic_steps").unwrap_or(d.critic_steps as i64) as usize,
+            steps: doc.get_int("gan.steps").unwrap_or(d.steps as i64) as usize,
+            lr: doc.get_float("gan.lr").unwrap_or(d.lr),
+            seed: doc.get_int("gan.seed").unwrap_or(d.seed as i64) as u64,
+        }
+    }
+}

@@ -1,0 +1,428 @@
+//! The L3 divergence service: a thread-based coordinator that accepts
+//! point-cloud pairs and returns their linear-time Sinkhorn divergence.
+//!
+//! Pipeline:
+//!
+//! ```text
+//!  clients --submit--> [bounded queue] --> batcher --batches--> worker pool
+//!      ^                    |  (shed when full)        |  (N threads)
+//!      +----- response <----+--------------------------+
+//! ```
+//!
+//! * **Dynamic batching** ([`batcher`]): flush on `max_batch` pending or
+//!   when the oldest request has waited `max_delay_us` — the same
+//!   size-or-deadline policy a serving stack (vLLM-style) uses. Batching
+//!   matters here because requests with the same (dim, eps) *share the
+//!   Lemma-1 anchor draw*, amortising feature-map setup across a batch.
+//! * **Backpressure**: the submit queue is bounded (`queue_depth`);
+//!   overflow sheds with [`Error::Service`] instead of queueing unboundedly.
+//! * **Workers** solve each request with the native factored-kernel
+//!   Sinkhorn (O(r(n+m)) per iteration).
+//!
+//! Everything is std::thread + mpsc (the offline crate set has no tokio);
+//! for a compute-bound service this is the right tool anyway.
+
+mod batcher;
+
+pub use batcher::{Batch, BatcherPolicy};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::ServiceConfig;
+use crate::data::Measure;
+use crate::error::{Error, Result};
+use crate::features::GaussianFeatureMap;
+use crate::kernels::FactoredKernel;
+use crate::metrics::Registry;
+use crate::rng::Rng;
+use crate::sinkhorn::{sinkhorn, sinkhorn_divergence};
+
+/// A divergence request: two measures on the same ground space.
+pub struct Request {
+    pub id: u64,
+    pub mu: Measure,
+    pub nu: Measure,
+    /// Per-request regularisation override (None = service default).
+    /// High-dimensional clouds need a larger eps than 2-D ones — squared
+    /// distances scale with the dimension — so clients pick their own.
+    pub epsilon: Option<f64>,
+    pub enqueued: Instant,
+    reply: SyncSender<Result<Response>>,
+}
+
+/// A completed divergence computation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// The Eq. (2) Sinkhorn divergence estimate.
+    pub divergence: f64,
+    /// The raw transport objective W(mu, nu).
+    pub w_xy: f64,
+    /// Total Sinkhorn iterations across the three solves.
+    pub iterations: usize,
+    /// End-to-end latency in microseconds (enqueue -> solve done).
+    pub latency_us: u64,
+    /// How many requests shared this request's batch.
+    pub batch_size: usize,
+}
+
+/// A pending reply the client blocks on.
+pub struct Pending {
+    rx: Receiver<Result<Response>>,
+}
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Service("service shut down before replying".into()))?
+    }
+}
+
+/// Client handle; cloneable, cheap.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<Request>,
+    next_id: Arc<AtomicU64>,
+    metrics: Arc<Registry>,
+}
+
+impl ServiceHandle {
+    /// Submit a divergence request. Errors immediately with
+    /// [`Error::Service`] if the queue is full (load shed) or the service
+    /// has shut down.
+    pub fn submit(&self, mu: Measure, nu: Measure) -> Result<Pending> {
+        self.submit_with(mu, nu, None)
+    }
+
+    /// Submit with a per-request regularisation override.
+    pub fn submit_with(&self, mu: Measure, nu: Measure, epsilon: Option<f64>) -> Result<Pending> {
+        if mu.dim() != nu.dim() {
+            return Err(Error::Shape(format!(
+                "measures have different dims ({} vs {})",
+                mu.dim(),
+                nu.dim()
+            )));
+        }
+        if let Some(e) = epsilon {
+            if !(e > 0.0 && e.is_finite()) {
+                return Err(Error::Config(format!("epsilon override must be positive, got {e}")));
+            }
+        }
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            mu,
+            nu,
+            epsilon,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.counter("service.submitted").inc();
+                Ok(Pending { rx: reply_rx })
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.counter("service.shed").inc();
+                Err(Error::Service("queue full (load shed)".into()))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Service("service is shut down".into()))
+            }
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn divergence(&self, mu: Measure, nu: Measure) -> Result<Response> {
+        self.submit(mu, nu)?.wait()
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics_text(&self) -> String {
+        self.metrics.render()
+    }
+}
+
+/// The running service: batcher thread + worker pool.
+pub struct Service {
+    /// The service's own handle clone; dropped at shutdown so the request
+    /// channel disconnects once all client handles are gone too.
+    handle: Option<ServiceHandle>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the service with the given configuration.
+    pub fn start(cfg: ServiceConfig) -> Service {
+        let metrics = Arc::new(Registry::default());
+        let (req_tx, req_rx) = sync_channel::<Request>(cfg.batcher.queue_depth);
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(cfg.workers * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let mut threads = Vec::new();
+
+        // Batcher thread.
+        {
+            let policy = BatcherPolicy {
+                max_batch: cfg.batcher.max_batch,
+                max_delay_us: cfg.batcher.max_delay_us,
+            };
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("ls-batcher".into())
+                    .spawn(move || batcher::run(req_rx, batch_tx, policy, metrics))
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // Worker pool.
+        for w in 0..cfg.workers.max(1) {
+            let rx = batch_rx.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ls-worker-{w}"))
+                    .spawn(move || worker_loop(w as u64, rx, cfg, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        let handle = ServiceHandle {
+            tx: req_tx,
+            next_id: Arc::new(AtomicU64::new(0)),
+            metrics,
+        };
+        Service { handle: Some(handle), shutdown, threads }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.as_ref().expect("service not shut down").clone()
+    }
+
+    /// Graceful shutdown: close the intake, drain, join all threads.
+    ///
+    /// The request channel disconnects once the service's own handle AND
+    /// every client clone are dropped — callers should drop their handles
+    /// before (or concurrently with) this call, or the join blocks until
+    /// they do. The batcher drains pending work before exiting, and the
+    /// workers exit when the batch channel closes behind it.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(self.handle.take());
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Worker: pull batches, solve each request, reply.
+fn worker_loop(
+    worker_id: u64,
+    rx: Arc<Mutex<Receiver<Batch>>>,
+    cfg: ServiceConfig,
+    metrics: Arc<Registry>,
+) {
+    let mut rng = Rng::seed_from(0xC0FFEE ^ worker_id);
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // batcher gone -> shut down
+            }
+        };
+        let bsize = batch.requests.len();
+        metrics.histogram("service.batch_size").observe_us(bsize as u64);
+        // Amortise the anchor draw across the batch: all requests with the
+        // same dim share one Lemma-1 anchor set (scaled per-request radius
+        // is handled by taking the max radius in the group).
+        for req in batch.requests {
+            let result = solve_one(&req, &cfg, &mut rng, bsize);
+            // Record metrics BEFORE replying: a client that checks the
+            // registry right after `wait()` must see its own request.
+            metrics.counter("service.completed").inc();
+            metrics
+                .histogram("service.latency_us")
+                .observe_us(req.enqueued.elapsed().as_micros() as u64);
+            let _ = req.reply.send(result); // client may have gone away
+        }
+    }
+}
+
+fn solve_one(
+    req: &Request,
+    cfg: &ServiceConfig,
+    rng: &mut Rng,
+    batch_size: usize,
+) -> Result<Response> {
+    let mut skcfg = cfg.sinkhorn.clone();
+    if let Some(e) = req.epsilon {
+        skcfg.epsilon = e;
+    }
+    let eps = skcfg.epsilon;
+    let map = GaussianFeatureMap::fit(&req.mu, &req.nu, eps, cfg.num_features, rng);
+    // Stabilised factors: arbitrary client data must not underflow f32.
+    let k_xy = FactoredKernel::from_measures_stabilized(&map, &req.mu, &req.nu);
+    let k_xx = FactoredKernel::from_measures_stabilized(&map, &req.mu, &req.mu);
+    let k_yy = FactoredKernel::from_measures_stabilized(&map, &req.nu, &req.nu);
+    let sol_xy = sinkhorn(&k_xy, &req.mu.weights, &req.nu.weights, &skcfg)?;
+    let div = sinkhorn_divergence(
+        &k_xy,
+        &k_xx,
+        &k_yy,
+        &req.mu.weights,
+        &req.nu.weights,
+        &skcfg,
+    )?;
+    Ok(Response {
+        id: req.id,
+        divergence: div,
+        w_xy: sol_xy.objective,
+        iterations: sol_xy.iterations,
+        latency_us: req.enqueued.elapsed().as_micros() as u64,
+        batch_size,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BatcherConfig, SinkhornConfig};
+    use crate::data;
+
+    fn test_cfg(workers: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            batcher: BatcherConfig { max_batch: 4, max_delay_us: 200, queue_depth: 64 },
+            sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 300, tol: 1e-4, check_every: 10 },
+            num_features: 128,
+        }
+    }
+
+    fn clouds(seed: u64, n: usize) -> (Measure, Measure) {
+        let mut rng = Rng::seed_from(seed);
+        data::gaussian_blobs(n, &mut rng)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let svc = Service::start(test_cfg(2));
+        let h = svc.handle();
+        let (mu, nu) = clouds(0, 60);
+        let resp = h.divergence(mu, nu).unwrap();
+        assert!(resp.divergence.is_finite());
+        assert!(resp.divergence > 0.0, "separated blobs have positive divergence");
+        assert!(resp.iterations > 0);
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn identical_measures_near_zero() {
+        let svc = Service::start(test_cfg(1));
+        let h = svc.handle();
+        let (mu, _) = clouds(1, 40);
+        let resp = h.divergence(mu.clone(), mu).unwrap();
+        assert!(resp.divergence.abs() < 1e-4, "divergence {}", resp.divergence);
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let svc = Service::start(test_cfg(4));
+        let h = svc.handle();
+        let mut pendings = Vec::new();
+        for i in 0..16 {
+            let (mu, nu) = clouds(i, 30);
+            pendings.push((i, h.submit(mu, nu).unwrap()));
+        }
+        for (i, p) in pendings {
+            let r = p.wait().unwrap_or_else(|e| panic!("request {i}: {e}"));
+            assert!(r.divergence.is_finite());
+        }
+        let m = h.metrics_text();
+        assert!(m.contains("service.completed = 16"), "{m}");
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dim_mismatch_rejected_at_submit() {
+        let svc = Service::start(test_cfg(1));
+        let h = svc.handle();
+        let (mu, _) = clouds(3, 10);
+        let mut rng = Rng::seed_from(4);
+        let nu3d = data::gaussian_cloud(10, 3, 0.0, 1.0, &mut rng);
+        assert!(matches!(h.submit(mu, nu3d), Err(Error::Shape(_))));
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn queue_overflow_sheds() {
+        // 1 worker, tiny queue, slow-ish requests: the tail must shed.
+        let cfg = ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig { max_batch: 1, max_delay_us: 10, queue_depth: 2 },
+            sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 2000, tol: 0.0, check_every: 100 },
+            num_features: 256,
+        };
+        let svc = Service::start(cfg);
+        let h = svc.handle();
+        let mut accepted = 0;
+        let mut shed = 0;
+        let mut pendings = Vec::new();
+        for i in 0..40 {
+            let (mu, nu) = clouds(i, 200);
+            match h.submit(mu, nu) {
+                Ok(p) => {
+                    accepted += 1;
+                    pendings.push(p);
+                }
+                Err(Error::Service(_)) => shed += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(shed > 0, "expected some load shedding (accepted {accepted})");
+        for p in pendings {
+            let _ = p.wait();
+        }
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batching_groups_requests() {
+        // Submit a burst, then check the batch-size histogram saw > 1.
+        let svc = Service::start(test_cfg(1));
+        let h = svc.handle();
+        let mut pendings = Vec::new();
+        for i in 0..8 {
+            let (mu, nu) = clouds(100 + i, 30);
+            pendings.push(h.submit(mu, nu).unwrap());
+        }
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        let m = h.metrics_text();
+        assert!(m.contains("service.batch_size"), "{m}");
+        drop(h);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,435 @@
+//! Workload generators — the datasets behind every figure in the paper.
+//!
+//! * [`gaussian_blobs`] — Fig. 1's two 2-D normal clouds.
+//! * [`sphere_caps`] — Fig. 2/3's two uniform distributions on S².
+//! * [`higgs_like`] — Fig. 5's 28-dim two-class HIGGS substitute
+//!   (see DESIGN.md §7 for the substitution argument).
+//! * [`image_corpus`] / [`noise_images`] — Table 1 / Fig. 4's CIFAR/noise
+//!   substitute: structured synthetic 32×32 grayscale images.
+//! * [`corner_histograms`] — Fig. 6's three blurred-corner histograms on a
+//!   discretised positive sphere.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// A discrete measure: support points (rows of `points`) with weights
+/// summing to one.
+#[derive(Clone, Debug)]
+pub struct Measure {
+    pub points: Mat,
+    pub weights: Vec<f32>,
+}
+
+impl Measure {
+    /// Uniform weights over the given points.
+    pub fn uniform(points: Mat) -> Self {
+        let n = points.rows();
+        Measure { points, weights: vec![1.0 / n as f32; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.rows() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.points.cols()
+    }
+
+    /// Largest support-point norm — the Lemma-1 radius R for this measure.
+    pub fn radius(&self) -> f64 {
+        let mut r2: f64 = 0.0;
+        for i in 0..self.len() {
+            let n2: f64 = self.points.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum();
+            r2 = r2.max(n2);
+        }
+        r2.sqrt()
+    }
+}
+
+/// Fig. 1 workload: N((1,1), I2) vs N(0, 0.1*I2), n samples each.
+pub fn gaussian_blobs(n: usize, rng: &mut Rng) -> (Measure, Measure) {
+    let mu = Mat::from_fn(n, 2, |_, _| rng.normal_scaled(1.0, 1.0) as f32);
+    let nu = Mat::from_fn(n, 2, |_, _| rng.normal_scaled(0.0, 0.1f64.sqrt()) as f32);
+    (Measure::uniform(mu), Measure::uniform(nu))
+}
+
+/// General isotropic Gaussian cloud.
+pub fn gaussian_cloud(n: usize, dim: usize, mean: f32, std: f32, rng: &mut Rng) -> Measure {
+    let pts = Mat::from_fn(n, dim, |_, _| rng.normal_scaled(mean as f64, std as f64) as f32);
+    Measure::uniform(pts)
+}
+
+/// Fig. 2/3 workload: two disjoint uniform caps on the unit sphere S².
+///
+/// The red/blue point sets in the paper are two bands of the sphere; we
+/// sample uniformly on S² and keep points by z-coordinate window, which
+/// reproduces the same "two separated supports on a manifold" structure.
+pub fn sphere_caps(n: usize, rng: &mut Rng) -> (Measure, Measure) {
+    let cap = |rng: &mut Rng, zlo: f64, zhi: f64, n: usize| {
+        let mut rows = Vec::with_capacity(n);
+        while rows.len() < n {
+            let p = rng.unit_sphere(3);
+            let z = p[2] as f64;
+            if z >= zlo && z < zhi {
+                rows.push(p);
+            }
+        }
+        Measure::uniform(Mat::from_rows(&rows))
+    };
+    let a = cap(rng, 0.3, 0.95, n); // northern band
+    let b = cap(rng, -0.95, -0.3, n); // southern band
+    (a, b)
+}
+
+/// Fig. 5 substitute: 28-dim two-class HIGGS-like synthetic data.
+///
+/// 21 "low-level kinematics": correlated features built from per-class
+/// latent factors with log-normal magnitudes (jet pT/energy-like,
+/// heavy-tailed, positive) and Gaussian angles; 7 "high-level" features:
+/// quadratic combinations of the low-level ones (invariant-mass-like).
+/// The signal class shifts the latent means — two overlapping but
+/// separable 28-dim clouds, which is all Fig. 5's tradeoff depends on.
+pub fn higgs_like(n: usize, signal: bool, rng: &mut Rng) -> Measure {
+    let shift = if signal { 0.5 } else { 0.0 };
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut row = Vec::with_capacity(28);
+        // 3 latent factors per event.
+        let f0 = rng.normal() + shift;
+        let f1 = rng.normal() + 0.5 * shift;
+        let f2 = rng.normal();
+        // 14 magnitude-like features: log-normal with factor loading.
+        for k in 0..14 {
+            let load = match k % 3 {
+                0 => f0,
+                1 => f1,
+                _ => f2,
+            };
+            let v = (0.4 * load + 0.3 * rng.normal()).exp();
+            row.push(v as f32);
+        }
+        // 7 angle-like features: Gaussian, weakly loaded.
+        for k in 0..7 {
+            let load = if k % 2 == 0 { f1 } else { f2 };
+            row.push((0.3 * load + rng.normal()) as f32);
+        }
+        // 7 derived quadratic features (invariant-mass-like).
+        for k in 0..7 {
+            let a = row[k] as f64;
+            let b = row[(k + 7) % 14] as f64;
+            let c = row[14 + k % 7] as f64;
+            row.push(((a * b).sqrt().max(0.0) + 0.1 * c * c) as f32);
+        }
+        rows.push(row);
+    }
+    // NOTE: raw (unstandardised) output. Standardising per class would
+    // erase the class-conditional shift; use [`higgs_pair`] to get the two
+    // classes standardised with *pooled* statistics, as one would with the
+    // real HIGGS table.
+    Measure::uniform(Mat::from_rows(&rows))
+}
+
+/// Fig. 5 workload: (signal, background) Higgs-like clouds standardised
+/// jointly (pooled mean/variance, like preprocessing one HIGGS csv).
+pub fn higgs_pair(n: usize, rng: &mut Rng) -> (Measure, Measure) {
+    let sig = higgs_like(n, true, rng);
+    let bkg = higgs_like(n, false, rng);
+    let d = sig.dim();
+    // Pool, standardise, split.
+    let mut pooled = Mat::zeros(2 * n, d);
+    for i in 0..n {
+        pooled.row_mut(i).copy_from_slice(sig.points.row(i));
+        pooled.row_mut(n + i).copy_from_slice(bkg.points.row(i));
+    }
+    standardize(&mut pooled);
+    let sig_pts = Mat::from_fn(n, d, |i, j| pooled[(i, j)]);
+    let bkg_pts = Mat::from_fn(n, d, |i, j| pooled[(n + i, j)]);
+    (Measure::uniform(sig_pts), Measure::uniform(bkg_pts))
+}
+
+/// Column-standardise in place (zero mean, unit variance per feature) —
+/// mirrors the usual preprocessing on HIGGS before computing distances.
+pub fn standardize(points: &mut Mat) {
+    let (n, d) = points.shape();
+    for j in 0..d {
+        let mut mean = 0.0f64;
+        for i in 0..n {
+            mean += points[(i, j)] as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for i in 0..n {
+            let c = points[(i, j)] as f64 - mean;
+            var += c * c;
+        }
+        var /= n as f64;
+        let inv = 1.0 / var.sqrt().max(1e-9);
+        for i in 0..n {
+            points[(i, j)] = ((points[(i, j)] as f64 - mean) * inv) as f32;
+        }
+    }
+}
+
+/// Table 1 / Fig. 4 substitute: a structured 32×32 grayscale image corpus.
+///
+/// Each image is a random composition of 2–4 smooth primitives (Gaussian
+/// blobs, oriented stripes, gradients) — a low-dimensional "image manifold"
+/// that a learned kernel should separate from white noise, which is the
+/// property Table 1 measures.
+pub fn image_corpus(n: usize, side: usize, rng: &mut Rng) -> Mat {
+    let d = side * side;
+    let mut out = Mat::zeros(n, d);
+    for img in 0..n {
+        let n_prims = 2 + rng.uniform_usize(3);
+        let row = out.row_mut(img);
+        for _ in 0..n_prims {
+            let kind = rng.uniform_usize(3);
+            match kind {
+                0 => {
+                    // Gaussian blob.
+                    let cx = rng.uniform_in(0.2, 0.8);
+                    let cy = rng.uniform_in(0.2, 0.8);
+                    let s = rng.uniform_in(0.05, 0.25);
+                    let amp = rng.uniform_in(0.3, 1.0);
+                    for yy in 0..side {
+                        for xx in 0..side {
+                            let fx = xx as f64 / side as f64 - cx;
+                            let fy = yy as f64 / side as f64 - cy;
+                            row[yy * side + xx] +=
+                                (amp * (-(fx * fx + fy * fy) / (2.0 * s * s)).exp()) as f32;
+                        }
+                    }
+                }
+                1 => {
+                    // Oriented sinusoidal stripes.
+                    let theta = rng.uniform_in(0.0, std::f64::consts::PI);
+                    let freq = rng.uniform_in(2.0, 8.0);
+                    let amp = rng.uniform_in(0.1, 0.5);
+                    let (c, s) = (theta.cos(), theta.sin());
+                    for yy in 0..side {
+                        for xx in 0..side {
+                            let t = (xx as f64 * c + yy as f64 * s) / side as f64;
+                            row[yy * side + xx] +=
+                                (amp * (freq * std::f64::consts::TAU * t).sin()) as f32;
+                        }
+                    }
+                }
+                _ => {
+                    // Linear gradient.
+                    let gx = rng.uniform_in(-0.5, 0.5);
+                    let gy = rng.uniform_in(-0.5, 0.5);
+                    for yy in 0..side {
+                        for xx in 0..side {
+                            row[yy * side + xx] += (gx * xx as f64 / side as f64
+                                + gy * yy as f64 / side as f64)
+                                as f32;
+                        }
+                    }
+                }
+            }
+        }
+        // Normalise to [0, 1].
+        let mn = row.iter().cloned().fold(f32::INFINITY, f32::min);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let scale = 1.0 / (mx - mn).max(1e-6);
+        for v in row.iter_mut() {
+            *v = (*v - mn) * scale;
+        }
+    }
+    out
+}
+
+/// White-noise images in [0,1], same shape as [`image_corpus`].
+pub fn noise_images(n: usize, side: usize, rng: &mut Rng) -> Mat {
+    Mat::from_fn(n, side * side, |_, _| rng.uniform() as f32)
+}
+
+/// Fig. 6 substrate: the positive octant of S² discretised as a
+/// `side x side` grid (spherical coordinates), returned as a `(side², 3)`
+/// matrix of unit vectors with strictly positive coordinates.
+pub fn positive_sphere_grid(side: usize) -> Mat {
+    let mut rows = Vec::with_capacity(side * side);
+    for i in 0..side {
+        for j in 0..side {
+            // theta, phi in the open (0, pi/2) interior so all coords > 0.
+            let t = (i as f64 + 0.5) / side as f64 * std::f64::consts::FRAC_PI_2;
+            let p = (j as f64 + 0.5) / side as f64 * std::f64::consts::FRAC_PI_2;
+            rows.push(vec![
+                (t.sin() * p.cos()) as f32,
+                (t.sin() * p.sin()) as f32,
+                t.cos() as f32,
+            ]);
+        }
+    }
+    Mat::from_rows(&rows)
+}
+
+/// Fig. 6 inputs: three blurred histograms concentrated near the three
+/// "corners" of the positive octant (the x, y and z poles).
+pub fn corner_histograms(grid: &Mat, blur: f64) -> [Vec<f32>; 3] {
+    let corners: [[f32; 3]; 3] = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+    let mut out: [Vec<f32>; 3] = [vec![], vec![], vec![]];
+    for (c, corner) in corners.iter().enumerate() {
+        let mut h = Vec::with_capacity(grid.rows());
+        for i in 0..grid.rows() {
+            let p = grid.row(i);
+            let d2: f64 = p
+                .iter()
+                .zip(corner.iter())
+                .map(|(&a, &b)| ((a - b) as f64) * ((a - b) as f64))
+                .sum();
+            h.push((-d2 / (2.0 * blur * blur)).exp() as f32);
+        }
+        let z: f64 = h.iter().map(|&x| x as f64).sum();
+        for v in &mut h {
+            *v = (*v as f64 / z) as f32;
+        }
+        out[c] = h;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_blobs_shapes_and_weights() {
+        let mut rng = Rng::seed_from(0);
+        let (a, b) = gaussian_blobs(100, &mut rng);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.dim(), 2);
+        let s: f32 = a.weights.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        // The two clouds have visibly different means.
+        let mean_a: f32 = a.points.data().iter().sum::<f32>() / 200.0;
+        let mean_b: f32 = b.points.data().iter().sum::<f32>() / 200.0;
+        assert!(mean_a > 0.5 && mean_b.abs() < 0.5);
+    }
+
+    #[test]
+    fn sphere_caps_on_unit_sphere_and_separated() {
+        let mut rng = Rng::seed_from(1);
+        let (a, b) = sphere_caps(64, &mut rng);
+        for m in [&a, &b] {
+            for i in 0..m.len() {
+                let n2: f32 = m.points.row(i).iter().map(|x| x * x).sum();
+                assert!((n2 - 1.0).abs() < 1e-5);
+            }
+        }
+        // All of a is in the northern band, b southern.
+        assert!((0..a.len()).all(|i| a.points[(i, 2)] > 0.0));
+        assert!((0..b.len()).all(|i| b.points[(i, 2)] < 0.0));
+    }
+
+    #[test]
+    fn higgs_pair_shape_and_pooled_standardised() {
+        let mut rng = Rng::seed_from(2);
+        let (sig, bkg) = higgs_pair(250, &mut rng);
+        assert_eq!(sig.dim(), 28);
+        assert_eq!(bkg.dim(), 28);
+        // Pooled standardisation: every column of the union has ~zero mean
+        // and ~unit variance (per-class means may and should differ).
+        for j in 0..28 {
+            let mut vals: Vec<f64> = sig.points.col_copy(j).iter().map(|&x| x as f64).collect();
+            vals.extend(bkg.points.col_copy(j).iter().map(|&x| x as f64));
+            let mean: f64 = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var: f64 =
+                vals.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / vals.len() as f64;
+            assert!(mean.abs() < 1e-4, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn higgs_classes_differ() {
+        // The class-conditional shift must survive pooled standardisation:
+        // the two class means are separated in feature space.
+        let mut rng = Rng::seed_from(3);
+        let (sig, bkg) = higgs_pair(600, &mut rng);
+        let mean_of = |m: &Measure| -> Vec<f64> {
+            (0..m.dim())
+                .map(|j| m.points.col_copy(j).iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64)
+                .collect()
+        };
+        let ms = mean_of(&sig);
+        let mb = mean_of(&bkg);
+        let sep: f64 = ms.iter().zip(&mb).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(sep > 0.3, "class mean separation {sep} too small");
+    }
+
+    #[test]
+    fn image_corpus_in_unit_range_and_structured() {
+        let mut rng = Rng::seed_from(4);
+        let imgs = image_corpus(10, 16, &mut rng);
+        assert_eq!(imgs.shape(), (10, 256));
+        for &v in imgs.data() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+        // Structured images have strong pixel-to-pixel correlation; noise
+        // doesn't. Compare lag-1 autocorrelation.
+        let noise = noise_images(10, 16, &mut rng);
+        let autocorr = |m: &Mat| {
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for i in 0..m.rows() {
+                let r = m.row(i);
+                let mean: f64 = r.iter().map(|&x| x as f64).sum::<f64>() / r.len() as f64;
+                for w in r.windows(2) {
+                    num += (w[0] as f64 - mean) * (w[1] as f64 - mean);
+                }
+                for &x in r {
+                    den += (x as f64 - mean).powi(2);
+                }
+            }
+            num / den
+        };
+        // Stripes at the highest frequency dent the lag-1 autocorrelation;
+        // the separation from white noise is what matters.
+        let img_ac = autocorr(&imgs);
+        let noise_ac = autocorr(&noise);
+        assert!(img_ac > 0.35, "images should be smooth (ac {img_ac})");
+        assert!(noise_ac < 0.2, "noise should not be (ac {noise_ac})");
+        assert!(img_ac > noise_ac + 0.25, "images vs noise: {img_ac} vs {noise_ac}");
+    }
+
+    #[test]
+    fn positive_sphere_grid_is_positive_and_unit() {
+        let g = positive_sphere_grid(20);
+        assert_eq!(g.shape(), (400, 3));
+        for i in 0..g.rows() {
+            let p = g.row(i);
+            assert!(p.iter().all(|&x| x > 0.0), "row {i} not strictly positive");
+            let n2: f32 = p.iter().map(|x| x * x).sum();
+            assert!((n2 - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn corner_histograms_normalised_and_peaked() {
+        let g = positive_sphere_grid(30);
+        let hists = corner_histograms(&g, 0.25);
+        for h in &hists {
+            let s: f64 = h.iter().map(|&x| x as f64).sum();
+            assert!((s - 1.0).abs() < 1e-4);
+            assert!(h.iter().all(|&x| x >= 0.0));
+        }
+        // Peak of histogram 2 (z-corner) should be at a grid point with
+        // large z coordinate.
+        let (argmax, _) = hists[2]
+            .iter()
+            .enumerate()
+            .fold((0, f32::NEG_INFINITY), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+        assert!(g[(argmax, 2)] > 0.9);
+    }
+
+    #[test]
+    fn measure_radius() {
+        let m = Measure::uniform(Mat::from_rows(&[vec![3.0, 4.0], vec![0.0, 1.0]]));
+        assert!((m.radius() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the linear-sinkhorn stack.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Sinkhorn iterations produced a non-finite scaling (typically a dense
+    /// kernel with underflowed rows at very small epsilon, or a Nyström
+    /// approximation with non-positive entries — the failure mode the
+    /// paper's positive features avoid by construction).
+    #[error("sinkhorn diverged at iteration {iter}: {reason}")]
+    SinkhornDiverged { iter: usize, reason: String },
+
+    /// A low-rank kernel approximation lost positivity (Nyström baseline).
+    #[error("kernel approximation is not positive: min entry {min_entry:e} (rank {rank})")]
+    NotPositive { min_entry: f64, rank: usize },
+
+    /// Shape mismatch between operands.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Config file / CLI problems.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// AOT artifact registry problems (missing file, bad manifest…).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// The coordinator rejected a request (shed load / shut down).
+    #[error("service: {0}")]
+    Service(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}

@@ -1,0 +1,412 @@
+//! Positive feature maps — the paper's §3 construction.
+//!
+//! A [`FeatureMap`] sends points `x in R^d` to the *strictly positive*
+//! orthant `(R_+^*)^r`, defining a kernel `k(x,y) = <phi(x), phi(y)>` and
+//! thereby a cost `c(x,y) = -eps log k(x,y)` (Eq. 7). Implementations:
+//!
+//! * [`GaussianFeatureMap`] — Lemma 1: random features whose expectation is
+//!   the Gaussian/Gibbs kernel of the squared Euclidean cost.
+//! * [`ArcCosFeatureMap`] — Lemma 3: perturbed arc-cosine kernels.
+//! * [`SphereLinearMap`] — Remark 1: the identity map on the positive
+//!   sphere, whose kernel is the plain dot product (used by Fig. 6).
+//! * [`LearnedFeatureMap`] — §3.3/§4: an affine embedding followed by an
+//!   elementwise positive nonlinearity, trained adversarially in the GAN.
+
+use crate::data::Measure;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::special;
+
+mod learned;
+
+pub use learned::LearnedFeatureMap;
+
+/// Underflow floor shared with the python oracle (`ref.LOG_FLOOR`):
+/// exp(-80) ~ 1.8e-35 keeps every feature a normal positive f32.
+pub const LOG_FLOOR: f32 = -80.0;
+
+/// Overflow ceiling (`ref.LOG_CEIL`): guards the anchor-norm exponent
+/// against f32 overflow at extreme (eps, q).
+pub const LOG_CEIL: f32 = 80.0;
+
+/// A map from points to the strictly positive orthant.
+pub trait FeatureMap {
+    /// Output dimension r (the number of features).
+    fn num_features(&self) -> usize;
+
+    /// Write `phi(x)` for a single point into `out` (`out.len() == r`).
+    fn eval_into(&self, x: &[f32], out: &mut [f32]);
+
+    /// Write `log phi(x)` — *unclamped* where the implementation can, so
+    /// callers may renormalise before exponentiating (the f32-stabilised
+    /// factored kernel). Default falls back to `ln(eval)`.
+    fn log_eval_into(&self, x: &[f32], out: &mut [f32]) {
+        self.eval_into(x, out);
+        for v in out.iter_mut() {
+            *v = v.ln();
+        }
+    }
+
+    /// Log-feature matrix (n, r).
+    fn log_feature_matrix(&self, points: &Mat) -> Mat {
+        let n = points.rows();
+        let r = self.num_features();
+        let mut out = Mat::zeros(n, r);
+        for i in 0..n {
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(out.data_mut().as_mut_ptr().add(i * r), r)
+            };
+            self.log_eval_into(points.row(i), row);
+        }
+        out
+    }
+
+    /// Feature matrix `Phi in R_+^{n x r}` for all rows of `points`.
+    fn feature_matrix(&self, points: &Mat) -> Mat {
+        let n = points.rows();
+        let r = self.num_features();
+        let mut out = Mat::zeros(n, r);
+        for i in 0..n {
+            // Split borrow: rows are disjoint.
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(out.data_mut().as_mut_ptr().add(i * r), r)
+            };
+            self.eval_into(points.row(i), row);
+        }
+        out
+    }
+
+    /// The induced kernel `k(x, y) = <phi(x), phi(y)>`.
+    fn kernel(&self, x: &[f32], y: &[f32]) -> f32 {
+        let r = self.num_features();
+        let mut px = vec![0.0; r];
+        let mut py = vec![0.0; r];
+        self.eval_into(x, &mut px);
+        self.eval_into(y, &mut py);
+        crate::linalg::dot(&px, &py)
+    }
+
+    /// The induced cost `c(x, y) = -eps log k(x, y)` (Eq. 7).
+    fn cost(&self, x: &[f32], y: &[f32], eps: f64) -> f64 {
+        -eps * (self.kernel(x, y) as f64).ln()
+    }
+}
+
+/// Lemma 1: positive random features for the Gaussian kernel
+/// `k(x,y) = exp(-||x-y||^2 / eps)`.
+///
+/// Anchors `u_1..u_r ~ N(0, (q eps/4) I_d)` with
+/// `q = eps^{-1} R^2 / (2 d W0(eps^{-1} R^2/d))`, and
+/// `phi_j(x) = (2q)^{d/4} exp(-2/eps ||x-u_j||^2 + ||u_j||^2/(eps q)) / sqrt(r)`.
+#[derive(Clone, Debug)]
+pub struct GaussianFeatureMap {
+    /// Anchor matrix, (r, d).
+    pub anchors: Mat,
+    pub eps: f64,
+    pub q: f64,
+    /// Data radius R used to set q (diagnostic).
+    pub radius: f64,
+    /// Precomputed per-anchor constant:
+    /// (d/4) log(2q) + ||u_j||^2/(eps q) - log(r)/2.
+    log_const: Vec<f32>,
+    /// Precomputed ||u_j||^2 (hot-path term of the expanded square dist).
+    anchor_sq: Vec<f32>,
+}
+
+impl GaussianFeatureMap {
+    /// Draw `r` anchors for data of radius `radius` in dimension `dim`.
+    pub fn new(eps: f64, radius: f64, dim: usize, r: usize, rng: &mut Rng) -> Self {
+        assert!(r > 0 && dim > 0 && eps > 0.0 && radius > 0.0);
+        let q = special::gaussian_q(eps, radius, dim);
+        let sigma = (q * eps / 4.0).sqrt();
+        let anchors = Mat::from_fn(r, dim, |_, _| rng.normal_scaled(0.0, sigma) as f32);
+        Self::with_anchors(anchors, eps, q, radius)
+    }
+
+    /// Fit the radius from the data (R = max point norm over both clouds)
+    /// then draw anchors.
+    pub fn fit(mu: &Measure, nu: &Measure, eps: f64, r: usize, rng: &mut Rng) -> Self {
+        assert_eq!(mu.dim(), nu.dim(), "measures must share a ground space");
+        let radius = mu.radius().max(nu.radius()).max(1e-6);
+        Self::new(eps, radius, mu.dim(), r, rng)
+    }
+
+    /// Build from explicit anchors (e.g. shared with the AOT artifacts).
+    pub fn with_anchors(anchors: Mat, eps: f64, q: f64, radius: f64) -> Self {
+        let (r, d) = anchors.shape();
+        let mut log_const = Vec::with_capacity(r);
+        let mut anchor_sq = Vec::with_capacity(r);
+        let base = (d as f64 / 4.0) * (2.0 * q).ln() - 0.5 * (r as f64).ln();
+        for j in 0..r {
+            let usq: f64 = anchors.row(j).iter().map(|&v| (v as f64) * (v as f64)).sum();
+            anchor_sq.push(usq as f32);
+            log_const.push((base + usq / (eps * q)) as f32);
+        }
+        GaussianFeatureMap { anchors, eps, q, radius, log_const, anchor_sq }
+    }
+
+    /// The paper's psi constant `2 (2q)^{d/2}` bounding phi*phi/k —
+    /// Theorem 3.1's feature-count driver, exposed for diagnostics.
+    pub fn psi(&self) -> f64 {
+        2.0 * (2.0 * self.q).powf(self.anchors.cols() as f64 / 2.0)
+    }
+
+    /// Gradient of `sum_ij upstream[i,j] * phi_j(x_i)` w.r.t. the point
+    /// locations — the `(∂ξ/∂X)^T` piece of Prop 3.2's
+    /// `∇_X W = -eps (∂ξ/∂X)^T u (ζ v)^T`, used for Sinkhorn-divergence
+    /// gradient flows and generative modelling on raw coordinates.
+    ///
+    /// For the Lemma-1 features, `∂φ_j(x)/∂x = φ_j(x) · (-4/eps)(x - u_j)`.
+    pub fn grad_points(&self, points: &Mat, phi: &Mat, upstream: &Mat) -> Mat {
+        let (n, d) = points.shape();
+        let r = self.num_features();
+        assert_eq!(phi.shape(), (n, r));
+        assert_eq!(upstream.shape(), (n, r));
+        let coef = (-4.0 / self.eps) as f32;
+        let mut out = Mat::zeros(n, d);
+        for i in 0..n {
+            let xi = points.row(i);
+            let phii = phi.row(i);
+            let upi = upstream.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..r {
+                let w = upi[j] * phii[j] * coef;
+                if w == 0.0 {
+                    continue;
+                }
+                let uj = self.anchors.row(j);
+                for ((o, &x), &u) in orow.iter_mut().zip(xi).zip(uj) {
+                    *o += w * (x - u);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl FeatureMap for GaussianFeatureMap {
+    fn num_features(&self) -> usize {
+        self.anchors.rows()
+    }
+
+    fn eval_into(&self, x: &[f32], out: &mut [f32]) {
+        self.log_eval_into(x, out);
+        for v in out.iter_mut() {
+            *v = v.clamp(LOG_FLOOR, LOG_CEIL).exp();
+        }
+    }
+
+    fn log_eval_into(&self, x: &[f32], out: &mut [f32]) {
+        let (r, d) = self.anchors.shape();
+        assert_eq!(x.len(), d, "point dim {} != anchor dim {d}", x.len());
+        assert_eq!(out.len(), r);
+        let xsq: f32 = x.iter().map(|&v| v * v).sum();
+        let inv_eps2 = (2.0 / self.eps) as f32;
+        for j in 0..r {
+            let urow = self.anchors.row(j);
+            // ||x - u||^2 = ||x||^2 - 2 x.u + ||u||^2 (MXU-shaped on L1).
+            let dot: f32 = x.iter().zip(urow).map(|(&a, &b)| a * b).sum();
+            let sq = xsq - 2.0 * dot + self.anchor_sq[j];
+            out[j] = self.log_const[j] - inv_eps2 * sq;
+        }
+    }
+}
+
+/// Lemma 3: perturbed arc-cosine features
+/// `phi(x,u) = (sigma^{d/2} sqrt(2) max(0, u^T x)^s e^{-||u||^2(1-1/sigma^2)/4},
+/// sqrt(kappa))` with anchors `u ~ N(0, sigma^2 I)`.
+///
+/// The trailing constant feature bounds the kernel below by `kappa > 0`,
+/// which is what makes Assumption 2 hold (and Sinkhorn robust).
+#[derive(Clone, Debug)]
+pub struct ArcCosFeatureMap {
+    pub anchors: Mat,
+    /// Rectifier exponent s (0 = step kernel, 1 = ReLU/arc-cosine-1).
+    pub s: u32,
+    /// Positive perturbation kappa.
+    pub kappa: f64,
+    /// Anchor distribution scale sigma > 1.
+    pub sigma: f64,
+    scale: Vec<f32>,
+}
+
+impl ArcCosFeatureMap {
+    pub fn new(dim: usize, r: usize, s: u32, kappa: f64, sigma: f64, rng: &mut Rng) -> Self {
+        assert!(sigma > 1.0, "Lemma 3 requires sigma > 1");
+        assert!(kappa > 0.0, "kappa must be positive");
+        let anchors = Mat::from_fn(r, dim, |_, _| rng.normal_scaled(0.0, sigma) as f32);
+        let mut scale = Vec::with_capacity(r);
+        let c0 = sigma.powf(dim as f64 / 2.0) * 2.0f64.sqrt() / (r as f64).sqrt();
+        for j in 0..r {
+            let usq: f64 = anchors.row(j).iter().map(|&v| (v as f64) * (v as f64)).sum();
+            scale.push((c0 * (-(usq / 4.0) * (1.0 - 1.0 / (sigma * sigma))).exp()) as f32);
+        }
+        ArcCosFeatureMap { anchors, s, kappa, sigma, scale }
+    }
+}
+
+impl FeatureMap for ArcCosFeatureMap {
+    fn num_features(&self) -> usize {
+        self.anchors.rows() + 1 // +1 for the sqrt(kappa) constant feature
+    }
+
+    fn eval_into(&self, x: &[f32], out: &mut [f32]) {
+        let (r, d) = self.anchors.shape();
+        assert_eq!(x.len(), d);
+        assert_eq!(out.len(), r + 1);
+        for j in 0..r {
+            let dot: f32 = x.iter().zip(self.anchors.row(j)).map(|(&a, &b)| a * b).sum();
+            let rect = dot.max(0.0);
+            let powed = match self.s {
+                0 => {
+                    if dot > 0.0 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                1 => rect,
+                s => rect.powi(s as i32),
+            };
+            out[j] = powed * self.scale[j];
+        }
+        out[r] = (self.kappa as f32).sqrt();
+    }
+}
+
+/// Remark 1: on the positive sphere the cost `c(x,y) = -log x^T y` is
+/// *exactly* factorised — the feature map is the identity and `K = X Y^T`
+/// with rank d. Fig. 6's barycenters run on this map with r = 3.
+#[derive(Clone, Debug)]
+pub struct SphereLinearMap {
+    pub dim: usize,
+}
+
+impl SphereLinearMap {
+    pub fn new(dim: usize) -> Self {
+        SphereLinearMap { dim }
+    }
+}
+
+impl FeatureMap for SphereLinearMap {
+    fn num_features(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.dim);
+        debug_assert!(
+            x.iter().all(|&v| v > 0.0),
+            "SphereLinearMap requires points on the strictly positive sphere"
+        );
+        out.copy_from_slice(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    #[test]
+    fn gaussian_features_strictly_positive() {
+        let mut rng = Rng::seed_from(0);
+        let fm = GaussianFeatureMap::new(0.5, 3.0, 2, 64, &mut rng);
+        let phi = fm.feature_matrix(&Mat::from_fn(50, 2, |_, _| rng.normal_f32() * 2.0));
+        assert!(phi.min_entry() > 0.0, "positivity by construction");
+    }
+
+    #[test]
+    fn gaussian_kernel_mc_converges() {
+        // <phi(x), phi(y)> -> exp(-||x-y||^2/eps) as r grows (Lemma 1).
+        let mut rng = Rng::seed_from(1);
+        let eps = 1.0;
+        let fm = GaussianFeatureMap::new(eps, 2.0, 2, 8000, &mut rng);
+        for _ in 0..10 {
+            let x = [rng.uniform_in(-1.0, 1.0) as f32, rng.uniform_in(-1.0, 1.0) as f32];
+            let y = [rng.uniform_in(-1.0, 1.0) as f32, rng.uniform_in(-1.0, 1.0) as f32];
+            let k_theta = fm.kernel(&x, &y) as f64;
+            let d2: f64 =
+                x.iter().zip(&y).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+            let k_true = (-d2 / eps).exp();
+            assert!(
+                (k_theta / k_true - 1.0).abs() < 0.2,
+                "ratio {} for d2 {d2}",
+                k_theta / k_true
+            );
+        }
+    }
+
+    #[test]
+    fn gaussian_q_uses_lambert() {
+        let mut rng = Rng::seed_from(2);
+        let fm = GaussianFeatureMap::new(0.5, 3.0, 2, 8, &mut rng);
+        assert!((fm.q - special::gaussian_q(0.5, 3.0, 2)).abs() < 1e-12);
+        assert!(fm.psi() > 0.0);
+    }
+
+    #[test]
+    fn gaussian_fit_radius_covers_data() {
+        let mut rng = Rng::seed_from(3);
+        let (mu, nu) = data::gaussian_blobs(200, &mut rng);
+        let fm = GaussianFeatureMap::fit(&mu, &nu, 0.5, 16, &mut rng);
+        assert!(fm.radius >= mu.radius() && fm.radius >= nu.radius());
+    }
+
+    #[test]
+    fn gaussian_feature_matrix_matches_eval() {
+        let mut rng = Rng::seed_from(4);
+        let fm = GaussianFeatureMap::new(0.7, 2.0, 3, 10, &mut rng);
+        let pts = Mat::from_fn(7, 3, |_, _| rng.normal_f32());
+        let phi = fm.feature_matrix(&pts);
+        let mut row = vec![0.0; 10];
+        for i in 0..7 {
+            fm.eval_into(pts.row(i), &mut row);
+            for j in 0..10 {
+                assert_eq!(phi[(i, j)], row[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn arccos_kernel_bounded_below_by_kappa() {
+        let mut rng = Rng::seed_from(5);
+        let fm = ArcCosFeatureMap::new(3, 100, 1, 0.25, 1.5, &mut rng);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..3).map(|_| rng.normal_f32()).collect();
+            let y: Vec<f32> = (0..3).map(|_| rng.normal_f32()).collect();
+            assert!(fm.kernel(&x, &y) >= 0.25 - 1e-5);
+        }
+    }
+
+    #[test]
+    fn arccos_s0_features_are_binary_scaled() {
+        let mut rng = Rng::seed_from(6);
+        let fm = ArcCosFeatureMap::new(2, 10, 0, 0.1, 1.2, &mut rng);
+        let mut out = vec![0.0; 11];
+        fm.eval_into(&[1.0, 0.5], &mut out);
+        // Each non-constant feature is 0 or the anchor scale.
+        for (j, &v) in out[..10].iter().enumerate() {
+            assert!(v == 0.0 || (v - fm.scale[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sphere_linear_map_is_identity() {
+        let fm = SphereLinearMap::new(3);
+        let mut out = vec![0.0; 3];
+        fm.eval_into(&[0.6, 0.48, 0.64], &mut out);
+        assert_eq!(out, vec![0.6, 0.48, 0.64]);
+        // Kernel is the dot product.
+        let k = fm.kernel(&[0.6, 0.48, 0.64], &[0.1, 0.2, 0.97]);
+        assert!((k - (0.06 + 0.096 + 0.6208)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cost_is_neg_eps_log_kernel() {
+        let fm = SphereLinearMap::new(2);
+        let c = fm.cost(&[0.6, 0.8], &[0.8, 0.6], 2.0);
+        let k = 0.6f64 * 0.8 + 0.8 * 0.6;
+        assert!((c + 2.0 * k.ln()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,210 @@
+//! Checkpointing for the GAN trainer: a small self-describing binary
+//! format (magic, version, named f32 sections) so long runs can resume
+//! and the Table-1 probe can evaluate saved kernels.
+//!
+//! Layout (little-endian):
+//!   magic  "LSKG"          4 bytes
+//!   version u32            (currently 1)
+//!   n_sections u32
+//!   per section: name_len u32, name bytes, data_len u32, f32 data
+//! A trailing CRC-free design keeps it dependency-free; corruption is
+//! caught by the magic/length checks and the parameter-count asserts on
+//! load.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"LSKG";
+const VERSION: u32 = 1;
+
+/// A named collection of f32 parameter sections.
+#[derive(Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub sections: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn add(&mut self, name: &str, data: Vec<f32>) {
+        self.sections.push((name.to_string(), data));
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| d.as_slice())
+            .ok_or_else(|| Error::Config(format!("checkpoint missing section `{name}`")))
+    }
+
+    /// Serialise to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        for (name, data) in &self.sections {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(data.len() as u32).to_le_bytes())?;
+            // Bulk-write the f32 payload.
+            let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Deserialise from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(&path)?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Config(format!(
+                "{}: not a linear-sinkhorn checkpoint",
+                path.as_ref().display()
+            )));
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let version = u32::from_le_bytes(u32buf);
+        if version != VERSION {
+            return Err(Error::Config(format!("unsupported checkpoint version {version}")));
+        }
+        f.read_exact(&mut u32buf)?;
+        let n_sections = u32::from_le_bytes(u32buf) as usize;
+        if n_sections > 1_000 {
+            return Err(Error::Config("checkpoint section count implausible".into()));
+        }
+        let mut ckpt = Checkpoint::default();
+        for _ in 0..n_sections {
+            f.read_exact(&mut u32buf)?;
+            let name_len = u32::from_le_bytes(u32buf) as usize;
+            if name_len > 4096 {
+                return Err(Error::Config("checkpoint name length implausible".into()));
+            }
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|_| Error::Config("checkpoint name not utf8".into()))?;
+            f.read_exact(&mut u32buf)?;
+            let data_len = u32::from_le_bytes(u32buf) as usize;
+            let mut bytes = vec![0u8; data_len * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            ckpt.sections.push((name, data));
+        }
+        Ok(ckpt)
+    }
+}
+
+impl super::GanTrainer {
+    /// Save generator / embedding / feature-map parameters.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut c = Checkpoint::default();
+        c.add("generator", self.generator.params_flat());
+        c.add("embed", self.embed.params_flat());
+        c.add("features", self.feat.params_flat());
+        c.save(path)
+    }
+
+    /// Restore parameters saved by [`Self::save_checkpoint`]. Optimiser
+    /// moments are reset (a fresh Adam warmup), matching common practice.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let c = Checkpoint::load(path)?;
+        let g = c.get("generator")?;
+        if g.len() != self.generator.num_params() {
+            return Err(Error::Config(format!(
+                "generator parameter count mismatch: checkpoint {} vs model {}",
+                g.len(),
+                self.generator.num_params()
+            )));
+        }
+        self.generator.set_params_flat(g);
+        let e = c.get("embed")?;
+        if e.len() != self.embed.num_params() {
+            return Err(Error::Config("embed parameter count mismatch".into()));
+        }
+        self.embed.set_params_flat(e);
+        let f = c.get("features")?;
+        if f.len() != self.feat.num_params() {
+            return Err(Error::Config("feature-map parameter count mismatch".into()));
+        }
+        self.feat.set_params_flat(f);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GanConfig;
+    use crate::gan::GanTrainer;
+    use crate::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ls-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_sections() {
+        let mut c = Checkpoint::default();
+        c.add("a", vec![1.0, -2.5, 3.25]);
+        c.add("b", vec![0.0; 100]);
+        let path = tmp("roundtrip");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trainer_checkpoint_roundtrip_generates_identically() {
+        let mut rng = Rng::seed_from(0);
+        let cfg = GanConfig { batch_size: 8, num_features: 8, latent_dim: 3, embed_dim: 3, ..Default::default() };
+        let mut t1 = GanTrainer::new(9, cfg.clone(), &mut rng);
+        let path = tmp("trainer");
+        t1.save_checkpoint(&path).unwrap();
+
+        let mut rng2 = Rng::seed_from(99); // different init
+        let mut t2 = GanTrainer::new(9, cfg, &mut rng2);
+        t2.load_checkpoint(&path).unwrap();
+        assert_eq!(t1.generator.params_flat(), t2.generator.params_flat());
+        assert_eq!(t1.embed.params_flat(), t2.embed.params_flat());
+        assert_eq!(t1.feat.params_flat(), t2.feat.params_flat());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mismatched_architecture_rejected() {
+        let mut rng = Rng::seed_from(1);
+        let cfg = GanConfig { batch_size: 8, num_features: 8, latent_dim: 3, embed_dim: 3, ..Default::default() };
+        let t1 = GanTrainer::new(9, cfg.clone(), &mut rng);
+        let path = tmp("mismatch");
+        t1.save_checkpoint(&path).unwrap();
+        let bigger = GanConfig { num_features: 16, ..cfg };
+        let mut t2 = GanTrainer::new(9, bigger, &mut rng);
+        assert!(t2.load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_section_is_error() {
+        let mut c = Checkpoint::default();
+        c.add("only", vec![1.0]);
+        assert!(c.get("missing").is_err());
+        assert!(c.get("only").is_ok());
+    }
+}

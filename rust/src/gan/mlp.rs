@@ -1,0 +1,324 @@
+//! Minimal dense network with manual backprop — the generator and the
+//! embedding network of the GAN. Layers: affine + activation
+//! (tanh | relu | linear | sigmoid on the output for images).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Activation per layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Act {
+    Linear,
+    Relu,
+    Tanh,
+    Sigmoid,
+}
+
+impl Act {
+    fn f(&self, x: f32) -> f32 {
+        match self {
+            Act::Linear => x,
+            Act::Relu => x.max(0.0),
+            Act::Tanh => x.tanh(),
+            Act::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        }
+    }
+
+    /// Derivative expressed through the *output* y = f(x).
+    fn df_from_y(&self, y: f32) -> f32 {
+        match self {
+            Act::Linear => 1.0,
+            Act::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Tanh => 1.0 - y * y,
+            Act::Sigmoid => y * (1.0 - y),
+        }
+    }
+}
+
+/// One dense layer.
+#[derive(Clone, Debug)]
+struct Layer {
+    /// (out, in).
+    w: Mat,
+    b: Vec<f32>,
+    act: Act,
+}
+
+/// A dense MLP with manual forward/backward.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    layers: Vec<Layer>,
+}
+
+/// Cached activations from a forward pass (needed for backward).
+pub struct Tape {
+    /// Activations per layer, index 0 = input batch (n, d_in).
+    acts: Vec<Mat>,
+}
+
+impl Mlp {
+    /// Build with Xavier-ish init. `dims = [in, h1, ..., out]`,
+    /// `acts.len() == dims.len() - 1`.
+    pub fn new(dims: &[usize], acts: &[Act], rng: &mut Rng) -> Self {
+        assert!(dims.len() >= 2 && acts.len() == dims.len() - 1);
+        let layers = dims
+            .windows(2)
+            .zip(acts)
+            .map(|(d, &act)| {
+                let std = (2.0 / (d[0] + d[1]) as f64).sqrt();
+                Layer {
+                    w: Mat::from_fn(d[1], d[0], |_, _| rng.normal_scaled(0.0, std) as f32),
+                    b: vec![0.0; d[1]],
+                    act,
+                }
+            })
+            .collect();
+        Mlp { layers }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].w.cols()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().w.rows()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.rows() * l.w.cols() + l.b.len()).sum()
+    }
+
+    /// Forward a batch (n, in) -> (n, out), recording the tape.
+    pub fn forward(&self, x: &Mat) -> (Mat, Tape) {
+        assert_eq!(x.cols(), self.in_dim());
+        let mut acts = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(x.clone());
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            let n = cur.rows();
+            let mut next = Mat::zeros(n, layer.w.rows());
+            for i in 0..n {
+                let xi = cur.row(i);
+                let row = next.row_mut(i);
+                for (j, out) in row.iter_mut().enumerate() {
+                    let dot: f32 =
+                        xi.iter().zip(layer.w.row(j)).map(|(&a, &b)| a * b).sum();
+                    *out = layer.act.f(dot + layer.b[j]);
+                }
+            }
+            acts.push(next.clone());
+            cur = next;
+        }
+        (cur, Tape { acts })
+    }
+
+    /// Backward: given dL/d output (n, out), accumulate parameter grads and
+    /// return dL/d input (n, in).
+    pub fn backward(&self, tape: &Tape, upstream: &Mat, grads: &mut MlpGrads) -> Mat {
+        assert_eq!(grads.layers.len(), self.layers.len());
+        let mut delta = upstream.clone();
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let y = &tape.acts[li + 1];
+            let x = &tape.acts[li];
+            let n = y.rows();
+            // delta := dL/d preactivation.
+            for i in 0..n {
+                let yr = y.row(i);
+                let dr = delta.row_mut(i);
+                for (d, &yv) in dr.iter_mut().zip(yr) {
+                    *d *= layer.act.df_from_y(yv);
+                }
+            }
+            // Parameter grads.
+            let g = &mut grads.layers[li];
+            for i in 0..n {
+                let xi = x.row(i);
+                let di = delta.row(i);
+                for (j, &dj) in di.iter().enumerate() {
+                    if dj == 0.0 {
+                        continue;
+                    }
+                    g.b[j] += dj;
+                    let gw = g.w.row_mut(j);
+                    for (gv, &xv) in gw.iter_mut().zip(xi) {
+                        *gv += dj * xv;
+                    }
+                }
+            }
+            // Input grad for the next (previous) layer.
+            if li > 0 {
+                let mut prev = Mat::zeros(n, layer.w.cols());
+                for i in 0..n {
+                    let di = delta.row(i);
+                    let pr = prev.row_mut(i);
+                    for (j, &dj) in di.iter().enumerate() {
+                        if dj == 0.0 {
+                            continue;
+                        }
+                        let wr = layer.w.row(j);
+                        for (pv, &wv) in pr.iter_mut().zip(wr) {
+                            *pv += dj * wv;
+                        }
+                    }
+                }
+                delta = prev;
+            } else {
+                // dL/d input of the whole net.
+                let mut dinput = Mat::zeros(n, layer.w.cols());
+                for i in 0..n {
+                    let di = delta.row(i);
+                    let pr = dinput.row_mut(i);
+                    for (j, &dj) in di.iter().enumerate() {
+                        if dj == 0.0 {
+                            continue;
+                        }
+                        let wr = layer.w.row(j);
+                        for (pv, &wv) in pr.iter_mut().zip(wr) {
+                            *pv += dj * wv;
+                        }
+                    }
+                }
+                return dinput;
+            }
+        }
+        unreachable!()
+    }
+
+    /// Zeroed gradient accumulator matching this net.
+    pub fn zero_grads(&self) -> MlpGrads {
+        MlpGrads {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerGrads { w: Mat::zeros(l.w.rows(), l.w.cols()), b: vec![0.0; l.b.len()] })
+                .collect(),
+        }
+    }
+
+    pub fn params_flat(&self) -> Vec<f32> {
+        let mut p = Vec::with_capacity(self.num_params());
+        for l in &self.layers {
+            p.extend_from_slice(l.w.data());
+            p.extend_from_slice(&l.b);
+        }
+        p
+    }
+
+    pub fn set_params_flat(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.num_params());
+        let mut off = 0;
+        for l in &mut self.layers {
+            let nw = l.w.rows() * l.w.cols();
+            l.w.data_mut().copy_from_slice(&p[off..off + nw]);
+            off += nw;
+            let nb = l.b.len();
+            l.b.copy_from_slice(&p[off..off + nb]);
+            off += nb;
+        }
+    }
+}
+
+/// Gradient accumulator for an [`Mlp`].
+pub struct MlpGrads {
+    layers: Vec<LayerGrads>,
+}
+
+struct LayerGrads {
+    w: Mat,
+    b: Vec<f32>,
+}
+
+impl MlpGrads {
+    pub fn flat(&self) -> Vec<f32> {
+        let mut g = Vec::new();
+        for l in &self.layers {
+            g.extend_from_slice(l.w.data());
+            g.extend_from_slice(&l.b);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::seed_from(0);
+        let net = Mlp::new(&[4, 8, 3], &[Act::Tanh, Act::Linear], &mut rng);
+        let x = Mat::from_fn(5, 4, |_, _| rng.normal_f32());
+        let (y, _) = net.forward(&x);
+        assert_eq!(y.shape(), (5, 3));
+        assert_eq!(net.num_params(), 4 * 8 + 8 + 8 * 3 + 3);
+    }
+
+    #[test]
+    fn sigmoid_output_in_unit_interval() {
+        let mut rng = Rng::seed_from(1);
+        let net = Mlp::new(&[2, 6, 4], &[Act::Relu, Act::Sigmoid], &mut rng);
+        let x = Mat::from_fn(10, 2, |_, _| rng.normal_f32() * 5.0);
+        let (y, _) = net.forward(&x);
+        for &v in y.data() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::seed_from(2);
+        let mut net = Mlp::new(&[3, 5, 2], &[Act::Tanh, Act::Linear], &mut rng);
+        let x = Mat::from_fn(4, 3, |_, _| rng.normal_f32());
+        // Loss = sum of outputs weighted by fixed coefficients.
+        let coef = Mat::from_fn(4, 2, |_, _| rng.normal_f32());
+        let loss = |net: &Mlp| -> f64 {
+            let (y, _) = net.forward(&x);
+            y.data().iter().zip(coef.data()).map(|(&a, &c)| (a * c) as f64).sum()
+        };
+        let (y, tape) = net.forward(&x);
+        assert_eq!(y.shape(), coef.shape());
+        let mut grads = net.zero_grads();
+        let dinput = net.backward(&tape, &coef, &mut grads);
+        let flat = grads.flat();
+        let base = net.params_flat();
+        let h = 1e-3;
+        for &idx in &[0usize, 7, 14, 19, net.num_params() - 1] {
+            let mut p = base.clone();
+            p[idx] += h;
+            net.set_params_flat(&p);
+            let up = loss(&net);
+            p[idx] -= 2.0 * h;
+            net.set_params_flat(&p);
+            let dn = loss(&net);
+            net.set_params_flat(&base);
+            let num = (up - dn) / (2.0 * h as f64);
+            let ana = flat[idx] as f64;
+            assert!((num - ana).abs() < 2e-2 * num.abs().max(0.05), "param {idx}: {num} vs {ana}");
+        }
+        // Input gradient check on one coordinate.
+        let mut x2 = x.clone();
+        x2[(1, 2)] += h;
+        let (y2, _) = net.forward(&x2);
+        let up: f64 = y2.data().iter().zip(coef.data()).map(|(&a, &c)| (a * c) as f64).sum();
+        x2[(1, 2)] -= 2.0 * h;
+        let (y3, _) = net.forward(&x2);
+        let dn: f64 = y3.data().iter().zip(coef.data()).map(|(&a, &c)| (a * c) as f64).sum();
+        let num = (up - dn) / (2.0 * h as f64);
+        assert!((num - dinput[(1, 2)] as f64).abs() < 2e-2 * num.abs().max(0.05));
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut rng = Rng::seed_from(3);
+        let mut net = Mlp::new(&[2, 3, 2], &[Act::Relu, Act::Linear], &mut rng);
+        let p: Vec<f32> = (0..net.num_params()).map(|i| i as f32 * 0.1).collect();
+        net.set_params_flat(&p);
+        assert_eq!(net.params_flat(), p);
+    }
+}

@@ -1,0 +1,23 @@
+//! Adversarial-kernel OT-GAN (paper §4, objective Eq. 18).
+//!
+//! Components:
+//! * [`Mlp`] — minimal dense network (the generator `g_rho` and the
+//!   embedding `f_gamma` are both MLPs, as in the paper which reuses the
+//!   DCGAN-ish architectures of [36, 46]; dense layers here since the
+//!   offline stack has no conv substrate and the *system* claim — linear
+//!   Sinkhorn enables big batches — is architecture-independent).
+//! * [`Adam`] — Adam optimiser.
+//! * [`GanTrainer`] — alternating min–max training of
+//!   `min_rho max_{gamma,theta} (1/B) sum_b Wbar_{eps, c_theta o h_gamma}`,
+//!   with the Prop-3.2 envelope gradient through the Sinkhorn duals
+//!   (no unrolling — the paper's memory-efficient strategy).
+
+mod checkpoint;
+mod mlp;
+mod optim;
+mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use mlp::{Act, Mlp, MlpGrads};
+pub use optim::Adam;
+pub use trainer::{GanTrainer, StepReport};

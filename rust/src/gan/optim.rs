@@ -1,0 +1,90 @@
+//! Adam optimiser over flat parameter vectors.
+
+/// Adam with bias correction (Kingma & Ba).
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(num_params: usize, lr: f64) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; num_params], v: vec![0.0; num_params], t: 0 }
+    }
+
+    /// One update step: `params -= lr * m_hat / (sqrt(v_hat) + eps)`.
+    /// For *ascent* (the critic's max step) pass the negated gradient.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.m.len(), "Adam: parameter count changed");
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i] as f64;
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let m_hat = self.m[i] / b1t;
+            let v_hat = self.v[i] / b2t;
+            params[i] -= (self.lr * m_hat / (v_hat.sqrt() + self.eps)) as f32;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimises_quadratic() {
+        // f(x) = ||x - target||^2.
+        let target = [3.0f32, -2.0, 0.5];
+        let mut x = [0.0f32; 3];
+        let mut adam = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let g: Vec<f32> = x.iter().zip(&target).map(|(&xi, &t)| 2.0 * (xi - t)).collect();
+            adam.step(&mut x, &g);
+        }
+        for (xi, t) in x.iter().zip(&target) {
+            assert!((xi - t).abs() < 1e-2, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // With bias correction the first update has magnitude ~lr.
+        let mut x = [0.0f32];
+        let mut adam = Adam::new(1, 0.1);
+        adam.step(&mut x, &[123.0]);
+        assert!((x[0].abs() - 0.1).abs() < 1e-3, "{}", x[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        let mut adam = Adam::new(2, 0.1);
+        let mut x = [0.0f32; 3];
+        adam.step(&mut x, &[1.0; 3]);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut adam = Adam::new(1, 0.1);
+        let mut x = [0.0f32];
+        adam.step(&mut x, &[1.0]);
+        adam.reset();
+        assert_eq!(adam.t, 0);
+        assert_eq!(adam.m[0], 0.0);
+    }
+}

@@ -1,0 +1,75 @@
+//! # linear-sinkhorn
+//!
+//! A production-shaped reproduction of **"Linear Time Sinkhorn Divergences
+//! using Positive Features"** (Scetbon & Cuturi, NeurIPS 2020).
+//!
+//! The paper's idea: instead of choosing a cost `c` and deriving the Gibbs
+//! kernel `K = exp(-C/eps)`, choose a *positive feature map*
+//! `phi: X -> (R_+^*)^r` and define `k(x,y) = <phi(x), phi(y)>`. Then
+//! `K = xi^T zeta` is factorised by construction, every Sinkhorn iteration
+//! costs `O(r(n+m))` instead of `O(nm)`, and — unlike Nyström low-rank
+//! approximations — positivity of `Kv` is guaranteed for any `r`.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L1 (Pallas, build-time python)** — tiled feature-map and factored
+//!   matvec kernels, `python/compile/kernels/`.
+//! * **L2 (JAX, build-time python)** — Sinkhorn compute graphs AOT-lowered
+//!   to HLO text artifacts, `python/compile/model.py` + `aot.py`.
+//! * **L3 (this crate)** — coordinator, native algorithm suite, PJRT
+//!   runtime that loads the artifacts, service, GAN trainer, benches.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! python invocation, and the binary is self-contained afterwards.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use linear_sinkhorn::prelude::*;
+//!
+//! // Two point clouds.
+//! let mut rng = Rng::seed_from(0);
+//! let (mu, nu) = data::gaussian_blobs(1000, &mut rng);
+//!
+//! // Positive features (Lemma 1) for the squared-Euclidean Gibbs kernel.
+//! let eps = 0.5;
+//! let map = GaussianFeatureMap::fit(&mu, &nu, eps, 256, &mut rng);
+//! let kernel = FactoredKernel::from_measures(&map, &mu, &nu);
+//!
+//! // Linear-time Sinkhorn.
+//! let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
+//! let sol = sinkhorn(&kernel, &mu.weights, &nu.weights, &cfg).unwrap();
+//! println!("ROT ~= {}", sol.objective);
+//! ```
+
+pub mod barycenter;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod features;
+pub mod gan;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sinkhorn;
+pub mod special;
+pub mod testing;
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{GanConfig, ServiceConfig, SinkhornConfig, TradeoffConfig};
+    pub use crate::data::{self, Measure};
+    pub use crate::error::{Error, Result};
+    pub use crate::features::{ArcCosFeatureMap, FeatureMap, GaussianFeatureMap};
+    pub use crate::kernels::{DenseKernel, FactoredKernel, KernelOp, NystromKernel};
+    pub use crate::linalg::Mat;
+    pub use crate::rng::Rng;
+    pub use crate::sinkhorn::{
+        sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, SinkhornSolution,
+    };
+}

@@ -1,0 +1,172 @@
+//! Dense linear algebra substrate.
+//!
+//! The offline crate set has no BLAS/ndarray, so the whole stack sits on
+//! this module: a row-major [`Mat`] plus the blocked matvec / matmul
+//! routines that are the per-iteration cost of every Sinkhorn variant.
+//! The hot paths (`matvec`, `matvec_t`, `apply` in `kernels/`) are written
+//! to be allocation-free given caller-provided output buffers and blocked
+//! for cache/SIMD friendliness (the compiler auto-vectorises the inner
+//! `f32` loops; see EXPERIMENTS.md §Perf).
+
+mod mat;
+mod ops;
+
+pub use mat::Mat;
+pub use ops::{
+    axpy, dot, l1_diff, l1_norm, logsumexp, matmul, matvec, matvec_into, matvec_t,
+    matvec_t_into, max_abs_diff, scale, softmax_inplace, sum,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        let mut rng = Rng::seed_from(1);
+        for &(m, k) in &[(1usize, 1usize), (3, 7), (17, 33), (64, 64), (130, 67)] {
+            let a = rand_mat(&mut rng, m, k);
+            let v: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let got = matvec(&a, &v);
+            for i in 0..m {
+                let want: f32 = (0..k).map(|j| a[(i, j)] * v[j]).sum();
+                assert!((got[i] - want).abs() <= 1e-4 * want.abs().max(1.0), "({m},{k}) row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_naive() {
+        let mut rng = Rng::seed_from(2);
+        for &(m, k) in &[(1usize, 1usize), (5, 3), (33, 17), (128, 96)] {
+            let a = rand_mat(&mut rng, m, k);
+            let v: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+            let got = matvec_t(&a, &v);
+            for j in 0..k {
+                let want: f32 = (0..m).map(|i| a[(i, j)] * v[i]).sum();
+                assert!((got[j] - want).abs() <= 1e-3 * want.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_adjoint_identity() {
+        // <u, A v> == <A^T u, v> — the identity the factored Sinkhorn
+        // update relies on.
+        let mut rng = Rng::seed_from(3);
+        let a = rand_mat(&mut rng, 23, 31);
+        let u: Vec<f32> = (0..23).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..31).map(|_| rng.normal_f32()).collect();
+        let lhs = dot(&u, &matvec(&a, &v));
+        let rhs = dot(&matvec_t(&a, &u), &v);
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::seed_from(4);
+        let a = rand_mat(&mut rng, 9, 13);
+        let b = rand_mat(&mut rng, 13, 11);
+        let c = matmul(&a, &b);
+        for i in 0..9 {
+            for j in 0..11 {
+                let want: f32 = (0..13).map(|k| a[(i, k)] * b[(k, j)]).sum();
+                assert!((c[(i, j)] - want).abs() < 1e-4 * want.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn mat_transpose_roundtrip() {
+        let mut rng = Rng::seed_from(5);
+        let a = rand_mat(&mut rng, 7, 12);
+        let att = a.transpose().transpose();
+        assert_eq!(a.rows(), att.rows());
+        assert!(max_abs_diff(a.data(), att.data()) == 0.0);
+    }
+
+    #[test]
+    fn logsumexp_is_shift_invariant() {
+        let xs = [1.0f32, 2.0, 3.0, -1.0];
+        let shifted: Vec<f32> = xs.iter().map(|x| x + 100.0).collect();
+        let a = logsumexp(&xs);
+        let b = logsumexp(&shifted);
+        assert!((b - (a + 100.0)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn logsumexp_handles_extremes() {
+        assert!(logsumexp(&[-1e30f32, -1e30]).is_finite());
+        let one = logsumexp(&[0.0f32]);
+        assert!((one - 0.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![0.5f32, -2.0, 7.0, 0.0];
+        softmax_inplace(&mut xs, 1.0);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn softmax_temperature_sharpens() {
+        let mut cold = vec![1.0f32, 2.0, 3.0];
+        let mut hot = cold.clone();
+        softmax_inplace(&mut cold, 1.0);
+        softmax_inplace(&mut hot, 100.0);
+        assert!(hot[2] > cold[2]); // higher temperature (paper's T=1000 sense) sharpens peaks
+    }
+
+    #[test]
+    fn mat_from_rows_and_indexing() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.col_copy(0), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mat_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let v = vec![1.0f32; 5];
+        let _ = matvec(&a, &v);
+    }
+}
+
+#[cfg(test)]
+mod perf_probe {
+    use super::*;
+    use crate::rng::Rng;
+    use std::time::Instant;
+
+    #[test]
+    #[ignore]
+    fn matvec_throughput() {
+        let mut rng = Rng::seed_from(0);
+        for &(m, k) in &[(4000usize, 400usize), (400, 4000), (2000, 2000)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal_f32());
+            let v: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let w: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+            let mut out = vec![0.0f32; m];
+            let mut out_t = vec![0.0f32; k];
+            let reps = 200;
+            let t = Instant::now();
+            for _ in 0..reps { matvec_into(&a, &v, &mut out); }
+            let mv = t.elapsed().as_secs_f64() / reps as f64;
+            let t = Instant::now();
+            for _ in 0..reps { matvec_t_into(&a, &w, &mut out_t); }
+            let mvt = t.elapsed().as_secs_f64() / reps as f64;
+            let flops = 2.0 * m as f64 * k as f64;
+            println!("{m}x{k}: matvec {:.0}us ({:.1} GF/s)  matvec_t {:.0}us ({:.1} GF/s)",
+                mv*1e6, flops/mv/1e9, mvt*1e6, flops/mvt/1e9);
+        }
+    }
+}

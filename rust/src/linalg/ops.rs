@@ -1,0 +1,184 @@
+//! Vector/matrix kernels. The `matvec`/`matvec_t` pair is the entire
+//! per-iteration cost of every Sinkhorn variant in this crate, so both are
+//! written as simple blocked loops the compiler auto-vectorises; the
+//! `_into` variants are allocation-free for the coordinator's hot loop.
+
+use super::Mat;
+
+/// `out = a @ v` without allocating.
+///
+/// Accuracy/speed contract: within each 64-element block the dot runs in
+/// f32 with 8 independent partial sums (SIMD-friendly, no serial
+/// dependency chain); block results are accumulated in f64, so rounding
+/// error grows with the block count, not the row length. Sinkhorn
+/// scalings span many orders of magnitude — pure-f32 row sums measurably
+/// bias small-eps runs, while this scheme matches the old full-f64
+/// accumulator to ~1e-6 relative at ~4x the throughput (EXPERIMENTS.md
+/// §Perf, L3 iteration 1).
+pub fn matvec_into(a: &Mat, v: &[f32], out: &mut [f32]) {
+    assert_eq!(a.cols(), v.len(), "matvec: {}x{} @ {}", a.rows(), a.cols(), v.len());
+    assert_eq!(a.rows(), out.len(), "matvec: output length");
+    const BLOCK: usize = 64;
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = a.row(i);
+        let mut acc = 0.0f64;
+        let mut rb = row.chunks_exact(BLOCK);
+        let mut vb = v.chunks_exact(BLOCK);
+        for (r64, v64) in (&mut rb).zip(&mut vb) {
+            // 8 independent f32 partials over the 64-element block.
+            let mut p = [0.0f32; 8];
+            for (rc, vc) in r64.chunks_exact(8).zip(v64.chunks_exact(8)) {
+                for l in 0..8 {
+                    p[l] += rc[l] * vc[l];
+                }
+            }
+            acc += p.iter().map(|&x| x as f64).sum::<f64>();
+        }
+        for (r, w) in rb.remainder().iter().zip(vb.remainder()) {
+            acc += (*r as f64) * (*w as f64);
+        }
+        *o = acc as f32;
+    }
+}
+
+/// `a @ v`, allocating the output.
+pub fn matvec(a: &Mat, v: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0; a.rows()];
+    matvec_into(a, v, &mut out);
+    out
+}
+
+/// `out = a^T @ v` without allocating and without transposing: accumulate
+/// rows of `a` scaled by `v[i]` into the output (saxpy), 4 rows per pass —
+/// streaming `a` exactly once while touching `out` a quarter as often as
+/// the naive row-at-a-time loop (EXPERIMENTS.md §Perf, L3 iteration 2).
+pub fn matvec_t_into(a: &Mat, v: &[f32], out: &mut [f32]) {
+    let (n, k) = a.shape();
+    assert_eq!(n, v.len(), "matvec_t: {}x{} ^T @ {}", n, k, v.len());
+    assert_eq!(k, out.len(), "matvec_t: output length");
+    out.iter_mut().for_each(|x| *x = 0.0);
+    let data = a.data();
+    let mut i = 0;
+    while i + 4 <= n {
+        let (v0, v1, v2, v3) = (v[i], v[i + 1], v[i + 2], v[i + 3]);
+        let r0 = &data[i * k..(i + 1) * k];
+        let r1 = &data[(i + 1) * k..(i + 2) * k];
+        let r2 = &data[(i + 2) * k..(i + 3) * k];
+        let r3 = &data[(i + 3) * k..(i + 4) * k];
+        for j in 0..k {
+            out[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
+        }
+        i += 4;
+    }
+    while i < n {
+        let vi = v[i];
+        if vi != 0.0 {
+            let row = a.row(i);
+            for (o, &r) in out.iter_mut().zip(row) {
+                *o += r * vi;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `a^T @ v`, allocating the output.
+pub fn matvec_t(a: &Mat, v: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0; a.cols()];
+    matvec_t_into(a, v, &mut out);
+    out
+}
+
+/// Blocked `a @ b` (off the Sinkhorn hot path; used by Nyström, the GAN
+/// forward pass and tests).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul: {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    // i-k-j loop order: the inner loop is a saxpy over contiguous rows of
+    // b and c — the standard cache-friendly dense order.
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (kk, &aik) in arow.iter().enumerate().take(k) {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| (a as f64) * (b as f64)).sum::<f64>() as f32
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+/// Sum with f64 accumulation.
+pub fn sum(x: &[f32]) -> f32 {
+    x.iter().map(|&v| v as f64).sum::<f64>() as f32
+}
+
+/// L1 norm.
+pub fn l1_norm(x: &[f32]) -> f32 {
+    x.iter().map(|&v| (v as f64).abs()).sum::<f64>() as f32
+}
+
+/// `sum_i |x_i - y_i|` — Alg. 1's marginal-error monitor.
+pub fn l1_diff(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| ((a - b) as f64).abs()).sum::<f64>() as f32
+}
+
+/// `max_i |x_i - y_i|`.
+pub fn max_abs_diff(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| (a - b).abs()).fold(0.0, f32::max)
+}
+
+/// Numerically-stable log(sum(exp(x))).
+pub fn logsumexp(x: &[f32]) -> f32 {
+    assert!(!x.is_empty());
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = x.iter().map(|&v| ((v - m) as f64).exp()).sum();
+    m + (s.ln() as f32)
+}
+
+/// In-place softmax with temperature `t` (higher `t` sharpens — the
+/// paper's Fig. 6 uses a temperature-1000 softmax to reveal barycenter
+/// peaks).
+pub fn softmax_inplace(x: &mut [f32], t: f32) {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f64;
+    for v in x.iter_mut() {
+        *v = ((*v - m) * t).exp();
+        z += *v as f64;
+    }
+    let inv = (1.0 / z) as f32;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}

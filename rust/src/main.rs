@@ -1,0 +1,347 @@
+//! `linear-sinkhorn` — leader binary.
+//!
+//! Subcommands:
+//!   divergence   compute the Sinkhorn divergence between two generated clouds
+//!   tradeoff     run a time–accuracy sweep (RF vs Nys vs Sin) and print a table
+//!   barycenter   Fig-6 barycenter on the positive sphere
+//!   gan-train    train the adversarial-kernel GAN on the synthetic corpus
+//!   serve        start the divergence service and drive it with a workload
+//!   runtime      smoke-check the PJRT runtime against the AOT artifacts
+//!
+//! Every subcommand accepts `--help`.
+
+use linear_sinkhorn::barycenter::{barycenter, BarycenterConfig};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::config::{GanConfig, ServiceConfig, SinkhornConfig};
+use linear_sinkhorn::gan::GanTrainer;
+use linear_sinkhorn::linalg::softmax_inplace;
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+use linear_sinkhorn::runtime::{mat_to_literal, vec_to_literal, Engine, Registry};
+use linear_sinkhorn::{coordinator, data, features::FeatureMap, features::SphereLinearMap};
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("usage: linear-sinkhorn <divergence|tradeoff|barycenter|gan-train|serve|runtime> [--help]");
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let code = match cmd.as_str() {
+        "divergence" => cmd_divergence(args),
+        "tradeoff" => cmd_tradeoff(args),
+        "barycenter" => cmd_barycenter(args),
+        "gan-train" => cmd_gan(args),
+        "serve" => cmd_serve(args),
+        "runtime" => cmd_runtime(args),
+        other => {
+            eprintln!("unknown subcommand `{other}`");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse(spec: ArgSpec, args: Vec<String>) -> linear_sinkhorn::cli::Args {
+    match spec.parse_from(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_divergence(argv: Vec<String>) -> i32 {
+    let a = parse(
+        ArgSpec::new("divergence", "Sinkhorn divergence between two Gaussian clouds")
+            .opt("n", "2000", "samples per cloud")
+            .opt("eps", "0.5", "entropic regularisation")
+            .opt("features", "512", "number of positive random features r")
+            .opt("seed", "0", "RNG seed"),
+        argv,
+    );
+    let (n, eps, r, seed) = (a.get_usize("n"), a.get_f64("eps"), a.get_usize("features"), a.get_u64("seed"));
+    let mut rng = Rng::seed_from(seed);
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+    let sw = Stopwatch::start();
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
+    let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
+    let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
+    let k_yy = FactoredKernel::from_measures(&map, &nu, &nu);
+    let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
+    match sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg) {
+        Ok(d) => {
+            println!(
+                "sinkhorn divergence (n={n}, eps={eps}, r={r}): {d:.6}  [{:.1} ms]",
+                sw.elapsed_secs() * 1e3
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_tradeoff(argv: Vec<String>) -> i32 {
+    let a = parse(
+        ArgSpec::new("tradeoff", "time–accuracy tradeoff (Fig. 1 workload, one cell)")
+            .opt("n", "2000", "samples per cloud")
+            .opt("eps", "0.5", "regularisation")
+            .opt("ranks", "100,300,600,1000", "feature counts to sweep")
+            .opt("seed", "0", "RNG seed"),
+        argv,
+    );
+    let n = a.get_usize("n");
+    let eps = a.get_f64("eps");
+    let ranks = a.get_usize_list("ranks");
+    let mut rng = Rng::seed_from(a.get_u64("seed"));
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+
+    let sw = Stopwatch::start();
+    let dense = DenseKernel::from_measures(&mu, &nu, eps);
+    let truth = match linear_sinkhorn::sinkhorn::ground_truth_rot(&dense, &mu.weights, &nu.weights, eps) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("ground truth failed: {e}");
+            return 1;
+        }
+    };
+    println!("Sin ground truth: {truth:.6} in {:.2}s", sw.elapsed_secs());
+
+    let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
+    println!("{:>6} {:>12} {:>12} {:>10}", "r", "RF estimate", "deviation", "time");
+    for &r in &ranks {
+        let sw = Stopwatch::start();
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
+        let fk = FactoredKernel::from_measures(&map, &mu, &nu);
+        match sinkhorn(&fk, &mu.weights, &nu.weights, &cfg) {
+            Ok(sol) => {
+                let dev = linear_sinkhorn::sinkhorn::deviation_score(truth, sol.objective);
+                println!(
+                    "{r:>6} {:>12.6} {:>12.2} {:>9.2}s",
+                    sol.objective,
+                    dev,
+                    sw.elapsed_secs()
+                );
+            }
+            Err(e) => println!("{r:>6} failed: {e}"),
+        }
+    }
+    0
+}
+
+fn cmd_barycenter(argv: Vec<String>) -> i32 {
+    let a = parse(
+        ArgSpec::new("barycenter", "Fig-6 barycenter on the positive sphere")
+            .opt("side", "50", "grid side (support = side^2 points)")
+            .opt("blur", "0.2", "corner histogram blur")
+            .opt("temp", "1000", "softmax sharpening temperature"),
+        argv,
+    );
+    let side = a.get_usize("side");
+    let grid = data::positive_sphere_grid(side);
+    let hists = data::corner_histograms(&grid, a.get_f64("blur"));
+    let fm = SphereLinearMap::new(3);
+    let phi = fm.feature_matrix(&grid);
+    let kernel = FactoredKernel::from_factors(phi.clone(), phi);
+    let sw = Stopwatch::start();
+    match barycenter(&kernel, &hists.to_vec(), &[], &BarycenterConfig::default()) {
+        Ok(bc) => {
+            let mut sharp = bc.p.clone();
+            softmax_inplace(&mut sharp, a.get_f64("temp") as f32);
+            // Report the mean direction and the sharpened peak.
+            let mut mean = [0.0f64; 3];
+            for i in 0..grid.rows() {
+                for c in 0..3 {
+                    mean[c] += bc.p[i] as f64 * grid[(i, c)] as f64;
+                }
+            }
+            let (peak, _) = sharp
+                .iter()
+                .enumerate()
+                .fold((0, f32::NEG_INFINITY), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+            println!(
+                "barycenter over {}x{} grid: {} iters ({}), mean direction ({:.3},{:.3},{:.3}), \
+                 sharpened peak at ({:.3},{:.3},{:.3})  [{:.2}s]",
+                side,
+                side,
+                bc.iterations,
+                if bc.converged { "converged" } else { "max-iters" },
+                mean[0],
+                mean[1],
+                mean[2],
+                grid[(peak, 0)],
+                grid[(peak, 1)],
+                grid[(peak, 2)],
+                sw.elapsed_secs()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_gan(argv: Vec<String>) -> i32 {
+    let a = parse(
+        ArgSpec::new("gan-train", "adversarial-kernel OT-GAN on the synthetic image corpus")
+            .opt("steps", "200", "generator steps")
+            .opt("batch", "256", "minibatch size s")
+            .opt("features", "64", "learned positive features r")
+            .opt("side", "8", "image side (side^2 pixels)")
+            .opt("seed", "0", "RNG seed"),
+        argv,
+    );
+    let side = a.get_usize("side");
+    let cfg = GanConfig {
+        steps: a.get_usize("steps"),
+        batch_size: a.get_usize("batch"),
+        num_features: a.get_usize("features"),
+        seed: a.get_u64("seed"),
+        ..Default::default()
+    };
+    let mut rng = Rng::seed_from(cfg.seed);
+    let corpus = data::image_corpus(cfg.batch_size * 4, side, &mut rng);
+    let mut trainer = GanTrainer::new(side * side, cfg.clone(), &mut rng);
+    let mut batch_rng = Rng::seed_from(cfg.seed ^ 0xBEEF);
+    for step in 0..cfg.steps {
+        let idx = batch_rng.sample_indices(corpus.rows(), cfg.batch_size);
+        let real = linear_sinkhorn::linalg::Mat::from_fn(cfg.batch_size, side * side, |i, j| {
+            corpus[(idx[i], j)]
+        });
+        match trainer.train_step(step, &real) {
+            Ok(rep) => {
+                if step % 10 == 0 || step + 1 == cfg.steps {
+                    println!(
+                        "step {:>4}  divergence {:>10.6}  (w_xy {:.4}, sinkhorn iters {})",
+                        rep.step, rep.divergence, rep.w_xy, rep.sinkhorn_iters
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("training failed at step {step}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_serve(argv: Vec<String>) -> i32 {
+    let a = parse(
+        ArgSpec::new("serve", "start the divergence service and drive a workload through it")
+            .opt("workers", "4", "worker threads")
+            .opt("requests", "32", "number of requests to send")
+            .opt("n", "500", "samples per cloud per request")
+            .opt("config", "", "optional TOML config file"),
+        argv,
+    );
+    let mut cfg = ServiceConfig { workers: a.get_usize("workers"), ..Default::default() };
+    let cfg_path = a.get_str("config");
+    if !cfg_path.is_empty() {
+        match linear_sinkhorn::config::ConfigDoc::parse_file(cfg_path) {
+            Ok(doc) => cfg = ServiceConfig::from_doc(&doc),
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    }
+    let svc = coordinator::Service::start(cfg);
+    let h = svc.handle();
+    let n_req = a.get_usize("requests");
+    let n = a.get_usize("n");
+    let sw = Stopwatch::start();
+    let mut pendings = Vec::new();
+    let mut rng = Rng::seed_from(42);
+    for _ in 0..n_req {
+        let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+        match h.submit(mu, nu) {
+            Ok(p) => pendings.push(p),
+            Err(e) => eprintln!("shed: {e}"),
+        }
+    }
+    let mut ok = 0;
+    for p in pendings {
+        if let Ok(resp) = p.wait() {
+            ok += 1;
+            if ok <= 3 {
+                println!(
+                    "response id={} divergence={:.6} latency={}us batch={}",
+                    resp.id, resp.divergence, resp.latency_us, resp.batch_size
+                );
+            }
+        }
+    }
+    println!(
+        "{ok}/{n_req} requests served in {:.2}s ({:.1} req/s)\n{}",
+        sw.elapsed_secs(),
+        ok as f64 / sw.elapsed_secs(),
+        h.metrics_text()
+    );
+    drop(h);
+    svc.shutdown();
+    0
+}
+
+fn cmd_runtime(argv: Vec<String>) -> i32 {
+    let a = parse(
+        ArgSpec::new("runtime", "smoke-check the PJRT runtime against AOT artifacts")
+            .opt("artifacts", "artifacts", "artifact directory"),
+        argv,
+    );
+    let reg = match Registry::load(a.get_str("artifacts")) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("platform: {}", engine.platform());
+    for (name, meta) in &reg.entries {
+        let sw = Stopwatch::start();
+        match engine.load(meta) {
+            Ok(exe) => {
+                // Drive with constant fill of the right shapes.
+                let args: Vec<xla::Literal> = meta
+                    .params
+                    .iter()
+                    .map(|(_, shape)| {
+                        let total: usize = shape.iter().product::<usize>().max(1);
+                        let fill = vec![0.5f32; total];
+                        if shape.len() == 2 {
+                            mat_to_literal(&linear_sinkhorn::linalg::Mat::from_vec(
+                                shape[0], shape[1], fill,
+                            ))
+                            .unwrap()
+                        } else {
+                            vec_to_literal(&fill)
+                        }
+                    })
+                    .collect();
+                match exe.run(&args) {
+                    Ok(outs) => println!(
+                        "  {name}: OK, {} outputs, compile+run {:.2}s",
+                        outs.len(),
+                        sw.elapsed_secs()
+                    ),
+                    Err(e) => println!("  {name}: EXEC FAILED: {e}"),
+                }
+            }
+            Err(e) => println!("  {name}: COMPILE FAILED: {e}"),
+        }
+    }
+    0
+}

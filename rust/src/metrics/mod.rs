@@ -1,0 +1,266 @@
+//! Metrics substrate: counters, gauges, wall-clock timers and streaming
+//! histograms with quantile estimates. The coordinator exports a registry
+//! snapshot; benches use [`Stopwatch`] directly.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time gauge.
+#[derive(Default, Debug)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed streaming histogram (microsecond-scale latencies).
+///
+/// Buckets are powers of ~1.5 from 1us to ~17min; quantiles are estimated
+/// from bucket midpoints, which is plenty for p50/p95/p99 reporting.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 52;
+const HIST_BASE: f64 = 1.5;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_for(us: u64) -> usize {
+        if us <= 1 {
+            return 0;
+        }
+        let idx = (us as f64).ln() / HIST_BASE.ln();
+        (idx as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper edge of bucket `i` in microseconds.
+    fn bucket_edge(i: usize) -> f64 {
+        HIST_BASE.powi(i as i32 + 1)
+    }
+
+    pub fn observe_us(&self, us: u64) {
+        self.buckets[Self::bucket_for(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile in microseconds (q in [0, 1]).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_edge(i);
+            }
+        }
+        Self::bucket_edge(HIST_BUCKETS - 1)
+    }
+}
+
+/// Named-metric registry; the coordinator exposes a snapshot of this.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Human-readable snapshot (sorted, stable for logs/tests).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {}\n", c.get()));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {k} = {}\n", g.get()));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "hist {k}: n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={}us\n",
+                h.count(),
+                h.mean_us(),
+                h.quantile_us(0.5),
+                h.quantile_us(0.95),
+                h.quantile_us(0.99),
+                h.max_us()
+            ));
+        }
+        out
+    }
+}
+
+/// Simple wall-clock stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed_us(&self) -> u64 {
+        self.0.elapsed().as_micros() as u64
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_basics() {
+        let g = Gauge::default();
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for us in [10u64, 20, 30, 100, 1_000, 10_000, 100_000] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        assert!(p50 <= p95, "p50={p50} p95={p95}");
+        assert!(h.max_us() == 100_000);
+    }
+
+    #[test]
+    fn histogram_quantile_approximates_value() {
+        let h = Histogram::default();
+        for _ in 0..1000 {
+            h.observe_us(500);
+        }
+        let p50 = h.quantile_us(0.5);
+        // Log-bucket estimate: within one bucket ratio (x1.5) of truth.
+        assert!(p50 >= 500.0 / 1.5 && p50 <= 500.0 * 1.5 * 1.5, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.9), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn registry_reuses_named_metrics() {
+        let r = Registry::default();
+        r.counter("x").inc();
+        r.counter("x").inc();
+        assert_eq!(r.counter("x").get(), 2);
+    }
+
+    #[test]
+    fn registry_render_contains_all() {
+        let r = Registry::default();
+        r.counter("reqs").add(3);
+        r.gauge("depth").set(9);
+        r.histogram("lat").observe_us(42);
+        let s = r.render();
+        assert!(s.contains("reqs = 3"));
+        assert!(s.contains("depth = 9"));
+        assert!(s.contains("hist lat"));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_us() >= 1_000);
+    }
+}

@@ -1,0 +1,272 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path.
+//!
+//! The interchange format is **HLO text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+//!
+//! * [`Registry`] — parses `artifacts/manifest.json` (shapes, constants,
+//!   hashes) written by the AOT pipeline.
+//! * [`Engine`] — a PJRT CPU client plus a compile cache: each artifact is
+//!   compiled once and re-executed many times.
+
+mod json;
+
+pub use json::{Json, JsonError};
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Metadata for one AOT artifact (one lowered HLO module).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// Parameter (name, shape) pairs, in call order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Output (name, shape) pairs (the module returns a tuple).
+    pub outputs: Vec<(String, Vec<usize>)>,
+    /// Static constants baked into the artifact (eps, q, iters, …).
+    pub constants: BTreeMap<String, f64>,
+    pub sha256: String,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub entries: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let json = Json::parse(&text).map_err(|e| Error::Artifact(format!("manifest: {e}")))?;
+        let entries_json = json
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Artifact("manifest missing `entries`".into()))?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in entries_json {
+            let get_str = |k: &str| -> Result<String> {
+                entry
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Artifact(format!("{name}: missing `{k}`")))
+            };
+            let parse_sig = |k: &str| -> Result<Vec<(String, Vec<usize>)>> {
+                entry
+                    .get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::Artifact(format!("{name}: missing `{k}`")))?
+                    .iter()
+                    .map(|p| {
+                        let pair = p.as_arr().ok_or_else(|| {
+                            Error::Artifact(format!("{name}: bad {k} entry"))
+                        })?;
+                        let pname = pair[0]
+                            .as_str()
+                            .ok_or_else(|| Error::Artifact(format!("{name}: bad param name")))?;
+                        let shape = pair[1]
+                            .as_arr()
+                            .ok_or_else(|| Error::Artifact(format!("{name}: bad shape")))?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize().ok_or_else(|| {
+                                    Error::Artifact(format!("{name}: bad dim"))
+                                })
+                            })
+                            .collect::<Result<Vec<usize>>>()?;
+                        Ok((pname.to_string(), shape))
+                    })
+                    .collect()
+            };
+            let constants = entry
+                .get("constants")
+                .and_then(Json::as_obj)
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(get_str("file")?),
+                    params: parse_sig("params")?,
+                    outputs: parse_sig("outputs")?,
+                    constants,
+                    sha256: get_str("sha256")?,
+                },
+            );
+        }
+        Ok(Registry { entries, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "artifact `{name}` not in manifest (have: {})",
+                self.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    /// Find an artifact by prefix (e.g. "rf_sinkhorn_n1024") — convenience
+    /// for size-gridded names.
+    pub fn find_prefix(&self, prefix: &str) -> Option<&ArtifactMeta> {
+        self.entries.values().find(|m| m.name.starts_with(prefix))
+    }
+}
+
+/// A compiled executable plus its metadata.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional literal arguments; returns the decomposed
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.meta.params.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} args, got {}",
+                self.meta.name,
+                self.meta.params.len(),
+                args.len()
+            )));
+        }
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Run and convert every output to a f32 vector.
+    pub fn run_f32(&self, args: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.run(args)?.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// PJRT CPU client with a per-artifact compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+// The PJRT CPU client and loaded executables are internally synchronised;
+// the raw pointers in the xla crate wrappers are what blocks auto-Send.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by name).
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&meta.name) {
+            return Ok(e.clone());
+        }
+        let path = meta.file.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let arc = std::sync::Arc::new(Executable { meta: meta.clone(), exe });
+        self.cache.lock().unwrap().insert(meta.name.clone(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Convert a row-major matrix to a 2-D f32 literal.
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// Convert a slice to a 1-D f32 literal.
+pub fn vec_to_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Convert a literal back to a matrix with the given shape.
+pub fn literal_to_mat(l: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let data = l.to_vec::<f32>()?;
+    if data.len() != rows * cols {
+        return Err(Error::Shape(format!(
+            "literal has {} elements, expected {rows}x{cols}",
+            data.len()
+        )));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("ls-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text", "entries": {
+                "toy": {"file": "toy.hlo.txt",
+                         "params": [["x", [2, 3]], ["v", [3]]],
+                         "outputs": [["y", [2]]],
+                         "constants": {"eps": 0.5, "iters": 10},
+                         "sha256": "deadbeef"}}}"#,
+        )
+        .unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        let meta = reg.get("toy").unwrap();
+        assert_eq!(meta.params, vec![("x".into(), vec![2, 3]), ("v".into(), vec![3])]);
+        assert_eq!(meta.outputs[0].1, vec![2]);
+        assert_eq!(meta.constants["eps"], 0.5);
+        assert!(reg.find_prefix("to").is_some());
+        assert!(reg.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn registry_missing_dir_is_artifact_error() {
+        let err = Registry::load("/nonexistent/dir").unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+    }
+
+    #[test]
+    fn literal_roundtrip_matrix() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let l = mat_to_literal(&m).unwrap();
+        let back = literal_to_mat(&l, 2, 2).unwrap();
+        assert_eq!(back.data(), m.data());
+        assert!(literal_to_mat(&l, 3, 2).is_err());
+    }
+}

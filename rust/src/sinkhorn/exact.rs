@@ -1,0 +1,171 @@
+//! Exact (unregularised) OT for *test oracles only*: the Hungarian
+//! algorithm on square cost matrices with uniform weights, O(n^3).
+//!
+//! Used to validate the eps -> 0 limit of the entropic solvers: for
+//! uniform measures of equal size, OT is an assignment problem and
+//! `W_eps -> OT_cost` as eps shrinks (up to the entropy offset).
+
+use crate::linalg::Mat;
+
+/// Minimum-cost perfect matching on a square cost matrix (Jonker–Volgenant
+/// style shortest augmenting paths). Returns (assignment, total cost),
+/// where `assignment[i] = j` matches row i to column j.
+pub fn hungarian(cost: &Mat) -> (Vec<usize>, f64) {
+    let n = cost.rows();
+    assert_eq!(cost.cols(), n, "hungarian: square matrices only");
+    // Potentials and matching, 1-indexed internally (classic formulation).
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j (0 = none)
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![f64::INFINITY; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = f64::INFINITY;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[(i0 - 1, j - 1)] as f64 - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // Augment along the path.
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut assignment = vec![0usize; n];
+    let mut total = 0.0f64;
+    for j in 1..=n {
+        if p[j] > 0 {
+            assignment[p[j] - 1] = j - 1;
+            total += cost[(p[j] - 1, j - 1)] as f64;
+        }
+    }
+    (assignment, total)
+}
+
+/// Exact OT cost between two uniform measures of equal size:
+/// (1/n) * min-cost perfect matching.
+pub fn exact_ot_uniform(cost: &Mat) -> f64 {
+    let (_, total) = hungarian(cost);
+    total / cost.rows() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SinkhornConfig;
+    use crate::data;
+    use crate::rng::Rng;
+    use crate::sinkhorn::{sinkhorn_log_domain, sq_euclidean_cost};
+
+    #[test]
+    fn hungarian_identity_matrix() {
+        // Cost = 1 - I: optimal matching is the diagonal, cost 0.
+        let n = 5;
+        let c = Mat::from_fn(n, n, |i, j| if i == j { 0.0 } else { 1.0 });
+        let (assign, total) = hungarian(&c);
+        assert_eq!(assign, vec![0, 1, 2, 3, 4]);
+        assert_eq!(total, 0.0);
+    }
+
+    #[test]
+    fn hungarian_known_3x3() {
+        // Classic example: optimal = 1+2+2 = 5? verify by brute force.
+        let c = Mat::from_rows(&[vec![4.0, 1.0, 3.0], vec![2.0, 0.0, 5.0], vec![3.0, 2.0, 2.0]]);
+        let (_, total) = hungarian(&c);
+        // Brute force over all 6 permutations.
+        let perms = [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        let best = perms
+            .iter()
+            .map(|p| (0..3).map(|i| c[(i, p[i])] as f64).sum::<f64>())
+            .fold(f64::INFINITY, f64::min);
+        assert!((total - best).abs() < 1e-9, "hungarian {total} vs brute {best}");
+    }
+
+    #[test]
+    fn hungarian_matches_brute_force_random() {
+        let mut rng = Rng::seed_from(0);
+        for n in [2usize, 3, 4, 5] {
+            for _ in 0..5 {
+                let c = Mat::from_fn(n, n, |_, _| rng.uniform() as f32 * 10.0);
+                let (assign, total) = hungarian(&c);
+                // Assignment must be a permutation.
+                let mut seen = assign.clone();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..n).collect::<Vec<_>>());
+                // Brute force.
+                let best = permutations(n)
+                    .into_iter()
+                    .map(|p| (0..n).map(|i| c[(i, p[i])] as f64).sum::<f64>())
+                    .fold(f64::INFINITY, f64::min);
+                assert!((total - best).abs() < 1e-6, "n={n}: {total} vs {best}");
+            }
+        }
+    }
+
+    fn permutations(n: usize) -> Vec<Vec<usize>> {
+        if n == 1 {
+            return vec![vec![0]];
+        }
+        let mut out = Vec::new();
+        for p in permutations(n - 1) {
+            for pos in 0..=p.len() {
+                let mut q: Vec<usize> = p.clone();
+                q.insert(pos, n - 1);
+                out.push(q);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn entropic_ot_approaches_exact_as_eps_shrinks() {
+        // The eps->0 limit: log-domain Sinkhorn cost -> assignment cost.
+        let mut rng = Rng::seed_from(1);
+        let (mu, nu) = data::gaussian_blobs(16, &mut rng);
+        let cost = sq_euclidean_cost(&mu.points, &nu.points);
+        let exact = exact_ot_uniform(&cost);
+        let mut prev_gap = f64::INFINITY;
+        for eps in [0.5, 0.1, 0.02] {
+            let cfg = SinkhornConfig { epsilon: eps, max_iters: 20_000, tol: 1e-8, check_every: 50 };
+            let sol = sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg).unwrap();
+            let gap = (sol.objective - exact).abs();
+            assert!(gap <= prev_gap * 1.10, "gap should shrink with eps: {gap} vs {prev_gap}");
+            prev_gap = gap;
+        }
+        assert!(prev_gap < 0.1 * exact.abs().max(0.1), "final gap {prev_gap} vs exact {exact}");
+    }
+}

@@ -1,0 +1,214 @@
+//! Log-domain stabilised Sinkhorn (dense cost matrices only).
+//!
+//! At very small eps the scalings u, v overflow/underflow f32 (and even
+//! f64). The classic fix iterates on the dual potentials directly:
+//!
+//!   alpha_i <- -eps log sum_j exp((beta_j - C_ij)/eps + log b_j)   (row)
+//!   beta_j  <- -eps log sum_i exp((alpha_i - C_ij)/eps + log a_i)  (col)
+//!
+//! each update a row/col logsumexp over C. This requires the *cost matrix*
+//! (not just a kernel operator), so it exists only for the dense baseline:
+//! the RF kernel has no materialised C — the paper's method instead relies
+//! on positivity and moderate eps. We document that asymmetry here and in
+//! DESIGN.md; the tradeoff benches use this as the small-eps ground truth.
+
+use crate::config::SinkhornConfig;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+use super::SinkhornSolution;
+
+/// Log-domain Sinkhorn over an explicit cost matrix.
+pub fn sinkhorn_log_domain(
+    cost: &Mat,
+    a: &[f32],
+    b: &[f32],
+    cfg: &SinkhornConfig,
+) -> Result<SinkhornSolution> {
+    let (n, m) = cost.shape();
+    if a.len() != n || b.len() != m {
+        return Err(Error::Shape(format!(
+            "log-domain sinkhorn: cost {n}x{m} vs a[{}], b[{}]",
+            a.len(),
+            b.len()
+        )));
+    }
+    let eps = cfg.epsilon;
+    let log_a: Vec<f64> = a.iter().map(|&x| (x as f64).ln()).collect();
+    let log_b: Vec<f64> = b.iter().map(|&x| (x as f64).ln()).collect();
+    let mut alpha = vec![0.0f64; n];
+    let mut beta = vec![0.0f64; m];
+
+    let check_every = cfg.check_every.max(1);
+    let mut iter = 0;
+    let mut marginal = f64::INFINITY;
+    let mut converged = false;
+
+    // Scratch row buffer for the logsumexp reductions.
+    let mut buf = vec![0.0f64; n.max(m)];
+
+    while iter < cfg.max_iters {
+        // beta update: beta_j = -eps logsumexp_i((alpha_i - C_ij)/eps + log a_i).
+        for j in 0..m {
+            for i in 0..n {
+                buf[i] = (alpha[i] - cost[(i, j)] as f64) / eps + log_a[i];
+            }
+            beta[j] = -eps * logsumexp64(&buf[..n]);
+        }
+        // alpha update.
+        for i in 0..n {
+            let crow = cost.row(i);
+            for j in 0..m {
+                buf[j] = (beta[j] - crow[j] as f64) / eps + log_b[j];
+            }
+            alpha[i] = -eps * logsumexp64(&buf[..m]);
+        }
+        iter += 1;
+
+        if iter % check_every == 0 || iter == cfg.max_iters {
+            // Column marginal error of P_ij = exp((alpha_i + beta_j - C_ij)/eps + log a_i + log b_j).
+            marginal = 0.0;
+            for j in 0..m {
+                for i in 0..n {
+                    buf[i] =
+                        (alpha[i] + beta[j] - cost[(i, j)] as f64) / eps + log_a[i] + log_b[j];
+                }
+                let col_mass = logsumexp64(&buf[..n]).exp();
+                marginal += (col_mass - b[j] as f64).abs();
+            }
+            if marginal < cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    // Objective via duals. These (alpha, beta) are the duals of the
+    // a⊗b-relative formulation (the plan is P_ij = a_i b_j
+    // exp((alpha_i + beta_j - C_ij)/eps)), i.e. the kernel-form scalings
+    // are u_i = a_i e^{alpha_i/eps}. Converting to Eq. (6)'s
+    // eps(a^T log u + b^T log v) adds the entropy offset
+    // eps (a^T log a + b^T log b).
+    let offset: f64 = eps
+        * (a.iter().map(|&ai| (ai as f64) * (ai as f64).ln()).sum::<f64>()
+            + b.iter().map(|&bi| (bi as f64) * (bi as f64).ln()).sum::<f64>());
+    let objective: f64 = a.iter().zip(&alpha).map(|(&ai, &al)| ai as f64 * al).sum::<f64>()
+        + b.iter().zip(&beta).map(|(&bi, &be)| bi as f64 * be).sum::<f64>()
+        + offset;
+
+    Ok(SinkhornSolution {
+        u: alpha
+            .iter()
+            .zip(a)
+            .map(|(&x, &ai)| (ai as f64 * (x / eps).exp()) as f32)
+            .collect(),
+        v: beta
+            .iter()
+            .zip(b)
+            .map(|(&x, &bi)| (bi as f64 * (x / eps).exp()) as f32)
+            .collect(),
+        objective,
+        iterations: iter,
+        marginal_error: marginal,
+        converged,
+    })
+}
+
+fn logsumexp64(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|&x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// Squared-Euclidean cost matrix helper for the log-domain path.
+pub fn sq_euclidean_cost(x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.cols(), y.cols());
+    Mat::from_fn(x.rows(), y.rows(), |i, j| {
+        x.row(i)
+            .iter()
+            .zip(y.row(j))
+            .map(|(&a, &b)| (a - b) * (a - b))
+            .sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::kernels::DenseKernel;
+    use crate::rng::Rng;
+    use crate::sinkhorn::sinkhorn;
+
+    fn cfg(eps: f64) -> SinkhornConfig {
+        SinkhornConfig { epsilon: eps, max_iters: 3000, tol: 1e-6, check_every: 10 }
+    }
+
+    #[test]
+    fn matches_plain_sinkhorn_at_moderate_eps() {
+        let mut rng = Rng::seed_from(0);
+        let (mu, nu) = data::gaussian_blobs(30, &mut rng);
+        let eps = 0.5;
+        let cost = sq_euclidean_cost(&mu.points, &nu.points);
+        let plain = sinkhorn(
+            &DenseKernel::from_measures(&mu, &nu, eps),
+            &mu.weights,
+            &nu.weights,
+            &cfg(eps),
+        )
+        .unwrap();
+        let logd = sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        assert!(
+            (plain.objective - logd.objective).abs() < 1e-3 * plain.objective.abs().max(1.0),
+            "plain {} logdomain {}",
+            plain.objective,
+            logd.objective
+        );
+    }
+
+    #[test]
+    fn survives_tiny_eps_where_plain_fails_or_stalls() {
+        // eps so small the plain kernel underflows rows: log-domain still
+        // converges to a finite objective.
+        let mut rng = Rng::seed_from(1);
+        let (mu, nu) = data::gaussian_blobs(25, &mut rng);
+        let eps = 0.002;
+        let cost = sq_euclidean_cost(&mu.points, &nu.points);
+        let logd = sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        assert!(logd.objective.is_finite());
+        assert!(logd.marginal_error < 1e-3, "err {}", logd.marginal_error);
+        // As eps -> 0 the entropic OT value approaches the unregularised
+        // OT cost, which is at least the squared distance between means.
+        assert!(logd.objective > 0.0);
+    }
+
+    #[test]
+    fn converges_flag_set() {
+        let mut rng = Rng::seed_from(2);
+        let (mu, nu) = data::gaussian_blobs(15, &mut rng);
+        let cost = sq_euclidean_cost(&mu.points, &nu.points);
+        let sol = sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg(0.1)).unwrap();
+        assert!(sol.converged);
+    }
+
+    #[test]
+    fn cost_matrix_is_symmetric_for_same_cloud() {
+        let mut rng = Rng::seed_from(3);
+        let (mu, _) = data::gaussian_blobs(10, &mut rng);
+        let c = sq_euclidean_cost(&mu.points, &mu.points);
+        for i in 0..10 {
+            assert_eq!(c[(i, i)], 0.0);
+            for j in 0..10 {
+                assert!((c[(i, j)] - c[(j, i)]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let c = Mat::zeros(3, 4);
+        assert!(sinkhorn_log_domain(&c, &[0.5, 0.5], &[0.25; 4], &cfg(0.5)).is_err());
+    }
+}

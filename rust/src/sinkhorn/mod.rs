@@ -1,0 +1,409 @@
+//! Sinkhorn solvers — Alg. 1 (matrix-free over any [`KernelOp`]), the
+//! log-domain stabilised dense variant, the accelerated Alg. 2, and the
+//! Eq. (2) Sinkhorn divergence.
+//!
+//! Because Alg. 1 only touches the kernel through `apply`/`apply_t`, the
+//! *same* loop runs the dense `Sin` baseline at O(nm)/iter and the paper's
+//! `RF` factored kernel at O(r(n+m))/iter — the complexity claim is in the
+//! operator, not in specialised solver code.
+
+mod accelerated;
+mod exact;
+mod flow;
+mod logdomain;
+
+pub use accelerated::{sinkhorn_accelerated, AccelSolution};
+pub use exact::{exact_ot_uniform, hungarian};
+pub use flow::{divergence_grad_locations, gradient_flow_step, FlowEval};
+pub use logdomain::{sinkhorn_log_domain, sq_euclidean_cost};
+
+use crate::config::SinkhornConfig;
+use crate::error::{Error, Result};
+use crate::kernels::KernelOp;
+use crate::linalg;
+
+/// Output of a Sinkhorn solve.
+#[derive(Clone, Debug)]
+pub struct SinkhornSolution {
+    /// Row scaling u (length n).
+    pub u: Vec<f32>,
+    /// Column scaling v (length m).
+    pub v: Vec<f32>,
+    /// The Eq. (6) objective estimate: eps (a^T log u + b^T log v).
+    pub objective: f64,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Final L1 marginal error ||v o K^T u - b||_1.
+    pub marginal_error: f64,
+    /// Whether the tolerance was reached before `max_iters`.
+    pub converged: bool,
+}
+
+impl SinkhornSolution {
+    /// Dual potentials alpha = eps log u, beta = eps log v.
+    pub fn duals(&self, eps: f64) -> (Vec<f32>, Vec<f32>) {
+        let a = self.u.iter().map(|&x| (eps * (x as f64).ln()) as f32).collect();
+        let b = self.v.iter().map(|&x| (eps * (x as f64).ln()) as f32).collect();
+        (a, b)
+    }
+}
+
+/// Eq. (6): eps (a^T log u + b^T log v), in f64 for stability.
+pub fn objective(eps: f64, a: &[f32], b: &[f32], u: &[f32], v: &[f32]) -> f64 {
+    let sa: f64 = a.iter().zip(u).map(|(&ai, &ui)| ai as f64 * (ui as f64).ln()).sum();
+    let sb: f64 = b.iter().zip(v).map(|(&bi, &vi)| bi as f64 * (vi as f64).ln()).sum();
+    eps * (sa + sb)
+}
+
+/// Algorithm 1 over any kernel operator.
+///
+/// Repeats `v <- b / K^T u`, `u <- a / K v` until the L1 marginal error
+/// drops below `cfg.tol` (checked every `cfg.check_every` iterations) or
+/// `cfg.max_iters` is hit. Errors with [`Error::SinkhornDiverged`] when a
+/// scaling goes non-finite or non-positive — the failure mode of
+/// non-positivity-safe kernels (Nyström at small eps).
+pub fn sinkhorn<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    b: &[f32],
+    cfg: &SinkhornConfig,
+) -> Result<SinkhornSolution> {
+    let (n, m) = (kernel.rows(), kernel.cols());
+    if a.len() != n || b.len() != m {
+        return Err(Error::Shape(format!(
+            "sinkhorn: kernel {}x{} vs a[{}], b[{}]",
+            n,
+            m,
+            a.len(),
+            b.len()
+        )));
+    }
+    let mut u = vec![1.0f32; n];
+    let mut v = vec![1.0f32; m];
+    // Preallocated work buffers — the loop is allocation-free.
+    let mut kv = vec![0.0f32; n];
+    let mut ktu = vec![0.0f32; m];
+
+    let check_every = cfg.check_every.max(1);
+    let mut iter = 0;
+    let mut marginal = f64::INFINITY;
+    let mut converged = false;
+
+    while iter < cfg.max_iters {
+        // v <- b / K^T u
+        kernel.apply_t_into(&u, &mut ktu);
+        for j in 0..m {
+            v[j] = b[j] / ktu[j];
+        }
+        // u <- a / K v
+        kernel.apply_into(&v, &mut kv);
+        for i in 0..n {
+            u[i] = a[i] / kv[i];
+        }
+        iter += 1;
+
+        if iter % check_every == 0 || iter == cfg.max_iters {
+            // Divergence check on the scalings themselves.
+            if let Some(bad) = first_bad(&u).or_else(|| first_bad(&v)) {
+                return Err(Error::SinkhornDiverged {
+                    iter,
+                    reason: format!(
+                        "non-finite or non-positive scaling ({bad}); kernel {} lost positivity \
+                         or eps is too small for f32",
+                        kernel.label()
+                    ),
+                });
+            }
+            // Marginal error ||v o K^T u - b||_1.
+            kernel.apply_t_into(&u, &mut ktu);
+            marginal = (0..m)
+                .map(|j| ((v[j] * ktu[j] - b[j]) as f64).abs())
+                .sum();
+            if marginal < cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    Ok(SinkhornSolution {
+        // `-eps log_scale` compensates stabilised kernels (K_true = c K):
+        // scaling K by c shifts the dual estimate by -eps log c.
+        objective: objective(cfg.epsilon, a, b, &u, &v) - cfg.epsilon * kernel.log_scale(),
+        u,
+        v,
+        iterations: iter,
+        marginal_error: marginal,
+        converged,
+    })
+}
+
+fn first_bad(xs: &[f32]) -> Option<String> {
+    for (i, &x) in xs.iter().enumerate() {
+        if !x.is_finite() || x <= 0.0 {
+            return Some(format!("index {i} = {x}"));
+        }
+    }
+    None
+}
+
+/// Eq. (2): the debiased Sinkhorn divergence
+/// `W(mu,nu) - (W(mu,mu) + W(nu,nu))/2` from three transport solves.
+pub fn sinkhorn_divergence<K: KernelOp + ?Sized>(
+    k_xy: &K,
+    k_xx: &K,
+    k_yy: &K,
+    a: &[f32],
+    b: &[f32],
+    cfg: &SinkhornConfig,
+) -> Result<f64> {
+    let w_xy = sinkhorn(k_xy, a, b, cfg)?.objective;
+    let w_xx = sinkhorn(k_xx, a, a, cfg)?.objective;
+    let w_yy = sinkhorn(k_yy, b, b, cfg)?.objective;
+    Ok(w_xy - 0.5 * (w_xx + w_yy))
+}
+
+/// The transport plan `P = diag(u) K diag(v)` materialised (tests / small
+/// problems only).
+pub fn transport_plan<K: KernelOp + ?Sized>(
+    kernel: &K,
+    sol: &SinkhornSolution,
+) -> crate::linalg::Mat {
+    let (n, m) = (kernel.rows(), kernel.cols());
+    let mut plan = crate::linalg::Mat::zeros(n, m);
+    // Column j of P is u o (K e_j v_j).
+    let mut e = vec![0.0f32; m];
+    let mut col = vec![0.0f32; n];
+    for j in 0..m {
+        e[j] = 1.0;
+        kernel.apply_into(&e, &mut col);
+        e[j] = 0.0;
+        for i in 0..n {
+            plan[(i, j)] = sol.u[i] * col[i] * sol.v[j];
+        }
+    }
+    plan
+}
+
+/// Relative deviation used in Figures 1/3/5:
+/// `D = 100 (ROT - ROT_hat)/|ROT| + 100` (100 = exact).
+pub fn deviation_score(ground_truth: f64, estimate: f64) -> f64 {
+    100.0 * (ground_truth - estimate) / ground_truth.abs() + 100.0
+}
+
+/// Converged dense Sinkhorn used as the "ground truth" ROT value in the
+/// tradeoff figures (the paper's `Sin` with a tight tolerance).
+pub fn ground_truth_rot<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    b: &[f32],
+    eps: f64,
+) -> Result<f64> {
+    let cfg = SinkhornConfig { epsilon: eps, max_iters: 20_000, tol: 1e-6, check_every: 20 };
+    Ok(sinkhorn(kernel, a, b, &cfg)?.objective)
+}
+
+/// L1 marginal feasibility of a solution (diagnostic).
+pub fn marginal_errors<K: KernelOp + ?Sized>(
+    kernel: &K,
+    sol: &SinkhornSolution,
+    a: &[f32],
+    b: &[f32],
+) -> (f64, f64) {
+    let ku = kernel.apply_t(&sol.u);
+    let col: Vec<f32> = sol.v.iter().zip(&ku).map(|(&vj, &k)| vj * k).collect();
+    let kv = kernel.apply(&sol.v);
+    let row: Vec<f32> = sol.u.iter().zip(&kv).map(|(&ui, &k)| ui * k).collect();
+    (linalg::l1_diff(&row, a) as f64, linalg::l1_diff(&col, b) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SinkhornConfig;
+    use crate::data::{self, Measure};
+    use crate::features::GaussianFeatureMap;
+    use crate::kernels::{DenseKernel, FactoredKernel, NystromKernel};
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    fn cfg(eps: f64) -> SinkhornConfig {
+        SinkhornConfig { epsilon: eps, max_iters: 5000, tol: 1e-5, check_every: 5 }
+    }
+
+    fn uniform(n: usize) -> Vec<f32> {
+        vec![1.0 / n as f32; n]
+    }
+
+    #[test]
+    fn converges_on_small_dense_problem() {
+        let mut rng = Rng::seed_from(0);
+        let (mu, nu) = data::gaussian_blobs(50, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 0.5);
+        let sol = sinkhorn(&k, &mu.weights, &nu.weights, &cfg(0.5)).unwrap();
+        assert!(sol.converged, "did not converge: err {}", sol.marginal_error);
+        assert!(sol.marginal_error < 1e-5);
+    }
+
+    #[test]
+    fn marginals_feasible_at_convergence() {
+        let mut rng = Rng::seed_from(1);
+        let (mu, nu) = data::gaussian_blobs(40, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 1.0);
+        let sol = sinkhorn(&k, &mu.weights, &nu.weights, &cfg(1.0)).unwrap();
+        let (row_err, col_err) = marginal_errors(&k, &sol, &mu.weights, &nu.weights);
+        assert!(row_err < 1e-4, "row err {row_err}");
+        assert!(col_err < 1e-4, "col err {col_err}");
+    }
+
+    #[test]
+    fn plan_mass_is_one() {
+        let mut rng = Rng::seed_from(2);
+        let (mu, nu) = data::gaussian_blobs(20, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 0.5);
+        let sol = sinkhorn(&k, &mu.weights, &nu.weights, &cfg(0.5)).unwrap();
+        let plan = transport_plan(&k, &sol);
+        let mass: f64 = plan.data().iter().map(|&x| x as f64).sum();
+        assert!((mass - 1.0).abs() < 1e-4, "mass {mass}");
+        assert!(plan.min_entry() >= 0.0);
+    }
+
+    #[test]
+    fn factored_and_dense_agree_on_same_kernel() {
+        // Run Alg. 1 on K given as factors and as a materialised matrix:
+        // identical fixed point.
+        let mut rng = Rng::seed_from(3);
+        let (mu, nu) = data::gaussian_blobs(60, &mut rng);
+        let fm = GaussianFeatureMap::fit(&mu, &nu, 0.5, 64, &mut rng);
+        let fk = FactoredKernel::from_measures(&fm, &mu, &nu);
+        let dk = DenseKernel { k: fk.to_dense(), eps: 0.5 };
+        let s1 = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg(0.5)).unwrap();
+        let s2 = sinkhorn(&dk, &mu.weights, &nu.weights, &cfg(0.5)).unwrap();
+        assert!(
+            (s1.objective - s2.objective).abs() < 1e-4 * s2.objective.abs().max(1.0),
+            "{} vs {}",
+            s1.objective,
+            s2.objective
+        );
+    }
+
+    #[test]
+    fn rf_estimate_close_to_ground_truth_moderate_eps() {
+        // The headline behaviour: RF with enough features approximates the
+        // true ROT value (deviation score near 100).
+        let mut rng = Rng::seed_from(4);
+        let (mu, nu) = data::gaussian_blobs(150, &mut rng);
+        let eps = 1.0;
+        let dense = DenseKernel::from_measures(&mu, &nu, eps);
+        let truth = ground_truth_rot(&dense, &mu.weights, &nu.weights, eps).unwrap();
+        let fm = GaussianFeatureMap::fit(&mu, &nu, eps, 1500, &mut rng);
+        let fk = FactoredKernel::from_measures(&fm, &mu, &nu);
+        let est = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg(eps)).unwrap().objective;
+        let dev = deviation_score(truth, est);
+        assert!((dev - 100.0).abs() < 5.0, "deviation {dev} (truth {truth}, est {est})");
+    }
+
+    #[test]
+    fn identical_measures_have_near_zero_divergence() {
+        let mut rng = Rng::seed_from(5);
+        let (mu, _) = data::gaussian_blobs(30, &mut rng);
+        let fm = GaussianFeatureMap::fit(&mu, &mu, 0.5, 128, &mut rng);
+        let k = FactoredKernel::from_measures(&fm, &mu, &mu);
+        let kxx = FactoredKernel::from_measures(&fm, &mu, &mu);
+        let kyy = FactoredKernel::from_measures(&fm, &mu, &mu);
+        let d =
+            sinkhorn_divergence(&k, &kxx, &kyy, &mu.weights, &mu.weights, &cfg(0.5)).unwrap();
+        assert!(d.abs() < 1e-6, "divergence {d}");
+    }
+
+    #[test]
+    fn divergence_positive_and_monotone_in_separation() {
+        let mut rng = Rng::seed_from(6);
+        let n = 40;
+        let mk = |shift: f32, rng: &mut Rng| {
+            Measure::uniform(Mat::from_fn(n, 2, |_, j| {
+                rng.normal_f32() * 0.5 + if j == 0 { shift } else { 0.0 }
+            }))
+        };
+        let mu = mk(0.0, &mut rng);
+        let nu1 = mk(1.0, &mut rng);
+        let nu2 = mk(3.0, &mut rng);
+        let eps = 0.5;
+        let div = |mu: &Measure, nu: &Measure, rng: &mut Rng| {
+            let fm = GaussianFeatureMap::fit(mu, nu, eps, 1000, rng);
+            let kxy = FactoredKernel::from_measures(&fm, mu, nu);
+            let kxx = FactoredKernel::from_measures(&fm, mu, mu);
+            let kyy = FactoredKernel::from_measures(&fm, nu, nu);
+            sinkhorn_divergence(&kxy, &kxx, &kyy, &mu.weights, &nu.weights, &cfg(eps)).unwrap()
+        };
+        let d1 = div(&mu, &nu1, &mut rng);
+        let d2 = div(&mu, &nu2, &mut rng);
+        assert!(d1 > 0.0, "d1 {d1}");
+        assert!(d2 > d1, "d2 {d2} should exceed d1 {d1}");
+    }
+
+    #[test]
+    fn nystrom_small_eps_fails_loudly() {
+        // The contrast the paper draws: Nyström at small eps breaks
+        // Sinkhorn; the solver reports it as a typed error instead of NaN.
+        let mut rng = Rng::seed_from(7);
+        let (mu, nu) = data::gaussian_blobs(80, &mut rng);
+        let nk = NystromKernel::from_measures(&mu, &nu, 0.01, 8, &mut rng);
+        let res = sinkhorn(&nk, &mu.weights, &nu.weights, &cfg(0.01));
+        assert!(res.is_err(), "expected divergence, got {:?}", res.map(|s| s.objective));
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let mut rng = Rng::seed_from(8);
+        let (mu, nu) = data::gaussian_blobs(10, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 0.5);
+        let bad = vec![0.1f32; 7];
+        assert!(matches!(
+            sinkhorn(&k, &bad, &nu.weights, &cfg(0.5)),
+            Err(Error::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn deviation_score_exact_is_100() {
+        assert!((deviation_score(2.5, 2.5) - 100.0).abs() < 1e-12);
+        assert!(deviation_score(2.5, 2.0) > 100.0); // underestimate
+        assert!(deviation_score(2.5, 3.0) < 100.0); // overestimate
+    }
+
+    #[test]
+    fn duals_recover_objective() {
+        let mut rng = Rng::seed_from(9);
+        let (mu, nu) = data::gaussian_blobs(25, &mut rng);
+        let eps = 0.5;
+        let k = DenseKernel::from_measures(&mu, &nu, eps);
+        let sol = sinkhorn(&k, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        let (alpha, beta) = sol.duals(eps);
+        let w: f64 = mu
+            .weights
+            .iter()
+            .zip(&alpha)
+            .map(|(&ai, &al)| ai as f64 * al as f64)
+            .sum::<f64>()
+            + nu.weights.iter().zip(&beta).map(|(&bi, &be)| bi as f64 * be as f64).sum::<f64>();
+        assert!((w - sol.objective).abs() < 1e-5 * sol.objective.abs().max(1.0));
+    }
+
+    #[test]
+    fn more_iterations_never_hurt_marginal_error() {
+        let mut rng = Rng::seed_from(10);
+        let (mu, nu) = data::gaussian_blobs(30, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 0.3);
+        let few = SinkhornConfig { epsilon: 0.3, max_iters: 3, tol: 0.0, check_every: 1 };
+        let many = SinkhornConfig { epsilon: 0.3, max_iters: 300, tol: 0.0, check_every: 1 };
+        let e1 = sinkhorn(&k, &mu.weights, &nu.weights, &few).unwrap().marginal_error;
+        let e2 = sinkhorn(&k, &mu.weights, &nu.weights, &many).unwrap().marginal_error;
+        assert!(e2 <= e1 * 1.01, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn uniform_helper() {
+        assert_eq!(uniform(4), vec![0.25; 4]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Special functions substrate.
+//!
+//! Lemma 1 needs the Lambert W function for
+//! `q = eps^{-1} R^2 / (2 d W0(eps^{-1} R^2 / d))`; the synthetic data
+//! generators and test oracles use `erf` / `log_gamma`.
+
+/// Principal branch W0 of the Lambert W function for `z >= 0`.
+///
+/// Halley iterations from a log-based initial guess; converges to ~1e-14
+/// in < 8 iterations over the range used by Lemma 1 (z in [1e-6, 1e8]).
+pub fn lambert_w0(z: f64) -> f64 {
+    assert!(z >= 0.0 && z.is_finite(), "lambert_w0: domain is z >= 0, got {z}");
+    if z == 0.0 {
+        return 0.0;
+    }
+    // Initial guess.
+    let mut w = if z > std::f64::consts::E {
+        let l = z.ln();
+        l - l.ln()
+    } else {
+        // Series-ish rational guess, good on (0, e].
+        z / (1.0 + z)
+    };
+    for _ in 0..32 {
+        let ew = w.exp();
+        let f = w * ew - z;
+        let denom = ew * (w + 1.0) - (w + 2.0) * f / (2.0 * w + 2.0);
+        let step = f / denom;
+        w -= step;
+        if step.abs() < 1e-14 * w.abs().max(1e-14) {
+            break;
+        }
+    }
+    w
+}
+
+/// The Lemma-1 scale constant `q(eps, R, d)`.
+///
+/// Larger `q` means fatter feature tails: the bound `psi = 2 (2q)^{d/2}` on
+/// the ratio `phi phi / k` (and hence the required number of random
+/// features, Thm 3.1) grows with it.
+pub fn gaussian_q(eps: f64, radius: f64, dim: usize) -> f64 {
+    assert!(eps > 0.0 && radius > 0.0 && dim > 0);
+    let z = radius * radius / (eps * dim as f64);
+    radius * radius / (eps * 2.0 * dim as f64 * lambert_w0(z))
+}
+
+/// The Lemma-1 anchor distribution's standard deviation: sigma^2 = q eps/4.
+pub fn gaussian_sigma(eps: f64, radius: f64, dim: usize) -> f64 {
+    (gaussian_q(eps, radius, dim) * eps / 4.0).sqrt()
+}
+
+/// Error function, Abramowitz–Stegun 7.1.26 rational approximation
+/// (|err| < 1.5e-7, plenty for data generation and tests).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Natural log of the gamma function (Lanczos, g=7, n=9).
+pub fn log_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    assert!(x > 0.0, "log_gamma: domain is x > 0");
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - log_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambert_w0_known_values() {
+        // (z, W0(z)) references from scipy.special.lambertw.
+        let cases = [
+            (0.0, 0.0),
+            (1.0, 0.5671432904097838),
+            (std::f64::consts::E, 1.0),
+            (10.0, 1.7455280027406994),
+            (100.0, 3.3856301402900502),
+            (1e4, 7.231846038093373),
+            // W(1e8): w e^w = 1e8 with w = 15.6689967...
+            (1e8, 15.668996715450962),
+        ];
+        for (z, want) in cases {
+            let got = lambert_w0(z);
+            assert!((got - want).abs() < 1e-10, "W0({z}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn lambert_w0_inverse_property() {
+        for i in 0..200 {
+            let z = 1e-5 * (1.12f64).powi(i);
+            let w = lambert_w0(z);
+            assert!((w * w.exp() - z).abs() < 1e-9 * z.max(1.0), "z={z}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn lambert_w0_rejects_negative() {
+        lambert_w0(-0.5);
+    }
+
+    #[test]
+    fn gaussian_q_matches_python_oracle() {
+        // Cross-checked against python ref.gaussian_q (eps=0.5, R=3, d=2).
+        let q = gaussian_q(0.5, 3.0, 2);
+        assert!((q - 2.680140) < 1e-3, "q = {q}");
+        assert!(q > 0.0);
+    }
+
+    #[test]
+    fn gaussian_q_grows_with_radius() {
+        let q1 = gaussian_q(0.5, 1.0, 4);
+        let q2 = gaussian_q(0.5, 4.0, 4);
+        assert!(q2 > q1);
+    }
+
+    #[test]
+    fn gaussian_q_at_least_one_lambert_regime() {
+        // For small z, W0(z) ~ z so q ~ R^2/(2 eps d z) = 0.5 — q is bounded
+        // below by ~0.5 in the small-radius regime.
+        let q = gaussian_q(10.0, 0.1, 8);
+        assert!(q > 0.45 && q < 0.60, "q = {q}");
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        let cases = [(0.0, 0.0), (0.5, 0.5204998778), (1.0, 0.8427007929), (2.0, 0.9953222650)];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+        }
+        assert!((erf(-1.0) + 0.8427007929).abs() < 2e-7);
+    }
+
+    #[test]
+    fn log_gamma_factorials() {
+        // Gamma(n) = (n-1)!
+        let mut fact = 1.0f64;
+        for n in 1..15u32 {
+            if n > 1 {
+                fact *= (n - 1) as f64;
+            }
+            assert!((log_gamma(n as f64) - fact.ln()).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn log_gamma_half() {
+        // Gamma(1/2) = sqrt(pi).
+        assert!((log_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! Mini property-testing harness (the offline crate set has no proptest).
+//!
+//! [`property`] runs a closure over `cases` seeded RNG draws; on failure it
+//! *shrinks by seed replay* — it reports the failing seed so the case is
+//! exactly reproducible (`PROP_SEED=<seed>` re-runs a single case).
+//! Generators live on [`Gen`], a thin wrapper over [`crate::rng::Rng`].
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Value generator for property tests.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::seed_from(seed) }
+    }
+
+    /// Integer in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.uniform_usize(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// Strictly positive vector summing to 1 (a probability histogram).
+    pub fn simplex(&mut self, n: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..n).map(|_| self.rng.uniform_in(0.05, 1.0) as f32).collect();
+        let s: f32 = v.iter().sum();
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    }
+
+    /// Strictly positive matrix with entries in [lo, hi].
+    pub fn positive_mat(&mut self, rows: usize, cols: usize, lo: f32, hi: f32) -> Mat {
+        assert!(lo > 0.0 && hi > lo);
+        Mat::from_fn(rows, cols, |_, _| self.rng.uniform_in(lo as f64, hi as f64) as f32)
+    }
+
+    /// Gaussian point cloud.
+    pub fn cloud(&mut self, n: usize, d: usize, std: f32) -> Mat {
+        Mat::from_fn(n, d, |_, _| self.rng.normal_f32() * std)
+    }
+}
+
+/// Run `f` over `cases` generated inputs. Panics with the failing seed on
+/// the first failure. If env `PROP_SEED` is set, runs only that seed.
+pub fn property(name: &str, cases: usize, mut f: impl FnMut(&mut Gen)) {
+    if let Ok(seed_str) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed_str.parse().expect("PROP_SEED must be a u64");
+        let mut g = Gen::new(seed);
+        f(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        // Deterministic per-case seed derived from the property name so
+        // adding tests elsewhere never shifts this property's cases.
+        let seed = fnv1a(name) ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed at case {case} (re-run with PROP_SEED={seed}):\n{msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simplex_sums_to_one_and_positive() {
+        property("simplex", 50, |g| {
+            let n = g.usize_in(1, 100);
+            let s = g.simplex(n);
+            let total: f32 = s.iter().sum();
+            assert!((total - 1.0).abs() < 1e-4);
+            assert!(s.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    fn positive_mat_in_range() {
+        property("positive_mat", 20, |g| {
+            let rows = g.usize_in(1, 10);
+            let cols = g.usize_in(1, 10);
+            let m = g.positive_mat(rows, cols, 0.5, 2.0);
+            assert!(m.min_entry() >= 0.5 && m.max_entry() <= 2.0);
+        });
+    }
+
+    #[test]
+    fn property_seeds_are_deterministic() {
+        let mut first = Vec::new();
+        property("det", 5, |g| first.push(g.rng.next_u64()));
+        let mut second = Vec::new();
+        property("det", 5, |g| second.push(g.rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failures_report_seed() {
+        property("always_fails", 3, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,166 @@
+//! Cross-module integration tests: data -> features -> kernels -> sinkhorn
+//! -> divergence, plus property tests over the whole pipeline using the
+//! in-repo mini property harness.
+
+use linear_sinkhorn::config::SinkhornConfig;
+use linear_sinkhorn::features::FeatureMap;
+use linear_sinkhorn::prelude::*;
+use linear_sinkhorn::sinkhorn::{marginal_errors, transport_plan};
+use linear_sinkhorn::testing::property;
+
+fn cfg(eps: f64) -> SinkhornConfig {
+    SinkhornConfig { epsilon: eps, max_iters: 3000, tol: 1e-5, check_every: 5 }
+}
+
+#[test]
+fn full_pipeline_gaussian_to_divergence() {
+    let mut rng = Rng::seed_from(0);
+    let (mu, nu) = data::gaussian_blobs(300, &mut rng);
+    let eps = 0.5;
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, 400, &mut rng);
+    let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
+    let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
+    let k_yy = FactoredKernel::from_measures(&map, &nu, &nu);
+    let d = sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg(eps))
+        .expect("pipeline");
+    assert!(d > 0.0 && d.is_finite(), "divergence {d}");
+}
+
+#[test]
+fn property_sinkhorn_feasibility_over_random_problems() {
+    // For random positive factor matrices, Alg. 1 always converges to a
+    // feasible plan (positivity by construction =>, no divergence).
+    property("sinkhorn_feasibility", 20, |g| {
+        let n = g.usize_in(3, 40);
+        let m = g.usize_in(3, 40);
+        let r = g.usize_in(1, 12);
+        let phi_x = g.positive_mat(n, r, 0.05, 2.0);
+        let phi_y = g.positive_mat(m, r, 0.05, 2.0);
+        let a = g.simplex(n);
+        let b = g.simplex(m);
+        let k = FactoredKernel::from_factors(phi_x, phi_y);
+        let sol = sinkhorn(&k, &a, &b, &cfg(0.5)).expect("positive factors never diverge");
+        let (row_err, col_err) = marginal_errors(&k, &sol, &a, &b);
+        assert!(row_err < 1e-3, "row err {row_err}");
+        assert!(col_err < 1e-3, "col err {col_err}");
+    });
+}
+
+#[test]
+fn property_plan_is_nonnegative_and_mass_one() {
+    property("plan_mass", 10, |g| {
+        let n = g.usize_in(3, 15);
+        let r = g.usize_in(1, 6);
+        let phi_x = g.positive_mat(n, r, 0.1, 1.5);
+        let phi_y = g.positive_mat(n, r, 0.1, 1.5);
+        let a = g.simplex(n);
+        let b = g.simplex(n);
+        let k = FactoredKernel::from_factors(phi_x, phi_y);
+        let sol = sinkhorn(&k, &a, &b, &cfg(1.0)).unwrap();
+        let plan = transport_plan(&k, &sol);
+        assert!(plan.min_entry() >= 0.0);
+        let mass: f64 = plan.data().iter().map(|&x| x as f64).sum();
+        assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+    });
+}
+
+#[test]
+fn property_divergence_is_symmetric() {
+    // Wbar(mu, nu) == Wbar(nu, mu) when the same features are used.
+    property("divergence_symmetry", 6, |g| {
+        let n = g.usize_in(10, 40);
+        let mut rng = Rng::seed_from(g.rng.next_u64());
+        let mu = Measure::uniform(g.cloud(n, 2, 1.0));
+        let nu = Measure::uniform(g.cloud(n, 2, 0.7));
+        let eps = 0.5;
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, 256, &mut rng);
+        let kxy = FactoredKernel::from_measures(&map, &mu, &nu);
+        let kyx = FactoredKernel::from_measures(&map, &nu, &mu);
+        let kxx = FactoredKernel::from_measures(&map, &mu, &mu);
+        let kyy = FactoredKernel::from_measures(&map, &nu, &nu);
+        let d1 = sinkhorn_divergence(&kxy, &kxx, &kyy, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        let d2 = sinkhorn_divergence(&kyx, &kyy, &kxx, &nu.weights, &mu.weights, &cfg(eps)).unwrap();
+        assert!((d1 - d2).abs() < 1e-5 * d1.abs().max(1.0), "{d1} vs {d2}");
+    });
+}
+
+#[test]
+fn property_kernel_ratio_tightens_with_more_features() {
+    // Prop 3.1 shape: sup ratio error shrinks as r grows (on average).
+    property("ratio_vs_r", 4, |g| {
+        let mut rng = Rng::seed_from(g.rng.next_u64());
+        let mu = Measure::uniform(g.cloud(12, 2, 0.8));
+        let nu = Measure::uniform(g.cloud(12, 2, 0.8));
+        let eps = 1.0;
+        let err_at = |r: usize, rng: &mut Rng| -> f64 {
+            // Average over a few draws to damp MC noise.
+            let mut tot = 0.0;
+            for _ in 0..3 {
+                let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, rng);
+                let fk = FactoredKernel::from_measures(&map, &mu, &nu);
+                let kd = fk.to_dense();
+                let mut worst = 0.0f64;
+                for i in 0..mu.len() {
+                    for j in 0..nu.len() {
+                        let d2: f64 = mu
+                            .points
+                            .row(i)
+                            .iter()
+                            .zip(nu.points.row(j))
+                            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                            .sum();
+                        let truth = (-d2 / eps).exp();
+                        worst = worst.max(((kd[(i, j)] as f64) / truth - 1.0).abs());
+                    }
+                }
+                tot += worst;
+            }
+            tot / 3.0
+        };
+        let few = err_at(32, &mut rng);
+        let many = err_at(1024, &mut rng);
+        assert!(many < few, "ratio error should shrink: r=32 -> {few:.3}, r=1024 -> {many:.3}");
+    });
+}
+
+#[test]
+fn rf_tracks_log_domain_ground_truth() {
+    // End-to-end accuracy vs the stabilised dense solver.
+    let mut rng = Rng::seed_from(5);
+    let (mu, nu) = data::gaussian_blobs(120, &mut rng);
+    let eps = 1.0;
+    let truth = linear_sinkhorn::bench::tradeoff::ground_truth(&mu, &nu, eps);
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, 1200, &mut rng);
+    let fk = FactoredKernel::from_measures(&map, &mu, &nu);
+    let est = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg(eps)).unwrap().objective;
+    let dev = linear_sinkhorn::sinkhorn::deviation_score(truth, est);
+    assert!((dev - 100.0).abs() < 6.0, "deviation {dev} (truth {truth} est {est})");
+}
+
+#[test]
+fn arccos_features_run_through_sinkhorn() {
+    use linear_sinkhorn::features::ArcCosFeatureMap;
+    let mut rng = Rng::seed_from(6);
+    let (mu, nu) = data::gaussian_blobs(80, &mut rng);
+    let fm = ArcCosFeatureMap::new(2, 128, 1, 0.2, 1.5, &mut rng);
+    let phi_x = fm.feature_matrix(&mu.points);
+    let phi_y = fm.feature_matrix(&nu.points);
+    let k = FactoredKernel::from_factors(phi_x, phi_y);
+    let sol = sinkhorn(&k, &mu.weights, &nu.weights, &cfg(0.5)).expect("arc-cosine kernel");
+    assert!(sol.objective.is_finite());
+    assert!(sol.marginal_error < 1e-3);
+}
+
+#[test]
+fn property_config_cli_roundtrip() {
+    use linear_sinkhorn::config::ConfigDoc;
+    property("config_roundtrip", 25, |g| {
+        let eps = g.f64_in(0.01, 10.0);
+        let iters = g.usize_in(1, 100000);
+        let text = format!("[sinkhorn]\nepsilon = {eps}\nmax_iters = {iters}");
+        let doc = ConfigDoc::parse(&text).unwrap();
+        let cfg = SinkhornConfig::from_doc(&doc);
+        assert!((cfg.epsilon - eps).abs() < 1e-12);
+        assert_eq!(cfg.max_iters, iters);
+    });
+}

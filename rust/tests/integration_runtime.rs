@@ -1,0 +1,187 @@
+//! Integration tests for the PJRT runtime against the real AOT artifacts.
+//!
+//! These tests *skip* (pass trivially with a note) when `artifacts/` has
+//! not been built — `make artifacts && cargo test` exercises them fully.
+//! They verify the end-to-end claim: python lowered the graphs once, and
+//! the Rust side reproduces the native implementation's numbers through
+//! PJRT without any python at runtime.
+
+use linear_sinkhorn::config::SinkhornConfig;
+use linear_sinkhorn::features::{FeatureMap, GaussianFeatureMap};
+use linear_sinkhorn::prelude::*;
+use linear_sinkhorn::runtime::{mat_to_literal, vec_to_literal, Engine, Registry};
+
+fn registry() -> Option<Registry> {
+    // Tests run from the crate root.
+    match Registry::load("artifacts") {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_files_all_exist_and_hash() {
+    let Some(reg) = registry() else { return };
+    assert!(!reg.entries.is_empty());
+    for meta in reg.entries.values() {
+        let text = std::fs::read_to_string(&meta.file).expect("artifact file");
+        assert!(text.starts_with("HloModule"), "{} is not HLO text", meta.name);
+    }
+}
+
+#[test]
+fn rf_sinkhorn_artifact_matches_native_solver() {
+    let Some(reg) = registry() else { return };
+    let Some(meta) = reg.find_prefix("rf_sinkhorn_n256") else {
+        eprintln!("SKIP: no rf_sinkhorn_n256 artifact");
+        return;
+    };
+    let n = meta.params[0].1[0];
+    let r = meta.params[0].1[1];
+    let iters = meta.constants["iters"] as usize;
+    let eps = meta.constants["eps"];
+
+    // Same positive factors on both paths.
+    let mut rng = Rng::seed_from(42);
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
+    let phi_x = map.feature_matrix(&mu.points);
+    let phi_y = map.feature_matrix(&nu.points);
+
+    // Native: fixed iteration count to match the AOT graph exactly.
+    let fk = FactoredKernel::from_factors(phi_x.clone(), phi_y.clone());
+    let cfg = SinkhornConfig { epsilon: eps, max_iters: iters, tol: 0.0, check_every: iters + 1 };
+    let native = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg).unwrap();
+
+    // PJRT: run the lowered graph.
+    let engine = Engine::cpu().expect("pjrt cpu");
+    let exe = engine.load(meta).expect("compile");
+    let outs = exe
+        .run(&[
+            mat_to_literal(&phi_x).unwrap(),
+            mat_to_literal(&phi_y).unwrap(),
+            vec_to_literal(&mu.weights),
+            vec_to_literal(&nu.weights),
+        ])
+        .expect("execute");
+    let u = outs[0].to_vec::<f32>().unwrap();
+    let w_hat = outs[2].to_vec::<f32>().unwrap()[0] as f64;
+
+    assert_eq!(u.len(), n);
+    let rel = (w_hat - native.objective).abs() / native.objective.abs().max(1e-9);
+    assert!(
+        rel < 1e-3,
+        "PJRT {w_hat} vs native {} (rel {rel:.2e})",
+        native.objective
+    );
+    // Scalings agree elementwise (same iteration count, same arithmetic).
+    for i in 0..n {
+        let d = (u[i] - native.u[i]).abs() / native.u[i].abs().max(1e-9);
+        assert!(d < 5e-3, "u[{i}]: pjrt {} native {}", u[i], native.u[i]);
+    }
+}
+
+#[test]
+fn dense_sinkhorn_artifact_matches_native() {
+    let Some(reg) = registry() else { return };
+    let Some(meta) = reg.find_prefix("dense_sinkhorn") else {
+        eprintln!("SKIP: no dense artifact");
+        return;
+    };
+    let n = meta.params[0].1[0];
+    let iters = meta.constants["iters"] as usize;
+    let eps = meta.constants["eps"];
+    let mut rng = Rng::seed_from(1);
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+    let dk = DenseKernel::from_measures(&mu, &nu, eps);
+    let cfg = SinkhornConfig { epsilon: eps, max_iters: iters, tol: 0.0, check_every: iters + 1 };
+    let native = sinkhorn(&dk, &mu.weights, &nu.weights, &cfg).unwrap();
+
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(meta).unwrap();
+    let outs = exe
+        .run(&[
+            mat_to_literal(&dk.k).unwrap(),
+            vec_to_literal(&mu.weights),
+            vec_to_literal(&nu.weights),
+        ])
+        .unwrap();
+    let w_hat = outs[2].to_vec::<f32>().unwrap()[0] as f64;
+    let rel = (w_hat - native.objective).abs() / native.objective.abs().max(1e-9);
+    assert!(rel < 1e-3, "PJRT {w_hat} vs native {}", native.objective);
+}
+
+#[test]
+fn features_artifact_matches_native_feature_map() {
+    let Some(reg) = registry() else { return };
+    let Some(meta) = reg.find_prefix("rf_features_n256_r64_d2") else {
+        eprintln!("SKIP: no features artifact");
+        return;
+    };
+    let n = meta.params[0].1[0];
+    let d = meta.params[0].1[1];
+    let r = meta.params[1].1[0];
+    let eps = meta.constants["eps"];
+    let q = meta.constants["q"];
+    let radius = meta.constants["radius"];
+
+    let mut rng = Rng::seed_from(3);
+    let x = Mat::from_fn(n, d, |_, _| (rng.normal() * 0.8) as f32);
+    let sigma = (q * eps / 4.0).sqrt();
+    let anchors = Mat::from_fn(r, d, |_, _| rng.normal_scaled(0.0, sigma) as f32);
+
+    // Native features with the same (eps, q) constants.
+    let map = GaussianFeatureMap::with_anchors(anchors.clone(), eps, q, radius);
+    let native = map.feature_matrix(&x);
+
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(meta).unwrap();
+    let outs = exe
+        .run(&[mat_to_literal(&x).unwrap(), mat_to_literal(&anchors).unwrap()])
+        .unwrap();
+    let phi = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(phi.len(), n * r);
+    let mut max_rel = 0.0f64;
+    for i in 0..n {
+        for j in 0..r {
+            let got = phi[i * r + j] as f64;
+            let want = native[(i, j)] as f64;
+            max_rel = max_rel.max((got - want).abs() / want.abs().max(1e-30));
+        }
+    }
+    assert!(max_rel < 1e-3, "feature mismatch: max rel {max_rel:.2e}");
+    // Positivity survives the AOT round-trip.
+    assert!(phi.iter().all(|&v| v > 0.0));
+}
+
+#[test]
+fn critic_grad_artifact_signs_and_shapes() {
+    let Some(reg) = registry() else { return };
+    let Some(meta) = reg.find_prefix("critic_grad") else {
+        eprintln!("SKIP: no critic_grad artifact");
+        return;
+    };
+    let s = meta.params[0].1[0];
+    let r = meta.params[0].1[1];
+    let mut rng = Rng::seed_from(4);
+    let phi_x = Mat::from_fn(s, r, |_, _| (0.2 + rng.uniform() * 0.8) as f32);
+    let phi_y = Mat::from_fn(s, r, |_, _| (0.2 + rng.uniform() * 0.8) as f32);
+    let w = vec![1.0f32 / s as f32; s];
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(meta).unwrap();
+    let outs = exe
+        .run(&[
+            mat_to_literal(&phi_x).unwrap(),
+            mat_to_literal(&phi_y).unwrap(),
+            vec_to_literal(&w),
+            vec_to_literal(&w),
+        ])
+        .unwrap();
+    let gx = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(gx.len(), s * r);
+    // Prop 3.2: the gradient through positive factors is elementwise <= 0.
+    assert!(gx.iter().all(|&g| g <= 0.0), "critic grad must be non-positive");
+}
