@@ -18,8 +18,10 @@ fn main() {
     let cfg = ServiceConfig {
         workers: 4,
         batcher: BatcherConfig { max_batch: 8, max_delay_us: 300, queue_depth: 256 },
-        sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 1000, tol: 1e-4, check_every: 10 },
+        sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 1000, tol: 1e-4, check_every: 10, threads: 1 },
         num_features: 256,
+        solver_threads: 1,
+        cache_capacity: 8,
     };
     println!(
         "starting divergence service: {} workers, batch<= {}, queue {}",

@@ -1,0 +1,117 @@
+//! Parallel-scaling bench: wall-clock of the intra-solve execution layer
+//! (`runtime::pool` + `_pooled` matvecs + concurrent three-problem
+//! divergence) against the serial path, at n in {1e3, 1e4, 1e5}.
+//!
+//! Reports, per (n, threads):
+//!   * per-apply time of the factored kernel's two matvecs (the entire
+//!     Sinkhorn iteration cost), serial vs pooled, and
+//!   * a full `sinkhorn_divergence` solve at the paper's O(r(n+m))
+//!     complexity, `threads = 1` vs `threads = T` (three concurrent
+//!     solves with pooled matvecs inside each).
+//!
+//! The acceptance bar for this layer is >1.5x end-to-end at n = 1e4 with
+//! 4 threads; results feed EXPERIMENTS.md §Parallel scaling.
+//!
+//! Run: `cargo bench --bench parallel_scaling`
+//! (add `--sizes 1000,10000,100000` to sweep the full range)
+
+use linear_sinkhorn::bench::{fmt_secs, time, Table};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::linalg::{matvec_into, matvec_into_pooled, matvec_t_into, matvec_t_into_pooled};
+use linear_sinkhorn::prelude::*;
+
+fn main() {
+    let args = ArgSpec::new("parallel_scaling", "pooled vs serial hot paths")
+        .opt("sizes", "1000,10000", "values of n to sweep")
+        .opt("threads", "2,4", "pool sizes to compare against serial")
+        .opt("features", "256", "feature count r")
+        .opt("iters", "40", "Sinkhorn iterations per divergence measurement")
+        .opt("reps", "3", "measured repetitions per cell")
+        .opt("seed", "0", "RNG seed")
+        .opt("csv", "target/parallel_scaling.csv", "csv output")
+        .parse();
+
+    let sizes = args.get_usize_list("sizes");
+    let thread_counts = args.get_usize_list("threads");
+    let r = args.get_usize("features");
+    let iters = args.get_usize("iters");
+    let reps = args.get_usize("reps");
+    let eps = 0.5;
+    let mut rng = Rng::seed_from(args.get_u64("seed"));
+
+    let mut t = Table::new(
+        "Parallel scaling (factored kernel, r fixed)",
+        &["n", "threads", "matvec/iter serial", "matvec/iter pooled", "mv speedup",
+          "divergence serial", "divergence parallel", "div speedup"],
+    );
+
+    for &n in &sizes {
+        let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
+        let phi_x = map.feature_matrix(&mu.points);
+        let phi_y = map.feature_matrix(&nu.points);
+
+        // Serial per-iteration matvec pair (K^T u then K v shapes).
+        let v = vec![1.0f32 / n as f32; n];
+        let mut mid = vec![0.0f32; r];
+        let mut out = vec![0.0f32; n];
+        let serial_mv = time(2, reps.max(3) * 3, || {
+            matvec_t_into(&phi_y, &v, &mut mid);
+            matvec_into(&phi_x, &mid, &mut out);
+        })
+        .median_s;
+
+        // Serial end-to-end divergence (fixed iteration budget).
+        let cfg_serial = SinkhornConfig {
+            epsilon: eps,
+            max_iters: iters,
+            tol: 0.0,
+            check_every: iters + 1,
+            threads: 1,
+        };
+        let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
+        let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
+        let k_yy = FactoredKernel::from_measures(&map, &nu, &nu);
+        let serial_div = time(1, reps, || {
+            sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg_serial)
+                .expect("serial divergence");
+        })
+        .median_s;
+
+        for &threads in &thread_counts {
+            let pool = Pool::new(threads);
+            let pooled_mv = time(2, reps.max(3) * 3, || {
+                matvec_t_into_pooled(&phi_y, &v, &mut mid, &pool);
+                matvec_into_pooled(&phi_x, &mid, &mut out, &pool);
+            })
+            .median_s;
+
+            let cfg_par = SinkhornConfig { threads, ..cfg_serial.clone() };
+            let p_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, pool);
+            let p_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, pool);
+            let p_yy = FactoredKernel::from_measures_pooled(&map, &nu, &nu, pool);
+            let par_div = time(1, reps, || {
+                sinkhorn_divergence(&p_xy, &p_xx, &p_yy, &mu.weights, &nu.weights, &cfg_par)
+                    .expect("parallel divergence");
+            })
+            .median_s;
+
+            t.row(vec![
+                n.to_string(),
+                threads.to_string(),
+                fmt_secs(serial_mv),
+                fmt_secs(pooled_mv),
+                format!("{:.2}x", serial_mv / pooled_mv),
+                fmt_secs(serial_div),
+                fmt_secs(par_div),
+                format!("{:.2}x", serial_div / par_div),
+            ]);
+        }
+    }
+
+    t.emit(Some(args.get_str("csv")));
+    println!(
+        "\nacceptance bar: divergence speedup > 1.5x at n=10000, threads=4 \
+         (EXPERIMENTS.md §Parallel scaling)"
+    );
+}

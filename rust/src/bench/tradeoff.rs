@@ -68,7 +68,7 @@ pub fn ground_truth(mu: &Measure, nu: &Measure, eps: f64) -> f64 {
         return v;
     }
     let cost = sq_euclidean_cost(&mu.points, &nu.points);
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: 10_000, tol: 1e-7, check_every: 25 };
+    let cfg = SinkhornConfig { epsilon: eps, max_iters: 10_000, tol: 1e-7, check_every: 25, threads: 1 };
     sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg)
         .expect("log-domain ground truth cannot diverge")
         .objective
@@ -159,6 +159,7 @@ pub fn run_sweep(
             max_iters: sweep.max_iters,
             tol: sweep.solver_tol,
             check_every: 10,
+            threads: 1,
         };
 
         // --- Sin baseline: converged dense solve (one timing; deviation of

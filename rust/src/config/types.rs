@@ -14,11 +14,19 @@ pub struct SinkhornConfig {
     /// Check the stopping criterion every this many iterations (the check
     /// itself costs one kernel apply).
     pub check_every: usize,
+    /// Solver-level parallelism: worker threads for the three concurrent
+    /// transport problems of a Sinkhorn divergence. `1` = sequential,
+    /// `0` = auto-size to the machine. Results are identical for every
+    /// value — the parallel kernels are deterministic in the thread
+    /// count (see `runtime::pool`), though factored applies above one
+    /// transpose chunk (1024 rows) round differently than the pre-pool
+    /// releases at any thread count.
+    pub threads: usize,
 }
 
 impl Default for SinkhornConfig {
     fn default() -> Self {
-        SinkhornConfig { epsilon: 0.5, max_iters: 5000, tol: 1e-3, check_every: 10 }
+        SinkhornConfig { epsilon: 0.5, max_iters: 5000, tol: 1e-3, check_every: 10, threads: 1 }
     }
 }
 
@@ -30,6 +38,7 @@ impl SinkhornConfig {
             max_iters: doc.get_int("sinkhorn.max_iters").unwrap_or(d.max_iters as i64) as usize,
             tol: doc.get_float("sinkhorn.tol").unwrap_or(d.tol),
             check_every: doc.get_int("sinkhorn.check_every").unwrap_or(d.check_every as i64) as usize,
+            threads: doc.get_int("sinkhorn.threads").unwrap_or(d.threads as i64) as usize,
         }
     }
 }
@@ -114,6 +123,14 @@ pub struct ServiceConfig {
     pub sinkhorn: SinkhornConfig,
     /// Number of random features the service uses per request.
     pub num_features: usize,
+    /// Intra-solve parallelism per worker: threads used by each request's
+    /// pooled matvecs and feature evaluation (`1` = serial, `0` = auto).
+    /// Worker-level and intra-solve parallelism multiply, so keep
+    /// `workers * solver_threads` near the core count.
+    pub solver_threads: usize,
+    /// Capacity (entries) of the shared feature-map cache keyed by
+    /// `(dim, eps, r)`; `0` disables caching and re-fits per request.
+    pub cache_capacity: usize,
 }
 
 impl Default for ServiceConfig {
@@ -123,6 +140,8 @@ impl Default for ServiceConfig {
             batcher: BatcherConfig::default(),
             sinkhorn: SinkhornConfig::default(),
             num_features: 256,
+            solver_threads: 1,
+            cache_capacity: 8,
         }
     }
 }
@@ -135,6 +154,12 @@ impl ServiceConfig {
             batcher: BatcherConfig::from_doc(doc),
             sinkhorn: SinkhornConfig::from_doc(doc),
             num_features: doc.get_int("service.num_features").unwrap_or(d.num_features as i64) as usize,
+            solver_threads: doc
+                .get_int("service.solver_threads")
+                .unwrap_or(d.solver_threads as i64) as usize,
+            cache_capacity: doc
+                .get_int("service.cache_capacity")
+                .unwrap_or(d.cache_capacity as i64) as usize,
         }
     }
 }

@@ -161,6 +161,63 @@ mod tests {
     }
 
     #[test]
+    fn size_flush_is_immediate_even_with_huge_deadline() {
+        // Filling max_batch must flush NOW — the deadline (here one
+        // minute) is a latency bound for partial batches, not a pacing
+        // clock for full ones.
+        let (req_tx, req_rx) = sync_channel::<Request>(16);
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(16);
+        let metrics = Arc::new(Registry::default());
+        let handle = std::thread::spawn(move || {
+            run(
+                req_rx,
+                batch_tx,
+                BatcherPolicy { max_batch: 4, max_delay_us: 60_000_000 },
+                metrics,
+            )
+        });
+        let (reply_tx, _reply_rx) = sync_channel(16);
+        for id in 0..4 {
+            req_tx.send(mk_request(id, reply_tx.clone())).unwrap();
+        }
+        let batch = batch_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("size-triggered flush must not wait for the deadline");
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(
+            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        drop(req_tx);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline_not_forever() {
+        // A partial batch (3 of max 100) must be flushed by the deadline
+        // alone, while the channel stays open.
+        let (req_tx, req_rx) = sync_channel::<Request>(16);
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(16);
+        let metrics = Arc::new(Registry::default());
+        let handle = std::thread::spawn(move || {
+            run(
+                req_rx,
+                batch_tx,
+                BatcherPolicy { max_batch: 100, max_delay_us: 5_000 },
+                metrics,
+            )
+        });
+        let (reply_tx, _reply_rx) = sync_channel(16);
+        for id in 0..3 {
+            req_tx.send(mk_request(id, reply_tx.clone())).unwrap();
+        }
+        let batch = batch_rx.recv_timeout(Duration::from_secs(5)).expect("deadline flush");
+        assert_eq!(batch.requests.len(), 3, "partial batch flushed as one unit");
+        drop(req_tx);
+        handle.join().unwrap();
+    }
+
+    #[test]
     fn drains_on_disconnect() {
         let ids: Vec<u64> = (0..3).collect();
         let batches =

@@ -1,0 +1,283 @@
+//! Shared feature-map cache: amortise the Lemma-1 anchor draw across
+//! requests.
+//!
+//! Fitting a [`GaussianFeatureMap`] costs an `r x d` Gaussian anchor draw
+//! plus per-anchor constants — cheap next to a solve, but it happens on
+//! *every* request, and requests are grouped by shared `(dim, eps)`
+//! precisely so this setup can be amortised. The cache makes the reuse
+//! explicit and cross-batch.
+//!
+//! ## Keying rule
+//!
+//! Entries are keyed by `(dim, eps, r)` ([`FeatureKey`]; `eps` compared by
+//! exact bit pattern — a "nearby" regularisation is a different kernel).
+//! The fitted radius `R` is deliberately **not** part of the key: Lemma 1
+//! is an exact expectation identity for any `x, y`, and `R` only enters
+//! the paper's *variance* bound (via `q(eps, R, d)` and `psi`). A cached
+//! map is therefore reusable for any request whose data radius is at most
+//! the radius the map was fitted with — its Theorem-2 concentration
+//! guarantee still applies — while data *larger* than the fitted radius
+//! would void the guarantee, so that is a miss.
+//!
+//! On a radius miss the replacement map is fitted with
+//! [`RADIUS_HEADROOM`] slack so mild workload drift (clouds growing a few
+//! per cent per request) does not defeat the cache.
+//!
+//! ## Concurrency and metrics
+//!
+//! The cache is a `Mutex`-guarded LRU shared by every worker via `Arc`;
+//! the expensive fit runs *outside* the lock (two workers may race to fit
+//! the same key — both results are valid draws, last insert wins). Hits
+//! and misses are counted locally and exported through
+//! [`crate::metrics::Registry`] as `service.feature_cache.hits` /
+//! `service.feature_cache.misses`, which the divergence-service example
+//! prints.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::features::GaussianFeatureMap;
+use crate::metrics::Registry;
+use crate::rng::Rng;
+
+/// Headroom factor applied to the data radius when fitting a map on a
+/// cache miss, so slightly larger follow-up clouds still hit.
+pub const RADIUS_HEADROOM: f64 = 1.25;
+
+/// Cache key: requests sharing the ground-space dimension, the
+/// regularisation and the feature count can share one anchor draw.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct FeatureKey {
+    /// Ground-space dimension d.
+    pub dim: usize,
+    /// Bit pattern of the regularisation epsilon (exact match only).
+    pub eps_bits: u64,
+    /// Feature count r.
+    pub r: usize,
+}
+
+impl FeatureKey {
+    /// Key for a `(dim, eps, r)` combination.
+    pub fn new(dim: usize, eps: f64, r: usize) -> FeatureKey {
+        FeatureKey { dim, eps_bits: eps.to_bits(), r }
+    }
+}
+
+struct CacheEntry {
+    map: Arc<GaussianFeatureMap>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    entries: HashMap<FeatureKey, CacheEntry>,
+    /// Monotonic access clock for LRU eviction.
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// LRU cache of fitted [`GaussianFeatureMap`]s, shared across workers.
+pub struct FeatureCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+}
+
+impl FeatureCache {
+    /// A cache holding at most `capacity` maps; `0` disables caching
+    /// (every lookup fits a fresh map and counts as a miss).
+    pub fn new(capacity: usize) -> FeatureCache {
+        FeatureCache { inner: Mutex::new(CacheInner::default()), capacity }
+    }
+
+    /// The configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fetch a map usable for data of radius `radius` under
+    /// `(dim, eps, r)`, fitting (with [`RADIUS_HEADROOM`]) on a miss.
+    /// Counters go to `metrics` when provided.
+    pub fn get_or_fit(
+        &self,
+        dim: usize,
+        eps: f64,
+        r: usize,
+        radius: f64,
+        rng: &mut Rng,
+        metrics: Option<&Registry>,
+    ) -> Arc<GaussianFeatureMap> {
+        let radius = radius.max(1e-6);
+        let key = FeatureKey::new(dim, eps, r);
+        if self.capacity > 0 {
+            let hit = {
+                let mut guard = self.inner.lock().unwrap();
+                let inner = &mut *guard;
+                inner.tick += 1;
+                let tick = inner.tick;
+                match inner.entries.get_mut(&key) {
+                    // Usable iff the fitted radius covers this request's
+                    // data (see the module docs for why that is the rule).
+                    Some(e) if e.map.radius >= radius => {
+                        e.last_used = tick;
+                        inner.hits += 1;
+                        Some(e.map.clone())
+                    }
+                    _ => None,
+                }
+            };
+            if let Some(map) = hit {
+                if let Some(m) = metrics {
+                    m.counter("service.feature_cache.hits").inc();
+                }
+                return map;
+            }
+        }
+        // Miss (or caching disabled): fit outside the lock — the draw is
+        // the expensive part and both racers would produce valid maps.
+        let fitted = Arc::new(GaussianFeatureMap::new(
+            eps,
+            (radius * RADIUS_HEADROOM).max(1e-6),
+            dim,
+            r,
+            rng,
+        ));
+        if let Some(m) = metrics {
+            m.counter("service.feature_cache.misses").inc();
+        }
+        if self.capacity > 0 {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            inner.misses += 1;
+            inner.tick += 1;
+            let tick = inner.tick;
+            inner.entries.insert(key, CacheEntry { map: fitted.clone(), last_used: tick });
+            while inner.entries.len() > self.capacity {
+                // Evict the least-recently-used key (the just-inserted
+                // entry carries the newest tick, so it is never the one).
+                let victim: Option<FeatureKey> = inner
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| *k);
+                match victim {
+                    Some(k) => inner.entries.remove(&k),
+                    None => break,
+                };
+            }
+        } else {
+            self.inner.lock().unwrap().misses += 1;
+        }
+        fitted
+    }
+
+    /// Total hits since construction.
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
+    }
+
+    /// Total misses since construction.
+    pub fn misses(&self) -> u64 {
+        self.inner.lock().unwrap().misses
+    }
+
+    /// Cached entry count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seed_from(0xCACE)
+    }
+
+    #[test]
+    fn second_lookup_same_key_hits() {
+        let c = FeatureCache::new(4);
+        let mut rng = rng();
+        let a = c.get_or_fit(2, 0.5, 64, 3.0, &mut rng, None);
+        let b = c.get_or_fit(2, 0.5, 64, 3.0, &mut rng, None);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        // Same fitted map object (no refit).
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn smaller_radius_hits_larger_misses() {
+        let c = FeatureCache::new(4);
+        let mut rng = rng();
+        let first = c.get_or_fit(2, 0.5, 64, 3.0, &mut rng, None);
+        assert!(first.radius >= 3.0, "fitted with headroom");
+        // Smaller data fits under the cached radius.
+        let _ = c.get_or_fit(2, 0.5, 64, 2.0, &mut rng, None);
+        assert_eq!(c.hits(), 1);
+        // Much larger data voids the concentration guarantee -> refit.
+        let bigger = c.get_or_fit(2, 0.5, 64, 30.0, &mut rng, None);
+        assert_eq!(c.misses(), 2);
+        assert!(bigger.radius >= 30.0);
+        // The replacement now serves the larger radius.
+        let again = c.get_or_fit(2, 0.5, 64, 30.0, &mut rng, None);
+        assert!(Arc::ptr_eq(&bigger, &again));
+        assert_eq!(c.hits(), 2);
+    }
+
+    #[test]
+    fn distinct_eps_r_dim_are_distinct_entries() {
+        let c = FeatureCache::new(8);
+        let mut rng = rng();
+        let _ = c.get_or_fit(2, 0.5, 64, 3.0, &mut rng, None);
+        let _ = c.get_or_fit(2, 1.0, 64, 3.0, &mut rng, None);
+        let _ = c.get_or_fit(2, 0.5, 128, 3.0, &mut rng, None);
+        let _ = c.get_or_fit(3, 0.5, 64, 3.0, &mut rng, None);
+        assert_eq!(c.misses(), 4);
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity() {
+        let c = FeatureCache::new(2);
+        let mut rng = rng();
+        let _ = c.get_or_fit(2, 0.1, 8, 3.0, &mut rng, None); // A
+        let _ = c.get_or_fit(2, 0.2, 8, 3.0, &mut rng, None); // B
+        let _ = c.get_or_fit(2, 0.1, 8, 3.0, &mut rng, None); // touch A
+        let _ = c.get_or_fit(2, 0.3, 8, 3.0, &mut rng, None); // C evicts B
+        assert_eq!(c.len(), 2);
+        let _ = c.get_or_fit(2, 0.1, 8, 3.0, &mut rng, None); // A still hot
+        assert_eq!(c.hits(), 2);
+        let _ = c.get_or_fit(2, 0.2, 8, 3.0, &mut rng, None); // B was evicted
+        assert_eq!(c.misses(), 4);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let c = FeatureCache::new(0);
+        let mut rng = rng();
+        let _ = c.get_or_fit(2, 0.5, 16, 3.0, &mut rng, None);
+        let _ = c.get_or_fit(2, 0.5, 16, 3.0, &mut rng, None);
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn metrics_counters_exported() {
+        let c = FeatureCache::new(2);
+        let m = Registry::default();
+        let mut rng = rng();
+        let _ = c.get_or_fit(2, 0.5, 16, 3.0, &mut rng, Some(&m));
+        let _ = c.get_or_fit(2, 0.5, 16, 3.0, &mut rng, Some(&m));
+        assert_eq!(m.counter("service.feature_cache.misses").get(), 1);
+        assert_eq!(m.counter("service.feature_cache.hits").get(), 1);
+    }
+}

@@ -14,17 +14,26 @@
 //!   size-or-deadline policy a serving stack (vLLM-style) uses. Batching
 //!   matters here because requests with the same (dim, eps) *share the
 //!   Lemma-1 anchor draw*, amortising feature-map setup across a batch.
+//! * **Feature-map cache** ([`cache`]): the amortisation is made explicit
+//!   and cross-batch — fitted `GaussianFeatureMap`s are cached by
+//!   `(dim, eps, r)` and reused whenever the cached radius covers the
+//!   request's data; hit/miss counters are exported through the metrics
+//!   registry (`service.feature_cache.*`).
 //! * **Backpressure**: the submit queue is bounded (`queue_depth`);
 //!   overflow sheds with [`Error::Service`] instead of queueing unboundedly.
 //! * **Workers** solve each request with the native factored-kernel
-//!   Sinkhorn (O(r(n+m)) per iteration).
+//!   Sinkhorn (O(r(n+m)) per iteration); `solver_threads` additionally
+//!   parallelises each solve's matvecs and feature evaluation over the
+//!   intra-solve pool ([`crate::runtime::pool`]).
 //!
 //! Everything is std::thread + mpsc (the offline crate set has no tokio);
 //! for a compute-bound service this is the right tool anyway.
 
-mod batcher;
+pub mod batcher;
+pub mod cache;
 
 pub use batcher::{Batch, BatcherPolicy};
+pub use cache::{FeatureCache, FeatureKey};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -34,11 +43,11 @@ use std::time::Instant;
 use crate::config::ServiceConfig;
 use crate::data::Measure;
 use crate::error::{Error, Result};
-use crate::features::GaussianFeatureMap;
 use crate::kernels::FactoredKernel;
 use crate::metrics::Registry;
 use crate::rng::Rng;
-use crate::sinkhorn::{sinkhorn, sinkhorn_divergence};
+use crate::runtime::pool::Pool;
+use crate::sinkhorn::sinkhorn;
 
 /// A divergence request: two measures on the same ground space.
 pub struct Request {
@@ -183,15 +192,19 @@ impl Service {
             );
         }
 
+        // Shared feature-map cache (one per service, all workers).
+        let cache = Arc::new(FeatureCache::new(cfg.cache_capacity));
+
         // Worker pool.
         for w in 0..cfg.workers.max(1) {
             let rx = batch_rx.clone();
             let metrics = metrics.clone();
             let cfg = cfg.clone();
+            let cache = cache.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("ls-worker-{w}"))
-                    .spawn(move || worker_loop(w as u64, rx, cfg, metrics))
+                    .spawn(move || worker_loop(w as u64, rx, cfg, metrics, cache))
                     .expect("spawn worker"),
             );
         }
@@ -236,6 +249,7 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Batch>>>,
     cfg: ServiceConfig,
     metrics: Arc<Registry>,
+    cache: Arc<FeatureCache>,
 ) {
     let mut rng = Rng::seed_from(0xC0FFEE ^ worker_id);
     loop {
@@ -248,11 +262,11 @@ fn worker_loop(
         };
         let bsize = batch.requests.len();
         metrics.histogram("service.batch_size").observe_us(bsize as u64);
-        // Amortise the anchor draw across the batch: all requests with the
-        // same dim share one Lemma-1 anchor set (scaled per-request radius
-        // is handled by taking the max radius in the group).
+        // The anchor draw is amortised through the shared feature-map
+        // cache: requests with the same (dim, eps, r) reuse one Lemma-1
+        // anchor set, within a batch and across batches/workers alike.
         for req in batch.requests {
-            let result = solve_one(&req, &cfg, &mut rng, bsize);
+            let result = solve_one(&req, &cfg, &mut rng, bsize, &cache, &metrics);
             // Record metrics BEFORE replying: a client that checks the
             // registry right after `wait()` must see its own request.
             metrics.counter("service.completed").inc();
@@ -269,31 +283,40 @@ fn solve_one(
     cfg: &ServiceConfig,
     rng: &mut Rng,
     batch_size: usize,
+    cache: &FeatureCache,
+    metrics: &Registry,
 ) -> Result<Response> {
     let mut skcfg = cfg.sinkhorn.clone();
     if let Some(e) = req.epsilon {
         skcfg.epsilon = e;
     }
     let eps = skcfg.epsilon;
-    let map = GaussianFeatureMap::fit(&req.mu, &req.nu, eps, cfg.num_features, rng);
+    let radius = req.mu.radius().max(req.nu.radius());
+    let map =
+        cache.get_or_fit(req.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
+    // Intra-solve parallelism for this request's matvecs/features.
+    let pool = Pool::new(cfg.solver_threads);
     // Stabilised factors: arbitrary client data must not underflow f32.
-    let k_xy = FactoredKernel::from_measures_stabilized(&map, &req.mu, &req.nu);
-    let k_xx = FactoredKernel::from_measures_stabilized(&map, &req.mu, &req.mu);
-    let k_yy = FactoredKernel::from_measures_stabilized(&map, &req.nu, &req.nu);
-    let sol_xy = sinkhorn(&k_xy, &req.mu.weights, &req.nu.weights, &skcfg)?;
-    let div = sinkhorn_divergence(
-        &k_xy,
-        &k_xx,
-        &k_yy,
-        &req.mu.weights,
-        &req.nu.weights,
-        &skcfg,
-    )?;
+    let k_xy = FactoredKernel::from_measures_stabilized_pooled(&*map, &req.mu, &req.nu, pool);
+    let k_xx = FactoredKernel::from_measures_stabilized_pooled(&*map, &req.mu, &req.mu, pool);
+    let k_yy = FactoredKernel::from_measures_stabilized_pooled(&*map, &req.nu, &req.nu, pool);
+    // Three explicit solves (not sinkhorn() + sinkhorn_divergence(),
+    // which would solve the xy problem twice): the Eq. (2) divergence is
+    // assembled from the objectives, and the solves run concurrently
+    // when `sinkhorn.threads` allows.
+    let solve_pool = Pool::new(skcfg.threads);
+    let (r_xy, r_xx, r_yy) = solve_pool.join3(
+        || sinkhorn(&k_xy, &req.mu.weights, &req.nu.weights, &skcfg),
+        || sinkhorn(&k_xx, &req.mu.weights, &req.mu.weights, &skcfg),
+        || sinkhorn(&k_yy, &req.nu.weights, &req.nu.weights, &skcfg),
+    );
+    let (sol_xy, sol_xx, sol_yy) = (r_xy?, r_xx?, r_yy?);
+    let div = sol_xy.objective - 0.5 * (sol_xx.objective + sol_yy.objective);
     Ok(Response {
         id: req.id,
         divergence: div,
         w_xy: sol_xy.objective,
-        iterations: sol_xy.iterations,
+        iterations: sol_xy.iterations + sol_xx.iterations + sol_yy.iterations,
         latency_us: req.enqueued.elapsed().as_micros() as u64,
         batch_size,
     })
@@ -309,8 +332,10 @@ mod tests {
         ServiceConfig {
             workers,
             batcher: BatcherConfig { max_batch: 4, max_delay_us: 200, queue_depth: 64 },
-            sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 300, tol: 1e-4, check_every: 10 },
+            sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 300, tol: 1e-4, check_every: 10, threads: 1 },
             num_features: 128,
+            solver_threads: 1,
+            cache_capacity: 8,
         }
     }
 
@@ -380,8 +405,10 @@ mod tests {
         let cfg = ServiceConfig {
             workers: 1,
             batcher: BatcherConfig { max_batch: 1, max_delay_us: 10, queue_depth: 2 },
-            sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 2000, tol: 0.0, check_every: 100 },
+            sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 2000, tol: 0.0, check_every: 100, threads: 1 },
             num_features: 256,
+            solver_threads: 1,
+            cache_capacity: 8,
         };
         let svc = Service::start(cfg);
         let h = svc.handle();
@@ -405,6 +432,65 @@ mod tests {
         }
         drop(h);
         svc.shutdown();
+    }
+
+    #[test]
+    fn feature_cache_hits_across_requests() {
+        // Same (dim, eps, r) and same data => first request fits, the
+        // rest reuse the cached map; counters are exported via metrics.
+        let svc = Service::start(test_cfg(2));
+        let h = svc.handle();
+        let (mu, nu) = clouds(0, 40);
+        for _ in 0..5 {
+            h.divergence(mu.clone(), nu.clone()).unwrap();
+        }
+        let m = h.metrics_text();
+        assert!(m.contains("service.feature_cache.misses = 1"), "{m}");
+        assert!(m.contains("service.feature_cache.hits = 4"), "{m}");
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cache_disabled_still_serves() {
+        let mut cfg = test_cfg(1);
+        cfg.cache_capacity = 0;
+        let svc = Service::start(cfg);
+        let h = svc.handle();
+        let (mu, nu) = clouds(2, 30);
+        for _ in 0..3 {
+            h.divergence(mu.clone(), nu.clone()).unwrap();
+        }
+        let m = h.metrics_text();
+        assert!(m.contains("service.feature_cache.misses = 3"), "{m}");
+        assert!(!m.contains("service.feature_cache.hits"), "{m}");
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn solver_threads_do_not_change_results() {
+        // The intra-solve pool is numerically transparent: the same
+        // request solved with 1 and 4 solver threads returns the same
+        // divergence bit for bit. n = 700 crosses the pooled-matvec and
+        // parallel-feature thresholds so threads = 4 really runs the
+        // chunked paths (the multi-chunk transpose is covered by
+        // rust/tests/parallel_equivalence.rs at n = 1500).
+        let solve = |threads: usize| {
+            let mut cfg = test_cfg(1);
+            cfg.solver_threads = threads;
+            cfg.sinkhorn.max_iters = 60;
+            let svc = Service::start(cfg);
+            let h = svc.handle();
+            let (mu, nu) = clouds(7, 700);
+            let d = h.divergence(mu, nu).unwrap().divergence;
+            drop(h);
+            svc.shutdown();
+            d
+        };
+        let d1 = solve(1);
+        let d4 = solve(4);
+        assert_eq!(d1.to_bits(), d4.to_bits(), "{d1} vs {d4}");
     }
 
     #[test]

@@ -1,50 +1,85 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline crate set has no
+//! `thiserror`); the messages match the previous derive-generated ones
+//! exactly so log scrapers and tests keep working.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the linear-sinkhorn stack.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Sinkhorn iterations produced a non-finite scaling (typically a dense
     /// kernel with underflowed rows at very small epsilon, or a Nyström
     /// approximation with non-positive entries — the failure mode the
     /// paper's positive features avoid by construction).
-    #[error("sinkhorn diverged at iteration {iter}: {reason}")]
     SinkhornDiverged { iter: usize, reason: String },
 
     /// A low-rank kernel approximation lost positivity (Nyström baseline).
-    #[error("kernel approximation is not positive: min entry {min_entry:e} (rank {rank})")]
     NotPositive { min_entry: f64, rank: usize },
 
     /// Shape mismatch between operands.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Config file / CLI problems.
-    #[error("config: {0}")]
     Config(String),
 
     /// AOT artifact registry problems (missing file, bad manifest…).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// The coordinator rejected a request (shed load / shut down).
-    #[error("service: {0}")]
     Service(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
 }
 
-/// Crate-wide result alias.
-pub type Result<T> = std::result::Result<T, Error>;
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::SinkhornDiverged { iter, reason } => {
+                write!(f, "sinkhorn diverged at iteration {iter}: {reason}")
+            }
+            Error::NotPositive { min_entry, rank } => write!(
+                f,
+                "kernel approximation is not positive: min entry {min_entry:e} (rank {rank})"
+            ),
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Config(s) => write!(f, "config: {s}"),
+            Error::Artifact(s) => write!(f, "artifact: {s}"),
+            Error::Runtime(s) => write!(f, "runtime: {s}"),
+            Error::Service(s) => write!(f, "service: {s}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            // Matches thiserror's `#[error(transparent)]`: Display AND
+            // source() both forward to the inner error, so chain
+            // printers don't show the io message twice.
+            Error::Io(e) => e.source(),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))
     }
 }
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -15,11 +15,68 @@
 use crate::data::Measure;
 use crate::linalg::Mat;
 use crate::rng::Rng;
+use crate::runtime::pool::Pool;
 use crate::special;
 
 mod learned;
 
 pub use learned::LearnedFeatureMap;
+
+/// Rows evaluated per parallel task of [`par_feature_matrix`] /
+/// [`par_log_feature_matrix`]: one row costs O(r d), so a few dozen rows
+/// per task keeps queue traffic negligible while load-balancing well.
+const FEAT_ROWS_PER_TASK: usize = 32;
+
+/// Evaluate `phi` on every row of `points` in parallel over `pool`.
+///
+/// Rows are independent and each is produced by the same
+/// [`FeatureMap::eval_into`] call as the serial
+/// [`FeatureMap::feature_matrix`], so the result is bitwise identical to
+/// the serial path for every pool size. Serial pools and small inputs
+/// fall through to the trait method directly.
+pub fn par_feature_matrix<F>(map: &F, points: &Mat, pool: &Pool) -> Mat
+where
+    F: FeatureMap + Sync + ?Sized,
+{
+    let n = points.rows();
+    let r = map.num_features();
+    if pool.threads() <= 1 || n < 2 * FEAT_ROWS_PER_TASK || r == 0 {
+        return map.feature_matrix(points);
+    }
+    let mut out = Mat::zeros(n, r);
+    let tasks: Vec<(usize, &mut [f32])> =
+        out.data_mut().chunks_mut(FEAT_ROWS_PER_TASK * r).enumerate().collect();
+    pool.run_tasks(tasks, |(c, block)| {
+        let base = c * FEAT_ROWS_PER_TASK;
+        for (i, row) in block.chunks_mut(r).enumerate() {
+            map.eval_into(points.row(base + i), row);
+        }
+    });
+    out
+}
+
+/// Parallel [`FeatureMap::log_feature_matrix`] — same contract as
+/// [`par_feature_matrix`], evaluating unclamped log-features instead.
+pub fn par_log_feature_matrix<F>(map: &F, points: &Mat, pool: &Pool) -> Mat
+where
+    F: FeatureMap + Sync + ?Sized,
+{
+    let n = points.rows();
+    let r = map.num_features();
+    if pool.threads() <= 1 || n < 2 * FEAT_ROWS_PER_TASK || r == 0 {
+        return map.log_feature_matrix(points);
+    }
+    let mut out = Mat::zeros(n, r);
+    let tasks: Vec<(usize, &mut [f32])> =
+        out.data_mut().chunks_mut(FEAT_ROWS_PER_TASK * r).enumerate().collect();
+    pool.run_tasks(tasks, |(c, block)| {
+        let base = c * FEAT_ROWS_PER_TASK;
+        for (i, row) in block.chunks_mut(r).enumerate() {
+            map.log_eval_into(points.row(base + i), row);
+        }
+    });
+    out
+}
 
 /// Underflow floor shared with the python oracle (`ref.LOG_FLOOR`):
 /// exp(-80) ~ 1.8e-35 keeps every feature a normal positive f32.

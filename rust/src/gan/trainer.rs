@@ -70,6 +70,7 @@ impl GanTrainer {
             max_iters: cfg.sinkhorn_iters,
             tol: 1e-7,
             check_every: cfg.sinkhorn_iters.max(1),
+            threads: 1,
         };
         GanTrainer {
             opt_gen: Adam::new(generator.num_params(), cfg.lr),

@@ -15,9 +15,10 @@
 
 use crate::data::Measure;
 use crate::error::{Error, Result};
-use crate::features::FeatureMap;
+use crate::features::{self, FeatureMap};
 use crate::linalg::{self, Mat};
 use crate::rng::Rng;
+use crate::runtime::pool::Pool;
 
 /// Matrix-free kernel operator.
 pub trait KernelOp {
@@ -139,6 +140,11 @@ impl KernelOp for DenseKernel {
 }
 
 /// The paper's factored kernel `K = Phi_x Phi_y^T` with positive factors.
+///
+/// The kernel is `Sync` (scratch lives behind a `Mutex`), so the three
+/// transport problems of a Sinkhorn divergence can be solved concurrently
+/// on three kernels, and applies may additionally row-chunk their matvecs
+/// over an embedded [`Pool`] (see [`FactoredKernel::with_pool`]).
 pub struct FactoredKernel {
     /// (n, r) strictly positive.
     pub phi_x: Mat,
@@ -147,13 +153,31 @@ pub struct FactoredKernel {
     /// `K_true = exp(log_scale) * phi_x phi_y^T` (0 for unscaled factors).
     log_scale: f64,
     /// Scratch for the r-vector between the two matvecs.
-    scratch: std::cell::RefCell<Vec<f32>>,
+    scratch: std::sync::Mutex<Vec<f32>>,
+    /// Intra-apply parallelism policy (serial by default).
+    pool: Pool,
 }
 
 impl FactoredKernel {
     /// Build by evaluating a positive feature map on both clouds.
     pub fn from_measures<F: FeatureMap>(map: &F, mu: &Measure, nu: &Measure) -> Self {
         Self::from_factors(map.feature_matrix(&mu.points), map.feature_matrix(&nu.points))
+    }
+
+    /// [`FactoredKernel::from_measures`] with the feature evaluation
+    /// parallelised over `pool`; the kernel keeps the pool for its own
+    /// applies. Bitwise-identical factors to the serial path.
+    pub fn from_measures_pooled<F: FeatureMap + Sync>(
+        map: &F,
+        mu: &Measure,
+        nu: &Measure,
+        pool: Pool,
+    ) -> Self {
+        Self::from_factors(
+            features::par_feature_matrix(map, &mu.points, &pool),
+            features::par_feature_matrix(map, &nu.points, &pool),
+        )
+        .with_pool(pool)
     }
 
     /// Build with f32 underflow stabilisation: log-features are shifted so
@@ -165,6 +189,20 @@ impl FactoredKernel {
         let lx = map.log_feature_matrix(&mu.points);
         let ly = map.log_feature_matrix(&nu.points);
         Self::from_log_factors(lx, ly)
+    }
+
+    /// [`FactoredKernel::from_measures_stabilized`] with the log-feature
+    /// evaluation parallelised over `pool`; the kernel keeps the pool for
+    /// its own applies.
+    pub fn from_measures_stabilized_pooled<F: FeatureMap + Sync>(
+        map: &F,
+        mu: &Measure,
+        nu: &Measure,
+        pool: Pool,
+    ) -> Self {
+        let lx = features::par_log_feature_matrix(map, &mu.points, &pool);
+        let ly = features::par_log_feature_matrix(map, &nu.points, &pool);
+        Self::from_log_factors(lx, ly).with_pool(pool)
     }
 
     /// Build from log-feature matrices, normalising each by its max.
@@ -187,7 +225,8 @@ impl FactoredKernel {
             phi_x: lx,
             phi_y: ly,
             log_scale: sx + sy,
-            scratch: std::cell::RefCell::new(vec![0.0; r]),
+            scratch: std::sync::Mutex::new(vec![0.0; r]),
+            pool: Pool::serial(),
         }
     }
 
@@ -196,7 +235,26 @@ impl FactoredKernel {
     pub fn from_factors(phi_x: Mat, phi_y: Mat) -> Self {
         assert_eq!(phi_x.cols(), phi_y.cols(), "factor rank mismatch");
         let r = phi_x.cols();
-        FactoredKernel { phi_x, phi_y, log_scale: 0.0, scratch: std::cell::RefCell::new(vec![0.0; r]) }
+        FactoredKernel {
+            phi_x,
+            phi_y,
+            log_scale: 0.0,
+            scratch: std::sync::Mutex::new(vec![0.0; r]),
+            pool: Pool::serial(),
+        }
+    }
+
+    /// Set the intra-apply parallelism policy. The pooled matvec kernels
+    /// are deterministic in the thread count, so this changes wall-clock
+    /// only, never the numbers (rust/tests/parallel_equivalence.rs).
+    pub fn with_pool(mut self, pool: Pool) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// The kernel's parallelism policy.
+    pub fn pool(&self) -> Pool {
+        self.pool
     }
 
     /// Feature count r.
@@ -221,15 +279,15 @@ impl KernelOp for FactoredKernel {
 
     fn apply_into(&self, v: &[f32], out: &mut [f32]) {
         // K v = Phi_x (Phi_y^T v): two skinny matvecs, O(r(n+m)).
-        let mut t = self.scratch.borrow_mut();
-        linalg::matvec_t_into(&self.phi_y, v, &mut t);
-        linalg::matvec_into(&self.phi_x, &t, out);
+        let mut t = self.scratch.lock().unwrap();
+        linalg::matvec_t_into_pooled(&self.phi_y, v, &mut t, &self.pool);
+        linalg::matvec_into_pooled(&self.phi_x, &t, out, &self.pool);
     }
 
     fn apply_t_into(&self, u: &[f32], out: &mut [f32]) {
-        let mut t = self.scratch.borrow_mut();
-        linalg::matvec_t_into(&self.phi_x, u, &mut t);
-        linalg::matvec_into(&self.phi_y, &t, out);
+        let mut t = self.scratch.lock().unwrap();
+        linalg::matvec_t_into_pooled(&self.phi_x, u, &mut t, &self.pool);
+        linalg::matvec_into_pooled(&self.phi_y, &t, out, &self.pool);
     }
 
     fn min_entry(&self) -> f64 {
@@ -656,7 +714,7 @@ mod debug_nystrom2 {
                 let mut rng = Rng::seed_from(3);
                 let (mu, nu) = data::gaussian_blobs(2000, &mut rng);
                 let nk = NystromKernel::from_measures(&mu, &nu, eps, rank, &mut rng);
-                let cfg = SinkhornConfig { epsilon: eps, max_iters: 2000, tol: 1e-4, check_every: 10 };
+                let cfg = SinkhornConfig { epsilon: eps, max_iters: 2000, tol: 1e-4, check_every: 10, threads: 1 };
                 match sinkhorn(&nk, &mu.weights, &nu.weights, &cfg) {
                     Ok(s) => println!("eps={eps} rank={rank}: OK obj={:.4} iters={}", s.objective, s.iterations),
                     Err(e) => println!("eps={eps} rank={rank}: FAIL {e:.60}"),

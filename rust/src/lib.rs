@@ -22,6 +22,18 @@
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation, and the binary is self-contained afterwards.
 //!
+//! Two cross-cutting L3 subsystems (see README.md and EXPERIMENTS.md
+//! §Parallel scaling):
+//!
+//! * [`runtime::pool`] — the intra-solve parallel execution layer:
+//!   row-chunked pooled matvecs ([`linalg`]), parallel feature
+//!   evaluation ([`features::par_feature_matrix`]) and the concurrent
+//!   three-problem divergence ([`sinkhorn::sinkhorn_divergence`]),
+//!   all deterministic in the thread count.
+//! * [`coordinator::cache`] — the shared `(dim, eps, r)`-keyed
+//!   feature-map cache that amortises the Lemma-1 anchor draw across
+//!   requests, with hit/miss counters in [`metrics`].
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -69,6 +81,7 @@ pub mod prelude {
     pub use crate::kernels::{DenseKernel, FactoredKernel, KernelOp, NystromKernel};
     pub use crate::linalg::Mat;
     pub use crate::rng::Rng;
+    pub use crate::runtime::pool::Pool;
     pub use crate::sinkhorn::{
         sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, SinkhornSolution,
     };

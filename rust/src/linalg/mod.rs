@@ -6,15 +6,17 @@
 //! The hot paths (`matvec`, `matvec_t`, `apply` in `kernels/`) are written
 //! to be allocation-free given caller-provided output buffers and blocked
 //! for cache/SIMD friendliness (the compiler auto-vectorises the inner
-//! `f32` loops; see EXPERIMENTS.md §Perf).
+//! `f32` loops; see EXPERIMENTS.md §Perf). The `_pooled` variants run the
+//! same kernels row-chunked over a [`crate::runtime::pool::Pool`] with
+//! thread-count-independent results (EXPERIMENTS.md §Parallel scaling).
 
 mod mat;
 mod ops;
 
 pub use mat::Mat;
 pub use ops::{
-    axpy, dot, l1_diff, l1_norm, logsumexp, matmul, matvec, matvec_into, matvec_t,
-    matvec_t_into, max_abs_diff, scale, softmax_inplace, sum,
+    axpy, dot, l1_diff, l1_norm, logsumexp, matmul, matvec, matvec_into, matvec_into_pooled,
+    matvec_t, matvec_t_into, matvec_t_into_pooled, max_abs_diff, scale, softmax_inplace, sum,
 };
 
 #[cfg(test)]

@@ -2,8 +2,50 @@
 //! per-iteration cost of every Sinkhorn variant in this crate, so both are
 //! written as simple blocked loops the compiler auto-vectorises; the
 //! `_into` variants are allocation-free for the coordinator's hot loop.
+//!
+//! The `_pooled` variants run the same kernels row-chunked over a
+//! [`Pool`]. They preserve the serial accuracy contract — see the
+//! per-function docs — and their output never depends on the thread
+//! count (EXPERIMENTS.md §Parallel scaling). One caveat to the
+//! allocation-free rule: the pooled transposed matvec allocates its
+//! per-chunk partial buffers when the row count exceeds one chunk
+//! (1024 rows) — a few KB against a millisecond-scale apply.
 
 use super::Mat;
+use crate::runtime::pool::Pool;
+
+/// Rows per parallel task of [`matvec_into_pooled`]. Small enough to load-
+/// balance ragged pools, large enough that task-queue traffic is noise.
+const PAR_ROW_CHUNK: usize = 256;
+
+/// Rows per partial accumulator of [`matvec_t_into_pooled`]. This is a
+/// *fixed* grid — chunk boundaries never depend on the thread count — so
+/// the chunked reduction is deterministic for any pool size.
+const PAR_T_CHUNK: usize = 1024;
+
+/// One row dot of the blocked accumulation scheme (shared by the serial
+/// and pooled matvecs so both produce bitwise-identical rows).
+#[inline]
+fn row_dot(row: &[f32], v: &[f32]) -> f32 {
+    const BLOCK: usize = 64;
+    let mut acc = 0.0f64;
+    let mut rb = row.chunks_exact(BLOCK);
+    let mut vb = v.chunks_exact(BLOCK);
+    for (r64, v64) in (&mut rb).zip(&mut vb) {
+        // 8 independent f32 partials over the 64-element block.
+        let mut p = [0.0f32; 8];
+        for (rc, vc) in r64.chunks_exact(8).zip(v64.chunks_exact(8)) {
+            for l in 0..8 {
+                p[l] += rc[l] * vc[l];
+            }
+        }
+        acc += p.iter().map(|&x| x as f64).sum::<f64>();
+    }
+    for (r, w) in rb.remainder().iter().zip(vb.remainder()) {
+        acc += (*r as f64) * (*w as f64);
+    }
+    acc as f32
+}
 
 /// `out = a @ v` without allocating.
 ///
@@ -18,27 +60,33 @@ use super::Mat;
 pub fn matvec_into(a: &Mat, v: &[f32], out: &mut [f32]) {
     assert_eq!(a.cols(), v.len(), "matvec: {}x{} @ {}", a.rows(), a.cols(), v.len());
     assert_eq!(a.rows(), out.len(), "matvec: output length");
-    const BLOCK: usize = 64;
     for (i, o) in out.iter_mut().enumerate() {
-        let row = a.row(i);
-        let mut acc = 0.0f64;
-        let mut rb = row.chunks_exact(BLOCK);
-        let mut vb = v.chunks_exact(BLOCK);
-        for (r64, v64) in (&mut rb).zip(&mut vb) {
-            // 8 independent f32 partials over the 64-element block.
-            let mut p = [0.0f32; 8];
-            for (rc, vc) in r64.chunks_exact(8).zip(v64.chunks_exact(8)) {
-                for l in 0..8 {
-                    p[l] += rc[l] * vc[l];
-                }
-            }
-            acc += p.iter().map(|&x| x as f64).sum::<f64>();
-        }
-        for (r, w) in rb.remainder().iter().zip(vb.remainder()) {
-            acc += (*r as f64) * (*w as f64);
-        }
-        *o = acc as f32;
+        *o = row_dot(a.row(i), v);
     }
+}
+
+/// Row-chunked parallel [`matvec_into`].
+///
+/// Rows are independent, so each task computes a contiguous block of
+/// output rows with the *same* per-row kernel as the serial path: the
+/// result is bitwise identical to [`matvec_into`] for every pool size
+/// (property-tested in `rust/tests/parallel_equivalence.rs`). Small
+/// problems and serial pools fall through to the serial loop to skip the
+/// spawn overhead.
+pub fn matvec_into_pooled(a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
+    assert_eq!(a.cols(), v.len(), "matvec: {}x{} @ {}", a.rows(), a.cols(), v.len());
+    assert_eq!(a.rows(), out.len(), "matvec: output length");
+    if pool.threads() <= 1 || a.rows() < 2 * PAR_ROW_CHUNK {
+        matvec_into(a, v, out);
+        return;
+    }
+    let tasks: Vec<(usize, &mut [f32])> = out.chunks_mut(PAR_ROW_CHUNK).enumerate().collect();
+    pool.run_tasks(tasks, |(c, chunk)| {
+        let base = c * PAR_ROW_CHUNK;
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = row_dot(a.row(base + i), v);
+        }
+    });
 }
 
 /// `a @ v`, allocating the output.
@@ -46,6 +94,36 @@ pub fn matvec(a: &Mat, v: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0; a.rows()];
     matvec_into(a, v, &mut out);
     out
+}
+
+/// Accumulate `out += a[lo..hi]^T @ v[lo..hi]` with the 4-row saxpy
+/// blocking (shared by the serial and pooled transposed matvecs; `out`
+/// must be pre-zeroed by the caller).
+fn saxpy_rows(a: &Mat, v: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
+    let k = a.cols();
+    let data = a.data();
+    let mut i = lo;
+    while i + 4 <= hi {
+        let (v0, v1, v2, v3) = (v[i], v[i + 1], v[i + 2], v[i + 3]);
+        let r0 = &data[i * k..(i + 1) * k];
+        let r1 = &data[(i + 1) * k..(i + 2) * k];
+        let r2 = &data[(i + 2) * k..(i + 3) * k];
+        let r3 = &data[(i + 3) * k..(i + 4) * k];
+        for j in 0..k {
+            out[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
+        }
+        i += 4;
+    }
+    while i < hi {
+        let vi = v[i];
+        if vi != 0.0 {
+            let row = a.row(i);
+            for (o, &r) in out.iter_mut().zip(row) {
+                *o += r * vi;
+            }
+        }
+        i += 1;
+    }
 }
 
 /// `out = a^T @ v` without allocating and without transposing: accumulate
@@ -57,28 +135,50 @@ pub fn matvec_t_into(a: &Mat, v: &[f32], out: &mut [f32]) {
     assert_eq!(n, v.len(), "matvec_t: {}x{} ^T @ {}", n, k, v.len());
     assert_eq!(k, out.len(), "matvec_t: output length");
     out.iter_mut().for_each(|x| *x = 0.0);
-    let data = a.data();
-    let mut i = 0;
-    while i + 4 <= n {
-        let (v0, v1, v2, v3) = (v[i], v[i + 1], v[i + 2], v[i + 3]);
-        let r0 = &data[i * k..(i + 1) * k];
-        let r1 = &data[(i + 1) * k..(i + 2) * k];
-        let r2 = &data[(i + 2) * k..(i + 3) * k];
-        let r3 = &data[(i + 3) * k..(i + 4) * k];
-        for j in 0..k {
-            out[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
-        }
-        i += 4;
+    saxpy_rows(a, v, 0, n, out);
+}
+
+/// Row-chunked parallel [`matvec_t_into`].
+///
+/// Unlike the plain matvec, the transposed apply reduces *across* rows, so
+/// parallel execution needs per-chunk partial outputs. The chunk grid is
+/// fixed (`PAR_T_CHUNK` = 1024 rows per partial, independent of the thread
+/// count) and partials are combined in chunk-index order with f64
+/// accumulation on one thread — so the result is deterministic and
+/// identical for every pool size, and matches the serial kernel to the
+/// chunked-reduction reordering — typically ~1e-6 and bounded well below
+/// 1e-5 relative on Sinkhorn factors, whose entries are non-negative
+/// (property-tested in `rust/tests/parallel_equivalence.rs`).
+/// Single-chunk problems (n ≤ 1024) take the serial allocation-free
+/// path directly — a one-partial reduce would be bitwise equal anyway,
+/// so thread invariance is unaffected.
+pub fn matvec_t_into_pooled(a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
+    let (n, k) = a.shape();
+    assert_eq!(n, v.len(), "matvec_t: {}x{} ^T @ {}", n, k, v.len());
+    assert_eq!(k, out.len(), "matvec_t: output length");
+    // Single-chunk problems reduce over one partial, which is bitwise
+    // equal to the serial kernel — take the allocation-free path for
+    // every pool size (thread invariance is preserved: the path depends
+    // only on n).
+    if n <= PAR_T_CHUNK {
+        matvec_t_into(a, v, out);
+        return;
     }
-    while i < n {
-        let vi = v[i];
-        if vi != 0.0 {
-            let row = a.row(i);
-            for (o, &r) in out.iter_mut().zip(row) {
-                *o += r * vi;
-            }
+    let nchunks = (n + PAR_T_CHUNK - 1) / PAR_T_CHUNK;
+    let mut partials: Vec<Vec<f32>> = (0..nchunks).map(|_| vec![0.0f32; k]).collect();
+    let tasks: Vec<(usize, &mut Vec<f32>)> = partials.iter_mut().enumerate().collect();
+    pool.run_tasks(tasks, |(c, buf)| {
+        let lo = c * PAR_T_CHUNK;
+        let hi = (lo + PAR_T_CHUNK).min(n);
+        saxpy_rows(a, v, lo, hi, buf);
+    });
+    // Deterministic single-thread reduce in chunk order, f64 accumulation.
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for p in &partials {
+            acc += p[j] as f64;
         }
-        i += 1;
+        *o = acc as f32;
     }
 }
 

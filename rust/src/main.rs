@@ -58,22 +58,29 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
             .opt("n", "2000", "samples per cloud")
             .opt("eps", "0.5", "entropic regularisation")
             .opt("features", "512", "number of positive random features r")
+            .opt("threads", "1", "solver threads (0 = auto-size to the machine)")
             .opt("seed", "0", "RNG seed"),
         argv,
     );
     let (n, eps, r, seed) = (a.get_usize("n"), a.get_f64("eps"), a.get_usize("features"), a.get_u64("seed"));
+    // One --threads budget split across the two parallelism levels: up
+    // to 3 concurrent solves, with the remainder row-chunking each
+    // solve's matvecs (3-way * kernel pool stays near the budget
+    // instead of multiplying to 3*T).
+    let threads = Pool::new(a.get_usize("threads")).threads();
+    let kernel_pool = Pool::new(((threads + 2) / 3).max(1));
     let mut rng = Rng::seed_from(seed);
     let (mu, nu) = data::gaussian_blobs(n, &mut rng);
     let sw = Stopwatch::start();
     let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
-    let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
-    let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
-    let k_yy = FactoredKernel::from_measures(&map, &nu, &nu);
-    let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
+    let k_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, kernel_pool);
+    let k_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, kernel_pool);
+    let k_yy = FactoredKernel::from_measures_pooled(&map, &nu, &nu, kernel_pool);
+    let cfg = SinkhornConfig { epsilon: eps, threads: threads.min(3), ..Default::default() };
     match sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg) {
         Ok(d) => {
             println!(
-                "sinkhorn divergence (n={n}, eps={eps}, r={r}): {d:.6}  [{:.1} ms]",
+                "sinkhorn divergence (n={n}, eps={eps}, r={r}, threads={threads}): {d:.6}  [{:.1} ms]",
                 sw.elapsed_secs() * 1e3
             );
             0
@@ -236,16 +243,29 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     let a = parse(
         ArgSpec::new("serve", "start the divergence service and drive a workload through it")
             .opt("workers", "4", "worker threads")
+            .opt("solver-threads", "1", "intra-solve threads per worker (0 = auto)")
+            .opt("cache", "8", "feature-map cache capacity (0 = disabled)")
             .opt("requests", "32", "number of requests to send")
             .opt("n", "500", "samples per cloud per request")
-            .opt("config", "", "optional TOML config file"),
+            .opt("config", "", "optional TOML config file (replaces ALL service flags)"),
         argv,
     );
-    let mut cfg = ServiceConfig { workers: a.get_usize("workers"), ..Default::default() };
+    let mut cfg = ServiceConfig {
+        workers: a.get_usize("workers"),
+        solver_threads: a.get_usize("solver-threads"),
+        cache_capacity: a.get_usize("cache"),
+        ..Default::default()
+    };
     let cfg_path = a.get_str("config");
     if !cfg_path.is_empty() {
         match linear_sinkhorn::config::ConfigDoc::parse_file(cfg_path) {
-            Ok(doc) => cfg = ServiceConfig::from_doc(&doc),
+            Ok(doc) => {
+                cfg = ServiceConfig::from_doc(&doc);
+                eprintln!(
+                    "note: --config replaces all service flags \
+                     (--workers/--solver-threads/--cache ignored)"
+                );
+            }
             Err(e) => {
                 eprintln!("config error: {e}");
                 return 2;

@@ -10,10 +10,15 @@
 //!   hashes) written by the AOT pipeline.
 //! * [`Engine`] — a PJRT CPU client plus a compile cache: each artifact is
 //!   compiled once and re-executed many times.
+//! * [`pool`] — the intra-solve parallel execution layer (scoped worker
+//!   pool) used by the native hot paths; see EXPERIMENTS.md §Parallel
+//!   scaling for its measured effect.
 
 mod json;
+pub mod pool;
 
 pub use json::{Json, JsonError};
+pub use pool::Pool;
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};

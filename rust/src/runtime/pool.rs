@@ -1,0 +1,207 @@
+//! Intra-solve parallel execution layer: a small scoped worker pool on
+//! `std::thread` (the offline crate set has no rayon), shared by the
+//! row-chunked matvec variants in [`crate::linalg`], the parallel feature
+//! evaluation in [`crate::features`], and the concurrent three-problem
+//! divergence solve in [`crate::sinkhorn::sinkhorn_divergence`].
+//!
+//! ## Design
+//!
+//! A [`Pool`] is a *policy*, not a set of live threads: it records how many
+//! workers a parallel region may use, and each region spawns that many
+//! scoped threads (`std::thread::scope`) that drain a shared task queue.
+//! Scoped spawning keeps the API free of `'static` bounds — tasks may
+//! borrow the caller's matrices and output buffers directly — at the cost
+//! of a few tens of microseconds of spawn overhead per region, which is
+//! noise against the millisecond-scale matvecs it parallelises (see
+//! EXPERIMENTS.md §Parallel scaling).
+//!
+//! ## Determinism / accuracy contract
+//!
+//! The pool itself never touches floating-point data, and the kernels
+//! built on it are written so that **results are independent of the thread
+//! count**: work is cut on a fixed chunk grid (not a thread-count-derived
+//! one) and reductions run over chunks in index order on a single thread
+//! (see [`crate::linalg::matvec_t_into_pooled`]). `Pool::new(1)` and
+//! `Pool::new(8)` therefore produce bitwise-identical outputs, which is
+//! what lets the service flip `solver_threads` in production without
+//! changing any numerical result — and what the property tests in
+//! `rust/tests/parallel_equivalence.rs` assert.
+//!
+//! A thread count of `0` means "auto": resolve to
+//! [`std::thread::available_parallelism`] at construction.
+
+use std::sync::Mutex;
+
+/// Worker-count policy for parallel regions. Copyable and cheap; embed it
+/// in kernels/configs freely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Default for Pool {
+    /// The default pool is serial — parallelism is strictly opt-in so that
+    /// library users and tests keep the historical single-thread
+    /// behaviour unless they ask otherwise.
+    fn default() -> Self {
+        Pool::serial()
+    }
+}
+
+impl Pool {
+    /// A pool that may use up to `threads` workers; `0` resolves to the
+    /// machine's available parallelism.
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: if threads == 0 { available_threads() } else { threads } }
+    }
+
+    /// The serial pool: every region runs inline on the caller's thread.
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    /// A pool sized to the machine (`available_parallelism`).
+    pub fn auto() -> Pool {
+        Pool::new(0)
+    }
+
+    /// The resolved worker count (always ≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads.max(1)
+    }
+
+    /// Run every task in `tasks`, using up to `threads()` scoped workers
+    /// draining a shared queue. Tasks may borrow caller state: the region
+    /// joins all workers before returning. Order of *execution* across
+    /// workers is unspecified; callers needing deterministic results must
+    /// make tasks independent (disjoint outputs) — see the module docs.
+    ///
+    /// Panics in a task propagate to the caller after all workers join.
+    pub fn run_tasks<T, F>(&self, tasks: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(T) + Sync,
+    {
+        let workers = self.threads().min(tasks.len());
+        if workers <= 1 {
+            for task in tasks {
+                f(task);
+            }
+            return;
+        }
+        let queue = Mutex::new(tasks.into_iter());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let task = {
+                        let mut q = queue.lock().unwrap();
+                        q.next()
+                    };
+                    match task {
+                        Some(t) => f(t),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+
+    /// Run three independent closures, concurrently when the pool allows
+    /// it (used for the three transport problems of the Sinkhorn
+    /// divergence, which share no state). Serial pools run them in order
+    /// on the caller's thread.
+    pub fn join3<FA, FB, FC, RA, RB, RC>(&self, fa: FA, fb: FB, fc: FC) -> (RA, RB, RC)
+    where
+        FA: FnOnce() -> RA,
+        FB: FnOnce() -> RB,
+        FC: FnOnce() -> RC,
+        FA: Send,
+        FB: Send,
+        FC: Send,
+        RA: Send,
+        RB: Send,
+        RC: Send,
+    {
+        match self.threads() {
+            0 | 1 => (fa(), fb(), fc()),
+            // Honor a 2-thread budget: one spawned worker, two closures
+            // on the caller's thread.
+            2 => std::thread::scope(|s| {
+                let hc = s.spawn(fc);
+                let ra = fa();
+                let rb = fb();
+                let rc = hc.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+                (ra, rb, rc)
+            }),
+            _ => std::thread::scope(|s| {
+                let hb = s.spawn(fb);
+                let hc = s.spawn(fc);
+                let ra = fa();
+                let rb = hb.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+                let rc = hc.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+                (ra, rb, rc)
+            }),
+        }
+    }
+}
+
+/// The machine's available parallelism (≥ 1; 1 when detection fails).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn zero_resolves_to_auto() {
+        assert!(Pool::new(0).threads() >= 1);
+        assert_eq!(Pool::auto().threads(), available_threads());
+        assert_eq!(Pool::serial().threads(), 1);
+        assert_eq!(Pool::default().threads(), 1);
+    }
+
+    #[test]
+    fn run_tasks_executes_every_task_once() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let n = 100usize;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_tasks((0..n).collect::<Vec<usize>>(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_can_fill_disjoint_chunks() {
+        let pool = Pool::new(4);
+        let mut out = vec![0u32; 64];
+        let tasks: Vec<(usize, &mut [u32])> = out.chunks_mut(16).enumerate().collect();
+        pool.run_tasks(tasks, |(c, chunk)| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (c * 16 + i) as u32;
+            }
+        });
+        assert_eq!(out, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn join3_returns_all_results() {
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            let (a, b, c) = pool.join3(|| 1 + 1, || "x".to_string(), || vec![3u8; 3]);
+            assert_eq!(a, 2);
+            assert_eq!(b, "x");
+            assert_eq!(c, vec![3, 3, 3]);
+        }
+    }
+
+    #[test]
+    fn run_tasks_empty_is_noop() {
+        Pool::new(4).run_tasks(Vec::<usize>::new(), |_| panic!("no tasks"));
+    }
+}

@@ -256,7 +256,7 @@ mod tests {
     use crate::sinkhorn::sinkhorn;
 
     fn cfg(eps: f64, tol: f64) -> SinkhornConfig {
-        SinkhornConfig { epsilon: eps, max_iters: 2000, tol, check_every: 1 }
+        SinkhornConfig { epsilon: eps, max_iters: 2000, tol, check_every: 1, threads: 1 }
     }
 
     #[test]
@@ -307,8 +307,8 @@ mod tests {
         let mut rng = Rng::seed_from(3);
         let (mu, nu) = data::gaussian_blobs(25, &mut rng);
         let k = DenseKernel::from_measures(&mu, &nu, 0.2);
-        let short = SinkhornConfig { epsilon: 0.2, max_iters: 3, tol: 0.0, check_every: 1 };
-        let long = SinkhornConfig { epsilon: 0.2, max_iters: 200, tol: 0.0, check_every: 1 };
+        let short = SinkhornConfig { epsilon: 0.2, max_iters: 3, tol: 0.0, check_every: 1, threads: 1 };
+        let long = SinkhornConfig { epsilon: 0.2, max_iters: 200, tol: 0.0, check_every: 1, threads: 1 };
         let s = sinkhorn_accelerated(&k, &mu.weights, &nu.weights, &short).unwrap();
         let l = sinkhorn_accelerated(&k, &mu.weights, &nu.weights, &long).unwrap();
         assert!(l.objective >= s.objective - 1e-9, "long {} short {}", l.objective, s.objective);

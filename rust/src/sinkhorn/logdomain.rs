@@ -143,7 +143,7 @@ mod tests {
     use crate::sinkhorn::sinkhorn;
 
     fn cfg(eps: f64) -> SinkhornConfig {
-        SinkhornConfig { epsilon: eps, max_iters: 3000, tol: 1e-6, check_every: 10 }
+        SinkhornConfig { epsilon: eps, max_iters: 3000, tol: 1e-6, check_every: 10, threads: 1 }
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::config::SinkhornConfig;
 use crate::error::{Error, Result};
 use crate::kernels::KernelOp;
 use crate::linalg;
+use crate::runtime::pool::Pool;
 
 /// Output of a Sinkhorn solve.
 #[derive(Clone, Debug)]
@@ -149,7 +150,13 @@ fn first_bad(xs: &[f32]) -> Option<String> {
 
 /// Eq. (2): the debiased Sinkhorn divergence
 /// `W(mu,nu) - (W(mu,mu) + W(nu,nu))/2` from three transport solves.
-pub fn sinkhorn_divergence<K: KernelOp + ?Sized>(
+///
+/// The three problems are independent, so when `cfg.threads > 1` they run
+/// concurrently on a scoped [`Pool`] (`0` = auto-size to the machine).
+/// Each solve is deterministic on its own kernel, so the result is
+/// identical for every thread count; errors are reported with the same
+/// priority as the historical sequential path (xy, then xx, then yy).
+pub fn sinkhorn_divergence<K: KernelOp + Sync + ?Sized>(
     k_xy: &K,
     k_xx: &K,
     k_yy: &K,
@@ -157,10 +164,13 @@ pub fn sinkhorn_divergence<K: KernelOp + ?Sized>(
     b: &[f32],
     cfg: &SinkhornConfig,
 ) -> Result<f64> {
-    let w_xy = sinkhorn(k_xy, a, b, cfg)?.objective;
-    let w_xx = sinkhorn(k_xx, a, a, cfg)?.objective;
-    let w_yy = sinkhorn(k_yy, b, b, cfg)?.objective;
-    Ok(w_xy - 0.5 * (w_xx + w_yy))
+    let pool = Pool::new(cfg.threads);
+    let (r_xy, r_xx, r_yy) = pool.join3(
+        || sinkhorn(k_xy, a, b, cfg),
+        || sinkhorn(k_xx, a, a, cfg),
+        || sinkhorn(k_yy, b, b, cfg),
+    );
+    Ok(r_xy?.objective - 0.5 * (r_xx?.objective + r_yy?.objective))
 }
 
 /// The transport plan `P = diag(u) K diag(v)` materialised (tests / small
@@ -199,7 +209,7 @@ pub fn ground_truth_rot<K: KernelOp + ?Sized>(
     b: &[f32],
     eps: f64,
 ) -> Result<f64> {
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: 20_000, tol: 1e-6, check_every: 20 };
+    let cfg = SinkhornConfig { epsilon: eps, max_iters: 20_000, tol: 1e-6, check_every: 20, threads: 1 };
     Ok(sinkhorn(kernel, a, b, &cfg)?.objective)
 }
 
@@ -228,7 +238,7 @@ mod tests {
     use crate::rng::Rng;
 
     fn cfg(eps: f64) -> SinkhornConfig {
-        SinkhornConfig { epsilon: eps, max_iters: 5000, tol: 1e-5, check_every: 5 }
+        SinkhornConfig { epsilon: eps, max_iters: 5000, tol: 1e-5, check_every: 5, threads: 1 }
     }
 
     fn uniform(n: usize) -> Vec<f32> {
@@ -395,8 +405,8 @@ mod tests {
         let mut rng = Rng::seed_from(10);
         let (mu, nu) = data::gaussian_blobs(30, &mut rng);
         let k = DenseKernel::from_measures(&mu, &nu, 0.3);
-        let few = SinkhornConfig { epsilon: 0.3, max_iters: 3, tol: 0.0, check_every: 1 };
-        let many = SinkhornConfig { epsilon: 0.3, max_iters: 300, tol: 0.0, check_every: 1 };
+        let few = SinkhornConfig { epsilon: 0.3, max_iters: 3, tol: 0.0, check_every: 1, threads: 1 };
+        let many = SinkhornConfig { epsilon: 0.3, max_iters: 300, tol: 0.0, check_every: 1, threads: 1 };
         let e1 = sinkhorn(&k, &mu.weights, &nu.weights, &few).unwrap().marginal_error;
         let e2 = sinkhorn(&k, &mu.weights, &nu.weights, &many).unwrap().marginal_error;
         assert!(e2 <= e1 * 1.01, "e1={e1} e2={e2}");

@@ -9,7 +9,7 @@ use linear_sinkhorn::sinkhorn::{marginal_errors, transport_plan};
 use linear_sinkhorn::testing::property;
 
 fn cfg(eps: f64) -> SinkhornConfig {
-    SinkhornConfig { epsilon: eps, max_iters: 3000, tol: 1e-5, check_every: 5 }
+    SinkhornConfig { epsilon: eps, max_iters: 3000, tol: 1e-5, check_every: 5, threads: 1 }
 }
 
 #[test]

@@ -1,0 +1,181 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The L2 runtime (`linear_sinkhorn::runtime`) executes AOT-lowered HLO
+//! artifacts through the real `xla` crate (PJRT CPU client). That crate is
+//! not part of the offline dependency set, so this stub provides the same
+//! API surface with every runtime entry point returning a descriptive
+//! error instead of executing. Host-side literal plumbing (`Literal`
+//! construction, reshape, readback) works for real, so conversion code and
+//! its tests run unchanged; only compilation/execution is unavailable.
+//!
+//! To enable the real runtime, vendor the actual `xla` crate and point the
+//! `xla` path dependency in the workspace `Cargo.toml` at it — no source
+//! change in `linear-sinkhorn` is required.
+
+use std::fmt;
+
+/// Stub error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable — this build links the bundled `xla` \
+         stub crate; vendor the real `xla` crate (see README.md §Runtime) \
+         to execute AOT artifacts"
+    )))
+}
+
+/// Conversion target for [`Literal::to_vec`]. Only `f32` is needed by the
+/// artifact pipeline (every tensor in the AOT graphs is f32).
+pub trait FromF32 {
+    /// Convert one stored element.
+    fn from_f32(x: f32) -> Self;
+}
+
+impl FromF32 for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+/// Host-side tensor literal (row-major f32 storage, like the real crate's
+/// CPU literals as used by this project).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    /// Reinterpret the buffer with new dimensions (element count must
+    /// match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let total: i64 = dims.iter().product();
+        if total as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements do not fit {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read the buffer back as a flat vector.
+    pub fn to_vec<T: FromF32>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Decompose a tuple literal. Stub: tuples only come from execution,
+    /// which the stub cannot perform, so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// The literal's dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module handle. Stub: parsing requires the real bindings.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text file. Stub: always errors.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer handle. Stub: unreachable without execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Stub: always errors.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable. Stub: cannot be constructed (compilation errors
+/// first), methods exist for type-checking only.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments. Stub: always errors.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle. Stub: construction reports the runtime as absent,
+/// which the callers surface as `Error::Runtime` / a skipped demo.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. Stub: always errors.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name of the backing runtime.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation. Stub: always errors.
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("PJRT is unavailable"));
+    }
+}
