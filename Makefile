@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test doc fmt-check check artifacts perf clean
+.PHONY: all build test doc fmt fmt-check check artifacts perf clean
 
 all: build
 
@@ -23,11 +23,13 @@ test:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
-# Advisory for now: the tree predates a formatting pass, so differences
-# are reported without failing the gate. Drop the leading `-` once
-# `cargo fmt` has been run over the tree.
+# Fatal: the tree is kept rustfmt-conformant (also enforced by CI's
+# `cargo fmt --check`); run `make fmt` after editing.
 fmt-check:
-	-$(CARGO) fmt --check
+	$(CARGO) fmt --check
+
+fmt:
+	$(CARGO) fmt
 
 check: build test doc fmt-check
 	@echo "check: OK"

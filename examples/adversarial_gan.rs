@@ -44,8 +44,9 @@ fn main() -> Result<()> {
         cfg.batch_size, cfg.num_features, cfg.epsilon, cfg.steps
     );
 
-    // Data pipeline: structured image corpus (the paper's CIFAR stand-in,
-    // DESIGN.md §7) + held-out noise batch for the Table-1 probe.
+    // Data pipeline: structured image corpus (the paper's CIFAR stand-in;
+    // see EXPERIMENTS.md §GAN training runs) + held-out noise batch for
+    // the Table-1 probe.
     let mut rng = Rng::seed_from(cfg.seed);
     let corpus = data::image_corpus(cfg.batch_size * 8, side, &mut rng);
     let mut trainer = GanTrainer::new(dim, cfg.clone(), &mut rng);

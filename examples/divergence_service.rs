@@ -18,7 +18,13 @@ fn main() {
     let cfg = ServiceConfig {
         workers: 4,
         batcher: BatcherConfig { max_batch: 8, max_delay_us: 300, queue_depth: 256 },
-        sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 1000, tol: 1e-4, check_every: 10, threads: 1 },
+        sinkhorn: SinkhornConfig {
+            epsilon: 0.5,
+            max_iters: 1000,
+            tol: 1e-4,
+            check_every: 10,
+            ..Default::default()
+        },
         num_features: 256,
         solver_threads: 1,
         cache_capacity: 8,
@@ -129,6 +135,8 @@ fn main() {
             }
             None => println!("no rf_divergence artifact in manifest; skipping PJRT demo"),
         },
-        Err(e) => println!("artifacts not built ({e}); skipping PJRT demo — run `make artifacts`"),
+        Err(e) => {
+            println!("artifacts not built ({e}); skipping PJRT demo — run `make artifacts`")
+        }
     }
 }

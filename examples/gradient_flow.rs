@@ -71,7 +71,13 @@ fn main() -> Result<()> {
     // One anchor draw reused for the whole flow (radius covers both clouds
     // plus travel slack).
     let map = GaussianFeatureMap::new(eps, 4.0, 2, args.get_usize("features"), &mut rng);
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: 1500, tol: 1e-6, check_every: 10, threads: 1 };
+    let cfg = SinkhornConfig {
+        epsilon: eps,
+        max_iters: 1500,
+        tol: 1e-6,
+        check_every: 10,
+        ..Default::default()
+    };
 
     println!("before:");
     scatter(&mu, &nu);

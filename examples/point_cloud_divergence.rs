@@ -33,7 +33,9 @@ fn run_case(name: &str, mu: &Measure, nu: &Measure, eps: f64, r: usize, rng: &mu
     match sinkhorn(&fk, &mu.weights, &nu.weights, &cfg) {
         Ok(s) => {
             let dev = truth
-                .map(|t| format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, s.objective)))
+                .map(|t| {
+                    format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, s.objective))
+                })
                 .unwrap_or_else(|| "-".into());
             println!(
                 "  RF : {:.6} ({:.0} ms, deviation {dev})",
@@ -50,7 +52,9 @@ fn run_case(name: &str, mu: &Measure, nu: &Measure, eps: f64, r: usize, rng: &mu
     match nk.validate_positive(rng, 3).and_then(|_| sinkhorn(&nk, &mu.weights, &nu.weights, &cfg)) {
         Ok(s) => {
             let dev = truth
-                .map(|t| format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, s.objective)))
+                .map(|t| {
+                    format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, s.objective))
+                })
                 .unwrap_or_else(|| "-".into());
             println!(
                 "  Nys: {:.6} ({:.0} ms, deviation {dev})",

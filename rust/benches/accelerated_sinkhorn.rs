@@ -38,11 +38,23 @@ fn main() {
         // Matched stopping criteria: Alg.1 stops on L1 marginal error, Alg.2
         // on the dual gradient norm — both set to the same delta.
         let delta = 1e-5;
-        let cfg1 = SinkhornConfig { epsilon: eps, max_iters: 100_000, tol: delta, check_every: 5, threads: 1 };
+        let cfg1 = SinkhornConfig {
+            epsilon: eps,
+            max_iters: 100_000,
+            tol: delta,
+            check_every: 5,
+            ..Default::default()
+        };
         let sw = Stopwatch::start();
         let s1 = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg1);
         let t1 = sw.elapsed_secs();
-        let cfg2 = SinkhornConfig { epsilon: eps, max_iters: 50_000, tol: delta, check_every: 1, threads: 1 };
+        let cfg2 = SinkhornConfig {
+            epsilon: eps,
+            max_iters: 50_000,
+            tol: delta,
+            check_every: 1,
+            ..Default::default()
+        };
         let sw = Stopwatch::start();
         let s2 = sinkhorn_accelerated(&fk, &mu.weights, &nu.weights, &cfg2);
         let t2 = sw.elapsed_secs();

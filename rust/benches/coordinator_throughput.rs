@@ -16,7 +16,13 @@ fn run_load(workers: usize, max_batch: usize, n_req: usize, n: usize) -> (f64, f
     let cfg = ServiceConfig {
         workers,
         batcher: BatcherConfig { max_batch, max_delay_us: 200, queue_depth: 4096 },
-        sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 500, tol: 1e-4, check_every: 10, threads: 1 },
+        sinkhorn: SinkhornConfig {
+            epsilon: 0.5,
+            max_iters: 500,
+            tol: 1e-4,
+            check_every: 10,
+            ..Default::default()
+        },
         num_features: 128,
         solver_threads: 1,
         cache_capacity: 8,

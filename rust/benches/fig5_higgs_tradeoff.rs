@@ -1,6 +1,7 @@
 //! Figure 5 (appendix): time–accuracy tradeoff in the high-dimensional
-//! regime — 28-dim HIGGS-like two-class data (synthetic substitute, see
-//! DESIGN.md §7). Paper: 2 x 5000 samples, 10 reps,
+//! regime — 28-dim HIGGS-like two-class data (synthetic substitute with
+//! the dataset's dimension and class structure; see the `higgs_like`
+//! rustdoc in `rust/src/data/`). Paper: 2 x 5000 samples, 10 reps,
 //! eps in {1, 5, 10, 15} (the high-dim regime needs larger eps because
 //! squared distances concentrate around 2d).
 //!

@@ -60,7 +60,7 @@ fn main() {
     ]);
 
     // Dense (materialised K): same fixed point, O(n^2) applies.
-    let dk = DenseKernel { k: fk.to_dense(), eps: 1.0 };
+    let dk = DenseKernel::from_matrix(fk.to_dense(), 1.0);
     let sw = Stopwatch::start();
     let bc_d = barycenter(&dk, &hists.to_vec(), &[], &cfg).expect("dense barycenter");
     let t_dense = sw.elapsed_secs();

@@ -9,21 +9,73 @@
 //!     complexity, `threads = 1` vs `threads = T` (three concurrent
 //!     solves with pooled matvecs inside each).
 //!
+//! A second table isolates **region dispatch overhead**: the persistent
+//! channel-fed pool vs the historical per-region scoped spawning
+//! (reimplemented locally below), timed on the pooled transposed matvec
+//! at n in {1e2, 1e3, 1e4}. Small n is where the difference lives — the
+//! region's compute shrinks toward the dispatch cost (ROADMAP item;
+//! results feed EXPERIMENTS.md §Parallel scaling).
+//!
 //! The acceptance bar for this layer is >1.5x end-to-end at n = 1e4 with
 //! 4 threads; results feed EXPERIMENTS.md §Parallel scaling.
 //!
 //! Run: `cargo bench --bench parallel_scaling`
 //! (add `--sizes 1000,10000,100000` to sweep the full range)
 
+use std::sync::Mutex;
+
 use linear_sinkhorn::bench::{fmt_secs, time, Table};
 use linear_sinkhorn::cli::ArgSpec;
-use linear_sinkhorn::linalg::{matvec_into, matvec_into_pooled, matvec_t_into, matvec_t_into_pooled};
+use linear_sinkhorn::linalg::{
+    matvec_into, matvec_into_pooled, matvec_t_into, matvec_t_into_pooled, Mat,
+};
 use linear_sinkhorn::prelude::*;
+
+/// The pre-persistent-pool execution strategy, verbatim: spawn `threads`
+/// scoped workers per region, drain a shared queue, join. Kept here (not
+/// in the library) purely as the bench baseline for dispatch overhead.
+fn scoped_run_tasks<T: Send, F: Fn(T) + Sync>(threads: usize, tasks: Vec<T>, f: F) {
+    let workers = threads.min(tasks.len());
+    if workers <= 1 {
+        for task in tasks {
+            f(task);
+        }
+        return;
+    }
+    let queue = Mutex::new(tasks.into_iter());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let task = {
+                    let mut q = queue.lock().unwrap();
+                    q.next()
+                };
+                match task {
+                    Some(t) => f(t),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// The per-chunk compute both dispatch arms share: accumulate
+/// `a[lo..hi]^T v[lo..hi]` into `buf` row-saxpy style. Identical closure
+/// under both strategies, so the measured difference is pure dispatch.
+fn chunk_saxpy(a: &Mat, v: &[f32], lo: usize, hi: usize, buf: &mut [f32]) {
+    for i in lo..hi {
+        let vi = v[i];
+        for (o, &x) in buf.iter_mut().zip(a.row(i)) {
+            *o += x * vi;
+        }
+    }
+}
 
 fn main() {
     let args = ArgSpec::new("parallel_scaling", "pooled vs serial hot paths")
         .opt("sizes", "1000,10000", "values of n to sweep")
         .opt("threads", "2,4", "pool sizes to compare against serial")
+        .opt("spawn-sizes", "100,1000,10000", "n values for the dispatch-overhead case")
         .opt("features", "256", "feature count r")
         .opt("iters", "40", "Sinkhorn iterations per divergence measurement")
         .opt("reps", "3", "measured repetitions per cell")
@@ -68,6 +120,7 @@ fn main() {
             tol: 0.0,
             check_every: iters + 1,
             threads: 1,
+            stabilize: false,
         };
         let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
         let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
@@ -87,8 +140,8 @@ fn main() {
             .median_s;
 
             let cfg_par = SinkhornConfig { threads, ..cfg_serial.clone() };
-            let p_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, pool);
-            let p_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, pool);
+            let p_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, pool.clone());
+            let p_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, pool.clone());
             let p_yy = FactoredKernel::from_measures_pooled(&map, &nu, &nu, pool);
             let par_div = time(1, reps, || {
                 sinkhorn_divergence(&p_xy, &p_xx, &p_yy, &mu.weights, &nu.weights, &cfg_par)
@@ -110,6 +163,58 @@ fn main() {
     }
 
     t.emit(Some(args.get_str("csv")));
+
+    // --- Dispatch overhead: persistent pool vs per-region scoped spawn.
+    //
+    // Both arms run the *same* chunk tasks (row-saxpy over a fixed
+    // 256-row grid of an (n, r) factor); one dispatches them with
+    // `Pool::run_tasks` on a persistent pool, the other spawns scoped
+    // threads per region like the pre-refactor pool did. At small n the
+    // region's compute shrinks toward the dispatch cost, which is where
+    // the persistent pool earns its keep (ROADMAP item).
+    let mut spawn_table = Table::new(
+        "Region dispatch overhead (identical chunk tasks, r fixed)",
+        &["n", "threads", "scoped spawn/region", "persistent pool/region", "speedup"],
+    );
+    let spawn_sizes = args.get_usize_list("spawn-sizes");
+    let spawn_reps = (reps.max(3)) * 10;
+    const SPAWN_CHUNK: usize = 256;
+    for &n in &spawn_sizes {
+        let a = Mat::from_fn(n, r, |i, j| ((i * 31 + j * 7) % 97) as f32 * 0.01 + 0.1);
+        let v: Vec<f32> = (0..n).map(|i| 0.5 + (i % 13) as f32 * 0.01).collect();
+        let nchunks = (n + SPAWN_CHUNK - 1) / SPAWN_CHUNK;
+        let mut partials: Vec<Vec<f32>> = (0..nchunks).map(|_| vec![0.0f32; r]).collect();
+        for &threads in &thread_counts {
+            let scoped = time(3, spawn_reps, || {
+                let tasks: Vec<(usize, &mut Vec<f32>)> =
+                    partials.iter_mut().enumerate().collect();
+                scoped_run_tasks(threads, tasks, |(c, buf)| {
+                    let lo = c * SPAWN_CHUNK;
+                    chunk_saxpy(&a, &v, lo, (lo + SPAWN_CHUNK).min(n), buf);
+                });
+            })
+            .median_s;
+            let pool = Pool::new(threads);
+            let pooled = time(3, spawn_reps, || {
+                let tasks: Vec<(usize, &mut Vec<f32>)> =
+                    partials.iter_mut().enumerate().collect();
+                pool.run_tasks(tasks, |(c, buf)| {
+                    let lo = c * SPAWN_CHUNK;
+                    chunk_saxpy(&a, &v, lo, (lo + SPAWN_CHUNK).min(n), buf);
+                });
+            })
+            .median_s;
+            spawn_table.row(vec![
+                n.to_string(),
+                threads.to_string(),
+                fmt_secs(scoped),
+                fmt_secs(pooled),
+                format!("{:.2}x", scoped / pooled),
+            ]);
+        }
+    }
+    spawn_table.emit(None);
+
     println!(
         "\nacceptance bar: divergence speedup > 1.5x at n=10000, threads=4 \
          (EXPERIMENTS.md §Parallel scaling)"

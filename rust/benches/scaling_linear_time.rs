@@ -27,7 +27,13 @@ fn main() {
     let eps = 0.5;
     let mut rng = Rng::seed_from(args.get_u64("seed"));
 
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: iters, tol: 0.0, check_every: iters + 1, threads: 1 };
+    let cfg = SinkhornConfig {
+        epsilon: eps,
+        max_iters: iters,
+        tol: 0.0,
+        check_every: iters + 1,
+        ..Default::default()
+    };
     let mut t = Table::new(
         "Per-iteration scaling (fixed r, growing n)",
         &["n", "RF time/iter", "Sin time/iter", "RF flops/apply", "Sin flops/apply", "speedup"],

@@ -4,7 +4,8 @@
 //! k(image, noise) >> or >> k(noise, noise).
 //!
 //! Paper: trained 84h on CIFAR-10 (Tesla K80); here: the synthetic image
-//! corpus and a few hundred CPU steps (DESIGN.md §7) — the *ordering* and
+//! corpus and a few hundred CPU steps (see EXPERIMENTS.md §GAN training
+//! runs) — the *ordering* and
 //! the large ii/in ratio are the claims under test. Values are averages
 //! over 5x5 sample pairs exactly as in the paper.
 //!

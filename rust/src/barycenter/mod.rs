@@ -225,7 +225,7 @@ mod tests {
         // Same barycenter whether K = XX^T is applied via factors or dense.
         let grid = data::positive_sphere_grid(8);
         let fk = sphere_kernel(&grid);
-        let dk = DenseKernel { k: fk.to_dense(), eps: 1.0 };
+        let dk = DenseKernel::from_matrix(fk.to_dense(), 1.0);
         let hs = data::corner_histograms(&grid, 0.3);
         let cfg = BarycenterConfig { max_iters: 200, tol: 1e-9 };
         let b1 = barycenter(&fk, &hs.to_vec(), &[], &cfg).unwrap();

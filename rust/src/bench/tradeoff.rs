@@ -11,7 +11,7 @@
 use crate::config::SinkhornConfig;
 use crate::data::Measure;
 use crate::features::GaussianFeatureMap;
-use crate::kernels::{DenseKernel, FactoredKernel, NystromKernel};
+use crate::kernels::{CostMatrixLogKernel, DenseKernel, FactoredKernel, NystromKernel};
 use crate::metrics::Stopwatch;
 use crate::rng::Rng;
 use crate::sinkhorn::{deviation_score, sinkhorn, sinkhorn_log_domain, sq_euclidean_cost};
@@ -68,8 +68,15 @@ pub fn ground_truth(mu: &Measure, nu: &Measure, eps: f64) -> f64 {
         return v;
     }
     let cost = sq_euclidean_cost(&mu.points, &nu.points);
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: 10_000, tol: 1e-7, check_every: 25, threads: 1 };
-    sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg)
+    let cfg = SinkhornConfig {
+        epsilon: eps,
+        max_iters: 10_000,
+        tol: 1e-7,
+        check_every: 25,
+        threads: 1,
+        stabilize: false,
+    };
+    sinkhorn_log_domain(&CostMatrixLogKernel::new(&cost, eps), &mu.weights, &nu.weights, &cfg)
         .expect("log-domain ground truth cannot diverge")
         .objective
 }
@@ -160,6 +167,7 @@ pub fn run_sweep(
             tol: sweep.solver_tol,
             check_every: 10,
             threads: 1,
+            stabilize: false,
         };
 
         // --- Sin baseline: converged dense solve (one timing; deviation of

@@ -115,7 +115,9 @@ impl ArgSpec {
                     .opts
                     .iter()
                     .find(|o| o.name == name)
-                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help_text())))?;
+                    .ok_or_else(|| {
+                        CliError(format!("unknown option --{name}\n\n{}", self.help_text()))
+                    })?;
                 if opt.is_flag {
                     if inline_val.is_some() {
                         return Err(CliError(format!("--{name} is a flag, it takes no value")));

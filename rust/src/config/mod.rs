@@ -112,11 +112,21 @@ max_delay_us = 500
 
     #[test]
     fn typed_sinkhorn_config_roundtrip() {
-        let doc = ConfigDoc::parse("[sinkhorn]\nepsilon = 0.25\nmax_iters = 123\ntol = 1e-4").unwrap();
+        let doc = ConfigDoc::parse(
+            "[sinkhorn]\nepsilon = 0.25\nmax_iters = 123\ntol = 1e-4\nstabilize = false",
+        )
+        .unwrap();
         let cfg = SinkhornConfig::from_doc(&doc);
         assert_eq!(cfg.epsilon, 0.25);
         assert_eq!(cfg.max_iters, 123);
         assert_eq!(cfg.tol, 1e-4);
+        assert!(!cfg.stabilize);
+    }
+
+    #[test]
+    fn stabilize_defaults_on() {
+        let doc = ConfigDoc::parse("").unwrap();
+        assert!(SinkhornConfig::from_doc(&doc).stabilize);
     }
 
     #[test]

@@ -46,9 +46,14 @@ impl ConfigDoc {
             }
             let err = |m: &str| ConfigError { line: lineno + 1, message: m.to_string() };
             if let Some(rest) = line.strip_prefix('[') {
-                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+                let name =
+                    rest.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
                 let name = name.trim();
-                if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '-')
+                {
                     return Err(err("invalid section name"));
                 }
                 section = name.to_string();
@@ -64,7 +69,8 @@ impl ConfigDoc {
                 return Err(err("missing value"));
             }
             let value = parse_value(value_text).map_err(|m| err(&m))?;
-            let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let path =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
             if doc.values.contains_key(&path) {
                 return Err(err(&format!("duplicate key `{path}`")));
             }

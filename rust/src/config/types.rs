@@ -22,11 +22,25 @@ pub struct SinkhornConfig {
     /// transpose chunk (1024 rows) round differently than the pre-pool
     /// releases at any thread count.
     pub threads: usize,
+    /// Escalate to the matrix-free log-domain solver when plain Alg. 1
+    /// reports non-finite scalings (small-eps over/underflow). Applies to
+    /// `sinkhorn_divergence` and the coordinator (which counts
+    /// escalations as `service.stabilized_solves`); kernels without a
+    /// log-domain view keep their original error. `sinkhorn.stabilize`
+    /// in config files, `--stabilize` on the CLI.
+    pub stabilize: bool,
 }
 
 impl Default for SinkhornConfig {
     fn default() -> Self {
-        SinkhornConfig { epsilon: 0.5, max_iters: 5000, tol: 1e-3, check_every: 10, threads: 1 }
+        SinkhornConfig {
+            epsilon: 0.5,
+            max_iters: 5000,
+            tol: 1e-3,
+            check_every: 10,
+            threads: 1,
+            stabilize: true,
+        }
     }
 }
 
@@ -37,8 +51,10 @@ impl SinkhornConfig {
             epsilon: doc.get_float("sinkhorn.epsilon").unwrap_or(d.epsilon),
             max_iters: doc.get_int("sinkhorn.max_iters").unwrap_or(d.max_iters as i64) as usize,
             tol: doc.get_float("sinkhorn.tol").unwrap_or(d.tol),
-            check_every: doc.get_int("sinkhorn.check_every").unwrap_or(d.check_every as i64) as usize,
+            check_every: doc.get_int("sinkhorn.check_every").unwrap_or(d.check_every as i64)
+                as usize,
             threads: doc.get_int("sinkhorn.threads").unwrap_or(d.threads as i64) as usize,
+            stabilize: doc.get_bool("sinkhorn.stabilize").unwrap_or(d.stabilize),
         }
     }
 }
@@ -107,9 +123,13 @@ impl BatcherConfig {
     pub fn from_doc(doc: &ConfigDoc) -> Self {
         let d = BatcherConfig::default();
         BatcherConfig {
-            max_batch: doc.get_int("service.batcher.max_batch").unwrap_or(d.max_batch as i64) as usize,
-            max_delay_us: doc.get_int("service.batcher.max_delay_us").unwrap_or(d.max_delay_us as i64) as u64,
-            queue_depth: doc.get_int("service.batcher.queue_depth").unwrap_or(d.queue_depth as i64) as usize,
+            max_batch: doc.get_int("service.batcher.max_batch").unwrap_or(d.max_batch as i64)
+                as usize,
+            max_delay_us: doc
+                .get_int("service.batcher.max_delay_us")
+                .unwrap_or(d.max_delay_us as i64) as u64,
+            queue_depth: doc.get_int("service.batcher.queue_depth").unwrap_or(d.queue_depth as i64)
+                as usize,
         }
     }
 }
@@ -153,7 +173,8 @@ impl ServiceConfig {
             workers: doc.get_int("service.workers").unwrap_or(d.workers as i64) as usize,
             batcher: BatcherConfig::from_doc(doc),
             sinkhorn: SinkhornConfig::from_doc(doc),
-            num_features: doc.get_int("service.num_features").unwrap_or(d.num_features as i64) as usize,
+            num_features: doc.get_int("service.num_features").unwrap_or(d.num_features as i64)
+                as usize,
             solver_threads: doc
                 .get_int("service.solver_threads")
                 .unwrap_or(d.solver_threads as i64) as usize,
@@ -214,7 +235,8 @@ impl GanConfig {
             latent_dim: doc.get_int("gan.latent_dim").unwrap_or(d.latent_dim as i64) as usize,
             embed_dim: doc.get_int("gan.embed_dim").unwrap_or(d.embed_dim as i64) as usize,
             epsilon: doc.get_float("gan.epsilon").unwrap_or(d.epsilon),
-            sinkhorn_iters: doc.get_int("gan.sinkhorn_iters").unwrap_or(d.sinkhorn_iters as i64) as usize,
+            sinkhorn_iters: doc.get_int("gan.sinkhorn_iters").unwrap_or(d.sinkhorn_iters as i64)
+                as usize,
             critic_steps: doc.get_int("gan.critic_steps").unwrap_or(d.critic_steps as i64) as usize,
             steps: doc.get_int("gan.steps").unwrap_or(d.steps as i64) as usize,
             lr: doc.get_float("gan.lr").unwrap_or(d.lr),

@@ -98,7 +98,10 @@ mod tests {
     use crate::linalg::Mat;
     use std::sync::mpsc::sync_channel;
 
-    fn mk_request(id: u64, reply: SyncSender<crate::error::Result<super::super::Response>>) -> Request {
+    fn mk_request(
+        id: u64,
+        reply: SyncSender<crate::error::Result<super::super::Response>>,
+    ) -> Request {
         Request {
             id,
             mu: Measure::uniform(Mat::ones(2, 2)),

@@ -24,7 +24,15 @@
 //! * **Workers** solve each request with the native factored-kernel
 //!   Sinkhorn (O(r(n+m)) per iteration); `solver_threads` additionally
 //!   parallelises each solve's matvecs and feature evaluation over the
-//!   intra-solve pool ([`crate::runtime::pool`]).
+//!   intra-solve pool ([`crate::runtime::pool`]). Each worker creates its
+//!   persistent pools **once** and reuses them for every request — with
+//!   the channel-fed pool, per-request construction would mean
+//!   per-request thread spawning.
+//! * **Stabilisation**: requests whose epsilon drives plain Alg. 1 into
+//!   non-finite scalings are retried on the matrix-free log-domain
+//!   solver (still O(r(n+m)), see [`crate::kernels::LogKernelOp`]) when
+//!   `sinkhorn.stabilize` is on; escalations are counted by the
+//!   `service.stabilized_solves` metric.
 //!
 //! Everything is std::thread + mpsc (the offline crate set has no tokio);
 //! for a compute-bound service this is the right tool anyway.
@@ -47,7 +55,7 @@ use crate::kernels::FactoredKernel;
 use crate::metrics::Registry;
 use crate::rng::Rng;
 use crate::runtime::pool::Pool;
-use crate::sinkhorn::sinkhorn;
+use crate::sinkhorn::sinkhorn_stabilized;
 
 /// A divergence request: two measures on the same ground space.
 pub struct Request {
@@ -252,6 +260,13 @@ fn worker_loop(
     cache: Arc<FeatureCache>,
 ) {
     let mut rng = Rng::seed_from(0xC0FFEE ^ worker_id);
+    // Persistent pools, one pair per worker thread for its whole
+    // lifetime: the intra-solve pool row-chunks each request's matvecs
+    // and feature evaluation, the solve pool runs the three transport
+    // problems concurrently. Constructed once — the channel-fed pool
+    // keeps its threads alive across requests.
+    let solver_pool = Pool::new(cfg.solver_threads);
+    let solve_pool = Pool::new_capped(cfg.sinkhorn.threads, 3);
     loop {
         let batch = {
             let guard = rx.lock().unwrap();
@@ -266,7 +281,16 @@ fn worker_loop(
         // cache: requests with the same (dim, eps, r) reuse one Lemma-1
         // anchor set, within a batch and across batches/workers alike.
         for req in batch.requests {
-            let result = solve_one(&req, &cfg, &mut rng, bsize, &cache, &metrics);
+            let result = solve_one(
+                &req,
+                &cfg,
+                &mut rng,
+                bsize,
+                &cache,
+                &metrics,
+                &solver_pool,
+                &solve_pool,
+            );
             // Record metrics BEFORE replying: a client that checks the
             // registry right after `wait()` must see its own request.
             metrics.counter("service.completed").inc();
@@ -278,6 +302,7 @@ fn worker_loop(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn solve_one(
     req: &Request,
     cfg: &ServiceConfig,
@@ -285,6 +310,8 @@ fn solve_one(
     batch_size: usize,
     cache: &FeatureCache,
     metrics: &Registry,
+    solver_pool: &Pool,
+    solve_pool: &Pool,
 ) -> Result<Response> {
     let mut skcfg = cfg.sinkhorn.clone();
     if let Some(e) = req.epsilon {
@@ -294,23 +321,41 @@ fn solve_one(
     let radius = req.mu.radius().max(req.nu.radius());
     let map =
         cache.get_or_fit(req.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
-    // Intra-solve parallelism for this request's matvecs/features.
-    let pool = Pool::new(cfg.solver_threads);
     // Stabilised factors: arbitrary client data must not underflow f32.
-    let k_xy = FactoredKernel::from_measures_stabilized_pooled(&*map, &req.mu, &req.nu, pool);
-    let k_xx = FactoredKernel::from_measures_stabilized_pooled(&*map, &req.mu, &req.mu, pool);
-    let k_yy = FactoredKernel::from_measures_stabilized_pooled(&*map, &req.nu, &req.nu, pool);
+    let k_xy = FactoredKernel::from_measures_stabilized_pooled(
+        &*map,
+        &req.mu,
+        &req.nu,
+        solver_pool.clone(),
+    );
+    let k_xx = FactoredKernel::from_measures_stabilized_pooled(
+        &*map,
+        &req.mu,
+        &req.mu,
+        solver_pool.clone(),
+    );
+    let k_yy = FactoredKernel::from_measures_stabilized_pooled(
+        &*map,
+        &req.nu,
+        &req.nu,
+        solver_pool.clone(),
+    );
     // Three explicit solves (not sinkhorn() + sinkhorn_divergence(),
     // which would solve the xy problem twice): the Eq. (2) divergence is
     // assembled from the objectives, and the solves run concurrently
-    // when `sinkhorn.threads` allows.
-    let solve_pool = Pool::new(skcfg.threads);
+    // when `sinkhorn.threads` allows. Each solve escalates to the
+    // log-domain path on non-finite scalings when `sinkhorn.stabilize`
+    // is on; escalations surface as `service.stabilized_solves`.
     let (r_xy, r_xx, r_yy) = solve_pool.join3(
-        || sinkhorn(&k_xy, &req.mu.weights, &req.nu.weights, &skcfg),
-        || sinkhorn(&k_xx, &req.mu.weights, &req.mu.weights, &skcfg),
-        || sinkhorn(&k_yy, &req.nu.weights, &req.nu.weights, &skcfg),
+        || sinkhorn_stabilized(&k_xy, &req.mu.weights, &req.nu.weights, &skcfg),
+        || sinkhorn_stabilized(&k_xx, &req.mu.weights, &req.mu.weights, &skcfg),
+        || sinkhorn_stabilized(&k_yy, &req.nu.weights, &req.nu.weights, &skcfg),
     );
-    let (sol_xy, sol_xx, sol_yy) = (r_xy?, r_xx?, r_yy?);
+    let ((sol_xy, st_xy), (sol_xx, st_xx), (sol_yy, st_yy)) = (r_xy?, r_xx?, r_yy?);
+    let stabilized = [st_xy, st_xx, st_yy].iter().filter(|&&s| s).count() as u64;
+    if stabilized > 0 {
+        metrics.counter("service.stabilized_solves").add(stabilized);
+    }
     let div = sol_xy.objective - 0.5 * (sol_xx.objective + sol_yy.objective);
     Ok(Response {
         id: req.id,
@@ -332,7 +377,14 @@ mod tests {
         ServiceConfig {
             workers,
             batcher: BatcherConfig { max_batch: 4, max_delay_us: 200, queue_depth: 64 },
-            sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 300, tol: 1e-4, check_every: 10, threads: 1 },
+            sinkhorn: SinkhornConfig {
+                epsilon: 0.5,
+                max_iters: 300,
+                tol: 1e-4,
+                check_every: 10,
+                threads: 1,
+                stabilize: true,
+            },
             num_features: 128,
             solver_threads: 1,
             cache_capacity: 8,
@@ -405,7 +457,14 @@ mod tests {
         let cfg = ServiceConfig {
             workers: 1,
             batcher: BatcherConfig { max_batch: 1, max_delay_us: 10, queue_depth: 2 },
-            sinkhorn: SinkhornConfig { epsilon: 0.5, max_iters: 2000, tol: 0.0, check_every: 100, threads: 1 },
+            sinkhorn: SinkhornConfig {
+                epsilon: 0.5,
+                max_iters: 2000,
+                tol: 0.0,
+                check_every: 100,
+                threads: 1,
+                stabilize: true,
+            },
             num_features: 256,
             solver_threads: 1,
             cache_capacity: 8,
@@ -491,6 +550,29 @@ mod tests {
         let d1 = solve(1);
         let d4 = solve(4);
         assert_eq!(d1.to_bits(), d4.to_bits(), "{d1} vs {d4}");
+    }
+
+    #[test]
+    fn tiny_eps_request_still_produces_a_finite_answer() {
+        // A per-request epsilon orders of magnitude below the service
+        // default. The stabilised factors handle most of the range on
+        // their own; if the plain solve ever reports non-finite scalings
+        // the worker escalates to the log-domain path
+        // (`service.stabilized_solves`). Either way the production
+        // guarantee under test is: any positive eps yields a finite
+        // divergence, never a NaN and never a panic.
+        let mut cfg = test_cfg(1);
+        cfg.sinkhorn.max_iters = 500;
+        cfg.num_features = 32;
+        let svc = Service::start(cfg);
+        let h = svc.handle();
+        for eps in [1e-2, 1e-3] {
+            let (mu, nu) = clouds(9, 30);
+            let resp = h.submit_with(mu, nu, Some(eps)).unwrap().wait().unwrap();
+            assert!(resp.divergence.is_finite(), "eps={eps}: {}", resp.divergence);
+        }
+        drop(h);
+        svc.shutdown();
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //!
 //! * [`gaussian_blobs`] — Fig. 1's two 2-D normal clouds.
 //! * [`sphere_caps`] — Fig. 2/3's two uniform distributions on S².
-//! * [`higgs_like`] — Fig. 5's 28-dim two-class HIGGS substitute
-//!   (see DESIGN.md §7 for the substitution argument).
+//! * [`higgs_like`] — Fig. 5's 28-dim two-class HIGGS substitute: a
+//!   synthetic mixture with the dataset's dimensionality and class
+//!   structure — the tradeoff figures only need the workload *shape*
+//!   (dimension, overlap), not the physics (see README.md §Pointer map
+//!   for where each experiment is recorded).
 //! * [`image_corpus`] / [`noise_images`] — Table 1 / Fig. 4's CIFAR/noise
 //!   substitute: structured synthetic 32×32 grayscale images.
 //! * [`corner_histograms`] — Fig. 6's three blurred-corner histograms on a
@@ -353,7 +356,9 @@ mod tests {
         let (sig, bkg) = higgs_pair(600, &mut rng);
         let mean_of = |m: &Measure| -> Vec<f64> {
             (0..m.dim())
-                .map(|j| m.points.col_copy(j).iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64)
+                .map(|j| {
+                    m.points.col_copy(j).iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64
+                })
                 .collect()
         };
         let ms = mean_of(&sig);

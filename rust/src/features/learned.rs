@@ -156,7 +156,8 @@ mod tests {
         let mut rng = Rng::seed_from(0);
         let mut fm = LearnedFeatureMap::new(4, 8, &mut rng);
         // Even adversarially large parameters keep positivity.
-        let huge: Vec<f32> = (0..fm.num_params()).map(|i| if i % 2 == 0 { 50.0 } else { -50.0 }).collect();
+        let huge: Vec<f32> =
+            (0..fm.num_params()).map(|i| if i % 2 == 0 { 50.0 } else { -50.0 }).collect();
         fm.set_params_flat(&huge);
         let mut out = vec![0.0; 8];
         fm.eval_into(&[1.0, -2.0, 3.0, -4.0], &mut out);

@@ -173,7 +173,13 @@ mod tests {
     #[test]
     fn trainer_checkpoint_roundtrip_generates_identically() {
         let mut rng = Rng::seed_from(0);
-        let cfg = GanConfig { batch_size: 8, num_features: 8, latent_dim: 3, embed_dim: 3, ..Default::default() };
+        let cfg = GanConfig {
+            batch_size: 8,
+            num_features: 8,
+            latent_dim: 3,
+            embed_dim: 3,
+            ..Default::default()
+        };
         let mut t1 = GanTrainer::new(9, cfg.clone(), &mut rng);
         let path = tmp("trainer");
         t1.save_checkpoint(&path).unwrap();
@@ -190,7 +196,13 @@ mod tests {
     #[test]
     fn mismatched_architecture_rejected() {
         let mut rng = Rng::seed_from(1);
-        let cfg = GanConfig { batch_size: 8, num_features: 8, latent_dim: 3, embed_dim: 3, ..Default::default() };
+        let cfg = GanConfig {
+            batch_size: 8,
+            num_features: 8,
+            latent_dim: 3,
+            embed_dim: 3,
+            ..Default::default()
+        };
         let t1 = GanTrainer::new(9, cfg.clone(), &mut rng);
         let path = tmp("mismatch");
         t1.save_checkpoint(&path).unwrap();

@@ -196,7 +196,10 @@ impl Mlp {
             layers: self
                 .layers
                 .iter()
-                .map(|l| LayerGrads { w: Mat::zeros(l.w.rows(), l.w.cols()), b: vec![0.0; l.b.len()] })
+                .map(|l| LayerGrads {
+                    w: Mat::zeros(l.w.rows(), l.w.cols()),
+                    b: vec![0.0; l.b.len()],
+                })
                 .collect(),
         }
     }

@@ -14,7 +14,15 @@ pub struct Adam {
 
 impl Adam {
     pub fn new(num_params: usize, lr: f64) -> Self {
-        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; num_params], v: vec![0.0; num_params], t: 0 }
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; num_params],
+            v: vec![0.0; num_params],
+            t: 0,
+        }
     }
 
     /// One update step: `params -= lr * m_hat / (sqrt(v_hat) + eps)`.

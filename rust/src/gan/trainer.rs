@@ -71,6 +71,7 @@ impl GanTrainer {
             tol: 1e-7,
             check_every: cfg.sinkhorn_iters.max(1),
             threads: 1,
+            stabilize: false,
         };
         GanTrainer {
             opt_gen: Adam::new(generator.num_params(), cfg.lr),

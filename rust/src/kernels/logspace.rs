@@ -1,0 +1,305 @@
+//! Log-domain kernel operators — the object *stabilised* Sinkhorn
+//! iterates against.
+//!
+//! Log-domain Sinkhorn never forms the scalings `u, v` (which over/
+//! underflow at small eps); its updates are row/column logsumexp
+//! reductions of `log K + input`. [`LogKernelOp`] abstracts exactly that
+//! pair of reductions, so the same generic solver
+//! ([`crate::sinkhorn::sinkhorn_log_domain`]) runs:
+//!
+//! * the dense `Sin` baseline at O(nm)/update, streaming `-cost/eps`
+//!   ([`DenseKernel`] keeps its cost matrix for this), and
+//! * the paper's `RF` factored kernel at **O(r(n+m))/update and memory**,
+//!   nesting the logsumexp through the factorisation
+//!   (`log K_ij = logsumexp_k(lx_ik + ly_jk)`) without ever materialising
+//!   an n×m matrix — the linear-time claim survives stabilisation.
+//!
+//! All reductions run through the chunk-gridded f64 primitives in
+//! [`crate::linalg`] (`lse_matvec*`), which are thread-count-
+//! deterministic over the shared worker pool like every other pooled
+//! kernel in this crate (EXPERIMENTS.md §Stabilisation, §Parallel
+//! scaling).
+
+use crate::linalg::{
+    lse_matvec_into, lse_matvec_into_pooled, lse_matvec_t_into, lse_matvec_t_into_pooled, Mat,
+};
+
+use super::{DenseKernel, FactoredKernel};
+
+/// Matrix-free log-domain kernel operator: streamed logsumexp of
+/// `log K + input` over rows or columns.
+///
+/// Method names are disjoint from [`super::KernelOp`] so types may
+/// implement both without call-site ambiguity.
+pub trait LogKernelOp {
+    /// (rows, cols) of K.
+    fn shape(&self) -> (usize, usize);
+
+    /// `out[i] = logsumexp_j(log K_ij + t[j])` (length rows).
+    fn apply_log(&self, t: &[f64], out: &mut [f64]);
+
+    /// `out[j] = logsumexp_i(log K_ij + u[i])` (length cols).
+    fn apply_log_t(&self, u: &[f64], out: &mut [f64]);
+
+    /// Human-readable label for reports and error messages.
+    fn describe(&self) -> String;
+}
+
+/// A borrowed cost matrix as a log kernel: `log K = -cost/eps`. The
+/// cheap adapter for callers that hold a cost matrix and want the
+/// log-domain solver without building a [`DenseKernel`] (e.g. the
+/// tradeoff benches' small-eps ground truth).
+pub struct CostMatrixLogKernel<'a> {
+    cost: &'a Mat,
+    eps: f64,
+}
+
+impl<'a> CostMatrixLogKernel<'a> {
+    pub fn new(cost: &'a Mat, eps: f64) -> Self {
+        assert!(eps > 0.0 && eps.is_finite(), "eps must be positive");
+        CostMatrixLogKernel { cost, eps }
+    }
+}
+
+impl LogKernelOp for CostMatrixLogKernel<'_> {
+    fn shape(&self) -> (usize, usize) {
+        self.cost.shape()
+    }
+
+    fn apply_log(&self, t: &[f64], out: &mut [f64]) {
+        lse_matvec_into(self.cost, -1.0 / self.eps, t, out);
+    }
+
+    fn apply_log_t(&self, u: &[f64], out: &mut [f64]) {
+        lse_matvec_t_into(self.cost, -1.0 / self.eps, u, out);
+    }
+
+    fn describe(&self) -> String {
+        let (n, m) = self.cost.shape();
+        format!("cost-matrix log kernel ({n}x{m}, eps={})", self.eps)
+    }
+}
+
+impl LogKernelOp for DenseKernel {
+    fn shape(&self) -> (usize, usize) {
+        self.k.shape()
+    }
+
+    /// Streams the retained *unfloored* cost: exact where `k` itself has
+    /// flushed to the `exp(LOG_FLOOR)` positivity floor.
+    fn apply_log(&self, t: &[f64], out: &mut [f64]) {
+        lse_matvec_into(&self.cost, -1.0 / self.eps, t, out);
+    }
+
+    fn apply_log_t(&self, u: &[f64], out: &mut [f64]) {
+        lse_matvec_t_into(&self.cost, -1.0 / self.eps, u, out);
+    }
+
+    fn describe(&self) -> String {
+        let (n, m) = self.k.shape();
+        format!("Sin-log(dense {n}x{m})")
+    }
+}
+
+impl LogKernelOp for FactoredKernel {
+    fn shape(&self) -> (usize, usize) {
+        (self.phi_x.rows(), self.phi_y.rows())
+    }
+
+    /// `logsumexp_j(log K_ij + t_j)` through the factorisation:
+    ///
+    /// ```text
+    /// log K_ij = logsumexp_k(lx_ik + ly_jk)          (raw log factors)
+    /// out_i    = logsumexp_k(lx_ik + s_k),  s_k = logsumexp_j(ly_jk + t_j)
+    /// ```
+    ///
+    /// Two skinny logsumexp matvecs — O(r(n+m)) time, O(r) extra memory,
+    /// no n×m intermediate — routed through the kernel's worker pool.
+    /// Exact in exact arithmetic (sums re-associate); in f64 it matches a
+    /// dense reduction of the same log factors to ~1e-12.
+    fn apply_log(&self, t: &[f64], out: &mut [f64]) {
+        let (lx, ly) = self.log_factors();
+        let mut s = vec![0.0f64; self.rank()];
+        lse_matvec_t_into_pooled(ly, 1.0, t, &mut s, &self.pool);
+        lse_matvec_into_pooled(lx, 1.0, &s, out, &self.pool);
+    }
+
+    fn apply_log_t(&self, u: &[f64], out: &mut [f64]) {
+        let (lx, ly) = self.log_factors();
+        let mut s = vec![0.0f64; self.rank()];
+        lse_matvec_t_into_pooled(lx, 1.0, u, &mut s, &self.pool);
+        lse_matvec_into_pooled(ly, 1.0, &s, out, &self.pool);
+    }
+
+    fn describe(&self) -> String {
+        let (n, m) = LogKernelOp::shape(self);
+        format!("RF-log(r={} {n}x{m})", self.rank())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::KernelOp;
+    use super::*;
+    use crate::data;
+    use crate::features::{FeatureMap, GaussianFeatureMap};
+    use crate::rng::Rng;
+
+    /// Dense f64 reference: out_i = logsumexp_j(log_k[i][j] + t_j).
+    fn reference_apply_log(log_k: &[Vec<f64>], t: &[f64]) -> Vec<f64> {
+        log_k
+            .iter()
+            .map(|row| {
+                let m = row
+                    .iter()
+                    .zip(t)
+                    .map(|(&l, &tj)| l + tj)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                if !m.is_finite() {
+                    return m;
+                }
+                m + row
+                    .iter()
+                    .zip(t)
+                    .map(|(&l, &tj)| (l + tj - m).exp())
+                    .sum::<f64>()
+                    .ln()
+            })
+            .collect()
+    }
+
+    /// Materialise log K of a factored kernel from its raw log factors.
+    fn dense_log_kernel(lx: &Mat, ly: &Mat) -> Vec<Vec<f64>> {
+        let (n, r) = lx.shape();
+        let m = ly.rows();
+        (0..n)
+            .map(|i| {
+                (0..m)
+                    .map(|j| {
+                        let terms: Vec<f64> = (0..r)
+                            .map(|k| lx[(i, k)] as f64 + ly[(j, k)] as f64)
+                            .collect();
+                        let mx = terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                        mx + terms.iter().map(|&v| (v - mx).exp()).sum::<f64>().ln()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_apply_log_matches_reference() {
+        let mut rng = Rng::seed_from(0);
+        let (mu, nu) = data::gaussian_blobs(20, &mut rng);
+        let eps = 0.3;
+        let dk = DenseKernel::from_measures(&mu, &nu, eps);
+        let log_k: Vec<Vec<f64>> = (0..20)
+            .map(|i| (0..20).map(|j| -(dk.cost()[(i, j)] as f64) / eps).collect())
+            .collect();
+        let t: Vec<f64> = (0..20).map(|j| (j as f64) * 0.1 - 1.0).collect();
+        let mut out = vec![0.0f64; 20];
+        LogKernelOp::apply_log(&dk, &t, &mut out);
+        let want = reference_apply_log(&log_k, &t);
+        for i in 0..20 {
+            assert!((out[i] - want[i]).abs() < 1e-12, "row {i}");
+        }
+        // Transposed: compare against the transposed reference.
+        let log_k_t: Vec<Vec<f64>> =
+            (0..20).map(|j| (0..20).map(|i| log_k[i][j]).collect()).collect();
+        let mut out_t = vec![0.0f64; 20];
+        LogKernelOp::apply_log_t(&dk, &t, &mut out_t);
+        let want_t = reference_apply_log(&log_k_t, &t);
+        for j in 0..20 {
+            assert!((out_t[j] - want_t[j]).abs() < 1e-12, "col {j}");
+        }
+    }
+
+    #[test]
+    fn factored_apply_log_matches_materialised_log_kernel() {
+        // The factored nested-logsumexp path against a dense f64
+        // materialisation of the same log kernel — at an eps small enough
+        // that the *exponentiated* factors are useless (clamped), which
+        // is exactly the regime the log path exists for.
+        let mut rng = Rng::seed_from(1);
+        let (mu, nu) = data::gaussian_blobs(15, &mut rng);
+        let eps = 1e-3;
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, 24, &mut rng);
+        let lx = map.log_feature_matrix(&mu.points);
+        let ly = map.log_feature_matrix(&nu.points);
+        let fk = FactoredKernel::from_log_factors(lx.clone(), ly.clone());
+        let log_k = dense_log_kernel(&lx, &ly);
+
+        let t: Vec<f64> = (0..15).map(|j| (j as f64) * 2.0 - 10.0).collect();
+        let mut out = vec![0.0f64; 15];
+        LogKernelOp::apply_log(&fk, &t, &mut out);
+        let want = reference_apply_log(&log_k, &t);
+        for i in 0..15 {
+            let rel = (out[i] - want[i]).abs() / want[i].abs().max(1.0);
+            assert!(rel < 1e-10, "row {i}: {} vs {}", out[i], want[i]);
+        }
+
+        let log_k_t: Vec<Vec<f64>> =
+            (0..15).map(|j| (0..15).map(|i| log_k[i][j]).collect()).collect();
+        let mut out_t = vec![0.0f64; 15];
+        LogKernelOp::apply_log_t(&fk, &t, &mut out_t);
+        let want_t = reference_apply_log(&log_k_t, &t);
+        for j in 0..15 {
+            let rel = (out_t[j] - want_t[j]).abs() / want_t[j].abs().max(1.0);
+            assert!(rel < 1e-10, "col {j}");
+        }
+    }
+
+    #[test]
+    fn factored_log_view_consistent_with_plain_applies_at_moderate_eps() {
+        // Where nothing clamps, exp(apply_log(log v)) must equal the
+        // plain apply (up to f32-vs-f64 rounding): the two views are the
+        // same operator.
+        let mut rng = Rng::seed_from(2);
+        let (mu, nu) = data::gaussian_blobs(25, &mut rng);
+        let eps = 1.0;
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, 32, &mut rng);
+        let fk = FactoredKernel::from_measures_stabilized(&map, &mu, &nu);
+        let v: Vec<f32> = (0..25).map(|j| 0.2 + 0.01 * j as f32).collect();
+        let plain = fk.apply(&v);
+        let log_v: Vec<f64> = v.iter().map(|&x| (x as f64).ln()).collect();
+        let mut log_out = vec![0.0f64; 25];
+        LogKernelOp::apply_log(&fk, &log_v, &mut log_out);
+        for i in 0..25 {
+            // apply() returns the *represented* kernel (scaled by
+            // exp(-log_scale)); the log view is the true kernel.
+            let want = log_out[i].exp() * (-fk.log_scale()).exp();
+            let rel = ((plain[i] as f64) - want).abs() / want.abs().max(1e-30);
+            assert!(rel < 1e-4, "row {i}: plain {} vs exp(log) {}", plain[i], want);
+        }
+    }
+
+    #[test]
+    fn cost_matrix_adapter_matches_dense_kernel_view() {
+        let mut rng = Rng::seed_from(3);
+        let (mu, nu) = data::gaussian_blobs(12, &mut rng);
+        let eps = 0.05;
+        let dk = DenseKernel::from_measures(&mu, &nu, eps);
+        let adapter = CostMatrixLogKernel::new(dk.cost(), eps);
+        let t: Vec<f64> = (0..12).map(|j| -(j as f64)).collect();
+        let (mut a, mut b) = (vec![0.0f64; 12], vec![0.0f64; 12]);
+        LogKernelOp::apply_log(&dk, &t, &mut a);
+        adapter.apply_log(&t, &mut b);
+        assert_eq!(a, b, "adapter and DenseKernel stream the same cost");
+        assert_eq!(adapter.shape(), (12, 12));
+        assert!(adapter.describe().contains("cost-matrix"));
+    }
+
+    #[test]
+    fn from_matrix_log_view_round_trips() {
+        // DenseKernel::from_matrix reconstructs cost = -eps log k; its
+        // log view must reproduce log k.
+        let k = Mat::from_rows(&[vec![0.5, 0.1], vec![0.25, 1.0]]);
+        let dk = DenseKernel::from_matrix(k.clone(), 0.7);
+        let t = vec![f64::NEG_INFINITY, 0.0];
+        let mut out = vec![0.0f64; 2];
+        LogKernelOp::apply_log(&dk, &t, &mut out);
+        // With t = (-inf, 0), out_i = log k[i][1].
+        assert!((out[0] - (0.1f64).ln()).abs() < 1e-6);
+        assert!((out[1] - (1.0f64).ln()).abs() < 1e-6);
+    }
+}

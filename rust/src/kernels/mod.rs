@@ -12,6 +12,13 @@
 //!   data-adaptive low rank, O(r(n+m)) per apply but **not** positivity-
 //!   safe; [`NystromKernel::validate_positive`] surfaces the failure mode
 //!   the paper contrasts against.
+//!
+//! Kernels that can also stream *log-space* applies — the row/column
+//! logsumexp of `log K + input` that log-domain Sinkhorn iterates —
+//! additionally implement [`LogKernelOp`] (see [`logspace`]) and expose
+//! it through [`KernelOp::as_log_kernel`], which is how the solvers
+//! escalate to the stabilised path at small eps without knowing the
+//! concrete kernel type.
 
 use crate::data::Measure;
 use crate::error::{Error, Result};
@@ -19,6 +26,10 @@ use crate::features::{self, FeatureMap};
 use crate::linalg::{self, Mat};
 use crate::rng::Rng;
 use crate::runtime::pool::Pool;
+
+pub mod logspace;
+
+pub use logspace::{CostMatrixLogKernel, LogKernelOp};
 
 /// Matrix-free kernel operator.
 pub trait KernelOp {
@@ -68,13 +79,30 @@ pub trait KernelOp {
 
     /// Human-readable label for reports.
     fn label(&self) -> String;
+
+    /// The log-domain view of this kernel, when it supports matrix-free
+    /// log-space applies ([`LogKernelOp`]). Solvers use this to escalate
+    /// to the stabilised log-domain iteration when plain Alg. 1 produces
+    /// non-finite scalings at small eps. Defaults to `None` (e.g.
+    /// Nyström, whose approximation can go negative, has no log kernel).
+    fn as_log_kernel(&self) -> Option<&dyn LogKernelOp> {
+        None
+    }
 }
 
 /// Explicit dense Gibbs kernel `K_ij = exp(-||x_i - y_j||^2 / eps)`.
+///
+/// The kernel keeps the *cost matrix* it was exponentiated from: `k` is
+/// floored at `exp(LOG_FLOOR)` for f32 positivity, but the log-domain
+/// path ([`LogKernelOp`]) reads `-cost/eps` unclamped, which is what
+/// makes the dense baseline exact at regularisations where `k` itself
+/// has flushed to the floor.
 pub struct DenseKernel {
     /// The materialised kernel matrix (n, m).
     pub k: Mat,
     pub eps: f64,
+    /// The cost matrix C with `K = exp(-C/eps)` before flooring.
+    cost: Mat,
 }
 
 impl DenseKernel {
@@ -82,10 +110,10 @@ impl DenseKernel {
     pub fn from_measures(mu: &Measure, nu: &Measure, eps: f64) -> Self {
         assert_eq!(mu.dim(), nu.dim());
         let (n, m) = (mu.len(), nu.len());
-        let mut k = Mat::zeros(n, m);
+        let mut cost = Mat::zeros(n, m);
         for i in 0..n {
             let xi = mu.points.row(i);
-            let row = k.row_mut(i);
+            let row = cost.row_mut(i);
             for (j, cell) in row.iter_mut().enumerate() {
                 let yj = nu.points.row(j);
                 let d2: f64 = xi
@@ -93,19 +121,39 @@ impl DenseKernel {
                     .zip(yj)
                     .map(|(&a, &b)| ((a - b) as f64) * ((a - b) as f64))
                     .sum();
-                // Same underflow floor as the feature maps: keeps rows of K
-                // strictly positive in f32 so tiny-eps runs fail loudly in
-                // the *marginals*, not silently via 0-division.
-                *cell = (-d2 / eps).max(crate::features::LOG_FLOOR as f64).exp() as f32;
+                *cell = d2 as f32;
             }
         }
-        DenseKernel { k, eps }
+        Self::from_cost_owned(cost, eps)
     }
 
     /// Build from an arbitrary cost matrix.
     pub fn from_cost(cost: &Mat, eps: f64) -> Self {
-        let k = cost.map(|c| ((-c as f64 / eps).max(crate::features::LOG_FLOOR as f64)).exp() as f32);
-        DenseKernel { k, eps }
+        Self::from_cost_owned(cost.clone(), eps)
+    }
+
+    fn from_cost_owned(cost: Mat, eps: f64) -> Self {
+        // Same underflow floor as the feature maps: keeps rows of K
+        // strictly positive in f32 so tiny-eps runs fail loudly in the
+        // *marginals*, not silently via 0-division. The unfloored cost is
+        // retained for the log-domain path.
+        let k = cost
+            .map(|c| ((-c as f64 / eps).max(crate::features::LOG_FLOOR as f64)).exp() as f32);
+        DenseKernel { k, eps, cost }
+    }
+
+    /// Build from an explicit kernel matrix (all entries must be
+    /// positive); the cost is reconstructed as `-eps log k`, so the
+    /// log-domain view agrees with the given matrix exactly (up to f32
+    /// rounding of the logs).
+    pub fn from_matrix(k: Mat, eps: f64) -> Self {
+        let cost = k.map(|v| (-eps * (v as f64).ln()) as f32);
+        DenseKernel { k, eps, cost }
+    }
+
+    /// The retained cost matrix (`K = exp(-cost/eps)` before flooring).
+    pub fn cost(&self) -> &Mat {
+        &self.cost
     }
 }
 
@@ -137,6 +185,10 @@ impl KernelOp for DenseKernel {
     fn label(&self) -> String {
         format!("Sin(dense {}x{})", self.rows(), self.cols())
     }
+
+    fn as_log_kernel(&self) -> Option<&dyn LogKernelOp> {
+        Some(self)
+    }
 }
 
 /// The paper's factored kernel `K = Phi_x Phi_y^T` with positive factors.
@@ -150,6 +202,14 @@ pub struct FactoredKernel {
     pub phi_x: Mat,
     /// (m, r) strictly positive.
     pub phi_y: Mat,
+    /// Raw log factors: `log K_true = logsumexp_k(log_phi_x + log_phi_y)`
+    /// exactly, with no shift and no f32 underflow floor. The log-domain
+    /// applies ([`LogKernelOp`]) stream these at O(r(n+m)) per apply.
+    /// Pre-populated by [`FactoredKernel::from_log_factors`] (which holds
+    /// the raw logs anyway); computed lazily as elementwise `ln` on first
+    /// log-domain use otherwise, so plain-path constructions (e.g. the
+    /// GAN's per-step kernels) pay nothing for the capability.
+    log_factors: std::sync::OnceLock<(Mat, Mat)>,
     /// `K_true = exp(log_scale) * phi_x phi_y^T` (0 for unscaled factors).
     log_scale: f64,
     /// Scratch for the r-vector between the two matvecs.
@@ -206,24 +266,30 @@ impl FactoredKernel {
     }
 
     /// Build from log-feature matrices, normalising each by its max.
-    pub fn from_log_factors(mut lx: Mat, mut ly: Mat) -> Self {
+    ///
+    /// The raw log factors are retained for the [`LogKernelOp`] path, so
+    /// the log-domain view of this kernel is exact even where the
+    /// exponentiated f32 factors hit the `LOG_FLOOR` clamp.
+    pub fn from_log_factors(lx: Mat, ly: Mat) -> Self {
         assert_eq!(lx.cols(), ly.cols(), "factor rank mismatch");
         let sx = lx.max_entry() as f64;
         let sy = ly.max_entry() as f64;
-        for v in lx.data_mut().iter_mut() {
-            *v = (*v - sx as f32)
-                .clamp(crate::features::LOG_FLOOR, crate::features::LOG_CEIL)
-                .exp();
-        }
-        for v in ly.data_mut().iter_mut() {
-            *v = (*v - sy as f32)
-                .clamp(crate::features::LOG_FLOOR, crate::features::LOG_CEIL)
-                .exp();
-        }
+        let clamp_exp = |shift: f64| {
+            move |v: f32| {
+                (v - shift as f32)
+                    .clamp(crate::features::LOG_FLOOR, crate::features::LOG_CEIL)
+                    .exp()
+            }
+        };
+        let phi_x = lx.map(clamp_exp(sx));
+        let phi_y = ly.map(clamp_exp(sy));
         let r = lx.cols();
+        let log_factors = std::sync::OnceLock::new();
+        log_factors.set((lx, ly)).ok();
         FactoredKernel {
-            phi_x: lx,
-            phi_y: ly,
+            phi_x,
+            phi_y,
+            log_factors,
             log_scale: sx + sy,
             scratch: std::sync::Mutex::new(vec![0.0; r]),
             pool: Pool::serial(),
@@ -231,17 +297,37 @@ impl FactoredKernel {
     }
 
     /// Build from explicit factor matrices (e.g. computed by the AOT'd
-    /// Pallas kernel through the PJRT runtime).
+    /// Pallas kernel through the PJRT runtime). The log factors for the
+    /// [`LogKernelOp`] path are the elementwise logs (`-inf` for exact
+    /// zeros, which logsumexp treats as absent terms), computed on first
+    /// log-domain use.
+    ///
+    /// The log view is exact **for the factors as given**: if they came
+    /// from a clamp-floored feature evaluation (`eval_into` floors at
+    /// `exp(LOG_FLOOR)`), the floor is part of the kernel this operator
+    /// represents — in plain and log domain alike. For small-eps
+    /// fidelity to the unclamped kernel, build from raw log features
+    /// instead ([`FactoredKernel::from_measures_stabilized`] /
+    /// [`FactoredKernel::from_log_factors`], whose retained raw logs
+    /// bypass the floor entirely); see EXPERIMENTS.md §Stabilisation.
     pub fn from_factors(phi_x: Mat, phi_y: Mat) -> Self {
         assert_eq!(phi_x.cols(), phi_y.cols(), "factor rank mismatch");
         let r = phi_x.cols();
         FactoredKernel {
             phi_x,
             phi_y,
+            log_factors: std::sync::OnceLock::new(),
             log_scale: 0.0,
             scratch: std::sync::Mutex::new(vec![0.0; r]),
             pool: Pool::serial(),
         }
+    }
+
+    /// The raw log factors backing the [`LogKernelOp`] view (lazily
+    /// `ln(phi)` when the kernel was built from exponentiated factors).
+    fn log_factors(&self) -> &(Mat, Mat) {
+        self.log_factors
+            .get_or_init(|| (self.phi_x.map(f32::ln), self.phi_y.map(f32::ln)))
     }
 
     /// Set the intra-apply parallelism policy. The pooled matvec kernels
@@ -252,9 +338,9 @@ impl FactoredKernel {
         self
     }
 
-    /// The kernel's parallelism policy.
+    /// The kernel's parallelism policy (cloning shares the same workers).
     pub fn pool(&self) -> Pool {
-        self.pool
+        self.pool.clone()
     }
 
     /// Feature count r.
@@ -319,6 +405,10 @@ impl KernelOp for FactoredKernel {
 
     fn label(&self) -> String {
         format!("RF(r={} {}x{})", self.rank(), self.rows(), self.cols())
+    }
+
+    fn as_log_kernel(&self) -> Option<&dyn LogKernelOp> {
+        Some(self)
     }
 }
 
@@ -714,9 +804,19 @@ mod debug_nystrom2 {
                 let mut rng = Rng::seed_from(3);
                 let (mu, nu) = data::gaussian_blobs(2000, &mut rng);
                 let nk = NystromKernel::from_measures(&mu, &nu, eps, rank, &mut rng);
-                let cfg = SinkhornConfig { epsilon: eps, max_iters: 2000, tol: 1e-4, check_every: 10, threads: 1 };
+                let cfg = SinkhornConfig {
+                    epsilon: eps,
+                    max_iters: 2000,
+                    tol: 1e-4,
+                    check_every: 10,
+                    threads: 1,
+                    stabilize: false,
+                };
                 match sinkhorn(&nk, &mu.weights, &nu.weights, &cfg) {
-                    Ok(s) => println!("eps={eps} rank={rank}: OK obj={:.4} iters={}", s.objective, s.iterations),
+                    Ok(s) => println!(
+                        "eps={eps} rank={rank}: OK obj={:.4} iters={}",
+                        s.objective, s.iterations
+                    ),
                     Err(e) => println!("eps={eps} rank={rank}: FAIL {e:.60}"),
                 }
             }

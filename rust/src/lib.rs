@@ -22,14 +22,20 @@
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation, and the binary is self-contained afterwards.
 //!
-//! Two cross-cutting L3 subsystems (see README.md and EXPERIMENTS.md
-//! §Parallel scaling):
+//! Three cross-cutting L3 subsystems (see README.md and EXPERIMENTS.md
+//! §Parallel scaling / §Stabilisation):
 //!
-//! * [`runtime::pool`] — the intra-solve parallel execution layer:
-//!   row-chunked pooled matvecs ([`linalg`]), parallel feature
+//! * [`runtime::pool`] — the intra-solve parallel execution layer, a
+//!   persistent channel-fed worker pool behind the row-chunked pooled
+//!   matvecs and logsumexp reductions ([`linalg`]), parallel feature
 //!   evaluation ([`features::par_feature_matrix`]) and the concurrent
 //!   three-problem divergence ([`sinkhorn::sinkhorn_divergence`]),
 //!   all deterministic in the thread count.
+//! * [`kernels::LogKernelOp`] — the matrix-free log-domain operator
+//!   behind [`sinkhorn::sinkhorn_log_domain`]: small-eps stabilisation
+//!   that stays O(r(n+m)) on factored kernels, with automatic
+//!   escalation from plain Alg. 1 ([`sinkhorn::sinkhorn_stabilized`],
+//!   `sinkhorn.stabilize`).
 //! * [`coordinator::cache`] — the shared `(dim, eps, r)`-keyed
 //!   feature-map cache that amortises the Lemma-1 anchor draw across
 //!   requests, with hit/miss counters in [`metrics`].
@@ -78,11 +84,14 @@ pub mod prelude {
     pub use crate::data::{self, Measure};
     pub use crate::error::{Error, Result};
     pub use crate::features::{ArcCosFeatureMap, FeatureMap, GaussianFeatureMap};
-    pub use crate::kernels::{DenseKernel, FactoredKernel, KernelOp, NystromKernel};
+    pub use crate::kernels::{
+        CostMatrixLogKernel, DenseKernel, FactoredKernel, KernelOp, LogKernelOp, NystromKernel,
+    };
     pub use crate::linalg::Mat;
     pub use crate::rng::Rng;
     pub use crate::runtime::pool::Pool;
     pub use crate::sinkhorn::{
-        sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, SinkhornSolution,
+        sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, sinkhorn_log_domain,
+        sinkhorn_stabilized, SinkhornSolution,
     };
 }

@@ -15,8 +15,10 @@ mod ops;
 
 pub use mat::Mat;
 pub use ops::{
-    axpy, dot, l1_diff, l1_norm, logsumexp, matmul, matvec, matvec_into, matvec_into_pooled,
-    matvec_t, matvec_t_into, matvec_t_into_pooled, max_abs_diff, scale, softmax_inplace, sum,
+    axpy, dot, l1_diff, l1_norm, logsumexp, lse_matvec_into, lse_matvec_into_pooled,
+    lse_matvec_t_into, lse_matvec_t_into_pooled, matmul, matvec, matvec_into,
+    matvec_into_pooled, matvec_t, matvec_t_into, matvec_t_into_pooled, max_abs_diff, scale,
+    softmax_inplace, sum,
 };
 
 #[cfg(test)]
@@ -90,6 +92,72 @@ mod tests {
         let att = a.transpose().transpose();
         assert_eq!(a.rows(), att.rows());
         assert!(max_abs_diff(a.data(), att.data()) == 0.0);
+    }
+
+    fn naive_lse_matvec(a: &Mat, alpha: f64, t: &[f64]) -> Vec<f64> {
+        (0..a.rows())
+            .map(|i| {
+                let terms: Vec<f64> =
+                    a.row(i).iter().zip(t).map(|(&x, &tj)| alpha * x as f64 + tj).collect();
+                let m = terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                if !m.is_finite() {
+                    return m;
+                }
+                m + terms.iter().map(|&v| (v - m).exp()).sum::<f64>().ln()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lse_matvec_matches_naive() {
+        let mut rng = Rng::seed_from(11);
+        for &(m, k) in &[(1usize, 1usize), (3, 7), (40, 33), (130, 5)] {
+            let a = rand_mat(&mut rng, m, k);
+            let t: Vec<f64> = (0..k).map(|_| rng.normal_f32() as f64 * 3.0).collect();
+            let alpha = -2.0;
+            let mut got = vec![0.0f64; m];
+            lse_matvec_into(&a, alpha, &t, &mut got);
+            let want = naive_lse_matvec(&a, alpha, &t);
+            for i in 0..m {
+                assert!((got[i] - want[i]).abs() < 1e-12, "({m},{k}) row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn lse_matvec_t_matches_naive_via_transpose() {
+        let mut rng = Rng::seed_from(12);
+        for &(m, k) in &[(1usize, 1usize), (5, 3), (64, 17), (200, 9)] {
+            let a = rand_mat(&mut rng, m, k);
+            let u: Vec<f64> = (0..m).map(|_| rng.normal_f32() as f64 * 3.0).collect();
+            let alpha = -0.5;
+            let mut got = vec![0.0f64; k];
+            lse_matvec_t_into(&a, alpha, &u, &mut got);
+            let want = naive_lse_matvec(&a.transpose(), alpha, &u);
+            for j in 0..k {
+                assert!((got[j] - want[j]).abs() < 1e-12, "({m},{k}) col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn lse_matvec_survives_extreme_log_inputs() {
+        // Inputs around ±1e4 (the alpha/eps scale of small-eps log-domain
+        // Sinkhorn): plain exp would over/underflow, the shifted form
+        // stays finite and exact in the dominant term.
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let t = vec![-2e4f64, -1e4];
+        let mut out = vec![0.0f64; 2];
+        lse_matvec_into(&a, 1.0, &t, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!((out[0] - (-1e4 + 2.0)).abs() < 1e-6);
+        // All-(-inf) rows report -inf rather than NaN.
+        let mut out1 = vec![0.0f64; 2];
+        lse_matvec_into(&a, 1.0, &[f64::NEG_INFINITY; 2], &mut out1);
+        assert!(out1.iter().all(|x| *x == f64::NEG_INFINITY));
+        let mut out2 = vec![0.0f64; 2];
+        lse_matvec_t_into(&a, 1.0, &[f64::NEG_INFINITY; 2], &mut out2);
+        assert!(out2.iter().all(|x| *x == f64::NEG_INFINITY));
     }
 
     #[test]

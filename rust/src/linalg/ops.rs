@@ -10,6 +10,13 @@
 //! allocation-free rule: the pooled transposed matvec allocates its
 //! per-chunk partial buffers when the row count exceeds one chunk
 //! (1024 rows) — a few KB against a millisecond-scale apply.
+//!
+//! The `lse_matvec*` family is the log-domain counterpart: chunk-gridded
+//! logsumexp reductions of `alpha * A + input` over rows/columns, in f64,
+//! used by [`crate::kernels::LogKernelOp`] to run small-eps stabilised
+//! Sinkhorn without materialising a kernel (EXPERIMENTS.md
+//! §Stabilisation). The transposed variants allocate per-column `(max,
+//! sumexp)` scratch — O(k) against an O(nk) reduction.
 
 use super::Mat;
 use crate::runtime::pool::Pool;
@@ -22,6 +29,15 @@ const PAR_ROW_CHUNK: usize = 256;
 /// *fixed* grid — chunk boundaries never depend on the thread count — so
 /// the chunked reduction is deterministic for any pool size.
 const PAR_T_CHUNK: usize = 1024;
+
+/// Rows per parallel task of [`lse_matvec_into_pooled`]. A logsumexp row
+/// costs an f64 `exp` per entry — far denser than a fused multiply — so
+/// smaller chunks than [`PAR_ROW_CHUNK`] still amortise dispatch.
+const PAR_LSE_ROW_CHUNK: usize = 128;
+
+/// Rows per partial of [`lse_matvec_t_into_pooled`]'s column reduction.
+/// Fixed grid, same determinism argument as [`PAR_T_CHUNK`].
+const PAR_LSE_T_CHUNK: usize = 1024;
 
 /// One row dot of the blocked accumulation scheme (shared by the serial
 /// and pooled matvecs so both produce bitwise-identical rows).
@@ -187,6 +203,169 @@ pub fn matvec_t(a: &Mat, v: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0; a.cols()];
     matvec_t_into(a, v, &mut out);
     out
+}
+
+/// One row of the log-space matvec:
+/// `logsumexp_j(alpha * row[j] + t[j])`, two passes (max, then sum of
+/// shifted exps) entirely in f64. Shared by the serial and pooled
+/// row-streamed variants so both produce bitwise-identical rows. Returns
+/// `-inf` when every term is `-inf` (an all-zero kernel row).
+#[inline]
+fn lse_row(row: &[f32], alpha: f64, t: &[f64]) -> f64 {
+    let mut m = f64::NEG_INFINITY;
+    for (&aij, &tj) in row.iter().zip(t) {
+        let v = alpha * aij as f64 + tj;
+        if v > m {
+            m = v;
+        }
+    }
+    if !m.is_finite() {
+        return m;
+    }
+    let mut s = 0.0f64;
+    for (&aij, &tj) in row.iter().zip(t) {
+        s += (alpha * aij as f64 + tj - m).exp();
+    }
+    m + s.ln()
+}
+
+/// Row-streamed log-space matvec:
+/// `out[i] = logsumexp_j(alpha * a[i, j] + t[j])`.
+///
+/// This is the row update of log-domain Sinkhorn: with `a` a cost matrix
+/// and `alpha = -1/eps` it evaluates `logsumexp_j(log K_ij + t_j)`
+/// without ever forming `K`; with `a` a log-factor matrix and
+/// `alpha = 1` it is the outer reduction of the factored log-kernel
+/// apply. All arithmetic is f64 (log-domain quantities at small eps sit
+/// far outside f32 range).
+pub fn lse_matvec_into(a: &Mat, alpha: f64, t: &[f64], out: &mut [f64]) {
+    assert_eq!(a.cols(), t.len(), "lse_matvec: {}x{} @ {}", a.rows(), a.cols(), t.len());
+    assert_eq!(a.rows(), out.len(), "lse_matvec: output length");
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = lse_row(a.row(i), alpha, t);
+    }
+}
+
+/// Row-chunked parallel [`lse_matvec_into`].
+///
+/// Rows are independent and share the per-row `lse_row` kernel with the
+/// serial path, so the result is bitwise identical to [`lse_matvec_into`]
+/// for every pool size (property-tested in
+/// `rust/tests/parallel_equivalence.rs`). Small problems and serial pools
+/// fall through to the serial loop.
+pub fn lse_matvec_into_pooled(a: &Mat, alpha: f64, t: &[f64], out: &mut [f64], pool: &Pool) {
+    assert_eq!(a.cols(), t.len(), "lse_matvec: {}x{} @ {}", a.rows(), a.cols(), t.len());
+    assert_eq!(a.rows(), out.len(), "lse_matvec: output length");
+    if pool.threads() <= 1 || a.rows() < 2 * PAR_LSE_ROW_CHUNK {
+        lse_matvec_into(a, alpha, t, out);
+        return;
+    }
+    let tasks: Vec<(usize, &mut [f64])> = out.chunks_mut(PAR_LSE_ROW_CHUNK).enumerate().collect();
+    pool.run_tasks(tasks, |(c, chunk)| {
+        let base = c * PAR_LSE_ROW_CHUNK;
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = lse_row(a.row(base + i), alpha, t);
+        }
+    });
+}
+
+/// Per-column (max, sum-of-shifted-exps) accumulation over rows
+/// `lo..hi`, the building block both transposed logsumexp variants share.
+/// `mx`/`sum` must come in as `(-inf, 0.0)` per column.
+fn lse_accum_rows(
+    a: &Mat,
+    alpha: f64,
+    u: &[f64],
+    lo: usize,
+    hi: usize,
+    mx: &mut [f64],
+    sum: &mut [f64],
+) {
+    // Pass 1: per-column max over the row range.
+    for i in lo..hi {
+        let ui = u[i];
+        for (m, &aij) in mx.iter_mut().zip(a.row(i)) {
+            let v = alpha * aij as f64 + ui;
+            if v > *m {
+                *m = v;
+            }
+        }
+    }
+    // Pass 2: shifted exponentials (columns whose max is -inf stay 0).
+    for i in lo..hi {
+        let ui = u[i];
+        for ((s, &m), &aij) in sum.iter_mut().zip(mx.iter()).zip(a.row(i)) {
+            if m.is_finite() {
+                *s += (alpha * aij as f64 + ui - m).exp();
+            }
+        }
+    }
+}
+
+/// Column-reducing log-space matvec:
+/// `out[j] = logsumexp_i(alpha * a[i, j] + u[i])` — the transposed
+/// (column) update of log-domain Sinkhorn, f64 throughout.
+pub fn lse_matvec_t_into(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64]) {
+    let (n, k) = a.shape();
+    assert_eq!(n, u.len(), "lse_matvec_t: {}x{} ^T @ {}", n, k, u.len());
+    assert_eq!(k, out.len(), "lse_matvec_t: output length");
+    let mut mx = vec![f64::NEG_INFINITY; k];
+    let mut sum = vec![0.0f64; k];
+    lse_accum_rows(a, alpha, u, 0, n, &mut mx, &mut sum);
+    for ((o, &m), &s) in out.iter_mut().zip(&mx).zip(&sum) {
+        *o = if m.is_finite() { m + s.ln() } else { m };
+    }
+}
+
+/// Row-chunked parallel [`lse_matvec_t_into`].
+///
+/// Like [`matvec_t_into_pooled`], the reduction runs across rows, so
+/// parallel execution keeps per-chunk partials — here `(max, sumexp)`
+/// pairs — on a *fixed* grid (`PAR_LSE_T_CHUNK` = 1024 rows per partial,
+/// independent of the thread count) and merges them in chunk-index order
+/// on one thread: `M = max_c m_c`, `S = sum_c s_c * exp(m_c - M)`. The
+/// result is therefore identical for every pool size (the code path
+/// depends only on `n`), and matches the serial kernel up to the chunked
+/// merge's f64 rounding — property-tested in
+/// `rust/tests/parallel_equivalence.rs`. Single-chunk problems
+/// (`n ≤ 1024`) take the serial path directly for every pool size.
+pub fn lse_matvec_t_into_pooled(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64], pool: &Pool) {
+    let (n, k) = a.shape();
+    assert_eq!(n, u.len(), "lse_matvec_t: {}x{} ^T @ {}", n, k, u.len());
+    assert_eq!(k, out.len(), "lse_matvec_t: output length");
+    if n <= PAR_LSE_T_CHUNK {
+        lse_matvec_t_into(a, alpha, u, out);
+        return;
+    }
+    let nchunks = (n + PAR_LSE_T_CHUNK - 1) / PAR_LSE_T_CHUNK;
+    let mut partials: Vec<(Vec<f64>, Vec<f64>)> =
+        (0..nchunks).map(|_| (vec![f64::NEG_INFINITY; k], vec![0.0f64; k])).collect();
+    let tasks: Vec<(usize, &mut (Vec<f64>, Vec<f64>))> = partials.iter_mut().enumerate().collect();
+    pool.run_tasks(tasks, |(c, (mx, sum))| {
+        let lo = c * PAR_LSE_T_CHUNK;
+        let hi = (lo + PAR_LSE_T_CHUNK).min(n);
+        lse_accum_rows(a, alpha, u, lo, hi, mx, sum);
+    });
+    // Deterministic single-thread merge in chunk order.
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut m = f64::NEG_INFINITY;
+        for (mx, _) in &partials {
+            if mx[j] > m {
+                m = mx[j];
+            }
+        }
+        if !m.is_finite() {
+            *o = m;
+            continue;
+        }
+        let mut s = 0.0f64;
+        for (mx, sum) in &partials {
+            if mx[j].is_finite() {
+                s += sum[j] * (mx[j] - m).exp();
+            }
+        }
+        *o = m + s.ln();
+    }
 }
 
 /// Blocked `a @ b` (off the Sinkhorn hot path; used by Nyström, the GAN

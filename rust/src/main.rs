@@ -23,7 +23,9 @@ use linear_sinkhorn::{coordinator, data, features::FeatureMap, features::SphereL
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
-        eprintln!("usage: linear-sinkhorn <divergence|tradeoff|barycenter|gan-train|serve|runtime> [--help]");
+        eprintln!(
+            "usage: linear-sinkhorn <divergence|tradeoff|barycenter|gan-train|serve|runtime> [--help]"
+        );
         std::process::exit(2);
     }
     let cmd = args.remove(0);
@@ -52,6 +54,18 @@ fn parse(spec: ArgSpec, args: Vec<String>) -> linear_sinkhorn::cli::Args {
     }
 }
 
+/// Parse an `on`/`off` CLI value (also accepts true/false and 1/0).
+fn parse_on_off(name: &str, value: &str) -> bool {
+    match value {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => {
+            eprintln!("--{name}: expected on|off, got `{other}`");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_divergence(argv: Vec<String>) -> i32 {
     let a = parse(
         ArgSpec::new("divergence", "Sinkhorn divergence between two Gaussian clouds")
@@ -59,24 +73,43 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
             .opt("eps", "0.5", "entropic regularisation")
             .opt("features", "512", "number of positive random features r")
             .opt("threads", "1", "solver threads (0 = auto-size to the machine)")
+            .opt(
+                "stabilize",
+                "on",
+                "escalate to the log-domain solver on small-eps divergence (on/off)",
+            )
             .opt("seed", "0", "RNG seed"),
         argv,
     );
-    let (n, eps, r, seed) = (a.get_usize("n"), a.get_f64("eps"), a.get_usize("features"), a.get_u64("seed"));
+    let (n, eps, r, seed) =
+        (a.get_usize("n"), a.get_f64("eps"), a.get_usize("features"), a.get_u64("seed"));
+    let stabilize = parse_on_off("stabilize", a.get_str("stabilize"));
     // One --threads budget split across the two parallelism levels: up
     // to 3 concurrent solves, with the remainder row-chunking each
     // solve's matvecs (3-way * kernel pool stays near the budget
     // instead of multiplying to 3*T).
-    let threads = Pool::new(a.get_usize("threads")).threads();
+    let threads = {
+        let requested = a.get_usize("threads");
+        if requested == 0 { linear_sinkhorn::runtime::pool::available_threads() } else { requested }
+    };
     let kernel_pool = Pool::new(((threads + 2) / 3).max(1));
     let mut rng = Rng::seed_from(seed);
     let (mu, nu) = data::gaussian_blobs(n, &mut rng);
     let sw = Stopwatch::start();
     let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
-    let k_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, kernel_pool);
-    let k_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, kernel_pool);
-    let k_yy = FactoredKernel::from_measures_pooled(&map, &nu, &nu, kernel_pool);
-    let cfg = SinkhornConfig { epsilon: eps, threads: threads.min(3), ..Default::default() };
+    // Stabilised factors + the log-domain fallback: any eps a user types
+    // should produce a number, not a NaN (EXPERIMENTS.md §Stabilisation).
+    let k_xy =
+        FactoredKernel::from_measures_stabilized_pooled(&map, &mu, &nu, kernel_pool.clone());
+    let k_xx =
+        FactoredKernel::from_measures_stabilized_pooled(&map, &mu, &mu, kernel_pool.clone());
+    let k_yy = FactoredKernel::from_measures_stabilized_pooled(&map, &nu, &nu, kernel_pool);
+    let cfg = SinkhornConfig {
+        epsilon: eps,
+        threads: threads.min(3),
+        stabilize,
+        ..Default::default()
+    };
     match sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg) {
         Ok(d) => {
             println!(
@@ -109,13 +142,14 @@ fn cmd_tradeoff(argv: Vec<String>) -> i32 {
 
     let sw = Stopwatch::start();
     let dense = DenseKernel::from_measures(&mu, &nu, eps);
-    let truth = match linear_sinkhorn::sinkhorn::ground_truth_rot(&dense, &mu.weights, &nu.weights, eps) {
-        Ok(t) => t,
-        Err(e) => {
-            eprintln!("ground truth failed: {e}");
-            return 1;
-        }
-    };
+    let truth =
+        match linear_sinkhorn::sinkhorn::ground_truth_rot(&dense, &mu.weights, &nu.weights, eps) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("ground truth failed: {e}");
+                return 1;
+            }
+        };
     println!("Sin ground truth: {truth:.6} in {:.2}s", sw.elapsed_secs());
 
     let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
@@ -245,6 +279,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
             .opt("workers", "4", "worker threads")
             .opt("solver-threads", "1", "intra-solve threads per worker (0 = auto)")
             .opt("cache", "8", "feature-map cache capacity (0 = disabled)")
+            .opt("stabilize", "on", "log-domain escalation for small-eps requests (on/off)")
             .opt("requests", "32", "number of requests to send")
             .opt("n", "500", "samples per cloud per request")
             .opt("config", "", "optional TOML config file (replaces ALL service flags)"),
@@ -256,6 +291,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         cache_capacity: a.get_usize("cache"),
         ..Default::default()
     };
+    cfg.sinkhorn.stabilize = parse_on_off("stabilize", a.get_str("stabilize"));
     let cfg_path = a.get_str("config");
     if !cfg_path.is_empty() {
         match linear_sinkhorn::config::ConfigDoc::parse_file(cfg_path) {
@@ -263,7 +299,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
                 cfg = ServiceConfig::from_doc(&doc);
                 eprintln!(
                     "note: --config replaces all service flags \
-                     (--workers/--solver-threads/--cache ignored)"
+                     (--workers/--solver-threads/--cache/--stabilize ignored)"
                 );
             }
             Err(e) => {

@@ -28,7 +28,8 @@ impl Rng {
     /// Deterministic construction from a single seed.
     pub fn seed_from(seed: u64) -> Self {
         let mut sm = seed;
-        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        let s =
+            [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
         Rng { s, spare_normal: None }
     }
 

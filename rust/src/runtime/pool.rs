@@ -1,19 +1,39 @@
-//! Intra-solve parallel execution layer: a small scoped worker pool on
-//! `std::thread` (the offline crate set has no rayon), shared by the
-//! row-chunked matvec variants in [`crate::linalg`], the parallel feature
-//! evaluation in [`crate::features`], and the concurrent three-problem
-//! divergence solve in [`crate::sinkhorn::sinkhorn_divergence`].
+//! Intra-solve parallel execution layer: a **persistent channel-fed
+//! worker pool** on `std::thread` (the offline crate set has no rayon),
+//! shared by the row-chunked matvec and logsumexp variants in
+//! [`crate::linalg`], the parallel feature evaluation in
+//! [`crate::features`], and the concurrent three-problem divergence solve
+//! in [`crate::sinkhorn::sinkhorn_divergence`].
 //!
 //! ## Design
 //!
-//! A [`Pool`] is a *policy*, not a set of live threads: it records how many
-//! workers a parallel region may use, and each region spawns that many
-//! scoped threads (`std::thread::scope`) that drain a shared task queue.
-//! Scoped spawning keeps the API free of `'static` bounds — tasks may
-//! borrow the caller's matrices and output buffers directly — at the cost
-//! of a few tens of microseconds of spawn overhead per region, which is
-//! noise against the millisecond-scale matvecs it parallelises (see
-//! EXPERIMENTS.md §Parallel scaling).
+//! A [`Pool`] is a cheap cloneable handle to a set of **live worker
+//! threads** spawned once at construction and fed through an mpsc
+//! channel. Earlier revisions spawned scoped threads per parallel region
+//! (twice per Sinkhorn iteration when pooled); the persistent pool pays
+//! the spawn cost once, so a region dispatch is a channel send plus a
+//! condvar wait — microseconds against the tens-of-microseconds scoped
+//! spawn, which matters exactly at small n where per-region work is short
+//! (EXPERIMENTS.md §Parallel scaling has the measured comparison; the
+//! `parallel_scaling` bench's spawn-overhead case reproduces it).
+//!
+//! Tasks may still borrow the caller's matrices and output buffers
+//! directly, without `'static` bounds: a parallel *region* places its
+//! task queue on the caller's stack, hands the workers type-erased
+//! pointers to it, and — crucially — **blocks until every handed-out
+//! pointer has been consumed and signalled** before returning, so no
+//! worker can observe the region after it is gone. The caller itself
+//! participates in draining the queue, which both removes one spawn from
+//! the critical path and guarantees progress even when all workers are
+//! busy with other regions.
+//!
+//! One rule follows from the blocking hand-shake: **a region task must
+//! not dispatch a new region onto the same pool** (tasks are leaf
+//! compute in this crate: matvec chunks, feature rows, logsumexp chunks,
+//! or whole solves whose inner matvecs run on a *different* pool
+//! instance). Nesting across distinct pools — e.g. the divergence-level
+//! pool vs a kernel's matvec pool — is fine and is exactly how the
+//! coordinator composes them.
 //!
 //! ## Determinism / accuracy contract
 //!
@@ -30,13 +50,19 @@
 //! A thread count of `0` means "auto": resolve to
 //! [`std::thread::available_parallelism`] at construction.
 
-use std::sync::Mutex;
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-/// Worker-count policy for parallel regions. Copyable and cheap; embed it
-/// in kernels/configs freely.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Handle to a persistent worker pool. Cloning shares the same workers;
+/// dropping the last clone shuts them down. Serial pools (`threads == 1`)
+/// hold no threads at all and run every region inline.
+#[derive(Clone, Debug)]
 pub struct Pool {
     threads: usize,
+    inner: Option<Arc<PoolInner>>,
 }
 
 impl Default for Pool {
@@ -50,14 +76,29 @@ impl Default for Pool {
 
 impl Pool {
     /// A pool that may use up to `threads` workers; `0` resolves to the
-    /// machine's available parallelism.
+    /// machine's available parallelism. `threads - 1` OS threads are
+    /// spawned immediately (the caller of each region is the remaining
+    /// worker) and live until the last handle is dropped.
     pub fn new(threads: usize) -> Pool {
-        Pool { threads: if threads == 0 { available_threads() } else { threads } }
+        let resolved = if threads == 0 { available_threads() } else { threads };
+        if resolved <= 1 {
+            return Pool::serial();
+        }
+        Pool { threads: resolved, inner: Some(Arc::new(PoolInner::spawn(resolved - 1))) }
+    }
+
+    /// [`Pool::new`] with the auto-resolved thread count capped at `cap` —
+    /// for regions with a known maximum parallelism (e.g. the three
+    /// transport problems of a divergence), so `threads = 0` doesn't
+    /// spawn machine-width workers that can never be used.
+    pub fn new_capped(threads: usize, cap: usize) -> Pool {
+        let resolved = if threads == 0 { available_threads() } else { threads };
+        Pool::new(resolved.min(cap.max(1)))
     }
 
     /// The serial pool: every region runs inline on the caller's thread.
     pub fn serial() -> Pool {
-        Pool { threads: 1 }
+        Pool { threads: 1, inner: None }
     }
 
     /// A pool sized to the machine (`available_parallelism`).
@@ -65,45 +106,56 @@ impl Pool {
         Pool::new(0)
     }
 
-    /// The resolved worker count (always ≥ 1).
+    /// The resolved worker count (always ≥ 1, counting the region caller).
     pub fn threads(&self) -> usize {
         self.threads.max(1)
     }
 
-    /// Run every task in `tasks`, using up to `threads()` scoped workers
-    /// draining a shared queue. Tasks may borrow caller state: the region
-    /// joins all workers before returning. Order of *execution* across
-    /// workers is unspecified; callers needing deterministic results must
-    /// make tasks independent (disjoint outputs) — see the module docs.
+    /// Run every task in `tasks`, using up to `threads()` executors (the
+    /// calling thread plus persistent workers) draining a shared queue.
+    /// Tasks may borrow caller state: the region blocks until all workers
+    /// that were handed the region have finished with it. Order of
+    /// *execution* across workers is unspecified; callers needing
+    /// deterministic results must make tasks independent (disjoint
+    /// outputs) — see the module docs. Tasks must not dispatch new
+    /// regions onto this same pool (see the module docs).
     ///
-    /// Panics in a task propagate to the caller after all workers join.
+    /// Panics in a task propagate to the caller after the region drains.
     pub fn run_tasks<T, F>(&self, tasks: Vec<T>, f: F)
     where
         T: Send,
         F: Fn(T) + Sync,
     {
-        let workers = self.threads().min(tasks.len());
-        if workers <= 1 {
+        let helpers = match &self.inner {
+            Some(_) if self.threads > 1 => (self.threads - 1).min(tasks.len()),
+            _ => 0,
+        };
+        if helpers == 0 || tasks.len() <= 1 {
             for task in tasks {
                 f(task);
             }
             return;
         }
-        let queue = Mutex::new(tasks.into_iter());
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let task = {
-                        let mut q = queue.lock().unwrap();
-                        q.next()
-                    };
-                    match task {
-                        Some(t) => f(t),
-                        None => break,
-                    }
-                });
-            }
-        });
+        let region = Region {
+            queue: Mutex::new(tasks.into_iter()),
+            f,
+            done: Mutex::new(0),
+            all_done: Condvar::new(),
+            panic: Mutex::new(None),
+        };
+        let inner = self.inner.as_ref().expect("helpers > 0 implies live workers");
+        let sent = inner.send_participants(
+            &region as *const Region<T, F> as *const (),
+            participate_erased::<T, F>,
+            helpers,
+        );
+        // The caller drains too: progress is guaranteed even when every
+        // worker is busy with other regions.
+        region.participate();
+        region.wait_for(sent + 1);
+        if let Some(payload) = region.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
     }
 
     /// Run three independent closures, concurrently when the pool allows
@@ -112,42 +164,174 @@ impl Pool {
     /// on the caller's thread.
     pub fn join3<FA, FB, FC, RA, RB, RC>(&self, fa: FA, fb: FB, fc: FC) -> (RA, RB, RC)
     where
-        FA: FnOnce() -> RA,
-        FB: FnOnce() -> RB,
-        FC: FnOnce() -> RC,
-        FA: Send,
-        FB: Send,
-        FC: Send,
+        FA: FnOnce() -> RA + Send,
+        FB: FnOnce() -> RB + Send,
+        FC: FnOnce() -> RC + Send,
         RA: Send,
         RB: Send,
         RC: Send,
     {
-        match self.threads() {
-            0 | 1 => (fa(), fb(), fc()),
-            // Honor a 2-thread budget: one spawned worker, two closures
-            // on the caller's thread.
-            2 => std::thread::scope(|s| {
-                let hc = s.spawn(fc);
-                let ra = fa();
-                let rb = fb();
-                let rc = hc.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
-                (ra, rb, rc)
-            }),
-            _ => std::thread::scope(|s| {
-                let hb = s.spawn(fb);
-                let hc = s.spawn(fc);
-                let ra = fa();
-                let rb = hb.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
-                let rc = hc.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
-                (ra, rb, rc)
-            }),
+        if self.threads() <= 1 || self.inner.is_none() {
+            return (fa(), fb(), fc());
         }
+        let (sa, sb, sc) = (Mutex::new(None), Mutex::new(None), Mutex::new(None));
+        {
+            let (ra, rb, rc) = (&sa, &sb, &sc);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(move || *ra.lock().unwrap() = Some(fa())),
+                Box::new(move || *rb.lock().unwrap() = Some(fb())),
+                Box::new(move || *rc.lock().unwrap() = Some(fc())),
+            ];
+            self.run_tasks(tasks, |task| task());
+        }
+        (
+            sa.into_inner().unwrap().expect("join3 task a ran"),
+            sb.into_inner().unwrap().expect("join3 task b ran"),
+            sc.into_inner().unwrap().expect("join3 task c ran"),
+        )
     }
 }
 
 /// The machine's available parallelism (≥ 1; 1 when detection fails).
 pub fn available_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A type-erased pointer to a live [`Region`] on some caller's stack,
+/// paired with the monomorphised drain function. Sound because the
+/// region's owner blocks until every envelope recipient signals done.
+struct Envelope {
+    region: *const (),
+    run: unsafe fn(*const ()),
+}
+
+// The pointer is only dereferenced behind the region hand-shake.
+unsafe impl Send for Envelope {}
+
+/// Shared workers + intake channel; dropped when the last [`Pool`] clone
+/// goes away, which disconnects the channel and joins the workers.
+struct PoolInner {
+    tx: Mutex<Option<Sender<Envelope>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for PoolInner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.workers.lock().map(|w| w.len()).unwrap_or(0);
+        write!(f, "PoolInner({n} workers)")
+    }
+}
+
+impl PoolInner {
+    fn spawn(workers: usize) -> PoolInner {
+        let (tx, rx) = channel::<Envelope>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("ls-pool-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        PoolInner { tx: Mutex::new(Some(tx)), workers: Mutex::new(handles) }
+    }
+
+    /// Hand `want` participation envelopes to the workers; returns how
+    /// many were actually sent (the caller must wait for exactly that many
+    /// completions on top of its own).
+    fn send_participants(
+        &self,
+        region: *const (),
+        run: unsafe fn(*const ()),
+        want: usize,
+    ) -> usize {
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else { return 0 };
+        let mut sent = 0;
+        for _ in 0..want {
+            if tx.send(Envelope { region, run }).is_err() {
+                break;
+            }
+            sent += 1;
+        }
+        sent
+    }
+}
+
+impl Drop for PoolInner {
+    fn drop(&mut self) {
+        // Disconnect the channel so parked workers wake and exit, then
+        // join them so no pool thread outlives the last handle.
+        drop(self.tx.lock().unwrap().take());
+        for handle in self.workers.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Envelope>>>) {
+    loop {
+        // Hold the receiver lock only for the blocking recv itself.
+        let envelope = match rx.lock().unwrap().recv() {
+            Ok(e) => e,
+            Err(_) => return, // pool dropped
+        };
+        // Safety: the region owner blocks until this call signals done.
+        unsafe { (envelope.run)(envelope.region) }
+    }
+}
+
+/// One parallel region: a task queue on the caller's stack plus the
+/// completion hand-shake workers signal through.
+struct Region<T, F> {
+    queue: Mutex<std::vec::IntoIter<T>>,
+    f: F,
+    done: Mutex<usize>,
+    all_done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl<T: Send, F: Fn(T) + Sync> Region<T, F> {
+    /// Drain the queue until empty, then signal completion. The signal is
+    /// raised while holding the `done` lock, so the region owner cannot
+    /// observe completion (and free the region) before this participant
+    /// has stopped touching it.
+    fn participate(&self) {
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let task = self.queue.lock().unwrap().next();
+            match task {
+                Some(t) => (self.f)(t),
+                None => break,
+            }
+        }));
+        if let Err(payload) = result {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let mut done = self.done.lock().unwrap();
+        *done += 1;
+        self.all_done.notify_all();
+    }
+
+    /// Block until `participants` completions have been signalled.
+    fn wait_for(&self, participants: usize) {
+        let mut done = self.done.lock().unwrap();
+        while *done < participants {
+            done = self.all_done.wait(done).unwrap();
+        }
+    }
+}
+
+/// Monomorphised participation entry point handed to workers.
+///
+/// Safety: `ptr` must point at a live `Region<T, F>` whose owner waits
+/// for this participant's done signal before freeing it.
+unsafe fn participate_erased<T: Send, F: Fn(T) + Sync>(ptr: *const ()) {
+    (*(ptr as *const Region<T, F>)).participate();
 }
 
 #[cfg(test)]
@@ -161,6 +345,14 @@ mod tests {
         assert_eq!(Pool::auto().threads(), available_threads());
         assert_eq!(Pool::serial().threads(), 1);
         assert_eq!(Pool::default().threads(), 1);
+    }
+
+    #[test]
+    fn new_capped_bounds_auto_and_explicit_counts() {
+        assert_eq!(Pool::new_capped(0, 3).threads(), available_threads().min(3));
+        assert_eq!(Pool::new_capped(8, 3).threads(), 3);
+        assert_eq!(Pool::new_capped(2, 3).threads(), 2);
+        assert_eq!(Pool::new_capped(1, 0).threads(), 1);
     }
 
     #[test]
@@ -190,8 +382,56 @@ mod tests {
     }
 
     #[test]
+    fn workers_persist_across_regions() {
+        // Many short regions on one pool: the workers are spawned once and
+        // reused, and every region still runs to completion.
+        let pool = Pool::new(4);
+        for round in 0..200usize {
+            let hits = AtomicUsize::new(0);
+            pool.run_tasks((0..8).collect::<Vec<usize>>(), |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 8, "round {round}");
+        }
+    }
+
+    #[test]
+    fn clones_share_workers_and_outlive_originals() {
+        let clone = {
+            let pool = Pool::new(3);
+            pool.clone()
+        };
+        let hits = AtomicUsize::new(0);
+        clone.run_tasks((0..16).collect::<Vec<usize>>(), |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn concurrent_regions_from_different_threads() {
+        // The service shape: several threads dispatching regions onto one
+        // shared pool at once.
+        let pool = Pool::new(4);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let hits = AtomicUsize::new(0);
+                        pool.run_tasks((0..8).collect::<Vec<usize>>(), |_| {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        });
+                        assert_eq!(hits.load(Ordering::Relaxed), 8);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
     fn join3_returns_all_results() {
-        for threads in [1usize, 4] {
+        for threads in [1usize, 2, 4] {
             let pool = Pool::new(threads);
             let (a, b, c) = pool.join3(|| 1 + 1, || "x".to_string(), || vec![3u8; 3]);
             assert_eq!(a, 2);
@@ -201,7 +441,37 @@ mod tests {
     }
 
     #[test]
+    fn task_panic_propagates_after_drain() {
+        let pool = Pool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks((0..32).collect::<Vec<usize>>(), |i| {
+                if i == 7 {
+                    panic!("task 7 exploded");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must reach the region caller");
+        // The pool is still usable afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run_tasks((0..8).collect::<Vec<usize>>(), |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
     fn run_tasks_empty_is_noop() {
         Pool::new(4).run_tasks(Vec::<usize>::new(), |_| panic!("no tasks"));
+    }
+
+    #[test]
+    fn single_task_runs_inline() {
+        // One task never pays the dispatch hand-shake.
+        let pool = Pool::new(8);
+        let hits = AtomicUsize::new(0);
+        pool.run_tasks(vec![0usize], |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
     }
 }

@@ -46,7 +46,16 @@ struct Evaluator<'a, K: KernelOp + ?Sized> {
 impl<'a, K: KernelOp + ?Sized> Evaluator<'a, K> {
     fn new(kernel: &'a K, a: &'a [f32], b: &'a [f32], eps: f64) -> Self {
         let (n, m) = (kernel.rows(), kernel.cols());
-        Evaluator { kernel, a, b, eps, eu: vec![0.0; n], ev: vec![0.0; m], ku: vec![0.0; m], kv: vec![0.0; n] }
+        Evaluator {
+            kernel,
+            a,
+            b,
+            eps,
+            eu: vec![0.0; n],
+            ev: vec![0.0; m],
+            ku: vec![0.0; m],
+            kv: vec![0.0; n],
+        }
     }
 
     /// Shift-stabilised exponentials of the dual point.
@@ -256,7 +265,14 @@ mod tests {
     use crate::sinkhorn::sinkhorn;
 
     fn cfg(eps: f64, tol: f64) -> SinkhornConfig {
-        SinkhornConfig { epsilon: eps, max_iters: 2000, tol, check_every: 1, threads: 1 }
+        SinkhornConfig {
+            epsilon: eps,
+            max_iters: 2000,
+            tol,
+            check_every: 1,
+            threads: 1,
+            stabilize: false,
+        }
     }
 
     #[test]
@@ -307,8 +323,8 @@ mod tests {
         let mut rng = Rng::seed_from(3);
         let (mu, nu) = data::gaussian_blobs(25, &mut rng);
         let k = DenseKernel::from_measures(&mu, &nu, 0.2);
-        let short = SinkhornConfig { epsilon: 0.2, max_iters: 3, tol: 0.0, check_every: 1, threads: 1 };
-        let long = SinkhornConfig { epsilon: 0.2, max_iters: 200, tol: 0.0, check_every: 1, threads: 1 };
+        let short = SinkhornConfig { max_iters: 3, ..cfg(0.2, 0.0) };
+        let long = SinkhornConfig { max_iters: 200, ..cfg(0.2, 0.0) };
         let s = sinkhorn_accelerated(&k, &mu.weights, &nu.weights, &short).unwrap();
         let l = sinkhorn_accelerated(&k, &mu.weights, &nu.weights, &long).unwrap();
         assert!(l.objective >= s.objective - 1e-9, "long {} short {}", l.objective, s.objective);

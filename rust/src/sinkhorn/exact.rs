@@ -88,6 +88,7 @@ mod tests {
     use super::*;
     use crate::config::SinkhornConfig;
     use crate::data;
+    use crate::kernels::CostMatrixLogKernel;
     use crate::rng::Rng;
     use crate::sinkhorn::{sinkhorn_log_domain, sq_euclidean_cost};
 
@@ -160,8 +161,17 @@ mod tests {
         let exact = exact_ot_uniform(&cost);
         let mut prev_gap = f64::INFINITY;
         for eps in [0.5, 0.1, 0.02] {
-            let cfg = SinkhornConfig { epsilon: eps, max_iters: 20_000, tol: 1e-8, check_every: 50, threads: 1 };
-            let sol = sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg).unwrap();
+            let cfg = SinkhornConfig {
+                epsilon: eps,
+                max_iters: 20_000,
+                tol: 1e-8,
+                check_every: 50,
+                threads: 1,
+                stabilize: false,
+            };
+            let log_kernel = CostMatrixLogKernel::new(&cost, eps);
+            let sol =
+                sinkhorn_log_domain(&log_kernel, &mu.weights, &nu.weights, &cfg).unwrap();
             let gap = (sol.objective - exact).abs();
             assert!(gap <= prev_gap * 1.10, "gap should shrink with eps: {gap} vs {prev_gap}");
             prev_gap = gap;

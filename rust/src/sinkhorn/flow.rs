@@ -108,7 +108,14 @@ mod tests {
     use crate::rng::Rng;
 
     fn cfg(eps: f64) -> SinkhornConfig {
-        SinkhornConfig { epsilon: eps, max_iters: 2000, tol: 1e-6, check_every: 10, threads: 1 }
+        SinkhornConfig {
+            epsilon: eps,
+            max_iters: 2000,
+            tol: 1e-6,
+            check_every: 10,
+            threads: 1,
+            stabilize: false,
+        }
     }
 
     #[test]

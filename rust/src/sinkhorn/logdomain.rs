@@ -1,34 +1,47 @@
-//! Log-domain stabilised Sinkhorn (dense cost matrices only).
+//! Log-domain stabilised Sinkhorn, matrix-free over any [`LogKernelOp`].
 //!
 //! At very small eps the scalings u, v overflow/underflow f32 (and even
 //! f64). The classic fix iterates on the dual potentials directly:
 //!
-//!   alpha_i <- -eps log sum_j exp((beta_j - C_ij)/eps + log b_j)   (row)
-//!   beta_j  <- -eps log sum_i exp((alpha_i - C_ij)/eps + log a_i)  (col)
+//!   alpha_i <- -eps logsumexp_j(log K_ij + beta_j/eps + log b_j)   (row)
+//!   beta_j  <- -eps logsumexp_i(log K_ij + alpha_i/eps + log a_i)  (col)
 //!
-//! each update a row/col logsumexp over C. This requires the *cost matrix*
-//! (not just a kernel operator), so it exists only for the dense baseline:
-//! the RF kernel has no materialised C — the paper's method instead relies
-//! on positivity and moderate eps. We document that asymmetry here and in
-//! DESIGN.md; the tradeoff benches use this as the small-eps ground truth.
+//! each update a row/col logsumexp of `log K + input` — exactly the
+//! [`LogKernelOp`] contract. The dense baseline streams `-cost/eps` at
+//! O(nm)/update; the paper's factored kernel nests the logsumexp through
+//! its log factors at **O(r(n+m))/update and memory**, never
+//! materialising an n×m matrix, so stabilisation keeps the linear-time
+//! claim intact. [`sinkhorn_divergence`](super::sinkhorn_divergence) and
+//! the coordinator escalate here automatically when plain Alg. 1 reports
+//! non-finite scalings (`sinkhorn.stabilize`); the tradeoff benches use
+//! the dense instance as the small-eps ground truth. The eps sweep in
+//! EXPERIMENTS.md §Stabilisation records where each path lives.
 
 use crate::config::SinkhornConfig;
 use crate::error::{Error, Result};
+use crate::kernels::LogKernelOp;
 use crate::linalg::Mat;
 
 use super::SinkhornSolution;
 
-/// Log-domain Sinkhorn over an explicit cost matrix.
-pub fn sinkhorn_log_domain(
-    cost: &Mat,
+/// Log-domain Sinkhorn over any log-space kernel operator.
+///
+/// The returned duals are those of the kernel the operator represents
+/// (for stabilised factored kernels: the *true* kernel, so no
+/// `log_scale` correction applies — the objective is directly comparable
+/// to a dense solve of the same kernel). The f32 scalings in the
+/// solution are `u_i = a_i exp(alpha_i / eps)` and may saturate f32 at
+/// extreme eps; the objective itself is computed from the f64 duals.
+pub fn sinkhorn_log_domain<K: LogKernelOp + ?Sized>(
+    kernel: &K,
     a: &[f32],
     b: &[f32],
     cfg: &SinkhornConfig,
 ) -> Result<SinkhornSolution> {
-    let (n, m) = cost.shape();
+    let (n, m) = kernel.shape();
     if a.len() != n || b.len() != m {
         return Err(Error::Shape(format!(
-            "log-domain sinkhorn: cost {n}x{m} vs a[{}], b[{}]",
+            "log-domain sinkhorn: kernel {n}x{m} vs a[{}], b[{}]",
             a.len(),
             b.len()
         )));
@@ -44,36 +57,53 @@ pub fn sinkhorn_log_domain(
     let mut marginal = f64::INFINITY;
     let mut converged = false;
 
-    // Scratch row buffer for the logsumexp reductions.
-    let mut buf = vec![0.0f64; n.max(m)];
+    // Preallocated operator inputs/outputs — the loop is allocation-free
+    // apart from whatever the operator itself scratches (O(r) for the
+    // factored kernel).
+    let mut row_in = vec![0.0f64; n];
+    let mut col_in = vec![0.0f64; m];
+    let mut row_out = vec![0.0f64; n];
+    let mut col_out = vec![0.0f64; m];
 
     while iter < cfg.max_iters {
-        // beta update: beta_j = -eps logsumexp_i((alpha_i - C_ij)/eps + log a_i).
+        // beta update: beta_j = -eps logsumexp_i(log K_ij + alpha_i/eps + log a_i).
+        for i in 0..n {
+            row_in[i] = alpha[i] / eps + log_a[i];
+        }
+        kernel.apply_log_t(&row_in, &mut col_out);
         for j in 0..m {
-            for i in 0..n {
-                buf[i] = (alpha[i] - cost[(i, j)] as f64) / eps + log_a[i];
-            }
-            beta[j] = -eps * logsumexp64(&buf[..n]);
+            beta[j] = -eps * col_out[j];
         }
         // alpha update.
+        for j in 0..m {
+            col_in[j] = beta[j] / eps + log_b[j];
+        }
+        kernel.apply_log(&col_in, &mut row_out);
         for i in 0..n {
-            let crow = cost.row(i);
-            for j in 0..m {
-                buf[j] = (beta[j] - crow[j] as f64) / eps + log_b[j];
-            }
-            alpha[i] = -eps * logsumexp64(&buf[..m]);
+            alpha[i] = -eps * row_out[i];
         }
         iter += 1;
 
         if iter % check_every == 0 || iter == cfg.max_iters {
-            // Column marginal error of P_ij = exp((alpha_i + beta_j - C_ij)/eps + log a_i + log b_j).
+            if let Some(bad) = first_non_finite(&alpha).or_else(|| first_non_finite(&beta)) {
+                return Err(Error::SinkhornDiverged {
+                    iter,
+                    reason: format!(
+                        "non-finite dual potential ({bad}) in log-domain sinkhorn on {}; the \
+                         kernel has an empty (all -inf) row or column",
+                        kernel.describe()
+                    ),
+                });
+            }
+            // Column marginal of P_ij = exp((alpha_i + beta_j)/eps + log K_ij
+            // + log a_i + log b_j): reuse the operator with the fresh alpha.
+            for i in 0..n {
+                row_in[i] = alpha[i] / eps + log_a[i];
+            }
+            kernel.apply_log_t(&row_in, &mut col_out);
             marginal = 0.0;
             for j in 0..m {
-                for i in 0..n {
-                    buf[i] =
-                        (alpha[i] + beta[j] - cost[(i, j)] as f64) / eps + log_a[i] + log_b[j];
-                }
-                let col_mass = logsumexp64(&buf[..n]).exp();
+                let col_mass = (col_out[j] + beta[j] / eps + log_b[j]).exp();
                 marginal += (col_mass - b[j] as f64).abs();
             }
             if marginal < cfg.tol {
@@ -85,8 +115,8 @@ pub fn sinkhorn_log_domain(
 
     // Objective via duals. These (alpha, beta) are the duals of the
     // a⊗b-relative formulation (the plan is P_ij = a_i b_j
-    // exp((alpha_i + beta_j - C_ij)/eps)), i.e. the kernel-form scalings
-    // are u_i = a_i e^{alpha_i/eps}. Converting to Eq. (6)'s
+    // exp((alpha_i + beta_j)/eps + log K_ij)), i.e. the kernel-form
+    // scalings are u_i = a_i e^{alpha_i/eps}. Converting to Eq. (6)'s
     // eps(a^T log u + b^T log v) adds the entropy offset
     // eps (a^T log a + b^T log b).
     let offset: f64 = eps
@@ -114,12 +144,11 @@ pub fn sinkhorn_log_domain(
     })
 }
 
-fn logsumexp64(xs: &[f64]) -> f64 {
-    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    if !m.is_finite() {
-        return m;
-    }
-    m + xs.iter().map(|&x| (x - m).exp()).sum::<f64>().ln()
+fn first_non_finite(xs: &[f64]) -> Option<String> {
+    xs.iter()
+        .enumerate()
+        .find(|(_, x)| !x.is_finite())
+        .map(|(i, x)| format!("index {i} = {x}"))
 }
 
 /// Squared-Euclidean cost matrix helper for the log-domain path.
@@ -138,12 +167,20 @@ pub fn sq_euclidean_cost(x: &Mat, y: &Mat) -> Mat {
 mod tests {
     use super::*;
     use crate::data;
-    use crate::kernels::DenseKernel;
+    use crate::features::{FeatureMap, GaussianFeatureMap};
+    use crate::kernels::{CostMatrixLogKernel, DenseKernel, FactoredKernel};
     use crate::rng::Rng;
     use crate::sinkhorn::sinkhorn;
 
     fn cfg(eps: f64) -> SinkhornConfig {
-        SinkhornConfig { epsilon: eps, max_iters: 3000, tol: 1e-6, check_every: 10, threads: 1 }
+        SinkhornConfig {
+            epsilon: eps,
+            max_iters: 3000,
+            tol: 1e-6,
+            check_every: 10,
+            threads: 1,
+            stabilize: false,
+        }
     }
 
     #[test]
@@ -159,13 +196,39 @@ mod tests {
             &cfg(eps),
         )
         .unwrap();
-        let logd = sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        let logd = sinkhorn_log_domain(
+            &CostMatrixLogKernel::new(&cost, eps),
+            &mu.weights,
+            &nu.weights,
+            &cfg(eps),
+        )
+        .unwrap();
         assert!(
             (plain.objective - logd.objective).abs() < 1e-3 * plain.objective.abs().max(1.0),
             "plain {} logdomain {}",
             plain.objective,
             logd.objective
         );
+    }
+
+    #[test]
+    fn dense_kernel_and_cost_adapter_agree() {
+        // DenseKernel's log view and the borrowed-cost adapter are the
+        // same operator; the solver must not care which it gets.
+        let mut rng = Rng::seed_from(4);
+        let (mu, nu) = data::gaussian_blobs(20, &mut rng);
+        let eps = 0.05;
+        let dk = DenseKernel::from_measures(&mu, &nu, eps);
+        let via_kernel =
+            sinkhorn_log_domain(&dk, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        let via_cost = sinkhorn_log_domain(
+            &CostMatrixLogKernel::new(dk.cost(), eps),
+            &mu.weights,
+            &nu.weights,
+            &cfg(eps),
+        )
+        .unwrap();
+        assert_eq!(via_kernel.objective.to_bits(), via_cost.objective.to_bits());
     }
 
     #[test]
@@ -176,7 +239,13 @@ mod tests {
         let (mu, nu) = data::gaussian_blobs(25, &mut rng);
         let eps = 0.002;
         let cost = sq_euclidean_cost(&mu.points, &nu.points);
-        let logd = sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        let logd = sinkhorn_log_domain(
+            &CostMatrixLogKernel::new(&cost, eps),
+            &mu.weights,
+            &nu.weights,
+            &cfg(eps),
+        )
+        .unwrap();
         assert!(logd.objective.is_finite());
         assert!(logd.marginal_error < 1e-3, "err {}", logd.marginal_error);
         // As eps -> 0 the entropic OT value approaches the unregularised
@@ -185,11 +254,93 @@ mod tests {
     }
 
     #[test]
+    fn factored_matches_dense_log_domain_at_small_eps() {
+        // The acceptance property of the matrix-free refactor: on the
+        // *same* RF kernel, the O(r(n+m)) factored log-domain solve and a
+        // dense log-domain solve over the materialised RF cost agree to
+        // 1e-4 relative — at an eps (1e-3 scale) where the f32 factor
+        // representation is floored and plain Alg. 1 is at best solving
+        // the wrong (clamped) kernel (see EXPERIMENTS.md §Stabilisation;
+        // the guaranteed-divergence regime is pinned by
+        // escalation_setup_diverges in sinkhorn/mod.rs).
+        let mut rng = Rng::seed_from(2);
+        let (mu, nu) = data::gaussian_blobs(20, &mut rng);
+        let eps = 1e-3;
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, 32, &mut rng);
+        let lx = map.log_feature_matrix(&mu.points);
+        let ly = map.log_feature_matrix(&nu.points);
+        let fk = FactoredKernel::from_log_factors(lx.clone(), ly.clone());
+
+        // Materialise the RF cost C_ij = -eps logsumexp_k(lx_ik + ly_jk)
+        // in f64, then hand it to the dense path.
+        let (n, r) = lx.shape();
+        let m = ly.rows();
+        let cost = Mat::from_fn(n, m, |i, j| {
+            let mx = (0..r)
+                .map(|k| lx[(i, k)] as f64 + ly[(j, k)] as f64)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let s: f64 = (0..r).map(|k| (lx[(i, k)] as f64 + ly[(j, k)] as f64 - mx).exp()).sum();
+            (-eps * (mx + s.ln())) as f32
+        });
+
+        let factored =
+            sinkhorn_log_domain(&fk, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        let dense = sinkhorn_log_domain(
+            &CostMatrixLogKernel::new(&cost, eps),
+            &mu.weights,
+            &nu.weights,
+            &cfg(eps),
+        )
+        .unwrap();
+        assert!(factored.objective.is_finite() && dense.objective.is_finite());
+        let rel = (factored.objective - dense.objective).abs() / dense.objective.abs().max(1.0);
+        assert!(
+            rel < 1e-4,
+            "factored {} vs dense {} (rel {rel:.2e})",
+            factored.objective,
+            dense.objective
+        );
+        // Full convergence at eps = 1e-3 is slow (the contraction factor
+        // approaches 1 as eps -> 0); the stabilised path must at least be
+        // finite and near-feasible where plain f32 Alg. 1 cannot run at all.
+        assert!(factored.marginal_error < 5e-2, "err {}", factored.marginal_error);
+    }
+
+    #[test]
+    fn factored_matches_dense_log_domain_at_moderate_eps() {
+        // Same agreement away from the extreme regime, on fitted
+        // stabilised factors end to end.
+        let mut rng = Rng::seed_from(3);
+        let (mu, nu) = data::gaussian_blobs(30, &mut rng);
+        let eps = 0.5;
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, 64, &mut rng);
+        let fk = FactoredKernel::from_measures_stabilized(&map, &mu, &nu);
+        let factored =
+            sinkhorn_log_domain(&fk, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        // Plain Alg. 1 works here; the log-domain result must agree with
+        // it on the same kernel (log_scale-corrected by sinkhorn()).
+        let plain = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
+        assert!(
+            (factored.objective - plain.objective).abs()
+                < 1e-3 * plain.objective.abs().max(1.0),
+            "log-domain {} vs plain {}",
+            factored.objective,
+            plain.objective
+        );
+    }
+
+    #[test]
     fn converges_flag_set() {
         let mut rng = Rng::seed_from(2);
         let (mu, nu) = data::gaussian_blobs(15, &mut rng);
         let cost = sq_euclidean_cost(&mu.points, &nu.points);
-        let sol = sinkhorn_log_domain(&cost, &mu.weights, &nu.weights, &cfg(0.1)).unwrap();
+        let sol = sinkhorn_log_domain(
+            &CostMatrixLogKernel::new(&cost, 0.1),
+            &mu.weights,
+            &nu.weights,
+            &cfg(0.1),
+        )
+        .unwrap();
         assert!(sol.converged);
     }
 
@@ -209,6 +360,7 @@ mod tests {
     #[test]
     fn shape_mismatch_rejected() {
         let c = Mat::zeros(3, 4);
-        assert!(sinkhorn_log_domain(&c, &[0.5, 0.5], &[0.25; 4], &cfg(0.5)).is_err());
+        let k = CostMatrixLogKernel::new(&c, 0.5);
+        assert!(sinkhorn_log_domain(&k, &[0.5, 0.5], &[0.25; 4], &cfg(0.5)).is_err());
     }
 }

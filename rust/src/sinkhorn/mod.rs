@@ -1,11 +1,17 @@
 //! Sinkhorn solvers — Alg. 1 (matrix-free over any [`KernelOp`]), the
-//! log-domain stabilised dense variant, the accelerated Alg. 2, and the
-//! Eq. (2) Sinkhorn divergence.
+//! log-domain stabilised variant (matrix-free over any
+//! [`LogKernelOp`](crate::kernels::LogKernelOp)), the accelerated Alg. 2,
+//! and the Eq. (2) Sinkhorn divergence.
 //!
 //! Because Alg. 1 only touches the kernel through `apply`/`apply_t`, the
 //! *same* loop runs the dense `Sin` baseline at O(nm)/iter and the paper's
 //! `RF` factored kernel at O(r(n+m))/iter — the complexity claim is in the
-//! operator, not in specialised solver code.
+//! operator, not in specialised solver code. The log-domain solver repeats
+//! the trick one level down: its updates only touch the kernel through
+//! `apply_log`/`apply_log_t`, so small-eps stabilisation is *also* linear
+//! time on factored kernels. [`sinkhorn_stabilized`] glues the two
+//! together: run Alg. 1, and when it reports non-finite scalings escalate
+//! to the log-domain iteration (gated by `SinkhornConfig::stabilize`).
 
 mod accelerated;
 mod exact;
@@ -148,14 +154,48 @@ fn first_bad(xs: &[f32]) -> Option<String> {
     None
 }
 
+/// Alg. 1 with automatic small-eps escalation: when the plain iteration
+/// reports non-finite scalings ([`Error::SinkhornDiverged`]) and
+/// `cfg.stabilize` is set, retry on the matrix-free log-domain solver
+/// ([`sinkhorn_log_domain`]) through the kernel's
+/// [`KernelOp::as_log_kernel`] view. Returns the solution plus whether
+/// the stabilised path was taken (the coordinator exports that as the
+/// `service.stabilized_solves` metric).
+///
+/// Kernels without a log-domain view (e.g. Nyström, which can lose
+/// positivity) propagate the original divergence error — escalation
+/// never masks a genuinely broken kernel.
+pub fn sinkhorn_stabilized<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    b: &[f32],
+    cfg: &SinkhornConfig,
+) -> Result<(SinkhornSolution, bool)> {
+    match sinkhorn(kernel, a, b, cfg) {
+        Ok(sol) => Ok((sol, false)),
+        Err(Error::SinkhornDiverged { iter, reason }) if cfg.stabilize => {
+            match kernel.as_log_kernel() {
+                Some(log_kernel) => {
+                    sinkhorn_log_domain(log_kernel, a, b, cfg).map(|sol| (sol, true))
+                }
+                None => Err(Error::SinkhornDiverged { iter, reason }),
+            }
+        }
+        Err(e) => Err(e),
+    }
+}
+
 /// Eq. (2): the debiased Sinkhorn divergence
 /// `W(mu,nu) - (W(mu,mu) + W(nu,nu))/2` from three transport solves.
 ///
 /// The three problems are independent, so when `cfg.threads > 1` they run
-/// concurrently on a scoped [`Pool`] (`0` = auto-size to the machine).
-/// Each solve is deterministic on its own kernel, so the result is
-/// identical for every thread count; errors are reported with the same
-/// priority as the historical sequential path (xy, then xx, then yy).
+/// concurrently on a [`Pool`] (`0` = auto-size to the machine; the pool
+/// is capped at 3 — one worker per transport problem). Each solve is
+/// deterministic on its own kernel, so the result is identical for every
+/// thread count; errors are reported with the same priority as the
+/// historical sequential path (xy, then xx, then yy). Each solve runs
+/// through [`sinkhorn_stabilized`], so small-eps divergences escalate to
+/// the log-domain path when `cfg.stabilize` is set.
 pub fn sinkhorn_divergence<K: KernelOp + Sync + ?Sized>(
     k_xy: &K,
     k_xx: &K,
@@ -164,13 +204,13 @@ pub fn sinkhorn_divergence<K: KernelOp + Sync + ?Sized>(
     b: &[f32],
     cfg: &SinkhornConfig,
 ) -> Result<f64> {
-    let pool = Pool::new(cfg.threads);
+    let pool = Pool::new_capped(cfg.threads, 3);
     let (r_xy, r_xx, r_yy) = pool.join3(
-        || sinkhorn(k_xy, a, b, cfg),
-        || sinkhorn(k_xx, a, a, cfg),
-        || sinkhorn(k_yy, b, b, cfg),
+        || sinkhorn_stabilized(k_xy, a, b, cfg),
+        || sinkhorn_stabilized(k_xx, a, a, cfg),
+        || sinkhorn_stabilized(k_yy, b, b, cfg),
     );
-    Ok(r_xy?.objective - 0.5 * (r_xx?.objective + r_yy?.objective))
+    Ok(r_xy?.0.objective - 0.5 * (r_xx?.0.objective + r_yy?.0.objective))
 }
 
 /// The transport plan `P = diag(u) K diag(v)` materialised (tests / small
@@ -209,7 +249,14 @@ pub fn ground_truth_rot<K: KernelOp + ?Sized>(
     b: &[f32],
     eps: f64,
 ) -> Result<f64> {
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: 20_000, tol: 1e-6, check_every: 20, threads: 1 };
+    let cfg = SinkhornConfig {
+        epsilon: eps,
+        max_iters: 20_000,
+        tol: 1e-6,
+        check_every: 20,
+        threads: 1,
+        stabilize: false,
+    };
     Ok(sinkhorn(kernel, a, b, &cfg)?.objective)
 }
 
@@ -238,7 +285,14 @@ mod tests {
     use crate::rng::Rng;
 
     fn cfg(eps: f64) -> SinkhornConfig {
-        SinkhornConfig { epsilon: eps, max_iters: 5000, tol: 1e-5, check_every: 5, threads: 1 }
+        SinkhornConfig {
+            epsilon: eps,
+            max_iters: 5000,
+            tol: 1e-5,
+            check_every: 5,
+            threads: 1,
+            stabilize: false,
+        }
     }
 
     fn uniform(n: usize) -> Vec<f32> {
@@ -286,7 +340,7 @@ mod tests {
         let (mu, nu) = data::gaussian_blobs(60, &mut rng);
         let fm = GaussianFeatureMap::fit(&mu, &nu, 0.5, 64, &mut rng);
         let fk = FactoredKernel::from_measures(&fm, &mu, &nu);
-        let dk = DenseKernel { k: fk.to_dense(), eps: 0.5 };
+        let dk = DenseKernel::from_matrix(fk.to_dense(), 0.5);
         let s1 = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg(0.5)).unwrap();
         let s2 = sinkhorn(&dk, &mu.weights, &nu.weights, &cfg(0.5)).unwrap();
         assert!(
@@ -405,8 +459,8 @@ mod tests {
         let mut rng = Rng::seed_from(10);
         let (mu, nu) = data::gaussian_blobs(30, &mut rng);
         let k = DenseKernel::from_measures(&mu, &nu, 0.3);
-        let few = SinkhornConfig { epsilon: 0.3, max_iters: 3, tol: 0.0, check_every: 1, threads: 1 };
-        let many = SinkhornConfig { epsilon: 0.3, max_iters: 300, tol: 0.0, check_every: 1, threads: 1 };
+        let few = SinkhornConfig { max_iters: 3, tol: 0.0, check_every: 1, ..cfg(0.3) };
+        let many = SinkhornConfig { max_iters: 300, tol: 0.0, check_every: 1, ..cfg(0.3) };
         let e1 = sinkhorn(&k, &mu.weights, &nu.weights, &few).unwrap().marginal_error;
         let e2 = sinkhorn(&k, &mu.weights, &nu.weights, &many).unwrap().marginal_error;
         assert!(e2 <= e1 * 1.01, "e1={e1} e2={e2}");
@@ -415,5 +469,90 @@ mod tests {
     #[test]
     fn uniform_helper() {
         assert_eq!(uniform(4), vec![0.25; 4]);
+    }
+
+    /// A factored kernel whose f32 applies *provably* produce non-finite
+    /// scalings: every factor entry sits near 1e-30, so every product in
+    /// `Phi_x (Phi_y^T v)` is ~1e-60 — far below the smallest f32
+    /// subnormal (~1.4e-45) — and flushes to exact zero. `K^T u` is then
+    /// identically zero and Alg. 1's very first update divides by it.
+    /// This is the real small-eps mechanism (raw Gibbs values below f32
+    /// range), made deterministic; the log-domain view of the same kernel
+    /// works in f64 on the logs (~-69 per factor) and is perfectly
+    /// conditioned. Mild entry variation keeps the problem non-trivial.
+    fn underflowing_kernel(n: usize, m: usize, r: usize) -> FactoredKernel {
+        let phi_x = crate::linalg::Mat::from_fn(n, r, |i, k| {
+            1e-30f32 * (1.0 + 0.1 * (((i + 2 * k) % 5) as f32))
+        });
+        let phi_y = crate::linalg::Mat::from_fn(m, r, |j, k| {
+            1e-30f32 * (1.0 + 0.1 * (((2 * j + k) % 7) as f32))
+        });
+        FactoredKernel::from_factors(phi_x, phi_y)
+    }
+
+    #[test]
+    fn escalation_setup_diverges() {
+        let (n, m) = (12, 10);
+        let k_xy = underflowing_kernel(n, m, 6);
+        let res = sinkhorn(&k_xy, &uniform(n), &uniform(m), &cfg(1e-3));
+        match res {
+            Err(Error::SinkhornDiverged { .. }) => {}
+            other => panic!(
+                "expected plain f32 Alg. 1 to diverge on underflowing factors, got {:?}",
+                other.map(|s| s.objective)
+            ),
+        }
+    }
+
+    #[test]
+    fn sinkhorn_stabilized_escalates_and_reports_it() {
+        let (n, m) = (12, 10);
+        let k_xy = underflowing_kernel(n, m, 6);
+        let cfg_tiny = SinkhornConfig { stabilize: true, ..cfg(1e-3) };
+        let (sol, stabilized) =
+            sinkhorn_stabilized(&k_xy, &uniform(n), &uniform(m), &cfg_tiny).unwrap();
+        assert!(stabilized, "the log-domain path must have been taken");
+        assert!(sol.objective.is_finite());
+        assert!(sol.marginal_error < 1e-3, "err {}", sol.marginal_error);
+        // At moderate eps on healthy factors nothing escalates and the
+        // flag stays false.
+        let mut rng = Rng::seed_from(22);
+        let (mu2, nu2) = data::gaussian_blobs(25, &mut rng);
+        let fm = GaussianFeatureMap::fit(&mu2, &nu2, 0.5, 64, &mut rng);
+        let k = FactoredKernel::from_measures_stabilized(&fm, &mu2, &nu2);
+        let cfg_mid = SinkhornConfig { stabilize: true, ..cfg(0.5) };
+        let (_, stabilized) =
+            sinkhorn_stabilized(&k, &mu2.weights, &nu2.weights, &cfg_mid).unwrap();
+        assert!(!stabilized);
+    }
+
+    #[test]
+    fn divergence_escalates_when_stabilize_on_and_errors_when_off() {
+        let n = 12;
+        let k_xy = underflowing_kernel(n, n, 6);
+        let k_xx = underflowing_kernel(n, n, 6);
+        let k_yy = underflowing_kernel(n, n, 6);
+        let w = uniform(n);
+
+        let off = cfg(1e-3);
+        let err = sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &w, &w, &off);
+        assert!(err.is_err(), "stabilize=false must surface the divergence error");
+
+        let on = SinkhornConfig { stabilize: true, ..cfg(1e-3) };
+        let d = sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &w, &w, &on)
+            .expect("escalated divergence");
+        assert!(d.is_finite());
+    }
+
+    #[test]
+    fn stabilized_does_not_mask_kernels_without_log_view() {
+        // Nyström has no log-domain view: even with stabilize on, its
+        // small-eps divergence stays a typed error.
+        let mut rng = Rng::seed_from(24);
+        let (mu, nu) = data::gaussian_blobs(80, &mut rng);
+        let nk = NystromKernel::from_measures(&mu, &nu, 0.01, 8, &mut rng);
+        let cfg = SinkhornConfig { stabilize: true, ..cfg(0.01) };
+        let res = sinkhorn_stabilized(&nk, &mu.weights, &nu.weights, &cfg);
+        assert!(matches!(res, Err(Error::SinkhornDiverged { .. })));
     }
 }

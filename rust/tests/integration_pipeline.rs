@@ -9,7 +9,14 @@ use linear_sinkhorn::sinkhorn::{marginal_errors, transport_plan};
 use linear_sinkhorn::testing::property;
 
 fn cfg(eps: f64) -> SinkhornConfig {
-    SinkhornConfig { epsilon: eps, max_iters: 3000, tol: 1e-5, check_every: 5, threads: 1 }
+    SinkhornConfig {
+        epsilon: eps,
+        max_iters: 3000,
+        tol: 1e-5,
+        check_every: 5,
+        threads: 1,
+        stabilize: false,
+    }
 }
 
 #[test]
@@ -78,8 +85,10 @@ fn property_divergence_is_symmetric() {
         let kyx = FactoredKernel::from_measures(&map, &nu, &mu);
         let kxx = FactoredKernel::from_measures(&map, &mu, &mu);
         let kyy = FactoredKernel::from_measures(&map, &nu, &nu);
-        let d1 = sinkhorn_divergence(&kxy, &kxx, &kyy, &mu.weights, &nu.weights, &cfg(eps)).unwrap();
-        let d2 = sinkhorn_divergence(&kyx, &kyy, &kxx, &nu.weights, &mu.weights, &cfg(eps)).unwrap();
+        let d1 = sinkhorn_divergence(&kxy, &kxx, &kyy, &mu.weights, &nu.weights, &cfg(eps))
+            .unwrap();
+        let d2 = sinkhorn_divergence(&kyx, &kyy, &kxx, &nu.weights, &mu.weights, &cfg(eps))
+            .unwrap();
         assert!((d1 - d2).abs() < 1e-5 * d1.abs().max(1.0), "{d1} vs {d2}");
     });
 }

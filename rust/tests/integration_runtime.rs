@@ -53,7 +53,13 @@ fn rf_sinkhorn_artifact_matches_native_solver() {
 
     // Native: fixed iteration count to match the AOT graph exactly.
     let fk = FactoredKernel::from_factors(phi_x.clone(), phi_y.clone());
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: iters, tol: 0.0, check_every: iters + 1, threads: 1 };
+    let cfg = SinkhornConfig {
+        epsilon: eps,
+        max_iters: iters,
+        tol: 0.0,
+        check_every: iters + 1,
+        ..Default::default()
+    };
     let native = sinkhorn(&fk, &mu.weights, &nu.weights, &cfg).unwrap();
 
     // PJRT: run the lowered graph.
@@ -97,7 +103,13 @@ fn dense_sinkhorn_artifact_matches_native() {
     let mut rng = Rng::seed_from(1);
     let (mu, nu) = data::gaussian_blobs(n, &mut rng);
     let dk = DenseKernel::from_measures(&mu, &nu, eps);
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: iters, tol: 0.0, check_every: iters + 1, threads: 1 };
+    let cfg = SinkhornConfig {
+        epsilon: eps,
+        max_iters: iters,
+        tol: 0.0,
+        check_every: iters + 1,
+        ..Default::default()
+    };
     let native = sinkhorn(&dk, &mu.weights, &nu.weights, &cfg).unwrap();
 
     let engine = Engine::cpu().unwrap();

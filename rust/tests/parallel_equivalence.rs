@@ -2,7 +2,7 @@
 //! (`runtime::pool` + the `_pooled` linalg kernels + the concurrent
 //! three-problem divergence) must change wall-clock only, never numbers.
 //!
-//! Three layers of guarantee are asserted here:
+//! Four layers of guarantee are asserted here:
 //! 1. `matvec_into_pooled` is **bitwise** equal to `matvec_into` (rows are
 //!    independent and share the per-row kernel).
 //! 2. `matvec_t_into_pooled` is **thread-count invariant** (fixed chunk
@@ -10,13 +10,18 @@
 //!    f64 reference to well under 1e-5 relative even at n = 5000 — the
 //!    reorder only moves f32 rounding, it cannot cancel on the positive
 //!    data Sinkhorn feeds it.
-//! 3. `sinkhorn_divergence` returns bit-identical objectives with 1 and N
+//! 3. The pooled logsumexp primitives (`lse_matvec_into_pooled`,
+//!    `lse_matvec_t_into_pooled`) behind the log-domain solver obey the
+//!    same contract: bitwise thread-count invariance on a fixed chunk
+//!    grid, and near-f64-reference accuracy through the chunked merge.
+//! 4. `sinkhorn_divergence` returns bit-identical objectives with 1 and N
 //!    threads, at both the solve level (`cfg.threads`) and the matvec
 //!    level (kernel pools).
 
 use linear_sinkhorn::config::SinkhornConfig;
 use linear_sinkhorn::features::{par_feature_matrix, par_log_feature_matrix};
 use linear_sinkhorn::linalg::{
+    lse_matvec_into, lse_matvec_into_pooled, lse_matvec_t_into, lse_matvec_t_into_pooled,
     matvec_into, matvec_into_pooled, matvec_t_into, matvec_t_into_pooled, Mat,
 };
 use linear_sinkhorn::prelude::*;
@@ -101,6 +106,91 @@ fn property_matvec_t_pooled_thread_invariant_and_accurate() {
     });
 }
 
+/// f64 reference for `out_j = logsumexp_i(alpha a[i,j] + u_i)`.
+fn lse_matvec_t_ref(a: &Mat, alpha: f64, u: &[f64]) -> Vec<f64> {
+    let (n, k) = a.shape();
+    (0..k)
+        .map(|j| {
+            let terms: Vec<f64> =
+                (0..n).map(|i| alpha * a[(i, j)] as f64 + u[i]).collect();
+            let m = terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if !m.is_finite() {
+                return m;
+            }
+            m + terms.iter().map(|&v| (v - m).exp()).sum::<f64>().ln()
+        })
+        .collect()
+}
+
+#[test]
+fn property_lse_matvec_pooled_is_bitwise_serial() {
+    property("lse_matvec_pooled_bitwise", 10, |g| {
+        let n = g.usize_in(1, 1200);
+        let k = g.usize_in(1, 64);
+        let a = g.cloud(n, k, 2.0);
+        // Log-scale inputs spanning the magnitudes the log-domain solver
+        // feeds (duals/eps at small eps).
+        let t: Vec<f64> = (0..k).map(|_| g.f64_in(-2e3, 10.0)).collect();
+        let alpha = g.f64_in(-3.0, 3.0);
+        let mut serial = vec![0.0f64; n];
+        lse_matvec_into(&a, alpha, &t, &mut serial);
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let mut pooled = vec![0.0f64; n];
+            lse_matvec_into_pooled(&a, alpha, &t, &mut pooled, &pool);
+            for i in 0..n {
+                assert_eq!(
+                    serial[i].to_bits(),
+                    pooled[i].to_bits(),
+                    "row {i} differs at threads={threads}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn property_lse_matvec_t_pooled_thread_invariant_and_accurate() {
+    property("lse_matvec_t_pooled", 10, |g| {
+        // Cross the 1024-row chunk grid so the chunked merge really runs.
+        let n = g.usize_in(1, 4000);
+        let k = g.usize_in(1, 48);
+        let a = g.cloud(n, k, 2.0);
+        let u: Vec<f64> = (0..n).map(|_| g.f64_in(-2e3, 10.0)).collect();
+        let alpha = g.f64_in(-3.0, 3.0);
+        let reference = lse_matvec_t_ref(&a, alpha, &u);
+
+        let mut serial = vec![0.0f64; k];
+        lse_matvec_t_into(&a, alpha, &u, &mut serial);
+
+        let mut first: Option<Vec<f64>> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let mut pooled = vec![0.0f64; k];
+            lse_matvec_t_into_pooled(&a, alpha, &u, &mut pooled, &pool);
+            match &first {
+                None => first = Some(pooled.clone()),
+                Some(f) => {
+                    for j in 0..k {
+                        assert_eq!(
+                            f[j].to_bits(),
+                            pooled[j].to_bits(),
+                            "col {j}: thread count changed the result"
+                        );
+                    }
+                }
+            }
+            for j in 0..k {
+                let scale = reference[j].abs().max(1.0);
+                let rel = (pooled[j] - reference[j]).abs() / scale;
+                assert!(rel <= 1e-10, "col {j}: pooled off reference by {rel:.2e}");
+                let rel_s = (serial[j] - pooled[j]).abs() / scale;
+                assert!(rel_s <= 1e-10, "col {j}: pooled vs serial {rel_s:.2e}");
+            }
+        }
+    });
+}
+
 #[test]
 fn property_parallel_feature_matrices_bitwise_serial() {
     property("par_features", 6, |g| {
@@ -133,8 +223,8 @@ fn divergence_identical_with_1_and_n_threads() {
 
     let run = |threads: usize| -> f64 {
         let pool = Pool::new(threads);
-        let k_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, pool);
-        let k_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, pool);
+        let k_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, pool.clone());
+        let k_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, pool.clone());
         let k_yy = FactoredKernel::from_measures_pooled(&map, &nu, &nu, pool);
         let cfg = SinkhornConfig {
             epsilon: eps,
@@ -142,6 +232,7 @@ fn divergence_identical_with_1_and_n_threads() {
             tol: 1e-5,
             check_every: 10,
             threads,
+            stabilize: false,
         };
         sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg).unwrap()
     };
@@ -207,7 +298,14 @@ fn divergence_agrees_with_historical_serial_path() {
     let (mu, nu) = data::gaussian_blobs(1200, &mut rng);
     let eps = 0.5;
     let map = GaussianFeatureMap::fit(&mu, &nu, eps, 64, &mut rng);
-    let cfg = SinkhornConfig { epsilon: eps, max_iters: 60, tol: 1e-5, check_every: 10, threads: 1 };
+    let cfg = SinkhornConfig {
+        epsilon: eps,
+        max_iters: 60,
+        tol: 1e-5,
+        check_every: 10,
+        threads: 1,
+        stabilize: false,
+    };
 
     let phi_mu = map.feature_matrix(&mu.points);
     let phi_nu = map.feature_matrix(&nu.points);
@@ -219,8 +317,8 @@ fn divergence_agrees_with_historical_serial_path() {
     };
     let pooled = {
         let pool = Pool::new(4);
-        let k_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, pool);
-        let k_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, pool);
+        let k_xy = FactoredKernel::from_measures_pooled(&map, &mu, &nu, pool.clone());
+        let k_xx = FactoredKernel::from_measures_pooled(&map, &mu, &mu, pool.clone());
         let k_yy = FactoredKernel::from_measures_pooled(&map, &nu, &nu, pool);
         let cfg = SinkhornConfig { threads: 4, ..cfg };
         sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg).unwrap()
