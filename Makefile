@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test doc fmt fmt-check check artifacts perf clean
+.PHONY: all build test doc fmt fmt-check clippy check artifacts perf bench-smoke clean
 
 all: build
 
@@ -31,7 +31,11 @@ fmt-check:
 fmt:
 	$(CARGO) fmt
 
-check: build test doc fmt-check
+# Fatal like CI's clippy job: all targets, warnings denied.
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+check: build test doc fmt-check clippy
 	@echo "check: OK"
 
 # AOT-lower the Pallas/JAX graphs to HLO text + manifest. The binary never
@@ -42,6 +46,12 @@ artifacts:
 # Parallel-scaling numbers for EXPERIMENTS.md §Parallel scaling.
 perf:
 	$(CARGO) bench --bench parallel_scaling
+
+# CI's quick bench pass, locally: small sizes, tables appended to
+# BENCH_ci.json (JSON lines, one object per table).
+bench-smoke:
+	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench parallel_scaling
+	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench coordinator_throughput
 
 clean:
 	$(CARGO) clean

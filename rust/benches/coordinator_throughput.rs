@@ -3,6 +3,20 @@
 //! workload, as a function of worker count and batcher policy. This is the
 //! bench the §Perf pass iterates against.
 //!
+//! Two workloads:
+//!
+//! * **mixed** — every request carries its own clouds (no two requests
+//!   can fuse); sweeps workers × batcher `max_batch` as before.
+//! * **shared-support** — every request re-weights one common cloud pair
+//!   (the reference-distribution serving pattern), so requests are
+//!   fusable onto the batched multi-pair solve engine; sweeps the
+//!   `sinkhorn.max_batch` fuse-width cap with `1` as the sequential
+//!   baseline. The acceptance bar is the batched case beating sequential
+//!   at width ≥ 4 on the release build (EXPERIMENTS.md §Throughput).
+//!
+//! Setting `BENCH_SMOKE=1` shrinks every knob to CI scale;
+//! `BENCH_JSON=<path>` appends each table there as JSON lines.
+//!
 //! Run: `cargo bench --bench coordinator_throughput`
 
 use linear_sinkhorn::bench::Table;
@@ -12,8 +26,8 @@ use linear_sinkhorn::coordinator::Service;
 use linear_sinkhorn::metrics::Stopwatch;
 use linear_sinkhorn::prelude::*;
 
-fn run_load(workers: usize, max_batch: usize, n_req: usize, n: usize) -> (f64, f64, f64, u64) {
-    let cfg = ServiceConfig {
+fn service_cfg(workers: usize, max_batch: usize, fuse_width: usize) -> ServiceConfig {
+    ServiceConfig {
         workers,
         batcher: BatcherConfig { max_batch, max_delay_us: 200, queue_depth: 4096 },
         sinkhorn: SinkhornConfig {
@@ -21,18 +35,21 @@ fn run_load(workers: usize, max_batch: usize, n_req: usize, n: usize) -> (f64, f
             max_iters: 500,
             tol: 1e-4,
             check_every: 10,
+            max_batch: fuse_width,
             ..Default::default()
         },
         num_features: 128,
         solver_threads: 1,
         cache_capacity: 8,
-    };
+    }
+}
+
+/// Drive `workload` through a fresh service; returns
+/// (req/s, p50 ms, p99 ms, shed).
+fn run_load(cfg: ServiceConfig, workload: Vec<(Measure, Measure)>) -> (f64, f64, f64, u64) {
+    let n_req = workload.len();
     let svc = Service::start(cfg);
     let h = svc.handle();
-    let mut rng = Rng::seed_from(1);
-    // Pre-generate the workload so generation isn't on the clock.
-    let workload: Vec<(Measure, Measure)> =
-        (0..n_req).map(|_| data::gaussian_blobs(n, &mut rng)).collect();
     let sw = Stopwatch::start();
     let mut pendings = Vec::with_capacity(n_req);
     for (mu, nu) in workload {
@@ -61,22 +78,61 @@ fn run_load(workers: usize, max_batch: usize, n_req: usize, n: usize) -> (f64, f
     (latencies.len() as f64 / total, q(0.5), q(0.99), shed as u64)
 }
 
+/// Mixed workload: per-request clouds (nothing fuses).
+fn mixed_workload(n_req: usize, n: usize) -> Vec<(Measure, Measure)> {
+    let mut rng = Rng::seed_from(1);
+    (0..n_req).map(|_| data::gaussian_blobs(n, &mut rng)).collect()
+}
+
+/// Shared-support workload: one cloud pair, per-request weight skews —
+/// every request is fusable with every other.
+fn shared_workload(n_req: usize, n: usize) -> Vec<(Measure, Measure)> {
+    let mut rng = Rng::seed_from(2);
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+    (0..n_req)
+        .map(|k| {
+            let reweight = |base: &Measure, salt: usize| {
+                let raw: Vec<f64> = (0..base.len())
+                    .map(|i| 1.0 + ((i * (salt + 2) + salt) % 11) as f64 * 0.1)
+                    .collect();
+                let total: f64 = raw.iter().sum();
+                let mut m = base.clone();
+                m.weights = raw.iter().map(|&x| (x / total) as f32).collect();
+                m
+            };
+            (reweight(&mu, k), reweight(&nu, k + 1))
+        })
+        .collect()
+}
+
 fn main() {
     let args = ArgSpec::new("coord", "divergence service throughput/latency")
         .opt("requests", "64", "requests per configuration")
         .opt("n", "400", "samples per cloud")
-        .opt("csv", "target/coordinator.csv", "csv output")
+        .opt("csv", "target/coordinator.csv", "csv output (mixed workload)")
+        .opt(
+            "batched-csv",
+            "target/coordinator_batched.csv",
+            "csv output (batched-vs-sequential table)",
+        )
         .parse();
-    let n_req = args.get_usize("requests");
-    let n = args.get_usize("n");
+    let smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (n_req, n) = if smoke {
+        println!("(BENCH_SMOKE: reduced sizes)");
+        (24, 120)
+    } else {
+        (args.get_usize("requests"), args.get_usize("n"))
+    };
+    let worker_counts: &[usize] = if smoke { &[2] } else { &[1, 2, 4, 8] };
 
     let mut t = Table::new(
-        "Coordinator throughput (open-loop burst)",
+        "Coordinator throughput (open-loop burst, mixed workload)",
         &["workers", "max_batch", "req/s", "p50 ms", "p99 ms", "shed"],
     );
-    for &workers in &[1usize, 2, 4, 8] {
+    for &workers in worker_counts {
         for &mb in &[1usize, 8, 32] {
-            let (rps, p50, p99, shed) = run_load(workers, mb, n_req, n);
+            let (rps, p50, p99, shed) =
+                run_load(service_cfg(workers, mb, 8), mixed_workload(n_req, n));
             t.row(vec![
                 workers.to_string(),
                 mb.to_string(),
@@ -88,4 +144,38 @@ fn main() {
         }
     }
     t.emit(Some(args.get_str("csv")));
+
+    // Batched vs sequential: same shared-support workload, fuse width
+    // swept with 1 as the sequential baseline. Throughput (req/s) is the
+    // figure of merit; the fused case amortises one kernel triple and the
+    // factor streams across the whole group.
+    let fuse_widths: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+    let mut bt = Table::new(
+        "Batched vs sequential solves (shared-support workload)",
+        &["workers", "fuse width", "req/s", "p50 ms", "p99 ms", "speedup vs width 1"],
+    );
+    for &workers in worker_counts {
+        let mut base_rps = 0.0f64;
+        for &width in fuse_widths {
+            let cfg = service_cfg(workers, 32, width);
+            let (rps, p50, p99, _) = run_load(cfg, shared_workload(n_req, n));
+            if width == 1 {
+                base_rps = rps;
+            }
+            bt.row(vec![
+                workers.to_string(),
+                width.to_string(),
+                format!("{rps:.1}"),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+                format!("{:.2}x", rps / base_rps.max(1e-9)),
+            ]);
+        }
+    }
+    bt.emit(Some(args.get_str("batched-csv")));
+
+    println!(
+        "\nacceptance bar: shared-support req/s at fuse width >= 4 beats width 1 \
+         (EXPERIMENTS.md §Throughput)"
+    );
 }

@@ -21,6 +21,11 @@
 //!
 //! Run: `cargo bench --bench parallel_scaling`
 //! (add `--sizes 1000,10000,100000` to sweep the full range)
+//!
+//! Setting `BENCH_SMOKE=1` overrides every size knob with CI-scale values
+//! (the `bench-smoke` job's quick mode); setting `BENCH_JSON=<path>`
+//! additionally appends every table to that file in JSON-lines form (see
+//! `bench::Table::emit`).
 
 use std::sync::Mutex;
 
@@ -83,11 +88,22 @@ fn main() {
         .opt("csv", "target/parallel_scaling.csv", "csv output")
         .parse();
 
-    let sizes = args.get_usize_list("sizes");
-    let thread_counts = args.get_usize_list("threads");
-    let r = args.get_usize("features");
-    let iters = args.get_usize("iters");
-    let reps = args.get_usize("reps");
+    // CI quick mode: small sizes, few reps — enough to smoke the paths
+    // and record a trajectory point, cheap enough for every push.
+    let smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (sizes, thread_counts, spawn_sizes, r, iters, reps) = if smoke {
+        println!("(BENCH_SMOKE: reduced sizes)");
+        (vec![500, 2000], vec![2], vec![100, 1000], 64, 10, 2)
+    } else {
+        (
+            args.get_usize_list("sizes"),
+            args.get_usize_list("threads"),
+            args.get_usize_list("spawn-sizes"),
+            args.get_usize("features"),
+            args.get_usize("iters"),
+            args.get_usize("reps"),
+        )
+    };
     let eps = 0.5;
     let mut rng = Rng::seed_from(args.get_u64("seed"));
 
@@ -121,6 +137,7 @@ fn main() {
             check_every: iters + 1,
             threads: 1,
             stabilize: false,
+            max_batch: 1,
         };
         let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
         let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
@@ -176,13 +193,12 @@ fn main() {
         "Region dispatch overhead (identical chunk tasks, r fixed)",
         &["n", "threads", "scoped spawn/region", "persistent pool/region", "speedup"],
     );
-    let spawn_sizes = args.get_usize_list("spawn-sizes");
     let spawn_reps = (reps.max(3)) * 10;
     const SPAWN_CHUNK: usize = 256;
     for &n in &spawn_sizes {
         let a = Mat::from_fn(n, r, |i, j| ((i * 31 + j * 7) % 97) as f32 * 0.01 + 0.1);
         let v: Vec<f32> = (0..n).map(|i| 0.5 + (i % 13) as f32 * 0.01).collect();
-        let nchunks = (n + SPAWN_CHUNK - 1) / SPAWN_CHUNK;
+        let nchunks = n.div_ceil(SPAWN_CHUNK);
         let mut partials: Vec<Vec<f32>> = (0..nchunks).map(|_| vec![0.0f32; r]).collect();
         for &threads in &thread_counts {
             let scoped = time(3, spawn_reps, || {

@@ -117,7 +117,30 @@ impl Table {
         out
     }
 
+    /// Render as one JSON object (`{"title", "headers", "rows"}`) — the
+    /// machine-readable form the CI `bench-smoke` job collects into
+    /// `BENCH_ci.json` (one object per line, one line per table).
+    pub fn to_json(&self) -> String {
+        let arr = |items: &[String]| -> String {
+            let quoted: Vec<String> =
+                items.iter().map(|s| format!("\"{}\"", json_escape(s))).collect();
+            format!("[{}]", quoted.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
+        format!(
+            "{{\"title\":\"{}\",\"headers\":{},\"rows\":[{}]}}",
+            json_escape(&self.title),
+            arr(&self.headers),
+            rows.join(",")
+        )
+    }
+
     /// Print markdown to stdout and optionally write CSV next to it.
+    ///
+    /// When the `BENCH_JSON` environment variable names a file, the table
+    /// is additionally appended there in JSON-lines form — how the CI
+    /// `bench-smoke` job records every bench table into one artifact
+    /// without per-bench plumbing.
     pub fn emit(&self, csv_path: Option<&str>) {
         println!("{}", self.render());
         if let Some(path) = csv_path {
@@ -127,7 +150,45 @@ impl Table {
             std::fs::write(path, self.to_csv()).expect("write csv");
             println!("(csv written to {path})");
         }
+        if let Ok(json_path) = std::env::var("BENCH_JSON") {
+            if !json_path.is_empty() {
+                self.append_json(&json_path);
+                println!("(json appended to {json_path})");
+            }
+        }
     }
+
+    /// Append this table's [`Table::to_json`] line to `path`.
+    pub fn append_json(&self, path: &str) {
+        use std::io::Write;
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .expect("open bench json");
+        writeln!(f, "{}", self.to_json()).expect("append bench json");
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// table titles and cells are plain ASCII, but stay correct regardless.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Convenience: format seconds adaptively (s / ms / us).
@@ -188,6 +249,33 @@ mod tests {
     fn table_arity_enforced() {
         let mut t = Table::new("demo", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn table_json_shape_and_escaping() {
+        let mut t = Table::new("q\"t", &["a", "b"]);
+        t.row(vec!["1.5x".into(), "path\\x\n".into()]);
+        assert_eq!(
+            t.to_json(),
+            "{\"title\":\"q\\\"t\",\"headers\":[\"a\",\"b\"],\
+             \"rows\":[[\"1.5x\",\"path\\\\x\\n\"]]}"
+        );
+    }
+
+    #[test]
+    fn append_json_writes_one_line_per_table() {
+        let dir = std::env::temp_dir().join("ls_bench_json_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("BENCH_ci.json");
+        let path = path.to_str().unwrap();
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into()]);
+        t.append_json(path);
+        t.append_json(path);
+        let contents = std::fs::read_to_string(path).unwrap();
+        assert_eq!(contents.lines().count(), 2);
+        assert!(contents.lines().all(|l| l.starts_with("{\"title\":\"demo\"")));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

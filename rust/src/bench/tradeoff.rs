@@ -75,6 +75,7 @@ pub fn ground_truth(mu: &Measure, nu: &Measure, eps: f64) -> f64 {
         check_every: 25,
         threads: 1,
         stabilize: false,
+        max_batch: 1,
     };
     sinkhorn_log_domain(&CostMatrixLogKernel::new(&cost, eps), &mu.weights, &nu.weights, &cfg)
         .expect("log-domain ground truth cannot diverge")
@@ -168,6 +169,7 @@ pub fn run_sweep(
             check_every: 10,
             threads: 1,
             stabilize: false,
+            max_batch: 1,
         };
 
         // --- Sin baseline: converged dense solve (one timing; deviation of

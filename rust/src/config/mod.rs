@@ -113,7 +113,8 @@ max_delay_us = 500
     #[test]
     fn typed_sinkhorn_config_roundtrip() {
         let doc = ConfigDoc::parse(
-            "[sinkhorn]\nepsilon = 0.25\nmax_iters = 123\ntol = 1e-4\nstabilize = false",
+            "[sinkhorn]\nepsilon = 0.25\nmax_iters = 123\ntol = 1e-4\nstabilize = false\n\
+             max_batch = 4",
         )
         .unwrap();
         let cfg = SinkhornConfig::from_doc(&doc);
@@ -121,12 +122,19 @@ max_delay_us = 500
         assert_eq!(cfg.max_iters, 123);
         assert_eq!(cfg.tol, 1e-4);
         assert!(!cfg.stabilize);
+        assert_eq!(cfg.max_batch, 4);
     }
 
     #[test]
     fn stabilize_defaults_on() {
         let doc = ConfigDoc::parse("").unwrap();
         assert!(SinkhornConfig::from_doc(&doc).stabilize);
+    }
+
+    #[test]
+    fn max_batch_defaults_to_fusion_enabled() {
+        let doc = ConfigDoc::parse("").unwrap();
+        assert!(SinkhornConfig::from_doc(&doc).max_batch > 1);
     }
 
     #[test]

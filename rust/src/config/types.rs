@@ -29,6 +29,14 @@ pub struct SinkhornConfig {
     /// log-domain view keep their original error. `sinkhorn.stabilize`
     /// in config files, `--stabilize` on the CLI.
     pub stabilize: bool,
+    /// Width cap for the batched multi-pair solve engine
+    /// (`sinkhorn::solve_batch`): the coordinator fuses at most this many
+    /// compatible requests into one column-blocked solve. `1` disables
+    /// fusion (every request solves alone). Fusion never changes results
+    /// — batched solves are bitwise identical to sequential ones — so
+    /// this knob trades per-request latency against throughput only.
+    /// `sinkhorn.max_batch` in config files, `--max-batch` on the CLI.
+    pub max_batch: usize,
 }
 
 impl Default for SinkhornConfig {
@@ -40,6 +48,7 @@ impl Default for SinkhornConfig {
             check_every: 10,
             threads: 1,
             stabilize: true,
+            max_batch: 8,
         }
     }
 }
@@ -55,6 +64,7 @@ impl SinkhornConfig {
                 as usize,
             threads: doc.get_int("sinkhorn.threads").unwrap_or(d.threads as i64) as usize,
             stabilize: doc.get_bool("sinkhorn.stabilize").unwrap_or(d.stabilize),
+            max_batch: doc.get_int("sinkhorn.max_batch").unwrap_or(d.max_batch as i64) as usize,
         }
     }
 }

@@ -1,4 +1,5 @@
-//! Dynamic batcher: size-or-deadline flush policy.
+//! Dynamic batcher: size-or-deadline flush policy, plus the fuse-grouping
+//! rule that feeds the batched multi-pair solve engine.
 //!
 //! Invariants (property-tested in `rust/tests/`):
 //! * never drops a request — every received request appears in exactly one
@@ -7,6 +8,16 @@
 //! * no batch exceeds `max_batch`;
 //! * no request waits in the batcher longer than ~`max_delay_us` past the
 //!   batch's first arrival (modulo scheduler jitter).
+//!
+//! [`fuse_groups`] partitions a flushed batch into groups that one
+//! [`crate::sinkhorn::solve_batch`]-powered solve can serve: requests
+//! fuse only when they agree on the feature-map key (dimension and
+//! epsilon — the `(dim, eps, r)` cache key, with `r` fixed per service)
+//! **and** share identical support points, which is what lets their
+//! weight pairs stack against a single factored kernel. Incompatible
+//! requests never fuse; groups are capped at `sinkhorn.max_batch`.
+//! Fusion is a throughput optimisation only — batched solves are bitwise
+//! identical to sequential ones (`rust/tests/batched_equivalence.rs`).
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
@@ -74,6 +85,44 @@ pub fn run(
             }
         }
     }
+}
+
+/// Can two requests ride one fused multi-pair solve?
+///
+/// They must resolve to the same feature map (same dimension and the same
+/// epsilon override, compared by bit pattern like the cache key) and sit
+/// on identical support points — a shared support is what makes their
+/// weight pairs marginals of the *same* factored kernel. Weights are
+/// free to differ; they are exactly the per-pair payload of the batched
+/// solve.
+fn fusable(a: &Request, b: &Request) -> bool {
+    a.epsilon.map(f64::to_bits) == b.epsilon.map(f64::to_bits)
+        && a.mu.dim() == b.mu.dim()
+        && a.mu.points == b.mu.points
+        && a.nu.points == b.nu.points
+}
+
+/// Partition a flushed batch into fuse groups of width ≤ `max_width`.
+///
+/// Greedy first-fit in arrival order: each request joins the first
+/// not-yet-full group it is [`fusable`] with, else opens a new group.
+/// Order within a group (and of group leaders across groups) follows
+/// arrival order, but a fused request replies together with its group —
+/// ahead of unfusable earlier-group neighbours still queued — so
+/// *cross-request* reply order is not strict arrival order (each
+/// request has its own reply channel; nothing observes cross-request
+/// ordering). With `max_width ≤ 1` every request gets its own group —
+/// fusion disabled.
+pub fn fuse_groups(requests: Vec<Request>, max_width: usize) -> Vec<Vec<Request>> {
+    let cap = max_width.max(1);
+    let mut groups: Vec<Vec<Request>> = Vec::new();
+    for req in requests {
+        match groups.iter_mut().find(|g| g.len() < cap && fusable(&g[0], &req)) {
+            Some(group) => group.push(req),
+            None => groups.push(vec![req]),
+        }
+    }
+    groups
 }
 
 fn flush(
@@ -227,5 +276,85 @@ mod tests {
             run_batcher_on(&ids, BatcherPolicy { max_batch: 100, max_delay_us: 60_000_000 });
         let flat: Vec<u64> = batches.iter().flatten().cloned().collect();
         assert_eq!(flat, ids, "pending requests must be drained at shutdown");
+    }
+
+    fn mk_typed_request(
+        id: u64,
+        mu: Measure,
+        nu: Measure,
+        epsilon: Option<f64>,
+        reply: SyncSender<crate::error::Result<super::super::Response>>,
+    ) -> Request {
+        Request { id, mu, nu, epsilon, enqueued: Instant::now(), reply }
+    }
+
+    fn group_ids(groups: &[Vec<Request>]) -> Vec<Vec<u64>> {
+        groups.iter().map(|g| g.iter().map(|r| r.id).collect()).collect()
+    }
+
+    #[test]
+    fn fuse_groups_shares_only_compatible_requests() {
+        let (reply_tx, _reply_rx) = sync_channel(16);
+        let pts_a = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        let pts_b = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32 + 10.0);
+        let pts_3d = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let shared = |id, eps| {
+            mk_typed_request(
+                id,
+                Measure::uniform(pts_a.clone()),
+                Measure::uniform(pts_b.clone()),
+                eps,
+                reply_tx.clone(),
+            )
+        };
+        let requests = vec![
+            shared(0, None),                 // fuses with 1 and 4
+            shared(1, None),
+            shared(2, Some(0.25)),           // different eps: never fuses with 0/1
+            mk_typed_request(
+                3,
+                Measure::uniform(pts_3d.clone()),
+                Measure::uniform(pts_3d.clone()),
+                None,
+                reply_tx.clone(),
+            ),                               // different dim: its own group
+            shared(4, None),
+            mk_typed_request(
+                5,
+                Measure::uniform(pts_b.clone()),
+                Measure::uniform(pts_a.clone()),
+                None,
+                reply_tx.clone(),
+            ),                               // same dim+eps but different support: no fuse
+        ];
+        let groups = fuse_groups(requests, 8);
+        assert_eq!(
+            group_ids(&groups),
+            vec![vec![0, 1, 4], vec![2], vec![3], vec![5]],
+            "only same-(dim, eps)+same-support requests share a fused solve"
+        );
+    }
+
+    #[test]
+    fn fuse_groups_respects_width_cap_and_disables_at_one() {
+        let (reply_tx, _reply_rx) = sync_channel(16);
+        let pts = Mat::ones(2, 2);
+        let reqs = |n: u64| -> Vec<Request> {
+            (0..n)
+                .map(|id| {
+                    mk_typed_request(
+                        id,
+                        Measure::uniform(pts.clone()),
+                        Measure::uniform(pts.clone()),
+                        None,
+                        reply_tx.clone(),
+                    )
+                })
+                .collect()
+        };
+        let capped = fuse_groups(reqs(5), 2);
+        assert_eq!(group_ids(&capped), vec![vec![0, 1], vec![2, 3], vec![4]]);
+        let solo = fuse_groups(reqs(3), 1);
+        assert_eq!(group_ids(&solo), vec![vec![0], vec![1], vec![2]]);
     }
 }

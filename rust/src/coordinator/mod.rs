@@ -14,6 +14,18 @@
 //!   size-or-deadline policy a serving stack (vLLM-style) uses. Batching
 //!   matters here because requests with the same (dim, eps) *share the
 //!   Lemma-1 anchor draw*, amortising feature-map setup across a batch.
+//! * **Fused multi-pair solves** ([`batcher::fuse_groups`] +
+//!   [`crate::sinkhorn::solve_batch_stabilized`]): within a flushed
+//!   batch, requests that share the feature-map key *and* identical
+//!   support points are solved as **one** batched solve per transport
+//!   problem — their weight pairs stack into column-blocked scaling
+//!   matrices and every Sinkhorn iteration streams the shared factors
+//!   once for the whole group (O(r·Σn) fused applies). Results are
+//!   bitwise identical to solving each request alone, so fusion is
+//!   invisible except in throughput. Width is capped by
+//!   `sinkhorn.max_batch` (`--max-batch`; `1` disables). Metrics:
+//!   `service.batched_solves` counts requests served by fused solves,
+//!   `service.batch_width` records solve-group widths.
 //! * **Feature-map cache** ([`cache`]): the amortisation is made explicit
 //!   and cross-batch — fitted `GaussianFeatureMap`s are cached by
 //!   `(dim, eps, r)` and reused whenever the cached radius covers the
@@ -55,7 +67,7 @@ use crate::kernels::FactoredKernel;
 use crate::metrics::Registry;
 use crate::rng::Rng;
 use crate::runtime::pool::Pool;
-use crate::sinkhorn::sinkhorn_stabilized;
+use crate::sinkhorn::{sinkhorn_stabilized, solve_batch_stabilized};
 
 /// A divergence request: two measures on the same ground space.
 pub struct Request {
@@ -280,24 +292,49 @@ fn worker_loop(
         // The anchor draw is amortised through the shared feature-map
         // cache: requests with the same (dim, eps, r) reuse one Lemma-1
         // anchor set, within a batch and across batches/workers alike.
-        for req in batch.requests {
-            let result = solve_one(
-                &req,
-                &cfg,
-                &mut rng,
-                bsize,
-                &cache,
-                &metrics,
-                &solver_pool,
-                &solve_pool,
-            );
-            // Record metrics BEFORE replying: a client that checks the
-            // registry right after `wait()` must see its own request.
-            metrics.counter("service.completed").inc();
-            metrics
-                .histogram("service.latency_us")
-                .observe_us(req.enqueued.elapsed().as_micros() as u64);
-            let _ = req.reply.send(result); // client may have gone away
+        // Requests that additionally share identical support points fuse
+        // onto one batched multi-pair solve (bitwise identical to solving
+        // them one by one — see `batcher::fuse_groups`).
+        let groups = batcher::fuse_groups(batch.requests, cfg.sinkhorn.max_batch);
+        for group in groups {
+            // Width histogram: `n`, `mean` and `max` are exact; the
+            // quantile estimates are log-bucketed (built for latencies)
+            // and overshoot small integers — read the mean/max fields
+            // when tuning `sinkhorn.max_batch`.
+            metrics.histogram("service.batch_width").observe_us(group.len() as u64);
+            let results = if group.len() == 1 {
+                vec![solve_one(
+                    &group[0],
+                    &cfg,
+                    &mut rng,
+                    bsize,
+                    &cache,
+                    &metrics,
+                    &solver_pool,
+                    &solve_pool,
+                )]
+            } else {
+                metrics.counter("service.batched_solves").add(group.len() as u64);
+                solve_group(
+                    &group,
+                    &cfg,
+                    &mut rng,
+                    bsize,
+                    &cache,
+                    &metrics,
+                    &solver_pool,
+                    &solve_pool,
+                )
+            };
+            for (req, result) in group.iter().zip(results) {
+                // Record metrics BEFORE replying: a client that checks the
+                // registry right after `wait()` must see its own request.
+                metrics.counter("service.completed").inc();
+                metrics
+                    .histogram("service.latency_us")
+                    .observe_us(req.enqueued.elapsed().as_micros() as u64);
+                let _ = req.reply.send(result); // client may have gone away
+            }
         }
     }
 }
@@ -367,6 +404,90 @@ fn solve_one(
     })
 }
 
+/// Solve a fuse group (≥ 2 requests on identical supports and the same
+/// epsilon) as three batched multi-pair solves — one per transport
+/// problem, each of width `group.len()` — sharing one kernel triple
+/// built from the group's common support. Per request, the result is
+/// bitwise identical to [`solve_one`]: the batched solver's
+/// sequential-equivalence contract plus the same cached feature map and
+/// the same kernel construction (`rust/tests/batched_equivalence.rs`
+/// covers the solver; `fused_group_matches_solo_request_bitwise` below
+/// covers this end to end).
+#[allow(clippy::too_many_arguments)]
+fn solve_group(
+    group: &[Request],
+    cfg: &ServiceConfig,
+    rng: &mut Rng,
+    batch_size: usize,
+    cache: &FeatureCache,
+    metrics: &Registry,
+    solver_pool: &Pool,
+    solve_pool: &Pool,
+) -> Vec<Result<Response>> {
+    let rep = &group[0];
+    let mut skcfg = cfg.sinkhorn.clone();
+    if let Some(e) = rep.epsilon {
+        skcfg.epsilon = e;
+    }
+    let eps = skcfg.epsilon;
+    // All group members share rep's support, hence also its radius.
+    let radius = rep.mu.radius().max(rep.nu.radius());
+    let map =
+        cache.get_or_fit(rep.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
+    let k_xy = FactoredKernel::from_measures_stabilized_pooled(
+        &*map,
+        &rep.mu,
+        &rep.nu,
+        solver_pool.clone(),
+    );
+    let k_xx = FactoredKernel::from_measures_stabilized_pooled(
+        &*map,
+        &rep.mu,
+        &rep.mu,
+        solver_pool.clone(),
+    );
+    let k_yy = FactoredKernel::from_measures_stabilized_pooled(
+        &*map,
+        &rep.nu,
+        &rep.nu,
+        solver_pool.clone(),
+    );
+    let xy_pairs: Vec<(&[f32], &[f32])> =
+        group.iter().map(|r| (r.mu.weights.as_slice(), r.nu.weights.as_slice())).collect();
+    let xx_pairs: Vec<(&[f32], &[f32])> =
+        group.iter().map(|r| (r.mu.weights.as_slice(), r.mu.weights.as_slice())).collect();
+    let yy_pairs: Vec<(&[f32], &[f32])> =
+        group.iter().map(|r| (r.nu.weights.as_slice(), r.nu.weights.as_slice())).collect();
+    // Three batched solves instead of 3·B vector solves; concurrently
+    // over the solve pool like the single-request path.
+    let (r_xy, r_xx, r_yy) = solve_pool.join3(
+        || solve_batch_stabilized(&k_xy, &xy_pairs, &skcfg),
+        || solve_batch_stabilized(&k_xx, &xx_pairs, &skcfg),
+        || solve_batch_stabilized(&k_yy, &yy_pairs, &skcfg),
+    );
+    group
+        .iter()
+        .zip(r_xy.into_iter().zip(r_xx).zip(r_yy))
+        .map(|(req, ((xy, xx), yy))| {
+            let (sol_xy, st_xy) = xy?;
+            let (sol_xx, st_xx) = xx?;
+            let (sol_yy, st_yy) = yy?;
+            let stabilized = [st_xy, st_xx, st_yy].iter().filter(|&&s| s).count() as u64;
+            if stabilized > 0 {
+                metrics.counter("service.stabilized_solves").add(stabilized);
+            }
+            Ok(Response {
+                id: req.id,
+                divergence: sol_xy.objective - 0.5 * (sol_xx.objective + sol_yy.objective),
+                w_xy: sol_xy.objective,
+                iterations: sol_xy.iterations + sol_xx.iterations + sol_yy.iterations,
+                latency_us: req.enqueued.elapsed().as_micros() as u64,
+                batch_size,
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -384,6 +505,7 @@ mod tests {
                 check_every: 10,
                 threads: 1,
                 stabilize: true,
+                max_batch: 8,
             },
             num_features: 128,
             solver_threads: 1,
@@ -464,6 +586,7 @@ mod tests {
                 check_every: 100,
                 threads: 1,
                 stabilize: true,
+                max_batch: 8,
             },
             num_features: 256,
             solver_threads: 1,
@@ -571,6 +694,57 @@ mod tests {
             let resp = h.submit_with(mu, nu, Some(eps)).unwrap().wait().unwrap();
             assert!(resp.divergence.is_finite(), "eps={eps}: {}", resp.divergence);
         }
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn fused_group_matches_solo_request_bitwise() {
+        // The acceptance property of the batched engine at the service
+        // level: a request solved inside a fused group returns exactly
+        // the bits a solo solve of the same request returns.
+        let mut cfg = test_cfg(1);
+        // Size-triggered flush at 4 with a generous deadline, so the
+        // burst below reliably lands in one batch (and one fuse group —
+        // the four requests share their clouds).
+        cfg.batcher = BatcherConfig { max_batch: 4, max_delay_us: 500_000, queue_depth: 64 };
+        let svc = Service::start(cfg);
+        let h = svc.handle();
+        let (mu, nu) = clouds(11, 50);
+        let solo = h.divergence(mu.clone(), nu.clone()).unwrap().divergence;
+        let pendings: Vec<_> =
+            (0..4).map(|_| h.submit(mu.clone(), nu.clone()).unwrap()).collect();
+        for p in pendings {
+            let resp = p.wait().unwrap();
+            assert_eq!(
+                resp.divergence.to_bits(),
+                solo.to_bits(),
+                "fused {} vs solo {solo}",
+                resp.divergence
+            );
+        }
+        let m = h.metrics_text();
+        assert!(m.contains("service.batched_solves"), "no fused solve happened:\n{m}");
+        assert!(m.contains("service.batch_width"), "{m}");
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn max_batch_one_disables_fusion() {
+        let mut cfg = test_cfg(1);
+        cfg.sinkhorn.max_batch = 1;
+        cfg.batcher = BatcherConfig { max_batch: 4, max_delay_us: 500_000, queue_depth: 64 };
+        let svc = Service::start(cfg);
+        let h = svc.handle();
+        let (mu, nu) = clouds(12, 30);
+        let pendings: Vec<_> =
+            (0..4).map(|_| h.submit(mu.clone(), nu.clone()).unwrap()).collect();
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        let m = h.metrics_text();
+        assert!(!m.contains("service.batched_solves"), "fusion must be off:\n{m}");
         drop(h);
         svc.shutdown();
     }

@@ -72,6 +72,7 @@ impl GanTrainer {
             check_every: cfg.sinkhorn_iters.max(1),
             threads: 1,
             stabilize: false,
+            max_batch: 1,
         };
         GanTrainer {
             opt_gen: Adam::new(generator.num_params(), cfg.lr),

@@ -21,6 +21,7 @@
 //! scaling).
 
 use crate::linalg::{
+    lse_matmat_into, lse_matmat_into_pooled, lse_matmat_t_into, lse_matmat_t_into_pooled,
     lse_matvec_into, lse_matvec_into_pooled, lse_matvec_t_into, lse_matvec_t_into_pooled, Mat,
 };
 
@@ -40,6 +41,26 @@ pub trait LogKernelOp {
 
     /// `out[j] = logsumexp_i(log K_ij + u[i])` (length cols).
     fn apply_log_t(&self, u: &[f64], out: &mut [f64]);
+
+    /// Column-blocked [`LogKernelOp::apply_log`]: one input/output vector
+    /// per pair. The default loops the vector apply; fused overrides must
+    /// stay **bitwise identical per pair** to it — the contract the
+    /// batched log-domain solver
+    /// ([`crate::sinkhorn::solve_batch_log_domain`]) relies on for its
+    /// sequential-equivalence guarantee.
+    fn apply_log_batch(&self, ts: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        for (t, o) in ts.iter().zip(outs.iter_mut()) {
+            self.apply_log(t, o);
+        }
+    }
+
+    /// Column-blocked [`LogKernelOp::apply_log_t`]; same contract as
+    /// [`LogKernelOp::apply_log_batch`].
+    fn apply_log_batch_t(&self, us: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        for (u, o) in us.iter().zip(outs.iter_mut()) {
+            self.apply_log_t(u, o);
+        }
+    }
 
     /// Human-readable label for reports and error messages.
     fn describe(&self) -> String;
@@ -95,6 +116,16 @@ impl LogKernelOp for DenseKernel {
         lse_matvec_t_into(&self.cost, -1.0 / self.eps, u, out);
     }
 
+    /// Fused multi-pair form: one stream over the cost matrix serves all
+    /// B pairs (bitwise identical per pair to [`LogKernelOp::apply_log`]).
+    fn apply_log_batch(&self, ts: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        lse_matmat_into(&self.cost, -1.0 / self.eps, ts, outs);
+    }
+
+    fn apply_log_batch_t(&self, us: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        lse_matmat_t_into(&self.cost, -1.0 / self.eps, us, outs);
+    }
+
     fn describe(&self) -> String {
         let (n, m) = self.k.shape();
         format!("Sin-log(dense {n}x{m})")
@@ -129,6 +160,26 @@ impl LogKernelOp for FactoredKernel {
         let mut s = vec![0.0f64; self.rank()];
         lse_matvec_t_into_pooled(lx, 1.0, u, &mut s, &self.pool);
         lse_matvec_into_pooled(ly, 1.0, &s, out, &self.pool);
+    }
+
+    /// Fused multi-pair nested logsumexp: the inner and outer reductions
+    /// run column-blocked, streaming each log factor once for all B pairs
+    /// — O(r(n+m)) per pair, O(B·r) intermediate, and bitwise identical
+    /// per pair to [`LogKernelOp::apply_log`] at every pool size (the
+    /// column-blocked primitives share kernels and chunk grids with the
+    /// vector ones).
+    fn apply_log_batch(&self, ts: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        let (lx, ly) = self.log_factors();
+        let mut ss: Vec<Vec<f64>> = (0..ts.len()).map(|_| vec![0.0f64; self.rank()]).collect();
+        lse_matmat_t_into_pooled(ly, 1.0, ts, &mut ss, &self.pool);
+        lse_matmat_into_pooled(lx, 1.0, &ss, outs, &self.pool);
+    }
+
+    fn apply_log_batch_t(&self, us: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        let (lx, ly) = self.log_factors();
+        let mut ss: Vec<Vec<f64>> = (0..us.len()).map(|_| vec![0.0f64; self.rank()]).collect();
+        lse_matmat_t_into_pooled(lx, 1.0, us, &mut ss, &self.pool);
+        lse_matmat_into_pooled(ly, 1.0, &ss, outs, &self.pool);
     }
 
     fn describe(&self) -> String {
@@ -270,6 +321,42 @@ mod tests {
             let want = log_out[i].exp() * (-fk.log_scale()).exp();
             let rel = ((plain[i] as f64) - want).abs() / want.abs().max(1e-30);
             assert!(rel < 1e-4, "row {i}: plain {} vs exp(log) {}", plain[i], want);
+        }
+    }
+
+    #[test]
+    fn batched_log_applies_match_vector_applies_bitwise() {
+        // Fused factored + fused dense + the default per-pair loop (via
+        // the borrowed-cost adapter) all reproduce the vector log applies
+        // exactly, pair by pair.
+        let mut rng = Rng::seed_from(7);
+        let (mu, nu) = data::gaussian_blobs(18, &mut rng);
+        let eps = 1e-2;
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, 16, &mut rng);
+        let fk = FactoredKernel::from_measures_stabilized(&map, &mu, &nu);
+        let dk = DenseKernel::from_measures(&mu, &nu, eps);
+        let adapter = CostMatrixLogKernel::new(dk.cost(), eps);
+        let b = 3;
+        let ts: Vec<Vec<f64>> =
+            (0..b).map(|p| (0..18).map(|j| (p * 11 + j) as f64 * 0.5 - 10.0).collect()).collect();
+        for kernel in [&fk as &dyn LogKernelOp, &dk as &dyn LogKernelOp, &adapter] {
+            let (n, m) = kernel.shape();
+            let mut outs: Vec<Vec<f64>> = (0..b).map(|_| vec![0.0f64; n]).collect();
+            kernel.apply_log_batch(&ts, &mut outs);
+            let mut outs_t: Vec<Vec<f64>> = (0..b).map(|_| vec![0.0f64; m]).collect();
+            kernel.apply_log_batch_t(&ts, &mut outs_t);
+            for p in 0..b {
+                let mut want = vec![0.0f64; n];
+                kernel.apply_log(&ts[p], &mut want);
+                let mut want_t = vec![0.0f64; m];
+                kernel.apply_log_t(&ts[p], &mut want_t);
+                for (got, want) in outs[p].iter().zip(&want) {
+                    assert_eq!(got.to_bits(), want.to_bits(), "{} pair {p}", kernel.describe());
+                }
+                for (got, want) in outs_t[p].iter().zip(&want_t) {
+                    assert_eq!(got.to_bits(), want.to_bits(), "{} pair {p} ^T", kernel.describe());
+                }
+            }
         }
     }
 

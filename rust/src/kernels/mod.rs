@@ -59,6 +59,32 @@ pub trait KernelOp {
         out
     }
 
+    /// Column-blocked apply: `out.row(k) = K @ vs.row(k)` for every pair
+    /// row (`vs`: B×cols, `out`: B×rows, both pair-major). The default
+    /// loops the vector apply per pair — trivially identical to B
+    /// sequential applies; kernels with a fused mat-mat path (the
+    /// factored kernel) override it with one that is **bitwise identical
+    /// per pair** to the vector apply, which is the contract the batched
+    /// Sinkhorn engine ([`crate::sinkhorn::solve_batch`]) relies on.
+    fn apply_batch_into(&self, vs: &crate::linalg::Mat, out: &mut crate::linalg::Mat) {
+        assert_eq!(vs.cols(), self.cols(), "apply_batch: input length");
+        assert_eq!(out.shape(), (vs.rows(), self.rows()), "apply_batch: output shape");
+        for k in 0..vs.rows() {
+            self.apply_into(vs.row(k), out.row_mut(k));
+        }
+    }
+
+    /// Column-blocked transposed apply: `out.row(k) = K^T @ us.row(k)`
+    /// (`us`: B×rows, `out`: B×cols). Same contract as
+    /// [`KernelOp::apply_batch_into`].
+    fn apply_batch_t_into(&self, us: &crate::linalg::Mat, out: &mut crate::linalg::Mat) {
+        assert_eq!(us.cols(), self.rows(), "apply_batch_t: input length");
+        assert_eq!(out.shape(), (us.rows(), self.cols()), "apply_batch_t: output shape");
+        for k in 0..us.rows() {
+            self.apply_t_into(us.row(k), out.row_mut(k));
+        }
+    }
+
     /// Smallest kernel entry (drives Sinkhorn's iteration bound via
     /// `Q_theta = -log min K_ij`, Thm 3.1). May be an estimate.
     fn min_entry(&self) -> f64;
@@ -172,6 +198,16 @@ impl KernelOp for DenseKernel {
 
     fn apply_t_into(&self, u: &[f32], out: &mut [f32]) {
         linalg::matvec_t_into(&self.k, u, out);
+    }
+
+    fn apply_batch_into(&self, vs: &Mat, out: &mut Mat) {
+        // One stream over the materialised kernel serves all B pairs;
+        // bitwise identical per pair to `apply_into` (shared row kernel).
+        linalg::matmat_into(&self.k, vs, out);
+    }
+
+    fn apply_batch_t_into(&self, us: &Mat, out: &mut Mat) {
+        linalg::matmat_t_into(&self.k, us, out);
     }
 
     fn min_entry(&self) -> f64 {
@@ -376,6 +412,27 @@ impl KernelOp for FactoredKernel {
         linalg::matvec_into_pooled(&self.phi_y, &t, out, &self.pool);
     }
 
+    /// Fused multi-pair apply: `K V = Phi_x (Phi_y^T V)` as two skinny
+    /// mat-mats, O(r(n+m)) per pair with **one** stream over each factor
+    /// for all B pairs instead of B. Each pair row of the result is
+    /// bitwise identical to `apply_into` on that pair's vector, at every
+    /// pool size — the column-blocked kernels share `row_dot`/`saxpy_rows`
+    /// and the fixed chunk grids with the vector kernels
+    /// (`rust/tests/batched_equivalence.rs`). The O(B·r) intermediate is
+    /// allocated per call (a few KB; the Mutex'd vector scratch stays
+    /// dedicated to the vector path).
+    fn apply_batch_into(&self, vs: &Mat, out: &mut Mat) {
+        let mut mid = Mat::zeros(vs.rows(), self.rank());
+        linalg::matmat_t_into_pooled(&self.phi_y, vs, &mut mid, &self.pool);
+        linalg::matmat_into_pooled(&self.phi_x, &mid, out, &self.pool);
+    }
+
+    fn apply_batch_t_into(&self, us: &Mat, out: &mut Mat) {
+        let mut mid = Mat::zeros(us.rows(), self.rank());
+        linalg::matmat_t_into_pooled(&self.phi_x, us, &mut mid, &self.pool);
+        linalg::matmat_into_pooled(&self.phi_y, &mid, out, &self.pool);
+    }
+
     fn min_entry(&self) -> f64 {
         // Cheap positive lower bound without materialising K:
         // min_ij sum_k phi_x[i,k] phi_y[j,k] >= sum_k (min_i phi_x[.,k]) (min_j phi_y[.,k]).
@@ -439,7 +496,7 @@ impl NystromKernel {
         rank: usize,
         rng: &mut Rng,
     ) -> Self {
-        assert!(rank >= 1 && rank <= nu.len());
+        assert!((1..=nu.len()).contains(&rank));
         let gibbs = |x: &[f32], y: &[f32]| -> f32 {
             let d2: f64 =
                 x.iter().zip(y).map(|(&a, &b)| ((a - b) as f64) * ((a - b) as f64)).sum();
@@ -660,6 +717,36 @@ mod tests {
     }
 
     #[test]
+    fn batched_applies_match_vector_applies_bitwise() {
+        // The fused factored path and the default per-pair loop must both
+        // reproduce the vector applies exactly, pair by pair.
+        let (mu, nu) = clouds(17, 40);
+        let mut rng = Rng::seed_from(18);
+        let fm = GaussianFeatureMap::fit(&mu, &nu, 0.5, 24, &mut rng);
+        let fk = FactoredKernel::from_measures(&fm, &mu, &nu);
+        let dk = DenseKernel::from_measures(&mu, &nu, 0.5);
+        let b = 3;
+        let vs = Mat::from_fn(b, nu.len(), |p, j| 0.1 + 0.01 * (p * 7 + j) as f32);
+        let us = Mat::from_fn(b, mu.len(), |p, i| 0.2 + 0.01 * (p * 5 + i) as f32);
+        for kernel in [&fk as &dyn KernelOp, &dk as &dyn KernelOp] {
+            let mut out = Mat::zeros(b, kernel.rows());
+            kernel.apply_batch_into(&vs, &mut out);
+            let mut out_t = Mat::zeros(b, kernel.cols());
+            kernel.apply_batch_t_into(&us, &mut out_t);
+            for p in 0..b {
+                let want = kernel.apply(vs.row(p));
+                let want_t = kernel.apply_t(us.row(p));
+                for (got, want) in out.row(p).iter().zip(&want) {
+                    assert_eq!(got.to_bits(), want.to_bits(), "{} pair {p}", kernel.label());
+                }
+                for (got, want) in out_t.row(p).iter().zip(&want_t) {
+                    assert_eq!(got.to_bits(), want.to_bits(), "{} pair {p} ^T", kernel.label());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn factored_positivity_preserved_for_positive_input() {
         let (mu, nu) = clouds(3, 40);
         let mut rng = Rng::seed_from(4);
@@ -811,6 +898,7 @@ mod debug_nystrom2 {
                     check_every: 10,
                     threads: 1,
                     stabilize: false,
+                    max_batch: 1,
                 };
                 match sinkhorn(&nk, &mu.weights, &nu.weights, &cfg) {
                     Ok(s) => println!(

@@ -39,6 +39,12 @@
 //! * [`coordinator::cache`] — the shared `(dim, eps, r)`-keyed
 //!   feature-map cache that amortises the Lemma-1 anchor draw across
 //!   requests, with hit/miss counters in [`metrics`].
+//! * [`sinkhorn::solve_batch`] — the batched multi-pair solve engine:
+//!   B transport problems sharing one kernel iterate as column-blocked
+//!   scaling matrices with fused `Φ_x(Φ_y^T V)` mat-mat applies, bitwise
+//!   identical to B sequential solves; the coordinator fuses compatible
+//!   in-flight requests onto it (`sinkhorn.max_batch`,
+//!   `service.batched_solves`; EXPERIMENTS.md §Throughput).
 //!
 //! ## Quick tour
 //!
@@ -91,7 +97,8 @@ pub mod prelude {
     pub use crate::rng::Rng;
     pub use crate::runtime::pool::Pool;
     pub use crate::sinkhorn::{
-        sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, sinkhorn_log_domain,
-        sinkhorn_stabilized, SinkhornSolution,
+        sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, sinkhorn_divergence_batch,
+        sinkhorn_log_domain, sinkhorn_stabilized, solve_batch, solve_batch_log_domain,
+        solve_batch_stabilized, SinkhornSolution,
     };
 }

@@ -15,10 +15,11 @@ mod ops;
 
 pub use mat::Mat;
 pub use ops::{
-    axpy, dot, l1_diff, l1_norm, logsumexp, lse_matvec_into, lse_matvec_into_pooled,
-    lse_matvec_t_into, lse_matvec_t_into_pooled, matmul, matvec, matvec_into,
-    matvec_into_pooled, matvec_t, matvec_t_into, matvec_t_into_pooled, max_abs_diff, scale,
-    softmax_inplace, sum,
+    axpy, dot, l1_diff, l1_norm, logsumexp, lse_matmat_into, lse_matmat_into_pooled,
+    lse_matmat_t_into, lse_matmat_t_into_pooled, lse_matvec_into, lse_matvec_into_pooled,
+    lse_matvec_t_into, lse_matvec_t_into_pooled, matmat_into, matmat_into_pooled,
+    matmat_t_into, matmat_t_into_pooled, matmul, matvec, matvec_into, matvec_into_pooled,
+    matvec_t, matvec_t_into, matvec_t_into_pooled, max_abs_diff, scale, softmax_inplace, sum,
 };
 
 #[cfg(test)]
@@ -158,6 +159,54 @@ mod tests {
         let mut out2 = vec![0.0f64; 2];
         lse_matvec_t_into(&a, 1.0, &[f64::NEG_INFINITY; 2], &mut out2);
         assert!(out2.iter().all(|x| *x == f64::NEG_INFINITY));
+    }
+
+    #[test]
+    fn matmat_rows_match_matvec() {
+        // Every pair row of the fused forms is bitwise the vector kernel.
+        let mut rng = Rng::seed_from(21);
+        for &(n, k, b) in &[(1usize, 1usize, 1usize), (7, 3, 2), (150, 33, 5)] {
+            let a = rand_mat(&mut rng, n, k);
+            let vs = rand_mat(&mut rng, b, k);
+            let mut fused = Mat::zeros(b, n);
+            matmat_into(&a, &vs, &mut fused);
+            let us = rand_mat(&mut rng, b, n);
+            let mut fused_t = Mat::zeros(b, k);
+            matmat_t_into(&a, &us, &mut fused_t);
+            for p in 0..b {
+                let want = matvec(&a, vs.row(p));
+                assert_eq!(fused.row(p), &want[..], "({n},{k},{b}) pair {p}");
+                let want_t = matvec_t(&a, us.row(p));
+                assert_eq!(fused_t.row(p), &want_t[..], "({n},{k},{b}) pair {p} transposed");
+            }
+        }
+    }
+
+    #[test]
+    fn lse_matmat_rows_match_lse_matvec() {
+        let mut rng = Rng::seed_from(22);
+        for &(n, k, b) in &[(1usize, 1usize, 1usize), (9, 4, 3), (120, 17, 4)] {
+            let a = rand_mat(&mut rng, n, k);
+            let alpha = -1.5;
+            let ts: Vec<Vec<f64>> = (0..b)
+                .map(|_| (0..k).map(|_| rng.normal_f32() as f64 * 5.0).collect())
+                .collect();
+            let mut outs: Vec<Vec<f64>> = (0..b).map(|_| vec![0.0f64; n]).collect();
+            lse_matmat_into(&a, alpha, &ts, &mut outs);
+            let us: Vec<Vec<f64>> = (0..b)
+                .map(|_| (0..n).map(|_| rng.normal_f32() as f64 * 5.0).collect())
+                .collect();
+            let mut outs_t: Vec<Vec<f64>> = (0..b).map(|_| vec![0.0f64; k]).collect();
+            lse_matmat_t_into(&a, alpha, &us, &mut outs_t);
+            for p in 0..b {
+                let mut want = vec![0.0f64; n];
+                lse_matvec_into(&a, alpha, &ts[p], &mut want);
+                assert_eq!(outs[p], want, "({n},{k},{b}) pair {p}");
+                let mut want_t = vec![0.0f64; k];
+                lse_matvec_t_into(&a, alpha, &us[p], &mut want_t);
+                assert_eq!(outs_t[p], want_t, "({n},{k},{b}) pair {p} transposed");
+            }
+        }
     }
 
     #[test]

@@ -17,6 +17,20 @@
 //! Sinkhorn without materialising a kernel (EXPERIMENTS.md
 //! §Stabilisation). The transposed variants allocate per-column `(max,
 //! sumexp)` scratch — O(k) against an O(nk) reduction.
+//!
+//! The `matmat*` / `lse_matmat*` families are the **column-blocked**
+//! (multi-right-hand-side) forms of the same four kernels: B input
+//! vectors are carried pair-major (one row of a [`Mat`] — or one
+//! `Vec<f64>` — per vector) and every pass over `a` serves all B columns
+//! at once, which is what makes the batched multi-pair Sinkhorn engine
+//! ([`crate::sinkhorn::solve_batch`]) O(r·Σn) per fused apply with one
+//! stream over the factors instead of B. Each column is computed with the
+//! *same* per-row/per-chunk kernels as the vector variants (`row_dot`,
+//! `saxpy_rows`, `lse_row`, `lse_accum_rows`) on the same fixed chunk
+//! grids, so column `k` of a fused apply is **bitwise identical** to the
+//! corresponding vector apply at every pool size — the property the
+//! batched solver's sequential-equivalence contract rests on
+//! (`rust/tests/batched_equivalence.rs`).
 
 use super::Mat;
 use crate::runtime::pool::Pool;
@@ -180,7 +194,7 @@ pub fn matvec_t_into_pooled(a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
         matvec_t_into(a, v, out);
         return;
     }
-    let nchunks = (n + PAR_T_CHUNK - 1) / PAR_T_CHUNK;
+    let nchunks = n.div_ceil(PAR_T_CHUNK);
     let mut partials: Vec<Vec<f32>> = (0..nchunks).map(|_| vec![0.0f32; k]).collect();
     let tasks: Vec<(usize, &mut Vec<f32>)> = partials.iter_mut().enumerate().collect();
     pool.run_tasks(tasks, |(c, buf)| {
@@ -337,7 +351,7 @@ pub fn lse_matvec_t_into_pooled(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64],
         lse_matvec_t_into(a, alpha, u, out);
         return;
     }
-    let nchunks = (n + PAR_LSE_T_CHUNK - 1) / PAR_LSE_T_CHUNK;
+    let nchunks = n.div_ceil(PAR_LSE_T_CHUNK);
     let mut partials: Vec<(Vec<f64>, Vec<f64>)> =
         (0..nchunks).map(|_| (vec![f64::NEG_INFINITY; k], vec![0.0f64; k])).collect();
     let tasks: Vec<(usize, &mut (Vec<f64>, Vec<f64>))> = partials.iter_mut().enumerate().collect();
@@ -365,6 +379,284 @@ pub fn lse_matvec_t_into_pooled(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64],
             }
         }
         *o = m + s.ln();
+    }
+}
+
+/// Column-blocked [`matvec_into`]: `out.row(k) = a @ vs.row(k)` for every
+/// pair row `k` (inputs and outputs pair-major: B×cols in, B×rows out).
+///
+/// `a` is streamed row-by-row once, each row dotted against all B input
+/// vectors — the fused form the batched Sinkhorn engine rides. Every
+/// entry comes from the same `row_dot` kernel as the vector variant, so
+/// row `k` of the output is bitwise identical to `matvec_into(a,
+/// vs.row(k), ..)` for any B.
+pub fn matmat_into(a: &Mat, vs: &Mat, out: &mut Mat) {
+    let b = vs.rows();
+    assert_eq!(a.cols(), vs.cols(), "matmat: {}x{} @ {}x{}^T", a.rows(), a.cols(), b, vs.cols());
+    assert_eq!(out.shape(), (b, a.rows()), "matmat: output shape");
+    for i in 0..a.rows() {
+        let row = a.row(i);
+        for k in 0..b {
+            out[(k, i)] = row_dot(row, vs.row(k));
+        }
+    }
+}
+
+/// Row-chunked parallel [`matmat_into`].
+///
+/// The task grid is (pair, fixed row chunk): each task fills a contiguous
+/// block of one pair row of the output with the shared `row_dot` kernel,
+/// so the result is bitwise identical to the serial form — and to the
+/// per-pair vector applies — for every pool size.
+pub fn matmat_into_pooled(a: &Mat, vs: &Mat, out: &mut Mat, pool: &Pool) {
+    let b = vs.rows();
+    assert_eq!(a.cols(), vs.cols(), "matmat: {}x{} @ {}x{}^T", a.rows(), a.cols(), b, vs.cols());
+    assert_eq!(out.shape(), (b, a.rows()), "matmat: output shape");
+    if pool.threads() <= 1 || a.rows() < 2 * PAR_ROW_CHUNK {
+        matmat_into(a, vs, out);
+        return;
+    }
+    let n = a.rows();
+    let tasks: Vec<(usize, usize, &mut [f32])> = out
+        .data_mut()
+        .chunks_mut(n)
+        .enumerate()
+        .flat_map(|(k, prow)| {
+            prow.chunks_mut(PAR_ROW_CHUNK).enumerate().map(move |(c, chunk)| (k, c, chunk))
+        })
+        .collect();
+    pool.run_tasks(tasks, |(k, c, chunk)| {
+        let base = c * PAR_ROW_CHUNK;
+        let vrow = vs.row(k);
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = row_dot(a.row(base + i), vrow);
+        }
+    });
+}
+
+/// Fused multi-vector [`saxpy_rows`]: accumulate
+/// `out.row(p) += a[lo..hi]^T @ us.row(p)[lo..hi]` for every pair row,
+/// streaming each 4-row block of `a` once for all B pairs. Per pair the
+/// arithmetic (block boundaries, add order, zero-skip in the remainder)
+/// is exactly `saxpy_rows`, so each output row is bitwise identical to
+/// the vector kernel's.
+fn saxpy_rows_multi(a: &Mat, us: &Mat, lo: usize, hi: usize, outs: &mut Mat) {
+    let k = a.cols();
+    let b = us.rows();
+    let data = a.data();
+    let mut i = lo;
+    while i + 4 <= hi {
+        let r0 = &data[i * k..(i + 1) * k];
+        let r1 = &data[(i + 1) * k..(i + 2) * k];
+        let r2 = &data[(i + 2) * k..(i + 3) * k];
+        let r3 = &data[(i + 3) * k..(i + 4) * k];
+        for p in 0..b {
+            let (v0, v1, v2, v3) =
+                (us[(p, i)], us[(p, i + 1)], us[(p, i + 2)], us[(p, i + 3)]);
+            let out = outs.row_mut(p);
+            for j in 0..k {
+                out[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
+            }
+        }
+        i += 4;
+    }
+    while i < hi {
+        for p in 0..b {
+            let vi = us[(p, i)];
+            if vi != 0.0 {
+                let row = a.row(i);
+                for (o, &r) in outs.row_mut(p).iter_mut().zip(row) {
+                    *o += r * vi;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Column-blocked [`matvec_t_into`]: `out.row(k) = a^T @ us.row(k)` for
+/// every pair row (us: B×rows, out: B×cols, both pair-major).
+pub fn matmat_t_into(a: &Mat, us: &Mat, out: &mut Mat) {
+    let (n, k) = a.shape();
+    let b = us.rows();
+    assert_eq!(us.cols(), n, "matmat_t: {}x{} ^T @ {}x{}^T", n, k, b, us.cols());
+    assert_eq!(out.shape(), (b, k), "matmat_t: output shape");
+    out.data_mut().iter_mut().for_each(|x| *x = 0.0);
+    saxpy_rows_multi(a, us, 0, n, out);
+}
+
+/// Row-chunked parallel [`matmat_t_into`].
+///
+/// Same fixed `PAR_T_CHUNK` grid and chunk-ordered f64 merge as
+/// [`matvec_t_into_pooled`], applied per pair row — so each output row is
+/// bitwise identical to the pooled vector kernel's output at every pool
+/// size (including the `n ≤ 1024` serial fall-through, which branches on
+/// `n` alone exactly like the vector variant).
+pub fn matmat_t_into_pooled(a: &Mat, us: &Mat, out: &mut Mat, pool: &Pool) {
+    let (n, k) = a.shape();
+    let b = us.rows();
+    assert_eq!(us.cols(), n, "matmat_t: {}x{} ^T @ {}x{}^T", n, k, b, us.cols());
+    assert_eq!(out.shape(), (b, k), "matmat_t: output shape");
+    if n <= PAR_T_CHUNK {
+        matmat_t_into(a, us, out);
+        return;
+    }
+    let nchunks = n.div_ceil(PAR_T_CHUNK);
+    let mut partials: Vec<Mat> = (0..nchunks).map(|_| Mat::zeros(b, k)).collect();
+    let tasks: Vec<(usize, &mut Mat)> = partials.iter_mut().enumerate().collect();
+    pool.run_tasks(tasks, |(c, buf)| {
+        let lo = c * PAR_T_CHUNK;
+        saxpy_rows_multi(a, us, lo, (lo + PAR_T_CHUNK).min(n), buf);
+    });
+    // Deterministic single-thread reduce in chunk order, f64 accumulation
+    // (per pair row, identical to the vector kernel's merge).
+    for p in 0..b {
+        for (j, o) in out.row_mut(p).iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for part in &partials {
+                acc += part[(p, j)] as f64;
+            }
+            *o = acc as f32;
+        }
+    }
+}
+
+/// Column-blocked [`lse_matvec_into`]: `outs[k][i] = logsumexp_j(alpha *
+/// a[i, j] + ts[k][j])` for every pair `k`, streaming each row of `a`
+/// once for all B inputs. Bitwise identical per pair to the vector form
+/// (shared `lse_row` kernel).
+pub fn lse_matmat_into(a: &Mat, alpha: f64, ts: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+    assert_eq!(ts.len(), outs.len(), "lse_matmat: {} inputs vs {} outputs", ts.len(), outs.len());
+    for (t, o) in ts.iter().zip(outs.iter()) {
+        assert_eq!(a.cols(), t.len(), "lse_matmat: input length");
+        assert_eq!(a.rows(), o.len(), "lse_matmat: output length");
+    }
+    for i in 0..a.rows() {
+        let row = a.row(i);
+        for (t, o) in ts.iter().zip(outs.iter_mut()) {
+            o[i] = lse_row(row, alpha, t);
+        }
+    }
+}
+
+/// Row-chunked parallel [`lse_matmat_into`]: (pair, fixed row chunk) task
+/// grid over the shared `lse_row` kernel — bitwise identical to the
+/// serial form and the per-pair vector applies at every pool size.
+pub fn lse_matmat_into_pooled(
+    a: &Mat,
+    alpha: f64,
+    ts: &[Vec<f64>],
+    outs: &mut [Vec<f64>],
+    pool: &Pool,
+) {
+    assert_eq!(ts.len(), outs.len(), "lse_matmat: {} inputs vs {} outputs", ts.len(), outs.len());
+    for (t, o) in ts.iter().zip(outs.iter()) {
+        assert_eq!(a.cols(), t.len(), "lse_matmat: input length");
+        assert_eq!(a.rows(), o.len(), "lse_matmat: output length");
+    }
+    if pool.threads() <= 1 || a.rows() < 2 * PAR_LSE_ROW_CHUNK {
+        lse_matmat_into(a, alpha, ts, outs);
+        return;
+    }
+    let tasks: Vec<(usize, usize, &mut [f64])> = outs
+        .iter_mut()
+        .enumerate()
+        .flat_map(|(p, o)| {
+            let slice: &mut [f64] = o;
+            slice.chunks_mut(PAR_LSE_ROW_CHUNK).enumerate().map(move |(c, chunk)| (p, c, chunk))
+        })
+        .collect();
+    pool.run_tasks(tasks, |(p, c, chunk)| {
+        let base = c * PAR_LSE_ROW_CHUNK;
+        let t = &ts[p];
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = lse_row(a.row(base + i), alpha, t);
+        }
+    });
+}
+
+/// Column-blocked [`lse_matvec_t_into`]: the transposed logsumexp
+/// reduction for every pair (delegates to the vector kernel per pair —
+/// the two-pass reduction has no row-block to fuse across pairs serially;
+/// the pooled variant fuses at chunk granularity instead).
+pub fn lse_matmat_t_into(a: &Mat, alpha: f64, us: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+    assert_eq!(
+        us.len(),
+        outs.len(),
+        "lse_matmat_t: {} inputs vs {} outputs",
+        us.len(),
+        outs.len()
+    );
+    for (u, o) in us.iter().zip(outs.iter_mut()) {
+        lse_matvec_t_into(a, alpha, u, o);
+    }
+}
+
+/// Row-chunked parallel [`lse_matmat_t_into`].
+///
+/// The task grid is (pair, fixed `PAR_LSE_T_CHUNK` row chunk) with
+/// per-task `(max, sumexp)` partials merged in chunk order per pair —
+/// exactly [`lse_matvec_t_into_pooled`]'s reduction applied to each pair,
+/// so every pair's output is bitwise identical to the pooled vector
+/// kernel's at any pool size (the `n ≤ 1024` fall-through branches on `n`
+/// alone, like the vector variant).
+pub fn lse_matmat_t_into_pooled(
+    a: &Mat,
+    alpha: f64,
+    us: &[Vec<f64>],
+    outs: &mut [Vec<f64>],
+    pool: &Pool,
+) {
+    let (n, k) = a.shape();
+    assert_eq!(
+        us.len(),
+        outs.len(),
+        "lse_matmat_t: {} inputs vs {} outputs",
+        us.len(),
+        outs.len()
+    );
+    for (u, o) in us.iter().zip(outs.iter()) {
+        assert_eq!(u.len(), n, "lse_matmat_t: input length");
+        assert_eq!(o.len(), k, "lse_matmat_t: output length");
+    }
+    if n <= PAR_LSE_T_CHUNK {
+        lse_matmat_t_into(a, alpha, us, outs);
+        return;
+    }
+    let b = us.len();
+    let nchunks = n.div_ceil(PAR_LSE_T_CHUNK);
+    // Partial (max, sumexp) pairs laid out pair-major: index p * nchunks + c.
+    let mut partials: Vec<(Vec<f64>, Vec<f64>)> = (0..b * nchunks)
+        .map(|_| (vec![f64::NEG_INFINITY; k], vec![0.0f64; k]))
+        .collect();
+    let tasks: Vec<(usize, &mut (Vec<f64>, Vec<f64>))> = partials.iter_mut().enumerate().collect();
+    pool.run_tasks(tasks, |(idx, (mx, sum))| {
+        let (p, c) = (idx / nchunks, idx % nchunks);
+        let lo = c * PAR_LSE_T_CHUNK;
+        lse_accum_rows(a, alpha, &us[p], lo, (lo + PAR_LSE_T_CHUNK).min(n), mx, sum);
+    });
+    // Deterministic single-thread merge in chunk order, per pair.
+    for (p, o) in outs.iter_mut().enumerate() {
+        let parts = &partials[p * nchunks..(p + 1) * nchunks];
+        for (j, oj) in o.iter_mut().enumerate() {
+            let mut m = f64::NEG_INFINITY;
+            for (mx, _) in parts {
+                if mx[j] > m {
+                    m = mx[j];
+                }
+            }
+            if !m.is_finite() {
+                *oj = m;
+                continue;
+            }
+            let mut s = 0.0f64;
+            for (mx, sum) in parts {
+                if mx[j].is_finite() {
+                    s += sum[j] * (mx[j] - m).exp();
+                }
+            }
+            *oj = m + s.ln();
+        }
     }
 }
 

@@ -280,6 +280,11 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
             .opt("solver-threads", "1", "intra-solve threads per worker (0 = auto)")
             .opt("cache", "8", "feature-map cache capacity (0 = disabled)")
             .opt("stabilize", "on", "log-domain escalation for small-eps requests (on/off)")
+            .opt(
+                "max-batch",
+                "8",
+                "fused multi-pair solve width cap (1 = solve every request alone)",
+            )
             .opt("requests", "32", "number of requests to send")
             .opt("n", "500", "samples per cloud per request")
             .opt("config", "", "optional TOML config file (replaces ALL service flags)"),
@@ -292,6 +297,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         ..Default::default()
     };
     cfg.sinkhorn.stabilize = parse_on_off("stabilize", a.get_str("stabilize"));
+    cfg.sinkhorn.max_batch = a.get_usize("max-batch");
     let cfg_path = a.get_str("config");
     if !cfg_path.is_empty() {
         match linear_sinkhorn::config::ConfigDoc::parse_file(cfg_path) {
@@ -299,7 +305,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
                 cfg = ServiceConfig::from_doc(&doc);
                 eprintln!(
                     "note: --config replaces all service flags \
-                     (--workers/--solver-threads/--cache/--stabilize ignored)"
+                     (--workers/--solver-threads/--cache/--stabilize/--max-batch ignored)"
                 );
             }
             Err(e) => {

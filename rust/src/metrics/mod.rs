@@ -227,7 +227,7 @@ mod tests {
         }
         let p50 = h.quantile_us(0.5);
         // Log-bucket estimate: within one bucket ratio (x1.5) of truth.
-        assert!(p50 >= 500.0 / 1.5 && p50 <= 500.0 * 1.5 * 1.5, "p50={p50}");
+        assert!((500.0 / 1.5..=500.0 * 1.5 * 1.5).contains(&p50), "p50={p50}");
     }
 
     #[test]

@@ -272,6 +272,7 @@ mod tests {
             check_every: 1,
             threads: 1,
             stabilize: false,
+            max_batch: 1,
         }
     }
 

@@ -1,0 +1,669 @@
+//! Batched multi-pair Sinkhorn: drive B transport problems that share
+//! one kernel as a single column-blocked iteration.
+//!
+//! A service solving many concurrent divergence requests against the same
+//! support (re-weighted histograms, repeated reference-distribution
+//! queries, barycenter-style workloads) runs B independent Sinkhorn
+//! solves whose per-iteration cost is B pairs of kernel applies. Stacking
+//! the scaling vectors into pair-major blocks `U ∈ R^{B×n}`, `V ∈ R^{B×m}`
+//! turns those into fused `Φ_x(Φ_y^T V)`-style mat-mat applies
+//! ([`KernelOp::apply_batch_into`]) that stream each factor **once** for
+//! all B pairs — the "apply K to many vectors at once" batching that makes
+//! matrix Sinkhorn fast (Cuturi '13), carried over to the paper's
+//! O(r(n+m)) factored kernels at O(r·Σn) per fused apply.
+//!
+//! ## Sequential-equivalence contract
+//!
+//! [`solve_batch`] returns **bitwise-identical** potentials, objectives,
+//! iteration counts and errors to B separate [`super::sinkhorn`] calls on
+//! the same kernel, at every pool size and every batch width. The chain
+//! of guarantees: the column-blocked linalg kernels compute each pair row
+//! with the same per-row/per-chunk arithmetic as the vector kernels on
+//! the same fixed chunk grids ([`crate::linalg`]); the batched kernel
+//! applies are therefore bitwise per pair
+//! ([`KernelOp::apply_batch_into`]); and this solver mirrors the
+//! sequential loop's update, check cadence and stopping logic exactly,
+//! with **per-pair convergence masking**: a pair that converges (or
+//! diverges) at a check point freezes — its row is compacted out of the
+//! working block — without desynchronising the survivors, whose arithmetic
+//! is column-independent. Property-tested in
+//! `rust/tests/batched_equivalence.rs`.
+//!
+//! [`solve_batch_log_domain`] repeats the construction one level down for
+//! the stabilised log-domain iteration over [`LogKernelOp`], and
+//! [`solve_batch_stabilized`] glues the two together per pair the way
+//! [`super::sinkhorn_stabilized`] does for one. [`sinkhorn_divergence_batch`]
+//! is the B-pair Eq. (2) entry point: 3·B constituent solves as three
+//! width-B batched solves, run concurrently on a [`Pool`].
+
+use crate::config::SinkhornConfig;
+use crate::error::{Error, Result};
+use crate::kernels::{KernelOp, LogKernelOp};
+use crate::linalg::Mat;
+use crate::runtime::pool::Pool;
+
+use super::logdomain::first_non_finite;
+use super::{first_bad, objective, SinkhornSolution};
+
+/// Copy the kept rows of a pair-major block into a fresh, smaller block.
+fn retain_rows(mat: &Mat, keep: &[usize]) -> Mat {
+    let mut out = Mat::zeros(keep.len(), mat.cols());
+    for (dst, &src) in keep.iter().enumerate() {
+        out.row_mut(dst).copy_from_slice(mat.row(src));
+    }
+    out
+}
+
+/// Keep the rows of a pair-major `Vec<Vec<f64>>` block named by `keep`
+/// (strictly increasing), moving the buffers instead of copying them.
+fn retain_vecs(xs: Vec<Vec<f64>>, keep: &[usize]) -> Vec<Vec<f64>> {
+    let mut slots: Vec<Option<Vec<f64>>> = xs.into_iter().map(Some).collect();
+    keep.iter().map(|&row| slots[row].take().expect("kept row")).collect()
+}
+
+/// Assemble one pair's solution exactly as the sequential solver does.
+#[allow(clippy::too_many_arguments)]
+fn finish<K: KernelOp + ?Sized>(
+    kernel: &K,
+    (a, b): (&[f32], &[f32]),
+    cfg: &SinkhornConfig,
+    u: &[f32],
+    v: &[f32],
+    iterations: usize,
+    marginal_error: f64,
+    converged: bool,
+) -> SinkhornSolution {
+    SinkhornSolution {
+        // `-eps log_scale` compensates stabilised kernels, as in
+        // `sinkhorn`.
+        objective: objective(cfg.epsilon, a, b, u, v) - cfg.epsilon * kernel.log_scale(),
+        u: u.to_vec(),
+        v: v.to_vec(),
+        iterations,
+        marginal_error,
+        converged,
+    }
+}
+
+/// Algorithm 1 over one kernel and B weight pairs, column-blocked.
+///
+/// Each element of `pairs` is an `(a, b)` marginal pair for the same
+/// `kernel`; the result vector is index-aligned with `pairs`. Per pair,
+/// the outcome (solution or typed error) is bitwise identical to
+/// [`super::sinkhorn`] on that pair alone — see the module docs for the
+/// contract. One pair diverging never poisons its batch-mates: its row is
+/// frozen with the error and the rest continue.
+pub fn solve_batch<K: KernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    cfg: &SinkhornConfig,
+) -> Vec<Result<SinkhornSolution>> {
+    let (n, m) = (kernel.rows(), kernel.cols());
+    let mut slots: Vec<Option<Result<SinkhornSolution>>> =
+        (0..pairs.len()).map(|_| None).collect();
+    // `live[row]` = index into `pairs` occupying row `row` of the
+    // column-blocked state; finished rows are compacted away.
+    let mut live: Vec<usize> = Vec::new();
+    for (p, &(a, b)) in pairs.iter().enumerate() {
+        if a.len() != n || b.len() != m {
+            slots[p] = Some(Err(Error::Shape(format!(
+                "sinkhorn: kernel {}x{} vs a[{}], b[{}]",
+                n,
+                m,
+                a.len(),
+                b.len()
+            ))));
+        } else {
+            live.push(p);
+        }
+    }
+
+    let mut us = Mat::ones(live.len(), n);
+    let mut vs = Mat::ones(live.len(), m);
+    let mut kv = Mat::zeros(live.len(), n);
+    let mut ktu = Mat::zeros(live.len(), m);
+    let mut marginals = vec![f64::INFINITY; live.len()];
+
+    let check_every = cfg.check_every.max(1);
+    let mut iter = 0;
+
+    while iter < cfg.max_iters && !live.is_empty() {
+        // v <- b / K^T u, all live pairs in one fused apply.
+        kernel.apply_batch_t_into(&us, &mut ktu);
+        for (row, &p) in live.iter().enumerate() {
+            let b = pairs[p].1;
+            for ((v, &k), &bj) in vs.row_mut(row).iter_mut().zip(ktu.row(row)).zip(b) {
+                *v = bj / k;
+            }
+        }
+        // u <- a / K v.
+        kernel.apply_batch_into(&vs, &mut kv);
+        for (row, &p) in live.iter().enumerate() {
+            let a = pairs[p].0;
+            for ((u, &k), &ai) in us.row_mut(row).iter_mut().zip(kv.row(row)).zip(a) {
+                *u = ai / k;
+            }
+        }
+        iter += 1;
+
+        if iter % check_every == 0 || iter == cfg.max_iters {
+            // Divergence check on the scalings, pair by pair.
+            for (row, &p) in live.iter().enumerate() {
+                if let Some(bad) = first_bad(us.row(row)).or_else(|| first_bad(vs.row(row))) {
+                    slots[p] = Some(Err(Error::SinkhornDiverged {
+                        iter,
+                        reason: format!(
+                            "non-finite or non-positive scaling ({bad}); kernel {} lost \
+                             positivity or eps is too small for f32",
+                            kernel.label()
+                        ),
+                    }));
+                }
+            }
+            // Marginal errors: one fused transposed apply serves every
+            // live pair (rows of just-errored pairs are computed and
+            // discarded — column independence keeps the rest exact).
+            kernel.apply_batch_t_into(&us, &mut ktu);
+            for (row, &p) in live.iter().enumerate() {
+                if slots[p].is_some() {
+                    continue;
+                }
+                let b = pairs[p].1;
+                let marginal: f64 = vs
+                    .row(row)
+                    .iter()
+                    .zip(ktu.row(row))
+                    .zip(b)
+                    .map(|((&vj, &kj), &bj)| ((vj * kj - bj) as f64).abs())
+                    .sum();
+                marginals[row] = marginal;
+                if marginal < cfg.tol {
+                    slots[p] = Some(Ok(finish(
+                        kernel,
+                        pairs[p],
+                        cfg,
+                        us.row(row),
+                        vs.row(row),
+                        iter,
+                        marginal,
+                        true,
+                    )));
+                }
+            }
+            // Freeze finished pairs: compact their rows out of the block.
+            if live.iter().any(|&p| slots[p].is_some()) {
+                let keep: Vec<usize> =
+                    (0..live.len()).filter(|&row| slots[live[row]].is_none()).collect();
+                us = retain_rows(&us, &keep);
+                vs = retain_rows(&vs, &keep);
+                kv = Mat::zeros(keep.len(), n);
+                ktu = Mat::zeros(keep.len(), m);
+                marginals = keep.iter().map(|&row| marginals[row]).collect();
+                live = keep.iter().map(|&row| live[row]).collect();
+            }
+        }
+    }
+
+    // Pairs still live at the iteration cap exit un-converged, mirroring
+    // the sequential loop's fall-through.
+    for (row, &p) in live.iter().enumerate() {
+        slots[p] = Some(Ok(finish(
+            kernel,
+            pairs[p],
+            cfg,
+            us.row(row),
+            vs.row(row),
+            iter,
+            marginals[row],
+            false,
+        )));
+    }
+
+    slots.into_iter().map(|s| s.expect("every pair resolved")).collect()
+}
+
+/// Assemble one pair's log-domain solution exactly as
+/// [`super::sinkhorn_log_domain`] does.
+fn finish_log(
+    (a, b): (&[f32], &[f32]),
+    eps: f64,
+    alpha: &[f64],
+    beta: &[f64],
+    iterations: usize,
+    marginal_error: f64,
+    converged: bool,
+) -> SinkhornSolution {
+    // Entropy offset converting the a⊗b-relative duals to Eq. (6)'s
+    // objective — see the sequential solver for the derivation.
+    let offset: f64 = eps
+        * (a.iter().map(|&ai| (ai as f64) * (ai as f64).ln()).sum::<f64>()
+            + b.iter().map(|&bi| (bi as f64) * (bi as f64).ln()).sum::<f64>());
+    let objective: f64 = a.iter().zip(alpha).map(|(&ai, &al)| ai as f64 * al).sum::<f64>()
+        + b.iter().zip(beta).map(|(&bi, &be)| bi as f64 * be).sum::<f64>()
+        + offset;
+    SinkhornSolution {
+        u: alpha.iter().zip(a).map(|(&x, &ai)| (ai as f64 * (x / eps).exp()) as f32).collect(),
+        v: beta.iter().zip(b).map(|(&x, &bi)| (bi as f64 * (x / eps).exp()) as f32).collect(),
+        objective,
+        iterations,
+        marginal_error,
+        converged,
+    }
+}
+
+/// Log-domain Sinkhorn over one log-space kernel and B weight pairs,
+/// column-blocked — the stabilised counterpart of [`solve_batch`], with
+/// the same per-pair masking and the same bitwise equivalence to B
+/// sequential [`super::sinkhorn_log_domain`] calls.
+pub fn solve_batch_log_domain<K: LogKernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    cfg: &SinkhornConfig,
+) -> Vec<Result<SinkhornSolution>> {
+    let (n, m) = kernel.shape();
+    let eps = cfg.epsilon;
+    let mut slots: Vec<Option<Result<SinkhornSolution>>> =
+        (0..pairs.len()).map(|_| None).collect();
+    let mut live: Vec<usize> = Vec::new();
+    for (p, &(a, b)) in pairs.iter().enumerate() {
+        if a.len() != n || b.len() != m {
+            slots[p] = Some(Err(Error::Shape(format!(
+                "log-domain sinkhorn: kernel {n}x{m} vs a[{}], b[{}]",
+                a.len(),
+                b.len()
+            ))));
+        } else {
+            live.push(p);
+        }
+    }
+
+    let bsize = live.len();
+    let mut log_as: Vec<Vec<f64>> =
+        live.iter().map(|&p| pairs[p].0.iter().map(|&x| (x as f64).ln()).collect()).collect();
+    let mut log_bs: Vec<Vec<f64>> =
+        live.iter().map(|&p| pairs[p].1.iter().map(|&x| (x as f64).ln()).collect()).collect();
+    let mut alphas: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; n]).collect();
+    let mut betas: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; m]).collect();
+    let mut row_ins: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; n]).collect();
+    let mut col_ins: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; m]).collect();
+    let mut row_outs: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; n]).collect();
+    let mut col_outs: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; m]).collect();
+    let mut marginals = vec![f64::INFINITY; bsize];
+    // `live_rows[row]` = index into `pairs`; the f64 state vectors above
+    // are compacted in lockstep with it.
+    let mut live_rows = live;
+
+    let check_every = cfg.check_every.max(1);
+    let mut iter = 0;
+
+    while iter < cfg.max_iters && !live_rows.is_empty() {
+        // beta update: beta_j = -eps logsumexp_i(log K_ij + alpha_i/eps + log a_i).
+        for row in 0..live_rows.len() {
+            for ((ri, &al), &la) in
+                row_ins[row].iter_mut().zip(&alphas[row]).zip(&log_as[row])
+            {
+                *ri = al / eps + la;
+            }
+        }
+        kernel.apply_log_batch_t(&row_ins, &mut col_outs);
+        for row in 0..live_rows.len() {
+            for (be, &co) in betas[row].iter_mut().zip(&col_outs[row]) {
+                *be = -eps * co;
+            }
+        }
+        // alpha update.
+        for row in 0..live_rows.len() {
+            for ((ci, &be), &lb) in
+                col_ins[row].iter_mut().zip(&betas[row]).zip(&log_bs[row])
+            {
+                *ci = be / eps + lb;
+            }
+        }
+        kernel.apply_log_batch(&col_ins, &mut row_outs);
+        for row in 0..live_rows.len() {
+            for (al, &ro) in alphas[row].iter_mut().zip(&row_outs[row]) {
+                *al = -eps * ro;
+            }
+        }
+        iter += 1;
+
+        if iter % check_every == 0 || iter == cfg.max_iters {
+            for (row, &p) in live_rows.iter().enumerate() {
+                if let Some(bad) =
+                    first_non_finite(&alphas[row]).or_else(|| first_non_finite(&betas[row]))
+                {
+                    slots[p] = Some(Err(Error::SinkhornDiverged {
+                        iter,
+                        reason: format!(
+                            "non-finite dual potential ({bad}) in log-domain sinkhorn on {}; \
+                             the kernel has an empty (all -inf) row or column",
+                            kernel.describe()
+                        ),
+                    }));
+                }
+            }
+            // Column marginals, fused across live pairs.
+            for row in 0..live_rows.len() {
+                for ((ri, &al), &la) in
+                    row_ins[row].iter_mut().zip(&alphas[row]).zip(&log_as[row])
+                {
+                    *ri = al / eps + la;
+                }
+            }
+            kernel.apply_log_batch_t(&row_ins, &mut col_outs);
+            for (row, &p) in live_rows.iter().enumerate() {
+                if slots[p].is_some() {
+                    continue;
+                }
+                let b = pairs[p].1;
+                let mut marginal = 0.0;
+                for ((&co, &be), (&lb, &bj)) in col_outs[row]
+                    .iter()
+                    .zip(&betas[row])
+                    .zip(log_bs[row].iter().zip(b))
+                {
+                    let col_mass = (co + be / eps + lb).exp();
+                    marginal += (col_mass - bj as f64).abs();
+                }
+                marginals[row] = marginal;
+                if marginal < cfg.tol {
+                    slots[p] = Some(Ok(finish_log(
+                        pairs[p],
+                        eps,
+                        &alphas[row],
+                        &betas[row],
+                        iter,
+                        marginal,
+                        true,
+                    )));
+                }
+            }
+            // Compact finished rows out of every state vector.
+            if live_rows.iter().any(|&p| slots[p].is_some()) {
+                let keep: Vec<usize> =
+                    (0..live_rows.len()).filter(|&row| slots[live_rows[row]].is_none()).collect();
+                alphas = retain_vecs(alphas, &keep);
+                betas = retain_vecs(betas, &keep);
+                row_ins = retain_vecs(row_ins, &keep);
+                col_ins = retain_vecs(col_ins, &keep);
+                row_outs = retain_vecs(row_outs, &keep);
+                col_outs = retain_vecs(col_outs, &keep);
+                log_as = retain_vecs(log_as, &keep);
+                log_bs = retain_vecs(log_bs, &keep);
+                marginals = keep.iter().map(|&row| marginals[row]).collect();
+                live_rows = keep.iter().map(|&row| live_rows[row]).collect();
+            }
+        }
+    }
+
+    for (row, &p) in live_rows.iter().enumerate() {
+        slots[p] = Some(Ok(finish_log(
+            pairs[p],
+            eps,
+            &alphas[row],
+            &betas[row],
+            iter,
+            marginals[row],
+            false,
+        )));
+    }
+
+    slots.into_iter().map(|s| s.expect("every pair resolved")).collect()
+}
+
+/// [`solve_batch`] with automatic small-eps escalation, per pair: pairs
+/// whose plain solve reports [`Error::SinkhornDiverged`] are re-solved —
+/// together, as one batched log-domain solve — through the kernel's
+/// [`KernelOp::as_log_kernel`] view when `cfg.stabilize` is set. The
+/// boolean in each result is the per-pair "the log-domain path was taken"
+/// flag, exactly as [`super::sinkhorn_stabilized`] reports it; kernels
+/// without a log view keep their original error, and non-diverged
+/// batch-mates are untouched by an escalation.
+pub fn solve_batch_stabilized<K: KernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    cfg: &SinkhornConfig,
+) -> Vec<Result<(SinkhornSolution, bool)>> {
+    let plain = solve_batch(kernel, pairs, cfg);
+    let mut out: Vec<Option<Result<(SinkhornSolution, bool)>>> =
+        (0..pairs.len()).map(|_| None).collect();
+    let mut escalate: Vec<usize> = Vec::new();
+    for (p, res) in plain.into_iter().enumerate() {
+        match res {
+            Ok(sol) => out[p] = Some(Ok((sol, false))),
+            Err(Error::SinkhornDiverged { iter, reason }) if cfg.stabilize => {
+                if kernel.as_log_kernel().is_some() {
+                    escalate.push(p);
+                } else {
+                    out[p] = Some(Err(Error::SinkhornDiverged { iter, reason }));
+                }
+            }
+            Err(e) => out[p] = Some(Err(e)),
+        }
+    }
+    if !escalate.is_empty() {
+        let log_kernel = kernel.as_log_kernel().expect("escalation implies a log view");
+        let esc_pairs: Vec<(&[f32], &[f32])> = escalate.iter().map(|&p| pairs[p]).collect();
+        for (i, res) in
+            solve_batch_log_domain(log_kernel, &esc_pairs, cfg).into_iter().enumerate()
+        {
+            out[escalate[i]] = Some(res.map(|sol| (sol, true)));
+        }
+    }
+    out.into_iter().map(|o| o.expect("every pair resolved")).collect()
+}
+
+/// Eq. (2) for B weight pairs sharing one support triple: the debiased
+/// divergence `W_k(a_k, b_k) - (W_k(a_k, a_k) + W_k(b_k, b_k))/2` for
+/// every pair, from **three width-B batched solves** (3·B constituent
+/// transport problems) instead of 3·B vector solves. The three batched
+/// solves run concurrently on a [`Pool`] when `cfg.threads` allows, like
+/// [`super::sinkhorn_divergence`]; per pair, errors surface with the same
+/// xy → xx → yy priority, and results are bitwise identical to B separate
+/// `sinkhorn_divergence` calls at any thread count.
+pub fn sinkhorn_divergence_batch<K: KernelOp + Sync + ?Sized>(
+    k_xy: &K,
+    k_xx: &K,
+    k_yy: &K,
+    pairs: &[(&[f32], &[f32])],
+    cfg: &SinkhornConfig,
+) -> Vec<Result<f64>> {
+    let pool = Pool::new_capped(cfg.threads, 3);
+    let xx_pairs: Vec<(&[f32], &[f32])> = pairs.iter().map(|&(a, _)| (a, a)).collect();
+    let yy_pairs: Vec<(&[f32], &[f32])> = pairs.iter().map(|&(_, b)| (b, b)).collect();
+    let (r_xy, r_xx, r_yy) = pool.join3(
+        || solve_batch_stabilized(k_xy, pairs, cfg),
+        || solve_batch_stabilized(k_xx, &xx_pairs, cfg),
+        || solve_batch_stabilized(k_yy, &yy_pairs, cfg),
+    );
+    r_xy.into_iter()
+        .zip(r_xx)
+        .zip(r_yy)
+        .map(|((xy, xx), yy)| {
+            let (xy, _) = xy?;
+            let (xx, _) = xx?;
+            let (yy, _) = yy?;
+            Ok(xy.objective - 0.5 * (xx.objective + yy.objective))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::features::GaussianFeatureMap;
+    use crate::kernels::{DenseKernel, FactoredKernel};
+    use crate::rng::Rng;
+    use crate::sinkhorn::{sinkhorn, sinkhorn_log_domain, sinkhorn_stabilized};
+
+    fn cfg(eps: f64) -> SinkhornConfig {
+        SinkhornConfig {
+            epsilon: eps,
+            max_iters: 500,
+            tol: 1e-5,
+            check_every: 5,
+            threads: 1,
+            stabilize: false,
+            max_batch: 8,
+        }
+    }
+
+    /// B positive weight vectors of length n with different skews, each
+    /// summing to one — mixed convergence speeds for masking coverage.
+    fn weight_family(n: usize, b: usize) -> Vec<Vec<f32>> {
+        (0..b)
+            .map(|k| {
+                let raw: Vec<f64> = (0..n)
+                    .map(|i| 1.0 + ((i * (k + 2) + k) % 7) as f64 * (0.2 + k as f64 * 0.3))
+                    .collect();
+                let total: f64 = raw.iter().sum();
+                raw.iter().map(|&x| (x / total) as f32).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let mut rng = Rng::seed_from(0);
+        let (mu, nu) = data::gaussian_blobs(10, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 0.5);
+        assert!(solve_batch(&k, &[], &cfg(0.5)).is_empty());
+    }
+
+    #[test]
+    fn shape_mismatch_flags_only_the_bad_pair() {
+        let mut rng = Rng::seed_from(1);
+        let (mu, nu) = data::gaussian_blobs(12, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 0.5);
+        let bad = vec![0.5f32; 3];
+        let pairs: Vec<(&[f32], &[f32])> = vec![
+            (&mu.weights, &nu.weights),
+            (&bad, &nu.weights),
+            (&mu.weights, &nu.weights),
+        ];
+        let res = solve_batch(&k, &pairs, &cfg(0.5));
+        assert!(res[0].is_ok());
+        assert!(matches!(res[1], Err(Error::Shape(_))));
+        assert!(res[2].is_ok());
+    }
+
+    #[test]
+    fn batched_matches_sequential_bitwise_on_dense() {
+        // The default (per-pair loop) batched applies: the solver logic
+        // itself must already be exactly the sequential loop.
+        let mut rng = Rng::seed_from(2);
+        let (mu, nu) = data::gaussian_blobs(30, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 0.5);
+        let ws_a = weight_family(mu.len(), 3);
+        let ws_b = weight_family(nu.len(), 3);
+        let pairs: Vec<(&[f32], &[f32])> =
+            ws_a.iter().zip(&ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let batched = solve_batch(&k, &pairs, &cfg(0.5));
+        for (p, &(a, b)) in pairs.iter().enumerate() {
+            let solo = sinkhorn(&k, a, b, &cfg(0.5)).unwrap();
+            let got = batched[p].as_ref().unwrap();
+            assert_eq!(got.objective.to_bits(), solo.objective.to_bits(), "pair {p}");
+            assert_eq!(got.iterations, solo.iterations, "pair {p}");
+            assert_eq!(got.converged, solo.converged, "pair {p}");
+        }
+    }
+
+    #[test]
+    fn masking_freezes_converged_pairs_without_desync() {
+        // Pairs with different skews converge at different check points;
+        // each must report exactly its own sequential iteration count.
+        let mut rng = Rng::seed_from(3);
+        let (mu, nu) = data::gaussian_blobs(25, &mut rng);
+        let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 64, &mut rng);
+        let k = FactoredKernel::from_measures(&map, &mu, &nu);
+        let ws_a = weight_family(mu.len(), 4);
+        let ws_b = weight_family(nu.len(), 4);
+        let pairs: Vec<(&[f32], &[f32])> =
+            ws_a.iter().zip(&ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let c = SinkhornConfig { tol: 1e-4, max_iters: 3000, check_every: 1, ..cfg(0.5) };
+        let batched = solve_batch(&k, &pairs, &c);
+        let mut iters: Vec<usize> = Vec::new();
+        for (p, &(a, b)) in pairs.iter().enumerate() {
+            let solo = sinkhorn(&k, a, b, &c).unwrap();
+            let got = batched[p].as_ref().unwrap();
+            assert_eq!(got.iterations, solo.iterations, "pair {p}");
+            assert_eq!(got.objective.to_bits(), solo.objective.to_bits(), "pair {p}");
+            assert!(got.converged, "pair {p} should converge");
+            iters.push(got.iterations);
+        }
+        iters.dedup();
+        assert!(iters.len() > 1, "weight family too uniform to exercise masking: {iters:?}");
+    }
+
+    #[test]
+    fn log_domain_batched_matches_sequential_bitwise() {
+        let mut rng = Rng::seed_from(4);
+        let (mu, nu) = data::gaussian_blobs(15, &mut rng);
+        let eps = 1e-2;
+        let map = GaussianFeatureMap::fit(&mu, &nu, eps, 24, &mut rng);
+        let k = FactoredKernel::from_measures_stabilized(&map, &mu, &nu);
+        let ws_a = weight_family(mu.len(), 3);
+        let ws_b = weight_family(nu.len(), 3);
+        let pairs: Vec<(&[f32], &[f32])> =
+            ws_a.iter().zip(&ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let c = SinkhornConfig { max_iters: 80, ..cfg(eps) };
+        let batched = solve_batch_log_domain(&k, &pairs, &c);
+        for (p, &(a, b)) in pairs.iter().enumerate() {
+            let solo = sinkhorn_log_domain(&k, a, b, &c).unwrap();
+            let got = batched[p].as_ref().unwrap();
+            assert_eq!(got.objective.to_bits(), solo.objective.to_bits(), "pair {p}");
+            assert_eq!(got.iterations, solo.iterations, "pair {p}");
+            assert_eq!(got.marginal_error.to_bits(), solo.marginal_error.to_bits(), "pair {p}");
+        }
+    }
+
+    #[test]
+    fn stabilized_escalates_per_pair_like_sequential() {
+        // Underflowing factors: every pair diverges in plain f32 and
+        // escalates; flags and objectives must match the sequential
+        // stabilised path bit for bit.
+        let (n, m) = (12, 10);
+        let phi_x = Mat::from_fn(n, 6, |i, k| 1e-30f32 * (1.0 + 0.1 * (((i + 2 * k) % 5) as f32)));
+        let phi_y = Mat::from_fn(m, 6, |j, k| 1e-30f32 * (1.0 + 0.1 * (((2 * j + k) % 7) as f32)));
+        let k = FactoredKernel::from_factors(phi_x, phi_y);
+        let ws_a = weight_family(n, 2);
+        let ws_b = weight_family(m, 2);
+        let pairs: Vec<(&[f32], &[f32])> =
+            ws_a.iter().zip(&ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let c = SinkhornConfig { stabilize: true, ..cfg(1e-3) };
+        let batched = solve_batch_stabilized(&k, &pairs, &c);
+        for (p, &(a, b)) in pairs.iter().enumerate() {
+            let (solo, solo_st) = sinkhorn_stabilized(&k, a, b, &c).unwrap();
+            let (got, got_st) = batched[p].as_ref().unwrap();
+            assert!(*got_st && solo_st, "pair {p}: both paths must escalate");
+            assert_eq!(got.objective.to_bits(), solo.objective.to_bits(), "pair {p}");
+        }
+        // With stabilisation off the typed error surfaces per pair.
+        let off = SinkhornConfig { stabilize: false, ..cfg(1e-3) };
+        let res = solve_batch_stabilized(&k, &pairs, &off);
+        assert!(res.iter().all(|r| matches!(r, Err(Error::SinkhornDiverged { .. }))));
+    }
+
+    #[test]
+    fn divergence_batch_matches_scalar_divergence() {
+        let mut rng = Rng::seed_from(5);
+        let (mu, nu) = data::gaussian_blobs(20, &mut rng);
+        let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 64, &mut rng);
+        let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
+        let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
+        let k_yy = FactoredKernel::from_measures(&map, &nu, &nu);
+        let ws_a = weight_family(mu.len(), 3);
+        let ws_b = weight_family(nu.len(), 3);
+        let pairs: Vec<(&[f32], &[f32])> =
+            ws_a.iter().zip(&ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let c = cfg(0.5);
+        let batched = sinkhorn_divergence_batch(&k_xy, &k_xx, &k_yy, &pairs, &c);
+        for (p, &(a, b)) in pairs.iter().enumerate() {
+            let solo =
+                crate::sinkhorn::sinkhorn_divergence(&k_xy, &k_xx, &k_yy, a, b, &c).unwrap();
+            let got = *batched[p].as_ref().unwrap();
+            assert_eq!(got.to_bits(), solo.to_bits(), "pair {p}: {got} vs {solo}");
+        }
+    }
+}

@@ -168,6 +168,7 @@ mod tests {
                 check_every: 50,
                 threads: 1,
                 stabilize: false,
+                max_batch: 1,
             };
             let log_kernel = CostMatrixLogKernel::new(&cost, eps);
             let sol =

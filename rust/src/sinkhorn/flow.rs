@@ -115,6 +115,7 @@ mod tests {
             check_every: 10,
             threads: 1,
             stabilize: false,
+            max_batch: 1,
         }
     }
 

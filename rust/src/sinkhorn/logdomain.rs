@@ -144,7 +144,7 @@ pub fn sinkhorn_log_domain<K: LogKernelOp + ?Sized>(
     })
 }
 
-fn first_non_finite(xs: &[f64]) -> Option<String> {
+pub(crate) fn first_non_finite(xs: &[f64]) -> Option<String> {
     xs.iter()
         .enumerate()
         .find(|(_, x)| !x.is_finite())
@@ -180,6 +180,7 @@ mod tests {
             check_every: 10,
             threads: 1,
             stabilize: false,
+            max_batch: 1,
         }
     }
 

@@ -12,13 +12,23 @@
 //! time on factored kernels. [`sinkhorn_stabilized`] glues the two
 //! together: run Alg. 1, and when it reports non-finite scalings escalate
 //! to the log-domain iteration (gated by `SinkhornConfig::stabilize`).
+//!
+//! The [`batch`] module scales the same loops across *pairs*: B transport
+//! problems sharing one kernel iterate as column-blocked scaling matrices
+//! with fused mat-mat kernel applies ([`solve_batch`],
+//! [`sinkhorn_divergence_batch`]) — bitwise identical to B sequential
+//! solves, per pair, at any thread count.
 
 mod accelerated;
+mod batch;
 mod exact;
 mod flow;
 mod logdomain;
 
 pub use accelerated::{sinkhorn_accelerated, AccelSolution};
+pub use batch::{
+    sinkhorn_divergence_batch, solve_batch, solve_batch_log_domain, solve_batch_stabilized,
+};
 pub use exact::{exact_ot_uniform, hungarian};
 pub use flow::{divergence_grad_locations, gradient_flow_step, FlowEval};
 pub use logdomain::{sinkhorn_log_domain, sq_euclidean_cost};
@@ -145,7 +155,7 @@ pub fn sinkhorn<K: KernelOp + ?Sized>(
     })
 }
 
-fn first_bad(xs: &[f32]) -> Option<String> {
+pub(crate) fn first_bad(xs: &[f32]) -> Option<String> {
     for (i, &x) in xs.iter().enumerate() {
         if !x.is_finite() || x <= 0.0 {
             return Some(format!("index {i} = {x}"));
@@ -256,6 +266,7 @@ pub fn ground_truth_rot<K: KernelOp + ?Sized>(
         check_every: 20,
         threads: 1,
         stabilize: false,
+        max_batch: 1,
     };
     Ok(sinkhorn(kernel, a, b, &cfg)?.objective)
 }
@@ -292,6 +303,7 @@ mod tests {
             check_every: 5,
             threads: 1,
             stabilize: false,
+            max_batch: 1,
         }
     }
 

@@ -1,0 +1,239 @@
+//! Batched-vs-sequential equivalence: the multi-pair solve engine
+//! (`solve_batch` + the fused column-blocked kernels behind
+//! `apply_batch_*`) must change wall-clock only, never numbers.
+//!
+//! The guarantees asserted here, at sizes that cross every fixed chunk
+//! grid (transpose chunks of 1024 rows, logsumexp grids, row chunks):
+//! 1. `solve_batch` over B weight pairs is **bitwise** equal — scalings,
+//!    objective, iteration count, convergence flag — to B sequential
+//!    `sinkhorn` calls on the same kernel, for B ∈ {1, 3, 7}, with mixed
+//!    per-pair convergence speeds (masking freezes early finishers), and
+//!    with 1-vs-N-thread kernel pools.
+//! 2. `solve_batch_log_domain` obeys the same contract against
+//!    `sinkhorn_log_domain`.
+//! 3. A diverging pair errors exactly like its sequential solve and never
+//!    perturbs its batch-mates.
+//! 4. `sinkhorn_divergence_batch` reproduces per-pair
+//!    `sinkhorn_divergence` bit for bit at any solve-level thread count.
+
+use linear_sinkhorn::config::SinkhornConfig;
+use linear_sinkhorn::prelude::*;
+
+fn cfg(eps: f64) -> SinkhornConfig {
+    SinkhornConfig {
+        epsilon: eps,
+        max_iters: 80,
+        tol: 1e-4,
+        check_every: 1,
+        threads: 1,
+        stabilize: false,
+        max_batch: 8,
+    }
+}
+
+/// B positive weight vectors of length n with salt-dependent skews, each
+/// summing to one: different skews converge at different iterations,
+/// which is what exercises per-pair masking.
+fn weight_family(n: usize, b: usize, salt: usize) -> Vec<Vec<f32>> {
+    (0..b)
+        .map(|k| {
+            let raw: Vec<f64> = (0..n)
+                .map(|i| 1.0 + ((i * (k + salt + 2) + k) % 9) as f64 * (0.15 + k as f64 * 0.35))
+                .collect();
+            let total: f64 = raw.iter().sum();
+            raw.iter().map(|&x| (x / total) as f32).collect()
+        })
+        .collect()
+}
+
+fn as_pairs<'a>(ws_a: &'a [Vec<f32>], ws_b: &'a [Vec<f32>]) -> Vec<(&'a [f32], &'a [f32])> {
+    ws_a.iter().zip(ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect()
+}
+
+#[test]
+fn solve_batch_bitwise_equals_sequential_across_widths_and_threads() {
+    // n = 1500 crosses the 1024-row transpose chunk grid, so the fused
+    // mat-mat applies run the chunked reduction for real.
+    let mut rng = Rng::seed_from(0);
+    let (mu, nu) = data::gaussian_blobs(1500, &mut rng);
+    let eps = 0.5;
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, 48, &mut rng);
+    // Generous iteration budget with per-iteration checks: the skewed
+    // weight families converge at visibly different counts, so masking
+    // (freezing finished columns mid-batch) really runs.
+    let c = SinkhornConfig { max_iters: 400, ..cfg(eps) };
+
+    // Sequential reference, serial kernel: one solve per pair.
+    let serial_kernel = FactoredKernel::from_measures(&map, &mu, &nu);
+    let ws_a = weight_family(mu.len(), 7, 0);
+    let ws_b = weight_family(nu.len(), 7, 3);
+    let pairs = as_pairs(&ws_a, &ws_b);
+    let reference: Vec<SinkhornSolution> =
+        pairs.iter().map(|&(a, b)| sinkhorn(&serial_kernel, a, b, &c).unwrap()).collect();
+    let iters: Vec<usize> = reference.iter().map(|s| s.iterations).collect();
+    let mut distinct = iters.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    assert!(
+        distinct.len() > 1,
+        "weight family too uniform to exercise masking: {iters:?}"
+    );
+
+    for threads in [1usize, 4] {
+        let pool = Pool::new(threads);
+        let kernel = FactoredKernel::from_measures_pooled(&map, &mu, &nu, pool);
+        for &b in &[1usize, 3, 7] {
+            let batched = solve_batch(&kernel, &pairs[..b], &c);
+            for (p, got) in batched.iter().enumerate() {
+                let got = got.as_ref().unwrap();
+                let want = &reference[p];
+                assert_eq!(
+                    got.objective.to_bits(),
+                    want.objective.to_bits(),
+                    "objective, B={b} threads={threads} pair {p}"
+                );
+                assert_eq!(got.iterations, want.iterations, "B={b} threads={threads} pair {p}");
+                assert_eq!(got.converged, want.converged, "B={b} threads={threads} pair {p}");
+                assert_eq!(
+                    got.marginal_error.to_bits(),
+                    want.marginal_error.to_bits(),
+                    "marginal, B={b} threads={threads} pair {p}"
+                );
+                for (i, (gu, wu)) in got.u.iter().zip(&want.u).enumerate() {
+                    assert_eq!(
+                        gu.to_bits(),
+                        wu.to_bits(),
+                        "u[{i}], B={b} threads={threads} pair {p}"
+                    );
+                }
+                for (j, (gv, wv)) in got.v.iter().zip(&want.v).enumerate() {
+                    assert_eq!(
+                        gv.to_bits(),
+                        wv.to_bits(),
+                        "v[{j}], B={b} threads={threads} pair {p}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn solve_batch_log_domain_bitwise_equals_sequential() {
+    // n = 1200 crosses the 1024-row logsumexp chunk grid; eps = 1e-3 is
+    // the regime the log path exists for.
+    let mut rng = Rng::seed_from(1);
+    let (mu, nu) = data::gaussian_blobs(1200, &mut rng);
+    let eps = 1e-3;
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, 32, &mut rng);
+    let lx = map.log_feature_matrix(&mu.points);
+    let ly = map.log_feature_matrix(&nu.points);
+    let c = SinkhornConfig { max_iters: 25, check_every: 5, ..cfg(eps) };
+
+    let serial_kernel = FactoredKernel::from_log_factors(lx.clone(), ly.clone());
+    let ws_a = weight_family(mu.len(), 3, 1);
+    let ws_b = weight_family(nu.len(), 3, 4);
+    let pairs = as_pairs(&ws_a, &ws_b);
+    let reference: Vec<SinkhornSolution> = pairs
+        .iter()
+        .map(|&(a, b)| sinkhorn_log_domain(&serial_kernel, a, b, &c).unwrap())
+        .collect();
+
+    for threads in [1usize, 4] {
+        let pool = Pool::new(threads);
+        let kernel =
+            FactoredKernel::from_log_factors(lx.clone(), ly.clone()).with_pool(pool);
+        let batched = solve_batch_log_domain(&kernel, &pairs, &c);
+        for (p, got) in batched.iter().enumerate() {
+            let got = got.as_ref().unwrap();
+            let want = &reference[p];
+            assert_eq!(
+                got.objective.to_bits(),
+                want.objective.to_bits(),
+                "objective, threads={threads} pair {p}"
+            );
+            assert_eq!(got.iterations, want.iterations, "threads={threads} pair {p}");
+            assert_eq!(
+                got.marginal_error.to_bits(),
+                want.marginal_error.to_bits(),
+                "marginal, threads={threads} pair {p}"
+            );
+            for (i, (gu, wu)) in got.u.iter().zip(&want.u).enumerate() {
+                assert_eq!(gu.to_bits(), wu.to_bits(), "u[{i}], threads={threads} pair {p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn diverging_pair_errors_alone_and_exactly_like_sequential() {
+    let mut rng = Rng::seed_from(2);
+    let (mu, nu) = data::gaussian_blobs(40, &mut rng);
+    let eps = 0.5;
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, 32, &mut rng);
+    let kernel = FactoredKernel::from_measures(&map, &mu, &nu);
+    let c = cfg(eps);
+    // An all-zero b drives v to zero at the first update — the sequential
+    // solver reports SinkhornDiverged at its first check.
+    let zero_b = vec![0.0f32; nu.len()];
+    let pairs: Vec<(&[f32], &[f32])> = vec![
+        (&mu.weights, &nu.weights),
+        (&mu.weights, &zero_b),
+        (&mu.weights, &nu.weights),
+    ];
+    let batched = solve_batch(&kernel, &pairs, &c);
+
+    let want_ok = sinkhorn(&kernel, &mu.weights, &nu.weights, &c).unwrap();
+    for p in [0usize, 2] {
+        let got = batched[p].as_ref().unwrap();
+        assert_eq!(
+            got.objective.to_bits(),
+            want_ok.objective.to_bits(),
+            "healthy pair {p} perturbed by a diverging batch-mate"
+        );
+    }
+    let want_err = sinkhorn(&kernel, &mu.weights, &zero_b, &c);
+    match (&batched[1], want_err) {
+        (
+            Err(Error::SinkhornDiverged { iter: bi, reason: br }),
+            Err(Error::SinkhornDiverged { iter: si, reason: sr }),
+        ) => {
+            assert_eq!(*bi, si, "divergence iteration must match the sequential solve");
+            assert_eq!(*br, sr, "divergence reason must match the sequential solve");
+        }
+        other => panic!("expected matching SinkhornDiverged, got {other:?}"),
+    }
+}
+
+#[test]
+fn divergence_batch_bitwise_equals_sequential_at_any_thread_count() {
+    let mut rng = Rng::seed_from(3);
+    let (mu, nu) = data::gaussian_blobs(200, &mut rng);
+    let eps = 0.5;
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, 64, &mut rng);
+    let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
+    let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
+    let k_yy = FactoredKernel::from_measures(&map, &nu, &nu);
+    let ws_a = weight_family(mu.len(), 3, 2);
+    let ws_b = weight_family(nu.len(), 3, 5);
+    let pairs = as_pairs(&ws_a, &ws_b);
+    let c1 = cfg(eps);
+
+    let reference: Vec<f64> = pairs
+        .iter()
+        .map(|&(a, b)| sinkhorn_divergence(&k_xy, &k_xx, &k_yy, a, b, &c1).unwrap())
+        .collect();
+    for threads in [1usize, 3] {
+        let c = SinkhornConfig { threads, ..c1.clone() };
+        let batched = sinkhorn_divergence_batch(&k_xy, &k_xx, &k_yy, &pairs, &c);
+        for (p, got) in batched.iter().enumerate() {
+            let got = got.as_ref().unwrap();
+            assert_eq!(
+                got.to_bits(),
+                reference[p].to_bits(),
+                "pair {p} threads={threads}: {got} vs {}",
+                reference[p]
+            );
+        }
+    }
+}

@@ -16,6 +16,7 @@ fn cfg(eps: f64) -> SinkhornConfig {
         check_every: 5,
         threads: 1,
         stabilize: false,
+        max_batch: 1,
     }
 }
 

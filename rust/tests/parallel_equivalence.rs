@@ -233,6 +233,7 @@ fn divergence_identical_with_1_and_n_threads() {
             check_every: 10,
             threads,
             stabilize: false,
+            max_batch: 1,
         };
         sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg).unwrap()
     };
@@ -305,6 +306,7 @@ fn divergence_agrees_with_historical_serial_path() {
         check_every: 10,
         threads: 1,
         stabilize: false,
+        max_batch: 1,
     };
 
     let phi_mu = map.feature_matrix(&mu.points);
