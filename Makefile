@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test doc fmt fmt-check clippy check artifacts perf bench-smoke clean
+.PHONY: all build test test-scalar doc fmt fmt-check clippy check artifacts perf bench-smoke clean
 
 all: build
 
@@ -16,6 +16,12 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# The SIMD core's portable-fallback arm: the full suite with the env
+# override pinning scalar kernels (CI runs this as its own job, so both
+# dispatch arms stay green).
+test-scalar:
+	LINEAR_SINKHORN_SIMD=scalar $(CARGO) test -q
 
 # Rustdoc with warnings denied: broken intra-doc links fail the build, so
 # documentation drift (e.g. a citation of a section that no longer exists)
@@ -48,8 +54,10 @@ perf:
 	$(CARGO) bench --bench parallel_scaling
 
 # CI's quick bench pass, locally: small sizes, tables appended to
-# BENCH_ci.json (JSON lines, one object per table).
+# BENCH_ci.json (JSON lines, one object per table; every table carries a
+# "cpu" field naming the SIMD dispatch arm).
 bench-smoke:
+	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench simd_kernels
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench parallel_scaling
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench coordinator_throughput
 

@@ -1,0 +1,113 @@
+//! SIMD-core bench: the scalar arm vs the runtime-dispatched arm on the
+//! four hot linalg kernels, single thread (EXPERIMENTS.md §Perf,
+//! "SIMD core").
+//!
+//! The acceptance bar for the SIMD execution layer is **≥ 2x on
+//! `matvec_into` and ≥ 3x on `lse_matvec_into` at n = 10^4, r = 128**
+//! (single thread, AVX2+FMA vs scalar). Both arms are timed in one
+//! process through the `*_at` kernel entry points, so the table is a
+//! genuine before/after on identical buffers; the `cpu` field of the
+//! recorded JSON names the dispatched arm (`scalar` on machines without
+//! AVX2+FMA, where the speedup column reads ~1.00x by construction).
+//!
+//! Run: `cargo bench --bench simd_kernels`
+//!
+//! Setting `BENCH_SMOKE=1` only trims repetitions (the n = 10^4 problem
+//! is already CI-scale); setting `BENCH_JSON=<path>` appends the table
+//! to that file in JSON-lines form (see `bench::Table::emit`) — the CI
+//! `bench-smoke` job records it into `BENCH_ci.json` on every push.
+
+use linear_sinkhorn::bench::{fmt_secs, time, Table};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::linalg::simd::{active_level, SimdLevel};
+use linear_sinkhorn::linalg::{
+    lse_matvec_into_at, lse_matvec_t_into_at, matvec_into_at, matvec_t_into_at, Mat,
+};
+use linear_sinkhorn::rng::Rng;
+
+fn main() {
+    let args = ArgSpec::new("simd_kernels", "scalar vs dispatched SIMD arm, single thread")
+        .opt("n", "10000", "row count of the factor matrix")
+        .opt("features", "128", "feature count r (columns)")
+        .opt("reps", "30", "measured repetitions per cell")
+        .opt("seed", "0", "RNG seed")
+        .opt("csv", "target/simd_kernels.csv", "csv output")
+        .parse();
+
+    let smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (n, r, reps) = if smoke {
+        println!("(BENCH_SMOKE: reduced reps)");
+        (args.get_usize("n"), args.get_usize("features"), 5)
+    } else {
+        (args.get_usize("n"), args.get_usize("features"), args.get_usize("reps"))
+    };
+
+    let dispatched = active_level();
+    let mut rng = Rng::seed_from(args.get_u64("seed"));
+    // Positive factor-scale entries — the Sinkhorn regime.
+    let a = Mat::from_fn(n, r, |_, _| rng.uniform_in(0.05, 1.0) as f32);
+    let v: Vec<f32> = (0..r).map(|_| rng.uniform_in(0.05, 1.0) as f32).collect();
+    let u: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.05, 1.0) as f32).collect();
+    let t: Vec<f64> = (0..r).map(|_| rng.uniform_in(-30.0, 5.0)).collect();
+    let w: Vec<f64> = (0..n).map(|_| rng.uniform_in(-30.0, 5.0)).collect();
+    let alpha = -2.0;
+
+    let mut out_n = vec![0.0f32; n];
+    let mut out_r = vec![0.0f32; r];
+    let mut lout_n = vec![0.0f64; n];
+    let mut lout_r = vec![0.0f64; r];
+
+    let mut table = Table::new(
+        "simd_kernels (single thread, scalar arm vs dispatched arm)",
+        &["kernel", "n", "r", "scalar", "dispatched", "speedup", "arm"],
+    );
+    let mut record = |kernel: &str, scalar_s: f64, simd_s: f64| {
+        table.row(vec![
+            kernel.to_string(),
+            n.to_string(),
+            r.to_string(),
+            fmt_secs(scalar_s),
+            fmt_secs(simd_s),
+            format!("{:.2}x", scalar_s / simd_s),
+            dispatched.label().to_string(),
+        ]);
+    };
+
+    // matvec: out = a @ v (n x r · r).
+    let scalar = time(3, reps, || matvec_into_at(SimdLevel::Scalar, &a, &v, &mut out_n)).median_s;
+    let simd = time(3, reps, || matvec_into_at(dispatched, &a, &v, &mut out_n)).median_s;
+    record("matvec_into", scalar, simd);
+
+    // matvec_t: out = a^T @ u (r outputs, 8x8 microkernel on AVX2).
+    let scalar = time(3, reps, || matvec_t_into_at(SimdLevel::Scalar, &a, &u, &mut out_r)).median_s;
+    let simd = time(3, reps, || matvec_t_into_at(dispatched, &a, &u, &mut out_r)).median_s;
+    record("matvec_t_into", scalar, simd);
+
+    // lse_matvec: the log-domain row update (one f64 exp per entry).
+    let scalar = time(2, reps, || {
+        lse_matvec_into_at(SimdLevel::Scalar, &a, alpha, &t, &mut lout_n);
+    })
+    .median_s;
+    let simd = time(2, reps, || {
+        lse_matvec_into_at(dispatched, &a, alpha, &t, &mut lout_n);
+    })
+    .median_s;
+    record("lse_matvec_into", scalar, simd);
+
+    // lse_matvec_t: the transposed (column) log-domain update.
+    let scalar =
+        time(2, reps, || lse_matvec_t_into_at(SimdLevel::Scalar, &a, alpha, &w, &mut lout_r))
+            .median_s;
+    let simd =
+        time(2, reps, || lse_matvec_t_into_at(dispatched, &a, alpha, &w, &mut lout_r)).median_s;
+    record("lse_matvec_t_into", scalar, simd);
+
+    table.emit(Some(args.get_str("csv")));
+
+    println!(
+        "\ndispatched arm: {} (force the fallback with LINEAR_SINKHORN_SIMD=scalar)\n\
+         acceptance bar: >=2x on matvec_into and >=3x on lse_matvec_into at n=10^4, r=128 \
+         (EXPERIMENTS.md §Perf, \"SIMD core\")",
+        dispatched.label()
+    );
+}

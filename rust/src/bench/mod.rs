@@ -117,9 +117,13 @@ impl Table {
         out
     }
 
-    /// Render as one JSON object (`{"title", "headers", "rows"}`) — the
-    /// machine-readable form the CI `bench-smoke` job collects into
-    /// `BENCH_ci.json` (one object per line, one line per table).
+    /// Render as one JSON object (`{"title", "cpu", "headers", "rows"}`)
+    /// — the machine-readable form the CI `bench-smoke` job collects into
+    /// `BENCH_ci.json` (one object per line, one line per table). The
+    /// `cpu` field tags every table with the active SIMD dispatch arm
+    /// (`scalar` / `avx2+fma`, [`crate::linalg::simd::active_level`]), so
+    /// BENCH_*.json trajectories recorded on different machines — or with
+    /// `LINEAR_SINKHORN_SIMD=scalar` forced — stay comparable.
     pub fn to_json(&self) -> String {
         let arr = |items: &[String]| -> String {
             let quoted: Vec<String> =
@@ -128,8 +132,9 @@ impl Table {
         };
         let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
         format!(
-            "{{\"title\":\"{}\",\"headers\":{},\"rows\":[{}]}}",
+            "{{\"title\":\"{}\",\"cpu\":\"{}\",\"headers\":{},\"rows\":[{}]}}",
             json_escape(&self.title),
+            json_escape(crate::linalg::simd::active_level().label()),
             arr(&self.headers),
             rows.join(",")
         )
@@ -255,10 +260,13 @@ mod tests {
     fn table_json_shape_and_escaping() {
         let mut t = Table::new("q\"t", &["a", "b"]);
         t.row(vec!["1.5x".into(), "path\\x\n".into()]);
+        let cpu = crate::linalg::simd::active_level().label();
         assert_eq!(
             t.to_json(),
-            "{\"title\":\"q\\\"t\",\"headers\":[\"a\",\"b\"],\
-             \"rows\":[[\"1.5x\",\"path\\\\x\\n\"]]}"
+            format!(
+                "{{\"title\":\"q\\\"t\",\"cpu\":\"{cpu}\",\"headers\":[\"a\",\"b\"],\
+                 \"rows\":[[\"1.5x\",\"path\\\\x\\n\"]]}}"
+            )
         );
     }
 

@@ -7,8 +7,9 @@
 //!
 //!   phi_theta(z)_j = exp(w_j . z + b_j - logsumexp-ish normaliser) / sqrt(r)
 //!
-//! i.e. exactly the Lemma-1 family with learnable anchors/偏置 generalised
-//! to an arbitrary log-linear form. Strict positivity holds for any theta,
+//! i.e. exactly the Lemma-1 family with learnable anchors/biases
+//! generalised to an arbitrary log-linear form. Strict positivity holds
+//! for any theta,
 //! so Prop 3.2 differentiability applies and gradients flow through
 //! `d phi / d theta` (implemented analytically here — no autodiff crate).
 
@@ -137,12 +138,15 @@ impl FeatureMap for LearnedFeatureMap {
         let (r, e) = self.w.shape();
         assert_eq!(z.len(), e, "embedding dim mismatch");
         assert_eq!(out.len(), r);
-        for j in 0..r {
-            let dot: f32 = z.iter().zip(self.w.row(j)).map(|(&a, &b)| a * b).sum();
-            // Clamp the exponent on both sides: positivity below, and an
-            // upper guard so a bad adversarial step cannot overflow f32.
-            let log_phi = (dot + self.b[j]).clamp(LOG_FLOOR, 30.0);
-            out[j] = log_phi.exp() * self.inv_sqrt_r;
+        let level = crate::linalg::simd::active_level();
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = crate::linalg::simd::dot_f32(level, z, self.w.row(j)) + self.b[j];
+        }
+        // Clamp the exponent on both sides: positivity below, and an
+        // upper guard so a bad adversarial step cannot overflow f32.
+        crate::special::vexp::exp_clamped_f32_at(level, out, LOG_FLOOR, 30.0);
+        for o in out.iter_mut() {
+            *o *= self.inv_sqrt_r;
         }
     }
 }

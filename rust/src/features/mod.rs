@@ -13,6 +13,7 @@
 //!   elementwise positive nonlinearity, trained adversarially in the GAN.
 
 use crate::data::Measure;
+use crate::linalg::simd;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::runtime::pool::Pool;
@@ -248,21 +249,21 @@ impl FeatureMap for GaussianFeatureMap {
 
     fn eval_into(&self, x: &[f32], out: &mut [f32]) {
         self.log_eval_into(x, out);
-        for v in out.iter_mut() {
-            *v = v.clamp(LOG_FLOOR, LOG_CEIL).exp();
-        }
+        special::vexp::exp_clamped_f32_at(simd::active_level(), out, LOG_FLOOR, LOG_CEIL);
     }
 
     fn log_eval_into(&self, x: &[f32], out: &mut [f32]) {
         let (r, d) = self.anchors.shape();
         assert_eq!(x.len(), d, "point dim {} != anchor dim {d}", x.len());
         assert_eq!(out.len(), r);
+        let level = simd::active_level();
         let xsq: f32 = x.iter().map(|&v| v * v).sum();
         let inv_eps2 = (2.0 / self.eps) as f32;
         for j in 0..r {
             let urow = self.anchors.row(j);
-            // ||x - u||^2 = ||x||^2 - 2 x.u + ||u||^2 (MXU-shaped on L1).
-            let dot: f32 = x.iter().zip(urow).map(|(&a, &b)| a * b).sum();
+            // ||x - u||^2 = ||x||^2 - 2 x.u + ||u||^2 (MXU-shaped on L1);
+            // the anchor dot is the dispatched SIMD-core kernel.
+            let dot = simd::dot_f32(level, x, urow);
             let sq = xsq - 2.0 * dot + self.anchor_sq[j];
             out[j] = self.log_const[j] - inv_eps2 * sq;
         }
@@ -311,8 +312,9 @@ impl FeatureMap for ArcCosFeatureMap {
         let (r, d) = self.anchors.shape();
         assert_eq!(x.len(), d);
         assert_eq!(out.len(), r + 1);
+        let level = simd::active_level();
         for j in 0..r {
-            let dot: f32 = x.iter().zip(self.anchors.row(j)).map(|(&a, &b)| a * b).sum();
+            let dot = simd::dot_f32(level, x, self.anchors.row(j));
             let rect = dot.max(0.0);
             let powed = match self.s {
                 0 => {

@@ -22,9 +22,16 @@
 //! Python never runs on the request path: `make artifacts` is the only
 //! python invocation, and the binary is self-contained afterwards.
 //!
-//! Three cross-cutting L3 subsystems (see README.md and EXPERIMENTS.md
-//! §Parallel scaling / §Stabilisation):
+//! The cross-cutting L3 subsystems (see README.md and EXPERIMENTS.md
+//! §Perf / §Parallel scaling / §Stabilisation):
 //!
+//! * [`linalg::simd`] — the SIMD core: every hot kernel (matvecs, fused
+//!   batch applies, logsumexp reductions, feature-evaluation dots)
+//!   dispatches at runtime between an AVX2+FMA intrinsics arm — with
+//!   the vectorised ≤ 2 ulp `exp`/`ln` of [`special::vexp`] on the
+//!   log-domain path — and the portable scalar arm
+//!   (`LINEAR_SINKHORN_SIMD=scalar` forces it). Bitwise
+//!   thread-count-determinism holds per arm.
 //! * [`runtime::pool`] — the intra-solve parallel execution layer, a
 //!   persistent channel-fed worker pool behind the row-chunked pooled
 //!   matvecs and logsumexp reductions ([`linalg`]), parallel feature

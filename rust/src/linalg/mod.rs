@@ -4,14 +4,20 @@
 //! this module: a row-major [`Mat`] plus the blocked matvec / matmul
 //! routines that are the per-iteration cost of every Sinkhorn variant.
 //! The hot paths (`matvec`, `matvec_t`, `apply` in `kernels/`) are written
-//! to be allocation-free given caller-provided output buffers and blocked
-//! for cache/SIMD friendliness (the compiler auto-vectorises the inner
-//! `f32` loops; see EXPERIMENTS.md §Perf). The `_pooled` variants run the
+//! to be allocation-free given caller-provided output buffers, and since
+//! the SIMD core landed they run on **runtime-dispatched kernels**
+//! ([`simd`]): an AVX2+FMA arm with explicit intrinsics where the CPU
+//! supports it, and the original scalar code as the portable fallback
+//! (`LINEAR_SINKHORN_SIMD=scalar` forces it; EXPERIMENTS.md §Perf,
+//! "SIMD core"). Every kernel also has an `*_at` twin taking an explicit
+//! [`SimdLevel`] for tests and benches. The `_pooled` variants run the
 //! same kernels row-chunked over a [`crate::runtime::pool::Pool`] with
-//! thread-count-independent results (EXPERIMENTS.md §Parallel scaling).
+//! thread-count-independent results *on each arm* (EXPERIMENTS.md
+//! §Parallel scaling).
 
 mod mat;
 mod ops;
+pub mod simd;
 
 pub use mat::Mat;
 pub use ops::{
@@ -21,6 +27,14 @@ pub use ops::{
     matmat_t_into, matmat_t_into_pooled, matmul, matvec, matvec_into, matvec_into_pooled,
     matvec_t, matvec_t_into, matvec_t_into_pooled, max_abs_diff, scale, softmax_inplace, sum,
 };
+pub use ops::{
+    lse_matmat_into_at, lse_matmat_into_pooled_at, lse_matmat_t_into_at,
+    lse_matmat_t_into_pooled_at, lse_matvec_into_at, lse_matvec_into_pooled_at,
+    lse_matvec_t_into_at, lse_matvec_t_into_pooled_at, matmat_into_at, matmat_into_pooled_at,
+    matmat_t_into_at, matmat_t_into_pooled_at, matvec_into_at, matvec_into_pooled_at,
+    matvec_t_into_at, matvec_t_into_pooled_at,
+};
+pub use simd::SimdLevel;
 
 #[cfg(test)]
 mod tests {

@@ -1,7 +1,13 @@
 //! Vector/matrix kernels. The `matvec`/`matvec_t` pair is the entire
-//! per-iteration cost of every Sinkhorn variant in this crate, so both are
-//! written as simple blocked loops the compiler auto-vectorises; the
-//! `_into` variants are allocation-free for the coordinator's hot loop.
+//! per-iteration cost of every Sinkhorn variant in this crate; since the
+//! SIMD core landed, both run on runtime-dispatched kernels ([`super::simd`]):
+//! an AVX2+FMA arm with explicit intrinsics where the CPU supports it and
+//! the original scalar code as the portable fallback
+//! (`LINEAR_SINKHORN_SIMD=scalar` forces it). The `_into` variants are
+//! allocation-free for the coordinator's hot loop, and every public
+//! kernel has an `_at` twin taking an explicit [`SimdLevel`] — the
+//! entry points the scalar-vs-SIMD agreement tests and the
+//! `simd_kernels` bench use to pin an arm.
 //!
 //! The `_pooled` variants run the same kernels row-chunked over a
 //! [`Pool`]. They preserve the serial accuracy contract — see the
@@ -15,8 +21,10 @@
 //! logsumexp reductions of `alpha * A + input` over rows/columns, in f64,
 //! used by [`crate::kernels::LogKernelOp`] to run small-eps stabilised
 //! Sinkhorn without materialising a kernel (EXPERIMENTS.md
-//! §Stabilisation). The transposed variants allocate per-column `(max,
-//! sumexp)` scratch — O(k) against an O(nk) reduction.
+//! §Stabilisation). On the AVX2 arm the per-entry `exp` runs through the
+//! vectorised polynomial [`crate::special::vexp`] (≤ 2 ulp). The
+//! transposed variants allocate per-column `(max, sumexp)` scratch —
+//! O(k) against an O(nk) reduction.
 //!
 //! The `matmat*` / `lse_matmat*` families are the **column-blocked**
 //! (multi-right-hand-side) forms of the same four kernels: B input
@@ -26,12 +34,14 @@
 //! ([`crate::sinkhorn::solve_batch`]) O(r·Σn) per fused apply with one
 //! stream over the factors instead of B. Each column is computed with the
 //! *same* per-row/per-chunk kernels as the vector variants (`row_dot`,
-//! `saxpy_rows`, `lse_row`, `lse_accum_rows`) on the same fixed chunk
-//! grids, so column `k` of a fused apply is **bitwise identical** to the
-//! corresponding vector apply at every pool size — the property the
-//! batched solver's sequential-equivalence contract rests on
+//! `saxpy_rows`, `lse_row`, `lse_accum_rows` in [`super::simd`]) on the
+//! same fixed chunk grids, so column `k` of a fused apply is **bitwise
+//! identical** to the corresponding vector apply at every pool size *and
+//! on either dispatch arm* — the property the batched solver's
+//! sequential-equivalence contract rests on
 //! (`rust/tests/batched_equivalence.rs`).
 
+use super::simd::{self, SimdLevel};
 use super::Mat;
 use crate::runtime::pool::Pool;
 
@@ -53,45 +63,31 @@ const PAR_LSE_ROW_CHUNK: usize = 128;
 /// Fixed grid, same determinism argument as [`PAR_T_CHUNK`].
 const PAR_LSE_T_CHUNK: usize = 1024;
 
-/// One row dot of the blocked accumulation scheme (shared by the serial
-/// and pooled matvecs so both produce bitwise-identical rows).
-#[inline]
-fn row_dot(row: &[f32], v: &[f32]) -> f32 {
-    const BLOCK: usize = 64;
-    let mut acc = 0.0f64;
-    let mut rb = row.chunks_exact(BLOCK);
-    let mut vb = v.chunks_exact(BLOCK);
-    for (r64, v64) in (&mut rb).zip(&mut vb) {
-        // 8 independent f32 partials over the 64-element block.
-        let mut p = [0.0f32; 8];
-        for (rc, vc) in r64.chunks_exact(8).zip(v64.chunks_exact(8)) {
-            for l in 0..8 {
-                p[l] += rc[l] * vc[l];
-            }
-        }
-        acc += p.iter().map(|&x| x as f64).sum::<f64>();
-    }
-    for (r, w) in rb.remainder().iter().zip(vb.remainder()) {
-        acc += (*r as f64) * (*w as f64);
-    }
-    acc as f32
+/// `out = a @ v` without allocating, on the runtime-dispatched arm.
+///
+/// Accuracy/speed contract (both arms): within each 64-element block the
+/// dot runs in f32 partial lanes (no serial dependency chain); block
+/// results are accumulated in f64, so rounding error grows with the
+/// block count, not the row length. Sinkhorn scalings span many orders
+/// of magnitude — pure-f32 row sums measurably bias small-eps runs,
+/// while this scheme matches the old full-f64 accumulator to ~1e-6
+/// relative at a multiple of its throughput (EXPERIMENTS.md §Perf, L3
+/// iterations 1 and 3). The scalar arm keeps 8 partial lanes per block;
+/// the AVX2 arm widens to 32 lanes across four FMA accumulators — same
+/// contract, more lanes — and the two arms agree to ≤ 1e-5 relative
+/// (`rust/tests/parallel_equivalence.rs`).
+pub fn matvec_into(a: &Mat, v: &[f32], out: &mut [f32]) {
+    matvec_into_at(simd::active_level(), a, v, out);
 }
 
-/// `out = a @ v` without allocating.
-///
-/// Accuracy/speed contract: within each 64-element block the dot runs in
-/// f32 with 8 independent partial sums (SIMD-friendly, no serial
-/// dependency chain); block results are accumulated in f64, so rounding
-/// error grows with the block count, not the row length. Sinkhorn
-/// scalings span many orders of magnitude — pure-f32 row sums measurably
-/// bias small-eps runs, while this scheme matches the old full-f64
-/// accumulator to ~1e-6 relative at ~4x the throughput (EXPERIMENTS.md
-/// §Perf, L3 iteration 1).
-pub fn matvec_into(a: &Mat, v: &[f32], out: &mut [f32]) {
+/// [`matvec_into`] pinned to a dispatch arm (tests/benches; the level is
+/// sanitised, so an unsupported arm falls back to scalar).
+pub fn matvec_into_at(level: SimdLevel, a: &Mat, v: &[f32], out: &mut [f32]) {
+    let level = level.sanitize();
     assert_eq!(a.cols(), v.len(), "matvec: {}x{} @ {}", a.rows(), a.cols(), v.len());
     assert_eq!(a.rows(), out.len(), "matvec: output length");
     for (i, o) in out.iter_mut().enumerate() {
-        *o = row_dot(a.row(i), v);
+        *o = simd::row_dot(level, a.row(i), v);
     }
 }
 
@@ -100,21 +96,27 @@ pub fn matvec_into(a: &Mat, v: &[f32], out: &mut [f32]) {
 /// Rows are independent, so each task computes a contiguous block of
 /// output rows with the *same* per-row kernel as the serial path: the
 /// result is bitwise identical to [`matvec_into`] for every pool size
-/// (property-tested in `rust/tests/parallel_equivalence.rs`). Small
-/// problems and serial pools fall through to the serial loop to skip the
-/// spawn overhead.
+/// (property-tested in `rust/tests/parallel_equivalence.rs`, on both
+/// dispatch arms). Small problems and serial pools fall through to the
+/// serial loop to skip the spawn overhead.
 pub fn matvec_into_pooled(a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
+    matvec_into_pooled_at(simd::active_level(), a, v, out, pool);
+}
+
+/// [`matvec_into_pooled`] pinned to a dispatch arm.
+pub fn matvec_into_pooled_at(level: SimdLevel, a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
+    let level = level.sanitize();
     assert_eq!(a.cols(), v.len(), "matvec: {}x{} @ {}", a.rows(), a.cols(), v.len());
     assert_eq!(a.rows(), out.len(), "matvec: output length");
     if pool.threads() <= 1 || a.rows() < 2 * PAR_ROW_CHUNK {
-        matvec_into(a, v, out);
+        matvec_into_at(level, a, v, out);
         return;
     }
     let tasks: Vec<(usize, &mut [f32])> = out.chunks_mut(PAR_ROW_CHUNK).enumerate().collect();
     pool.run_tasks(tasks, |(c, chunk)| {
         let base = c * PAR_ROW_CHUNK;
         for (i, o) in chunk.iter_mut().enumerate() {
-            *o = row_dot(a.row(base + i), v);
+            *o = simd::row_dot(level, a.row(base + i), v);
         }
     });
 }
@@ -126,46 +128,25 @@ pub fn matvec(a: &Mat, v: &[f32]) -> Vec<f32> {
     out
 }
 
-/// Accumulate `out += a[lo..hi]^T @ v[lo..hi]` with the 4-row saxpy
-/// blocking (shared by the serial and pooled transposed matvecs; `out`
-/// must be pre-zeroed by the caller).
-fn saxpy_rows(a: &Mat, v: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
-    let k = a.cols();
-    let data = a.data();
-    let mut i = lo;
-    while i + 4 <= hi {
-        let (v0, v1, v2, v3) = (v[i], v[i + 1], v[i + 2], v[i + 3]);
-        let r0 = &data[i * k..(i + 1) * k];
-        let r1 = &data[(i + 1) * k..(i + 2) * k];
-        let r2 = &data[(i + 2) * k..(i + 3) * k];
-        let r3 = &data[(i + 3) * k..(i + 4) * k];
-        for j in 0..k {
-            out[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
-        }
-        i += 4;
-    }
-    while i < hi {
-        let vi = v[i];
-        if vi != 0.0 {
-            let row = a.row(i);
-            for (o, &r) in out.iter_mut().zip(row) {
-                *o += r * vi;
-            }
-        }
-        i += 1;
-    }
+/// `out = a^T @ v` without allocating and without transposing: accumulate
+/// rows of `a` scaled by `v[i]` into the output (saxpy). The scalar arm
+/// blocks 4 rows per pass (EXPERIMENTS.md §Perf, L3 iteration 2); the
+/// AVX2 arm widens to an **8-row × 8-column register-tiled microkernel**
+/// — eight broadcast coefficients FMA-accumulated into one 8-wide output
+/// register per tile step, touching `out` an eighth as often as the
+/// naive loop while still streaming `a` exactly once (L3 iteration 3).
+pub fn matvec_t_into(a: &Mat, v: &[f32], out: &mut [f32]) {
+    matvec_t_into_at(simd::active_level(), a, v, out);
 }
 
-/// `out = a^T @ v` without allocating and without transposing: accumulate
-/// rows of `a` scaled by `v[i]` into the output (saxpy), 4 rows per pass —
-/// streaming `a` exactly once while touching `out` a quarter as often as
-/// the naive row-at-a-time loop (EXPERIMENTS.md §Perf, L3 iteration 2).
-pub fn matvec_t_into(a: &Mat, v: &[f32], out: &mut [f32]) {
+/// [`matvec_t_into`] pinned to a dispatch arm.
+pub fn matvec_t_into_at(level: SimdLevel, a: &Mat, v: &[f32], out: &mut [f32]) {
+    let level = level.sanitize();
     let (n, k) = a.shape();
     assert_eq!(n, v.len(), "matvec_t: {}x{} ^T @ {}", n, k, v.len());
     assert_eq!(k, out.len(), "matvec_t: output length");
     out.iter_mut().for_each(|x| *x = 0.0);
-    saxpy_rows(a, v, 0, n, out);
+    simd::saxpy_rows(level, a, v, 0..n, out);
 }
 
 /// Row-chunked parallel [`matvec_t_into`].
@@ -178,11 +159,17 @@ pub fn matvec_t_into(a: &Mat, v: &[f32], out: &mut [f32]) {
 /// identical for every pool size, and matches the serial kernel to the
 /// chunked-reduction reordering — typically ~1e-6 and bounded well below
 /// 1e-5 relative on Sinkhorn factors, whose entries are non-negative
-/// (property-tested in `rust/tests/parallel_equivalence.rs`).
-/// Single-chunk problems (n ≤ 1024) take the serial allocation-free
-/// path directly — a one-partial reduce would be bitwise equal anyway,
-/// so thread invariance is unaffected.
+/// (property-tested in `rust/tests/parallel_equivalence.rs`, on both
+/// dispatch arms). Single-chunk problems (n ≤ 1024) take the serial
+/// allocation-free path directly — a one-partial reduce would be bitwise
+/// equal anyway, so thread invariance is unaffected.
 pub fn matvec_t_into_pooled(a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
+    matvec_t_into_pooled_at(simd::active_level(), a, v, out, pool);
+}
+
+/// [`matvec_t_into_pooled`] pinned to a dispatch arm.
+pub fn matvec_t_into_pooled_at(level: SimdLevel, a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
+    let level = level.sanitize();
     let (n, k) = a.shape();
     assert_eq!(n, v.len(), "matvec_t: {}x{} ^T @ {}", n, k, v.len());
     assert_eq!(k, out.len(), "matvec_t: output length");
@@ -191,7 +178,7 @@ pub fn matvec_t_into_pooled(a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
     // every pool size (thread invariance is preserved: the path depends
     // only on n).
     if n <= PAR_T_CHUNK {
-        matvec_t_into(a, v, out);
+        matvec_t_into_at(level, a, v, out);
         return;
     }
     let nchunks = n.div_ceil(PAR_T_CHUNK);
@@ -200,9 +187,10 @@ pub fn matvec_t_into_pooled(a: &Mat, v: &[f32], out: &mut [f32], pool: &Pool) {
     pool.run_tasks(tasks, |(c, buf)| {
         let lo = c * PAR_T_CHUNK;
         let hi = (lo + PAR_T_CHUNK).min(n);
-        saxpy_rows(a, v, lo, hi, buf);
+        simd::saxpy_rows(level, a, v, lo..hi, buf);
     });
-    // Deterministic single-thread reduce in chunk order, f64 accumulation.
+    // Deterministic single-thread reduce in chunk order, f64 accumulation
+    // (arm-independent by construction: plain scalar adds).
     for (j, o) in out.iter_mut().enumerate() {
         let mut acc = 0.0f64;
         for p in &partials {
@@ -219,30 +207,6 @@ pub fn matvec_t(a: &Mat, v: &[f32]) -> Vec<f32> {
     out
 }
 
-/// One row of the log-space matvec:
-/// `logsumexp_j(alpha * row[j] + t[j])`, two passes (max, then sum of
-/// shifted exps) entirely in f64. Shared by the serial and pooled
-/// row-streamed variants so both produce bitwise-identical rows. Returns
-/// `-inf` when every term is `-inf` (an all-zero kernel row).
-#[inline]
-fn lse_row(row: &[f32], alpha: f64, t: &[f64]) -> f64 {
-    let mut m = f64::NEG_INFINITY;
-    for (&aij, &tj) in row.iter().zip(t) {
-        let v = alpha * aij as f64 + tj;
-        if v > m {
-            m = v;
-        }
-    }
-    if !m.is_finite() {
-        return m;
-    }
-    let mut s = 0.0f64;
-    for (&aij, &tj) in row.iter().zip(t) {
-        s += (alpha * aij as f64 + tj - m).exp();
-    }
-    m + s.ln()
-}
-
 /// Row-streamed log-space matvec:
 /// `out[i] = logsumexp_j(alpha * a[i, j] + t[j])`.
 ///
@@ -251,12 +215,21 @@ fn lse_row(row: &[f32], alpha: f64, t: &[f64]) -> f64 {
 /// without ever forming `K`; with `a` a log-factor matrix and
 /// `alpha = 1` it is the outer reduction of the factored log-kernel
 /// apply. All arithmetic is f64 (log-domain quantities at small eps sit
-/// far outside f32 range).
+/// far outside f32 range). On the AVX2 arm the shifted exponentials run
+/// through [`crate::special::vexp`] (≤ 2 ulp), which is where the lse
+/// path's ≥ 3x single-thread target comes from (EXPERIMENTS.md §Perf,
+/// "SIMD core").
 pub fn lse_matvec_into(a: &Mat, alpha: f64, t: &[f64], out: &mut [f64]) {
+    lse_matvec_into_at(simd::active_level(), a, alpha, t, out);
+}
+
+/// [`lse_matvec_into`] pinned to a dispatch arm.
+pub fn lse_matvec_into_at(level: SimdLevel, a: &Mat, alpha: f64, t: &[f64], out: &mut [f64]) {
+    let level = level.sanitize();
     assert_eq!(a.cols(), t.len(), "lse_matvec: {}x{} @ {}", a.rows(), a.cols(), t.len());
     assert_eq!(a.rows(), out.len(), "lse_matvec: output length");
     for (i, o) in out.iter_mut().enumerate() {
-        *o = lse_row(a.row(i), alpha, t);
+        *o = simd::lse_row(level, a.row(i), alpha, t);
     }
 }
 
@@ -265,70 +238,54 @@ pub fn lse_matvec_into(a: &Mat, alpha: f64, t: &[f64], out: &mut [f64]) {
 /// Rows are independent and share the per-row `lse_row` kernel with the
 /// serial path, so the result is bitwise identical to [`lse_matvec_into`]
 /// for every pool size (property-tested in
-/// `rust/tests/parallel_equivalence.rs`). Small problems and serial pools
-/// fall through to the serial loop.
+/// `rust/tests/parallel_equivalence.rs`, on both dispatch arms). Small
+/// problems and serial pools fall through to the serial loop.
 pub fn lse_matvec_into_pooled(a: &Mat, alpha: f64, t: &[f64], out: &mut [f64], pool: &Pool) {
+    lse_matvec_into_pooled_at(simd::active_level(), a, alpha, t, out, pool);
+}
+
+/// [`lse_matvec_into_pooled`] pinned to a dispatch arm.
+pub fn lse_matvec_into_pooled_at(
+    level: SimdLevel,
+    a: &Mat,
+    alpha: f64,
+    t: &[f64],
+    out: &mut [f64],
+    pool: &Pool,
+) {
+    let level = level.sanitize();
     assert_eq!(a.cols(), t.len(), "lse_matvec: {}x{} @ {}", a.rows(), a.cols(), t.len());
     assert_eq!(a.rows(), out.len(), "lse_matvec: output length");
     if pool.threads() <= 1 || a.rows() < 2 * PAR_LSE_ROW_CHUNK {
-        lse_matvec_into(a, alpha, t, out);
+        lse_matvec_into_at(level, a, alpha, t, out);
         return;
     }
     let tasks: Vec<(usize, &mut [f64])> = out.chunks_mut(PAR_LSE_ROW_CHUNK).enumerate().collect();
     pool.run_tasks(tasks, |(c, chunk)| {
         let base = c * PAR_LSE_ROW_CHUNK;
         for (i, o) in chunk.iter_mut().enumerate() {
-            *o = lse_row(a.row(base + i), alpha, t);
+            *o = simd::lse_row(level, a.row(base + i), alpha, t);
         }
     });
-}
-
-/// Per-column (max, sum-of-shifted-exps) accumulation over rows
-/// `lo..hi`, the building block both transposed logsumexp variants share.
-/// `mx`/`sum` must come in as `(-inf, 0.0)` per column.
-fn lse_accum_rows(
-    a: &Mat,
-    alpha: f64,
-    u: &[f64],
-    lo: usize,
-    hi: usize,
-    mx: &mut [f64],
-    sum: &mut [f64],
-) {
-    // Pass 1: per-column max over the row range.
-    for i in lo..hi {
-        let ui = u[i];
-        for (m, &aij) in mx.iter_mut().zip(a.row(i)) {
-            let v = alpha * aij as f64 + ui;
-            if v > *m {
-                *m = v;
-            }
-        }
-    }
-    // Pass 2: shifted exponentials (columns whose max is -inf stay 0).
-    for i in lo..hi {
-        let ui = u[i];
-        for ((s, &m), &aij) in sum.iter_mut().zip(mx.iter()).zip(a.row(i)) {
-            if m.is_finite() {
-                *s += (alpha * aij as f64 + ui - m).exp();
-            }
-        }
-    }
 }
 
 /// Column-reducing log-space matvec:
 /// `out[j] = logsumexp_i(alpha * a[i, j] + u[i])` — the transposed
 /// (column) update of log-domain Sinkhorn, f64 throughout.
 pub fn lse_matvec_t_into(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64]) {
+    lse_matvec_t_into_at(simd::active_level(), a, alpha, u, out);
+}
+
+/// [`lse_matvec_t_into`] pinned to a dispatch arm.
+pub fn lse_matvec_t_into_at(level: SimdLevel, a: &Mat, alpha: f64, u: &[f64], out: &mut [f64]) {
+    let level = level.sanitize();
     let (n, k) = a.shape();
     assert_eq!(n, u.len(), "lse_matvec_t: {}x{} ^T @ {}", n, k, u.len());
     assert_eq!(k, out.len(), "lse_matvec_t: output length");
     let mut mx = vec![f64::NEG_INFINITY; k];
     let mut sum = vec![0.0f64; k];
-    lse_accum_rows(a, alpha, u, 0, n, &mut mx, &mut sum);
-    for ((o, &m), &s) in out.iter_mut().zip(&mx).zip(&sum) {
-        *o = if m.is_finite() { m + s.ln() } else { m };
-    }
+    simd::lse_accum_rows(level, a, alpha, u, 0..n, &mut mx, &mut sum);
+    simd::lse_finish(level, &mx, &sum, out);
 }
 
 /// Row-chunked parallel [`lse_matvec_t_into`].
@@ -341,14 +298,28 @@ pub fn lse_matvec_t_into(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64]) {
 /// result is therefore identical for every pool size (the code path
 /// depends only on `n`), and matches the serial kernel up to the chunked
 /// merge's f64 rounding — property-tested in
-/// `rust/tests/parallel_equivalence.rs`. Single-chunk problems
+/// `rust/tests/parallel_equivalence.rs` on both dispatch arms (the merge
+/// itself is plain scalar f64 on every arm). Single-chunk problems
 /// (`n ≤ 1024`) take the serial path directly for every pool size.
 pub fn lse_matvec_t_into_pooled(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64], pool: &Pool) {
+    lse_matvec_t_into_pooled_at(simd::active_level(), a, alpha, u, out, pool);
+}
+
+/// [`lse_matvec_t_into_pooled`] pinned to a dispatch arm.
+pub fn lse_matvec_t_into_pooled_at(
+    level: SimdLevel,
+    a: &Mat,
+    alpha: f64,
+    u: &[f64],
+    out: &mut [f64],
+    pool: &Pool,
+) {
+    let level = level.sanitize();
     let (n, k) = a.shape();
     assert_eq!(n, u.len(), "lse_matvec_t: {}x{} ^T @ {}", n, k, u.len());
     assert_eq!(k, out.len(), "lse_matvec_t: output length");
     if n <= PAR_LSE_T_CHUNK {
-        lse_matvec_t_into(a, alpha, u, out);
+        lse_matvec_t_into_at(level, a, alpha, u, out);
         return;
     }
     let nchunks = n.div_ceil(PAR_LSE_T_CHUNK);
@@ -358,9 +329,10 @@ pub fn lse_matvec_t_into_pooled(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64],
     pool.run_tasks(tasks, |(c, (mx, sum))| {
         let lo = c * PAR_LSE_T_CHUNK;
         let hi = (lo + PAR_LSE_T_CHUNK).min(n);
-        lse_accum_rows(a, alpha, u, lo, hi, mx, sum);
+        simd::lse_accum_rows(level, a, alpha, u, lo..hi, mx, sum);
     });
-    // Deterministic single-thread merge in chunk order.
+    // Deterministic single-thread merge in chunk order (scalar on every
+    // arm, so the merge never contributes a cross-arm difference).
     for (j, o) in out.iter_mut().enumerate() {
         let mut m = f64::NEG_INFINITY;
         for (mx, _) in &partials {
@@ -383,21 +355,27 @@ pub fn lse_matvec_t_into_pooled(a: &Mat, alpha: f64, u: &[f64], out: &mut [f64],
 }
 
 /// Column-blocked [`matvec_into`]: `out.row(k) = a @ vs.row(k)` for every
-/// pair row `k` (inputs and outputs pair-major: B×cols in, B×rows out).
+/// pair row (inputs and outputs pair-major: B×cols in, B×rows out).
 ///
 /// `a` is streamed row-by-row once, each row dotted against all B input
 /// vectors — the fused form the batched Sinkhorn engine rides. Every
 /// entry comes from the same `row_dot` kernel as the vector variant, so
 /// row `k` of the output is bitwise identical to `matvec_into(a,
-/// vs.row(k), ..)` for any B.
+/// vs.row(k), ..)` for any B, on either dispatch arm.
 pub fn matmat_into(a: &Mat, vs: &Mat, out: &mut Mat) {
+    matmat_into_at(simd::active_level(), a, vs, out);
+}
+
+/// [`matmat_into`] pinned to a dispatch arm.
+pub fn matmat_into_at(level: SimdLevel, a: &Mat, vs: &Mat, out: &mut Mat) {
+    let level = level.sanitize();
     let b = vs.rows();
     assert_eq!(a.cols(), vs.cols(), "matmat: {}x{} @ {}x{}^T", a.rows(), a.cols(), b, vs.cols());
     assert_eq!(out.shape(), (b, a.rows()), "matmat: output shape");
     for i in 0..a.rows() {
         let row = a.row(i);
         for k in 0..b {
-            out[(k, i)] = row_dot(row, vs.row(k));
+            out[(k, i)] = simd::row_dot(level, row, vs.row(k));
         }
     }
 }
@@ -409,11 +387,17 @@ pub fn matmat_into(a: &Mat, vs: &Mat, out: &mut Mat) {
 /// so the result is bitwise identical to the serial form — and to the
 /// per-pair vector applies — for every pool size.
 pub fn matmat_into_pooled(a: &Mat, vs: &Mat, out: &mut Mat, pool: &Pool) {
+    matmat_into_pooled_at(simd::active_level(), a, vs, out, pool);
+}
+
+/// [`matmat_into_pooled`] pinned to a dispatch arm.
+pub fn matmat_into_pooled_at(level: SimdLevel, a: &Mat, vs: &Mat, out: &mut Mat, pool: &Pool) {
+    let level = level.sanitize();
     let b = vs.rows();
     assert_eq!(a.cols(), vs.cols(), "matmat: {}x{} @ {}x{}^T", a.rows(), a.cols(), b, vs.cols());
     assert_eq!(out.shape(), (b, a.rows()), "matmat: output shape");
     if pool.threads() <= 1 || a.rows() < 2 * PAR_ROW_CHUNK {
-        matmat_into(a, vs, out);
+        matmat_into_at(level, a, vs, out);
         return;
     }
     let n = a.rows();
@@ -429,60 +413,26 @@ pub fn matmat_into_pooled(a: &Mat, vs: &Mat, out: &mut Mat, pool: &Pool) {
         let base = c * PAR_ROW_CHUNK;
         let vrow = vs.row(k);
         for (i, o) in chunk.iter_mut().enumerate() {
-            *o = row_dot(a.row(base + i), vrow);
+            *o = simd::row_dot(level, a.row(base + i), vrow);
         }
     });
-}
-
-/// Fused multi-vector [`saxpy_rows`]: accumulate
-/// `out.row(p) += a[lo..hi]^T @ us.row(p)[lo..hi]` for every pair row,
-/// streaming each 4-row block of `a` once for all B pairs. Per pair the
-/// arithmetic (block boundaries, add order, zero-skip in the remainder)
-/// is exactly `saxpy_rows`, so each output row is bitwise identical to
-/// the vector kernel's.
-fn saxpy_rows_multi(a: &Mat, us: &Mat, lo: usize, hi: usize, outs: &mut Mat) {
-    let k = a.cols();
-    let b = us.rows();
-    let data = a.data();
-    let mut i = lo;
-    while i + 4 <= hi {
-        let r0 = &data[i * k..(i + 1) * k];
-        let r1 = &data[(i + 1) * k..(i + 2) * k];
-        let r2 = &data[(i + 2) * k..(i + 3) * k];
-        let r3 = &data[(i + 3) * k..(i + 4) * k];
-        for p in 0..b {
-            let (v0, v1, v2, v3) =
-                (us[(p, i)], us[(p, i + 1)], us[(p, i + 2)], us[(p, i + 3)]);
-            let out = outs.row_mut(p);
-            for j in 0..k {
-                out[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
-            }
-        }
-        i += 4;
-    }
-    while i < hi {
-        for p in 0..b {
-            let vi = us[(p, i)];
-            if vi != 0.0 {
-                let row = a.row(i);
-                for (o, &r) in outs.row_mut(p).iter_mut().zip(row) {
-                    *o += r * vi;
-                }
-            }
-        }
-        i += 1;
-    }
 }
 
 /// Column-blocked [`matvec_t_into`]: `out.row(k) = a^T @ us.row(k)` for
 /// every pair row (us: B×rows, out: B×cols, both pair-major).
 pub fn matmat_t_into(a: &Mat, us: &Mat, out: &mut Mat) {
+    matmat_t_into_at(simd::active_level(), a, us, out);
+}
+
+/// [`matmat_t_into`] pinned to a dispatch arm.
+pub fn matmat_t_into_at(level: SimdLevel, a: &Mat, us: &Mat, out: &mut Mat) {
+    let level = level.sanitize();
     let (n, k) = a.shape();
     let b = us.rows();
     assert_eq!(us.cols(), n, "matmat_t: {}x{} ^T @ {}x{}^T", n, k, b, us.cols());
     assert_eq!(out.shape(), (b, k), "matmat_t: output shape");
     out.data_mut().iter_mut().for_each(|x| *x = 0.0);
-    saxpy_rows_multi(a, us, 0, n, out);
+    simd::saxpy_rows_multi(level, a, us, 0..n, out);
 }
 
 /// Row-chunked parallel [`matmat_t_into`].
@@ -493,12 +443,18 @@ pub fn matmat_t_into(a: &Mat, us: &Mat, out: &mut Mat) {
 /// size (including the `n ≤ 1024` serial fall-through, which branches on
 /// `n` alone exactly like the vector variant).
 pub fn matmat_t_into_pooled(a: &Mat, us: &Mat, out: &mut Mat, pool: &Pool) {
+    matmat_t_into_pooled_at(simd::active_level(), a, us, out, pool);
+}
+
+/// [`matmat_t_into_pooled`] pinned to a dispatch arm.
+pub fn matmat_t_into_pooled_at(level: SimdLevel, a: &Mat, us: &Mat, out: &mut Mat, pool: &Pool) {
+    let level = level.sanitize();
     let (n, k) = a.shape();
     let b = us.rows();
     assert_eq!(us.cols(), n, "matmat_t: {}x{} ^T @ {}x{}^T", n, k, b, us.cols());
     assert_eq!(out.shape(), (b, k), "matmat_t: output shape");
     if n <= PAR_T_CHUNK {
-        matmat_t_into(a, us, out);
+        matmat_t_into_at(level, a, us, out);
         return;
     }
     let nchunks = n.div_ceil(PAR_T_CHUNK);
@@ -506,7 +462,7 @@ pub fn matmat_t_into_pooled(a: &Mat, us: &Mat, out: &mut Mat, pool: &Pool) {
     let tasks: Vec<(usize, &mut Mat)> = partials.iter_mut().enumerate().collect();
     pool.run_tasks(tasks, |(c, buf)| {
         let lo = c * PAR_T_CHUNK;
-        saxpy_rows_multi(a, us, lo, (lo + PAR_T_CHUNK).min(n), buf);
+        simd::saxpy_rows_multi(level, a, us, lo..(lo + PAR_T_CHUNK).min(n), buf);
     });
     // Deterministic single-thread reduce in chunk order, f64 accumulation
     // (per pair row, identical to the vector kernel's merge).
@@ -524,8 +480,20 @@ pub fn matmat_t_into_pooled(a: &Mat, us: &Mat, out: &mut Mat, pool: &Pool) {
 /// Column-blocked [`lse_matvec_into`]: `outs[k][i] = logsumexp_j(alpha *
 /// a[i, j] + ts[k][j])` for every pair `k`, streaming each row of `a`
 /// once for all B inputs. Bitwise identical per pair to the vector form
-/// (shared `lse_row` kernel).
+/// (shared `lse_row` kernel, on either arm).
 pub fn lse_matmat_into(a: &Mat, alpha: f64, ts: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+    lse_matmat_into_at(simd::active_level(), a, alpha, ts, outs);
+}
+
+/// [`lse_matmat_into`] pinned to a dispatch arm.
+pub fn lse_matmat_into_at(
+    level: SimdLevel,
+    a: &Mat,
+    alpha: f64,
+    ts: &[Vec<f64>],
+    outs: &mut [Vec<f64>],
+) {
+    let level = level.sanitize();
     assert_eq!(ts.len(), outs.len(), "lse_matmat: {} inputs vs {} outputs", ts.len(), outs.len());
     for (t, o) in ts.iter().zip(outs.iter()) {
         assert_eq!(a.cols(), t.len(), "lse_matmat: input length");
@@ -534,7 +502,7 @@ pub fn lse_matmat_into(a: &Mat, alpha: f64, ts: &[Vec<f64>], outs: &mut [Vec<f64
     for i in 0..a.rows() {
         let row = a.row(i);
         for (t, o) in ts.iter().zip(outs.iter_mut()) {
-            o[i] = lse_row(row, alpha, t);
+            o[i] = simd::lse_row(level, row, alpha, t);
         }
     }
 }
@@ -549,13 +517,26 @@ pub fn lse_matmat_into_pooled(
     outs: &mut [Vec<f64>],
     pool: &Pool,
 ) {
+    lse_matmat_into_pooled_at(simd::active_level(), a, alpha, ts, outs, pool);
+}
+
+/// [`lse_matmat_into_pooled`] pinned to a dispatch arm.
+pub fn lse_matmat_into_pooled_at(
+    level: SimdLevel,
+    a: &Mat,
+    alpha: f64,
+    ts: &[Vec<f64>],
+    outs: &mut [Vec<f64>],
+    pool: &Pool,
+) {
+    let level = level.sanitize();
     assert_eq!(ts.len(), outs.len(), "lse_matmat: {} inputs vs {} outputs", ts.len(), outs.len());
     for (t, o) in ts.iter().zip(outs.iter()) {
         assert_eq!(a.cols(), t.len(), "lse_matmat: input length");
         assert_eq!(a.rows(), o.len(), "lse_matmat: output length");
     }
     if pool.threads() <= 1 || a.rows() < 2 * PAR_LSE_ROW_CHUNK {
-        lse_matmat_into(a, alpha, ts, outs);
+        lse_matmat_into_at(level, a, alpha, ts, outs);
         return;
     }
     let tasks: Vec<(usize, usize, &mut [f64])> = outs
@@ -570,7 +551,7 @@ pub fn lse_matmat_into_pooled(
         let base = c * PAR_LSE_ROW_CHUNK;
         let t = &ts[p];
         for (i, o) in chunk.iter_mut().enumerate() {
-            *o = lse_row(a.row(base + i), alpha, t);
+            *o = simd::lse_row(level, a.row(base + i), alpha, t);
         }
     });
 }
@@ -580,6 +561,17 @@ pub fn lse_matmat_into_pooled(
 /// the two-pass reduction has no row-block to fuse across pairs serially;
 /// the pooled variant fuses at chunk granularity instead).
 pub fn lse_matmat_t_into(a: &Mat, alpha: f64, us: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+    lse_matmat_t_into_at(simd::active_level(), a, alpha, us, outs);
+}
+
+/// [`lse_matmat_t_into`] pinned to a dispatch arm.
+pub fn lse_matmat_t_into_at(
+    level: SimdLevel,
+    a: &Mat,
+    alpha: f64,
+    us: &[Vec<f64>],
+    outs: &mut [Vec<f64>],
+) {
     assert_eq!(
         us.len(),
         outs.len(),
@@ -588,7 +580,7 @@ pub fn lse_matmat_t_into(a: &Mat, alpha: f64, us: &[Vec<f64>], outs: &mut [Vec<f
         outs.len()
     );
     for (u, o) in us.iter().zip(outs.iter_mut()) {
-        lse_matvec_t_into(a, alpha, u, o);
+        lse_matvec_t_into_at(level, a, alpha, u, o);
     }
 }
 
@@ -607,6 +599,19 @@ pub fn lse_matmat_t_into_pooled(
     outs: &mut [Vec<f64>],
     pool: &Pool,
 ) {
+    lse_matmat_t_into_pooled_at(simd::active_level(), a, alpha, us, outs, pool);
+}
+
+/// [`lse_matmat_t_into_pooled`] pinned to a dispatch arm.
+pub fn lse_matmat_t_into_pooled_at(
+    level: SimdLevel,
+    a: &Mat,
+    alpha: f64,
+    us: &[Vec<f64>],
+    outs: &mut [Vec<f64>],
+    pool: &Pool,
+) {
+    let level = level.sanitize();
     let (n, k) = a.shape();
     assert_eq!(
         us.len(),
@@ -620,20 +625,19 @@ pub fn lse_matmat_t_into_pooled(
         assert_eq!(o.len(), k, "lse_matmat_t: output length");
     }
     if n <= PAR_LSE_T_CHUNK {
-        lse_matmat_t_into(a, alpha, us, outs);
+        lse_matmat_t_into_at(level, a, alpha, us, outs);
         return;
     }
     let b = us.len();
     let nchunks = n.div_ceil(PAR_LSE_T_CHUNK);
     // Partial (max, sumexp) pairs laid out pair-major: index p * nchunks + c.
-    let mut partials: Vec<(Vec<f64>, Vec<f64>)> = (0..b * nchunks)
-        .map(|_| (vec![f64::NEG_INFINITY; k], vec![0.0f64; k]))
-        .collect();
+    let mut partials: Vec<(Vec<f64>, Vec<f64>)> =
+        (0..b * nchunks).map(|_| (vec![f64::NEG_INFINITY; k], vec![0.0f64; k])).collect();
     let tasks: Vec<(usize, &mut (Vec<f64>, Vec<f64>))> = partials.iter_mut().enumerate().collect();
     pool.run_tasks(tasks, |(idx, (mx, sum))| {
         let (p, c) = (idx / nchunks, idx % nchunks);
         let lo = c * PAR_LSE_T_CHUNK;
-        lse_accum_rows(a, alpha, &us[p], lo, (lo + PAR_LSE_T_CHUNK).min(n), mx, sum);
+        simd::lse_accum_rows(level, a, alpha, &us[p], lo..(lo + PAR_LSE_T_CHUNK).min(n), mx, sum);
     });
     // Deterministic single-thread merge in chunk order, per pair.
     for (p, o) in outs.iter_mut().enumerate() {
@@ -661,7 +665,7 @@ pub fn lse_matmat_t_into_pooled(
 }
 
 /// Blocked `a @ b` (off the Sinkhorn hot path; used by Nyström, the GAN
-/// forward pass and tests).
+/// forward pass and tests — portable scalar on every dispatch arm).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.rows(), "matmul: {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
     let (m, k, n) = (a.rows(), a.cols(), b.cols());

@@ -1,0 +1,1014 @@
+//! Runtime-dispatched SIMD execution layer under the linalg core.
+//!
+//! Every hot kernel in `linalg::ops` — the per-row dot, the saxpy row
+//! blocks behind the transposed matvecs, the logsumexp row/column
+//! reductions, and the feature-evaluation dots — is implemented here
+//! twice:
+//!
+//! * a **portable scalar arm**: the pre-SIMD code, kept verbatim, and
+//! * an **AVX2+FMA arm**: `#[target_feature]` kernels using explicit
+//!   256-bit intrinsics, with the f64 `exp`/`ln` calls of the logsumexp
+//!   path replaced by the vectorised polynomials in
+//!   [`crate::special::vexp`].
+//!
+//! ## Dispatch matrix
+//!
+//! | target | detected | arm |
+//! |--------|----------|-----|
+//! | x86_64 | AVX2 **and** FMA | `Avx2Fma` |
+//! | x86_64 | otherwise        | `Scalar` |
+//! | other  | —                | `Scalar` |
+//!
+//! Detection runs once per process ([`active_level`], cached). The env
+//! override `LINEAR_SINKHORN_SIMD=scalar` forces the portable arm (for
+//! the CI scalar test leg and cross-machine-reproducible runs);
+//! `=avx2` requests the vector arm (honoured only when the CPU
+//! supports it); anything else auto-detects.
+//!
+//! ## Determinism contract
+//!
+//! Dispatch is process-global and every kernel's arithmetic order is
+//! fixed *within* an arm (fixed block sizes, fixed lane-reduction
+//! orders), so the repo's bitwise thread-count-determinism invariant
+//! holds **per arm**: on either arm, 1 thread and N threads produce
+//! identical bits (`rust/tests/parallel_equivalence.rs` asserts this on
+//! both). Across arms, results agree to the documented kernel
+//! tolerances (FMA keeps products unrounded and the lane reductions
+//! re-associate) — the arm is part of a run's reproducibility key, like
+//! the compiler version, and `LINEAR_SINKHORN_SIMD=scalar` pins it.
+//!
+//! The f32-lanes/f64-block-accumulate accuracy contract of the plain
+//! matvec (EXPERIMENTS.md §Perf) carries over unchanged: the AVX2
+//! `row_dot` keeps its partial sums in f32 lanes within each 64-element
+//! block and accumulates block totals in f64, exactly like the scalar
+//! arm — only the lane count per block differs (32 vs 8).
+
+use super::Mat;
+use std::ops::Range;
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+use crate::special::vexp;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// A dispatch arm of the SIMD core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar kernels (the pre-SIMD code, kept verbatim).
+    Scalar,
+    /// AVX2 + FMA kernels (x86_64 only, runtime-detected).
+    Avx2Fma,
+}
+
+impl SimdLevel {
+    /// Short label for benches and BENCH_*.json rows.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2Fma => "avx2+fma",
+        }
+    }
+
+    /// Demote to [`SimdLevel::Scalar`] when the CPU cannot run this arm.
+    ///
+    /// Every public `*_at` entry point sanitises its level argument once,
+    /// so explicitly constructing [`SimdLevel::Avx2Fma`] (tests, benches)
+    /// is always safe — on a machine without AVX2+FMA it just runs the
+    /// scalar arm.
+    pub fn sanitize(self) -> SimdLevel {
+        match self {
+            SimdLevel::Avx2Fma if !avx2_available() => SimdLevel::Scalar,
+            lvl => lvl,
+        }
+    }
+}
+
+/// Whether the AVX2+FMA arm can run on this machine.
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Whether the AVX2+FMA arm can run on this machine.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+
+/// The process-wide dispatch arm: runtime CPU detection, overridable via
+/// `LINEAR_SINKHORN_SIMD` (see the module docs). Cached on first call —
+/// changing the env var afterwards has no effect, which is what keeps
+/// the arm constant across every thread of a run.
+pub fn active_level() -> SimdLevel {
+    *LEVEL.get_or_init(|| match std::env::var("LINEAR_SINKHORN_SIMD").ok().as_deref() {
+        Some("scalar" | "portable" | "off" | "0") => SimdLevel::Scalar,
+        _ => {
+            if avx2_available() {
+                SimdLevel::Avx2Fma
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------
+// row_dot: one row of the blocked matvec accumulation scheme.
+// ---------------------------------------------------------------------
+
+/// One row dot of the blocked accumulation scheme (f32 partial lanes
+/// within 64-element blocks, f64 across blocks — EXPERIMENTS.md §Perf).
+/// Shared by the serial and pooled matvecs of both arms, so on a given
+/// arm every caller produces bitwise-identical rows.
+#[inline]
+pub(crate) fn row_dot(level: SimdLevel, row: &[f32], v: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), v.len());
+    match level {
+        SimdLevel::Scalar => row_dot_scalar(row, v),
+        SimdLevel::Avx2Fma => row_dot_avx2_call(row, v),
+    }
+}
+
+/// The portable arm, verbatim from the pre-SIMD `ops.rs`.
+fn row_dot_scalar(row: &[f32], v: &[f32]) -> f32 {
+    const BLOCK: usize = 64;
+    let mut acc = 0.0f64;
+    let mut rb = row.chunks_exact(BLOCK);
+    let mut vb = v.chunks_exact(BLOCK);
+    for (r64, v64) in (&mut rb).zip(&mut vb) {
+        // 8 independent f32 partials over the 64-element block.
+        let mut p = [0.0f32; 8];
+        for (rc, vc) in r64.chunks_exact(8).zip(v64.chunks_exact(8)) {
+            for l in 0..8 {
+                p[l] += rc[l] * vc[l];
+            }
+        }
+        acc += p.iter().map(|&x| x as f64).sum::<f64>();
+    }
+    for (r, w) in rb.remainder().iter().zip(vb.remainder()) {
+        acc += (*r as f64) * (*w as f64);
+    }
+    acc as f32
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn row_dot_avx2_call(row: &[f32], v: &[f32]) -> f32 {
+    // SAFETY: `Avx2Fma` levels are sanitised at the public entry points.
+    unsafe { row_dot_avx2(row, v) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn row_dot_avx2_call(row: &[f32], v: &[f32]) -> f32 {
+    row_dot_scalar(row, v)
+}
+
+/// Lane-order f64 sum of the 4 f64 lanes (fixed reduction tree).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum_pd(x: __m256d) -> f64 {
+    let lo = _mm256_castpd256_pd128(x);
+    let hi = _mm256_extractf128_pd::<1>(x);
+    let s = _mm_add_pd(lo, hi);
+    let sh = _mm_unpackhi_pd(s, s);
+    _mm_cvtsd_f64(_mm_add_sd(s, sh))
+}
+
+/// Widen 8 f32 lanes to 4 f64 lanes (low+high half pairs, fixed order).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn widen_ps_sum_pd(x: __m256) -> __m256d {
+    _mm256_add_pd(
+        _mm256_cvtps_pd(_mm256_castps256_ps128(x)),
+        _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(x)),
+    )
+}
+
+/// AVX2 arm: 4 independent 8-lane FMA accumulators per 64-element block
+/// (32 f32 partials), block totals accumulated in f64 on a fixed
+/// reduction tree — the same f32-lanes/f64-blocks contract as the scalar
+/// arm with more lanes and fused multiplies.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn row_dot_avx2(row: &[f32], v: &[f32]) -> f32 {
+    const BLOCK: usize = 64;
+    let n = row.len();
+    let nb = n - n % BLOCK;
+    let rp = row.as_ptr();
+    let vp = v.as_ptr();
+    let mut acc = 0.0f64;
+    let mut i = 0;
+    while i < nb {
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < BLOCK {
+            let o = i + c;
+            a0 = _mm256_fmadd_ps(_mm256_loadu_ps(rp.add(o)), _mm256_loadu_ps(vp.add(o)), a0);
+            a1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(rp.add(o + 8)),
+                _mm256_loadu_ps(vp.add(o + 8)),
+                a1,
+            );
+            a2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(rp.add(o + 16)),
+                _mm256_loadu_ps(vp.add(o + 16)),
+                a2,
+            );
+            a3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(rp.add(o + 24)),
+                _mm256_loadu_ps(vp.add(o + 24)),
+                a3,
+            );
+            c += 32;
+        }
+        let t01 = _mm256_add_pd(widen_ps_sum_pd(a0), widen_ps_sum_pd(a1));
+        let t23 = _mm256_add_pd(widen_ps_sum_pd(a2), widen_ps_sum_pd(a3));
+        acc += hsum_pd(_mm256_add_pd(t01, t23));
+        i += BLOCK;
+    }
+    while i < n {
+        acc += (*rp.add(i) as f64) * (*vp.add(i) as f64);
+        i += 1;
+    }
+    acc as f32
+}
+
+// ---------------------------------------------------------------------
+// saxpy_rows: the transposed-matvec row accumulation.
+// ---------------------------------------------------------------------
+
+/// Accumulate `out += a[rows]^T @ v[rows]` (`out` pre-zeroed or carrying
+/// a prior partial). The scalar arm is the 4-row saxpy blocking; the
+/// AVX2 arm widens to an 8-row × 8-column register-tiled microkernel.
+/// Shared by the serial and pooled transposed matvecs of both arms.
+pub(crate) fn saxpy_rows(
+    level: SimdLevel,
+    a: &Mat,
+    v: &[f32],
+    rows: Range<usize>,
+    out: &mut [f32],
+) {
+    match level {
+        SimdLevel::Scalar => saxpy_rows_scalar(a, v, rows, out),
+        SimdLevel::Avx2Fma => saxpy_rows_avx2_call(a, v, rows, out),
+    }
+}
+
+/// The portable arm, verbatim from the pre-SIMD `ops.rs`.
+fn saxpy_rows_scalar(a: &Mat, v: &[f32], rows: Range<usize>, out: &mut [f32]) {
+    let (lo, hi) = (rows.start, rows.end);
+    let k = a.cols();
+    let data = a.data();
+    let mut i = lo;
+    while i + 4 <= hi {
+        let (v0, v1, v2, v3) = (v[i], v[i + 1], v[i + 2], v[i + 3]);
+        let r0 = &data[i * k..(i + 1) * k];
+        let r1 = &data[(i + 1) * k..(i + 2) * k];
+        let r2 = &data[(i + 2) * k..(i + 3) * k];
+        let r3 = &data[(i + 3) * k..(i + 4) * k];
+        for j in 0..k {
+            out[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
+        }
+        i += 4;
+    }
+    while i < hi {
+        let vi = v[i];
+        if vi != 0.0 {
+            let row = a.row(i);
+            for (o, &r) in out.iter_mut().zip(row) {
+                *o += r * vi;
+            }
+        }
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn saxpy_rows_avx2_call(a: &Mat, v: &[f32], rows: Range<usize>, out: &mut [f32]) {
+    // SAFETY: `Avx2Fma` levels are sanitised at the public entry points.
+    unsafe { saxpy_rows_avx2(a, v, rows.start, rows.end, out) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn saxpy_rows_avx2_call(a: &Mat, v: &[f32], rows: Range<usize>, out: &mut [f32]) {
+    saxpy_rows_scalar(a, v, rows, out)
+}
+
+/// One 8-row × 8-column FMA tile step plus tails; the shared body of the
+/// vector and multi-pair AVX2 saxpy (identical per-output arithmetic is
+/// what keeps fused batch applies bitwise equal per pair).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn saxpy_block8_avx2(r: *const f32, k: usize, c: &[f32], op: *mut f32) {
+    let c0 = _mm256_set1_ps(c[0]);
+    let c1 = _mm256_set1_ps(c[1]);
+    let c2 = _mm256_set1_ps(c[2]);
+    let c3 = _mm256_set1_ps(c[3]);
+    let c4 = _mm256_set1_ps(c[4]);
+    let c5 = _mm256_set1_ps(c[5]);
+    let c6 = _mm256_set1_ps(c[6]);
+    let c7 = _mm256_set1_ps(c[7]);
+    let mut j = 0;
+    while j + 8 <= k {
+        let mut o = _mm256_loadu_ps(op.add(j));
+        o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(j)), c0, o);
+        o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(k + j)), c1, o);
+        o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(2 * k + j)), c2, o);
+        o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(3 * k + j)), c3, o);
+        o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(4 * k + j)), c4, o);
+        o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(5 * k + j)), c5, o);
+        o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(6 * k + j)), c6, o);
+        o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(7 * k + j)), c7, o);
+        _mm256_storeu_ps(op.add(j), o);
+        j += 8;
+    }
+    while j < k {
+        let mut s = *op.add(j);
+        s += *r.add(j) * c[0];
+        s += *r.add(k + j) * c[1];
+        s += *r.add(2 * k + j) * c[2];
+        s += *r.add(3 * k + j) * c[3];
+        s += *r.add(4 * k + j) * c[4];
+        s += *r.add(5 * k + j) * c[5];
+        s += *r.add(6 * k + j) * c[6];
+        s += *r.add(7 * k + j) * c[7];
+        *op.add(j) = s;
+        j += 1;
+    }
+}
+
+/// Single-row vectorised saxpy with the scalar arm's zero-skip, used for
+/// the < 8-row remainder (shared by vector and multi-pair forms).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn saxpy_row1_avx2(r: *const f32, k: usize, vi: f32, op: *mut f32) {
+    let c = _mm256_set1_ps(vi);
+    let mut j = 0;
+    while j + 8 <= k {
+        let o = _mm256_fmadd_ps(_mm256_loadu_ps(r.add(j)), c, _mm256_loadu_ps(op.add(j)));
+        _mm256_storeu_ps(op.add(j), o);
+        j += 8;
+    }
+    while j < k {
+        *op.add(j) += *r.add(j) * vi;
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn saxpy_rows_avx2(a: &Mat, v: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
+    let k = a.cols();
+    let data = a.data().as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = lo;
+    while i + 8 <= hi {
+        saxpy_block8_avx2(data.add(i * k), k, &v[i..i + 8], op);
+        i += 8;
+    }
+    while i < hi {
+        let vi = v[i];
+        if vi != 0.0 {
+            saxpy_row1_avx2(data.add(i * k), k, vi, op);
+        }
+        i += 1;
+    }
+}
+
+/// Multi-pair [`saxpy_rows`]: accumulate
+/// `outs.row(p) += a[rows]^T @ us.row(p)[rows]` for every pair row,
+/// streaming each row block of `a` once for all pairs. Per pair the
+/// block decomposition and arithmetic are exactly the vector kernel's on
+/// the same arm, so each output row is bitwise identical to it.
+pub(crate) fn saxpy_rows_multi(
+    level: SimdLevel,
+    a: &Mat,
+    us: &Mat,
+    rows: Range<usize>,
+    outs: &mut Mat,
+) {
+    match level {
+        SimdLevel::Scalar => saxpy_rows_multi_scalar(a, us, rows, outs),
+        SimdLevel::Avx2Fma => saxpy_rows_multi_avx2_call(a, us, rows, outs),
+    }
+}
+
+/// The portable arm, verbatim from the pre-SIMD `ops.rs`.
+fn saxpy_rows_multi_scalar(a: &Mat, us: &Mat, rows: Range<usize>, outs: &mut Mat) {
+    let (lo, hi) = (rows.start, rows.end);
+    let k = a.cols();
+    let b = us.rows();
+    let data = a.data();
+    let mut i = lo;
+    while i + 4 <= hi {
+        let r0 = &data[i * k..(i + 1) * k];
+        let r1 = &data[(i + 1) * k..(i + 2) * k];
+        let r2 = &data[(i + 2) * k..(i + 3) * k];
+        let r3 = &data[(i + 3) * k..(i + 4) * k];
+        for p in 0..b {
+            let (v0, v1, v2, v3) = (us[(p, i)], us[(p, i + 1)], us[(p, i + 2)], us[(p, i + 3)]);
+            let out = outs.row_mut(p);
+            for j in 0..k {
+                out[j] += r0[j] * v0 + r1[j] * v1 + r2[j] * v2 + r3[j] * v3;
+            }
+        }
+        i += 4;
+    }
+    while i < hi {
+        for p in 0..b {
+            let vi = us[(p, i)];
+            if vi != 0.0 {
+                let row = a.row(i);
+                for (o, &r) in outs.row_mut(p).iter_mut().zip(row) {
+                    *o += r * vi;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn saxpy_rows_multi_avx2_call(a: &Mat, us: &Mat, rows: Range<usize>, outs: &mut Mat) {
+    // SAFETY: `Avx2Fma` levels are sanitised at the public entry points.
+    unsafe { saxpy_rows_multi_avx2(a, us, rows.start, rows.end, outs) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn saxpy_rows_multi_avx2_call(a: &Mat, us: &Mat, rows: Range<usize>, outs: &mut Mat) {
+    saxpy_rows_multi_scalar(a, us, rows, outs)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn saxpy_rows_multi_avx2(a: &Mat, us: &Mat, lo: usize, hi: usize, outs: &mut Mat) {
+    let k = a.cols();
+    let b = us.rows();
+    let data = a.data().as_ptr();
+    let mut i = lo;
+    while i + 8 <= hi {
+        let r = data.add(i * k);
+        for p in 0..b {
+            let coeffs = &us.row(p)[i..i + 8];
+            saxpy_block8_avx2(r, k, coeffs, outs.row_mut(p).as_mut_ptr());
+        }
+        i += 8;
+    }
+    while i < hi {
+        for p in 0..b {
+            let vi = us.row(p)[i];
+            if vi != 0.0 {
+                saxpy_row1_avx2(data.add(i * k), k, vi, outs.row_mut(p).as_mut_ptr());
+            }
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// lse_row / lse_accum_rows: the log-domain reductions.
+// ---------------------------------------------------------------------
+
+/// One row of the log-space matvec:
+/// `logsumexp_j(alpha * row[j] + t[j])`, two passes (max, then sum of
+/// shifted exps) entirely in f64. Returns `-inf` when every term is
+/// `-inf`. The AVX2 arm evaluates the shifted exponentials with
+/// [`vexp::exp4`] (≤ 2 ulp — see `special/vexp.rs`) on 4 lanes with a
+/// fixed lane-reduction order.
+#[inline]
+pub(crate) fn lse_row(level: SimdLevel, row: &[f32], alpha: f64, t: &[f64]) -> f64 {
+    debug_assert_eq!(row.len(), t.len());
+    match level {
+        SimdLevel::Scalar => lse_row_scalar(row, alpha, t),
+        SimdLevel::Avx2Fma => lse_row_avx2_call(row, alpha, t),
+    }
+}
+
+/// The portable arm, verbatim from the pre-SIMD `ops.rs`.
+fn lse_row_scalar(row: &[f32], alpha: f64, t: &[f64]) -> f64 {
+    let mut m = f64::NEG_INFINITY;
+    for (&aij, &tj) in row.iter().zip(t) {
+        let v = alpha * aij as f64 + tj;
+        if v > m {
+            m = v;
+        }
+    }
+    if !m.is_finite() {
+        return m;
+    }
+    let mut s = 0.0f64;
+    for (&aij, &tj) in row.iter().zip(t) {
+        s += (alpha * aij as f64 + tj - m).exp();
+    }
+    m + s.ln()
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn lse_row_avx2_call(row: &[f32], alpha: f64, t: &[f64]) -> f64 {
+    // SAFETY: `Avx2Fma` levels are sanitised at the public entry points.
+    unsafe { lse_row_avx2(row, alpha, t) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn lse_row_avx2_call(row: &[f32], alpha: f64, t: &[f64]) -> f64 {
+    lse_row_scalar(row, alpha, t)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn lse_row_avx2(row: &[f32], alpha: f64, t: &[f64]) -> f64 {
+    let k = row.len();
+    let k4 = k - k % 4;
+    let rp = row.as_ptr();
+    let tp = t.as_ptr();
+    let av = _mm256_set1_pd(alpha);
+    // Pass 1: max of alpha*a + t; both passes compute the terms with the
+    // same fused multiply-add, so the shift in pass 2 is never positive.
+    let mut m = f64::NEG_INFINITY;
+    let mut j = 0;
+    if k4 > 0 {
+        let mut m4 = _mm256_set1_pd(f64::NEG_INFINITY);
+        while j < k4 {
+            let r4 = _mm256_cvtps_pd(_mm_loadu_ps(rp.add(j)));
+            let val = _mm256_fmadd_pd(av, r4, _mm256_loadu_pd(tp.add(j)));
+            m4 = _mm256_max_pd(m4, val);
+            j += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), m4);
+        for &l in &lanes {
+            if l > m {
+                m = l;
+            }
+        }
+    }
+    while j < k {
+        let val = alpha * (*rp.add(j) as f64) + *tp.add(j);
+        if val > m {
+            m = val;
+        }
+        j += 1;
+    }
+    if !m.is_finite() {
+        return m;
+    }
+    // Pass 2: sum of shifted exponentials, 4-lane partials reduced in
+    // fixed lane order, remainder through libm (index-determined, so
+    // still bitwise reproducible).
+    let mv = _mm256_set1_pd(m);
+    let mut s4 = _mm256_setzero_pd();
+    j = 0;
+    while j < k4 {
+        let r4 = _mm256_cvtps_pd(_mm_loadu_ps(rp.add(j)));
+        let val = _mm256_fmadd_pd(av, r4, _mm256_loadu_pd(tp.add(j)));
+        s4 = _mm256_add_pd(s4, vexp::exp4(_mm256_sub_pd(val, mv)));
+        j += 4;
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), s4);
+    let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+    while j < k {
+        s += (alpha * (*rp.add(j) as f64) + *tp.add(j) - m).exp();
+        j += 1;
+    }
+    m + s.ln()
+}
+
+/// Per-column (max, sum-of-shifted-exps) accumulation over `rows`, the
+/// building block both transposed logsumexp variants share. `mx`/`sum`
+/// must come in as `(-inf, 0.0)` per column (or carry a prior chunk's
+/// partial on the same arm).
+pub(crate) fn lse_accum_rows(
+    level: SimdLevel,
+    a: &Mat,
+    alpha: f64,
+    u: &[f64],
+    rows: Range<usize>,
+    mx: &mut [f64],
+    sum: &mut [f64],
+) {
+    match level {
+        SimdLevel::Scalar => lse_accum_rows_scalar(a, alpha, u, rows, mx, sum),
+        SimdLevel::Avx2Fma => lse_accum_rows_avx2_call(a, alpha, u, rows, mx, sum),
+    }
+}
+
+/// The portable arm, verbatim from the pre-SIMD `ops.rs`.
+fn lse_accum_rows_scalar(
+    a: &Mat,
+    alpha: f64,
+    u: &[f64],
+    rows: Range<usize>,
+    mx: &mut [f64],
+    sum: &mut [f64],
+) {
+    // Pass 1: per-column max over the row range.
+    for i in rows.clone() {
+        let ui = u[i];
+        for (m, &aij) in mx.iter_mut().zip(a.row(i)) {
+            let v = alpha * aij as f64 + ui;
+            if v > *m {
+                *m = v;
+            }
+        }
+    }
+    // Pass 2: shifted exponentials (columns whose max is -inf stay 0).
+    for i in rows {
+        let ui = u[i];
+        for ((s, &m), &aij) in sum.iter_mut().zip(mx.iter()).zip(a.row(i)) {
+            if m.is_finite() {
+                *s += (alpha * aij as f64 + ui - m).exp();
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn lse_accum_rows_avx2_call(
+    a: &Mat,
+    alpha: f64,
+    u: &[f64],
+    rows: Range<usize>,
+    mx: &mut [f64],
+    sum: &mut [f64],
+) {
+    // SAFETY: `Avx2Fma` levels are sanitised at the public entry points.
+    unsafe { lse_accum_rows_avx2(a, alpha, u, rows.start, rows.end, mx, sum) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn lse_accum_rows_avx2_call(
+    a: &Mat,
+    alpha: f64,
+    u: &[f64],
+    rows: Range<usize>,
+    mx: &mut [f64],
+    sum: &mut [f64],
+) {
+    lse_accum_rows_scalar(a, alpha, u, rows, mx, sum)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn lse_accum_rows_avx2(
+    a: &Mat,
+    alpha: f64,
+    u: &[f64],
+    lo: usize,
+    hi: usize,
+    mx: &mut [f64],
+    sum: &mut [f64],
+) {
+    let k = a.cols();
+    let k4 = k - k % 4;
+    let data = a.data().as_ptr();
+    let av = _mm256_set1_pd(alpha);
+    let mp = mx.as_mut_ptr();
+    // Pass 1: per-column max, 4 columns per step; the same FMA term is
+    // recomputed in pass 2 so shifts stay <= 0.
+    for i in lo..hi {
+        let ui = _mm256_set1_pd(u[i]);
+        let rp = data.add(i * k);
+        let mut j = 0;
+        while j < k4 {
+            let val = _mm256_fmadd_pd(av, _mm256_cvtps_pd(_mm_loadu_ps(rp.add(j))), ui);
+            _mm256_storeu_pd(mp.add(j), _mm256_max_pd(_mm256_loadu_pd(mp.add(j)), val));
+            j += 4;
+        }
+        while j < k {
+            let val = alpha * (*rp.add(j) as f64) + u[i];
+            if val > *mp.add(j) {
+                *mp.add(j) = val;
+            }
+            j += 1;
+        }
+    }
+    // Pass 2: shifted exponentials via exp4; columns whose max is -inf
+    // are masked to 0 (the scalar arm's `is_finite` guard — the max can
+    // never be +inf or NaN here, terms are finite or -inf).
+    let sp = sum.as_mut_ptr();
+    let ninf = _mm256_set1_pd(f64::NEG_INFINITY);
+    for i in lo..hi {
+        let ui = _mm256_set1_pd(u[i]);
+        let rp = data.add(i * k);
+        let mut j = 0;
+        while j < k4 {
+            let m4 = _mm256_loadu_pd(mp.add(j));
+            let val = _mm256_fmadd_pd(av, _mm256_cvtps_pd(_mm_loadu_ps(rp.add(j))), ui);
+            let e = vexp::exp4(_mm256_sub_pd(val, m4));
+            let finite = _mm256_cmp_pd::<_CMP_GT_OQ>(m4, ninf);
+            let e = _mm256_and_pd(e, finite);
+            _mm256_storeu_pd(sp.add(j), _mm256_add_pd(_mm256_loadu_pd(sp.add(j)), e));
+            j += 4;
+        }
+        while j < k {
+            if (*mp.add(j)).is_finite() {
+                *sp.add(j) += (alpha * (*rp.add(j) as f64) + u[i] - *mp.add(j)).exp();
+            }
+            j += 1;
+        }
+    }
+}
+
+/// The transposed logsumexp's finishing pass:
+/// `out[j] = mx[j] + ln(sum[j])` per column, `-inf` max columns passed
+/// through unchanged. The AVX2 arm evaluates the logarithm with the
+/// 4-lane `ln4` polynomial (`special/vexp.rs`, ≤ 2 ulp); the scalar arm
+/// is libm, verbatim from the pre-SIMD `ops.rs`. (The pooled variants'
+/// cross-chunk merges stay scalar on every arm — they are the
+/// thread-invariance anchor and run once per k, off the per-row path.)
+pub(crate) fn lse_finish(level: SimdLevel, mx: &[f64], sum: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(mx.len(), out.len());
+    debug_assert_eq!(sum.len(), out.len());
+    match level {
+        SimdLevel::Scalar => lse_finish_scalar(mx, sum, out),
+        SimdLevel::Avx2Fma => lse_finish_avx2_call(mx, sum, out),
+    }
+}
+
+fn lse_finish_scalar(mx: &[f64], sum: &[f64], out: &mut [f64]) {
+    for ((o, &m), &s) in out.iter_mut().zip(mx).zip(sum) {
+        *o = if m.is_finite() { m + s.ln() } else { m };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn lse_finish_avx2_call(mx: &[f64], sum: &[f64], out: &mut [f64]) {
+    // SAFETY: `Avx2Fma` levels are sanitised at the public entry points.
+    unsafe { lse_finish_avx2(mx, sum, out) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn lse_finish_avx2_call(mx: &[f64], sum: &[f64], out: &mut [f64]) {
+    lse_finish_scalar(mx, sum, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn lse_finish_avx2(mx: &[f64], sum: &[f64], out: &mut [f64]) {
+    let k = out.len();
+    let k4 = k - k % 4;
+    let mp = mx.as_ptr();
+    let sp = sum.as_ptr();
+    let op = out.as_mut_ptr();
+    let ninf = _mm256_set1_pd(f64::NEG_INFINITY);
+    let mut j = 0;
+    while j < k4 {
+        let m4 = _mm256_loadu_pd(mp.add(j));
+        let res = _mm256_add_pd(m4, vexp::ln4(_mm256_loadu_pd(sp.add(j))));
+        // Columns whose max is -inf carry m through unchanged (the max
+        // can never be +inf or NaN here — terms are finite or -inf).
+        let finite = _mm256_cmp_pd::<_CMP_GT_OQ>(m4, ninf);
+        _mm256_storeu_pd(op.add(j), _mm256_blendv_pd(m4, res, finite));
+        j += 4;
+    }
+    while j < k {
+        let m = *mp.add(j);
+        *op.add(j) = if m.is_finite() { m + (*sp.add(j)).ln() } else { m };
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// dot_f32: the plain feature-evaluation dot.
+// ---------------------------------------------------------------------
+
+/// Plain f32 dot product — the inner loop of the feature maps'
+/// `eval_into` (anchor · point per feature). The scalar arm is the
+/// sequential f32 sum the feature maps always used; the AVX2 arm runs an
+/// 8-lane FMA accumulator with a fixed lane-order reduction. The level
+/// is sanitised here (this is a public entry point, unlike the
+/// `pub(crate)` kernels above whose callers sanitise at the `*_at`
+/// boundary) — the check is one cached-feature lookup against a dot.
+#[inline]
+pub fn dot_f32(level: SimdLevel, x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    match level.sanitize() {
+        SimdLevel::Scalar => dot_f32_scalar(x, y),
+        SimdLevel::Avx2Fma => dot_f32_avx2_call(x, y),
+    }
+}
+
+fn dot_f32_scalar(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(&a, &b)| a * b).sum::<f32>()
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_f32_avx2_call(x: &[f32], y: &[f32]) -> f32 {
+    // SAFETY: callers pass sanitised levels (see `dot_f32` docs).
+    unsafe { dot_f32_avx2(x, y) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn dot_f32_avx2_call(x: &[f32], y: &[f32]) -> f32 {
+    dot_f32_scalar(x, y)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_f32_avx2(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len();
+    let n8 = n - n % 8;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i < n8 {
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc);
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    while i < n {
+        s += *xp.add(i) * *yp.add(i);
+        i += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn level_label_and_sanitize() {
+        assert_eq!(SimdLevel::Scalar.label(), "scalar");
+        assert_eq!(SimdLevel::Avx2Fma.label(), "avx2+fma");
+        assert_eq!(SimdLevel::Scalar.sanitize(), SimdLevel::Scalar);
+        if !avx2_available() {
+            assert_eq!(SimdLevel::Avx2Fma.sanitize(), SimdLevel::Scalar);
+        } else {
+            assert_eq!(SimdLevel::Avx2Fma.sanitize(), SimdLevel::Avx2Fma);
+        }
+        // active_level never reports an arm the machine cannot run.
+        assert_eq!(active_level(), active_level().sanitize());
+    }
+
+    #[test]
+    fn row_dot_arms_agree_at_lane_boundaries() {
+        let mut rng = Rng::seed_from(1);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 130, 200] {
+            let row = rand_vec(&mut rng, n);
+            let v = rand_vec(&mut rng, n);
+            let scalar = row_dot(SimdLevel::Scalar, &row, &v);
+            let simd = row_dot(SimdLevel::Avx2Fma.sanitize(), &row, &v);
+            // Summation error scales with the absolute term sum, not the
+            // (possibly cancelling) signed result — normalise by it.
+            let scale: f64 =
+                row.iter().zip(&v).map(|(&a, &b)| ((a * b).abs()) as f64).sum::<f64>().max(1.0);
+            assert!(
+                ((scalar as f64) - (simd as f64)).abs() / scale <= 1e-5,
+                "n={n}: scalar {scalar} vs simd {simd}"
+            );
+        }
+    }
+
+    #[test]
+    fn saxpy_arms_agree_and_handle_remainders() {
+        let mut rng = Rng::seed_from(2);
+        for (n, k) in [(0usize, 5usize), (1, 3), (7, 9), (8, 8), (9, 17), (23, 33), (40, 1)] {
+            let a = Mat::from_fn(n, k, |_, _| rng.normal_f32());
+            let v = rand_vec(&mut rng, n);
+            let mut scalar = vec![0.0f32; k];
+            saxpy_rows(SimdLevel::Scalar, &a, &v, 0..n, &mut scalar);
+            let mut simd = vec![0.0f32; k];
+            saxpy_rows(SimdLevel::Avx2Fma.sanitize(), &a, &v, 0..n, &mut simd);
+            for j in 0..k {
+                let scale: f64 = (0..n)
+                    .map(|i| ((a[(i, j)] * v[i]).abs()) as f64)
+                    .sum::<f64>()
+                    .max(1.0);
+                assert!(
+                    ((scalar[j] as f64) - (simd[j] as f64)).abs() / scale <= 1e-5,
+                    "({n},{k}) col {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn saxpy_multi_is_bitwise_vector_kernel_per_pair_on_both_arms() {
+        let mut rng = Rng::seed_from(3);
+        for level in [SimdLevel::Scalar, SimdLevel::Avx2Fma.sanitize()] {
+            for (n, k, b) in [(9usize, 7usize, 3usize), (16, 8, 2), (17, 12, 4)] {
+                let a = Mat::from_fn(n, k, |_, _| rng.normal_f32());
+                let us = Mat::from_fn(b, n, |_, _| rng.normal_f32());
+                let mut fused = Mat::zeros(b, k);
+                saxpy_rows_multi(level, &a, &us, 0..n, &mut fused);
+                for p in 0..b {
+                    let mut want = vec![0.0f32; k];
+                    saxpy_rows(level, &a, us.row(p), 0..n, &mut want);
+                    for j in 0..k {
+                        assert_eq!(
+                            fused[(p, j)].to_bits(),
+                            want[j].to_bits(),
+                            "{} ({n},{k},{b}) pair {p} col {j}",
+                            level.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lse_row_arms_agree() {
+        let mut rng = Rng::seed_from(4);
+        for k in [0usize, 1, 3, 4, 5, 7, 8, 9, 16, 17, 33, 100] {
+            let row = rand_vec(&mut rng, k);
+            let t: Vec<f64> = (0..k).map(|_| rng.normal_f32() as f64 * 5.0).collect();
+            let alpha = -1.7;
+            let scalar = lse_row(SimdLevel::Scalar, &row, alpha, &t);
+            let simd = lse_row(SimdLevel::Avx2Fma.sanitize(), &row, alpha, &t);
+            if k == 0 {
+                assert_eq!(scalar, f64::NEG_INFINITY);
+                assert_eq!(simd, f64::NEG_INFINITY);
+                continue;
+            }
+            let scale = scalar.abs().max(1.0);
+            assert!((scalar - simd).abs() / scale <= 1e-12, "k={k}: {scalar} vs {simd}");
+        }
+    }
+
+    #[test]
+    fn lse_row_neg_inf_inputs_on_both_arms() {
+        let row = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let t = [f64::NEG_INFINITY; 5];
+        for level in [SimdLevel::Scalar, SimdLevel::Avx2Fma.sanitize()] {
+            assert_eq!(lse_row(level, &row, 1.0, &t), f64::NEG_INFINITY, "{}", level.label());
+            // A single finite term dominates regardless of -inf lanes.
+            let mut t1 = t;
+            t1[3] = 2.0;
+            let got = lse_row(level, &row, 1.0, &t1);
+            assert!((got - 6.0).abs() < 1e-12, "{}: {got}", level.label());
+        }
+    }
+
+    #[test]
+    fn lse_accum_arms_agree() {
+        let mut rng = Rng::seed_from(5);
+        for (n, k) in [(1usize, 1usize), (5, 4), (9, 7), (16, 16), (33, 13)] {
+            let a = Mat::from_fn(n, k, |_, _| rng.normal_f32());
+            let u: Vec<f64> = (0..n).map(|_| rng.normal_f32() as f64 * 5.0).collect();
+            let alpha = 0.8;
+            let mut mx_s = vec![f64::NEG_INFINITY; k];
+            let mut sum_s = vec![0.0f64; k];
+            lse_accum_rows(SimdLevel::Scalar, &a, alpha, &u, 0..n, &mut mx_s, &mut sum_s);
+            let mut mx_v = vec![f64::NEG_INFINITY; k];
+            let mut sum_v = vec![0.0f64; k];
+            lse_accum_rows(
+                SimdLevel::Avx2Fma.sanitize(),
+                &a,
+                alpha,
+                &u,
+                0..n,
+                &mut mx_v,
+                &mut sum_v,
+            );
+            for j in 0..k {
+                assert!((mx_s[j] - mx_v[j]).abs() <= 1e-12, "({n},{k}) max col {j}");
+                assert!(
+                    (sum_s[j] - sum_v[j]).abs() / sum_s[j].abs().max(1.0) <= 1e-12,
+                    "({n},{k}) sum col {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_f32_arms_agree() {
+        let mut rng = Rng::seed_from(6);
+        for n in [0usize, 1, 7, 8, 9, 16, 31, 64, 100] {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            let scalar = dot_f32(SimdLevel::Scalar, &x, &y);
+            let simd = dot_f32(SimdLevel::Avx2Fma.sanitize(), &x, &y);
+            let scale: f64 =
+                x.iter().zip(&y).map(|(&a, &b)| ((a * b).abs()) as f64).sum::<f64>().max(1.0);
+            assert!(
+                ((scalar as f64) - (simd as f64)).abs() / scale <= 1e-5,
+                "n={n}: {scalar} vs {simd}"
+            );
+        }
+    }
+}

@@ -16,6 +16,12 @@
 //! non-finite scalings (`sinkhorn.stabilize`); the tradeoff benches use
 //! the dense instance as the small-eps ground truth. The eps sweep in
 //! EXPERIMENTS.md §Stabilisation records where each path lives.
+//!
+//! The per-entry f64 `exp` that prices every update runs on the SIMD
+//! core's dispatched kernels: the AVX2+FMA arm evaluates it through the
+//! ≤ 2 ulp vectorised polynomial (`special/vexp.rs`), the scalar arm
+//! through libm — per-arm thread-count determinism and the solver's
+//! numeric contract are unchanged (EXPERIMENTS.md §Perf, "SIMD core").
 
 use crate::config::SinkhornConfig;
 use crate::error::{Error, Result};

@@ -18,6 +18,15 @@
 //! with fused mat-mat kernel applies ([`solve_batch`],
 //! [`sinkhorn_divergence_batch`]) — bitwise identical to B sequential
 //! solves, per pair, at any thread count.
+//!
+//! All of these solvers inherit their numeric contract from the SIMD
+//! core underneath ([`crate::linalg::simd`]): kernel applies dispatch at
+//! runtime between an AVX2+FMA arm and the portable scalar arm, results
+//! are bitwise thread-count-deterministic *per arm*, and the arms agree
+//! to the documented kernel tolerances (~1e-5 relative on f32 applies,
+//! ~1e-12 on the f64 log-domain reductions) — force
+//! `LINEAR_SINKHORN_SIMD=scalar` to pin solver output across machines
+//! (EXPERIMENTS.md §Perf, "SIMD core").
 
 mod accelerated;
 mod batch;

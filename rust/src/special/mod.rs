@@ -2,7 +2,11 @@
 //!
 //! Lemma 1 needs the Lambert W function for
 //! `q = eps^{-1} R^2 / (2 d W0(eps^{-1} R^2 / d))`; the synthetic data
-//! generators and test oracles use `erf` / `log_gamma`.
+//! generators and test oracles use `erf` / `log_gamma`. The [`vexp`]
+//! submodule holds the SIMD core's vectorised `exp`/`ln` (documented
+//! ≤ 2 ulp contract) behind the log-domain Sinkhorn hot path.
+
+pub mod vexp;
 
 /// Principal branch W0 of the Lambert W function for `z >= 0`.
 ///

@@ -1,0 +1,532 @@
+//! Vectorised elementwise `exp` / `ln` — the transcendental layer of the
+//! SIMD core (EXPERIMENTS.md §Perf, "SIMD core").
+//!
+//! The log-domain Sinkhorn path pays one f64 `exp` per kernel entry per
+//! update (`lse_matvec*` / `lse_matmat*` in [`crate::linalg`], and the
+//! nested-logsumexp applies of the factored kernel), plus a `ln` per
+//! output column in the transposed reduction's finish. This module
+//! replaces those libm calls on the AVX2+FMA dispatch arm with 4-lane
+//! polynomial evaluations (`exp4` / `ln4`, Cephes `exp`/`log` rational
+//! approximations carried over verbatim to `__m256d` — `exp4` inside
+//! `lse_row`/`lse_accum_rows`, `ln4` inside `lse_finish`), and exposes
+//! safe slice front-ends ([`vexp_at`], [`vln_at`],
+//! [`exp_clamped_f32_at`]) for the scalar-vs-SIMD agreement tests and
+//! the feature-map exponentials.
+//!
+//! ## Accuracy contract
+//!
+//! * **`exp`**: relative error ≤ 2 ulp on `[-708.39, 709.4]`. Arguments
+//!   below `-708.39` return `+0.0` (results that would be subnormal
+//!   flush to zero — the shifted logsumexp feeds arguments `≤ 0` whose
+//!   dominant term is `exp(0) = 1`, so a dropped `1e-308` straggler is
+//!   far below f64 rounding of the sum); arguments above `~709.4`
+//!   return `+inf` (true overflow is at `709.78`; the window in between
+//!   overflows one `exp2` step early). `exp(0) = 1` exactly; `-inf → 0`,
+//!   `+inf → +inf`, `NaN → NaN`.
+//! * **`ln`**: relative error ≤ 2 ulp of the result over the full
+//!   positive range, including subnormal inputs (rescaled by `2^54`
+//!   before reduction) and inputs near 1 (the reduction `m = x - 1` is
+//!   exact there, so the relative contract survives the zero crossing).
+//!   `ln(1) = 0` exactly; `0 → -inf`, negative and `NaN → NaN`,
+//!   `+inf → +inf`.
+//!
+//! The **scalar arm is libm** (`f64::exp` / `f64::ln`), kept verbatim so
+//! forcing `LINEAR_SINKHORN_SIMD=scalar` reproduces the pre-SIMD
+//! numbers bitwise. Cross-arm agreement is therefore bounded by the sum
+//! of both contracts (≲ 3 ulp) — asserted in the tests below and relied
+//! on by the documented scalar-vs-SIMD tolerances in
+//! `rust/tests/parallel_equivalence.rs`.
+
+use crate::linalg::simd::SimdLevel;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+// --- Cephes `exp` constants (shortest round-trip f64 spellings). ---
+#[cfg(target_arch = "x86_64")]
+const EXP_P0: f64 = 0.000_126_177_193_074_810_58;
+#[cfg(target_arch = "x86_64")]
+const EXP_P1: f64 = 0.030_299_440_770_744_195;
+#[cfg(target_arch = "x86_64")]
+const EXP_P2: f64 = 1.0;
+#[cfg(target_arch = "x86_64")]
+const EXP_Q0: f64 = 3.001_985_051_386_644_6e-6;
+#[cfg(target_arch = "x86_64")]
+const EXP_Q1: f64 = 0.002_524_483_403_496_841;
+#[cfg(target_arch = "x86_64")]
+const EXP_Q2: f64 = 0.227_265_548_208_155_03;
+#[cfg(target_arch = "x86_64")]
+const EXP_Q3: f64 = 2.0;
+/// `ln 2` split hi/lo for an exact argument reduction.
+#[cfg(target_arch = "x86_64")]
+const LN2_HI: f64 = 0.693_145_751_953_125;
+#[cfg(target_arch = "x86_64")]
+const LN2_LO: f64 = 1.428_606_820_309_417_3e-6;
+/// Overflow / flush-to-zero cutoffs (Cephes MAXLOG / MINLOG).
+#[cfg(target_arch = "x86_64")]
+const EXP_HI: f64 = 709.782_712_893_384;
+#[cfg(target_arch = "x86_64")]
+const EXP_LO: f64 = -708.396_418_532_264_1;
+
+// --- Cephes `log` constants. ---
+#[cfg(target_arch = "x86_64")]
+const LOG_P: [f64; 6] = [
+    0.000_101_875_663_804_580_93,
+    0.497_494_994_976_747,
+    4.705_791_198_788_817,
+    14.498_922_534_161_093,
+    17.936_867_850_781_983,
+    7.708_387_337_558_854,
+];
+#[cfg(target_arch = "x86_64")]
+const LOG_Q: [f64; 5] = [
+    11.287_358_718_916_746,
+    45.227_914_583_753_225,
+    82.987_526_691_277_67,
+    71.154_475_061_856_39,
+    23.125_162_012_676_533,
+];
+/// `ln 2` split for the log reconstruction (coarse + correction).
+#[cfg(target_arch = "x86_64")]
+const LOG_LN2_COARSE: f64 = 0.693_359_375;
+#[cfg(target_arch = "x86_64")]
+const LOG_LN2_CORR: f64 = 0.000_212_194_440_054_690_57;
+#[cfg(target_arch = "x86_64")]
+const TWO_54: f64 = 18_014_398_509_481_984.0; // 2^54, exact
+
+/// 4-lane `exp` (see the module accuracy contract).
+///
+/// # Safety
+///
+/// Requires AVX2 + FMA; callers must have verified
+/// [`crate::linalg::simd::avx2_available`] (or hold a
+/// [`SimdLevel::Avx2Fma`] produced by the runtime dispatcher).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn exp4(x: __m256d) -> __m256d {
+    // n = floor(x * log2(e) + 1/2): the power-of-two exponent.
+    let n = _mm256_floor_pd(_mm256_fmadd_pd(
+        x,
+        _mm256_set1_pd(std::f64::consts::LOG2_E),
+        _mm256_set1_pd(0.5),
+    ));
+    // r = x - n ln2, reduced with a split constant so r is nearly exact.
+    let mut r = _mm256_fnmadd_pd(n, _mm256_set1_pd(LN2_HI), x);
+    r = _mm256_fnmadd_pd(n, _mm256_set1_pd(LN2_LO), r);
+    let rr = _mm256_mul_pd(r, r);
+    // exp(r) = 1 + 2 r P(r^2) / (Q(r^2) - r P(r^2)), |r| <= ln2/2.
+    let mut p = _mm256_set1_pd(EXP_P0);
+    p = _mm256_fmadd_pd(p, rr, _mm256_set1_pd(EXP_P1));
+    p = _mm256_fmadd_pd(p, rr, _mm256_set1_pd(EXP_P2));
+    let px = _mm256_mul_pd(r, p);
+    let mut q = _mm256_set1_pd(EXP_Q0);
+    q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(EXP_Q1));
+    q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(EXP_Q2));
+    q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(EXP_Q3));
+    let e = _mm256_div_pd(px, _mm256_sub_pd(q, px));
+    let y = _mm256_fmadd_pd(e, _mm256_set1_pd(2.0), _mm256_set1_pd(1.0));
+    // Scale by 2^n through the exponent bits: n is clamped to [-1022,
+    // 1024] by the EXP_LO/EXP_HI masks below, so `(n + 1023) << 52` is a
+    // valid (or deliberately infinite) exponent field.
+    let n64 = _mm256_cvtepi32_epi64(_mm256_cvtpd_epi32(n));
+    let bias = _mm256_add_epi64(n64, _mm256_set1_epi64x(1023));
+    let pow = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(bias));
+    let mut out = _mm256_mul_pd(y, pow);
+    // Special cases, applied last so they win over the garbage the core
+    // computes for out-of-range lanes.
+    let lo = _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_set1_pd(EXP_LO));
+    out = _mm256_blendv_pd(out, _mm256_setzero_pd(), lo);
+    let hi = _mm256_cmp_pd::<_CMP_GT_OQ>(x, _mm256_set1_pd(EXP_HI));
+    out = _mm256_blendv_pd(out, _mm256_set1_pd(f64::INFINITY), hi);
+    let nan = _mm256_cmp_pd::<_CMP_UNORD_Q>(x, x);
+    _mm256_blendv_pd(out, x, nan)
+}
+
+/// 4-lane `ln` (see the module accuracy contract).
+///
+/// # Safety
+///
+/// Same requirement as [`exp4`]: AVX2 + FMA must be available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn ln4(x: __m256d) -> __m256d {
+    let one = _mm256_set1_pd(1.0);
+    // Rescale subnormal inputs into the normal range (x * 2^54, e -= 54);
+    // lanes with x <= 0 also match but are overwritten by the masks below.
+    let tiny = _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_set1_pd(f64::MIN_POSITIVE));
+    let xs = _mm256_blendv_pd(x, _mm256_mul_pd(x, _mm256_set1_pd(TWO_54)), tiny);
+    let e_adj = _mm256_and_pd(tiny, _mm256_set1_pd(54.0));
+    // frexp: biased exponent -> e, mantissa -> m in [1/2, 1).
+    let bits = _mm256_castpd_si256(xs);
+    let expo = _mm256_and_si256(_mm256_srli_epi64::<52>(bits), _mm256_set1_epi64x(0x7ff));
+    let packed = _mm256_permutevar8x32_epi32(expo, _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0));
+    let mut e = _mm256_cvtepi32_pd(_mm256_castsi256_si128(packed));
+    e = _mm256_sub_pd(e, _mm256_set1_pd(1022.0));
+    e = _mm256_sub_pd(e, e_adj);
+    let mant = _mm256_or_si256(
+        _mm256_and_si256(bits, _mm256_set1_epi64x(0x000F_FFFF_FFFF_FFFF)),
+        _mm256_set1_epi64x(0x3FE0_0000_0000_0000),
+    );
+    let m = _mm256_castsi256_pd(mant);
+    // If m < 1/sqrt(2): e -= 1 and m = 2m - 1, else m = m - 1 (both
+    // subtractions are exact — Sterbenz — which is what keeps ln accurate
+    // through its zero at x = 1).
+    let small = _mm256_cmp_pd::<_CMP_LT_OQ>(m, _mm256_set1_pd(std::f64::consts::FRAC_1_SQRT_2));
+    e = _mm256_sub_pd(e, _mm256_and_pd(small, one));
+    let m = _mm256_blendv_pd(_mm256_sub_pd(m, one), _mm256_sub_pd(_mm256_add_pd(m, m), one), small);
+    let z = _mm256_mul_pd(m, m);
+    // y = m z P(m)/Q(m) (Q monic of degree 5).
+    let mut p = _mm256_set1_pd(LOG_P[0]);
+    p = _mm256_fmadd_pd(p, m, _mm256_set1_pd(LOG_P[1]));
+    p = _mm256_fmadd_pd(p, m, _mm256_set1_pd(LOG_P[2]));
+    p = _mm256_fmadd_pd(p, m, _mm256_set1_pd(LOG_P[3]));
+    p = _mm256_fmadd_pd(p, m, _mm256_set1_pd(LOG_P[4]));
+    p = _mm256_fmadd_pd(p, m, _mm256_set1_pd(LOG_P[5]));
+    let mut q = _mm256_add_pd(m, _mm256_set1_pd(LOG_Q[0]));
+    q = _mm256_fmadd_pd(q, m, _mm256_set1_pd(LOG_Q[1]));
+    q = _mm256_fmadd_pd(q, m, _mm256_set1_pd(LOG_Q[2]));
+    q = _mm256_fmadd_pd(q, m, _mm256_set1_pd(LOG_Q[3]));
+    q = _mm256_fmadd_pd(q, m, _mm256_set1_pd(LOG_Q[4]));
+    let mut y = _mm256_mul_pd(_mm256_mul_pd(m, z), _mm256_div_pd(p, q));
+    y = _mm256_fnmadd_pd(e, _mm256_set1_pd(LOG_LN2_CORR), y);
+    y = _mm256_fnmadd_pd(_mm256_set1_pd(0.5), z, y);
+    let mut out = _mm256_add_pd(m, y);
+    out = _mm256_fmadd_pd(e, _mm256_set1_pd(LOG_LN2_COARSE), out);
+    // Special cases: +inf -> +inf, ±0 -> -inf, negative / NaN -> NaN.
+    let inf = _mm256_set1_pd(f64::INFINITY);
+    let is_inf = _mm256_cmp_pd::<_CMP_EQ_OQ>(x, inf);
+    out = _mm256_blendv_pd(out, inf, is_inf);
+    let is_zero = _mm256_cmp_pd::<_CMP_EQ_OQ>(x, _mm256_setzero_pd());
+    out = _mm256_blendv_pd(out, _mm256_set1_pd(f64::NEG_INFINITY), is_zero);
+    let bad = _mm256_cmp_pd::<_CMP_NGE_UQ>(x, _mm256_setzero_pd());
+    _mm256_blendv_pd(out, _mm256_set1_pd(f64::NAN), bad)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn vexp_avx2(xs: &mut [f64]) {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        _mm256_storeu_pd(p.add(i), exp4(_mm256_loadu_pd(p.add(i))));
+        i += 4;
+    }
+    if i < n {
+        // Tail through the same polynomial via a padded register, so the
+        // AVX2 arm's per-element contract is uniform across lengths.
+        let mut buf = [0.0f64; 4];
+        buf[..n - i].copy_from_slice(&xs[i..]);
+        let out = exp4(_mm256_loadu_pd(buf.as_ptr()));
+        _mm256_storeu_pd(buf.as_mut_ptr(), out);
+        xs[i..].copy_from_slice(&buf[..n - i]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn vln_avx2(xs: &mut [f64]) {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        _mm256_storeu_pd(p.add(i), ln4(_mm256_loadu_pd(p.add(i))));
+        i += 4;
+    }
+    if i < n {
+        let mut buf = [1.0f64; 4];
+        buf[..n - i].copy_from_slice(&xs[i..]);
+        let out = ln4(_mm256_loadu_pd(buf.as_ptr()));
+        _mm256_storeu_pd(buf.as_mut_ptr(), out);
+        xs[i..].copy_from_slice(&buf[..n - i]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn exp_clamped_f32_avx2(xs: &mut [f32], lo: f32, hi: f32) {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let lo8 = _mm256_set1_ps(lo);
+    let hi8 = _mm256_set1_ps(hi);
+    let mut i = 0;
+    while i + 8 <= n {
+        let x0 = _mm256_loadu_ps(p.add(i));
+        let v = _mm256_min_ps(_mm256_max_ps(x0, lo8), hi8);
+        let e_lo = _mm256_cvtpd_ps(exp4(_mm256_cvtps_pd(_mm256_castps256_ps128(v))));
+        let e_hi = _mm256_cvtpd_ps(exp4(_mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v))));
+        let mut out = _mm256_set_m128(e_hi, e_lo);
+        // max_ps/min_ps drop NaN lanes to the clamp bound; propagate NaN
+        // like the scalar arm (`clamp(..).exp()` of NaN is NaN) so
+        // non-finite feature parameters fail loudly on both arms.
+        let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(x0, x0);
+        out = _mm256_blendv_ps(out, x0, nan);
+        _mm256_storeu_ps(p.add(i), out);
+        i += 8;
+    }
+    while i < n {
+        *p.add(i) = (*p.add(i)).clamp(lo, hi).exp();
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn vexp_avx2_call(xs: &mut [f64]) {
+    // SAFETY: callers hold a sanitised `SimdLevel::Avx2Fma`, which only
+    // exists after runtime detection (`SimdLevel::sanitize`).
+    unsafe { vexp_avx2(xs) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn vexp_avx2_call(xs: &mut [f64]) {
+    vexp_scalar(xs)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn vln_avx2_call(xs: &mut [f64]) {
+    // SAFETY: as in `vexp_avx2_call`.
+    unsafe { vln_avx2(xs) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn vln_avx2_call(xs: &mut [f64]) {
+    vln_scalar(xs)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn exp_clamped_f32_avx2_call(xs: &mut [f32], lo: f32, hi: f32) {
+    // SAFETY: as in `vexp_avx2_call`.
+    unsafe { exp_clamped_f32_avx2(xs, lo, hi) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn exp_clamped_f32_avx2_call(xs: &mut [f32], lo: f32, hi: f32) {
+    exp_clamped_f32_scalar(xs, lo, hi)
+}
+
+fn vexp_scalar(xs: &mut [f64]) {
+    for v in xs.iter_mut() {
+        *v = v.exp();
+    }
+}
+
+fn vln_scalar(xs: &mut [f64]) {
+    for v in xs.iter_mut() {
+        *v = v.ln();
+    }
+}
+
+fn exp_clamped_f32_scalar(xs: &mut [f32], lo: f32, hi: f32) {
+    for v in xs.iter_mut() {
+        *v = v.clamp(lo, hi).exp();
+    }
+}
+
+/// Elementwise `exp` in place on the given dispatch arm (scalar = libm,
+/// AVX2 = the 4-lane `exp4` polynomial; see the module accuracy
+/// contract).
+pub fn vexp_at(level: SimdLevel, xs: &mut [f64]) {
+    match level.sanitize() {
+        SimdLevel::Scalar => vexp_scalar(xs),
+        SimdLevel::Avx2Fma => vexp_avx2_call(xs),
+    }
+}
+
+/// Elementwise `ln` in place on the given dispatch arm.
+pub fn vln_at(level: SimdLevel, xs: &mut [f64]) {
+    match level.sanitize() {
+        SimdLevel::Scalar => vln_scalar(xs),
+        SimdLevel::Avx2Fma => vln_avx2_call(xs),
+    }
+}
+
+/// Elementwise `x -> exp(clamp(x, lo, hi))` in place on f32 — the
+/// feature-map exponential (`phi = exp(log phi)` under the
+/// `LOG_FLOOR`/`LOG_CEIL` guards). The AVX2 arm clamps 8 lanes and runs
+/// `exp4` on two f64 half-registers; the f64→f32 rounding keeps the
+/// result within 1 f32 ulp of the libm scalar arm.
+pub fn exp_clamped_f32_at(level: SimdLevel, xs: &mut [f32], lo: f32, hi: f32) {
+    match level.sanitize() {
+        SimdLevel::Scalar => exp_clamped_f32_scalar(xs, lo, hi),
+        SimdLevel::Avx2Fma => exp_clamped_f32_avx2_call(xs, lo, hi),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::simd::avx2_available;
+
+    /// 3 libm-relative ulp: the documented ≤2 ulp contract plus libm's
+    /// own rounding of the reference value.
+    fn assert_close(got: f64, want: f64, ctx: &str) {
+        if want.is_nan() {
+            assert!(got.is_nan(), "{ctx}: got {got}, want NaN");
+            return;
+        }
+        if !want.is_finite() {
+            assert_eq!(got, want, "{ctx}");
+            return;
+        }
+        let tol = 3.0 * f64::EPSILON * want.abs().max(f64::MIN_POSITIVE);
+        assert!((got - want).abs() <= tol, "{ctx}: got {got:e}, want {want:e}");
+    }
+
+    fn exp_inputs() -> Vec<f64> {
+        let mut xs = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            -0.5,
+            1e-12,
+            -1e-12,
+            20.0,
+            -20.0,
+            303.7,
+            -303.7,
+            700.0,
+            -700.0,
+            708.0,
+            -708.0,
+            f64::NEG_INFINITY,
+            f64::INFINITY,
+            f64::NAN,
+            -1e9,
+            1e9,
+        ];
+        for i in 0..400 {
+            xs.push(-690.0 + i as f64 * 3.47);
+        }
+        xs
+    }
+
+    #[test]
+    fn scalar_vexp_is_libm() {
+        let mut xs = exp_inputs();
+        let want: Vec<f64> = xs.iter().map(|v| v.exp()).collect();
+        vexp_at(SimdLevel::Scalar, &mut xs);
+        for (g, w) in xs.iter().zip(&want) {
+            assert!(g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan()));
+        }
+    }
+
+    #[test]
+    fn avx2_vexp_matches_libm_to_contract() {
+        if !avx2_available() {
+            return;
+        }
+        let mut xs = exp_inputs();
+        let inputs = xs.clone();
+        vexp_at(SimdLevel::Avx2Fma, &mut xs);
+        for (&x, &got) in inputs.iter().zip(&xs) {
+            if x > 709.4 && x.is_finite() {
+                // Early-overflow window: +inf is the documented result.
+                assert_eq!(got, f64::INFINITY, "exp({x})");
+                continue;
+            }
+            let want = x.exp();
+            if want != 0.0 && want < f64::MIN_POSITIVE {
+                // Subnormal results flush to zero (documented).
+                assert!(got == 0.0 || got.is_finite(), "exp({x}) = {got:e}");
+                continue;
+            }
+            assert_close(got, want, &format!("exp({x})"));
+        }
+    }
+
+    #[test]
+    fn avx2_vexp_exact_anchors() {
+        if !avx2_available() {
+            return;
+        }
+        let mut xs = vec![0.0f64, f64::NEG_INFINITY];
+        vexp_at(SimdLevel::Avx2Fma, &mut xs);
+        assert_eq!(xs[0], 1.0, "exp(0) must be exactly 1");
+        assert_eq!(xs[1], 0.0, "exp(-inf) must be exactly 0");
+    }
+
+    fn ln_inputs() -> Vec<f64> {
+        let mut xs = vec![
+            1.0,
+            0.5,
+            2.0,
+            1.0 + 1e-8,
+            1.0 - 1e-8,
+            std::f64::consts::E,
+            1e-300,
+            1e-310, // subnormal
+            1e300,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            0.0,
+            -0.0,
+            -1.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        for i in 1..400 {
+            xs.push(i as f64 * 0.731);
+            xs.push((i as f64 * 0.731).recip());
+        }
+        xs
+    }
+
+    #[test]
+    fn avx2_vln_matches_libm_to_contract() {
+        if !avx2_available() {
+            return;
+        }
+        let mut xs = ln_inputs();
+        let inputs = xs.clone();
+        vln_at(SimdLevel::Avx2Fma, &mut xs);
+        for (&x, &got) in inputs.iter().zip(&xs) {
+            let want = x.ln();
+            assert_close(got, want, &format!("ln({x:e})"));
+        }
+    }
+
+    #[test]
+    fn avx2_vln_exact_anchors() {
+        if !avx2_available() {
+            return;
+        }
+        let mut xs = vec![1.0f64, 0.0, f64::INFINITY];
+        vln_at(SimdLevel::Avx2Fma, &mut xs);
+        assert_eq!(xs[0], 0.0, "ln(1) must be exactly 0");
+        assert_eq!(xs[1], f64::NEG_INFINITY);
+        assert_eq!(xs[2], f64::INFINITY);
+    }
+
+    #[test]
+    fn slice_tails_are_covered() {
+        // Lengths that are not lane multiples exercise the padded tail.
+        for len in [0usize, 1, 2, 3, 5, 7, 9] {
+            let mut xs: Vec<f64> = (0..len).map(|i| -(i as f64) * 0.3).collect();
+            let want: Vec<f64> = xs.iter().map(|v| v.exp()).collect();
+            vexp_at(crate::linalg::simd::active_level(), &mut xs);
+            for (i, (g, w)) in xs.iter().zip(&want).enumerate() {
+                assert_close(*g, *w, &format!("len {len} idx {i}"));
+            }
+        }
+    }
+
+    #[test]
+    fn exp_clamped_f32_respects_clamp_on_both_arms() {
+        let raw: Vec<f32> = (0..37).map(|i| -100.0 + i as f32 * 7.3).collect();
+        for level in [SimdLevel::Scalar, SimdLevel::Avx2Fma] {
+            let mut xs = raw.clone();
+            exp_clamped_f32_at(level, &mut xs, -80.0, 80.0);
+            for (&x, &got) in raw.iter().zip(&xs) {
+                let want = x.clamp(-80.0, 80.0).exp();
+                // Both arms are within ~1 f32 ulp of the true value
+                // (libm vs exp4-rounded-to-f32); allow ~3 ulp of slack.
+                let rel = ((got as f64) - (want as f64)).abs() / (want as f64);
+                assert!(rel <= 4e-7, "exp_clamped({x}) = {got:e}, want {want:e}");
+                assert!(got > 0.0 && got.is_finite());
+            }
+        }
+    }
+}

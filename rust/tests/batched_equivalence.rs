@@ -237,3 +237,80 @@ fn divergence_batch_bitwise_equals_sequential_at_any_thread_count() {
         }
     }
 }
+
+/// SIMD-core extension of guarantee 1: the fused column-blocked kernels
+/// stay bitwise identical per pair to the vector kernels **on each
+/// dispatch arm**, at sizes that straddle the 8/16-lane f32 and 4-lane
+/// f64 boundaries, the 8-row saxpy microkernel, and the fixed chunk
+/// grids — including empty and single-row inputs. (On machines without
+/// AVX2+FMA the second arm sanitises to scalar and the pairs coincide.)
+#[test]
+fn fused_kernels_bitwise_per_pair_on_both_dispatch_arms() {
+    use linear_sinkhorn::linalg::simd::SimdLevel;
+    use linear_sinkhorn::linalg::{
+        lse_matmat_into_at, lse_matmat_t_into_at, lse_matvec_into_at, lse_matvec_t_into_at,
+        matmat_into_at, matmat_t_into_at, matvec_into_at, matvec_t_into_at, Mat,
+    };
+
+    let mut rng = Rng::seed_from(41);
+    for level in [SimdLevel::Scalar, SimdLevel::Avx2Fma.sanitize()] {
+        for &(n, k, b) in &[
+            (0usize, 5usize, 2usize),
+            (1, 1, 1),
+            (7, 9, 3),
+            (16, 8, 2),
+            (17, 12, 4),
+            (1025, 33, 3),
+        ] {
+            let a = Mat::from_fn(n, k, |_, _| rng.normal_f32());
+            let vs = Mat::from_fn(b, k, |_, _| rng.normal_f32());
+            let us = Mat::from_fn(b, n, |_, _| rng.normal_f32());
+            let mut fused = Mat::zeros(b, n);
+            matmat_into_at(level, &a, &vs, &mut fused);
+            let mut fused_t = Mat::zeros(b, k);
+            matmat_t_into_at(level, &a, &us, &mut fused_t);
+
+            let ts: Vec<Vec<f64>> = (0..b)
+                .map(|p| (0..k).map(|j| (p * 5 + j) as f64 * 0.7 - 20.0).collect())
+                .collect();
+            let ws: Vec<Vec<f64>> = (0..b)
+                .map(|p| (0..n).map(|i| (p * 3 + i) as f64 * 0.4 - 15.0).collect())
+                .collect();
+            let mut louts: Vec<Vec<f64>> = (0..b).map(|_| vec![0.0f64; n]).collect();
+            lse_matmat_into_at(level, &a, -1.1, &ts, &mut louts);
+            let mut louts_t: Vec<Vec<f64>> = (0..b).map(|_| vec![0.0f64; k]).collect();
+            lse_matmat_t_into_at(level, &a, -1.1, &ws, &mut louts_t);
+
+            for p in 0..b {
+                let mut want = vec![0.0f32; n];
+                matvec_into_at(level, &a, vs.row(p), &mut want);
+                assert!(
+                    fused.row(p).iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} matmat ({n},{k},{b}) pair {p}",
+                    level.label()
+                );
+                let mut want_t = vec![0.0f32; k];
+                matvec_t_into_at(level, &a, us.row(p), &mut want_t);
+                assert!(
+                    fused_t.row(p).iter().zip(&want_t).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} matmat_t ({n},{k},{b}) pair {p}",
+                    level.label()
+                );
+                let mut lwant = vec![0.0f64; n];
+                lse_matvec_into_at(level, &a, -1.1, &ts[p], &mut lwant);
+                assert!(
+                    louts[p].iter().zip(&lwant).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} lse_matmat ({n},{k},{b}) pair {p}",
+                    level.label()
+                );
+                let mut lwant_t = vec![0.0f64; k];
+                lse_matvec_t_into_at(level, &a, -1.1, &ws[p], &mut lwant_t);
+                assert!(
+                    louts_t[p].iter().zip(&lwant_t).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} lse_matmat_t ({n},{k},{b}) pair {p}",
+                    level.label()
+                );
+            }
+        }
+    }
+}

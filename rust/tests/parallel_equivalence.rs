@@ -17,12 +17,21 @@
 //! 4. `sinkhorn_divergence` returns bit-identical objectives with 1 and N
 //!    threads, at both the solve level (`cfg.threads`) and the matvec
 //!    level (kernel pools).
+//! 5. Since the SIMD core landed, guarantees 1–3 hold **per dispatch
+//!    arm** (the `*_at` entry points pin scalar vs AVX2+FMA), and the
+//!    two arms agree within the documented kernel tolerances at sizes
+//!    that straddle every lane boundary — including empty and
+//!    single-row mats (`simd_arms_*` tests below).
 
 use linear_sinkhorn::config::SinkhornConfig;
 use linear_sinkhorn::features::{par_feature_matrix, par_log_feature_matrix};
+use linear_sinkhorn::linalg::simd::{active_level, SimdLevel};
 use linear_sinkhorn::linalg::{
-    lse_matvec_into, lse_matvec_into_pooled, lse_matvec_t_into, lse_matvec_t_into_pooled,
-    matvec_into, matvec_into_pooled, matvec_t_into, matvec_t_into_pooled, Mat,
+    lse_matvec_into, lse_matvec_into_at, lse_matvec_into_pooled, lse_matvec_into_pooled_at,
+    lse_matvec_t_into, lse_matvec_t_into_at, lse_matvec_t_into_pooled,
+    lse_matvec_t_into_pooled_at, matvec_into, matvec_into_at, matvec_into_pooled,
+    matvec_into_pooled_at, matvec_t_into, matvec_t_into_at, matvec_t_into_pooled,
+    matvec_t_into_pooled_at, Mat,
 };
 use linear_sinkhorn::prelude::*;
 use linear_sinkhorn::testing::property;
@@ -243,6 +252,197 @@ fn divergence_identical_with_1_and_n_threads() {
         let dn = run(threads);
         assert_eq!(d1.to_bits(), dn.to_bits(), "threads={threads}: {d1} vs {dn}");
     }
+}
+
+/// Sizes that straddle the SIMD lane boundaries (8/16-lane f32, 4-lane
+/// f64), the 64-element `row_dot` block, and the fixed pool chunk grids
+/// (256/1024 rows) — none of the interesting ones are lane multiples.
+const LANE_BOUNDARY_SIZES: [usize; 14] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 63, 65, 127, 129, 1025];
+
+/// The two dispatch arms under test. On machines without AVX2+FMA the
+/// second entry sanitises to scalar and the comparisons are trivially
+/// exact — the CI x86_64 legs exercise the real pair.
+fn arms() -> [SimdLevel; 2] {
+    [SimdLevel::Scalar, SimdLevel::Avx2Fma.sanitize()]
+}
+
+#[test]
+fn simd_arms_agree_on_lane_boundary_matvecs() {
+    // Scalar-vs-SIMD agreement within the documented tolerances: 1e-5
+    // relative for the f32 kernels (FMA + wider lanes re-associate the
+    // f32 partials; the f64 block accumulation bounds the drift), against
+    // an f64 reference so neither arm is privileged.
+    let mut rng = Rng::seed_from(91);
+    for &n in &LANE_BOUNDARY_SIZES {
+        for &k in &[1usize, 7, 8, 9, 64, 65] {
+            let a = Mat::from_fn(n, k, |_, _| rng.uniform_in(0.05, 2.0) as f32);
+            let v: Vec<f32> = (0..k).map(|_| rng.uniform_in(0.05, 2.0) as f32).collect();
+            let u: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.05, 2.0) as f32).collect();
+
+            let mut out_s = vec![0.0f32; n];
+            matvec_into_at(SimdLevel::Scalar, &a, &v, &mut out_s);
+            let mut out_v = vec![0.0f32; n];
+            matvec_into_at(SimdLevel::Avx2Fma.sanitize(), &a, &v, &mut out_v);
+            for i in 0..n {
+                let reference: f64 =
+                    (0..k).map(|j| (a[(i, j)] as f64) * (v[j] as f64)).sum();
+                let scale = reference.abs().max(1.0);
+                assert!(
+                    ((out_s[i] as f64) - (out_v[i] as f64)).abs() / scale <= 1e-5,
+                    "matvec ({n},{k}) row {i}: {} vs {}",
+                    out_s[i],
+                    out_v[i]
+                );
+            }
+
+            let mut t_s = vec![0.0f32; k];
+            matvec_t_into_at(SimdLevel::Scalar, &a, &u, &mut t_s);
+            let mut t_v = vec![0.0f32; k];
+            matvec_t_into_at(SimdLevel::Avx2Fma.sanitize(), &a, &u, &mut t_v);
+            let reference = matvec_t_ref64(&a, &u);
+            for j in 0..k {
+                let scale = reference[j].abs().max(1.0);
+                assert!(
+                    ((t_s[j] as f64) - (t_v[j] as f64)).abs() / scale <= 1e-5,
+                    "matvec_t ({n},{k}) col {j}: {} vs {}",
+                    t_s[j],
+                    t_v[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_arms_agree_on_lane_boundary_lse() {
+    // The f64 logsumexp kernels: the AVX2 arm's vexp carries a ≤ 2 ulp
+    // contract and the lane reductions re-associate the f64 sum, so the
+    // arms agree to ~1e-12 relative — far inside the 1e-10 bound the
+    // pooled lse tests already assert against an f64 reference.
+    let mut rng = Rng::seed_from(92);
+    for &n in &LANE_BOUNDARY_SIZES {
+        for &k in &[1usize, 3, 4, 5, 9, 33] {
+            let a = Mat::from_fn(n, k, |_, _| rng.normal_f32() * 2.0);
+            let t: Vec<f64> = (0..k).map(|_| rng.uniform_in(-100.0, 10.0)).collect();
+            let u: Vec<f64> = (0..n).map(|_| rng.uniform_in(-100.0, 10.0)).collect();
+            let alpha = -1.3;
+
+            let mut r_s = vec![0.0f64; n];
+            lse_matvec_into_at(SimdLevel::Scalar, &a, alpha, &t, &mut r_s);
+            let mut r_v = vec![0.0f64; n];
+            lse_matvec_into_at(SimdLevel::Avx2Fma.sanitize(), &a, alpha, &t, &mut r_v);
+            for i in 0..n {
+                let scale = r_s[i].abs().max(1.0);
+                assert!(
+                    (r_s[i] - r_v[i]).abs() / scale <= 1e-12,
+                    "lse_matvec ({n},{k}) row {i}: {} vs {}",
+                    r_s[i],
+                    r_v[i]
+                );
+            }
+
+            let mut c_s = vec![0.0f64; k];
+            lse_matvec_t_into_at(SimdLevel::Scalar, &a, alpha, &u, &mut c_s);
+            let mut c_v = vec![0.0f64; k];
+            lse_matvec_t_into_at(SimdLevel::Avx2Fma.sanitize(), &a, alpha, &u, &mut c_v);
+            for j in 0..k {
+                if n == 0 {
+                    // Empty reduction: both arms report -inf columns.
+                    assert_eq!(c_s[j], f64::NEG_INFINITY);
+                    assert_eq!(c_v[j], f64::NEG_INFINITY);
+                    continue;
+                }
+                let scale = c_s[j].abs().max(1.0);
+                assert!(
+                    (c_s[j] - c_v[j]).abs() / scale <= 1e-12,
+                    "lse_matvec_t ({n},{k}) col {j}: {} vs {}",
+                    c_s[j],
+                    c_v[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_arms_pooled_bitwise_one_vs_n_threads_per_arm() {
+    // The thread-count-determinism invariant, pinned per dispatch arm:
+    // on either arm, every pool size reproduces the serial kernel's bits
+    // (plain matvec / lse rows) or a fixed chunk-grid reduction of them
+    // (transposed kernels). Sizes cross the 256/1024-row chunk grids and
+    // avoid lane multiples.
+    let mut rng = Rng::seed_from(93);
+    for level in arms() {
+        for &(n, k) in &[(519usize, 67usize), (1025, 33), (2300, 13)] {
+            let a = Mat::from_fn(n, k, |_, _| rng.uniform_in(0.05, 2.0) as f32);
+            let v: Vec<f32> = (0..k).map(|_| rng.uniform_in(0.05, 2.0) as f32).collect();
+            let u: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.05, 2.0) as f32).collect();
+            let t: Vec<f64> = (0..k).map(|_| rng.uniform_in(-50.0, 5.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform_in(-50.0, 5.0)).collect();
+
+            let mut mv1 = vec![0.0f32; n];
+            matvec_into_at(level, &a, &v, &mut mv1);
+            let mut mt_first: Option<Vec<f32>> = None;
+            let mut lt_first: Option<Vec<f64>> = None;
+            for threads in [1usize, 2, 4] {
+                let pool = Pool::new(threads);
+
+                let mut mv = vec![0.0f32; n];
+                matvec_into_pooled_at(level, &a, &v, &mut mv, &pool);
+                assert!(
+                    mv1.iter().zip(&mv).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} matvec n={n} threads={threads}",
+                    level.label()
+                );
+
+                let mut lr1 = vec![0.0f64; n];
+                lse_matvec_into_at(level, &a, -0.7, &t, &mut lr1);
+                let mut lr = vec![0.0f64; n];
+                lse_matvec_into_pooled_at(level, &a, -0.7, &t, &mut lr, &pool);
+                assert!(
+                    lr1.iter().zip(&lr).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} lse_matvec n={n} threads={threads}",
+                    level.label()
+                );
+
+                let mut mt = vec![0.0f32; k];
+                matvec_t_into_pooled_at(level, &a, &u, &mut mt, &pool);
+                match &mt_first {
+                    None => mt_first = Some(mt),
+                    Some(f) => assert!(
+                        f.iter().zip(&mt).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "{} matvec_t n={n} threads={threads}",
+                        level.label()
+                    ),
+                }
+
+                let mut lt = vec![0.0f64; k];
+                lse_matvec_t_into_pooled_at(level, &a, -0.7, &w, &mut lt, &pool);
+                match &lt_first {
+                    None => lt_first = Some(lt),
+                    Some(f) => assert!(
+                        f.iter().zip(&lt).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "{} lse_matvec_t n={n} threads={threads}",
+                        level.label()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_dispatched_default_matches_active_level_arm() {
+    // The level-less public kernels are exactly the `_at` kernels pinned
+    // to `active_level()` — dispatch adds no third behaviour.
+    let mut rng = Rng::seed_from(94);
+    let a = Mat::from_fn(130, 67, |_, _| rng.normal_f32());
+    let v: Vec<f32> = (0..67).map(|_| rng.normal_f32()).collect();
+    let mut via_default = vec![0.0f32; 130];
+    matvec_into(&a, &v, &mut via_default);
+    let mut via_at = vec![0.0f32; 130];
+    matvec_into_at(active_level(), &a, &v, &mut via_at);
+    assert!(via_default.iter().zip(&via_at).all(|(x, y)| x.to_bits() == y.to_bits()));
 }
 
 /// The pre-pool factored kernel: applies through the plain serial
