@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-scalar doc fmt fmt-check clippy check artifacts perf bench-smoke clean
+.PHONY: all build test test-scalar doc doc-test examples fmt fmt-check clippy check artifacts perf bench-smoke clean
 
 all: build
 
@@ -16,6 +16,16 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# The redesigned rustdoc snippets (OtProblem quick tour) are compiled
+# doctests; CI gates them in the `examples-doctests` job.
+doc-test:
+	$(CARGO) test --doc
+
+# Build every example — the migrated examples are part of the public
+# surface and CI builds them on every push.
+examples:
+	$(CARGO) build --examples
 
 # The SIMD core's portable-fallback arm: the full suite with the env
 # override pinning scalar kernels (CI runs this as its own job, so both
@@ -41,7 +51,7 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-check: build test doc fmt-check clippy
+check: build test doc doc-test examples fmt-check clippy
 	@echo "check: OK"
 
 # AOT-lower the Pallas/JAX graphs to HLO text + manifest. The binary never

@@ -1,23 +1,25 @@
 //! Domain example: compare distributions across three of the paper's
 //! workloads (2-D Gaussians, sphere bands, 28-dim Higgs-like), showing the
 //! RF / Nys / Sin three-way contrast on each — including the regime where
-//! Nyström loses positivity and errors out while RF keeps running.
+//! Nyström loses positivity and errors out while RF keeps running. Every
+//! contender is a different [`OtProblem`] plan on the same data.
 //!
 //! Run with: `cargo run --release --example point_cloud_divergence`
 
-use linear_sinkhorn::metrics::Stopwatch;
 use linear_sinkhorn::prelude::*;
 
-fn run_case(name: &str, mu: &Measure, nu: &Measure, eps: f64, r: usize, rng: &mut Rng) {
+fn run_case(name: &str, mu: &Measure, nu: &Measure, eps: f64, r: usize, seed: u64) {
     println!("\n=== {name} (n={}, d={}, eps={eps}, r={r}) ===", mu.len(), mu.dim());
-    let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
 
-    // Sin: dense ground truth.
-    let sw = Stopwatch::start();
-    let dense = DenseKernel::from_measures(mu, nu, eps);
-    let truth = match sinkhorn(&dense, &mu.weights, &nu.weights, &cfg) {
+    // Sin: dense ground truth (plain domain: failures stay visible).
+    let truth = match OtProblem::new(mu, nu)
+        .epsilon(eps)
+        .dense()
+        .domain(DomainChoice::Plain)
+        .solve()
+    {
         Ok(s) => {
-            println!("  Sin: {:.6} ({:.0} ms)", s.objective, sw.elapsed_secs() * 1e3);
+            println!("  Sin: {:.6} ({:.0} ms)", s.objective, s.wall_us as f64 / 1e3);
             Some(s.objective)
         }
         Err(e) => {
@@ -25,43 +27,54 @@ fn run_case(name: &str, mu: &Measure, nu: &Measure, eps: f64, r: usize, rng: &mu
             None
         }
     };
+    let dev_of = |objective: f64| {
+        truth
+            .map(|t| format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, objective)))
+            .unwrap_or_else(|| "-".into())
+    };
 
-    // RF: positive features.
-    let sw = Stopwatch::start();
-    let map = GaussianFeatureMap::fit(mu, nu, eps, r, rng);
-    let fk = FactoredKernel::from_measures(&map, mu, nu);
-    match sinkhorn(&fk, &mu.weights, &nu.weights, &cfg) {
-        Ok(s) => {
-            let dev = truth
-                .map(|t| {
-                    format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, s.objective))
-                })
-                .unwrap_or_else(|| "-".into());
-            println!(
-                "  RF : {:.6} ({:.0} ms, deviation {dev})",
-                s.objective,
-                sw.elapsed_secs() * 1e3
-            );
-        }
+    // RF: positive features — the planner's factored backend.
+    match OtProblem::new(mu, nu)
+        .epsilon(eps)
+        .rank(r)
+        .domain(DomainChoice::Plain)
+        .stabilized_factors(false)
+        .seed(seed)
+        .solve()
+    {
+        Ok(s) => println!(
+            "  RF : {:.6} ({:.0} ms, deviation {})",
+            s.objective,
+            s.wall_us as f64 / 1e3,
+            dev_of(s.objective)
+        ),
         Err(e) => println!("  RF : FAILED ({e})"),
     }
 
-    // Nys: the low-rank baseline — may lose positivity.
-    let sw = Stopwatch::start();
-    let nk = NystromKernel::from_measures(mu, nu, eps, r.min(mu.len()), rng);
-    match nk.validate_positive(rng, 3).and_then(|_| sinkhorn(&nk, &mu.weights, &nu.weights, &cfg)) {
-        Ok(s) => {
-            let dev = truth
-                .map(|t| {
-                    format!("{:.2}", linear_sinkhorn::sinkhorn::deviation_score(t, s.objective))
-                })
-                .unwrap_or_else(|| "-".into());
-            println!(
-                "  Nys: {:.6} ({:.0} ms, deviation {dev})",
-                s.objective,
-                sw.elapsed_secs() * 1e3
-            );
-        }
+    // Nys: the low-rank baseline — may lose positivity (the paper's
+    // central contrast). Probe the exact kernel the plan will execute
+    // (same seed => same landmark draw) with `validate_positive` first:
+    // an indefinite approximation can corrupt the objective even when
+    // Sinkhorn happens not to produce non-finite scalings, so waiting
+    // for the solver's typed error alone would under-report the failure.
+    // The probe kernel is deliberately built twice (once here, once
+    // inside the planned solve): construction is O(n·rank·d + rank^3) —
+    // milliseconds at example scale — and the planned API exposes no
+    // pre-solve kernel hook.
+    let nys_rank = r.min(mu.len());
+    let nys_seed = seed ^ 0x4E59;
+    let mut probe_rng = Rng::seed_from(nys_seed);
+    let probe = NystromKernel::from_measures(mu, nu, eps, nys_rank, &mut probe_rng);
+    let nys = probe.validate_positive(&mut probe_rng, 3).and_then(|_| {
+        OtProblem::new(mu, nu).epsilon(eps).nystrom(nys_rank).seed(nys_seed).solve()
+    });
+    match nys {
+        Ok(s) => println!(
+            "  Nys: {:.6} ({:.0} ms, deviation {})",
+            s.objective,
+            s.wall_us as f64 / 1e3,
+            dev_of(s.objective)
+        ),
         Err(e) => println!("  Nys: FAILED ({e}) — the positivity failure RF avoids"),
     }
 }
@@ -72,16 +85,16 @@ fn main() {
 
     // Workload 1: Fig-1 Gaussians, comfortable regularisation.
     let (mu, nu) = data::gaussian_blobs(n, &mut rng);
-    run_case("gaussian blobs, moderate eps", &mu, &nu, 0.5, 300, &mut rng);
+    run_case("gaussian blobs, moderate eps", &mu, &nu, 0.5, 300, 1);
 
     // Workload 2: same data, small eps — the regime that kills Nyström.
-    run_case("gaussian blobs, small eps", &mu, &nu, 0.05, 300, &mut rng);
+    run_case("gaussian blobs, small eps", &mu, &nu, 0.05, 300, 2);
 
     // Workload 3: sphere bands (Fig. 2/3 geometry).
     let (sa, sb) = data::sphere_caps(n, &mut rng);
-    run_case("sphere bands", &sa, &sb, 0.1, 300, &mut rng);
+    run_case("sphere bands", &sa, &sb, 0.1, 300, 3);
 
     // Workload 4: 28-dim Higgs-like (Fig. 5 substitute).
     let (sig, bkg) = data::higgs_pair(1000, &mut rng);
-    run_case("higgs-like 28-dim", &sig, &bkg, 5.0, 500, &mut rng);
+    run_case("higgs-like 28-dim", &sig, &bkg, 5.0, 500, 4);
 }

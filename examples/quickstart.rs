@@ -1,10 +1,10 @@
 //! Quickstart: compute a linear-time Sinkhorn divergence between two point
-//! clouds in a dozen lines, and compare the factored (`RF`) path against
-//! the dense (`Sin`) baseline on the same data.
+//! clouds through the planned `Problem → Plan → Solution` API, and compare
+//! the factored (`RF`) plan against the dense (`Sin`) baseline on the same
+//! data.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use linear_sinkhorn::metrics::Stopwatch;
 use linear_sinkhorn::prelude::*;
 
 fn main() -> Result<()> {
@@ -14,50 +14,49 @@ fn main() -> Result<()> {
     let (mu, nu) = data::gaussian_blobs(n, &mut rng);
     let eps = 0.5;
 
-    // 2. Positive random features for the Gaussian kernel (Lemma 1).
-    //    `fit` reads the data radius R and sets the paper's q constant.
+    // 2. Describe the problem; the planner picks the paper's positive-
+    //    feature factored kernel (Lemma 1) and the numeric domain. One
+    //    anchor draw serves every solve below (`with_feature_map` is the
+    //    amortisation the service's feature cache automates).
     let r = 600;
     let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
-    println!("feature map: r = {r}, q = {:.3}, psi = {:.2e}", map.q, map.psi());
+    let problem = OtProblem::new(&mu, &nu).epsilon(eps).rank(r).with_feature_map(&map);
+    let plan = problem.plan()?;
+    println!("{}", plan.summary());
 
-    // 3. The factored kernel K = Phi_x Phi_y^T — positive by construction,
-    //    O(r(n+m)) per Sinkhorn iteration.
-    let kernel = FactoredKernel::from_measures(&map, &mu, &nu);
-
-    // 4. Solve regularised OT with Algorithm 1.
-    let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
-    let sw = Stopwatch::start();
-    let sol = sinkhorn(&kernel, &mu.weights, &nu.weights, &cfg)?;
-    let rf_time = sw.elapsed_secs();
+    // 3. Solve regularised OT through the plan — O(r(n+m)) per iteration.
+    let sol = problem.solve_planned(&plan)?;
     println!(
-        "RF : W_eps ~= {:.6}  ({} iterations, {:.0} ms, marginal err {:.1e})",
+        "RF : W_eps ~= {:.6}  ({} iterations, {:.1} ms, marginal err {:.1e}, arm {})",
         sol.objective,
         sol.iterations,
-        rf_time * 1e3,
-        sol.marginal_error
+        sol.wall_us as f64 / 1e3,
+        sol.marginal_error,
+        sol.simd_arm
     );
 
-    // 5. Dense baseline on the same data (the O(n^2) path the paper beats).
-    let sw = Stopwatch::start();
-    let dense = DenseKernel::from_measures(&mu, &nu, eps);
-    let dsol = sinkhorn(&dense, &mu.weights, &nu.weights, &cfg)?;
-    let sin_time = sw.elapsed_secs();
+    // 4. Dense baseline on the same data (the O(n^2) path the paper beats).
+    let dsol = OtProblem::new(&mu, &nu).epsilon(eps).dense().solve()?;
     println!(
-        "Sin: W_eps  = {:.6}  ({} iterations, {:.0} ms)",
+        "Sin: W_eps  = {:.6}  ({} iterations, {:.1} ms)",
         dsol.objective,
         dsol.iterations,
-        sin_time * 1e3
+        dsol.wall_us as f64 / 1e3
     );
     println!(
         "deviation score (100 = exact): {:.2}; speedup {:.1}x",
         linear_sinkhorn::sinkhorn::deviation_score(dsol.objective, sol.objective),
-        sin_time / rf_time
+        dsol.wall_us as f64 / sol.wall_us.max(1) as f64
     );
 
-    // 6. The debiased Sinkhorn divergence (Eq. 2) — a proper discrepancy.
-    let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
-    let k_yy = FactoredKernel::from_measures(&map, &nu, &nu);
-    let div = sinkhorn_divergence(&kernel, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg)?;
-    println!("sinkhorn divergence(mu, nu) = {div:.6}");
+    // 5. The debiased Sinkhorn divergence (Eq. 2) — a proper discrepancy,
+    //    three transport solves sharing one feature map.
+    let report = problem.divergence_planned(&plan)?;
+    println!("sinkhorn divergence(mu, nu) = {:.6}", report.divergence);
+
+    // 6. Plans are serialisable decision records — ship them to a worker.
+    println!("plan JSON: {}", plan.to_json());
+    let decoded = Plan::from_json(&plan.to_json())?;
+    assert_eq!(decoded, plan);
     Ok(())
 }

@@ -35,6 +35,9 @@ use linear_sinkhorn::linalg::{
     matvec_into, matvec_into_pooled, matvec_t_into, matvec_t_into_pooled, Mat,
 };
 use linear_sinkhorn::prelude::*;
+// Solver-layer microbench: times the reference free-function divergence on
+// prebuilt kernels so kernel construction stays outside the measured region.
+use linear_sinkhorn::sinkhorn::sinkhorn_divergence;
 
 /// The pre-persistent-pool execution strategy, verbatim: spawn `threads`
 /// scoped workers per region, drain a shared queue, join. Kept here (not

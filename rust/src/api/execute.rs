@@ -1,0 +1,667 @@
+//! The executor: binds a [`Plan`] to live kernels/pools and routes it
+//! through the legacy solver layer **bitwise-unchanged**.
+//!
+//! ## The equivalence contract
+//!
+//! Every `Plan` the planner can emit executes through exactly the code
+//! path a hand-wired caller of the pre-API free functions would have
+//! taken, with identical kernel construction, identical solver entry
+//! point, and identical `SinkhornConfig` — so results are **bitwise
+//! identical** to the corresponding legacy call:
+//!
+//! | plan | legacy path |
+//! |------|-------------|
+//! | `Dense`, `Plain` | `sinkhorn(&DenseKernel::from_measures(..), ..)` |
+//! | `Factored`, `Plain` | `sinkhorn(&FactoredKernel::from_measures[_stabilized]_pooled(..), ..)` |
+//! | `*`, `AutoEscalate` | `sinkhorn_stabilized(..)` with `cfg.stabilize = true` |
+//! | `*`, `LogDomain` | `sinkhorn_log_domain(kernel.as_log_kernel(), ..)` |
+//! | B > 1 | `solve_batch[_stabilized|_log_domain](..)` per width-`batch_width` chunk |
+//! | divergence | the three-solve `join3` of `sinkhorn_divergence` / the coordinator worker |
+//! | `accelerated` | `sinkhorn_accelerated(..)` |
+//!
+//! When the executor fits a feature map itself, the draw is
+//! `GaussianFeatureMap::fit(mu, nu, eps, rank, &mut Rng::seed_from(plan.seed))`
+//! — seeded, so the same plan refits the same anchors. The property
+//! suite in `rust/tests/api_equivalence.rs` asserts the table above bit
+//! for bit.
+
+use std::sync::Arc;
+
+use crate::coordinator::cache::FeatureKey;
+use crate::data::Measure;
+use crate::error::{Error, Result};
+use crate::features::GaussianFeatureMap;
+use crate::kernels::{DenseKernel, FactoredKernel, KernelOp, NystromKernel};
+use crate::metrics::Stopwatch;
+use crate::rng::Rng;
+use crate::runtime::pool::Pool;
+use crate::sinkhorn::{
+    sinkhorn, sinkhorn_accelerated, sinkhorn_log_domain, sinkhorn_stabilized,
+    solve_batch_log_domain, solve_batch_stabilized, SinkhornSolution,
+};
+
+use super::plan::{Backend, Domain, Plan};
+use super::problem::{OtProblem, Source};
+use super::solution::{DivergenceReport, Solution};
+
+fn us(sw: &Stopwatch) -> u64 {
+    (sw.elapsed_secs() * 1e6) as u64
+}
+
+/// Replicate a whole-batch failure (planning, kernel construction) onto
+/// every pair slot, keeping the documented index-alignment of the
+/// `*_all` results. `Error` is not `Clone`, and every whole-batch
+/// failure is configuration-class, so each slot gets an [`Error::Config`]
+/// carrying the original message.
+fn err_per_pair<T>(pairs: usize, e: Error) -> Vec<Result<T>> {
+    let message = match e {
+        Error::Config(msg) => msg,
+        other => other.to_string(),
+    };
+    (0..pairs.max(1)).map(|_| Err(Error::Config(message.clone()))).collect()
+}
+
+/// A fitted map, either borrowed from the problem/cache or freshly drawn.
+enum MapHandle<'m> {
+    Borrowed(&'m GaussianFeatureMap),
+    Shared(Arc<GaussianFeatureMap>),
+}
+
+impl MapHandle<'_> {
+    fn get(&self) -> &GaussianFeatureMap {
+        match self {
+            MapHandle::Borrowed(m) => m,
+            MapHandle::Shared(a) => a,
+        }
+    }
+}
+
+/// The single-problem kernel (divergence builds its own triple).
+enum BuiltKernel {
+    Dense(DenseKernel),
+    Factored(FactoredKernel),
+    Nystrom(NystromKernel),
+}
+
+impl<'a> OtProblem<'a> {
+    // ----------------------------------------------------------------
+    // Public execution entry points.
+    // ----------------------------------------------------------------
+
+    /// Plan and solve a single transport problem.
+    pub fn solve(&self) -> Result<Solution> {
+        let plan = self.plan()?;
+        self.solve_planned(&plan)
+    }
+
+    /// Execute a given plan (e.g. one decoded from
+    /// [`Plan::from_json`]) for a single transport problem.
+    pub fn solve_planned(&self, plan: &Plan) -> Result<Solution> {
+        let pairs = self.effective_pairs()?;
+        if pairs.len() != 1 {
+            return Err(Error::Config(format!(
+                "solve() is single-pair but the problem has {} weight pairs; use solve_all()",
+                pairs.len()
+            )));
+        }
+        let (a, b) = pairs[0];
+        let solver_pool = self.resolve_solver_pool(plan);
+        match self.build_kernel(plan, &solver_pool)? {
+            BuiltKernel::Dense(k) => self.run_single(plan, &k, a, b),
+            BuiltKernel::Factored(k) => self.run_single(plan, &k, a, b),
+            BuiltKernel::Nystrom(k) => self.run_single(plan, &k, a, b),
+        }
+    }
+
+    /// Plan and solve all B weight pairs (fused batched execution,
+    /// bitwise identical per pair to B separate [`OtProblem::solve`]s).
+    pub fn solve_all(&self) -> Vec<Result<Solution>> {
+        let plan = match self.plan() {
+            Ok(p) => p,
+            Err(e) => return err_per_pair(self.pairs.len(), e),
+        };
+        self.solve_all_planned(&plan)
+    }
+
+    /// Execute a given plan for all B weight pairs. The result vector is
+    /// index-aligned with the problem's pairs; one pair failing never
+    /// poisons its batch-mates, and whole-batch failures (planning,
+    /// kernel construction) are replicated onto every slot so the
+    /// alignment holds on the error path too.
+    pub fn solve_all_planned(&self, plan: &Plan) -> Vec<Result<Solution>> {
+        let pairs = match self.effective_pairs() {
+            Ok(p) => p,
+            Err(e) => return err_per_pair(self.pairs.len(), e),
+        };
+        let solver_pool = self.resolve_solver_pool(plan);
+        let kernel = match self.build_kernel(plan, &solver_pool) {
+            Ok(k) => k,
+            Err(e) => return err_per_pair(pairs.len(), e),
+        };
+        match kernel {
+            BuiltKernel::Dense(k) => self.run_batch(plan, &k, &pairs),
+            BuiltKernel::Factored(k) => self.run_batch(plan, &k, &pairs),
+            BuiltKernel::Nystrom(k) => self.run_batch(plan, &k, &pairs),
+        }
+    }
+
+    /// Plan and compute the Eq. (2) Sinkhorn divergence (three transport
+    /// solves, concurrent when the plan's `threads` allows).
+    pub fn divergence(&self) -> Result<DivergenceReport> {
+        let plan = self.plan()?;
+        self.divergence_planned(&plan)
+    }
+
+    /// Execute a given plan as a divergence.
+    pub fn divergence_planned(&self, plan: &Plan) -> Result<DivergenceReport> {
+        let pairs = self.effective_pairs()?;
+        if pairs.len() != 1 {
+            return Err(Error::Config(format!(
+                "divergence() is single-pair but the problem has {} weight pairs; use \
+                 divergence_all()",
+                pairs.len()
+            )));
+        }
+        if plan.accelerated {
+            // Alg. 2 maximises the single-problem dual; there is no
+            // accelerated three-solve divergence (legacy had none
+            // either). Reject instead of silently running Alg. 1.
+            return Err(Error::Config(
+                "the accelerated solver (Alg. 2) has no divergence form; use solve_planned()"
+                    .into(),
+            ));
+        }
+        let (a, b) = pairs[0];
+        let sw = Stopwatch::start();
+        self.with_divergence_kernels(plan, |k_xy, k_xx, k_yy| {
+            self.run_divergence(plan, k_xy, k_xx, k_yy, a, b, &sw)
+        })
+    }
+
+    /// Plan and compute divergences for all B weight pairs as **three
+    /// width-B fused solves** (the coordinator's fuse-group path);
+    /// per pair bitwise identical to B separate
+    /// [`OtProblem::divergence`] calls.
+    pub fn divergence_all(&self) -> Vec<Result<DivergenceReport>> {
+        let plan = match self.plan() {
+            Ok(p) => p,
+            Err(e) => return err_per_pair(self.pairs.len(), e),
+        };
+        self.divergence_all_planned(&plan)
+    }
+
+    /// Execute a given plan as a batch of divergences. Like
+    /// [`OtProblem::solve_all_planned`], whole-batch failures are
+    /// replicated onto every pair slot so the result stays
+    /// index-aligned.
+    pub fn divergence_all_planned(&self, plan: &Plan) -> Vec<Result<DivergenceReport>> {
+        let pairs = match self.effective_pairs() {
+            Ok(p) => p,
+            Err(e) => return err_per_pair(self.pairs.len(), e),
+        };
+        if plan.accelerated {
+            return err_per_pair(
+                pairs.len(),
+                Error::Config(
+                    "the accelerated solver (Alg. 2) has no divergence form; use \
+                     solve_planned()"
+                        .into(),
+                ),
+            );
+        }
+        let sw = Stopwatch::start();
+        match self.with_divergence_kernels(plan, |k_xy, k_xx, k_yy| {
+            Ok(self.run_divergence_batch(plan, k_xy, k_xx, k_yy, &pairs, &sw))
+        }) {
+            Ok(v) => v,
+            Err(e) => err_per_pair(pairs.len(), e),
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // Kernel construction (identical to the legacy call sites).
+    // ----------------------------------------------------------------
+
+    fn resolve_solver_pool(&self, plan: &Plan) -> Pool {
+        match &self.solver_pool {
+            Some(p) => p.clone(),
+            // `Pool::new(0)` auto-sizes to the machine, matching the
+            // knob's documented `0 = auto` convention.
+            None => Pool::new(plan.solver_threads),
+        }
+    }
+
+    fn resolve_solve_pool(&self, plan: &Plan) -> Pool {
+        match &self.solve_pool {
+            Some(p) => p.clone(),
+            None => Pool::new_capped(plan.threads, 3),
+        }
+    }
+
+    /// Resolve the Lemma-1 feature map: prebuilt > cache > seeded fit.
+    fn resolve_map(&self, plan: &Plan, key: FeatureKey) -> Result<MapHandle<'a>> {
+        if let Some(m) = self.map {
+            return Ok(MapHandle::Borrowed(m));
+        }
+        let (mu, nu) = self.measures()?;
+        let mut rng = Rng::seed_from(plan.seed);
+        if let Some(cache) = self.cache {
+            let radius = mu.radius().max(nu.radius());
+            return Ok(MapHandle::Shared(cache.get_or_fit(
+                key.dim,
+                plan.epsilon,
+                key.r,
+                radius,
+                &mut rng,
+                self.metrics,
+            )));
+        }
+        Ok(MapHandle::Shared(Arc::new(GaussianFeatureMap::fit(
+            mu,
+            nu,
+            plan.epsilon,
+            key.r,
+            &mut rng,
+        ))))
+    }
+
+    fn factored_from_measures(
+        &self,
+        plan: &Plan,
+        map: &GaussianFeatureMap,
+        mu: &Measure,
+        nu: &Measure,
+        pool: Pool,
+    ) -> FactoredKernel {
+        if plan.stabilized_factors {
+            FactoredKernel::from_measures_stabilized_pooled(map, mu, nu, pool)
+        } else {
+            FactoredKernel::from_measures_pooled(map, mu, nu, pool)
+        }
+    }
+
+    fn build_kernel(&self, plan: &Plan, solver_pool: &Pool) -> Result<BuiltKernel> {
+        match plan.backend {
+            Backend::Dense => {
+                let (mu, nu) = self.measures()?;
+                Ok(BuiltKernel::Dense(DenseKernel::from_measures(mu, nu, plan.epsilon)))
+            }
+            Backend::Nystrom { rank } => {
+                let (mu, nu) = self.measures()?;
+                let mut rng = Rng::seed_from(plan.seed);
+                Ok(BuiltKernel::Nystrom(NystromKernel::from_measures(
+                    mu,
+                    nu,
+                    plan.epsilon,
+                    rank,
+                    &mut rng,
+                )))
+            }
+            Backend::Factored { rank } => match self.source {
+                Source::Factors { phi_x, phi_y } => Ok(BuiltKernel::Factored(
+                    FactoredKernel::from_factors(phi_x.clone(), phi_y.clone())
+                        .with_pool(solver_pool.clone()),
+                )),
+                Source::Measures { mu, nu } => {
+                    let key = plan
+                        .cache_key
+                        .unwrap_or_else(|| FeatureKey::new(mu.dim(), plan.epsilon, rank));
+                    let map = self.resolve_map(plan, key)?;
+                    Ok(BuiltKernel::Factored(self.factored_from_measures(
+                        plan,
+                        map.get(),
+                        mu,
+                        nu,
+                        solver_pool.clone(),
+                    )))
+                }
+            },
+        }
+    }
+
+    /// Build the divergence kernel triple (xy, xx, yy) and hand it to
+    /// `f`. One feature map serves all three — the same sharing the
+    /// legacy CLI and coordinator worker hand-wired.
+    fn with_divergence_kernels<T>(
+        &self,
+        plan: &Plan,
+        f: impl FnOnce(
+            &(dyn KernelOp + Sync),
+            &(dyn KernelOp + Sync),
+            &(dyn KernelOp + Sync),
+        ) -> Result<T>,
+    ) -> Result<T> {
+        let solver_pool = self.resolve_solver_pool(plan);
+        match plan.backend {
+            Backend::Nystrom { .. } => Err(Error::Config(
+                "the nystrom backend supports solve() only (no positivity guarantee, no \
+                 debiased divergence in the baseline)"
+                    .into(),
+            )),
+            Backend::Dense => {
+                let (mu, nu) = self.measures()?;
+                let k_xy = DenseKernel::from_measures(mu, nu, plan.epsilon);
+                let k_xx = DenseKernel::from_measures(mu, mu, plan.epsilon);
+                let k_yy = DenseKernel::from_measures(nu, nu, plan.epsilon);
+                f(&k_xy, &k_xx, &k_yy)
+            }
+            Backend::Factored { rank } => match self.source {
+                Source::Factors { phi_x, phi_y } => {
+                    let k_xy = FactoredKernel::from_factors(phi_x.clone(), phi_y.clone())
+                        .with_pool(solver_pool.clone());
+                    let k_xx = FactoredKernel::from_factors(phi_x.clone(), phi_x.clone())
+                        .with_pool(solver_pool.clone());
+                    let k_yy = FactoredKernel::from_factors(phi_y.clone(), phi_y.clone())
+                        .with_pool(solver_pool);
+                    f(&k_xy, &k_xx, &k_yy)
+                }
+                Source::Measures { mu, nu } => {
+                    let key = plan
+                        .cache_key
+                        .unwrap_or_else(|| FeatureKey::new(mu.dim(), plan.epsilon, rank));
+                    let map = self.resolve_map(plan, key)?;
+                    let m = map.get();
+                    let k_xy =
+                        self.factored_from_measures(plan, m, mu, nu, solver_pool.clone());
+                    let k_xx =
+                        self.factored_from_measures(plan, m, mu, mu, solver_pool.clone());
+                    let k_yy = self.factored_from_measures(plan, m, nu, nu, solver_pool);
+                    f(&k_xy, &k_xx, &k_yy)
+                }
+            },
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // Solve routing (the bitwise contract lives here).
+    // ----------------------------------------------------------------
+
+    fn run_single<K: KernelOp + ?Sized>(
+        &self,
+        plan: &Plan,
+        kernel: &K,
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<Solution> {
+        let cfg = plan.sinkhorn_config();
+        let sw = Stopwatch::start();
+        if plan.accelerated {
+            let sol = sinkhorn_accelerated(kernel, a, b, &cfg)?;
+            return Ok(Solution::from_accel(sol, us(&sw)));
+        }
+        match plan.domain {
+            Domain::Plain => sinkhorn(kernel, a, b, &cfg)
+                .map(|s| Solution::from_sinkhorn(s, false, us(&sw))),
+            Domain::AutoEscalate => sinkhorn_stabilized(kernel, a, b, &cfg)
+                .map(|(s, esc)| Solution::from_sinkhorn(s, esc, us(&sw))),
+            Domain::LogDomain => {
+                let log = kernel.as_log_kernel().ok_or_else(|| {
+                    Error::Config(format!("kernel {} has no log-domain view", kernel.label()))
+                })?;
+                sinkhorn_log_domain(log, a, b, &cfg)
+                    .map(|s| Solution::from_sinkhorn(s, false, us(&sw)))
+            }
+        }
+    }
+
+    fn run_batch<K: KernelOp + ?Sized>(
+        &self,
+        plan: &Plan,
+        kernel: &K,
+        pairs: &[(&[f32], &[f32])],
+    ) -> Vec<Result<Solution>> {
+        let cfg = plan.sinkhorn_config();
+        if plan.accelerated {
+            // The planner rejects this combination; guard hand-crafted
+            // (deserialised) plans the same way instead of silently
+            // running the wrong solver.
+            return pairs
+                .iter()
+                .map(|_| {
+                    Err(Error::Config(
+                        "accelerated plans are single-pair; use solve_planned()".into(),
+                    ))
+                })
+                .collect();
+        }
+        let width = plan.batch_width.max(1);
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(width) {
+            let sw = Stopwatch::start();
+            let results = batch_by_domain(kernel, chunk, &cfg, plan.domain);
+            let wall = us(&sw);
+            out.extend(
+                results
+                    .into_iter()
+                    .map(|r| r.map(|(s, esc)| Solution::from_sinkhorn(s, esc, wall))),
+            );
+        }
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_divergence<K: KernelOp + Sync + ?Sized>(
+        &self,
+        plan: &Plan,
+        k_xy: &K,
+        k_xx: &K,
+        k_yy: &K,
+        a: &[f32],
+        b: &[f32],
+        sw: &Stopwatch,
+    ) -> Result<DivergenceReport> {
+        let cfg = plan.sinkhorn_config();
+        let solve_pool = self.resolve_solve_pool(plan);
+        // One closure per transport problem, all routed by the planned
+        // domain; the log view is taken *inside* the worker so the
+        // non-Send trait object never crosses threads.
+        let solve_one = |k: &K, a: &[f32], b: &[f32]| -> Result<Solution> {
+            let sw = Stopwatch::start();
+            match plan.domain {
+                Domain::Plain => {
+                    sinkhorn(k, a, b, &cfg).map(|s| Solution::from_sinkhorn(s, false, us(&sw)))
+                }
+                Domain::AutoEscalate => sinkhorn_stabilized(k, a, b, &cfg)
+                    .map(|(s, esc)| Solution::from_sinkhorn(s, esc, us(&sw))),
+                Domain::LogDomain => {
+                    let log = k.as_log_kernel().ok_or_else(|| {
+                        Error::Config(format!("kernel {} has no log-domain view", k.label()))
+                    })?;
+                    sinkhorn_log_domain(log, a, b, &cfg)
+                        .map(|s| Solution::from_sinkhorn(s, false, us(&sw)))
+                }
+            }
+        };
+        let (r_xy, r_xx, r_yy) = solve_pool.join3(
+            || solve_one(k_xy, a, b),
+            || solve_one(k_xx, a, a),
+            || solve_one(k_yy, b, b),
+        );
+        // Error priority matches the legacy path: xy, then xx, then yy.
+        Ok(DivergenceReport::assemble(r_xy?, r_xx?, r_yy?, us(sw)))
+    }
+
+    fn run_divergence_batch<K: KernelOp + Sync + ?Sized>(
+        &self,
+        plan: &Plan,
+        k_xy: &K,
+        k_xx: &K,
+        k_yy: &K,
+        pairs: &[(&[f32], &[f32])],
+        sw: &Stopwatch,
+    ) -> Vec<Result<DivergenceReport>> {
+        let cfg = plan.sinkhorn_config();
+        let width = plan.batch_width.max(1);
+        let solve_pool = self.resolve_solve_pool(plan);
+        let xx_pairs: Vec<(&[f32], &[f32])> = pairs.iter().map(|&(a, _)| (a, a)).collect();
+        let yy_pairs: Vec<(&[f32], &[f32])> = pairs.iter().map(|&(_, b)| (b, b)).collect();
+        let run = |k: &K, prs: &[(&[f32], &[f32])]| -> Vec<Result<(SinkhornSolution, bool)>> {
+            let mut out = Vec::with_capacity(prs.len());
+            for chunk in prs.chunks(width) {
+                out.extend(batch_by_domain(k, chunk, &cfg, plan.domain));
+            }
+            out
+        };
+        let (r_xy, r_xx, r_yy) = solve_pool.join3(
+            || run(k_xy, pairs),
+            || run(k_xx, &xx_pairs),
+            || run(k_yy, &yy_pairs),
+        );
+        let wall = us(sw);
+        r_xy.into_iter()
+            .zip(r_xx)
+            .zip(r_yy)
+            .map(|((xy, xx), yy)| {
+                let (s_xy, e_xy) = xy?;
+                let (s_xx, e_xx) = xx?;
+                let (s_yy, e_yy) = yy?;
+                Ok(DivergenceReport::assemble(
+                    Solution::from_sinkhorn(s_xy, e_xy, wall),
+                    Solution::from_sinkhorn(s_xx, e_xx, wall),
+                    Solution::from_sinkhorn(s_yy, e_yy, wall),
+                    wall,
+                ))
+            })
+            .collect()
+    }
+}
+
+/// Route one batched chunk by the planned domain. `Plain` and
+/// `AutoEscalate` share [`solve_batch_stabilized`] (whose behaviour is
+/// gated by `cfg.stabilize`, exactly like the sequential
+/// `sinkhorn_stabilized`); `LogDomain` goes straight to the batched
+/// log-domain solver through the kernel's log view.
+fn batch_by_domain<K: KernelOp + ?Sized>(
+    kernel: &K,
+    chunk: &[(&[f32], &[f32])],
+    cfg: &crate::config::SinkhornConfig,
+    domain: Domain,
+) -> Vec<Result<(SinkhornSolution, bool)>> {
+    match domain {
+        Domain::Plain | Domain::AutoEscalate => solve_batch_stabilized(kernel, chunk, cfg),
+        Domain::LogDomain => match kernel.as_log_kernel() {
+            Some(log) => solve_batch_log_domain(log, chunk, cfg)
+                .into_iter()
+                .map(|r| r.map(|s| (s, false)))
+                .collect(),
+            None => chunk
+                .iter()
+                .map(|_| {
+                    Err(Error::Config(format!(
+                        "kernel {} has no log-domain view",
+                        kernel.label()
+                    )))
+                })
+                .collect(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::DomainChoice;
+    use crate::data;
+
+    fn clouds(n: usize) -> (Measure, Measure) {
+        let mut rng = Rng::seed_from(3);
+        data::gaussian_blobs(n, &mut rng)
+    }
+
+    #[test]
+    fn solve_and_divergence_roundtrip_through_a_serialised_plan() {
+        // The cross-host story in miniature: plan, ship as JSON, decode,
+        // execute — identical to executing the original plan.
+        let (mu, nu) = clouds(40);
+        let problem = OtProblem::new(&mu, &nu).epsilon(0.5).rank(32).seed(9);
+        let plan = problem.plan().unwrap();
+        let wire = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(wire, plan);
+        let direct = problem.solve_planned(&plan).unwrap();
+        let shipped = problem.solve_planned(&wire).unwrap();
+        assert_eq!(direct.objective.to_bits(), shipped.objective.to_bits());
+        let d1 = problem.divergence_planned(&plan).unwrap();
+        let d2 = problem.divergence_planned(&wire).unwrap();
+        assert_eq!(d1.divergence.to_bits(), d2.divergence.to_bits());
+    }
+
+    #[test]
+    fn solve_rejects_multi_pair_problems() {
+        let (mu, nu) = clouds(20);
+        let a = vec![0.05f32; 20];
+        let pairs: Vec<(&[f32], &[f32])> = vec![(&a[..], &a[..]), (&a[..], &a[..])];
+        let p = OtProblem::new(&mu, &nu).rank(8).weight_pairs(&pairs);
+        assert!(matches!(p.solve(), Err(Error::Config(_))));
+        assert!(matches!(p.divergence(), Err(Error::Config(_))));
+        assert_eq!(p.solve_all().len(), 2);
+    }
+
+    #[test]
+    fn accelerated_divergence_is_a_typed_error() {
+        // Alg. 2 has no three-solve divergence form; it must never
+        // silently run Alg. 1 instead.
+        let (mu, nu) = clouds(20);
+        let p = OtProblem::new(&mu, &nu).rank(8).accelerated();
+        assert!(p.solve().is_ok());
+        assert!(matches!(p.divergence(), Err(Error::Config(_))));
+        let w = vec![0.05f32; 20];
+        let pairs: Vec<(&[f32], &[f32])> = vec![(&w[..], &w[..]), (&w[..], &w[..])];
+        let p2 = OtProblem::new(&mu, &nu).rank(8).weight_pairs(&pairs).accelerated();
+        let reports = p2.divergence_all();
+        assert_eq!(reports.len(), 2, "errors stay index-aligned with the pairs");
+        assert!(reports.iter().all(|r| matches!(r, Err(Error::Config(_)))));
+    }
+
+    #[test]
+    fn nystrom_divergence_is_a_typed_error() {
+        // eps = 5.0 with rank ~ n/3 is the regime where Nyström is known
+        // accurate and positive (`nystrom_accurate_at_large_eps`).
+        let (mu, nu) = clouds(30);
+        let p = OtProblem::new(&mu, &nu).epsilon(5.0).nystrom(10);
+        assert!(p.solve().is_ok());
+        assert!(matches!(p.divergence(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn solution_reports_the_executed_arm_and_wall_clock() {
+        let (mu, nu) = clouds(30);
+        let sol = OtProblem::new(&mu, &nu).epsilon(0.5).rank(16).solve().unwrap();
+        assert_eq!(sol.simd_arm, crate::linalg::simd::active_level().label());
+        assert!(sol.objective.is_finite());
+        assert!(!sol.escalated);
+    }
+
+    #[test]
+    fn planned_log_domain_is_not_reported_as_escalation() {
+        let (mu, nu) = clouds(25);
+        let sol = OtProblem::new(&mu, &nu)
+            .epsilon(0.5)
+            .rank(16)
+            .domain(DomainChoice::LogDomain)
+            .solve()
+            .unwrap();
+        assert!(!sol.escalated);
+        assert!(sol.objective.is_finite());
+    }
+
+    #[test]
+    fn feature_cache_is_honoured_with_metrics() {
+        use crate::coordinator::cache::FeatureCache;
+        use crate::metrics::Registry;
+        let (mu, nu) = clouds(30);
+        let cache = FeatureCache::new(4);
+        let metrics = Registry::default();
+        for _ in 0..3 {
+            OtProblem::new(&mu, &nu)
+                .epsilon(0.5)
+                .rank(16)
+                .feature_cache(&cache)
+                .metrics(&metrics)
+                .solve()
+                .unwrap();
+        }
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(metrics.counter("service.feature_cache.hits").get(), 2);
+    }
+}

@@ -1,0 +1,50 @@
+//! The unified solver API: **Problem → Plan → Solution**.
+//!
+//! Four PRs of subsystem growth left nine free solver functions plus
+//! hand-wired kernel construction on the public surface, so every caller
+//! re-implemented the paper's core decision — positive-feature factored
+//! kernel vs dense Gibbs, and when to escalate to log-domain
+//! stabilisation. This module puts that decision behind a typed planner:
+//!
+//! 1. [`OtProblem`] — a builder describing *what* to solve: measures (or
+//!    prebuilt positive factors), eps, rank, weight pairs, thread /
+//!    SIMD / determinism preferences, optional shared feature-map cache
+//!    and persistent pools.
+//! 2. [`Plan`] — an inspectable, serialisable decision record: chosen
+//!    [`Backend`] (`Dense | Factored | Nystrom`), [`Domain`]
+//!    (`Plain | LogDomain | AutoEscalate`), batch fusion width, pool
+//!    widths, `(dim, eps, r)` cache key, and the SIMD dispatch arm.
+//!    [`Plan::to_json`] / [`Plan::from_json`] round-trip exactly — the
+//!    groundwork for shipping fuse groups to remote workers.
+//! 3. [`Solution`] / [`DivergenceReport`] — objective, duals, per-problem
+//!    convergence, escalation flags, wall clock, and the dispatch-arm tag
+//!    matching the BENCH_*.json `cpu` field.
+//!
+//! Execution routes through the pre-existing solver layer bitwise
+//! unchanged — see `api/execute.rs`'s module docs for the plan →
+//! legacy-path table and `rust/tests/api_equivalence.rs` for the proof.
+//! The old free
+//! functions remain available for reference-level work via
+//! [`crate::prelude::legacy`].
+
+mod execute;
+mod plan;
+mod problem;
+mod solution;
+
+pub use plan::{Backend, Domain, Plan};
+pub use problem::{DomainChoice, KernelChoice, OtProblem, SimdPreference};
+pub use solution::{DivergenceReport, Solution};
+
+/// Feature count the planner assumes when no rank is requested and the
+/// backend is auto-chosen (matches the divergence service's default).
+pub const DEFAULT_RANK: usize = 256;
+
+/// Planner threshold for skipping the plain f32 attempt entirely: when
+/// `R^2 / eps` exceeds this, typical Gibbs values sit so far below the
+/// stabilised factors' `exp(LOG_FLOOR)` clamp that row sums flush to
+/// zero in f32 and plain Alg. 1 cannot finish — the planner goes
+/// straight to the log domain. `2 * |LOG_FLOOR| = 160` nats, the same
+/// constant that sizes the factor clamp (a feature *product* spans two
+/// factors).
+pub const UNDERFLOW_LOG_SPREAD: f64 = 2.0 * (-crate::features::LOG_FLOOR) as f64;

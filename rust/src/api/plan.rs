@@ -1,0 +1,400 @@
+//! The [`Plan`]: an inspectable, serialisable record of every decision the
+//! planner made for one [`super::OtProblem`].
+//!
+//! A `Plan` is pure data — no kernels, no pools, no borrowed measures —
+//! which is what makes it the unit a coordinator can ship across hosts
+//! (ROADMAP: cross-host shard dispatch of fuse groups). Handles that
+//! cannot serialise (worker pools, the shared feature-map cache) are
+//! represented by their *decisions*: the pool widths and the `(dim, eps,
+//! r)` cache key. The executor ([`super::OtProblem::solve_planned`] and
+//! friends) re-binds those decisions to live handles at execution time.
+//!
+//! The JSON encoding ([`Plan::to_json`] / [`Plan::from_json`]) uses the
+//! crate's own minimal parser (`runtime/json.rs`, re-exported as
+//! [`crate::runtime::Json`]) — no serde in the offline crate set.
+//! Round-tripping is exact: floats are written
+//! with Rust's shortest-round-trip `Display` and the `u64` seed is
+//! carried as a decimal string (JSON numbers are f64 and cannot hold all
+//! of `u64`).
+
+use crate::config::SinkhornConfig;
+use crate::coordinator::cache::FeatureKey;
+use crate::error::{Error, Result};
+use crate::runtime::Json;
+
+/// Kernel backend chosen by the planner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Materialised Gibbs kernel `exp(-C/eps)` — exact, O(nm) per apply
+    /// (the paper's `Sin` baseline).
+    Dense,
+    /// The paper's positive-feature factored kernel `K = Φ_x Φ_y^T` —
+    /// O(r(n+m)) per apply, positive by construction (`RF`).
+    Factored {
+        /// Feature count r.
+        rank: usize,
+    },
+    /// Nyström low-rank baseline — O(r(n+m)) but **not** positivity-safe
+    /// (`Nys`); only planned on explicit request.
+    Nystrom {
+        /// Landmark count.
+        rank: usize,
+    },
+}
+
+impl Backend {
+    /// The rank driving the `(dim, eps, r)` cache key (0 for dense).
+    pub fn rank(&self) -> usize {
+        match *self {
+            Backend::Dense => 0,
+            Backend::Factored { rank } | Backend::Nystrom { rank } => rank,
+        }
+    }
+
+    fn tag(&self) -> &'static str {
+        match self {
+            Backend::Dense => "dense",
+            Backend::Factored { .. } => "factored",
+            Backend::Nystrom { .. } => "nystrom",
+        }
+    }
+}
+
+/// Numeric domain of the Sinkhorn iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// Plain Alg. 1 on f32 scalings; diverges loudly (typed error) when
+    /// eps is too small for f32.
+    Plain,
+    /// The matrix-free log-domain iteration on f64 duals — planned
+    /// directly when the regularisation is hopeless for f32.
+    LogDomain,
+    /// Plain first, escalating to the log-domain solver on
+    /// [`Error::SinkhornDiverged`] — the production default.
+    AutoEscalate,
+}
+
+impl Domain {
+    fn tag(&self) -> &'static str {
+        match self {
+            Domain::Plain => "plain",
+            Domain::LogDomain => "log_domain",
+            Domain::AutoEscalate => "auto_escalate",
+        }
+    }
+}
+
+/// An inspectable, serialisable solver plan. See the module docs.
+///
+/// Field-by-field this is the union of the decisions that, before this
+/// API existed, were scattered across call sites: which kernel backend
+/// (`kernels/`), whether to stabilise the factor construction
+/// (`FactoredKernel::from_measures_stabilized`), which numeric domain and
+/// when to escalate (`sinkhorn::sinkhorn_stabilized`), how wide to fuse
+/// batched solves (`coordinator::batcher::fuse_groups`), which pool
+/// widths to use (`runtime::pool`), and which SIMD arm the process
+/// dispatches (`linalg::simd`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    /// Chosen kernel backend.
+    pub backend: Backend,
+    /// Chosen numeric domain / escalation policy.
+    pub domain: Domain,
+    /// Stabilised (max-shifted log) factor construction for the factored
+    /// backend — lets arbitrary data survive f32 at small eps.
+    pub stabilized_factors: bool,
+    /// Alg. 2 (accelerated) instead of Alg. 1 — plain domain, B = 1 only.
+    pub accelerated: bool,
+    /// Number of weight pairs B this plan covers.
+    pub pairs: usize,
+    /// Fused width per batched solve call (≤ `pairs`, capped by the
+    /// problem's `max_batch`).
+    pub batch_width: usize,
+    /// Solve-level concurrency: the three transport problems of a
+    /// divergence (0 = auto-size, capped at 3 by the executor).
+    pub threads: usize,
+    /// Intra-solve pool width for row-chunked applies and parallel
+    /// feature evaluation (0 = auto-size).
+    pub solver_threads: usize,
+    /// The SIMD dispatch arm recorded at planning time (`"scalar"` /
+    /// `"avx2+fma"` — the `cpu` tag of the BENCH_*.json tables). Dispatch
+    /// is process-global, so this is a *record*, not a switch: a plan
+    /// executed on another host runs that host's arm, and the
+    /// [`super::Solution`] reports the arm that actually executed.
+    pub simd_arm: String,
+    /// `(dim, eps, r)` feature-map cache key when the factored backend is
+    /// fitted from measures — the amortisation unit of
+    /// [`crate::coordinator::cache::FeatureCache`].
+    pub cache_key: Option<FeatureKey>,
+    /// Entropic regularisation.
+    pub epsilon: f64,
+    /// Solver iteration cap.
+    pub max_iters: usize,
+    /// L1 marginal stopping tolerance.
+    pub tol: f64,
+    /// Stopping-check cadence.
+    pub check_every: usize,
+    /// Problem shape (rows of K = size of mu).
+    pub n: usize,
+    /// Problem shape (cols of K = size of nu).
+    pub m: usize,
+    /// Seed for the Lemma-1 anchor draw (and the Nyström landmark draw)
+    /// when the executor fits a map itself.
+    pub seed: u64,
+}
+
+impl Plan {
+    /// The [`SinkhornConfig`] the executor hands to the underlying
+    /// solver loops. `stabilize` is exactly `domain == AutoEscalate`, so
+    /// the legacy free functions behave bit-for-bit as the plan dictates.
+    pub fn sinkhorn_config(&self) -> SinkhornConfig {
+        SinkhornConfig {
+            epsilon: self.epsilon,
+            max_iters: self.max_iters,
+            tol: self.tol,
+            check_every: self.check_every,
+            threads: self.threads,
+            stabilize: self.domain == Domain::AutoEscalate,
+            max_batch: self.batch_width.max(1),
+        }
+    }
+
+    /// One-line human summary (the CLI's `--explain`).
+    pub fn summary(&self) -> String {
+        let backend = match self.backend {
+            Backend::Dense => format!("dense({}x{})", self.n, self.m),
+            Backend::Factored { rank } => format!("factored(r={rank} {}x{})", self.n, self.m),
+            Backend::Nystrom { rank } => format!("nystrom(r={rank} {}x{})", self.n, self.m),
+        };
+        format!(
+            "plan: backend={backend} domain={} stabilized_factors={} pairs={} width={} \
+             threads={}/{} simd={} eps={} cache_key={}",
+            self.domain.tag(),
+            self.stabilized_factors,
+            self.pairs,
+            self.batch_width,
+            self.threads,
+            self.solver_threads,
+            self.simd_arm,
+            self.epsilon,
+            match self.cache_key {
+                Some(k) => format!("(d={},eps,r={})", k.dim, k.r),
+                None => "-".into(),
+            }
+        )
+    }
+
+    /// Stable JSON encoding. Exact round trip through
+    /// [`Plan::from_json`]: floats use shortest-round-trip formatting,
+    /// the seed is a decimal string, and the cache key stores only
+    /// `(dim, r)` (its eps bits are derived from `epsilon`, which they
+    /// equal by construction).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(320);
+        s.push_str("{\"v\":1,\"backend\":\"");
+        s.push_str(self.backend.tag());
+        s.push('"');
+        if self.backend.rank() > 0 {
+            s.push_str(&format!(",\"rank\":{}", self.backend.rank()));
+        }
+        s.push_str(&format!(",\"domain\":\"{}\"", self.domain.tag()));
+        s.push_str(&format!(",\"stabilized_factors\":{}", self.stabilized_factors));
+        s.push_str(&format!(",\"accelerated\":{}", self.accelerated));
+        s.push_str(&format!(",\"pairs\":{}", self.pairs));
+        s.push_str(&format!(",\"batch_width\":{}", self.batch_width));
+        s.push_str(&format!(",\"threads\":{}", self.threads));
+        s.push_str(&format!(",\"solver_threads\":{}", self.solver_threads));
+        s.push_str(&format!(",\"simd_arm\":\"{}\"", self.simd_arm));
+        if let Some(k) = self.cache_key {
+            s.push_str(&format!(",\"cache\":{{\"dim\":{},\"r\":{}}}", k.dim, k.r));
+        }
+        s.push_str(&format!(",\"epsilon\":{}", self.epsilon));
+        s.push_str(&format!(",\"max_iters\":{}", self.max_iters));
+        s.push_str(&format!(",\"tol\":{}", self.tol));
+        s.push_str(&format!(",\"check_every\":{}", self.check_every));
+        s.push_str(&format!(",\"n\":{},\"m\":{}", self.n, self.m));
+        s.push_str(&format!(",\"seed\":\"{}\"", self.seed));
+        s.push('}');
+        s
+    }
+
+    /// Decode a plan previously encoded with [`Plan::to_json`].
+    pub fn from_json(text: &str) -> Result<Plan> {
+        let j = Json::parse(text).map_err(|e| Error::Config(format!("plan json: {e}")))?;
+        let str_field = |name: &str| -> Result<&str> {
+            j.get(name)
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Config(format!("plan json: missing string `{name}`")))
+        };
+        let usize_field = |name: &str| -> Result<usize> {
+            j.get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Config(format!("plan json: missing integer `{name}`")))
+        };
+        let f64_field = |name: &str| -> Result<f64> {
+            j.get(name)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Config(format!("plan json: missing number `{name}`")))
+        };
+        let bool_field = |name: &str| -> Result<bool> {
+            match j.get(name) {
+                Some(Json::Bool(b)) => Ok(*b),
+                _ => Err(Error::Config(format!("plan json: missing bool `{name}`"))),
+            }
+        };
+
+        let backend = match str_field("backend")? {
+            "dense" => Backend::Dense,
+            "factored" => Backend::Factored { rank: usize_field("rank")? },
+            "nystrom" => Backend::Nystrom { rank: usize_field("rank")? },
+            other => return Err(Error::Config(format!("plan json: unknown backend `{other}`"))),
+        };
+        if matches!(backend, Backend::Factored { rank: 0 } | Backend::Nystrom { rank: 0 }) {
+            return Err(Error::Config("plan json: rank must be >= 1".into()));
+        }
+        let domain = match str_field("domain")? {
+            "plain" => Domain::Plain,
+            "log_domain" => Domain::LogDomain,
+            "auto_escalate" => Domain::AutoEscalate,
+            other => return Err(Error::Config(format!("plan json: unknown domain `{other}`"))),
+        };
+        // Re-assert the planner's invariants: a wire plan is executed
+        // without going back through `OtProblem::plan()`, so a corrupted
+        // or hand-built document must not reach the kernels (eps <= 0
+        // would exponentiate to NaN, not to a typed error).
+        let epsilon = f64_field("epsilon")?;
+        if !(epsilon > 0.0 && epsilon.is_finite()) {
+            return Err(Error::Config(format!(
+                "plan json: epsilon must be positive and finite, got {epsilon}"
+            )));
+        }
+        let cache_key = match j.get("cache") {
+            Some(c) => {
+                let dim = c
+                    .get("dim")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::Config("plan json: cache.dim".into()))?;
+                let r = c
+                    .get("r")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::Config("plan json: cache.r".into()))?;
+                Some(FeatureKey::new(dim, epsilon, r))
+            }
+            None => None,
+        };
+        let seed = str_field("seed")?
+            .parse::<u64>()
+            .map_err(|_| Error::Config("plan json: seed must be a decimal u64 string".into()))?;
+
+        Ok(Plan {
+            backend,
+            domain,
+            stabilized_factors: bool_field("stabilized_factors")?,
+            accelerated: bool_field("accelerated")?,
+            pairs: usize_field("pairs")?,
+            batch_width: usize_field("batch_width")?,
+            threads: usize_field("threads")?,
+            solver_threads: usize_field("solver_threads")?,
+            simd_arm: str_field("simd_arm")?.to_string(),
+            cache_key,
+            epsilon,
+            max_iters: usize_field("max_iters")?,
+            tol: f64_field("tol")?,
+            check_every: usize_field("check_every")?,
+            n: usize_field("n")?,
+            m: usize_field("m")?,
+            seed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(backend: Backend, domain: Domain, cache: bool) -> Plan {
+        Plan {
+            backend,
+            domain,
+            stabilized_factors: true,
+            accelerated: false,
+            pairs: 4,
+            batch_width: 4,
+            threads: 3,
+            solver_threads: 2,
+            simd_arm: "avx2+fma".into(),
+            cache_key: cache.then(|| FeatureKey::new(2, 0.05, 256)),
+            epsilon: 0.05,
+            max_iters: 5000,
+            tol: 1e-3,
+            check_every: 10,
+            n: 1000,
+            m: 900,
+            seed: u64::MAX, // exercise the beyond-f64 seed path
+        }
+    }
+
+    #[test]
+    fn json_round_trips_every_backend_and_domain() {
+        for plan in [
+            sample(Backend::Factored { rank: 256 }, Domain::AutoEscalate, true),
+            sample(Backend::Dense, Domain::Plain, false),
+            sample(Backend::Nystrom { rank: 32 }, Domain::Plain, false),
+            sample(Backend::Factored { rank: 8 }, Domain::LogDomain, true),
+        ] {
+            let text = plan.to_json();
+            let back = Plan::from_json(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+            assert_eq!(back, plan, "{text}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact_on_awkward_floats() {
+        // Shortest-round-trip Display must reproduce the exact bits, not
+        // a decimal approximation.
+        let mut plan = sample(Backend::Factored { rank: 10 }, Domain::Plain, true);
+        plan.epsilon = 0.1f64.powi(3) * 3.0; // a non-terminating binary fraction
+        plan.tol = f64::MIN_POSITIVE;
+        if let Some(k) = plan.cache_key.as_mut() {
+            *k = FeatureKey::new(k.dim, plan.epsilon, k.r);
+        }
+        let back = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back.epsilon.to_bits(), plan.epsilon.to_bits());
+        assert_eq!(back.tol.to_bits(), plan.tol.to_bits());
+        assert_eq!(back.cache_key, plan.cache_key, "cache eps bits derive from epsilon");
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_plans() {
+        assert!(Plan::from_json("not json").is_err());
+        assert!(Plan::from_json("{}").is_err());
+        let plan = sample(Backend::Factored { rank: 2 }, Domain::Plain, false);
+        let bad = plan.to_json().replace("\"factored\"", "\"quantum\"");
+        assert!(Plan::from_json(&bad).is_err());
+        let bad_seed = plan.to_json().replace(&format!("\"{}\"", u64::MAX), "\"-1\"");
+        assert!(Plan::from_json(&bad_seed).is_err());
+        // Planner invariants hold on the wire too: a corrupted document
+        // must fail decoding, not reach the kernels.
+        let bad_eps = plan.to_json().replace("\"epsilon\":0.05", "\"epsilon\":0");
+        assert!(Plan::from_json(&bad_eps).is_err());
+        let bad_rank = plan.to_json().replace("\"rank\":2", "\"rank\":0");
+        assert!(Plan::from_json(&bad_rank).is_err());
+    }
+
+    #[test]
+    fn sinkhorn_config_mirrors_the_domain() {
+        let esc = sample(Backend::Dense, Domain::AutoEscalate, false);
+        assert!(esc.sinkhorn_config().stabilize);
+        let plain = sample(Backend::Dense, Domain::Plain, false);
+        assert!(!plain.sinkhorn_config().stabilize);
+        assert_eq!(plain.sinkhorn_config().max_batch, 4);
+    }
+
+    #[test]
+    fn summary_mentions_the_load_bearing_decisions() {
+        let s = sample(Backend::Factored { rank: 256 }, Domain::AutoEscalate, true).summary();
+        assert!(s.contains("factored(r=256"), "{s}");
+        assert!(s.contains("auto_escalate"), "{s}");
+        assert!(s.contains("width=4"), "{s}");
+    }
+}

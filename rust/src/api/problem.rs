@@ -1,0 +1,712 @@
+//! [`OtProblem`]: the builder describing *what* to solve, and the planner
+//! turning it into a [`Plan`] describing *how*.
+//!
+//! The planner is where the repo's previously scattered heuristics now
+//! live, in one auditable place:
+//!
+//! * **Backend choice** — factored vs dense by per-iteration flops
+//!   (`r(n+m)` vs `nm`, the paper's headline complexity contrast);
+//!   Nyström only on explicit request (it can lose positivity).
+//! * **f32-underflow escalation** — the production default is
+//!   [`Domain::AutoEscalate`] (plain Alg. 1, retry in the log domain on a
+//!   typed divergence), but when the regularisation is hopeless for f32 —
+//!   the Gibbs values live beyond f32's exponent range even after the
+//!   stabilised factor shift — the planner goes straight to
+//!   [`Domain::LogDomain`] and skips the doomed plain attempt.
+//! * **Fuse width** — B weight pairs on one support fuse into
+//!   column-blocked batched solves of width ≤ `max_batch`, exactly the
+//!   grouping rule of [`crate::coordinator::batcher::fuse_groups`].
+//! * **Cache key** — factored backends fitted from measures record their
+//!   `(dim, eps, r)` key, the amortisation unit of the shared
+//!   feature-map cache.
+//! * **SIMD arm** — recorded from the process-global dispatch
+//!   ([`crate::linalg::simd::active_level`]); a preference that the
+//!   process cannot honour is a typed planning error, never a silent
+//!   fallback.
+
+use crate::config::SinkhornConfig;
+use crate::coordinator::cache::{FeatureCache, FeatureKey};
+use crate::data::Measure;
+use crate::error::{Error, Result};
+use crate::features::GaussianFeatureMap;
+use crate::linalg::simd::{self, SimdLevel};
+use crate::linalg::Mat;
+use crate::metrics::Registry;
+use crate::runtime::pool::Pool;
+
+use super::plan::{Backend, Domain, Plan};
+use super::{DEFAULT_RANK, UNDERFLOW_LOG_SPREAD};
+
+/// Requested kernel backend (the planner resolves `Auto`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Let the planner pick factored-vs-dense by per-iteration flops.
+    Auto,
+    /// Force the dense Gibbs baseline.
+    Dense,
+    /// Force the positive-feature factored kernel with this rank.
+    Factored { rank: usize },
+    /// Force the Nyström baseline with this rank (solve-only; may lose
+    /// positivity — that failure surfaces as a typed error).
+    Nystrom { rank: usize },
+}
+
+/// Requested numeric domain (the planner resolves `Auto`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DomainChoice {
+    /// Let the planner pick (escalate by default, straight log-domain
+    /// when eps is hopeless for f32).
+    Auto,
+    /// Plain Alg. 1 only; small-eps failures stay typed errors.
+    Plain,
+    /// The matrix-free log-domain solver directly.
+    LogDomain,
+    /// Plain with automatic log-domain escalation.
+    AutoEscalate,
+}
+
+/// Requested SIMD arm. Dispatch is process-global
+/// (`LINEAR_SINKHORN_SIMD`), so a preference the process cannot honour
+/// fails planning with a [`Error::Config`] instead of silently running
+/// the other arm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPreference {
+    /// Record whatever the process dispatches.
+    Auto,
+    /// Require the portable scalar arm.
+    Scalar,
+    /// Require the AVX2+FMA arm.
+    Avx2Fma,
+}
+
+/// What the kernel is built from.
+pub(crate) enum Source<'a> {
+    /// Two point clouds; the executor evaluates a feature map / cost.
+    Measures { mu: &'a Measure, nu: &'a Measure },
+    /// Prebuilt positive factor matrices (e.g. the GAN's learned
+    /// features): `K = phi_x phi_y^T` as given.
+    Factors { phi_x: &'a Mat, phi_y: &'a Mat },
+}
+
+/// A transport problem (or a batch of them on one shared support),
+/// described declaratively. `plan()` turns it into a [`Plan`];
+/// `solve()` / `divergence()` / the `*_all` batch forms execute one.
+///
+/// ```no_run
+/// use linear_sinkhorn::prelude::*;
+///
+/// let mut rng = Rng::seed_from(0);
+/// let (mu, nu) = data::gaussian_blobs(1000, &mut rng);
+/// let sol = OtProblem::new(&mu, &nu).epsilon(0.5).rank(256).solve()?;
+/// println!("ROT ~= {} [{}]", sol.objective, sol.simd_arm);
+/// # Ok::<(), linear_sinkhorn::error::Error>(())
+/// ```
+pub struct OtProblem<'a> {
+    pub(crate) source: Source<'a>,
+    pub(crate) weights: Option<(&'a [f32], &'a [f32])>,
+    pub(crate) pairs: Vec<(&'a [f32], &'a [f32])>,
+    pub(crate) epsilon: f64,
+    pub(crate) kernel: KernelChoice,
+    pub(crate) domain: DomainChoice,
+    pub(crate) accelerated: bool,
+    pub(crate) stabilized: Option<bool>,
+    pub(crate) max_iters: usize,
+    pub(crate) tol: f64,
+    pub(crate) check_every: usize,
+    pub(crate) threads: usize,
+    pub(crate) solver_threads: usize,
+    pub(crate) max_batch: usize,
+    pub(crate) seed: u64,
+    pub(crate) simd: SimdPreference,
+    pub(crate) map: Option<&'a GaussianFeatureMap>,
+    pub(crate) cache: Option<&'a FeatureCache>,
+    pub(crate) metrics: Option<&'a Registry>,
+    pub(crate) solver_pool: Option<Pool>,
+    pub(crate) solve_pool: Option<Pool>,
+}
+
+impl<'a> OtProblem<'a> {
+    fn with_source(source: Source<'a>) -> Self {
+        let d = SinkhornConfig::default();
+        OtProblem {
+            source,
+            weights: None,
+            pairs: Vec::new(),
+            epsilon: d.epsilon,
+            kernel: KernelChoice::Auto,
+            domain: DomainChoice::Auto,
+            accelerated: false,
+            stabilized: None,
+            max_iters: d.max_iters,
+            tol: d.tol,
+            check_every: d.check_every,
+            threads: d.threads,
+            solver_threads: 1,
+            max_batch: d.max_batch,
+            seed: 0,
+            simd: SimdPreference::Auto,
+            map: None,
+            cache: None,
+            metrics: None,
+            solver_pool: None,
+            solve_pool: None,
+        }
+    }
+
+    /// A problem between two point-cloud measures (weights default to the
+    /// measures' own).
+    pub fn new(mu: &'a Measure, nu: &'a Measure) -> Self {
+        Self::with_source(Source::Measures { mu, nu })
+    }
+
+    /// A problem on a prebuilt factored kernel `K = phi_x phi_y^T`
+    /// (strictly positive factor matrices, e.g. learned features).
+    /// Requires explicit [`OtProblem::weights`] or
+    /// [`OtProblem::weight_pairs`].
+    pub fn from_factors(phi_x: &'a Mat, phi_y: &'a Mat) -> Self {
+        Self::with_source(Source::Factors { phi_x, phi_y })
+    }
+
+    /// Override the marginal weight vectors (lengths n and m).
+    pub fn weights(mut self, a: &'a [f32], b: &'a [f32]) -> Self {
+        self.weights = Some((a, b));
+        self
+    }
+
+    /// Solve B problems sharing this support: one `(a, b)` weight pair
+    /// per problem. Batched execution fuses them into column-blocked
+    /// solves of width ≤ [`OtProblem::max_batch`], bitwise identical per
+    /// pair to solving each alone.
+    pub fn weight_pairs(mut self, pairs: &[(&'a [f32], &'a [f32])]) -> Self {
+        self.pairs = pairs.to_vec();
+        self
+    }
+
+    /// Entropic regularisation eps (> 0).
+    pub fn epsilon(mut self, eps: f64) -> Self {
+        self.epsilon = eps;
+        self
+    }
+
+    /// Use the factored backend with `rank` positive features.
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.kernel = KernelChoice::Factored { rank };
+        self
+    }
+
+    /// Force the dense Gibbs baseline.
+    pub fn dense(mut self) -> Self {
+        self.kernel = KernelChoice::Dense;
+        self
+    }
+
+    /// Force the Nyström baseline with `rank` landmarks.
+    pub fn nystrom(mut self, rank: usize) -> Self {
+        self.kernel = KernelChoice::Nystrom { rank };
+        self
+    }
+
+    /// Set the kernel choice explicitly.
+    pub fn kernel(mut self, choice: KernelChoice) -> Self {
+        self.kernel = choice;
+        self
+    }
+
+    /// Set the numeric-domain choice explicitly.
+    pub fn domain(mut self, choice: DomainChoice) -> Self {
+        self.domain = choice;
+        self
+    }
+
+    /// Use Alg. 2 (accelerated Sinkhorn) — plain domain, single pair.
+    pub fn accelerated(mut self) -> Self {
+        self.accelerated = true;
+        self
+    }
+
+    /// Force stabilised (max-shifted log) factor construction on or off.
+    /// Default: on when fitting from measures (arbitrary client data must
+    /// not underflow f32), off for prebuilt factors (taken as given).
+    pub fn stabilized_factors(mut self, on: bool) -> Self {
+        self.stabilized = Some(on);
+        self
+    }
+
+    /// Solver iteration cap.
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// L1 marginal stopping tolerance.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Stopping-check cadence (the check costs one kernel apply).
+    pub fn check_every(mut self, n: usize) -> Self {
+        self.check_every = n;
+        self
+    }
+
+    /// Solve-level concurrency (the three divergence problems; 0 = auto).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Intra-solve pool width (row-chunked applies, parallel feature
+    /// evaluation; 0 = auto). Never changes results — the pooled kernels
+    /// are deterministic in the thread count.
+    pub fn solver_threads(mut self, n: usize) -> Self {
+        self.solver_threads = n;
+        self
+    }
+
+    /// Fused-width cap for batched execution (1 = solve each pair alone).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    /// Seed for the Lemma-1 anchor draw (and Nyström landmarks) when the
+    /// executor fits a map itself. The executor's draw is exactly
+    /// `GaussianFeatureMap::fit(mu, nu, eps, r, &mut Rng::seed_from(seed))`,
+    /// which is what makes planned solves reproducible and bitwise
+    /// comparable to hand-wired legacy calls with the same seeded RNG.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Require a specific SIMD arm (see [`SimdPreference`]).
+    pub fn simd(mut self, pref: SimdPreference) -> Self {
+        self.simd = pref;
+        self
+    }
+
+    /// Use a prebuilt Lemma-1 feature map instead of fitting one (shared
+    /// anchor draws across problems — the cache's amortisation, made
+    /// explicit).
+    pub fn with_feature_map(mut self, map: &'a GaussianFeatureMap) -> Self {
+        self.map = Some(map);
+        self
+    }
+
+    /// Resolve the feature map through a shared [`FeatureCache`] (fits on
+    /// miss with the cache's radius-headroom rule).
+    pub fn feature_cache(mut self, cache: &'a FeatureCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Export cache hit/miss counters to this registry.
+    pub fn metrics(mut self, metrics: &'a Registry) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Reuse persistent pools (e.g. a coordinator worker's) instead of
+    /// constructing them per execution: `solver` backs the intra-solve
+    /// row-chunked applies, `solve` runs the divergence's three problems
+    /// concurrently. Pool size never changes results.
+    pub fn pools(mut self, solver: Pool, solve: Pool) -> Self {
+        self.solver_pool = Some(solver);
+        self.solve_pool = Some(solve);
+        self
+    }
+
+    /// Configure this problem as a converged-`Sin` ground-truth solve:
+    /// the dense backend under the canonical tight-tolerance profile
+    /// ([`crate::sinkhorn::ground_truth_config`]) at the problem's
+    /// current epsilon. Call after [`OtProblem::epsilon`].
+    pub fn ground_truth(self) -> Self {
+        let cfg = crate::sinkhorn::ground_truth_config(self.epsilon);
+        self.config(&cfg).dense()
+    }
+
+    /// Absorb a [`SinkhornConfig`]: epsilon, iteration/tolerance/cadence,
+    /// thread and fuse-width knobs, and `stabilize` → domain
+    /// (`AutoEscalate` when set, `Plain` otherwise). Call this *before*
+    /// more specific overrides.
+    pub fn config(mut self, cfg: &SinkhornConfig) -> Self {
+        self.epsilon = cfg.epsilon;
+        self.max_iters = cfg.max_iters;
+        self.tol = cfg.tol;
+        self.check_every = cfg.check_every;
+        self.threads = cfg.threads;
+        self.max_batch = cfg.max_batch;
+        self.domain =
+            if cfg.stabilize { DomainChoice::AutoEscalate } else { DomainChoice::Plain };
+        self
+    }
+
+    /// Problem shape (n, m).
+    pub fn shape(&self) -> (usize, usize) {
+        match self.source {
+            Source::Measures { mu, nu } => (mu.len(), nu.len()),
+            Source::Factors { phi_x, phi_y } => (phi_x.rows(), phi_y.rows()),
+        }
+    }
+
+    pub(crate) fn measures(&self) -> Result<(&'a Measure, &'a Measure)> {
+        match self.source {
+            Source::Measures { mu, nu } => Ok((mu, nu)),
+            Source::Factors { .. } => Err(Error::Config(
+                "this backend needs point-cloud measures, but the problem was built \
+                 from_factors"
+                    .into(),
+            )),
+        }
+    }
+
+    /// The weight pairs this problem solves (B ≥ 1), index-aligned with
+    /// `solve_all`'s results.
+    pub(crate) fn effective_pairs(&self) -> Result<Vec<(&'a [f32], &'a [f32])>> {
+        if !self.pairs.is_empty() {
+            return Ok(self.pairs.clone());
+        }
+        if let Some((a, b)) = self.weights {
+            return Ok(vec![(a, b)]);
+        }
+        match self.source {
+            Source::Measures { mu, nu } => Ok(vec![(&mu.weights[..], &nu.weights[..])]),
+            Source::Factors { .. } => Err(Error::Config(
+                "from_factors problems need explicit .weights(..) or .weight_pairs(..)".into(),
+            )),
+        }
+    }
+
+    /// Run the planner: resolve every `Auto` into a concrete, serialisable
+    /// decision record. Pure — no kernels are built and no RNG is drawn.
+    pub fn plan(&self) -> Result<Plan> {
+        if !(self.epsilon > 0.0 && self.epsilon.is_finite()) {
+            return Err(Error::Config(format!(
+                "epsilon must be positive and finite, got {}",
+                self.epsilon
+            )));
+        }
+        let (n, m) = self.shape();
+        let pairs = self.effective_pairs()?.len();
+
+        // Backend: explicit choice validated, Auto by per-iteration flops.
+        let backend = match self.kernel {
+            KernelChoice::Dense => {
+                self.measures()?;
+                Backend::Dense
+            }
+            KernelChoice::Factored { rank } => {
+                if rank == 0 {
+                    return Err(Error::Config("factored backend needs rank >= 1".into()));
+                }
+                // Prebuilt factors fix the rank; a contradicting request
+                // would make the Plan describe a computation the executor
+                // cannot perform.
+                if let Source::Factors { phi_x, .. } = self.source {
+                    if rank != phi_x.cols() {
+                        return Err(Error::Config(format!(
+                            "requested rank {rank} but the prebuilt factors have rank {}",
+                            phi_x.cols()
+                        )));
+                    }
+                }
+                Backend::Factored { rank }
+            }
+            KernelChoice::Nystrom { rank } => {
+                self.measures()?;
+                if !(1..=m).contains(&rank) {
+                    return Err(Error::Config(format!(
+                        "nystrom rank must be in 1..={m}, got {rank}"
+                    )));
+                }
+                Backend::Nystrom { rank }
+            }
+            KernelChoice::Auto => match self.source {
+                Source::Factors { phi_x, .. } => Backend::Factored { rank: phi_x.cols() },
+                Source::Measures { .. } => {
+                    // The paper's complexity contrast, as a planning rule:
+                    // factored iterations cost O(r(n+m)), dense O(nm).
+                    if DEFAULT_RANK * (n + m) < n * m {
+                        Backend::Factored { rank: DEFAULT_RANK }
+                    } else {
+                        Backend::Dense
+                    }
+                }
+            },
+        };
+
+        let stabilized_factors = match backend {
+            Backend::Factored { .. } => match (&self.source, self.stabilized) {
+                // Prebuilt factors are taken exactly as given — a plan
+                // claiming stabilised construction would be a lie.
+                (Source::Factors { .. }, Some(true)) => {
+                    return Err(Error::Config(
+                        "stabilized_factors(true) only applies when fitting from measures; \
+                         prebuilt factors are taken as given"
+                            .into(),
+                    ))
+                }
+                (Source::Factors { .. }, _) => false,
+                (Source::Measures { .. }, choice) => choice.unwrap_or(true),
+            },
+            _ => false,
+        };
+
+        // Domain: explicit choice validated against the backend's
+        // log-view capability; Auto applies the underflow heuristic.
+        let mut domain = match self.domain {
+            DomainChoice::Plain => Domain::Plain,
+            DomainChoice::LogDomain => {
+                if matches!(backend, Backend::Nystrom { .. }) {
+                    return Err(Error::Config(
+                        "nystrom kernels have no log-domain view (they can lose positivity)"
+                            .into(),
+                    ));
+                }
+                Domain::LogDomain
+            }
+            DomainChoice::AutoEscalate => Domain::AutoEscalate,
+            DomainChoice::Auto => {
+                if self.accelerated || matches!(backend, Backend::Nystrom { .. }) {
+                    // Accelerated runs plainly; Nyström has nothing to
+                    // escalate to — keep its divergence a typed error.
+                    Domain::Plain
+                } else if self.underflow_risk() {
+                    Domain::LogDomain
+                } else {
+                    Domain::AutoEscalate
+                }
+            }
+        };
+
+        if self.accelerated {
+            match domain {
+                Domain::Plain => {}
+                // Alg. 2 never escalates, exactly as the legacy
+                // `sinkhorn_accelerated` ignored `cfg.stabilize` — so an
+                // escalation *policy* (e.g. absorbed from a default
+                // config) resolves to plain rather than erroring; only
+                // an explicit log-domain request is a contradiction.
+                Domain::AutoEscalate => domain = Domain::Plain,
+                Domain::LogDomain => {
+                    return Err(Error::Config(
+                        "the accelerated solver (Alg. 2) runs in the plain domain only"
+                            .into(),
+                    ))
+                }
+            }
+            if pairs > 1 {
+                return Err(Error::Config(
+                    "the accelerated solver (Alg. 2) is single-pair; drop .weight_pairs()"
+                        .into(),
+                ));
+            }
+        }
+
+        // SIMD: dispatch is process-global; a preference the process
+        // cannot honour is a planning error (see SimdPreference).
+        let active = simd::active_level();
+        let arm = match (self.simd, active) {
+            (SimdPreference::Auto, lvl) => lvl,
+            (SimdPreference::Scalar, SimdLevel::Scalar) => SimdLevel::Scalar,
+            (SimdPreference::Scalar, _) => {
+                return Err(Error::Config(
+                    "scalar arm requested but the process dispatches avx2+fma; set \
+                     LINEAR_SINKHORN_SIMD=scalar before the first kernel call"
+                        .into(),
+                ))
+            }
+            (SimdPreference::Avx2Fma, SimdLevel::Avx2Fma) => SimdLevel::Avx2Fma,
+            (SimdPreference::Avx2Fma, _) => {
+                return Err(Error::Config(
+                    "avx2+fma arm requested but unavailable (CPU lacks it or \
+                     LINEAR_SINKHORN_SIMD pinned scalar)"
+                        .into(),
+                ))
+            }
+        };
+
+        let cache_key = match (backend, &self.source) {
+            (Backend::Factored { rank }, Source::Measures { mu, .. }) => {
+                Some(FeatureKey::new(mu.dim(), self.epsilon, rank))
+            }
+            _ => None,
+        };
+
+        Ok(Plan {
+            backend,
+            domain,
+            stabilized_factors,
+            accelerated: self.accelerated,
+            pairs,
+            batch_width: pairs.min(self.max_batch.max(1)),
+            threads: self.threads,
+            solver_threads: self.solver_threads,
+            simd_arm: arm.label().to_string(),
+            cache_key,
+            epsilon: self.epsilon,
+            max_iters: self.max_iters,
+            tol: self.tol,
+            check_every: self.check_every,
+            n,
+            m,
+            seed: self.seed,
+        })
+    }
+
+    /// The planner's straight-to-log-domain rule (see
+    /// [`UNDERFLOW_LOG_SPREAD`]). Only measurable for measure-built
+    /// problems — prebuilt factors are taken as given and rely on
+    /// escalation.
+    fn underflow_risk(&self) -> bool {
+        match self.source {
+            Source::Measures { mu, nu } => {
+                let radius = mu.radius().max(nu.radius());
+                radius * radius / self.epsilon >= UNDERFLOW_LOG_SPREAD
+            }
+            Source::Factors { .. } => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::rng::Rng;
+
+    fn clouds(n: usize) -> (Measure, Measure) {
+        let mut rng = Rng::seed_from(7);
+        data::gaussian_blobs(n, &mut rng)
+    }
+
+    #[test]
+    fn auto_backend_follows_the_flops_crossover() {
+        // Large clouds: r(n+m) << nm -> factored.
+        let (mu, nu) = clouds(2000);
+        let plan = OtProblem::new(&mu, &nu).plan().unwrap();
+        assert_eq!(plan.backend, Backend::Factored { rank: DEFAULT_RANK });
+        assert!(plan.cache_key.is_some());
+        // Tiny clouds: nm < r(n+m) -> dense wins (and is exact).
+        let (mu, nu) = clouds(50);
+        let plan = OtProblem::new(&mu, &nu).plan().unwrap();
+        assert_eq!(plan.backend, Backend::Dense);
+        assert!(plan.cache_key.is_none());
+    }
+
+    #[test]
+    fn auto_domain_escalates_by_default_and_goes_log_at_tiny_eps() {
+        let (mu, nu) = clouds(100);
+        let moderate = OtProblem::new(&mu, &nu).epsilon(0.5).rank(32).plan().unwrap();
+        assert_eq!(moderate.domain, Domain::AutoEscalate);
+        let tiny = OtProblem::new(&mu, &nu).epsilon(1e-4).rank(32).plan().unwrap();
+        assert_eq!(tiny.domain, Domain::LogDomain, "R^2/eps >> {UNDERFLOW_LOG_SPREAD}");
+    }
+
+    #[test]
+    fn config_maps_stabilize_to_the_domain_choice() {
+        let (mu, nu) = clouds(60);
+        let off = SinkhornConfig { stabilize: false, ..SinkhornConfig::default() };
+        let plan = OtProblem::new(&mu, &nu).config(&off).rank(16).plan().unwrap();
+        assert_eq!(plan.domain, Domain::Plain);
+        let on = SinkhornConfig { stabilize: true, ..off };
+        let plan = OtProblem::new(&mu, &nu).config(&on).rank(16).plan().unwrap();
+        assert_eq!(plan.domain, Domain::AutoEscalate);
+    }
+
+    #[test]
+    fn batch_width_caps_at_max_batch() {
+        let (mu, nu) = clouds(40);
+        let a = vec![1.0f32 / 40.0; 40];
+        let pairs: Vec<(&[f32], &[f32])> = (0..5).map(|_| (&a[..], &a[..])).collect();
+        let plan = OtProblem::new(&mu, &nu)
+            .rank(8)
+            .weight_pairs(&pairs)
+            .max_batch(2)
+            .plan()
+            .unwrap();
+        assert_eq!(plan.pairs, 5);
+        assert_eq!(plan.batch_width, 2);
+    }
+
+    #[test]
+    fn factors_source_requires_weights_and_gets_its_rank_from_the_factors() {
+        let phi_x = Mat::from_fn(10, 4, |i, k| 0.1 + (i + k) as f32 * 0.01);
+        let phi_y = Mat::from_fn(8, 4, |j, k| 0.2 + (j + k) as f32 * 0.01);
+        let missing = OtProblem::from_factors(&phi_x, &phi_y).plan();
+        assert!(matches!(missing, Err(Error::Config(_))));
+        let w_a = vec![0.1f32; 10];
+        let w_b = vec![0.125f32; 8];
+        let plan =
+            OtProblem::from_factors(&phi_x, &phi_y).weights(&w_a, &w_b).plan().unwrap();
+        assert_eq!(plan.backend, Backend::Factored { rank: 4 });
+        assert!(!plan.stabilized_factors, "prebuilt factors are taken as given");
+        assert!(plan.cache_key.is_none());
+    }
+
+    #[test]
+    fn invalid_requests_fail_planning_with_typed_errors() {
+        let (mu, nu) = clouds(30);
+        assert!(OtProblem::new(&mu, &nu).epsilon(0.0).plan().is_err());
+        assert!(OtProblem::new(&mu, &nu).rank(0).plan().is_err());
+        assert!(OtProblem::new(&mu, &nu).nystrom(1000).plan().is_err());
+        assert!(OtProblem::new(&mu, &nu)
+            .nystrom(8)
+            .domain(DomainChoice::LogDomain)
+            .plan()
+            .is_err());
+        assert!(OtProblem::new(&mu, &nu)
+            .accelerated()
+            .domain(DomainChoice::LogDomain)
+            .plan()
+            .is_err());
+        let phi = Mat::from_fn(5, 2, |_, _| 1.0);
+        let w = vec![0.2f32; 5];
+        assert!(OtProblem::from_factors(&phi, &phi).weights(&w, &w).dense().plan().is_err());
+        // A plan must never describe a computation the executor cannot
+        // perform: contradicting the prebuilt factors' rank or claiming
+        // stabilised construction for as-given factors both fail.
+        assert!(OtProblem::from_factors(&phi, &phi).weights(&w, &w).rank(7).plan().is_err());
+        assert!(OtProblem::from_factors(&phi, &phi)
+            .weights(&w, &w)
+            .stabilized_factors(true)
+            .plan()
+            .is_err());
+    }
+
+    #[test]
+    fn ground_truth_profile_is_dense_plain_and_tight() {
+        let (mu, nu) = clouds(30);
+        let plan = OtProblem::new(&mu, &nu).epsilon(0.7).ground_truth().plan().unwrap();
+        assert_eq!(plan.backend, Backend::Dense);
+        assert_eq!(plan.domain, Domain::Plain);
+        assert_eq!(plan.max_iters, 20_000);
+        assert_eq!(plan.tol, 1e-6);
+        assert_eq!(plan.epsilon, 0.7);
+    }
+
+    #[test]
+    fn plan_records_the_active_simd_arm() {
+        let (mu, nu) = clouds(30);
+        let plan = OtProblem::new(&mu, &nu).rank(8).plan().unwrap();
+        assert_eq!(plan.simd_arm, simd::active_level().label());
+    }
+
+    #[test]
+    fn accelerated_auto_domain_resolves_plain() {
+        let (mu, nu) = clouds(30);
+        let plan = OtProblem::new(&mu, &nu).rank(8).accelerated().plan().unwrap();
+        assert_eq!(plan.domain, Domain::Plain);
+        assert!(plan.accelerated);
+        // The README migration path: absorbing a default config
+        // (stabilize = true) must still plan — Alg. 2 never escalates,
+        // so the escalation policy resolves to plain (legacy
+        // `sinkhorn_accelerated` ignored `cfg.stabilize` the same way).
+        let cfg = SinkhornConfig::default();
+        assert!(cfg.stabilize);
+        let plan =
+            OtProblem::new(&mu, &nu).config(&cfg).rank(8).accelerated().plan().unwrap();
+        assert_eq!(plan.domain, Domain::Plain);
+    }
+}

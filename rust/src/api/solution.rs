@@ -1,0 +1,135 @@
+//! Result types of the planned API: [`Solution`] for one transport
+//! problem, [`DivergenceReport`] for the three-solve Eq. (2) divergence.
+//!
+//! Both carry the diagnostics the free-function era scattered across
+//! tuples and metrics: whether the log-domain escalation fired, wall
+//! clock, and the SIMD dispatch-arm tag (the same string the
+//! BENCH_*.json tables record as `cpu`, so service telemetry and bench
+//! artifacts key on one vocabulary).
+
+use crate::sinkhorn::{AccelSolution, SinkhornSolution};
+
+/// Output of one planned transport solve.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// The Eq. (6) objective estimate (log-scale-compensated for
+    /// stabilised kernels, exactly like the legacy solvers).
+    pub objective: f64,
+    /// Row scaling u (length n). For accelerated solves these are
+    /// `exp(eta1)` and may saturate f32 at extreme duals.
+    pub u: Vec<f32>,
+    /// Column scaling v (length m).
+    pub v: Vec<f32>,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Final L1 marginal error (`NaN` for accelerated solves, which stop
+    /// on the dual gradient norm instead — see `grad_norm`).
+    pub marginal_error: f64,
+    /// Whether the stopping criterion was met before the iteration cap.
+    pub converged: bool,
+    /// Whether this solve took the log-domain escalation path (always
+    /// `false` when the plan chose `LogDomain` outright — a planned
+    /// domain is not an escalation).
+    pub escalated: bool,
+    /// Final dual gradient norm — accelerated (Alg. 2) solves only.
+    pub grad_norm: Option<f64>,
+    /// Wall clock of the solve in microseconds. For fused batched solves
+    /// this is the wall clock of the chunk that served this pair.
+    pub wall_us: u64,
+    /// The SIMD dispatch arm that actually executed ("scalar" /
+    /// "avx2+fma"), matching the `cpu` field of BENCH_*.json.
+    pub simd_arm: &'static str,
+}
+
+impl Solution {
+    /// Dual potentials `alpha = eps log u`, `beta = eps log v`.
+    pub fn duals(&self, eps: f64) -> (Vec<f32>, Vec<f32>) {
+        let a = self.u.iter().map(|&x| (eps * (x as f64).ln()) as f32).collect();
+        let b = self.v.iter().map(|&x| (eps * (x as f64).ln()) as f32).collect();
+        (a, b)
+    }
+
+    pub(crate) fn from_sinkhorn(sol: SinkhornSolution, escalated: bool, wall_us: u64) -> Self {
+        Solution {
+            objective: sol.objective,
+            u: sol.u,
+            v: sol.v,
+            iterations: sol.iterations,
+            marginal_error: sol.marginal_error,
+            converged: sol.converged,
+            escalated,
+            grad_norm: None,
+            wall_us,
+            simd_arm: crate::linalg::simd::active_level().label(),
+        }
+    }
+
+    pub(crate) fn from_accel(sol: AccelSolution, wall_us: u64) -> Self {
+        Solution {
+            objective: sol.objective,
+            u: sol.eta1.iter().map(|&e| e.exp() as f32).collect(),
+            v: sol.eta2.iter().map(|&e| e.exp() as f32).collect(),
+            iterations: sol.iterations,
+            marginal_error: f64::NAN,
+            converged: sol.converged,
+            escalated: false,
+            grad_norm: Some(sol.grad_norm),
+            wall_us,
+            simd_arm: crate::linalg::simd::active_level().label(),
+        }
+    }
+}
+
+/// The Eq. (2) debiased divergence
+/// `W(mu,nu) - (W(mu,mu) + W(nu,nu))/2`, with all three constituent
+/// solutions retained (their duals drive the Prop-3.2 envelope gradients
+/// of the GAN trainer and the gradient flows).
+#[derive(Clone, Debug)]
+pub struct DivergenceReport {
+    /// The debiased Sinkhorn divergence estimate.
+    pub divergence: f64,
+    /// The cross solve W(mu, nu).
+    pub xy: Solution,
+    /// The self solve W(mu, mu).
+    pub xx: Solution,
+    /// The self solve W(nu, nu).
+    pub yy: Solution,
+    /// End-to-end wall clock (kernel construction + three solves), us.
+    pub wall_us: u64,
+    /// The SIMD dispatch arm that executed (see [`Solution::simd_arm`]).
+    pub simd_arm: &'static str,
+}
+
+impl DivergenceReport {
+    pub(crate) fn assemble(xy: Solution, xx: Solution, yy: Solution, wall_us: u64) -> Self {
+        DivergenceReport {
+            divergence: xy.objective - 0.5 * (xx.objective + yy.objective),
+            simd_arm: xy.simd_arm,
+            xy,
+            xx,
+            yy,
+            wall_us,
+        }
+    }
+
+    /// The raw transport objective W(mu, nu).
+    pub fn w_xy(&self) -> f64 {
+        self.xy.objective
+    }
+
+    /// Total Sinkhorn iterations across the three solves.
+    pub fn iterations(&self) -> usize {
+        self.xy.iterations + self.xx.iterations + self.yy.iterations
+    }
+
+    /// How many of the three solves escalated to the log domain (the
+    /// coordinator exports the sum as `service.stabilized_solves`).
+    pub fn escalations(&self) -> usize {
+        [&self.xy, &self.xx, &self.yy].iter().filter(|s| s.escalated).count()
+    }
+
+    /// Whether all three solves converged.
+    pub fn converged(&self) -> bool {
+        self.xy.converged && self.xx.converged && self.yy.converged
+    }
+}

@@ -8,13 +8,14 @@
 //! * `Nys` — Nyström low-rank (recorded as FAILED when it loses
 //!           positivity or diverges — the paper's central contrast).
 
+use crate::api::OtProblem;
 use crate::config::SinkhornConfig;
 use crate::data::Measure;
 use crate::features::GaussianFeatureMap;
-use crate::kernels::{CostMatrixLogKernel, DenseKernel, FactoredKernel, NystromKernel};
+use crate::kernels::CostMatrixLogKernel;
 use crate::metrics::Stopwatch;
 use crate::rng::Rng;
-use crate::sinkhorn::{deviation_score, sinkhorn, sinkhorn_log_domain, sq_euclidean_cost};
+use crate::sinkhorn::{deviation_score, sinkhorn_log_domain, sq_euclidean_cost};
 
 /// One measured cell of the sweep.
 #[derive(Clone, Debug)]
@@ -171,13 +172,16 @@ pub fn run_sweep(
             stabilize: false,
             max_batch: 1,
         };
+        // All three contenders run through the planned API with the
+        // domain pinned to Plain (`stabilize: false` in `cfg`): the sweep
+        // *wants* small-eps failures recorded as FAILED cells, not
+        // silently escalated — that contrast is the figure.
 
         // --- Sin baseline: converged dense solve (one timing; deviation of
         // its own estimate vs the tight-tolerance truth).
         {
             let sw = Stopwatch::start();
-            let dense = DenseKernel::from_measures(mu, nu, eps);
-            let cell = match sinkhorn(&dense, &mu.weights, &nu.weights, &cfg) {
+            let cell = match OtProblem::new(mu, nu).config(&cfg).dense().solve() {
                 Ok(sol) => Cell {
                     method: "Sin",
                     eps,
@@ -212,15 +216,21 @@ pub fn run_sweep(
             let mut ny_times = Vec::new();
             let mut ny_fail: Option<String> = None;
             for rep in 0..sweep.reps {
-                let mut rng = Rng::seed_from(seed ^ (rep as u64) << 32 ^ r as u64);
+                let rep_seed = seed ^ (rep as u64) << 32 ^ r as u64;
+                let mut rng = Rng::seed_from(rep_seed);
                 // RF.
                 let sw = Stopwatch::start();
                 let map = GaussianFeatureMap::fit(mu, nu, eps, r, &mut rng);
                 // Stabilised factors: at small eps the raw Gibbs scale sits
                 // far below f32 range; the log-normalised factors keep RF
                 // running exactly where the paper's f64 implementation did.
-                let fk = FactoredKernel::from_measures_stabilized(&map, mu, nu);
-                match sinkhorn(&fk, &mu.weights, &nu.weights, &cfg) {
+                let rf = OtProblem::new(mu, nu)
+                    .config(&cfg)
+                    .rank(r)
+                    .with_feature_map(&map)
+                    .stabilized_factors(true)
+                    .solve();
+                match rf {
                     Ok(sol) => {
                         rf_devs.push(deviation_score(truth, sol.objective));
                         rf_times.push(sw.elapsed_secs());
@@ -231,10 +241,15 @@ pub fn run_sweep(
                 // (Its iterates only touch K^T u / K v for the actual
                 // scaling vectors; the solver reports SinkhornDiverged when
                 // the lost positivity actually bites, which is the paper's
-                // observed failure mode.)
+                // observed failure mode.) The landmark draw is seeded per
+                // rep through the plan.
                 let sw = Stopwatch::start();
-                let nk = NystromKernel::from_measures(mu, nu, eps, r.min(mu.len()), &mut rng);
-                match sinkhorn(&nk, &mu.weights, &nu.weights, &cfg) {
+                let nys = OtProblem::new(mu, nu)
+                    .config(&cfg)
+                    .nystrom(r.min(mu.len()))
+                    .seed(rep_seed ^ 0x4E59)
+                    .solve();
+                match nys {
                     Ok(sol) => {
                         ny_devs.push(deviation_score(truth, sol.objective));
                         ny_times.push(sw.elapsed_secs());

@@ -60,14 +60,13 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::api::OtProblem;
 use crate::config::ServiceConfig;
 use crate::data::Measure;
 use crate::error::{Error, Result};
-use crate::kernels::FactoredKernel;
 use crate::metrics::Registry;
 use crate::rng::Rng;
 use crate::runtime::pool::Pool;
-use crate::sinkhorn::{sinkhorn_stabilized, solve_batch_stabilized};
 
 /// A divergence request: two measures on the same ground space.
 pub struct Request {
@@ -358,47 +357,28 @@ fn solve_one(
     let radius = req.mu.radius().max(req.nu.radius());
     let map =
         cache.get_or_fit(req.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
-    // Stabilised factors: arbitrary client data must not underflow f32.
-    let k_xy = FactoredKernel::from_measures_stabilized_pooled(
-        &*map,
-        &req.mu,
-        &req.nu,
-        solver_pool.clone(),
-    );
-    let k_xx = FactoredKernel::from_measures_stabilized_pooled(
-        &*map,
-        &req.mu,
-        &req.mu,
-        solver_pool.clone(),
-    );
-    let k_yy = FactoredKernel::from_measures_stabilized_pooled(
-        &*map,
-        &req.nu,
-        &req.nu,
-        solver_pool.clone(),
-    );
-    // Three explicit solves (not sinkhorn() + sinkhorn_divergence(),
-    // which would solve the xy problem twice): the Eq. (2) divergence is
-    // assembled from the objectives, and the solves run concurrently
-    // when `sinkhorn.threads` allows. Each solve escalates to the
-    // log-domain path on non-finite scalings when `sinkhorn.stabilize`
-    // is on; escalations surface as `service.stabilized_solves`.
-    let (r_xy, r_xx, r_yy) = solve_pool.join3(
-        || sinkhorn_stabilized(&k_xy, &req.mu.weights, &req.nu.weights, &skcfg),
-        || sinkhorn_stabilized(&k_xx, &req.mu.weights, &req.mu.weights, &skcfg),
-        || sinkhorn_stabilized(&k_yy, &req.nu.weights, &req.nu.weights, &skcfg),
-    );
-    let ((sol_xy, st_xy), (sol_xx, st_xx), (sol_yy, st_yy)) = (r_xy?, r_xx?, r_yy?);
-    let stabilized = [st_xy, st_xx, st_yy].iter().filter(|&&s| s).count() as u64;
+    // One planned divergence = the three concurrent transport solves the
+    // worker used to hand-wire: stabilised factors (arbitrary client data
+    // must not underflow f32), the cached feature map shared across all
+    // three kernels, the worker's persistent pools, and log-domain
+    // escalation per `sinkhorn.stabilize` (absorbed by `.config`).
+    // Execution is bitwise identical to the pre-API worker path.
+    let report = OtProblem::new(&req.mu, &req.nu)
+        .config(&skcfg)
+        .rank(cfg.num_features)
+        .with_feature_map(&map)
+        .stabilized_factors(true)
+        .pools(solver_pool.clone(), solve_pool.clone())
+        .divergence()?;
+    let stabilized = report.escalations() as u64;
     if stabilized > 0 {
         metrics.counter("service.stabilized_solves").add(stabilized);
     }
-    let div = sol_xy.objective - 0.5 * (sol_xx.objective + sol_yy.objective);
     Ok(Response {
         id: req.id,
-        divergence: div,
-        w_xy: sol_xy.objective,
-        iterations: sol_xy.iterations + sol_xx.iterations + sol_yy.iterations,
+        divergence: report.divergence,
+        w_xy: report.w_xy(),
+        iterations: report.iterations(),
         latency_us: req.enqueued.elapsed().as_micros() as u64,
         batch_size,
     })
@@ -434,53 +414,35 @@ fn solve_group(
     let radius = rep.mu.radius().max(rep.nu.radius());
     let map =
         cache.get_or_fit(rep.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
-    let k_xy = FactoredKernel::from_measures_stabilized_pooled(
-        &*map,
-        &rep.mu,
-        &rep.nu,
-        solver_pool.clone(),
-    );
-    let k_xx = FactoredKernel::from_measures_stabilized_pooled(
-        &*map,
-        &rep.mu,
-        &rep.mu,
-        solver_pool.clone(),
-    );
-    let k_yy = FactoredKernel::from_measures_stabilized_pooled(
-        &*map,
-        &rep.nu,
-        &rep.nu,
-        solver_pool.clone(),
-    );
-    let xy_pairs: Vec<(&[f32], &[f32])> =
+    // One planned B-pair divergence = three width-B batched solves on a
+    // shared kernel triple, concurrent over the solve pool — the fused
+    // path the worker used to hand-wire, bitwise identical per request
+    // to `solve_one` (fuse_groups caps B at `sinkhorn.max_batch`, so the
+    // plan's fuse width covers the whole group in one chunk).
+    let pairs: Vec<(&[f32], &[f32])> =
         group.iter().map(|r| (r.mu.weights.as_slice(), r.nu.weights.as_slice())).collect();
-    let xx_pairs: Vec<(&[f32], &[f32])> =
-        group.iter().map(|r| (r.mu.weights.as_slice(), r.mu.weights.as_slice())).collect();
-    let yy_pairs: Vec<(&[f32], &[f32])> =
-        group.iter().map(|r| (r.nu.weights.as_slice(), r.nu.weights.as_slice())).collect();
-    // Three batched solves instead of 3·B vector solves; concurrently
-    // over the solve pool like the single-request path.
-    let (r_xy, r_xx, r_yy) = solve_pool.join3(
-        || solve_batch_stabilized(&k_xy, &xy_pairs, &skcfg),
-        || solve_batch_stabilized(&k_xx, &xx_pairs, &skcfg),
-        || solve_batch_stabilized(&k_yy, &yy_pairs, &skcfg),
-    );
+    let reports = OtProblem::new(&rep.mu, &rep.nu)
+        .config(&skcfg)
+        .rank(cfg.num_features)
+        .with_feature_map(&map)
+        .stabilized_factors(true)
+        .pools(solver_pool.clone(), solve_pool.clone())
+        .weight_pairs(&pairs)
+        .divergence_all();
     group
         .iter()
-        .zip(r_xy.into_iter().zip(r_xx).zip(r_yy))
-        .map(|(req, ((xy, xx), yy))| {
-            let (sol_xy, st_xy) = xy?;
-            let (sol_xx, st_xx) = xx?;
-            let (sol_yy, st_yy) = yy?;
-            let stabilized = [st_xy, st_xx, st_yy].iter().filter(|&&s| s).count() as u64;
+        .zip(reports)
+        .map(|(req, report)| {
+            let report = report?;
+            let stabilized = report.escalations() as u64;
             if stabilized > 0 {
                 metrics.counter("service.stabilized_solves").add(stabilized);
             }
             Ok(Response {
                 id: req.id,
-                divergence: sol_xy.objective - 0.5 * (sol_xx.objective + sol_yy.objective),
-                w_xy: sol_xy.objective,
-                iterations: sol_xy.iterations + sol_xx.iterations + sol_yy.iterations,
+                divergence: report.divergence,
+                w_xy: report.w_xy(),
+                iterations: report.iterations(),
                 latency_us: req.enqueued.elapsed().as_micros() as u64,
                 batch_size,
             })

@@ -9,13 +9,12 @@
 //! Gradients use the Prop-3.2 envelope formula through the Sinkhorn-output
 //! duals — no unrolling, O(s r) memory.
 
+use crate::api::{OtProblem, Solution};
 use crate::config::{GanConfig, SinkhornConfig};
 use crate::error::Result;
 use crate::features::{FeatureMap, LearnedFeatureMap};
-use crate::kernels::FactoredKernel;
 use crate::linalg::{self, Mat};
 use crate::rng::Rng;
-use crate::sinkhorn::{sinkhorn, SinkhornSolution};
 
 use super::mlp::{Act, Mlp};
 use super::optim::Adam;
@@ -103,8 +102,7 @@ impl GanTrainer {
     /// (evaluation only, no gradients).
     pub fn divergence(&mut self, real: &Mat) -> Result<f64> {
         let fake = self.generate(real.rows());
-        let (d, ..) = self.divergence_inner(&fake, real)?;
-        Ok(d.0)
+        self.divergence_inner(&fake, real)
     }
 
     /// One full training step: `critic_steps` ascent steps on (gamma,
@@ -132,24 +130,26 @@ impl GanTrainer {
         let phi_b = self.feat.feature_matrix(&zb);
         let wa = vec![1.0f32 / s as f32; s];
 
-        // Three factored transport problems.
-        let k_xy = FactoredKernel::from_factors(phi_a.clone(), phi_b.clone());
-        let k_xx = FactoredKernel::from_factors(phi_a.clone(), phi_a.clone());
-        let k_yy = FactoredKernel::from_factors(phi_b.clone(), phi_b.clone());
-        let s_xy = sinkhorn(&k_xy, &wa, &wa, &self.skcfg)?;
-        let s_xx = sinkhorn(&k_xx, &wa, &wa, &self.skcfg)?;
-        let s_yy = sinkhorn(&k_yy, &wa, &wa, &self.skcfg)?;
-        let div = s_xy.objective - 0.5 * (s_xx.objective + s_yy.objective);
-        let iters = s_xy.iterations + s_xx.iterations + s_yy.iterations;
+        // Three factored transport problems through the planned API: the
+        // learned factors are the kernel (`from_factors`), so the plan is
+        // factored/plain and execution is bitwise the three `sinkhorn`
+        // calls this trainer used to hand-wire.
+        let report = OtProblem::from_factors(&phi_a, &phi_b)
+            .config(&self.skcfg)
+            .weights(&wa, &wa)
+            .divergence()?;
+        let (s_xy, s_xx, s_yy) = (&report.xy, &report.xx, &report.yy);
+        let div = report.divergence;
+        let iters = report.iterations();
 
         // Envelope upstream gradients w.r.t. the feature matrices.
         // d Wbar / d phi_a = G(phi_a|xy) - 0.5 * G_both(phi_a|xx)
         // d Wbar / d phi_b = G(phi_b|xy) - 0.5 * G_both(phi_b|yy)
         let eps = self.cfg.epsilon;
-        let mut up_a = envelope_grad_left(eps, &s_xy, &phi_b);
-        add_scaled(&mut up_a, &envelope_grad_both(eps, &s_xx, &phi_a), -0.5);
-        let mut up_b = envelope_grad_right(eps, &s_xy, &phi_a);
-        add_scaled(&mut up_b, &envelope_grad_both(eps, &s_yy, &phi_b), -0.5);
+        let mut up_a = envelope_grad_left(eps, s_xy, &phi_b);
+        add_scaled(&mut up_a, &envelope_grad_both(eps, s_xx, &phi_a), -0.5);
+        let mut up_b = envelope_grad_right(eps, s_xy, &phi_a);
+        add_scaled(&mut up_b, &envelope_grad_both(eps, s_yy, &phi_b), -0.5);
 
         if critic {
             // Ascent on (gamma, theta): maximise the divergence.
@@ -217,42 +217,35 @@ impl GanTrainer {
         total / (px.rows() * py.rows()) as f64
     }
 
-    fn divergence_inner(
-        &mut self,
-        fake: &Mat,
-        real: &Mat,
-    ) -> Result<((f64,), SinkhornSolution)> {
+    fn divergence_inner(&mut self, fake: &Mat, real: &Mat) -> Result<f64> {
         let s = real.rows();
         let (za, _) = self.embed.forward(fake);
         let (zb, _) = self.embed.forward(real);
         let phi_a = self.feat.feature_matrix(&za);
         let phi_b = self.feat.feature_matrix(&zb);
         let wa = vec![1.0f32 / s as f32; s];
-        let k_xy = FactoredKernel::from_factors(phi_a.clone(), phi_b.clone());
-        let k_xx = FactoredKernel::from_factors(phi_a.clone(), phi_a);
-        let k_yy = FactoredKernel::from_factors(phi_b.clone(), phi_b);
-        let s_xy = sinkhorn(&k_xy, &wa, &wa, &self.skcfg)?;
-        let s_xx = sinkhorn(&k_xx, &wa, &wa, &self.skcfg)?;
-        let s_yy = sinkhorn(&k_yy, &wa, &wa, &self.skcfg)?;
-        let div = s_xy.objective - 0.5 * (s_xx.objective + s_yy.objective);
-        Ok(((div,), s_xy))
+        let report = OtProblem::from_factors(&phi_a, &phi_b)
+            .config(&self.skcfg)
+            .weights(&wa, &wa)
+            .divergence()?;
+        Ok(report.divergence)
     }
 }
 
 /// Prop 3.2 chained to the left factor: dW/dPhi_x[i,k] = -eps u_i (Phi_y^T v)_k.
-fn envelope_grad_left(eps: f64, sol: &SinkhornSolution, phi_y: &Mat) -> Mat {
+fn envelope_grad_left(eps: f64, sol: &Solution, phi_y: &Mat) -> Mat {
     let kyv = linalg::matvec_t(phi_y, &sol.v);
     outer_scaled(-eps as f32, &sol.u, &kyv)
 }
 
 /// Right factor: dW/dPhi_y[j,k] = -eps v_j (Phi_x^T u)_k.
-fn envelope_grad_right(eps: f64, sol: &SinkhornSolution, phi_x: &Mat) -> Mat {
+fn envelope_grad_right(eps: f64, sol: &Solution, phi_x: &Mat) -> Mat {
     let kxu = linalg::matvec_t(phi_x, &sol.u);
     outer_scaled(-eps as f32, &sol.v, &kxu)
 }
 
 /// Self-transport (xx): Phi appears on both sides, contributions add.
-fn envelope_grad_both(eps: f64, sol: &SinkhornSolution, phi: &Mat) -> Mat {
+fn envelope_grad_both(eps: f64, sol: &Solution, phi: &Mat) -> Mat {
     let mut g = envelope_grad_left(eps, sol, phi);
     let r = envelope_grad_right(eps, sol, phi);
     add_scaled(&mut g, &r, 1.0);
@@ -321,13 +314,17 @@ mod tests {
 
     #[test]
     fn envelope_grads_shapes() {
-        let sol = SinkhornSolution {
+        let sol = Solution {
             u: vec![1.0, 2.0],
             v: vec![3.0, 4.0, 5.0],
             objective: 0.0,
             iterations: 1,
             marginal_error: 0.0,
             converged: true,
+            escalated: false,
+            grad_norm: None,
+            wall_us: 0,
+            simd_arm: "scalar",
         };
         let phi_y = Mat::ones(3, 4);
         let g = envelope_grad_left(1.0, &sol, &phi_y);

@@ -53,7 +53,13 @@
 //!   in-flight requests onto it (`sinkhorn.max_batch`,
 //!   `service.batched_solves`; EXPERIMENTS.md §Throughput).
 //!
-//! ## Quick tour
+//! ## Quick tour: Problem → Plan → Solution
+//!
+//! The blessed entry point is the planned API ([`api`]): describe the
+//! problem, let the planner pick the backend (the paper's factored
+//! kernel vs the dense baseline, by per-iteration flops) and the
+//! numeric domain (plain f32 vs log-domain stabilisation, by the
+//! f32-underflow heuristic), then execute.
 //!
 //! ```no_run
 //! use linear_sinkhorn::prelude::*;
@@ -62,17 +68,30 @@
 //! let mut rng = Rng::seed_from(0);
 //! let (mu, nu) = data::gaussian_blobs(1000, &mut rng);
 //!
-//! // Positive features (Lemma 1) for the squared-Euclidean Gibbs kernel.
-//! let eps = 0.5;
-//! let map = GaussianFeatureMap::fit(&mu, &nu, eps, 256, &mut rng);
-//! let kernel = FactoredKernel::from_measures(&map, &mu, &nu);
+//! // Describe the problem; the planner decides the rest.
+//! let problem = OtProblem::new(&mu, &nu).epsilon(0.5).rank(256).seed(0);
+//! let plan = problem.plan()?;
+//! println!("{}", plan.summary()); // inspectable decision record
 //!
-//! // Linear-time Sinkhorn.
-//! let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
-//! let sol = sinkhorn(&kernel, &mu.weights, &nu.weights, &cfg).unwrap();
-//! println!("ROT ~= {}", sol.objective);
+//! // Linear-time Sinkhorn through the planned route.
+//! let sol = problem.solve_planned(&plan)?;
+//! println!("ROT ~= {}  [{} iters, arm {}]", sol.objective, sol.iterations, sol.simd_arm);
+//!
+//! // The debiased Eq. (2) divergence (three solves, one shared map).
+//! let report = problem.divergence()?;
+//! println!("divergence = {}", report.divergence);
+//! # Ok::<(), linear_sinkhorn::error::Error>(())
 //! ```
+//!
+//! Plans serialise ([`api::Plan::to_json`]) and execute anywhere
+//! ([`api::OtProblem::solve_planned`]) — the unit of the planned
+//! cross-host shard dispatch. The pre-API free functions
+//! (`sinkhorn`, `sinkhorn_divergence`, `solve_batch`, …) remain as the
+//! reference layer the executor routes through bitwise-unchanged;
+//! import them explicitly via [`prelude::legacy`] (see README.md
+//! §Migration for the mapping).
 
+pub mod api;
 pub mod barycenter;
 pub mod bench;
 pub mod cli;
@@ -92,7 +111,19 @@ pub mod special;
 pub mod testing;
 
 /// Convenient re-exports for examples and downstream users.
+///
+/// The prelude exports the planned API ([`crate::api`]) plus the
+/// data/kernel/config vocabulary. The pre-API free-function solvers are
+/// **not** re-exported wholesale any more — they live in
+/// [`prelude::legacy`], so downstream code migrates by replacing
+/// `use linear_sinkhorn::prelude::*;` call sites with
+/// `OtProblem`-builder forms at its own pace, opting into the old names
+/// explicitly (and warning-free) where it still needs them.
 pub mod prelude {
+    pub use crate::api::{
+        Backend, DivergenceReport, Domain, DomainChoice, KernelChoice, OtProblem, Plan,
+        SimdPreference, Solution,
+    };
     pub use crate::config::{GanConfig, ServiceConfig, SinkhornConfig, TradeoffConfig};
     pub use crate::data::{self, Measure};
     pub use crate::error::{Error, Result};
@@ -103,9 +134,19 @@ pub mod prelude {
     pub use crate::linalg::Mat;
     pub use crate::rng::Rng;
     pub use crate::runtime::pool::Pool;
-    pub use crate::sinkhorn::{
-        sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, sinkhorn_divergence_batch,
-        sinkhorn_log_domain, sinkhorn_stabilized, solve_batch, solve_batch_log_domain,
-        solve_batch_stabilized, SinkhornSolution,
-    };
+    pub use crate::sinkhorn::SinkhornSolution;
+
+    /// The pre-API free-function solver surface, demoted to an explicit
+    /// opt-in. These are the reference implementations the planned
+    /// executor routes through bitwise-unchanged (and the baseline the
+    /// equivalence suite compares against) — prefer
+    /// [`OtProblem`](super::OtProblem) for new code; see README.md
+    /// §Migration for the entry-point mapping.
+    pub mod legacy {
+        pub use crate::sinkhorn::{
+            sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, sinkhorn_divergence_batch,
+            sinkhorn_log_domain, sinkhorn_stabilized, solve_batch, solve_batch_log_domain,
+            solve_batch_stabilized, SinkhornSolution,
+        };
+    }
 }

@@ -12,7 +12,7 @@
 
 use linear_sinkhorn::barycenter::{barycenter, BarycenterConfig};
 use linear_sinkhorn::cli::ArgSpec;
-use linear_sinkhorn::config::{GanConfig, ServiceConfig, SinkhornConfig};
+use linear_sinkhorn::config::{GanConfig, ServiceConfig};
 use linear_sinkhorn::gan::GanTrainer;
 use linear_sinkhorn::linalg::softmax_inplace;
 use linear_sinkhorn::metrics::Stopwatch;
@@ -76,9 +76,11 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
             .opt(
                 "stabilize",
                 "on",
-                "escalate to the log-domain solver on small-eps divergence (on/off)",
+                "escalate to the log-domain solver on small-eps divergence (on/off); \
+                 the planner may still pick the log domain outright at tiny eps",
             )
-            .opt("seed", "0", "RNG seed"),
+            .opt("seed", "0", "RNG seed")
+            .flag("explain", "print the solver plan (summary + JSON) before executing"),
         argv,
     );
     let (n, eps, r, seed) =
@@ -92,29 +94,43 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
         let requested = a.get_usize("threads");
         if requested == 0 { linear_sinkhorn::runtime::pool::available_threads() } else { requested }
     };
-    let kernel_pool = Pool::new(((threads + 2) / 3).max(1));
     let mut rng = Rng::seed_from(seed);
     let (mu, nu) = data::gaussian_blobs(n, &mut rng);
-    let sw = Stopwatch::start();
-    let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
-    // Stabilised factors + the log-domain fallback: any eps a user types
-    // should produce a number, not a NaN (EXPERIMENTS.md §Stabilisation).
-    let k_xy =
-        FactoredKernel::from_measures_stabilized_pooled(&map, &mu, &nu, kernel_pool.clone());
-    let k_xx =
-        FactoredKernel::from_measures_stabilized_pooled(&map, &mu, &mu, kernel_pool.clone());
-    let k_yy = FactoredKernel::from_measures_stabilized_pooled(&map, &nu, &nu, kernel_pool);
-    let cfg = SinkhornConfig {
-        epsilon: eps,
-        threads: threads.min(3),
-        stabilize,
-        ..Default::default()
+    // Stabilised factors + automatic domain planning: any eps a user
+    // types should produce a number, not a NaN (EXPERIMENTS.md
+    // §Stabilisation). `--stabilize off` pins the plain domain so
+    // small-eps failures surface as typed errors instead.
+    let mut problem = OtProblem::new(&mu, &nu)
+        .epsilon(eps)
+        .rank(r)
+        .threads(threads.min(3))
+        .solver_threads(threads.div_ceil(3))
+        .seed(seed);
+    if !stabilize {
+        problem = problem.domain(DomainChoice::Plain);
+    }
+    let plan = match problem.plan() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("planning error: {e}");
+            return 1;
+        }
     };
-    match sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg) {
-        Ok(d) => {
+    if a.get_flag("explain") {
+        println!("{}", plan.summary());
+        println!("{}", plan.to_json());
+    }
+    let sw = Stopwatch::start();
+    match problem.divergence_planned(&plan) {
+        Ok(report) => {
             println!(
-                "sinkhorn divergence (n={n}, eps={eps}, r={r}, threads={threads}): {d:.6}  [{:.1} ms]",
-                sw.elapsed_secs() * 1e3
+                "sinkhorn divergence (n={n}, eps={eps}, r={r}, threads={threads}): {:.6}  \
+                 [{:.1} ms, {} iters, {} escalations, arm {}]",
+                report.divergence,
+                sw.elapsed_secs() * 1e3,
+                report.iterations(),
+                report.escalations(),
+                report.simd_arm
             );
             0
         }
@@ -137,28 +153,37 @@ fn cmd_tradeoff(argv: Vec<String>) -> i32 {
     let n = a.get_usize("n");
     let eps = a.get_f64("eps");
     let ranks = a.get_usize_list("ranks");
-    let mut rng = Rng::seed_from(a.get_u64("seed"));
+    let seed = a.get_u64("seed");
+    let mut rng = Rng::seed_from(seed);
     let (mu, nu) = data::gaussian_blobs(n, &mut rng);
 
+    // Converged dense ground truth (the paper's tight-tolerance `Sin`,
+    // via the canonical `ground_truth` profile).
     let sw = Stopwatch::start();
-    let dense = DenseKernel::from_measures(&mu, &nu, eps);
-    let truth =
-        match linear_sinkhorn::sinkhorn::ground_truth_rot(&dense, &mu.weights, &nu.weights, eps) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("ground truth failed: {e}");
-                return 1;
-            }
-        };
+    let truth = match OtProblem::new(&mu, &nu).epsilon(eps).ground_truth().solve() {
+        Ok(sol) => sol.objective,
+        Err(e) => {
+            eprintln!("ground truth failed: {e}");
+            return 1;
+        }
+    };
     println!("Sin ground truth: {truth:.6} in {:.2}s", sw.elapsed_secs());
 
-    let cfg = SinkhornConfig { epsilon: eps, ..Default::default() };
     println!("{:>6} {:>12} {:>12} {:>10}", "r", "RF estimate", "deviation", "time");
     for &r in &ranks {
         let sw = Stopwatch::start();
         let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
-        let fk = FactoredKernel::from_measures(&map, &mu, &nu);
-        match sinkhorn(&fk, &mu.weights, &nu.weights, &cfg) {
+        // Plain domain, like the fig-bench sweep: a small-eps RF failure
+        // should print as `failed`, not silently escalate — that
+        // contrast is what the table is for.
+        let res = OtProblem::new(&mu, &nu)
+            .epsilon(eps)
+            .rank(r)
+            .with_feature_map(&map)
+            .stabilized_factors(false)
+            .domain(DomainChoice::Plain)
+            .solve();
+        match res {
             Ok(sol) => {
                 let dev = linear_sinkhorn::sinkhorn::deviation_score(truth, sol.objective);
                 println!(

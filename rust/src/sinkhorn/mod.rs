@@ -27,6 +27,15 @@
 //! ~1e-12 on the f64 log-domain reductions) — force
 //! `LINEAR_SINKHORN_SIMD=scalar` to pin solver output across machines
 //! (EXPERIMENTS.md §Perf, "SIMD core").
+//!
+//! **Status since PR 5:** this module is the *reference layer*. The
+//! blessed public entry point is the planned API
+//! ([`crate::api::OtProblem`] → [`crate::api::Plan`]), whose executor
+//! routes through these functions bitwise-unchanged
+//! (`rust/tests/api_equivalence.rs`); the free functions are no longer
+//! re-exported by the main prelude — import them via
+//! [`crate::prelude::legacy`] (README.md §Migration maps each entry
+//! point to its builder form).
 
 mod accelerated;
 mod batch;
@@ -260,6 +269,24 @@ pub fn deviation_score(ground_truth: f64, estimate: f64) -> f64 {
     100.0 * (ground_truth - estimate) / ground_truth.abs() + 100.0
 }
 
+/// The canonical tight-tolerance solver profile behind every "ground
+/// truth" ROT value (the paper's `Sin` converged hard): single thread,
+/// plain domain, 20k iterations, 1e-6 L1 tolerance. Shared by
+/// [`ground_truth_rot`] and the planned API's
+/// [`OtProblem::ground_truth`](crate::api::OtProblem::ground_truth) so
+/// the constants live in exactly one place.
+pub fn ground_truth_config(eps: f64) -> SinkhornConfig {
+    SinkhornConfig {
+        epsilon: eps,
+        max_iters: 20_000,
+        tol: 1e-6,
+        check_every: 20,
+        threads: 1,
+        stabilize: false,
+        max_batch: 1,
+    }
+}
+
 /// Converged dense Sinkhorn used as the "ground truth" ROT value in the
 /// tradeoff figures (the paper's `Sin` with a tight tolerance).
 pub fn ground_truth_rot<K: KernelOp + ?Sized>(
@@ -268,16 +295,7 @@ pub fn ground_truth_rot<K: KernelOp + ?Sized>(
     b: &[f32],
     eps: f64,
 ) -> Result<f64> {
-    let cfg = SinkhornConfig {
-        epsilon: eps,
-        max_iters: 20_000,
-        tol: 1e-6,
-        check_every: 20,
-        threads: 1,
-        stabilize: false,
-        max_batch: 1,
-    };
-    Ok(sinkhorn(kernel, a, b, &cfg)?.objective)
+    Ok(sinkhorn(kernel, a, b, &ground_truth_config(eps))?.objective)
 }
 
 /// L1 marginal feasibility of a solution (diagnostic).

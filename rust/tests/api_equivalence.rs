@@ -1,0 +1,403 @@
+//! Planner-equivalence properties: every [`Plan`] the planner can emit
+//! must execute **bitwise identically** to the corresponding hand-wired
+//! legacy free-function call (the acceptance criterion of the API
+//! redesign). The mapping under test is the table in
+//! `rust/src/api/execute.rs`:
+//!
+//! * dense / factored backend × plain / log-domain / auto-escalate domain,
+//! * B ∈ {1, 4} weight pairs (fused batched execution),
+//! * 1 vs 4 solver threads (pool transparency through the API),
+//! * prebuilt-factor problems (the GAN path) and seeded internal fits.
+//!
+//! SIMD arms: these properties run under whatever arm the process
+//! dispatches; CI runs the whole suite twice (default + the
+//! `verify-scalar` job with `LINEAR_SINKHORN_SIMD=scalar`), which is what
+//! "both arms" means everywhere in this repo — the arm is process-global
+//! by design.
+
+use linear_sinkhorn::config::SinkhornConfig;
+use linear_sinkhorn::prelude::*;
+// The reference layer the planned executor must reproduce bit for bit
+// (re-exported for downstream users as prelude::legacy).
+use linear_sinkhorn::sinkhorn::{
+    sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, sinkhorn_log_domain, sinkhorn_stabilized,
+    solve_batch, solve_batch_log_domain, solve_batch_stabilized,
+};
+
+fn clouds(seed: u64, n: usize) -> (Measure, Measure) {
+    let mut rng = Rng::seed_from(seed);
+    data::gaussian_blobs(n, &mut rng)
+}
+
+fn cfg(eps: f64) -> SinkhornConfig {
+    SinkhornConfig {
+        epsilon: eps,
+        max_iters: 400,
+        tol: 1e-5,
+        check_every: 5,
+        threads: 1,
+        stabilize: false,
+        max_batch: 8,
+    }
+}
+
+/// B skewed weight vectors of length n, each summing to one.
+fn weight_family(n: usize, b: usize) -> Vec<Vec<f32>> {
+    (0..b)
+        .map(|k| {
+            let raw: Vec<f64> = (0..n)
+                .map(|i| 1.0 + ((i * (k + 2) + k) % 7) as f64 * (0.2 + k as f64 * 0.3))
+                .collect();
+            let total: f64 = raw.iter().sum();
+            raw.iter().map(|&x| (x / total) as f32).collect()
+        })
+        .collect()
+}
+
+fn assert_solution_matches(api: &Solution, legacy: &linear_sinkhorn::sinkhorn::SinkhornSolution) {
+    assert_eq!(api.objective.to_bits(), legacy.objective.to_bits(), "objective");
+    assert_eq!(api.iterations, legacy.iterations, "iterations");
+    assert_eq!(api.converged, legacy.converged, "converged");
+    assert_eq!(api.marginal_error.to_bits(), legacy.marginal_error.to_bits(), "marginal");
+    assert_eq!(api.u.len(), legacy.u.len());
+    for (i, (a, l)) in api.u.iter().zip(&legacy.u).enumerate() {
+        assert_eq!(a.to_bits(), l.to_bits(), "u[{i}]");
+    }
+    for (j, (a, l)) in api.v.iter().zip(&legacy.v).enumerate() {
+        assert_eq!(a.to_bits(), l.to_bits(), "v[{j}]");
+    }
+}
+
+#[test]
+fn dense_plain_plan_matches_direct_dense_sinkhorn() {
+    let (mu, nu) = clouds(0, 60);
+    let c = cfg(0.5);
+    let api = OtProblem::new(&mu, &nu).config(&c).dense().solve().unwrap();
+    let dk = DenseKernel::from_measures(&mu, &nu, 0.5);
+    let legacy = sinkhorn(&dk, &mu.weights, &nu.weights, &c).unwrap();
+    assert_solution_matches(&api, &legacy);
+    assert!(!api.escalated);
+}
+
+#[test]
+fn factored_plain_plan_matches_direct_factored_sinkhorn() {
+    // Map shared explicitly: the planned route and the hand-wired route
+    // must then agree bit for bit (same factors, same solver loop).
+    let (mu, nu) = clouds(1, 50);
+    let c = cfg(0.5);
+    let mut rng = Rng::seed_from(11);
+    let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 64, &mut rng);
+    let api = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(64)
+        .with_feature_map(&map)
+        .stabilized_factors(false)
+        .solve()
+        .unwrap();
+    let fk = FactoredKernel::from_measures(&map, &mu, &nu);
+    let legacy = sinkhorn(&fk, &mu.weights, &nu.weights, &c).unwrap();
+    assert_solution_matches(&api, &legacy);
+}
+
+#[test]
+fn seeded_internal_fit_matches_a_seeded_external_fit() {
+    // No map handed in: the executor's documented draw is
+    // GaussianFeatureMap::fit(.., &mut Rng::seed_from(seed)) — replicate
+    // it externally and the results must be bitwise identical.
+    let (mu, nu) = clouds(2, 40);
+    let c = cfg(0.5);
+    let api = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(32)
+        .stabilized_factors(false)
+        .seed(77)
+        .solve()
+        .unwrap();
+    let mut rng = Rng::seed_from(77);
+    let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 32, &mut rng);
+    let fk = FactoredKernel::from_measures(&map, &mu, &nu);
+    let legacy = sinkhorn(&fk, &mu.weights, &nu.weights, &c).unwrap();
+    assert_solution_matches(&api, &legacy);
+}
+
+#[test]
+fn log_domain_plan_matches_direct_log_domain_solver() {
+    let (mu, nu) = clouds(3, 30);
+    let eps = 1e-2;
+    let c = SinkhornConfig { max_iters: 120, ..cfg(eps) };
+    let mut rng = Rng::seed_from(13);
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, 24, &mut rng);
+    let api = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(24)
+        .with_feature_map(&map)
+        .stabilized_factors(true)
+        .domain(DomainChoice::LogDomain)
+        .solve()
+        .unwrap();
+    let fk = FactoredKernel::from_measures_stabilized(&map, &mu, &nu);
+    let legacy = sinkhorn_log_domain(&fk, &mu.weights, &nu.weights, &c).unwrap();
+    assert_solution_matches(&api, &legacy);
+    assert!(!api.escalated, "a planned log domain is not an escalation");
+}
+
+#[test]
+fn auto_escalate_plan_matches_sinkhorn_stabilized_on_underflowing_factors() {
+    // Factors near 1e-30: plain f32 provably diverges and escalates.
+    let (n, m) = (12, 10);
+    let phi_x = Mat::from_fn(n, 6, |i, k| 1e-30f32 * (1.0 + 0.1 * (((i + 2 * k) % 5) as f32)));
+    let phi_y = Mat::from_fn(m, 6, |j, k| 1e-30f32 * (1.0 + 0.1 * (((2 * j + k) % 7) as f32)));
+    let a = weight_family(n, 1).remove(0);
+    let b = weight_family(m, 1).remove(0);
+    let c = SinkhornConfig { stabilize: true, ..cfg(1e-3) };
+    let api = OtProblem::from_factors(&phi_x, &phi_y)
+        .config(&c)
+        .weights(&a, &b)
+        .solve()
+        .unwrap();
+    let fk = FactoredKernel::from_factors(phi_x.clone(), phi_y.clone());
+    let (legacy, escalated) = sinkhorn_stabilized(&fk, &a, &b, &c).unwrap();
+    assert!(escalated && api.escalated, "both routes must take the log-domain path");
+    assert_solution_matches(&api, &legacy);
+    // With the plain domain the typed error surfaces through the API too.
+    let plain = SinkhornConfig { stabilize: false, ..c };
+    let err = OtProblem::from_factors(&phi_x, &phi_y).config(&plain).weights(&a, &b).solve();
+    assert!(matches!(err, Err(Error::SinkhornDiverged { .. })));
+}
+
+#[test]
+fn batched_plans_match_solve_batch_per_pair_bitwise() {
+    // B = 4 on one kernel: the planned fused execution must reproduce
+    // both the legacy batched call and B solo solves, bit for bit.
+    let (mu, nu) = clouds(4, 35);
+    let c = cfg(0.5);
+    let mut rng = Rng::seed_from(17);
+    let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 48, &mut rng);
+    let ws_a = weight_family(mu.len(), 4);
+    let ws_b = weight_family(nu.len(), 4);
+    let pairs: Vec<(&[f32], &[f32])> =
+        ws_a.iter().zip(&ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+    let api = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(48)
+        .with_feature_map(&map)
+        .stabilized_factors(false)
+        .weight_pairs(&pairs)
+        .solve_all();
+    assert_eq!(api.len(), 4);
+    let fk = FactoredKernel::from_measures(&map, &mu, &nu);
+    let legacy = solve_batch(&fk, &pairs, &c);
+    for (p, (got, want)) in api.iter().zip(&legacy).enumerate() {
+        let (got, want) = (got.as_ref().unwrap(), want.as_ref().unwrap());
+        assert_solution_matches(got, want);
+        let solo = sinkhorn(&fk, pairs[p].0, pairs[p].1, &c).unwrap();
+        assert_solution_matches(got, &solo);
+    }
+    // B = 1 degenerates to the single-solve route exactly.
+    let single: Vec<(&[f32], &[f32])> = vec![pairs[0]];
+    let one = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(48)
+        .with_feature_map(&map)
+        .stabilized_factors(false)
+        .weight_pairs(&single)
+        .solve_all();
+    assert_solution_matches(
+        one[0].as_ref().unwrap(),
+        &sinkhorn(&fk, pairs[0].0, pairs[0].1, &c).unwrap(),
+    );
+}
+
+#[test]
+fn batched_log_domain_plan_matches_solve_batch_log_domain() {
+    let (mu, nu) = clouds(5, 20);
+    let eps = 1e-2;
+    let c = SinkhornConfig { max_iters: 80, ..cfg(eps) };
+    let mut rng = Rng::seed_from(19);
+    let map = GaussianFeatureMap::fit(&mu, &nu, eps, 16, &mut rng);
+    let ws_a = weight_family(mu.len(), 3);
+    let ws_b = weight_family(nu.len(), 3);
+    let pairs: Vec<(&[f32], &[f32])> =
+        ws_a.iter().zip(&ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+    let api = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(16)
+        .with_feature_map(&map)
+        .stabilized_factors(true)
+        .domain(DomainChoice::LogDomain)
+        .weight_pairs(&pairs)
+        .solve_all();
+    let fk = FactoredKernel::from_measures_stabilized(&map, &mu, &nu);
+    let legacy = solve_batch_log_domain(&fk, &pairs, &c);
+    for (got, want) in api.iter().zip(&legacy) {
+        assert_solution_matches(got.as_ref().unwrap(), want.as_ref().unwrap());
+    }
+}
+
+#[test]
+fn divergence_plan_matches_legacy_sinkhorn_divergence() {
+    let (mu, nu) = clouds(6, 40);
+    let c = cfg(0.5);
+    let mut rng = Rng::seed_from(23);
+    let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 48, &mut rng);
+    let report = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(48)
+        .with_feature_map(&map)
+        .stabilized_factors(false)
+        .divergence()
+        .unwrap();
+    let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
+    let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);
+    let k_yy = FactoredKernel::from_measures(&map, &nu, &nu);
+    let legacy =
+        sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &c).unwrap();
+    assert_eq!(report.divergence.to_bits(), legacy.to_bits());
+    assert_eq!(report.escalations(), 0);
+}
+
+#[test]
+fn divergence_from_factors_matches_the_gan_triple() {
+    // The GAN path: three plain solves on prebuilt factors.
+    let mut rng = Rng::seed_from(29);
+    let (mu, nu) = clouds(7, 24);
+    let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 16, &mut rng);
+    let phi_a = map.feature_matrix(&mu.points);
+    let phi_b = map.feature_matrix(&nu.points);
+    let s = mu.len();
+    let w = vec![1.0f32 / s as f32; s];
+    let c = cfg(0.5);
+    let report = OtProblem::from_factors(&phi_a, &phi_b)
+        .config(&c)
+        .weights(&w, &w)
+        .divergence()
+        .unwrap();
+    let k_xy = FactoredKernel::from_factors(phi_a.clone(), phi_b.clone());
+    let k_xx = FactoredKernel::from_factors(phi_a.clone(), phi_a.clone());
+    let k_yy = FactoredKernel::from_factors(phi_b.clone(), phi_b.clone());
+    let s_xy = sinkhorn(&k_xy, &w, &w, &c).unwrap();
+    let s_xx = sinkhorn(&k_xx, &w, &w, &c).unwrap();
+    let s_yy = sinkhorn(&k_yy, &w, &w, &c).unwrap();
+    assert_solution_matches(&report.xy, &s_xy);
+    assert_solution_matches(&report.xx, &s_xx);
+    assert_solution_matches(&report.yy, &s_yy);
+    let div = s_xy.objective - 0.5 * (s_xx.objective + s_yy.objective);
+    assert_eq!(report.divergence.to_bits(), div.to_bits());
+}
+
+#[test]
+fn batched_divergence_plan_matches_solve_batch_stabilized_triple() {
+    // The coordinator fuse-group path: three width-B batched solves.
+    let (mu, nu) = clouds(8, 30);
+    let c = SinkhornConfig { stabilize: true, ..cfg(0.5) };
+    let mut rng = Rng::seed_from(31);
+    let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 32, &mut rng);
+    let ws_a = weight_family(mu.len(), 4);
+    let ws_b = weight_family(nu.len(), 4);
+    let pairs: Vec<(&[f32], &[f32])> =
+        ws_a.iter().zip(&ws_b).map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+    let reports = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(32)
+        .with_feature_map(&map)
+        .stabilized_factors(true)
+        .weight_pairs(&pairs)
+        .divergence_all();
+    let k_xy = FactoredKernel::from_measures_stabilized(&map, &mu, &nu);
+    let k_xx = FactoredKernel::from_measures_stabilized(&map, &mu, &mu);
+    let k_yy = FactoredKernel::from_measures_stabilized(&map, &nu, &nu);
+    let xx_pairs: Vec<(&[f32], &[f32])> = pairs.iter().map(|&(a, _)| (a, a)).collect();
+    let yy_pairs: Vec<(&[f32], &[f32])> = pairs.iter().map(|&(_, b)| (b, b)).collect();
+    let l_xy = solve_batch_stabilized(&k_xy, &pairs, &c);
+    let l_xx = solve_batch_stabilized(&k_xx, &xx_pairs, &c);
+    let l_yy = solve_batch_stabilized(&k_yy, &yy_pairs, &c);
+    for (p, report) in reports.iter().enumerate() {
+        let report = report.as_ref().unwrap();
+        let (xy, _) = l_xy[p].as_ref().unwrap();
+        let (xx, _) = l_xx[p].as_ref().unwrap();
+        let (yy, _) = l_yy[p].as_ref().unwrap();
+        assert_solution_matches(&report.xy, xy);
+        let div = xy.objective - 0.5 * (xx.objective + yy.objective);
+        assert_eq!(report.divergence.to_bits(), div.to_bits(), "pair {p}");
+    }
+}
+
+#[test]
+fn solver_threads_are_transparent_through_the_api() {
+    // 1 vs 4 intra-solve threads and 1 vs 3 solve threads: identical bits
+    // (n = 700 crosses the pooled-matvec and parallel-feature thresholds).
+    let (mu, nu) = clouds(9, 700);
+    let c = SinkhornConfig { max_iters: 60, stabilize: true, ..cfg(0.5) };
+    let run = |solver_threads: usize, threads: usize| {
+        OtProblem::new(&mu, &nu)
+            .config(&c)
+            .rank(64)
+            .seed(5)
+            .threads(threads)
+            .solver_threads(solver_threads)
+            .divergence()
+            .unwrap()
+            .divergence
+    };
+    let d11 = run(1, 1);
+    let d41 = run(4, 1);
+    let d13 = run(1, 3);
+    let d43 = run(4, 3);
+    assert_eq!(d11.to_bits(), d41.to_bits(), "solver threads changed the bits");
+    assert_eq!(d11.to_bits(), d13.to_bits(), "solve threads changed the bits");
+    assert_eq!(d11.to_bits(), d43.to_bits(), "combined threading changed the bits");
+}
+
+#[test]
+fn accelerated_plan_matches_direct_sinkhorn_accelerated() {
+    let (mu, nu) = clouds(10, 40);
+    let c = SinkhornConfig { max_iters: 200, check_every: 1, ..cfg(0.5) };
+    let mut rng = Rng::seed_from(37);
+    let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 32, &mut rng);
+    let api = OtProblem::new(&mu, &nu)
+        .config(&c)
+        .rank(32)
+        .with_feature_map(&map)
+        .stabilized_factors(false)
+        .domain(DomainChoice::Plain)
+        .accelerated()
+        .solve()
+        .unwrap();
+    let fk = FactoredKernel::from_measures(&map, &mu, &nu);
+    let legacy = sinkhorn_accelerated(&fk, &mu.weights, &nu.weights, &c).unwrap();
+    assert_eq!(api.objective.to_bits(), legacy.objective.to_bits());
+    assert_eq!(api.iterations, legacy.iterations);
+    assert_eq!(
+        api.grad_norm.unwrap().to_bits(),
+        legacy.grad_norm.to_bits(),
+        "accelerated diagnostics"
+    );
+}
+
+#[test]
+fn executed_plan_round_trips_through_json_identically() {
+    // Serialise the plan, decode it, execute both: identical bits — the
+    // property cross-host shard dispatch will rely on.
+    let (mu, nu) = clouds(12, 45);
+    let problem = OtProblem::new(&mu, &nu).epsilon(0.25).rank(40).seed(3);
+    let plan = problem.plan().unwrap();
+    let decoded = Plan::from_json(&plan.to_json()).unwrap();
+    assert_eq!(decoded, plan);
+    let a = problem.solve_planned(&plan).unwrap();
+    let b = problem.solve_planned(&decoded).unwrap();
+    assert_solution_matches_api(&a, &b);
+    let da = problem.divergence_planned(&plan).unwrap();
+    let db = problem.divergence_planned(&decoded).unwrap();
+    assert_eq!(da.divergence.to_bits(), db.divergence.to_bits());
+}
+
+fn assert_solution_matches_api(a: &Solution, b: &Solution) {
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    assert_eq!(a.iterations, b.iterations);
+    for (x, y) in a.u.iter().zip(&b.u) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in a.v.iter().zip(&b.v) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}

@@ -18,6 +18,12 @@
 
 use linear_sinkhorn::config::SinkhornConfig;
 use linear_sinkhorn::prelude::*;
+// The reference free-function layer is the baseline these properties
+// compare the batched engine against (re-exported as prelude::legacy).
+use linear_sinkhorn::sinkhorn::{
+    sinkhorn, sinkhorn_divergence, sinkhorn_divergence_batch, sinkhorn_log_domain, solve_batch,
+    solve_batch_log_domain,
+};
 
 fn cfg(eps: f64) -> SinkhornConfig {
     SinkhornConfig {

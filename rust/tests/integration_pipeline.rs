@@ -5,7 +5,10 @@
 use linear_sinkhorn::config::SinkhornConfig;
 use linear_sinkhorn::features::FeatureMap;
 use linear_sinkhorn::prelude::*;
-use linear_sinkhorn::sinkhorn::{marginal_errors, transport_plan};
+// These pipeline properties exercise the reference free-function layer
+// (prelude::legacy); rust/tests/api_equivalence.rs proves the planned API
+// matches it bitwise.
+use linear_sinkhorn::sinkhorn::{marginal_errors, sinkhorn, sinkhorn_divergence, transport_plan};
 use linear_sinkhorn::testing::property;
 
 fn cfg(eps: f64) -> SinkhornConfig {

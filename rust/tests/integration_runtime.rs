@@ -10,6 +10,7 @@ use linear_sinkhorn::config::SinkhornConfig;
 use linear_sinkhorn::features::{FeatureMap, GaussianFeatureMap};
 use linear_sinkhorn::prelude::*;
 use linear_sinkhorn::runtime::{mat_to_literal, vec_to_literal, Engine, Registry};
+use linear_sinkhorn::sinkhorn::sinkhorn;
 
 fn registry() -> Option<Registry> {
     // Tests run from the crate root.

@@ -34,6 +34,8 @@ use linear_sinkhorn::linalg::{
     matvec_t_into_pooled_at, Mat,
 };
 use linear_sinkhorn::prelude::*;
+// The reference free-function layer under test (prelude::legacy).
+use linear_sinkhorn::sinkhorn::sinkhorn_divergence;
 use linear_sinkhorn::testing::property;
 
 /// f64 reference `a^T v` for error bounds.
