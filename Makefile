@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-scalar doc doc-test examples fmt fmt-check clippy check artifacts perf bench-smoke clean
+.PHONY: all build test test-scalar shard-fault doc doc-test examples fmt fmt-check clippy check artifacts perf bench-smoke clean
 
 all: build
 
@@ -33,6 +33,14 @@ examples:
 test-scalar:
 	LINEAR_SINKHORN_SIMD=scalar $(CARGO) test -q
 
+# The shard fault-injection suite under both SIMD dispatch arms: the
+# sharded scatter/gather solve must stay bitwise identical to the local
+# fused solve per arm, under every survivable fault schedule (CI runs
+# this as the `shard-fault` job).
+shard-fault:
+	$(CARGO) test -q --test shard_fault_injection --test wire_format
+	LINEAR_SINKHORN_SIMD=scalar $(CARGO) test -q --test shard_fault_injection --test wire_format
+
 # Rustdoc with warnings denied: broken intra-doc links fail the build, so
 # documentation drift (e.g. a citation of a section that no longer exists)
 # is caught here rather than in review.
@@ -51,7 +59,7 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-check: build test doc doc-test examples fmt-check clippy
+check: build test shard-fault doc doc-test examples fmt-check clippy
 	@echo "check: OK"
 
 # AOT-lower the Pallas/JAX graphs to HLO text + manifest. The binary never

@@ -14,6 +14,14 @@
 //!   baseline. The acceptance bar is the batched case beating sequential
 //!   at width ≥ 4 on the release build (EXPERIMENTS.md §Throughput).
 //!
+//! A third table reruns the shared-support workload with fuse groups
+//! delegated through the shard scatter/gather tier
+//! (`--shard-workers`, see `linear_sinkhorn::shard`), sweeping the shard
+//! worker count with `0` (in-process solve) as the baseline. It measures
+//! the wire-format + scatter/gather overhead against multi-worker
+//! parallelism; results are bitwise identical at every point
+//! (EXPERIMENTS.md §Throughput multi-worker).
+//!
 //! Setting `BENCH_SMOKE=1` shrinks every knob to CI scale;
 //! `BENCH_JSON=<path>` appends each table there as JSON lines.
 //!
@@ -41,6 +49,7 @@ fn service_cfg(workers: usize, max_batch: usize, fuse_width: usize) -> ServiceCo
         num_features: 128,
         solver_threads: 1,
         cache_capacity: 8,
+        shard_workers: 0,
     }
 }
 
@@ -115,6 +124,11 @@ fn main() {
             "target/coordinator_batched.csv",
             "csv output (batched-vs-sequential table)",
         )
+        .opt(
+            "sharded-csv",
+            "target/coordinator_sharded.csv",
+            "csv output (sharded multi-worker table)",
+        )
         .parse();
     let smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
     let (n_req, n) = if smoke {
@@ -173,6 +187,34 @@ fn main() {
         }
     }
     bt.emit(Some(args.get_str("batched-csv")));
+
+    // Sharded serving: the same fusable workload with every fuse group
+    // delegated through the shard coordinator's wire-format
+    // scatter/gather path. `0` shard workers is the in-process baseline;
+    // the delta at 1 worker is pure envelope + transport overhead, and
+    // higher counts measure scatter parallelism across chunked groups.
+    let shard_counts: &[usize] = if smoke { &[0, 2] } else { &[0, 1, 2, 4] };
+    let mut st = Table::new(
+        "Sharded serving (shared-support workload, fuse width 8)",
+        &["shard workers", "req/s", "p50 ms", "p99 ms", "speedup vs in-process"],
+    );
+    let mut shard_base_rps = 0.0f64;
+    for &shards in shard_counts {
+        let mut cfg = service_cfg(2, 32, 8);
+        cfg.shard_workers = shards;
+        let (rps, p50, p99, _) = run_load(cfg, shared_workload(n_req, n));
+        if shards == 0 {
+            shard_base_rps = rps;
+        }
+        st.row(vec![
+            shards.to_string(),
+            format!("{rps:.1}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+            format!("{:.2}x", rps / shard_base_rps.max(1e-9)),
+        ]);
+    }
+    st.emit(Some(args.get_str("sharded-csv")));
 
     println!(
         "\nacceptance bar: shared-support req/s at fuse width >= 4 beats width 1 \

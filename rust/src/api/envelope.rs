@@ -1,0 +1,443 @@
+//! Shard envelopes: the [`crate::runtime::wire`] documents that carry a
+//! fuse group to a remote worker and its solutions back.
+//!
+//! * [`TaskEnvelope`] — one scatter unit: the serialised [`Plan`], the
+//!   group's shared support measures, the per-request weight pairs, and
+//!   (optionally) the exact feature map the coordinator resolved from its
+//!   cache. Shipping the map matters for the bitwise contract: a service
+//!   cache map is drawn from a *worker's* RNG stream, not from
+//!   `plan.seed`, so a remote executor could not refit it — instead the
+//!   anchors travel as an f32 column and the worker rebuilds the map with
+//!   [`GaussianFeatureMap::with_anchors`], which recomputes the derived
+//!   per-anchor constants deterministically from the same bits. Without a
+//!   map the worker falls back to the executor's seeded refit
+//!   (`Rng::seed_from(plan.seed)`), which is equally deterministic.
+//! * [`ResultEnvelope`] — the gather unit: per-pair scalar diagnostics as
+//!   f64 columns and the three solves' dual scalings as f32 columns, so
+//!   the reassembled [`DivergenceReport`]s are bit-for-bit the ones the
+//!   worker computed (NaN marginal errors included — scalars travel as
+//!   bit patterns, not text). Failed pairs travel as their error message
+//!   and decode to [`Error::Config`], the same replication convention as
+//!   the executor's whole-batch failures (`err_per_pair`).
+//!
+//! Envelope identity: results are matched to tasks by `task_id` alone, so
+//! a duplicated or re-scattered task yields interchangeable result frames
+//! — dedup at the gather site is safe by construction.
+
+use crate::data::Measure;
+use crate::error::{Error, Result};
+use crate::features::GaussianFeatureMap;
+use crate::linalg::simd::SimdLevel;
+use crate::linalg::Mat;
+use crate::runtime::{Json, WireDoc};
+
+use super::plan::Plan;
+use super::solution::{DivergenceReport, Solution};
+
+/// Scalar diagnostics per pair, packed into one f64 column (see
+/// [`ResultEnvelope`]): 3 objectives, 3 marginal errors, 3 iteration
+/// counts, 3 converged flags, 3 escalated flags, 3 solve wall clocks,
+/// 1 report wall clock.
+const SCALARS_PER_PAIR: usize = 19;
+
+/// One scatter unit: a fuse group (or a pair-chunk of one) bound for a
+/// shard worker.
+#[derive(Clone, Debug)]
+pub struct TaskEnvelope {
+    /// Gather key — the coordinator dedups result frames on this.
+    pub task_id: u64,
+    /// The fuse group this chunk came from (observability only).
+    pub group_id: u64,
+    /// Originating request ids, index-aligned with `pairs` (observability
+    /// and re-scatter bookkeeping; empty when callers have no ids).
+    pub request_ids: Vec<u64>,
+    pub plan: Plan,
+    pub mu: Measure,
+    pub nu: Measure,
+    /// Per-request weight pairs `(a, b)` with `|a| = n`, `|b| = m`.
+    pub pairs: Vec<(Vec<f32>, Vec<f32>)>,
+    /// The exact feature map to solve with (see the module docs); `None`
+    /// lets the worker refit from `plan.seed`.
+    pub map: Option<GaussianFeatureMap>,
+}
+
+impl TaskEnvelope {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut doc = WireDoc::with_kind("task");
+        doc.set_u64("task_id", self.task_id);
+        doc.set_u64("group_id", self.group_id);
+        doc.set_json(
+            "request_ids",
+            Json::Arr(self.request_ids.iter().map(|id| Json::Str(id.to_string())).collect()),
+        );
+        doc.set_json(
+            "plan",
+            Json::parse(&self.plan.to_json()).expect("Plan::to_json emits valid json"),
+        );
+        let (n, dim) = (self.mu.len(), self.mu.dim());
+        let m = self.nu.len();
+        doc.set_num("n", n as f64);
+        doc.set_num("m", m as f64);
+        doc.set_num("dim", dim as f64);
+        doc.set_num("pairs", self.pairs.len() as f64);
+        doc.push_f32("mu.points", self.mu.points.data()).expect("fresh doc");
+        doc.push_f32("mu.weights", &self.mu.weights).expect("fresh doc");
+        doc.push_f32("nu.points", self.nu.points.data()).expect("fresh doc");
+        doc.push_f32("nu.weights", &self.nu.weights).expect("fresh doc");
+        for (i, (a, b)) in self.pairs.iter().enumerate() {
+            doc.push_f32(&format!("pair{i}.a"), a).expect("unique pair column");
+            doc.push_f32(&format!("pair{i}.b"), b).expect("unique pair column");
+        }
+        if let Some(map) = &self.map {
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("eps".to_string(), Json::Num(map.eps));
+            obj.insert("q".to_string(), Json::Num(map.q));
+            obj.insert("radius".to_string(), Json::Num(map.radius));
+            obj.insert("r".to_string(), Json::Num(map.anchors.rows() as f64));
+            doc.set_json("map", Json::Obj(obj));
+            doc.push_f32("map.anchors", map.anchors.data()).expect("fresh doc");
+        }
+        doc.encode()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<TaskEnvelope> {
+        let doc = WireDoc::decode(bytes)?;
+        if doc.kind() != "task" {
+            return Err(Error::Wire(format!("expected task envelope, got `{}`", doc.kind())));
+        }
+        let plan_json = doc
+            .meta
+            .get("plan")
+            .ok_or_else(|| Error::Wire("task envelope missing `plan`".into()))?
+            .encode();
+        let plan =
+            Plan::from_json(&plan_json).map_err(|e| Error::Wire(format!("task plan: {e}")))?;
+        let n = doc.get_usize("n")?;
+        let m = doc.get_usize("m")?;
+        let dim = doc.get_usize("dim")?;
+        let n_pairs = doc.get_usize("pairs")?;
+        let request_ids = match doc.meta.get("request_ids") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .and_then(|s| s.parse::<u64>().ok())
+                        .ok_or_else(|| Error::Wire("bad request id".into()))
+                })
+                .collect::<Result<Vec<u64>>>()?,
+            _ => return Err(Error::Wire("task envelope missing `request_ids`".into())),
+        };
+        let mu = decode_measure(&doc, "mu", n, dim)?;
+        let nu = decode_measure(&doc, "nu", m, dim)?;
+        let mut pairs = Vec::with_capacity(n_pairs);
+        for i in 0..n_pairs {
+            let a = doc.f32s(&format!("pair{i}.a"))?;
+            let b = doc.f32s(&format!("pair{i}.b"))?;
+            if a.len() != n || b.len() != m {
+                return Err(Error::Wire(format!(
+                    "pair {i} weights have lengths ({}, {}), expected ({n}, {m})",
+                    a.len(),
+                    b.len()
+                )));
+            }
+            pairs.push((a.to_vec(), b.to_vec()));
+        }
+        let map = match doc.meta.get("map") {
+            Some(meta) => {
+                let num = |k: &str| -> Result<f64> {
+                    meta.get(k)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| Error::Wire(format!("map meta missing `{k}`")))
+                };
+                let r = meta
+                    .get("r")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::Wire("map meta missing `r`".into()))?;
+                let data = doc.f32s("map.anchors")?;
+                if data.len() != r * dim {
+                    return Err(Error::Wire(format!(
+                        "map.anchors has {} entries, expected {r}x{dim}",
+                        data.len()
+                    )));
+                }
+                let anchors = Mat::from_vec(r, dim, data.to_vec());
+                Some(GaussianFeatureMap::with_anchors(
+                    anchors,
+                    num("eps")?,
+                    num("q")?,
+                    num("radius")?,
+                ))
+            }
+            None => None,
+        };
+        Ok(TaskEnvelope {
+            task_id: doc.get_u64("task_id")?,
+            group_id: doc.get_u64("group_id")?,
+            request_ids,
+            plan,
+            mu,
+            nu,
+            pairs,
+            map,
+        })
+    }
+}
+
+fn decode_measure(doc: &WireDoc, prefix: &str, rows: usize, dim: usize) -> Result<Measure> {
+    let points = doc.f32s(&format!("{prefix}.points"))?;
+    let weights = doc.f32s(&format!("{prefix}.weights"))?;
+    if points.len() != rows * dim {
+        return Err(Error::Wire(format!(
+            "{prefix}.points has {} entries, expected {rows}x{dim}",
+            points.len()
+        )));
+    }
+    if weights.len() != rows {
+        return Err(Error::Wire(format!(
+            "{prefix}.weights has {} entries, expected {rows}",
+            weights.len()
+        )));
+    }
+    Ok(Measure { points: Mat::from_vec(rows, dim, points.to_vec()), weights: weights.to_vec() })
+}
+
+/// The gather unit: one task's per-pair divergence results.
+#[derive(Debug)]
+pub struct ResultEnvelope {
+    pub task_id: u64,
+    pub worker_id: u64,
+    pub results: Vec<Result<DivergenceReport>>,
+}
+
+impl ResultEnvelope {
+    pub fn new(task_id: u64, worker_id: u64, results: Vec<Result<DivergenceReport>>) -> Self {
+        ResultEnvelope { task_id, worker_id, results }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut doc = WireDoc::with_kind("result");
+        doc.set_u64("task_id", self.task_id);
+        doc.set_u64("worker_id", self.worker_id);
+        doc.set_num("pairs", self.results.len() as f64);
+        let arm = self
+            .results
+            .iter()
+            .find_map(|r| r.as_ref().ok().map(|rep| rep.simd_arm))
+            .unwrap_or_else(|| crate::linalg::simd::active_level().label());
+        doc.set_str("simd_arm", arm);
+        let statuses = self
+            .results
+            .iter()
+            .map(|r| match r {
+                Ok(_) => Json::Str("ok".to_string()),
+                Err(e) => Json::Str(format!("error: {e}")),
+            })
+            .collect();
+        doc.set_json("statuses", Json::Arr(statuses));
+        for (i, result) in self.results.iter().enumerate() {
+            let Ok(rep) = result else { continue };
+            let s = |sol: &Solution| {
+                [
+                    sol.objective,
+                    sol.marginal_error,
+                    sol.iterations as f64,
+                    sol.converged as u8 as f64,
+                    sol.escalated as u8 as f64,
+                    sol.wall_us as f64,
+                ]
+            };
+            let (xy, xx, yy) = (s(&rep.xy), s(&rep.xx), s(&rep.yy));
+            let mut scalars = Vec::with_capacity(SCALARS_PER_PAIR);
+            for j in 0..6 {
+                scalars.push(xy[j]);
+                scalars.push(xx[j]);
+                scalars.push(yy[j]);
+            }
+            scalars.push(rep.wall_us as f64);
+            doc.push_f64(&format!("p{i}.scalars"), &scalars).expect("unique result column");
+            doc.push_f32(&format!("p{i}.xy.u"), &rep.xy.u).expect("unique result column");
+            doc.push_f32(&format!("p{i}.xy.v"), &rep.xy.v).expect("unique result column");
+            doc.push_f32(&format!("p{i}.xx.u"), &rep.xx.u).expect("unique result column");
+            doc.push_f32(&format!("p{i}.xx.v"), &rep.xx.v).expect("unique result column");
+            doc.push_f32(&format!("p{i}.yy.u"), &rep.yy.u).expect("unique result column");
+            doc.push_f32(&format!("p{i}.yy.v"), &rep.yy.v).expect("unique result column");
+        }
+        doc.encode()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ResultEnvelope> {
+        let doc = WireDoc::decode(bytes)?;
+        if doc.kind() != "result" {
+            return Err(Error::Wire(format!("expected result envelope, got `{}`", doc.kind())));
+        }
+        let n_pairs = doc.get_usize("pairs")?;
+        // The executing arm is re-interned against this process's static
+        // labels; an unknown label is a corrupt (or future) frame.
+        let arm = match doc.get_str("simd_arm")? {
+            s if s == SimdLevel::Scalar.label() => SimdLevel::Scalar.label(),
+            s if s == SimdLevel::Avx2Fma.label() => SimdLevel::Avx2Fma.label(),
+            other => return Err(Error::Wire(format!("unknown simd arm `{other}`"))),
+        };
+        let statuses = match doc.meta.get("statuses") {
+            Some(Json::Arr(items)) if items.len() == n_pairs => items,
+            _ => return Err(Error::Wire("result envelope missing per-pair statuses".into())),
+        };
+        let mut results = Vec::with_capacity(n_pairs);
+        for (i, status) in statuses.iter().enumerate() {
+            let status =
+                status.as_str().ok_or_else(|| Error::Wire("status must be a string".into()))?;
+            if status != "ok" {
+                // Same convention as the executor's `err_per_pair`:
+                // remote failures rematerialise as `Error::Config`
+                // carrying the original message.
+                results.push(Err(Error::Config(
+                    status.strip_prefix("error: ").unwrap_or(status).to_string(),
+                )));
+                continue;
+            }
+            let scalars = doc.f64s(&format!("p{i}.scalars"))?;
+            if scalars.len() != SCALARS_PER_PAIR {
+                return Err(Error::Wire(format!(
+                    "p{i}.scalars has {} entries, expected {SCALARS_PER_PAIR}",
+                    scalars.len()
+                )));
+            }
+            let sol = |slot: usize, u: Vec<f32>, v: Vec<f32>| -> Solution {
+                Solution {
+                    objective: scalars[slot],
+                    u,
+                    v,
+                    iterations: scalars[6 + slot] as usize,
+                    marginal_error: scalars[3 + slot],
+                    converged: scalars[9 + slot] != 0.0,
+                    escalated: scalars[12 + slot] != 0.0,
+                    // The divergence path never runs Alg. 2, so the dual
+                    // gradient norm is always absent (see `Solution`).
+                    grad_norm: None,
+                    wall_us: scalars[15 + slot] as u64,
+                    simd_arm: arm,
+                }
+            };
+            let xy = sol(
+                0,
+                doc.f32s(&format!("p{i}.xy.u"))?.to_vec(),
+                doc.f32s(&format!("p{i}.xy.v"))?.to_vec(),
+            );
+            let xx = sol(
+                1,
+                doc.f32s(&format!("p{i}.xx.u"))?.to_vec(),
+                doc.f32s(&format!("p{i}.xx.v"))?.to_vec(),
+            );
+            let yy = sol(
+                2,
+                doc.f32s(&format!("p{i}.yy.u"))?.to_vec(),
+                doc.f32s(&format!("p{i}.yy.v"))?.to_vec(),
+            );
+            // `assemble` recomputes the divergence from the shipped f64
+            // objectives — the identical arithmetic the worker ran, hence
+            // the identical bits.
+            results.push(Ok(DivergenceReport::assemble(xy, xx, yy, scalars[18] as u64)));
+        }
+        Ok(ResultEnvelope {
+            task_id: doc.get_u64("task_id")?,
+            worker_id: doc.get_u64("worker_id")?,
+            results,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::OtProblem;
+    use crate::data;
+    use crate::rng::Rng;
+
+    fn sample_task(with_map: bool) -> TaskEnvelope {
+        let mut rng = Rng::seed_from(5);
+        let (mu, nu) = data::gaussian_blobs(12, &mut rng);
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+            vec![(mu.weights.clone(), nu.weights.clone()); 2];
+        let problem = OtProblem::new(&mu, &nu).epsilon(0.5).rank(8).seed(7);
+        let plan = problem.plan().unwrap();
+        let map = with_map
+            .then(|| GaussianFeatureMap::fit(&mu, &nu, 0.5, 8, &mut Rng::seed_from(7)));
+        TaskEnvelope {
+            task_id: u64::MAX - 3,
+            group_id: 11,
+            request_ids: vec![100, 101],
+            plan,
+            mu,
+            nu,
+            pairs,
+            map,
+        }
+    }
+
+    #[test]
+    fn task_round_trips_with_and_without_map() {
+        for with_map in [false, true] {
+            let task = sample_task(with_map);
+            let back = TaskEnvelope::decode(&task.encode()).unwrap();
+            assert_eq!(back.task_id, task.task_id);
+            assert_eq!(back.request_ids, task.request_ids);
+            assert_eq!(back.plan, task.plan);
+            assert_eq!(back.mu.points, task.mu.points);
+            assert_eq!(back.nu.weights, task.nu.weights);
+            assert_eq!(back.pairs, task.pairs);
+            match (&back.map, &task.map) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.anchors, b.anchors);
+                    assert_eq!(a.eps.to_bits(), b.eps.to_bits());
+                    assert_eq!(a.q.to_bits(), b.q.to_bits());
+                }
+                _ => panic!("map presence must round trip"),
+            }
+        }
+    }
+
+    #[test]
+    fn task_decode_rejects_wrong_kind_and_bad_shapes() {
+        let task = sample_task(false);
+        let frame = task.encode();
+        assert!(matches!(ResultEnvelope::decode(&frame), Err(Error::Wire(_))));
+        assert!(matches!(TaskEnvelope::decode(b"LSW1junk"), Err(Error::Wire(_))));
+    }
+
+    #[test]
+    fn result_round_trips_reports_and_errors_bitwise() {
+        let task = sample_task(false);
+        let pair_refs: Vec<(&[f32], &[f32])> =
+            task.pairs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let mut results = OtProblem::new(&task.mu, &task.nu)
+            .config(&task.plan.sinkhorn_config())
+            .rank(8)
+            .seed(7)
+            .weight_pairs(&pair_refs)
+            .divergence_all_planned(&task.plan);
+        results.push(Err(Error::Service("worker exploded".into())));
+        let env = ResultEnvelope::new(task.task_id, 2, results);
+        let back = ResultEnvelope::decode(&env.encode()).unwrap();
+        assert_eq!(back.task_id, env.task_id);
+        assert_eq!(back.worker_id, 2);
+        assert_eq!(back.results.len(), env.results.len());
+        for (a, b) in back.results.iter().zip(&env.results) {
+            match (a, b) {
+                (Ok(x), Ok(y)) => {
+                    assert_eq!(x.divergence.to_bits(), y.divergence.to_bits());
+                    assert_eq!(x.xy.objective.to_bits(), y.xy.objective.to_bits());
+                    assert_eq!(x.xy.u, y.xy.u);
+                    assert_eq!(x.yy.v, y.yy.v);
+                    assert_eq!(x.xx.iterations, y.xx.iterations);
+                    assert_eq!(x.converged(), y.converged());
+                    assert_eq!(x.simd_arm, y.simd_arm);
+                }
+                (Err(Error::Config(msg)), Err(orig)) => {
+                    assert_eq!(msg, &orig.to_string(), "message survives, type normalises");
+                }
+                other => panic!("slot mismatch: {other:?}"),
+            }
+        }
+    }
+}

@@ -27,11 +27,13 @@
 //! functions remain available for reference-level work via
 //! [`crate::prelude::legacy`].
 
+pub mod envelope;
 mod execute;
 mod plan;
 mod problem;
 mod solution;
 
+pub use envelope::{ResultEnvelope, TaskEnvelope};
 pub use plan::{Backend, Domain, Plan};
 pub use problem::{DomainChoice, KernelChoice, OtProblem, SimdPreference};
 pub use solution::{DivergenceReport, Solution};

@@ -161,6 +161,14 @@ pub struct ServiceConfig {
     /// Capacity (entries) of the shared feature-map cache keyed by
     /// `(dim, eps, r)`; `0` disables caching and re-fits per request.
     pub cache_capacity: usize,
+    /// Shard worker count for cross-host-style serving: `0` (default)
+    /// solves in-process as before; `> 0` spawns that many shard workers
+    /// and delegates every fuse group through the shard coordinator
+    /// (scatter / gather / liveness / retry — see `crate::shard`).
+    /// Results are bitwise identical either way.
+    /// `service.shard_workers` in config files, `--shard-workers` on the
+    /// CLI.
+    pub shard_workers: usize,
 }
 
 impl Default for ServiceConfig {
@@ -172,6 +180,7 @@ impl Default for ServiceConfig {
             num_features: 256,
             solver_threads: 1,
             cache_capacity: 8,
+            shard_workers: 0,
         }
     }
 }
@@ -191,6 +200,9 @@ impl ServiceConfig {
             cache_capacity: doc
                 .get_int("service.cache_capacity")
                 .unwrap_or(d.cache_capacity as i64) as usize,
+            shard_workers: doc
+                .get_int("service.shard_workers")
+                .unwrap_or(d.shard_workers as i64) as usize,
         }
     }
 }

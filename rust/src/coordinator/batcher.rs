@@ -104,16 +104,22 @@ fn fusable(a: &Request, b: &Request) -> bool {
 
 /// Partition a flushed batch into fuse groups of width ≤ `max_width`.
 ///
-/// Greedy first-fit in arrival order: each request joins the first
-/// not-yet-full group it is [`fusable`] with, else opens a new group.
-/// Order within a group (and of group leaders across groups) follows
-/// arrival order, but a fused request replies together with its group —
-/// ahead of unfusable earlier-group neighbours still queued — so
-/// *cross-request* reply order is not strict arrival order (each
-/// request has its own reply channel; nothing observes cross-request
-/// ordering). With `max_width ≤ 1` every request gets its own group —
-/// fusion disabled.
-pub fn fuse_groups(requests: Vec<Request>, max_width: usize) -> Vec<Vec<Request>> {
+/// Requests are first ordered by request ID, then greedily first-fit:
+/// each request joins the first not-yet-full group it is [`fusable`]
+/// with, else opens a new group. The sort makes the partition a **pure
+/// function of the request set** — the same requests always land in the
+/// same groups in the same order, no matter how channel scheduling
+/// interleaved their arrival. That determinism is what the shard tier's
+/// re-scatter leans on: a re-dispatched group re-partitions identically,
+/// so retries cannot reshuffle pair order (and request IDs are assigned
+/// monotonically at submit, so ID order is submit order anyway).
+/// A fused request replies together with its group — ahead of unfusable
+/// earlier-group neighbours still queued — so *cross-request* reply
+/// order is not strict arrival order (each request has its own reply
+/// channel; nothing observes cross-request ordering). With
+/// `max_width ≤ 1` every request gets its own group — fusion disabled.
+pub fn fuse_groups(mut requests: Vec<Request>, max_width: usize) -> Vec<Vec<Request>> {
+    requests.sort_by_key(|r| r.id);
     let cap = max_width.max(1);
     let mut groups: Vec<Vec<Request>> = Vec::new();
     for req in requests {
@@ -333,6 +339,66 @@ mod tests {
             vec![vec![0, 1, 4], vec![2], vec![3], vec![5]],
             "only same-(dim, eps)+same-support requests share a fused solve"
         );
+    }
+
+    #[test]
+    fn fuse_groups_is_a_pure_function_of_request_ids() {
+        // The shard tier re-scatters orphaned groups, and the retry path
+        // is only bitwise-safe if partitioning never depends on channel
+        // arrival order. Property: for any request set, fusing a seeded
+        // shuffle of it yields exactly the groups of the ID-ordered fuse.
+        crate::testing::property("fuse_groups_pure_in_ids", 32, |g| {
+            let (reply_tx, _reply_rx) = sync_channel(512);
+            // A handful of compatibility classes: two support sets × two
+            // epsilon overrides, plus a 3-d odd one out.
+            let pts_a = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+            let pts_b = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32 + 5.0);
+            let pts_c = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+            let n = g.usize_in(1, 24) as u64;
+            let mut requests: Vec<Request> = (0..n)
+                .map(|id| {
+                    let (mu_pts, nu_pts) = match g.usize_in(0, 2) {
+                        0 => (pts_a.clone(), pts_b.clone()),
+                        1 => (pts_b.clone(), pts_a.clone()),
+                        _ => (pts_c.clone(), pts_c.clone()),
+                    };
+                    let eps = if g.usize_in(0, 1) == 0 { None } else { Some(0.25) };
+                    mk_typed_request(
+                        id,
+                        Measure::uniform(mu_pts),
+                        Measure::uniform(nu_pts),
+                        eps,
+                        reply_tx.clone(),
+                    )
+                })
+                .collect();
+            let width = g.usize_in(1, 5);
+            let clone_all = |reqs: &[Request]| -> Vec<Request> {
+                reqs.iter()
+                    .map(|r| {
+                        mk_typed_request(
+                            r.id,
+                            r.mu.clone(),
+                            r.nu.clone(),
+                            r.epsilon,
+                            reply_tx.clone(),
+                        )
+                    })
+                    .collect()
+            };
+            let baseline = group_ids(&fuse_groups(clone_all(&requests), width));
+            // Fisher–Yates with the case's seeded rng: an arbitrary
+            // arrival interleaving of the same request set.
+            for i in (1..requests.len()).rev() {
+                let j = g.rng.uniform_usize(i + 1);
+                requests.swap(i, j);
+            }
+            let shuffled = group_ids(&fuse_groups(requests, width));
+            assert_eq!(
+                shuffled, baseline,
+                "fuse partition must not depend on arrival interleaving (width {width})"
+            );
+        });
     }
 
     #[test]

@@ -46,6 +46,17 @@
 //!   `sinkhorn.stabilize` is on; escalations are counted by the
 //!   `service.stabilized_solves` metric.
 //!
+//! * **Sharded serving** (`service.shard_workers > 0`): every fuse group
+//!   is delegated through a [`crate::shard::ShardCoordinator`] — the
+//!   plan, measures, weight pairs, and the cache-resolved feature map
+//!   ship as wire envelopes to shard workers, and the gathered
+//!   [`crate::api::DivergenceReport`]s are bitwise identical to the
+//!   in-process fused solve (the map travels with the task precisely so
+//!   the worker does not have to refit it). Worker crashes, hangs, and
+//!   lost messages are absorbed by heartbeat liveness + bounded retry;
+//!   see `crate::shard` for the failure ladder and the
+//!   `service.shard.*` metrics.
+//!
 //! Everything is std::thread + mpsc (the offline crate set has no tokio);
 //! for a compute-bound service this is the right tool anyway.
 
@@ -183,6 +194,10 @@ pub struct Service {
     handle: Option<ServiceHandle>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
+    /// Shard tier, when `shard_workers > 0`. Held so the shard workers
+    /// outlive the service workers and are joined when the last `Arc`
+    /// drops at shutdown.
+    shard: Option<Arc<crate::shard::ShardCoordinator>>,
 }
 
 impl Service {
@@ -214,16 +229,27 @@ impl Service {
         // Shared feature-map cache (one per service, all workers).
         let cache = Arc::new(FeatureCache::new(cfg.cache_capacity));
 
+        // Optional shard tier: one coordinator shared by every service
+        // worker, with `shard_workers` in-process executors behind it.
+        let shard = (cfg.shard_workers > 0).then(|| {
+            Arc::new(crate::shard::ShardCoordinator::in_process(
+                cfg.shard_workers,
+                crate::shard::ShardConfig::default(),
+                metrics.clone(),
+            ))
+        });
+
         // Worker pool.
         for w in 0..cfg.workers.max(1) {
             let rx = batch_rx.clone();
             let metrics = metrics.clone();
             let cfg = cfg.clone();
             let cache = cache.clone();
+            let shard = shard.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("ls-worker-{w}"))
-                    .spawn(move || worker_loop(w as u64, rx, cfg, metrics, cache))
+                    .spawn(move || worker_loop(w as u64, rx, cfg, metrics, cache, shard))
                     .expect("spawn worker"),
             );
         }
@@ -233,7 +259,7 @@ impl Service {
             next_id: Arc::new(AtomicU64::new(0)),
             metrics,
         };
-        Service { handle: Some(handle), shutdown, threads }
+        Service { handle: Some(handle), shutdown, threads, shard }
     }
 
     pub fn handle(&self) -> ServiceHandle {
@@ -269,6 +295,7 @@ fn worker_loop(
     cfg: ServiceConfig,
     metrics: Arc<Registry>,
     cache: Arc<FeatureCache>,
+    shard: Option<Arc<crate::shard::ShardCoordinator>>,
 ) {
     let mut rng = Rng::seed_from(0xC0FFEE ^ worker_id);
     // Persistent pools, one pair per worker thread for its whole
@@ -301,7 +328,12 @@ fn worker_loop(
             // and overshoot small integers — read the mean/max fields
             // when tuning `sinkhorn.max_batch`.
             metrics.histogram("service.batch_width").observe_us(group.len() as u64);
-            let results = if group.len() == 1 {
+            let results = if let Some(shard) = shard.as_deref() {
+                if group.len() > 1 {
+                    metrics.counter("service.batched_solves").add(group.len() as u64);
+                }
+                solve_group_sharded(shard, &group, &cfg, &mut rng, bsize, &cache, &metrics)
+            } else if group.len() == 1 {
                 vec![solve_one(
                     &group[0],
                     &cfg,
@@ -450,6 +482,73 @@ fn solve_group(
         .collect()
 }
 
+/// Delegate a fuse group (any width, including 1) through the shard
+/// tier. The feature map is resolved from the service cache exactly as
+/// the in-process paths do — same RNG stream, same cache key — and ships
+/// with the task, so the shard workers solve with the identical anchors
+/// and the gathered reports are bitwise the in-process fused solve's
+/// (see `crate::shard::coordinator` for the argument and
+/// `rust/tests/shard_fault_injection.rs` for the proof under faults).
+#[allow(clippy::too_many_arguments)]
+fn solve_group_sharded(
+    shard: &crate::shard::ShardCoordinator,
+    group: &[Request],
+    cfg: &ServiceConfig,
+    rng: &mut Rng,
+    batch_size: usize,
+    cache: &FeatureCache,
+    metrics: &Registry,
+) -> Vec<Result<Response>> {
+    let rep = &group[0];
+    let mut skcfg = cfg.sinkhorn.clone();
+    if let Some(e) = rep.epsilon {
+        skcfg.epsilon = e;
+    }
+    let eps = skcfg.epsilon;
+    let radius = rep.mu.radius().max(rep.nu.radius());
+    let map =
+        cache.get_or_fit(rep.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
+    let pairs: Vec<(&[f32], &[f32])> =
+        group.iter().map(|r| (r.mu.weights.as_slice(), r.nu.weights.as_slice())).collect();
+    let ids: Vec<u64> = group.iter().map(|r| r.id).collect();
+    let plan = match OtProblem::new(&rep.mu, &rep.nu)
+        .config(&skcfg)
+        .rank(cfg.num_features)
+        .with_feature_map(&map)
+        .stabilized_factors(true)
+        .solver_threads(cfg.solver_threads)
+        .weight_pairs(&pairs)
+        .plan()
+    {
+        Ok(p) => p,
+        Err(e) => {
+            let msg = e.to_string();
+            return group.iter().map(|_| Err(Error::Config(msg.clone()))).collect();
+        }
+    };
+    metrics.counter("service.shard.delegated_groups").inc();
+    let reports = shard.solve_group(&plan, &rep.mu, &rep.nu, &pairs, Some(&map), &ids);
+    group
+        .iter()
+        .zip(reports)
+        .map(|(req, report)| {
+            let report = report?;
+            let stabilized = report.escalations() as u64;
+            if stabilized > 0 {
+                metrics.counter("service.stabilized_solves").add(stabilized);
+            }
+            Ok(Response {
+                id: req.id,
+                divergence: report.divergence,
+                w_xy: report.w_xy(),
+                iterations: report.iterations(),
+                latency_us: req.enqueued.elapsed().as_micros() as u64,
+                batch_size,
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -472,6 +571,7 @@ mod tests {
             num_features: 128,
             solver_threads: 1,
             cache_capacity: 8,
+            shard_workers: 0,
         }
     }
 
@@ -553,6 +653,7 @@ mod tests {
             num_features: 256,
             solver_threads: 1,
             cache_capacity: 8,
+            shard_workers: 0,
         };
         let svc = Service::start(cfg);
         let h = svc.handle();
@@ -709,6 +810,45 @@ mod tests {
         assert!(!m.contains("service.batched_solves"), "fusion must be off:\n{m}");
         drop(h);
         svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_service_matches_in_process_bitwise() {
+        // The same requests through an in-process service and through a
+        // sharded one (2 shard workers) must answer with identical bits.
+        // One service worker on both sides pins which worker's RNG
+        // stream fits the cache map, making the two runs comparable.
+        let run = |shard_workers: usize| {
+            let mut cfg = test_cfg(1);
+            cfg.shard_workers = shard_workers;
+            // Size-triggered flush so the burst fuses into one group on
+            // both sides.
+            cfg.batcher = BatcherConfig { max_batch: 4, max_delay_us: 500_000, queue_depth: 64 };
+            let svc = Service::start(cfg);
+            let h = svc.handle();
+            let (mu, nu) = clouds(21, 40);
+            let solo = h.divergence(mu.clone(), nu.clone()).unwrap();
+            let pendings: Vec<_> =
+                (0..4).map(|_| h.submit(mu.clone(), nu.clone()).unwrap()).collect();
+            let mut out = vec![(solo.divergence, solo.w_xy, solo.iterations)];
+            for p in pendings {
+                let r = p.wait().unwrap();
+                out.push((r.divergence, r.w_xy, r.iterations));
+            }
+            let m = h.metrics_text();
+            drop(h);
+            svc.shutdown();
+            (out, m)
+        };
+        let (local, _) = run(0);
+        let (sharded, metrics) = run(2);
+        for (l, s) in local.iter().zip(&sharded) {
+            assert_eq!(l.0.to_bits(), s.0.to_bits(), "divergence {l:?} vs {s:?}");
+            assert_eq!(l.1.to_bits(), s.1.to_bits(), "w_xy {l:?} vs {s:?}");
+            assert_eq!(l.2, s.2, "iterations {l:?} vs {s:?}");
+        }
+        assert!(metrics.contains("service.shard.delegated_groups = 2"), "{metrics}");
+        assert!(metrics.contains("service.shard.gathered_results"), "{metrics}");
     }
 
     #[test]

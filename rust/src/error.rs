@@ -30,8 +30,15 @@ pub enum Error {
     /// PJRT / XLA runtime failure.
     Runtime(String),
 
-    /// The coordinator rejected a request (shed load / shut down).
+    /// The coordinator rejected a request (shed load / shut down), or a
+    /// shard-serving failure the retry policy could not absorb (all
+    /// workers dead, retry budget exhausted).
     Service(String),
+
+    /// Malformed wire frame (bad magic, truncated header, payload length
+    /// mismatch, unknown column dtype…). Corrupt bytes must surface as
+    /// this typed error, never as a panic or a wrong answer.
+    Wire(String),
 
     /// Underlying I/O failure.
     Io(std::io::Error),
@@ -52,6 +59,7 @@ impl fmt::Display for Error {
             Error::Artifact(s) => write!(f, "artifact: {s}"),
             Error::Runtime(s) => write!(f, "runtime: {s}"),
             Error::Service(s) => write!(f, "service: {s}"),
+            Error::Wire(s) => write!(f, "wire: {s}"),
             Error::Io(e) => write!(f, "{e}"),
         }
     }

@@ -52,6 +52,12 @@
 //!   identical to B sequential solves; the coordinator fuses compatible
 //!   in-flight requests onto it (`sinkhorn.max_batch`,
 //!   `service.batched_solves`; EXPERIMENTS.md §Throughput).
+//! * [`shard`] — cross-host sharded serving: fuse groups scatter over
+//!   in-process or TCP workers as binary wire envelopes
+//!   ([`runtime::wire`], [`api::envelope`]) and gather bitwise identical
+//!   to the single-host fused solve, with heartbeat liveness, bounded
+//!   retry + re-scatter, and a deterministic fault-injection harness
+//!   ([`shard::testing`]; README.md §Sharded serving).
 //!
 //! ## Quick tour: Problem → Plan → Solution
 //!
@@ -106,6 +112,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod shard;
 pub mod sinkhorn;
 pub mod special;
 pub mod testing;

@@ -310,6 +310,13 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
                 "8",
                 "fused multi-pair solve width cap (1 = solve every request alone)",
             )
+            .opt(
+                "shard-workers",
+                "0",
+                "delegate fuse groups to this many in-process shard workers over the \
+                 wire-format scatter/gather path (0 = solve in-process); results are \
+                 bitwise identical either way",
+            )
             .opt("requests", "32", "number of requests to send")
             .opt("n", "500", "samples per cloud per request")
             .opt("config", "", "optional TOML config file (replaces ALL service flags)"),
@@ -319,6 +326,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         workers: a.get_usize("workers"),
         solver_threads: a.get_usize("solver-threads"),
         cache_capacity: a.get_usize("cache"),
+        shard_workers: a.get_usize("shard-workers"),
         ..Default::default()
     };
     cfg.sinkhorn.stabilize = parse_on_off("stabilize", a.get_str("stabilize"));
@@ -329,8 +337,8 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
             Ok(doc) => {
                 cfg = ServiceConfig::from_doc(&doc);
                 eprintln!(
-                    "note: --config replaces all service flags \
-                     (--workers/--solver-threads/--cache/--stabilize/--max-batch ignored)"
+                    "note: --config replaces all service flags (--workers/--solver-threads/\
+                     --cache/--stabilize/--max-batch/--shard-workers ignored)"
                 );
             }
             Err(e) => {

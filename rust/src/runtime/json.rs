@@ -83,6 +83,74 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialise to a JSON string. Deterministic: object keys come out in
+    /// `BTreeMap` order and floats use Rust's shortest-round-trip
+    /// `Display`, so `parse(encode(v)) == v` bit for bit on every finite
+    /// number (the wire format's header round trip relies on this).
+    /// Non-finite numbers have no JSON form and encode as `null`.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    fn encode_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // `Display` prints integral floats without a dot
+                    // ("42"), still a valid JSON number.
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => encode_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.encode_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    encode_str(k, out);
+                    out.push(':');
+                    v.encode_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn encode_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -281,6 +349,34 @@ mod tests {
         assert_eq!(Json::parse("3").unwrap().as_usize(), Some(3));
         assert_eq!(Json::parse("3.5").unwrap().as_usize(), None);
         assert_eq!(Json::parse("-3").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn encode_round_trips_exactly() {
+        let doc = r#"{"a":[1,2.5,{"b":"c"}],"d":{},"e":true,"f":null,"g":"x\"y\\z\n"}"#;
+        let v = Json::parse(doc).unwrap();
+        let enc = v.encode();
+        assert_eq!(Json::parse(&enc).unwrap(), v);
+        // Deterministic: encoding twice gives the same bytes.
+        assert_eq!(enc, v.encode());
+    }
+
+    #[test]
+    fn encode_floats_shortest_round_trip() {
+        for bits in [0.1f64.to_bits(), (1.0f64 / 3.0).to_bits(), f64::MIN_POSITIVE.to_bits()] {
+            let x = f64::from_bits(bits);
+            let back = Json::parse(&Json::Num(x).encode()).unwrap();
+            assert_eq!(back.as_f64().unwrap().to_bits(), bits);
+        }
+        assert_eq!(Json::Num(f64::NAN).encode(), "null");
+        assert_eq!(Json::Num(42.0).encode(), "42");
+    }
+
+    #[test]
+    fn encode_escapes_control_chars() {
+        let v = Json::Str("a\u{1}b".into());
+        assert_eq!(v.encode(), "\"a\\u0001b\"");
+        assert_eq!(Json::parse(&v.encode()).unwrap(), v);
     }
 
     #[test]

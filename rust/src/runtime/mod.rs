@@ -13,12 +13,17 @@
 //! * [`pool`] — the intra-solve parallel execution layer (scoped worker
 //!   pool) used by the native hot paths; see EXPERIMENTS.md §Parallel
 //!   scaling for its measured effect.
+//! * [`wire`] — the shard layer's binary-column wire format (JSON header
+//!   + little-endian f32/f64 payloads, exact round trip); task/result
+//!   envelopes live in [`crate::api::envelope`].
 
 mod json;
 pub mod pool;
+pub mod wire;
 
 pub use json::{Json, JsonError};
 pub use pool::Pool;
+pub use wire::{WireCol, WireDoc};
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};

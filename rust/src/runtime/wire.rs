@@ -1,0 +1,416 @@
+//! Compact measure/weight wire format: a JSON header plus raw
+//! little-endian binary columns.
+//!
+//! A frame is
+//!
+//! ```text
+//! +-------+-------------+----------------+------------------------+
+//! | LSW1  | header len  | header (JSON)  | column payloads, back  |
+//! | magic | u32 LE      | ASCII, len B   | to back, LE bytes      |
+//! +-------+-------------+----------------+------------------------+
+//! ```
+//!
+//! The header records the format version, free-form metadata, and the
+//! column directory `[{name, dtype, len}, …]` in payload order; the
+//! payload is the raw `to_le_bytes` concatenation of every column. The
+//! round trip is **exact**: floats travel as their bit patterns, so NaN
+//! payloads, subnormals and signed zeros all survive (`rust/tests/
+//! wire_format.rs` property-tests this), while the textual header only
+//! carries integers and short strings.
+//!
+//! Decoding is strict and typed: bad magic, truncated or oversized
+//! headers, unknown dtypes, duplicate column names and any mismatch
+//! between the declared directory and the actual payload length surface
+//! as [`Error::Wire`] — never a panic, never a silently-wrong column.
+//! This is the transport substrate of the shard layer
+//! ([`crate::shard`]): task and result envelopes ([`crate::api::envelope`])
+//! are `WireDoc`s, as are its heartbeat frames.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::Json;
+
+/// Frame magic: "LSW1" = linear-sinkhorn wire v1.
+pub const WIRE_MAGIC: [u8; 4] = *b"LSW1";
+
+/// Hard cap on the declared header length (1 MiB). A corrupt length
+/// prefix must produce a typed error, not a giant allocation.
+pub const MAX_HEADER_LEN: usize = 1 << 20;
+
+/// One binary column: a named, typed vector of scalars.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireCol {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl WireCol {
+    fn dtype(&self) -> &'static str {
+        match self {
+            WireCol::F32(_) => "f32",
+            WireCol::F64(_) => "f64",
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            WireCol::F32(v) => v.len(),
+            WireCol::F64(v) => v.len(),
+        }
+    }
+
+    fn byte_len(&self) -> usize {
+        match self {
+            WireCol::F32(v) => v.len() * 4,
+            WireCol::F64(v) => v.len() * 8,
+        }
+    }
+
+    fn write(&self, out: &mut Vec<u8>) {
+        match self {
+            WireCol::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            WireCol::F64(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    fn read(dtype: &str, len: usize, bytes: &[u8]) -> Result<WireCol> {
+        match dtype {
+            "f32" => Ok(WireCol::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            )),
+            "f64" => Ok(WireCol::F64(
+                bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+            )),
+            other => Err(Error::Wire(format!("unknown column dtype `{other}` (len {len})"))),
+        }
+    }
+}
+
+/// A decoded (or under-construction) wire frame: metadata plus named
+/// binary columns in insertion order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireDoc {
+    /// Free-form JSON metadata (kept ASCII by convention — the header
+    /// parser is ASCII-only).
+    pub meta: BTreeMap<String, Json>,
+    cols: Vec<(String, WireCol)>,
+}
+
+impl WireDoc {
+    pub fn new() -> WireDoc {
+        WireDoc::default()
+    }
+
+    /// Convenience constructor with a `kind` tag — the shard transport
+    /// dispatches on `meta["kind"]`.
+    pub fn with_kind(kind: &str) -> WireDoc {
+        let mut doc = WireDoc::new();
+        doc.set_str("kind", kind);
+        doc
+    }
+
+    // ---------------------------------------------------------------- meta
+
+    pub fn set_str(&mut self, key: &str, value: &str) {
+        self.meta.insert(key.to_string(), Json::Str(value.to_string()));
+    }
+
+    pub fn set_num(&mut self, key: &str, value: f64) {
+        self.meta.insert(key.to_string(), Json::Num(value));
+    }
+
+    /// Store a `u64` losslessly (JSON numbers are f64; large ids/seeds go
+    /// as decimal strings, like [`crate::api::Plan::to_json`]'s seed).
+    pub fn set_u64(&mut self, key: &str, value: u64) {
+        self.meta.insert(key.to_string(), Json::Str(value.to_string()));
+    }
+
+    pub fn set_json(&mut self, key: &str, value: Json) {
+        self.meta.insert(key.to_string(), value);
+    }
+
+    pub fn kind(&self) -> &str {
+        self.meta.get("kind").and_then(Json::as_str).unwrap_or("")
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Wire(format!("missing string meta `{key}`")))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Wire(format!("missing integer meta `{key}`")))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::Wire(format!("missing number meta `{key}`")))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        self.get_str(key)?
+            .parse::<u64>()
+            .map_err(|_| Error::Wire(format!("meta `{key}` is not a decimal u64")))
+    }
+
+    // ------------------------------------------------------------- columns
+
+    /// Append an f32 column. Duplicate names are a typed error — a frame
+    /// with two same-named columns has an ambiguous directory.
+    pub fn push_f32(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        self.push_col(name, WireCol::F32(data.to_vec()))
+    }
+
+    pub fn push_f64(&mut self, name: &str, data: &[f64]) -> Result<()> {
+        self.push_col(name, WireCol::F64(data.to_vec()))
+    }
+
+    fn push_col(&mut self, name: &str, col: WireCol) -> Result<()> {
+        if self.cols.iter().any(|(n, _)| n == name) {
+            return Err(Error::Wire(format!("duplicate column `{name}`")));
+        }
+        self.cols.push((name.to_string(), col));
+        Ok(())
+    }
+
+    pub fn has_col(&self, name: &str) -> bool {
+        self.cols.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn col_names(&self) -> impl Iterator<Item = &str> {
+        self.cols.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn f32s(&self, name: &str) -> Result<&[f32]> {
+        match self.cols.iter().find(|(n, _)| n == name) {
+            Some((_, WireCol::F32(v))) => Ok(v),
+            Some((_, other)) => {
+                Err(Error::Wire(format!("column `{name}` is {}, expected f32", other.dtype())))
+            }
+            None => Err(Error::Wire(format!("missing column `{name}`"))),
+        }
+    }
+
+    pub fn f64s(&self, name: &str) -> Result<&[f64]> {
+        match self.cols.iter().find(|(n, _)| n == name) {
+            Some((_, WireCol::F64(v))) => Ok(v),
+            Some((_, other)) => {
+                Err(Error::Wire(format!("column `{name}` is {}, expected f64", other.dtype())))
+            }
+            None => Err(Error::Wire(format!("missing column `{name}`"))),
+        }
+    }
+
+    // ------------------------------------------------------------ framing
+
+    /// Encode to a self-delimiting frame (see the module docs for the
+    /// layout).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut dir = Vec::with_capacity(self.cols.len());
+        for (name, col) in &self.cols {
+            let mut entry = BTreeMap::new();
+            entry.insert("name".to_string(), Json::Str(name.clone()));
+            entry.insert("dtype".to_string(), Json::Str(col.dtype().to_string()));
+            entry.insert("len".to_string(), Json::Num(col.len() as f64));
+            dir.push(Json::Obj(entry));
+        }
+        let mut header = BTreeMap::new();
+        header.insert("v".to_string(), Json::Num(1.0));
+        header.insert("meta".to_string(), Json::Obj(self.meta.clone()));
+        header.insert("cols".to_string(), Json::Arr(dir));
+        let header_bytes = Json::Obj(header).encode().into_bytes();
+
+        let payload_len: usize = self.cols.iter().map(|(_, c)| c.byte_len()).sum();
+        let mut out = Vec::with_capacity(8 + header_bytes.len() + payload_len);
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.extend_from_slice(&(header_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&header_bytes);
+        for (_, col) in &self.cols {
+            col.write(&mut out);
+        }
+        out
+    }
+
+    /// Decode a frame produced by [`WireDoc::encode`]. Every malformation
+    /// is a typed [`Error::Wire`]; the payload must match the directory
+    /// *exactly* (no trailing bytes, no short columns).
+    pub fn decode(bytes: &[u8]) -> Result<WireDoc> {
+        if bytes.len() < 8 {
+            return Err(Error::Wire(format!("frame too short ({} bytes)", bytes.len())));
+        }
+        if bytes[..4] != WIRE_MAGIC {
+            return Err(Error::Wire(format!(
+                "bad magic {:02x}{:02x}{:02x}{:02x} (expected \"LSW1\")",
+                bytes[0], bytes[1], bytes[2], bytes[3]
+            )));
+        }
+        let header_len = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        if header_len > MAX_HEADER_LEN {
+            return Err(Error::Wire(format!("header length {header_len} exceeds cap")));
+        }
+        if bytes.len() < 8 + header_len {
+            return Err(Error::Wire(format!(
+                "truncated header: declares {header_len} bytes, frame has {}",
+                bytes.len() - 8
+            )));
+        }
+        let header_text = std::str::from_utf8(&bytes[8..8 + header_len])
+            .map_err(|_| Error::Wire("header is not UTF-8".into()))?;
+        let header =
+            Json::parse(header_text).map_err(|e| Error::Wire(format!("header json: {e}")))?;
+        match header.get("v").and_then(Json::as_usize) {
+            Some(1) => {}
+            Some(v) => return Err(Error::Wire(format!("unsupported wire version {v}"))),
+            None => return Err(Error::Wire("header missing version".into())),
+        }
+        let meta = header
+            .get("meta")
+            .and_then(Json::as_obj)
+            .cloned()
+            .ok_or_else(|| Error::Wire("header missing `meta` object".into()))?;
+        let dir = header
+            .get("cols")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Wire("header missing `cols` directory".into()))?;
+
+        let mut doc = WireDoc { meta, cols: Vec::with_capacity(dir.len()) };
+        let payload = &bytes[8 + header_len..];
+        let mut offset = 0usize;
+        for entry in dir {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Wire("column entry missing `name`".into()))?;
+            let dtype = entry
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Wire(format!("column `{name}` missing `dtype`")))?;
+            let len = entry
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Wire(format!("column `{name}` missing `len`")))?;
+            let width = match dtype {
+                "f32" => 4usize,
+                "f64" => 8usize,
+                other => {
+                    return Err(Error::Wire(format!("unknown column dtype `{other}`")));
+                }
+            };
+            let byte_len = len
+                .checked_mul(width)
+                .ok_or_else(|| Error::Wire(format!("column `{name}` length overflows")))?;
+            let end = offset
+                .checked_add(byte_len)
+                .filter(|&e| e <= payload.len())
+                .ok_or_else(|| {
+                    Error::Wire(format!(
+                        "payload length mismatch: column `{name}` needs {byte_len} bytes at \
+                         offset {offset}, payload has {}",
+                        payload.len()
+                    ))
+                })?;
+            doc.push_col(name, WireCol::read(dtype, len, &payload[offset..end])?)?;
+            offset = end;
+        }
+        if offset != payload.len() {
+            return Err(Error::Wire(format!(
+                "payload length mismatch: directory covers {offset} bytes, payload has {}",
+                payload.len()
+            )));
+        }
+        Ok(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_meta_and_columns() {
+        let mut doc = WireDoc::with_kind("task");
+        doc.set_u64("id", u64::MAX);
+        doc.set_num("eps", 0.1);
+        doc.push_f32("w", &[1.0, -0.0, f32::MIN_POSITIVE]).unwrap();
+        doc.push_f64("obj", &[1.0 / 3.0]).unwrap();
+        let back = WireDoc::decode(&doc.encode()).unwrap();
+        assert_eq!(back.kind(), "task");
+        assert_eq!(back.get_u64("id").unwrap(), u64::MAX);
+        assert_eq!(back.get_f64("eps").unwrap().to_bits(), 0.1f64.to_bits());
+        let w = back.f32s("w").unwrap();
+        assert_eq!(w[1].to_bits(), (-0.0f32).to_bits(), "signed zero survives");
+        assert_eq!(back.f64s("obj").unwrap()[0].to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn empty_doc_and_empty_columns_round_trip() {
+        let mut doc = WireDoc::new();
+        doc.push_f32("empty", &[]).unwrap();
+        let back = WireDoc::decode(&doc.encode()).unwrap();
+        assert_eq!(back.f32s("empty").unwrap().len(), 0);
+        assert_eq!(WireDoc::decode(&WireDoc::new().encode()).unwrap(), WireDoc::new());
+    }
+
+    #[test]
+    fn duplicate_columns_rejected() {
+        let mut doc = WireDoc::new();
+        doc.push_f32("w", &[1.0]).unwrap();
+        assert!(matches!(doc.push_f64("w", &[1.0]), Err(Error::Wire(_))));
+    }
+
+    #[test]
+    fn truncation_and_tampering_are_typed_errors() {
+        let mut doc = WireDoc::new();
+        doc.push_f32("w", &[1.0, 2.0, 3.0]).unwrap();
+        let frame = doc.encode();
+        // Truncate the payload.
+        assert!(matches!(WireDoc::decode(&frame[..frame.len() - 1]), Err(Error::Wire(_))));
+        // Extra trailing bytes.
+        let mut long = frame.clone();
+        long.push(0);
+        assert!(matches!(WireDoc::decode(&long), Err(Error::Wire(_))));
+        // Bad magic.
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        assert!(matches!(WireDoc::decode(&bad), Err(Error::Wire(_))));
+        // Corrupt header bytes.
+        let mut garbled = frame;
+        garbled[10] ^= 0xFF;
+        assert!(matches!(WireDoc::decode(&garbled), Err(Error::Wire(_))));
+        // Too short for even the prefix.
+        assert!(matches!(WireDoc::decode(&[0, 1, 2]), Err(Error::Wire(_))));
+    }
+
+    #[test]
+    fn oversized_header_length_rejected_without_allocation() {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&WIRE_MAGIC);
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(WireDoc::decode(&frame), Err(Error::Wire(_))));
+    }
+
+    #[test]
+    fn wrong_dtype_access_is_typed() {
+        let mut doc = WireDoc::new();
+        doc.push_f32("w", &[1.0]).unwrap();
+        assert!(matches!(doc.f64s("w"), Err(Error::Wire(_))));
+        assert!(matches!(doc.f32s("missing"), Err(Error::Wire(_))));
+    }
+}

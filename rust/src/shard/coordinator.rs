@@ -1,0 +1,716 @@
+//! The shard coordinator: scatter a fuse group over workers, gather the
+//! results, and keep the answer correct when workers fail.
+//!
+//! ## Scatter
+//!
+//! [`ShardCoordinator::solve_group`] partitions a group's weight pairs
+//! into contiguous chunks — one per live worker, near-equal sizes — and
+//! ships each chunk as a [`TaskEnvelope`] (plan + measures + pairs +
+//! the resolved feature map). The partition is pure bookkeeping: by the
+//! batch contract (see `rust/tests/batched_equivalence.rs`) every pair's
+//! result is bitwise independent of batch width and neighbours, so *any*
+//! split, assignment, or re-assignment yields the same bits as the
+//! single-host fused solve.
+//!
+//! ## Liveness and the failure ladder
+//!
+//! While tasks are outstanding the coordinator pings every live worker
+//! each `heartbeat_interval`; workers pong from their receive loop even
+//! mid-solve. A worker is declared dead when its link errors (crash —
+//! detected immediately), or when nothing has been heard from it for
+//! `heartbeat_timeout` (hang / mute). A task is re-scattered when its
+//! worker dies or its `task_deadline` expires, up to `max_retries`
+//! further attempts with linear backoff, each to the next live worker
+//! round-robin. Identical `task_id`s make re-scatter idempotent: a late
+//! original result and a retried result are interchangeable, and
+//! whichever lands first wins (the other counts as
+//! `service.shard.duplicate_results`).
+//!
+//! Unsurvivable failures surface as typed errors, never panics:
+//! exhausted retries and a fully-dead worker set become
+//! [`Error::Service`]; a corrupt result frame fails that worker's
+//! outstanding pairs with [`Error::Wire`] (retrying a deterministic
+//! decode failure would burn the budget for nothing).
+//!
+//! Everything is observable under `service.shard.*` — see
+//! [`METRIC_NAMES`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::api::{DivergenceReport, Plan, ResultEnvelope, TaskEnvelope};
+use crate::data::Measure;
+use crate::error::{Error, Result};
+use crate::features::GaussianFeatureMap;
+use crate::metrics::Registry;
+use crate::runtime::WireDoc;
+
+use super::testing::FaultPlan;
+use super::transport::{in_proc_pair, TcpTransport, Transport};
+use super::worker::{run_worker, WorkerOptions};
+
+/// Every counter the shard layer emits (the histogram
+/// `service.shard.task_us` rides along), kept in one place so docs,
+/// tests, and dashboards agree.
+pub const METRIC_NAMES: &[&str] = &[
+    "service.shard.scattered_tasks",
+    "service.shard.gathered_results",
+    "service.shard.retries",
+    "service.shard.rescattered_pairs",
+    "service.shard.worker_deaths",
+    "service.shard.duplicate_results",
+    "service.shard.corrupt_payloads",
+    "service.shard.heartbeats",
+    "service.shard.delegated_groups",
+];
+
+/// Liveness / retry policy.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Ping cadence while tasks are outstanding.
+    pub heartbeat_interval: Duration,
+    /// Silence longer than this declares a worker dead.
+    pub heartbeat_timeout: Duration,
+    /// An unanswered task older than this is re-scattered even if its
+    /// worker still pongs (covers lost task frames).
+    pub task_deadline: Duration,
+    /// Re-scatter attempts after the initial send before the task fails
+    /// with a typed [`Error::Service`].
+    pub max_retries: usize,
+    /// Base backoff before a re-scatter; grows linearly with the attempt
+    /// number, capped at 500 ms.
+    pub retry_backoff: Duration,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            heartbeat_interval: Duration::from_millis(50),
+            heartbeat_timeout: Duration::from_secs(1),
+            task_deadline: Duration::from_secs(30),
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(20),
+        }
+    }
+}
+
+struct WorkerSlot {
+    id: u64,
+    transport: Arc<dyn Transport>,
+    alive: bool,
+    last_seen: Instant,
+    join: Option<JoinHandle<()>>,
+}
+
+struct Inner {
+    workers: Vec<WorkerSlot>,
+    next_group: u64,
+}
+
+/// One in-flight scatter unit and its retry bookkeeping.
+struct TaskState {
+    task_id: u64,
+    /// Pair range `start..start + len` of the group this task covers.
+    start: usize,
+    len: usize,
+    /// The encoded envelope, kept verbatim for re-scatter: identical
+    /// bytes + identical `task_id` = idempotent retries.
+    frame: Vec<u8>,
+    worker: usize,
+    sent_at: Instant,
+    attempts: usize,
+    done: bool,
+}
+
+/// A transport whose peer is gone; swapped in at shutdown so in-process
+/// workers observe a dropped link even if the shutdown frame was lost.
+struct ClosedTransport;
+
+impl Transport for ClosedTransport {
+    fn send(&self, _frame: &[u8]) -> Result<()> {
+        Err(Error::Service("shard transport closed".into()))
+    }
+    fn recv_timeout(&self, _timeout: Duration) -> Result<Option<Vec<u8>>> {
+        Err(Error::Service("shard transport closed".into()))
+    }
+}
+
+pub struct ShardCoordinator {
+    inner: Mutex<Inner>,
+    cfg: ShardConfig,
+    metrics: Arc<Registry>,
+    next_task: AtomicU64,
+}
+
+impl ShardCoordinator {
+    /// Spawn `n` in-process workers connected over channel transports.
+    pub fn in_process(n: usize, cfg: ShardConfig, metrics: Arc<Registry>) -> ShardCoordinator {
+        Self::in_process_with_faults(n, cfg, metrics, &FaultPlan::none())
+    }
+
+    /// Like [`Self::in_process`], with a scripted fault schedule (the
+    /// fault-injection harness entry point).
+    pub fn in_process_with_faults(
+        n: usize,
+        cfg: ShardConfig,
+        metrics: Arc<Registry>,
+        faults: &FaultPlan,
+    ) -> ShardCoordinator {
+        let n = n.max(1);
+        let mut workers = Vec::with_capacity(n);
+        for idx in 0..n {
+            let (coord_end, worker_end) = in_proc_pair();
+            let opts = WorkerOptions {
+                exit_on_task: faults.kill_on_task(idx),
+                mute_on_task: faults.mute_on_task(idx),
+            };
+            let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
+            let wid = idx as u64;
+            let join = thread::Builder::new()
+                .name(format!("ls-shard-worker-{idx}"))
+                .spawn(move || run_worker(wid, worker_end, opts))
+                .expect("spawn shard worker");
+            let transport: Arc<dyn Transport> = if faults.has_transport_faults(idx) {
+                Arc::new(super::testing::FaultyTransport::new(
+                    coord_end,
+                    faults.transport_faults(idx),
+                ))
+            } else {
+                Arc::new(coord_end)
+            };
+            workers.push(WorkerSlot {
+                id: wid,
+                transport,
+                alive: true,
+                last_seen: Instant::now(),
+                join: Some(join),
+            });
+        }
+        ShardCoordinator {
+            inner: Mutex::new(Inner { workers, next_group: 0 }),
+            cfg,
+            metrics,
+            next_task: AtomicU64::new(0),
+        }
+    }
+
+    /// Connect to already-listening cross-host workers (see
+    /// `shard::worker::serve_listener`).
+    pub fn connect(
+        addrs: &[String],
+        cfg: ShardConfig,
+        metrics: Arc<Registry>,
+    ) -> Result<ShardCoordinator> {
+        if addrs.is_empty() {
+            return Err(Error::Config("shard connect: no worker addresses".into()));
+        }
+        let mut workers = Vec::with_capacity(addrs.len());
+        for (idx, addr) in addrs.iter().enumerate() {
+            let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(addr)?);
+            workers.push(WorkerSlot {
+                id: idx as u64,
+                transport,
+                alive: true,
+                last_seen: Instant::now(),
+                join: None,
+            });
+        }
+        Ok(ShardCoordinator {
+            inner: Mutex::new(Inner { workers, next_group: 0 }),
+            cfg,
+            metrics,
+            next_task: AtomicU64::new(0),
+        })
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.inner.lock().unwrap().workers.len()
+    }
+
+    /// Workers not yet declared dead.
+    pub fn live_workers(&self) -> usize {
+        self.inner.lock().unwrap().workers.iter().filter(|w| w.alive).count()
+    }
+
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// Solve one fuse group across the worker set. Returns one slot per
+    /// pair, index-aligned with `pairs`; survivable faults are absorbed
+    /// by retry, unsurvivable ones surface as typed errors in the
+    /// affected slots.
+    ///
+    /// `map` should be the exact feature map the local path would solve
+    /// with (service cache maps are not refittable from `plan.seed` —
+    /// see [`TaskEnvelope`]); `request_ids`, when index-aligned with
+    /// `pairs`, rides along for observability.
+    pub fn solve_group(
+        &self,
+        plan: &Plan,
+        mu: &Measure,
+        nu: &Measure,
+        pairs: &[(&[f32], &[f32])],
+        map: Option<&GaussianFeatureMap>,
+        request_ids: &[u64],
+    ) -> Vec<Result<DivergenceReport>> {
+        let b = pairs.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let group_id = inner.next_group;
+        inner.next_group += 1;
+
+        // A fresh group resets staleness: silence *before* this group
+        // says nothing about liveness during it.
+        let now = Instant::now();
+        for w in inner.workers.iter_mut().filter(|w| w.alive) {
+            w.last_seen = now;
+        }
+
+        let live: Vec<usize> =
+            (0..inner.workers.len()).filter(|&i| inner.workers[i].alive).collect();
+        let mut out: Vec<Option<Result<DivergenceReport>>> = (0..b).map(|_| None).collect();
+        if live.is_empty() {
+            return (0..b)
+                .map(|_| Err(Error::Service("no live shard workers".into())))
+                .collect();
+        }
+
+        // Scatter: contiguous near-equal chunks, one per live worker.
+        let chunks = live.len().min(b);
+        let (base, extra) = (b / chunks, b % chunks);
+        let mut tasks: Vec<TaskState> = Vec::with_capacity(chunks);
+        let mut start = 0usize;
+        for (ci, &widx) in live.iter().take(chunks).enumerate() {
+            let len = base + usize::from(ci < extra);
+            let task_id = self.next_task.fetch_add(1, Ordering::SeqCst);
+            let env = TaskEnvelope {
+                task_id,
+                group_id,
+                request_ids: if request_ids.len() == b {
+                    request_ids[start..start + len].to_vec()
+                } else {
+                    Vec::new()
+                },
+                plan: plan.clone(),
+                mu: mu.clone(),
+                nu: nu.clone(),
+                pairs: pairs[start..start + len]
+                    .iter()
+                    .map(|(a, bw)| (a.to_vec(), bw.to_vec()))
+                    .collect(),
+                map: map.cloned(),
+            };
+            let frame = env.encode();
+            self.metrics.counter("service.shard.scattered_tasks").inc();
+            if inner.workers[widx].transport.send(&frame).is_err() {
+                // Dead on arrival: the retry ladder below reassigns.
+                self.mark_dead(&mut inner.workers[widx]);
+            }
+            tasks.push(TaskState {
+                task_id,
+                start,
+                len,
+                frame,
+                worker: widx,
+                sent_at: Instant::now(),
+                attempts: 0,
+                done: false,
+            });
+            start += len;
+        }
+
+        // Gather until every task resolved (result, typed failure, or
+        // total worker loss).
+        let mut outstanding = tasks.len();
+        let mut last_ping = Instant::now();
+        'gather: while outstanding > 0 {
+            // Drain every live worker's inbox.
+            for widx in 0..inner.workers.len() {
+                if !inner.workers[widx].alive {
+                    continue;
+                }
+                let transport = Arc::clone(&inner.workers[widx].transport);
+                loop {
+                    match transport.recv_timeout(Duration::from_millis(1)) {
+                        Ok(Some(frame)) => self.handle_frame(
+                            &mut inner.workers,
+                            widx,
+                            &frame,
+                            &mut tasks,
+                            &mut out,
+                            &mut outstanding,
+                        ),
+                        Ok(None) => break,
+                        Err(_) => {
+                            self.mark_dead(&mut inner.workers[widx]);
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // Heartbeats.
+            if last_ping.elapsed() >= self.cfg.heartbeat_interval {
+                last_ping = Instant::now();
+                let mut ping = WireDoc::with_kind("ping");
+                ping.set_u64("group_id", group_id);
+                let ping = ping.encode();
+                for w in inner.workers.iter_mut().filter(|w| w.alive) {
+                    self.metrics.counter("service.shard.heartbeats").inc();
+                    if w.transport.send(&ping).is_err() {
+                        w.alive = false;
+                        self.metrics.counter("service.shard.worker_deaths").inc();
+                    }
+                }
+            }
+
+            // Liveness + deadline ladder.
+            for ti in 0..tasks.len() {
+                if tasks[ti].done {
+                    continue;
+                }
+                let widx = tasks[ti].worker;
+                let worker_dead = !inner.workers[widx].alive;
+                let stale =
+                    inner.workers[widx].last_seen.elapsed() > self.cfg.heartbeat_timeout;
+                let expired = tasks[ti].sent_at.elapsed() > self.cfg.task_deadline;
+                if !(worker_dead || stale || expired) {
+                    continue;
+                }
+                if stale && !worker_dead {
+                    self.mark_dead(&mut inner.workers[widx]);
+                }
+                tasks[ti].attempts += 1;
+                let attempts = tasks[ti].attempts;
+                if attempts > self.cfg.max_retries {
+                    let task_id = tasks[ti].task_id;
+                    fail_task(&mut tasks[ti], &mut out, &mut outstanding, &|| {
+                        Error::Service(format!(
+                            "shard task {task_id} failed after {attempts} attempts"
+                        ))
+                    });
+                    continue;
+                }
+                // Next live worker round-robin; the current one only as a
+                // last resort (deadline expiry with nowhere else to go).
+                let n = inner.workers.len();
+                let next = (1..=n)
+                    .map(|k| (widx + k) % n)
+                    .find(|&c| inner.workers[c].alive);
+                let Some(next) = next else {
+                    for t in tasks.iter_mut().filter(|t| !t.done) {
+                        fail_task(t, &mut out, &mut outstanding, &|| {
+                            Error::Service("all shard workers dead".into())
+                        });
+                    }
+                    break 'gather;
+                };
+                self.metrics.counter("service.shard.retries").inc();
+                self.metrics
+                    .counter("service.shard.rescattered_pairs")
+                    .add(tasks[ti].len as u64);
+                let backoff = self
+                    .cfg
+                    .retry_backoff
+                    .saturating_mul(attempts as u32)
+                    .min(Duration::from_millis(500));
+                thread::sleep(backoff);
+                tasks[ti].worker = next;
+                tasks[ti].sent_at = Instant::now();
+                if inner.workers[next].transport.send(&tasks[ti].frame).is_err() {
+                    // Also dead: the next ladder pass moves on again.
+                    self.mark_dead(&mut inner.workers[next]);
+                }
+            }
+        }
+
+        // Final sweep: collect whatever is still in flight (late
+        // originals after a retry won the race) so duplicates are
+        // observed rather than left queued.
+        for widx in 0..inner.workers.len() {
+            if !inner.workers[widx].alive {
+                continue;
+            }
+            let transport = Arc::clone(&inner.workers[widx].transport);
+            while let Ok(Some(frame)) = transport.recv_timeout(Duration::from_millis(2)) {
+                self.handle_frame(
+                    &mut inner.workers,
+                    widx,
+                    &frame,
+                    &mut tasks,
+                    &mut out,
+                    &mut outstanding,
+                );
+            }
+        }
+
+        out.into_iter()
+            .map(|slot| {
+                slot.unwrap_or_else(|| Err(Error::Service("shard gather left a hole".into())))
+            })
+            .collect()
+    }
+
+    fn mark_dead(&self, w: &mut WorkerSlot) {
+        if w.alive {
+            w.alive = false;
+            self.metrics.counter("service.shard.worker_deaths").inc();
+        }
+    }
+
+    /// Process one inbound frame from `widx`'s link.
+    fn handle_frame(
+        &self,
+        workers: &mut [WorkerSlot],
+        widx: usize,
+        frame: &[u8],
+        tasks: &mut [TaskState],
+        out: &mut [Option<Result<DivergenceReport>>],
+        outstanding: &mut usize,
+    ) {
+        let doc = match WireDoc::decode(frame) {
+            Ok(doc) => doc,
+            Err(e) => {
+                self.corrupt_from(workers, widx, tasks, out, outstanding, &e);
+                return;
+            }
+        };
+        workers[widx].last_seen = Instant::now();
+        match doc.kind() {
+            "pong" => {}
+            "reject" => {
+                // The worker could not even decode the task: a
+                // deterministic failure, so fail typed instead of
+                // retrying.
+                let task_id = doc.get_u64("task_id").ok();
+                let msg = doc
+                    .get_str("error")
+                    .unwrap_or("task rejected by worker")
+                    .to_string();
+                if let Some(t) =
+                    tasks.iter_mut().find(|t| Some(t.task_id) == task_id && !t.done)
+                {
+                    fail_task(t, out, outstanding, &|| {
+                        Error::Wire(format!("worker rejected task: {msg}"))
+                    });
+                }
+            }
+            "result" => match ResultEnvelope::decode(frame) {
+                Err(e) => self.corrupt_from(workers, widx, tasks, out, outstanding, &e),
+                Ok(env) => {
+                    let Some(t) = tasks.iter_mut().find(|t| t.task_id == env.task_id) else {
+                        // A stale frame from an earlier group.
+                        self.metrics.counter("service.shard.duplicate_results").inc();
+                        return;
+                    };
+                    if t.done {
+                        self.metrics.counter("service.shard.duplicate_results").inc();
+                        return;
+                    }
+                    if env.results.len() != t.len {
+                        let (got, want) = (env.results.len(), t.len);
+                        fail_task(t, out, outstanding, &|| {
+                            Error::Wire(format!(
+                                "result envelope has {got} pairs, task expected {want}"
+                            ))
+                        });
+                        return;
+                    }
+                    let elapsed = t.sent_at.elapsed();
+                    for (off, r) in env.results.into_iter().enumerate() {
+                        out[t.start + off] = Some(r);
+                    }
+                    t.done = true;
+                    *outstanding -= 1;
+                    self.metrics.counter("service.shard.gathered_results").inc();
+                    self.metrics
+                        .histogram("service.shard.task_us")
+                        .observe_us(elapsed.as_micros() as u64);
+                }
+            },
+            _ => {}
+        }
+    }
+
+    /// A frame from `widx` failed to decode: unsurvivable for that
+    /// worker's outstanding work (retrying a deterministic decode
+    /// failure is pointless), and the link is no longer trusted.
+    fn corrupt_from(
+        &self,
+        workers: &mut [WorkerSlot],
+        widx: usize,
+        tasks: &mut [TaskState],
+        out: &mut [Option<Result<DivergenceReport>>],
+        outstanding: &mut usize,
+        err: &Error,
+    ) {
+        self.metrics.counter("service.shard.corrupt_payloads").inc();
+        let worker_id = workers[widx].id;
+        self.mark_dead(&mut workers[widx]);
+        let msg = format!("corrupt frame from shard worker {worker_id}: {err}");
+        for t in tasks.iter_mut().filter(|t| !t.done && t.worker == widx) {
+            fail_task(t, out, outstanding, &|| Error::Wire(msg.clone()));
+        }
+    }
+}
+
+/// Resolve every pair slot of `t` with a fresh instance of the error.
+fn fail_task(
+    t: &mut TaskState,
+    out: &mut [Option<Result<DivergenceReport>>],
+    outstanding: &mut usize,
+    mk: &dyn Fn() -> Error,
+) {
+    for slot in &mut out[t.start..t.start + t.len] {
+        *slot = Some(Err(mk()));
+    }
+    t.done = true;
+    *outstanding -= 1;
+}
+
+impl Drop for ShardCoordinator {
+    fn drop(&mut self) {
+        let mut inner = self.inner.lock().unwrap();
+        let shutdown = WireDoc::with_kind("shutdown").encode();
+        for w in inner.workers.iter_mut() {
+            let _ = w.transport.send(&shutdown);
+            // Drop our endpoint too: a worker that missed the frame
+            // (dropped by a fault, or mid-solve) still sees the link
+            // close and exits.
+            w.transport = Arc::new(ClosedTransport);
+        }
+        for w in inner.workers.iter_mut() {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::OtProblem;
+    use crate::data;
+    use crate::rng::Rng;
+    use crate::shard::testing::Fault;
+
+    fn quick_cfg() -> ShardConfig {
+        ShardConfig {
+            heartbeat_interval: Duration::from_millis(20),
+            heartbeat_timeout: Duration::from_millis(400),
+            task_deadline: Duration::from_secs(5),
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(5),
+        }
+    }
+
+    fn fixture(pairs: usize) -> (Measure, Measure, Vec<(Vec<f32>, Vec<f32>)>, Plan) {
+        let mut rng = Rng::seed_from(17);
+        let (mu, nu) = data::gaussian_blobs(14, &mut rng);
+        let mut weights = Vec::with_capacity(pairs);
+        for _ in 0..pairs {
+            let mut a = rng.normal_vec(mu.len());
+            let mut b = rng.normal_vec(nu.len());
+            for w in a.iter_mut().chain(b.iter_mut()) {
+                *w = w.abs() + 0.05;
+            }
+            let (sa, sb) = (a.iter().sum::<f32>(), b.iter().sum::<f32>());
+            a.iter_mut().for_each(|w| *w /= sa);
+            b.iter_mut().for_each(|w| *w /= sb);
+            weights.push((a, b));
+        }
+        let refs: Vec<(&[f32], &[f32])> =
+            weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let plan = OtProblem::new(&mu, &nu)
+            .epsilon(0.5)
+            .rank(8)
+            .seed(23)
+            .weight_pairs(&refs)
+            .plan()
+            .unwrap();
+        (mu, nu, weights, plan)
+    }
+
+    fn assert_bitwise(shard: &[Result<DivergenceReport>], local: &[Result<DivergenceReport>]) {
+        assert_eq!(shard.len(), local.len());
+        for (s, l) in shard.iter().zip(local) {
+            let (s, l) = (s.as_ref().unwrap(), l.as_ref().unwrap());
+            assert_eq!(s.divergence.to_bits(), l.divergence.to_bits());
+            assert_eq!(s.xy.objective.to_bits(), l.xy.objective.to_bits());
+            assert_eq!(s.xy.u, l.xy.u);
+            assert_eq!(s.xx.v, l.xx.v);
+            assert_eq!(s.yy.iterations, l.yy.iterations);
+        }
+    }
+
+    #[test]
+    fn sharded_solve_matches_local_bitwise() {
+        let (mu, nu, weights, plan) = fixture(5);
+        let refs: Vec<(&[f32], &[f32])> =
+            weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let local = OtProblem::new(&mu, &nu).weight_pairs(&refs).divergence_all_planned(&plan);
+
+        let metrics = Arc::new(Registry::default());
+        let shard = ShardCoordinator::in_process(2, quick_cfg(), metrics.clone());
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[1, 2, 3, 4, 5]);
+        assert_bitwise(&got, &local);
+        assert_eq!(metrics.counter("service.shard.scattered_tasks").get(), 2);
+        assert_eq!(metrics.counter("service.shard.gathered_results").get(), 2);
+        assert_eq!(metrics.counter("service.shard.retries").get(), 0);
+        assert_eq!(shard.live_workers(), 2);
+    }
+
+    #[test]
+    fn uneven_partitions_and_single_pair_groups_work() {
+        let (mu, nu, weights, plan) = fixture(3);
+        let refs: Vec<(&[f32], &[f32])> =
+            weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let local = OtProblem::new(&mu, &nu).weight_pairs(&refs).divergence_all_planned(&plan);
+
+        let metrics = Arc::new(Registry::default());
+        // 4 workers, 3 pairs: only 3 chunks go out, one worker idles.
+        let shard = ShardCoordinator::in_process(4, quick_cfg(), metrics);
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&got, &local);
+
+        // A single-pair group lands on one worker.
+        let one = &refs[..1];
+        let got = shard.solve_group(&plan, &mu, &nu, one, None, &[9]);
+        assert_bitwise(&got, &local[..1]);
+        assert!(shard.solve_group(&plan, &mu, &nu, &[], None, &[]).is_empty());
+    }
+
+    #[test]
+    fn all_workers_dead_is_a_typed_error() {
+        let (mu, nu, weights, plan) = fixture(4);
+        let refs: Vec<(&[f32], &[f32])> =
+            weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let metrics = Arc::new(Registry::default());
+        // Every worker crashes on its first task: no survivors.
+        let faults = FaultPlan::new(1)
+            .inject(0, Fault::KillOnTask { nth: 1 })
+            .inject(1, Fault::KillOnTask { nth: 1 });
+        let shard =
+            ShardCoordinator::in_process_with_faults(2, quick_cfg(), metrics.clone(), &faults);
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_eq!(got.len(), refs.len());
+        for slot in &got {
+            assert!(
+                matches!(slot, Err(Error::Service(_))),
+                "expected typed service error, got {slot:?}"
+            );
+        }
+        assert_eq!(shard.live_workers(), 0);
+        assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 2);
+        // A follow-up group fails fast, also typed.
+        let again = shard.solve_group(&plan, &mu, &nu, &refs[..1], None, &[]);
+        assert!(matches!(&again[0], Err(Error::Service(_))));
+    }
+}

@@ -1,0 +1,47 @@
+//! Cross-host sharded serving: scatter fuse groups over workers, gather
+//! bitwise-identical results, survive worker failure.
+//!
+//! The service's fused batch solve (PR 3) made every pair's result
+//! bitwise independent of batch width and neighbours; this layer turns
+//! that contract into horizontal scale. A [`ShardCoordinator`]
+//! partitions a fuse group's weight pairs into contiguous chunks, ships
+//! each as a [`crate::api::TaskEnvelope`] over a [`Transport`], and
+//! reassembles the [`crate::api::DivergenceReport`]s — bit for bit the
+//! ones a single-host solve produces, under any partition, any worker
+//! assignment, and every survivable fault.
+//!
+//! Layers:
+//!
+//! * [`transport`] — byte-frame duplex links: in-process channels (the
+//!   `--shard-workers` default) and length-prefixed TCP for real
+//!   cross-host workers.
+//! * [`worker`] — the executor loop: ping-responsive receive thread +
+//!   solver thread running [`crate::api::OtProblem::divergence_all_planned`].
+//! * [`coordinator`] — scatter/gather, heartbeat liveness, deadlines,
+//!   bounded retry with re-scatter, `service.shard.*` metrics.
+//! * [`testing`] — the deterministic fault-injection harness
+//!   ([`FaultPlan`]) driving `rust/tests/shard_fault_injection.rs`.
+//!
+//! The failure ladder, from mildest to terminal:
+//!
+//! 1. Lost or late message → task deadline → re-scatter (bounded by
+//!    `max_retries`, linear backoff). Duplicates are deduped by
+//!    `task_id`; first result wins.
+//! 2. Worker crash (link error) or hang (heartbeat timeout) → worker
+//!    marked dead, its tasks re-scattered to survivors.
+//! 3. Corrupt frame → that worker's outstanding pairs fail with
+//!    [`crate::error::Error::Wire`] (deterministic failures are not
+//!    retried).
+//! 4. No survivors / retries exhausted →
+//!    [`crate::error::Error::Service`]. Always typed, never a panic,
+//!    never a wrong answer.
+
+pub mod coordinator;
+pub mod testing;
+pub mod transport;
+pub mod worker;
+
+pub use coordinator::{ShardConfig, ShardCoordinator, METRIC_NAMES};
+pub use testing::{Fault, FaultPlan, FaultyTransport};
+pub use transport::{in_proc_pair, InProcTransport, TcpTransport, Transport};
+pub use worker::{execute_task, run_worker, serve_listener, spawn_tcp_worker, WorkerOptions};

@@ -1,0 +1,301 @@
+//! Deterministic fault injection for the shard layer.
+//!
+//! A [`FaultPlan`] is a reproducible schedule of message- and
+//! worker-level failures, keyed by worker index and by a per-transport
+//! message counter (`nth`, 0-based) — no clocks, no randomness at
+//! injection time. The same plan against the same workload replays the
+//! same fault sequence, which is what lets
+//! `rust/tests/shard_fault_injection.rs` assert *bitwise* agreement with
+//! the single-host solve under every survivable fault.
+//!
+//! Two delivery mechanisms:
+//!
+//! * **Transport faults** ([`FaultyTransport`]) wrap the *coordinator's*
+//!   endpoint of one worker link and perturb frames in flight:
+//!   [`Fault::DropSend`] swallows the coordinator's nth outbound frame
+//!   (task or ping never arrives), [`Fault::DropRecv`] /
+//!   [`Fault::DelayRecv`] / [`Fault::DuplicateRecv`] /
+//!   [`Fault::CorruptRecv`] perturb the nth inbound frame (result or
+//!   pong).
+//! * **Worker faults** are handed to the worker loop as
+//!   [`crate::shard::worker::WorkerOptions`]: [`Fault::KillOnTask`] makes
+//!   the worker exit the moment its nth task arrives (a crash — the link
+//!   drops), [`Fault::MuteOnTask`] makes it keep solving but never send
+//!   again (a hang — only the heartbeat timeout can detect it).
+//!
+//! [`FaultPlan::random`] derives a schedule from a seed via the crate's
+//! own [`Rng`], restricted to survivable message-level faults, for
+//! property-style sweeps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::rng::Rng;
+
+use super::transport::Transport;
+
+/// One injected failure. `nth` counters are 0-based per direction and
+/// per transport, except the task-indexed worker faults which are
+/// 1-based ("on the nth task received").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Swallow the coordinator's nth outbound frame.
+    DropSend { nth: usize },
+    /// Swallow the nth inbound frame.
+    DropRecv { nth: usize },
+    /// Deliver the nth inbound frame, then deliver a copy again.
+    DuplicateRecv { nth: usize },
+    /// Hold the nth inbound frame back for `delay` before delivering it
+    /// (out-of-order / late gather).
+    DelayRecv { nth: usize, delay: Duration },
+    /// Garble the nth inbound frame's bytes (decode must fail typed).
+    CorruptRecv { nth: usize },
+    /// Worker exits (crash) upon receiving its nth task, 1-based.
+    KillOnTask { nth: usize },
+    /// Worker stops sending (results *and* pongs) from its nth task on,
+    /// 1-based, but keeps running — detectable only via heartbeats.
+    MuteOnTask { nth: usize },
+}
+
+/// A reproducible schedule of faults, addressed by worker index.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    injections: Vec<(usize, Fault)>,
+}
+
+impl FaultPlan {
+    /// The empty plan (no faults).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// An empty plan tagged with a seed (for labelling derived plans).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, injections: Vec::new() }
+    }
+
+    /// Add one fault against `worker` (builder style).
+    pub fn inject(mut self, worker: usize, fault: Fault) -> FaultPlan {
+        self.injections.push((worker, fault));
+        self
+    }
+
+    /// Derive a schedule of `count` *survivable* message-level faults
+    /// (drops, delays, duplicates — never kills, mutes, or corruption)
+    /// from `seed`. Any such plan must leave answers bitwise intact.
+    pub fn random(seed: u64, workers: usize, count: usize) -> FaultPlan {
+        let mut rng = Rng::seed_from(seed);
+        let mut plan = FaultPlan::new(seed);
+        for _ in 0..count {
+            let worker = rng.uniform_usize(workers.max(1));
+            let nth = rng.uniform_usize(3);
+            let fault = match rng.uniform_usize(4) {
+                0 => Fault::DropSend { nth },
+                1 => Fault::DropRecv { nth },
+                2 => Fault::DuplicateRecv { nth },
+                _ => Fault::DelayRecv {
+                    nth,
+                    delay: Duration::from_millis(2 + 3 * rng.uniform_usize(8) as u64),
+                },
+            };
+            plan = plan.inject(worker, fault);
+        }
+        plan
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.injections.is_empty()
+    }
+
+    /// The 1-based task index at which `worker` crashes, if scheduled.
+    pub fn kill_on_task(&self, worker: usize) -> Option<usize> {
+        self.injections.iter().find_map(|(w, f)| match f {
+            Fault::KillOnTask { nth } if *w == worker => Some(*nth),
+            _ => None,
+        })
+    }
+
+    /// The 1-based task index at which `worker` goes mute, if scheduled.
+    pub fn mute_on_task(&self, worker: usize) -> Option<usize> {
+        self.injections.iter().find_map(|(w, f)| match f {
+            Fault::MuteOnTask { nth } if *w == worker => Some(*nth),
+            _ => None,
+        })
+    }
+
+    /// Message-level faults against `worker`'s link, in injection order.
+    pub fn transport_faults(&self, worker: usize) -> Vec<Fault> {
+        self.injections
+            .iter()
+            .filter(|(w, f)| {
+                *w == worker
+                    && !matches!(f, Fault::KillOnTask { .. } | Fault::MuteOnTask { .. })
+            })
+            .map(|(_, f)| f.clone())
+            .collect()
+    }
+
+    pub fn has_transport_faults(&self, worker: usize) -> bool {
+        !self.transport_faults(worker).is_empty()
+    }
+}
+
+/// A [`Transport`] decorator that applies one worker's message-level
+/// faults from a [`FaultPlan`]. Wraps the coordinator-side endpoint.
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    faults: Vec<Fault>,
+    sends: AtomicUsize,
+    recvs: AtomicUsize,
+    /// Frames held back by `DelayRecv` / queued again by
+    /// `DuplicateRecv`: (release time, frame).
+    held: Mutex<Vec<(Instant, Vec<u8>)>>,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    pub fn new(inner: T, faults: Vec<Fault>) -> FaultyTransport<T> {
+        FaultyTransport {
+            inner,
+            faults,
+            sends: AtomicUsize::new(0),
+            recvs: AtomicUsize::new(0),
+            held: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn send(&self, frame: &[u8]) -> crate::error::Result<()> {
+        let n = self.sends.fetch_add(1, Ordering::SeqCst);
+        for fault in &self.faults {
+            if matches!(fault, Fault::DropSend { nth } if *nth == n) {
+                return Ok(()); // swallowed: the peer never sees it
+            }
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> crate::error::Result<Option<Vec<u8>>> {
+        // Matured held-back frames are delivered before live ones.
+        {
+            let mut held = self.held.lock().unwrap();
+            if let Some(pos) = held.iter().position(|(at, _)| *at <= Instant::now()) {
+                return Ok(Some(held.remove(pos).1));
+            }
+        }
+        let Some(mut frame) = self.inner.recv_timeout(timeout)? else {
+            return Ok(None);
+        };
+        let n = self.recvs.fetch_add(1, Ordering::SeqCst);
+        for fault in &self.faults {
+            match fault {
+                Fault::DropRecv { nth } if *nth == n => return Ok(None),
+                Fault::DuplicateRecv { nth } if *nth == n => {
+                    self.held.lock().unwrap().push((Instant::now(), frame.clone()));
+                    return Ok(Some(frame));
+                }
+                Fault::DelayRecv { nth, delay } if *nth == n => {
+                    self.held.lock().unwrap().push((Instant::now() + *delay, frame));
+                    return Ok(None);
+                }
+                Fault::CorruptRecv { nth } if *nth == n => {
+                    // Garble everything past the magic + header-length
+                    // prefix so the header JSON fails to parse — decode
+                    // must surface a typed wire error, never a panic.
+                    let start = 8.min(frame.len().saturating_sub(1));
+                    for b in &mut frame[start..] {
+                        *b ^= 0xA5;
+                    }
+                    return Ok(Some(frame));
+                }
+                _ => {}
+            }
+        }
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::transport::in_proc_pair;
+
+    #[test]
+    fn plan_routes_faults_by_worker() {
+        let plan = FaultPlan::new(9)
+            .inject(0, Fault::KillOnTask { nth: 1 })
+            .inject(1, Fault::MuteOnTask { nth: 2 })
+            .inject(1, Fault::DropRecv { nth: 0 });
+        assert_eq!(plan.kill_on_task(0), Some(1));
+        assert_eq!(plan.kill_on_task(1), None);
+        assert_eq!(plan.mute_on_task(1), Some(2));
+        assert_eq!(plan.transport_faults(0), vec![]);
+        assert_eq!(plan.transport_faults(1), vec![Fault::DropRecv { nth: 0 }]);
+        assert!(plan.has_transport_faults(1));
+        assert!(!plan.has_transport_faults(0));
+        assert_eq!(plan.seed(), 9);
+    }
+
+    #[test]
+    fn random_plans_are_reproducible_and_survivable() {
+        let a = FaultPlan::random(42, 3, 8);
+        let b = FaultPlan::random(42, 3, 8);
+        assert_eq!(a.injections, b.injections, "same seed, same schedule");
+        let c = FaultPlan::random(43, 3, 8);
+        assert_ne!(a.injections, c.injections, "different seed, different schedule");
+        for w in 0..3 {
+            assert_eq!(a.kill_on_task(w), None, "random plans never kill");
+            assert_eq!(a.mute_on_task(w), None, "random plans never mute");
+            for f in a.transport_faults(w) {
+                assert!(!matches!(f, Fault::CorruptRecv { .. }), "random plans never corrupt");
+            }
+        }
+    }
+
+    #[test]
+    fn faulty_transport_drops_duplicates_delays_and_corrupts() {
+        let timeout = Duration::from_millis(50);
+        // Drop the 0th send: the peer only sees the second frame.
+        let (coord, worker) = in_proc_pair();
+        let faulty = FaultyTransport::new(coord, vec![Fault::DropSend { nth: 0 }]);
+        faulty.send(b"one").unwrap();
+        faulty.send(b"two").unwrap();
+        assert_eq!(worker.recv_timeout(timeout).unwrap().unwrap(), b"two");
+        assert!(worker.recv_timeout(Duration::from_millis(5)).unwrap().is_none());
+
+        // Duplicate the 0th receive: the frame arrives twice.
+        let (coord, worker) = in_proc_pair();
+        let faulty = FaultyTransport::new(coord, vec![Fault::DuplicateRecv { nth: 0 }]);
+        worker.send(b"result").unwrap();
+        assert_eq!(faulty.recv_timeout(timeout).unwrap().unwrap(), b"result");
+        assert_eq!(faulty.recv_timeout(timeout).unwrap().unwrap(), b"result");
+
+        // Delay the 0th receive: first poll sees nothing, a later poll
+        // (after the delay matures) sees the frame.
+        let (coord, worker) = in_proc_pair();
+        let faulty = FaultyTransport::new(
+            coord,
+            vec![Fault::DelayRecv { nth: 0, delay: Duration::from_millis(20) }],
+        );
+        worker.send(b"late").unwrap();
+        assert!(faulty.recv_timeout(timeout).unwrap().is_none(), "held back");
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(faulty.recv_timeout(timeout).unwrap().unwrap(), b"late");
+
+        // Corrupt the 0th receive: bytes change, length does not.
+        let (coord, worker) = in_proc_pair();
+        let faulty = FaultyTransport::new(coord, vec![Fault::CorruptRecv { nth: 0 }]);
+        let frame = b"LSW1\x10\x00\x00\x00{\"v\":1}".to_vec();
+        worker.send(&frame).unwrap();
+        let got = faulty.recv_timeout(timeout).unwrap().unwrap();
+        assert_eq!(got.len(), frame.len());
+        assert_ne!(got, frame);
+        assert_eq!(&got[..8], &frame[..8], "prefix intact, payload garbled");
+    }
+}

@@ -1,0 +1,199 @@
+//! Shard transports: byte-frame duplex links between the coordinator and
+//! its workers.
+//!
+//! A [`Transport`] moves opaque frames (encoded [`crate::runtime::wire`]
+//! documents) in both directions. Two implementations:
+//!
+//! * [`InProcTransport`] — an mpsc channel pair, the default for
+//!   `--shard-workers` (worker threads in the serving process) and the
+//!   substrate the fault-injection harness wraps
+//!   ([`crate::shard::testing::FaultyTransport`]).
+//! * [`TcpTransport`] — length-prefixed frames over a socket, for
+//!   genuinely cross-host workers (`shard::worker::serve_listener`).
+//!
+//! Both ends use interior locking so a transport can be shared behind an
+//! `Arc` between a worker's receive loop and its solver thread. Errors
+//! split into two classes the coordinator treats differently: `Ok(None)`
+//! is "nothing arrived within the timeout" (normal — keep polling), an
+//! `Err` is a dead link (peer gone), which marks the worker dead.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Hard cap on a received frame (1 GiB): a corrupt length prefix must be
+/// a typed error, not an absurd allocation.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// A duplex byte-frame link. See the module docs for the `Ok(None)` /
+/// `Err` contract.
+pub trait Transport: Send + Sync {
+    /// Send one frame. Any error means the link is dead.
+    fn send(&self, frame: &[u8]) -> Result<()>;
+
+    /// Receive one frame, waiting at most `timeout`. `Ok(None)` = nothing
+    /// arrived; `Err` = the link is dead.
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Vec<u8>>>;
+}
+
+fn disconnected() -> Error {
+    Error::Service("shard transport disconnected".into())
+}
+
+/// In-process transport endpoint (one side of a channel pair).
+pub struct InProcTransport {
+    tx: Mutex<Sender<Vec<u8>>>,
+    rx: Mutex<Receiver<Vec<u8>>>,
+}
+
+/// Create a connected pair of in-process endpoints.
+pub fn in_proc_pair() -> (InProcTransport, InProcTransport) {
+    let (a_tx, a_rx) = channel();
+    let (b_tx, b_rx) = channel();
+    (
+        InProcTransport { tx: Mutex::new(a_tx), rx: Mutex::new(b_rx) },
+        InProcTransport { tx: Mutex::new(b_tx), rx: Mutex::new(a_rx) },
+    )
+}
+
+impl Transport for InProcTransport {
+    fn send(&self, frame: &[u8]) -> Result<()> {
+        self.tx.lock().unwrap().send(frame.to_vec()).map_err(|_| disconnected())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        match self.rx.lock().unwrap().recv_timeout(timeout) {
+            Ok(frame) => Ok(Some(frame)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(disconnected()),
+        }
+    }
+}
+
+/// TCP transport: `u32` little-endian length prefix, then the frame.
+pub struct TcpTransport {
+    reader: Mutex<TcpStream>,
+    writer: Mutex<TcpStream>,
+}
+
+impl TcpTransport {
+    /// Connect to a listening shard worker.
+    pub fn connect(addr: &str) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Service(format!("shard connect {addr}: {e}")))?;
+        Self::from_stream(stream)
+    }
+
+    /// Wrap an accepted stream (the worker side).
+    pub fn from_stream(stream: TcpStream) -> Result<TcpTransport> {
+        stream.set_nodelay(true).ok();
+        let reader = stream.try_clone()?;
+        Ok(TcpTransport { reader: Mutex::new(reader), writer: Mutex::new(stream) })
+    }
+
+    /// Read exactly `buf.len()` bytes. When `allow_idle_timeout` and the
+    /// timeout fires before the *first* byte, returns `Ok(None)` (idle —
+    /// no frame in flight); a timeout mid-buffer keeps reading, because a
+    /// peer that started a frame will finish it or close the socket.
+    fn read_full(
+        stream: &mut TcpStream,
+        buf: &mut [u8],
+        allow_idle_timeout: bool,
+    ) -> Result<Option<()>> {
+        let mut filled = 0;
+        while filled < buf.len() {
+            match stream.read(&mut buf[filled..]) {
+                Ok(0) => return Err(disconnected()),
+                Ok(k) => filled += k,
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    if filled == 0 && allow_idle_timeout {
+                        return Ok(None);
+                    }
+                }
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+        Ok(Some(()))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&self, frame: &[u8]) -> Result<()> {
+        let mut writer = self.writer.lock().unwrap();
+        writer.write_all(&(frame.len() as u32).to_le_bytes()).map_err(|_| disconnected())?;
+        writer.write_all(frame).map_err(|_| disconnected())?;
+        writer.flush().map_err(|_| disconnected())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        let mut reader = self.reader.lock().unwrap();
+        reader
+            .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+            .map_err(Error::Io)?;
+        let mut len_buf = [0u8; 4];
+        if Self::read_full(&mut reader, &mut len_buf, true)?.is_none() {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > MAX_FRAME_LEN {
+            return Err(Error::Wire(format!("frame length {len} exceeds cap")));
+        }
+        let mut frame = vec![0u8; len];
+        Self::read_full(&mut reader, &mut frame, false)?;
+        Ok(Some(frame))
+    }
+}
+
+/// Bind a loopback listener on an ephemeral port (test/bench helper).
+pub fn loopback_listener() -> Result<TcpListener> {
+    TcpListener::bind("127.0.0.1:0").map_err(Error::Io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_proc_pair_is_duplex() {
+        let (a, b) = in_proc_pair();
+        a.send(b"ping").unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap(), b"ping");
+        b.send(b"pong").unwrap();
+        assert_eq!(a.recv_timeout(Duration::from_millis(100)).unwrap().unwrap(), b"pong");
+        assert!(a.recv_timeout(Duration::from_millis(5)).unwrap().is_none(), "idle times out");
+    }
+
+    #[test]
+    fn in_proc_disconnect_is_an_error() {
+        let (a, b) = in_proc_pair();
+        drop(b);
+        assert!(a.send(b"x").is_err());
+        assert!(a.recv_timeout(Duration::from_millis(5)).is_err());
+    }
+
+    #[test]
+    fn tcp_round_trip_and_disconnect() {
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t = TcpTransport::from_stream(stream).unwrap();
+            let frame = t.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            t.send(&frame).unwrap(); // echo
+        });
+        let client = TcpTransport::connect(&addr.to_string()).unwrap();
+        assert!(client.recv_timeout(Duration::from_millis(5)).unwrap().is_none());
+        let payload = vec![7u8; 10_000];
+        client.send(&payload).unwrap();
+        assert_eq!(client.recv_timeout(Duration::from_secs(5)).unwrap().unwrap(), payload);
+        server.join().unwrap();
+        // Server gone: the next receive must report a dead link.
+        assert!(client.recv_timeout(Duration::from_millis(200)).is_err());
+    }
+}

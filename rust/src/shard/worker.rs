@@ -1,0 +1,293 @@
+//! The shard worker: receives [`TaskEnvelope`]s, solves them through the
+//! planned executor, and streams [`ResultEnvelope`]s back.
+//!
+//! Layout per worker: a **receive loop** (this function's thread) that
+//! answers pings immediately and forwards decoded tasks, and a **solver
+//! thread** that runs the actual divergence batches. The split is what
+//! makes liveness meaningful: a worker deep in a long solve still pongs
+//! within one poll interval, so the coordinator's heartbeat timeout
+//! fires only for workers that are genuinely gone (crashed, hung, or
+//! muted), not merely busy.
+//!
+//! Determinism: the worker executes the shipped [`crate::api::Plan`]
+//! through [`crate::api::OtProblem::divergence_all_planned`] with the
+//! shipped feature map (or a `plan.seed` refit when absent). By the
+//! PR 3 batch contract each pair's bits are independent of batch width,
+//! thread count, and which worker runs it — the foundation of the
+//! shard layer's bitwise-identity guarantee.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::api::{OtProblem, ResultEnvelope, TaskEnvelope};
+use crate::error::{Error, Result};
+use crate::runtime::WireDoc;
+
+use super::transport::{TcpTransport, Transport};
+
+/// How often the receive loop wakes to poll the transport.
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// Behaviour knobs, used by the fault harness to script worker-level
+/// failures (see [`crate::shard::testing::FaultPlan`]). Default = no
+/// faults.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerOptions {
+    /// Exit (simulated crash) upon receiving the nth task, 1-based: the
+    /// task is accepted, never answered, and the link drops.
+    pub exit_on_task: Option<usize>,
+    /// From the nth received task on (1-based), keep solving but never
+    /// send another frame — results *and* pongs go dark.
+    pub mute_on_task: Option<usize>,
+}
+
+/// Solve one task envelope. Public so tests can run the exact worker
+/// computation locally.
+pub fn execute_task(worker_id: u64, env: &TaskEnvelope) -> ResultEnvelope {
+    let pair_refs: Vec<(&[f32], &[f32])> =
+        env.pairs.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+    let mut problem = OtProblem::new(&env.mu, &env.nu).weight_pairs(&pair_refs);
+    if let Some(map) = &env.map {
+        problem = problem.with_feature_map(map);
+    }
+    let results = problem.divergence_all_planned(&env.plan);
+    ResultEnvelope::new(env.task_id, worker_id, results)
+}
+
+/// Run a worker until its link drops (or a scripted crash fires). Blocks
+/// the calling thread; spawn it.
+pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOptions) {
+    let muted = Arc::new(AtomicBool::new(false));
+    let (task_tx, task_rx) = mpsc::channel::<TaskEnvelope>();
+    let solver = {
+        let transport = Arc::clone(&transport);
+        let muted = Arc::clone(&muted);
+        thread::Builder::new()
+            .name(format!("ls-shard-solve-{worker_id}"))
+            .spawn(move || {
+                while let Ok(env) = task_rx.recv() {
+                    let result = execute_task(worker_id, &env);
+                    if !muted.load(Ordering::SeqCst) && transport.send(&result.encode()).is_err()
+                    {
+                        break; // link gone: nobody to report to
+                    }
+                }
+            })
+            .expect("spawn shard solver thread")
+    };
+
+    let mut tasks_seen = 0usize;
+    loop {
+        let frame = match transport.recv_timeout(POLL_INTERVAL) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => continue,
+            Err(_) => break, // coordinator gone
+        };
+        // An undecodable inbound frame is ignored here: the coordinator's
+        // task deadline covers lost tasks, and a garbled ping needs no
+        // answer.
+        let Ok(doc) = WireDoc::decode(&frame) else { continue };
+        match doc.kind() {
+            "ping" => {
+                if !muted.load(Ordering::SeqCst) {
+                    let mut pong = WireDoc::with_kind("pong");
+                    pong.set_u64("worker_id", worker_id);
+                    if transport.send(&pong.encode()).is_err() {
+                        break;
+                    }
+                }
+            }
+            "task" => {
+                tasks_seen += 1;
+                if opts.exit_on_task == Some(tasks_seen) {
+                    return; // scripted crash: transport drops, no join of solver
+                }
+                if opts.mute_on_task == Some(tasks_seen) {
+                    muted.store(true, Ordering::SeqCst);
+                }
+                match TaskEnvelope::decode(&frame) {
+                    Ok(env) => {
+                        if task_tx.send(env).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        // The header parsed (we know the task id) but the
+                        // envelope is invalid: reject it explicitly so the
+                        // coordinator fails the task typed instead of
+                        // burning retries on a deterministic failure.
+                        if !muted.load(Ordering::SeqCst) {
+                            let mut reject = WireDoc::with_kind("reject");
+                            if let Ok(id) = doc.get_u64("task_id") {
+                                reject.set_u64("task_id", id);
+                            }
+                            reject.set_str("error", &e.to_string());
+                            if transport.send(&reject.encode()).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            "shutdown" => break,
+            _ => {}
+        }
+    }
+    drop(task_tx);
+    let _ = solver.join();
+}
+
+/// Serve exactly one coordinator connection on an accepted listener
+/// (the cross-host entry point, used by `serve-shard` in the CLI).
+pub fn serve_listener(
+    listener: std::net::TcpListener,
+    worker_id: u64,
+    opts: WorkerOptions,
+) -> Result<()> {
+    let (stream, peer) = listener.accept().map_err(Error::Io)?;
+    let transport: Arc<dyn Transport> = Arc::new(TcpTransport::from_stream(stream)?);
+    let _ = peer; // observability hooks could log this
+    run_worker(worker_id, transport, opts);
+    Ok(())
+}
+
+/// Spawn a loopback TCP worker on an ephemeral port (test/bench helper).
+/// Returns the address to hand to `ShardCoordinator::connect` and the
+/// serving thread's handle.
+pub fn spawn_tcp_worker(worker_id: u64) -> Result<(std::net::SocketAddr, JoinHandle<()>)> {
+    let listener = super::transport::loopback_listener()?;
+    let addr = listener.local_addr().map_err(Error::Io)?;
+    let handle = thread::Builder::new()
+        .name(format!("ls-shard-tcp-{worker_id}"))
+        .spawn(move || {
+            let _ = serve_listener(listener, worker_id, WorkerOptions::default());
+        })
+        .expect("spawn tcp shard worker");
+    Ok((addr, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::rng::Rng;
+    use crate::shard::transport::in_proc_pair;
+
+    fn sample_task(task_id: u64) -> TaskEnvelope {
+        let mut rng = Rng::seed_from(3);
+        let (mu, nu) = data::gaussian_blobs(10, &mut rng);
+        let pairs = vec![(mu.weights.clone(), nu.weights.clone())];
+        let plan = OtProblem::new(&mu, &nu).epsilon(0.5).rank(8).seed(11).plan().unwrap();
+        TaskEnvelope {
+            task_id,
+            group_id: 0,
+            request_ids: vec![1],
+            plan,
+            mu,
+            nu,
+            pairs,
+            map: None,
+        }
+    }
+
+    #[test]
+    fn worker_answers_pings_and_tasks() {
+        let (coord, worker_end) = in_proc_pair();
+        let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
+        let handle = thread::spawn(move || run_worker(7, worker_end, WorkerOptions::default()));
+
+        let mut ping = WireDoc::with_kind("ping");
+        ping.set_u64("worker_id", 7);
+        coord.send(&ping.encode()).unwrap();
+        let pong = coord.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let pong = WireDoc::decode(&pong).unwrap();
+        assert_eq!(pong.kind(), "pong");
+        assert_eq!(pong.get_u64("worker_id").unwrap(), 7);
+
+        let task = sample_task(42);
+        coord.send(&task.encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        let result = ResultEnvelope::decode(&frame).unwrap();
+        assert_eq!(result.task_id, 42);
+        assert_eq!(result.worker_id, 7);
+        assert_eq!(result.results.len(), 1);
+        let local = execute_task(7, &task);
+        let (remote, local) =
+            (result.results[0].as_ref().unwrap(), local.results[0].as_ref().unwrap());
+        assert_eq!(remote.divergence.to_bits(), local.divergence.to_bits());
+        assert_eq!(remote.xy.u, local.xy.u);
+
+        drop(coord); // link gone: worker exits
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn worker_rejects_invalid_task_without_dying() {
+        let (coord, worker_end) = in_proc_pair();
+        let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
+        let handle = thread::spawn(move || run_worker(1, worker_end, WorkerOptions::default()));
+
+        // A "task" frame whose header parses but whose envelope is
+        // incomplete: the worker must reject, not panic or go silent.
+        let mut bogus = WireDoc::with_kind("task");
+        bogus.set_u64("task_id", 99);
+        coord.send(&bogus.encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let reject = WireDoc::decode(&frame).unwrap();
+        assert_eq!(reject.kind(), "reject");
+        assert_eq!(reject.get_u64("task_id").unwrap(), 99);
+        assert!(!reject.get_str("error").unwrap().is_empty());
+
+        // Still alive afterwards: a real task completes.
+        let task = sample_task(5);
+        coord.send(&task.encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(ResultEnvelope::decode(&frame).unwrap().task_id, 5);
+
+        drop(coord);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn scripted_crash_and_mute_behave() {
+        // Crash on first task: the task is never answered and the link
+        // drops (send eventually fails / recv errors).
+        let (coord, worker_end) = in_proc_pair();
+        let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
+        let handle = thread::spawn(move || {
+            run_worker(0, worker_end, WorkerOptions { exit_on_task: Some(1), ..Default::default() })
+        });
+        coord.send(&sample_task(1).encode()).unwrap();
+        handle.join().unwrap();
+        // The solver thread drops its transport handle asynchronously
+        // after the crash; poll until the disconnect is visible.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match coord.recv_timeout(Duration::from_millis(20)) {
+                Err(_) => break,
+                Ok(None) => assert!(std::time::Instant::now() < deadline, "link must drop"),
+                Ok(Some(_)) => panic!("crashed worker must not answer"),
+            }
+        }
+
+        // Mute on first task: the worker stays up (receives, solves) but
+        // sends nothing — not the result, not pongs.
+        let (coord, worker_end) = in_proc_pair();
+        let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
+        let handle = thread::spawn(move || {
+            run_worker(0, worker_end, WorkerOptions { mute_on_task: Some(1), ..Default::default() })
+        });
+        coord.send(&sample_task(2).encode()).unwrap();
+        let ping = WireDoc::with_kind("ping");
+        coord.send(&ping.encode()).unwrap();
+        assert!(
+            coord.recv_timeout(Duration::from_millis(300)).unwrap().is_none(),
+            "muted worker must go dark"
+        );
+        drop(coord);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,362 @@
+//! Shard fault-injection suite: the sharded scatter/gather solve must be
+//! **bitwise identical** to the single-host fused solve under every
+//! survivable fault, and fail with typed errors (never panics, never
+//! wrong answers) under unsurvivable ones.
+//!
+//! Fault matrix (ISSUE archetype):
+//!
+//! | fault                     | mechanism                   | expected       |
+//! |---------------------------|-----------------------------|----------------|
+//! | worker crash mid-solve    | `Fault::KillOnTask`         | retry, bitwise |
+//! | heartbeat timeout (hang)  | `Fault::MuteOnTask`         | retry, bitwise |
+//! | duplicated gather frame   | `Fault::DuplicateRecv`      | dedup, bitwise |
+//! | out-of-order gather       | `Fault::DelayRecv`          | bitwise        |
+//! | late result past deadline | `Fault::DelayRecv` + deadline | retry, bitwise |
+//! | corrupt result frame      | `Fault::CorruptRecv`        | typed `Wire`   |
+//! | all workers dead          | `Fault::KillOnTask` on all  | typed `Service`|
+//!
+//! Every schedule is deterministic (`shard::testing::FaultPlan`), so a
+//! failure replays exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use linear_sinkhorn::api::{Backend, DivergenceReport, OtProblem, Plan};
+use linear_sinkhorn::data::{self, Measure};
+use linear_sinkhorn::error::{Error, Result};
+use linear_sinkhorn::features::GaussianFeatureMap;
+use linear_sinkhorn::kernels::FactoredKernel;
+use linear_sinkhorn::metrics::Registry;
+use linear_sinkhorn::prelude::legacy::sinkhorn_divergence_batch;
+use linear_sinkhorn::rng::Rng;
+use linear_sinkhorn::runtime::pool::Pool;
+use linear_sinkhorn::shard::{Fault, FaultPlan, ShardConfig, ShardCoordinator};
+use linear_sinkhorn::shard::worker::spawn_tcp_worker;
+
+// ---------------------------------------------------------------- fixture
+
+/// A small divergence workload: shared support, per-pair weight skews —
+/// exactly the shape of a service fuse group.
+fn fixture(pairs: usize) -> (Measure, Measure, Vec<(Vec<f32>, Vec<f32>)>, Plan) {
+    let mut rng = Rng::seed_from(41);
+    let (mu, nu) = data::gaussian_blobs(14, &mut rng);
+    let mut weights = Vec::with_capacity(pairs);
+    for _ in 0..pairs {
+        let mut a = rng.normal_vec(mu.len());
+        let mut b = rng.normal_vec(nu.len());
+        for w in a.iter_mut().chain(b.iter_mut()) {
+            *w = w.abs() + 0.05;
+        }
+        let (sa, sb) = (a.iter().sum::<f32>(), b.iter().sum::<f32>());
+        a.iter_mut().for_each(|w| *w /= sa);
+        b.iter_mut().for_each(|w| *w /= sb);
+        weights.push((a, b));
+    }
+    let refs: Vec<(&[f32], &[f32])> =
+        weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+    let plan = OtProblem::new(&mu, &nu)
+        .epsilon(0.5)
+        .rank(8)
+        .seed(29)
+        .weight_pairs(&refs)
+        .plan()
+        .unwrap();
+    (mu, nu, weights, plan)
+}
+
+fn as_refs(weights: &[(Vec<f32>, Vec<f32>)]) -> Vec<(&[f32], &[f32])> {
+    weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect()
+}
+
+fn local_baseline(
+    mu: &Measure,
+    nu: &Measure,
+    refs: &[(&[f32], &[f32])],
+    plan: &Plan,
+) -> Vec<Result<DivergenceReport>> {
+    OtProblem::new(mu, nu).weight_pairs(refs).divergence_all_planned(plan)
+}
+
+fn assert_bitwise(shard: &[Result<DivergenceReport>], local: &[Result<DivergenceReport>]) {
+    assert_eq!(shard.len(), local.len());
+    for (i, (s, l)) in shard.iter().zip(local).enumerate() {
+        let s = s.as_ref().unwrap_or_else(|e| panic!("pair {i} failed over shards: {e}"));
+        let l = l.as_ref().expect("local baseline must succeed");
+        assert_eq!(s.divergence.to_bits(), l.divergence.to_bits(), "pair {i} divergence");
+        assert_eq!(s.xy.objective.to_bits(), l.xy.objective.to_bits(), "pair {i} xy");
+        assert_eq!(s.xx.objective.to_bits(), l.xx.objective.to_bits(), "pair {i} xx");
+        assert_eq!(s.yy.objective.to_bits(), l.yy.objective.to_bits(), "pair {i} yy");
+        assert_eq!(s.xy.u, l.xy.u, "pair {i} duals");
+        assert_eq!(s.yy.v, l.yy.v, "pair {i} duals");
+        assert_eq!(s.xy.iterations, l.xy.iterations, "pair {i} iterations");
+    }
+}
+
+/// A config with no accidental timeouts: faults fire only where the test
+/// scripts them.
+fn calm_cfg() -> ShardConfig {
+    ShardConfig {
+        heartbeat_interval: Duration::from_secs(10),
+        heartbeat_timeout: Duration::from_secs(60),
+        task_deadline: Duration::from_secs(60),
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(5),
+    }
+}
+
+// ------------------------------------------------------------ happy path
+
+#[test]
+fn fault_free_sharded_solve_matches_legacy_batch_bitwise() {
+    let (mu, nu, weights, plan) = fixture(6);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    let shard = ShardCoordinator::in_process(3, calm_cfg(), metrics.clone());
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[1, 2, 3, 4, 5, 6]);
+    assert_bitwise(&got, &local);
+    assert_eq!(metrics.counter("service.shard.retries").get(), 0);
+
+    // And against the pre-API reference path: same map fit, same kernel
+    // construction, same config — `sinkhorn_divergence_batch` computes
+    // `xy - 0.5 * (xx + yy)` with the identical arithmetic
+    // `DivergenceReport::assemble` ships over the wire.
+    let Backend::Factored { rank } = plan.backend else {
+        panic!("fixture must plan the factored backend")
+    };
+    let map = GaussianFeatureMap::fit(&mu, &nu, plan.epsilon, rank, &mut Rng::seed_from(plan.seed));
+    let pool = Pool::new(plan.solver_threads);
+    let mk = |a: &Measure, b: &Measure| {
+        if plan.stabilized_factors {
+            FactoredKernel::from_measures_stabilized_pooled(&map, a, b, pool.clone())
+        } else {
+            FactoredKernel::from_measures_pooled(&map, a, b, pool.clone())
+        }
+    };
+    let (k_xy, k_xx, k_yy) = (mk(&mu, &nu), mk(&mu, &mu), mk(&nu, &nu));
+    let legacy = sinkhorn_divergence_batch(&k_xy, &k_xx, &k_yy, &refs, &plan.sinkhorn_config());
+    for (i, (s, l)) in got.iter().zip(&legacy).enumerate() {
+        let (s, l) = (s.as_ref().unwrap(), l.as_ref().unwrap());
+        assert_eq!(
+            s.divergence.to_bits(),
+            l.to_bits(),
+            "pair {i}: sharded divergence must equal the legacy batch bit for bit"
+        );
+    }
+}
+
+// ----------------------------------------------------------- fault matrix
+
+#[test]
+fn worker_crash_mid_solve_is_survived_bitwise() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0 crashes the moment its first task arrives: the link drops
+    // and its chunk must be re-scattered to worker 1.
+    let faults = FaultPlan::new(1).inject(0, Fault::KillOnTask { nth: 1 });
+    let shard = ShardCoordinator::in_process_with_faults(2, calm_cfg(), metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert_eq!(shard.live_workers(), 1);
+    assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 1);
+    assert!(metrics.counter("service.shard.retries").get() >= 1, "crash must trigger a retry");
+    assert!(metrics.counter("service.shard.rescattered_pairs").get() >= 1);
+    // The metric the dashboards watch is rendered.
+    assert!(metrics.render().contains("service.shard.retries"));
+}
+
+#[test]
+fn heartbeat_timeout_detects_hung_worker() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0 goes mute on its first task: it keeps running but answers
+    // neither results nor pongs, so only the heartbeat timeout can tell.
+    let cfg = ShardConfig {
+        heartbeat_interval: Duration::from_millis(20),
+        heartbeat_timeout: Duration::from_millis(250),
+        task_deadline: Duration::from_secs(60),
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(5),
+    };
+    let faults = FaultPlan::new(2).inject(0, Fault::MuteOnTask { nth: 1 });
+    let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 1);
+    assert_eq!(metrics.counter("service.shard.retries").get(), 1);
+    assert!(metrics.counter("service.shard.heartbeats").get() >= 1);
+}
+
+#[test]
+fn duplicated_gather_frames_are_deduped() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // With heartbeats quiesced (calm_cfg) the first inbound frame on each
+    // link is the result; both workers deliver theirs twice.
+    let faults = FaultPlan::new(3)
+        .inject(0, Fault::DuplicateRecv { nth: 0 })
+        .inject(1, Fault::DuplicateRecv { nth: 0 });
+    let shard = ShardCoordinator::in_process_with_faults(2, calm_cfg(), metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert_eq!(metrics.counter("service.shard.gathered_results").get(), 2);
+    assert_eq!(
+        metrics.counter("service.shard.duplicate_results").get(),
+        2,
+        "each duplicated result frame must be observed and discarded"
+    );
+    assert_eq!(metrics.counter("service.shard.retries").get(), 0);
+}
+
+#[test]
+fn delayed_gather_reorders_without_retry() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0's result is held back 50 ms, so worker 1's chunk lands
+    // first: an out-of-order gather that must still reassemble in pair
+    // order, bit for bit, with no retry.
+    let faults = FaultPlan::new(4)
+        .inject(0, Fault::DelayRecv { nth: 0, delay: Duration::from_millis(50) });
+    let shard = ShardCoordinator::in_process_with_faults(2, calm_cfg(), metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert_eq!(metrics.counter("service.shard.retries").get(), 0);
+    assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 0);
+}
+
+#[test]
+fn late_result_past_deadline_forces_retry_and_stays_bitwise() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0's result is held past the task deadline: the coordinator
+    // re-scatters its chunk to worker 1; whichever result lands first
+    // wins and the loser is deduped — both carry identical bits.
+    let cfg = ShardConfig {
+        heartbeat_interval: Duration::from_secs(10),
+        heartbeat_timeout: Duration::from_secs(60),
+        task_deadline: Duration::from_millis(150),
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(5),
+    };
+    let faults = FaultPlan::new(5)
+        .inject(0, Fault::DelayRecv { nth: 0, delay: Duration::from_millis(600) });
+    let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert!(metrics.counter("service.shard.retries").get() >= 1, "deadline must fire");
+    assert!(metrics.counter("service.shard.rescattered_pairs").get() >= 1);
+}
+
+#[test]
+fn random_survivable_fault_plans_preserve_bits() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    // Seeded sweeps of drop/delay/duplicate schedules: every survivable
+    // plan must leave the answer bitwise intact. `max_retries: 4` gives
+    // five sends per task against at most three scheduled faults, so no
+    // schedule can exhaust the budget.
+    for seed in [11u64, 12, 13, 14] {
+        let faults = FaultPlan::random(seed, 2, 3);
+        let cfg = ShardConfig {
+            heartbeat_interval: Duration::from_millis(50),
+            heartbeat_timeout: Duration::from_secs(30),
+            task_deadline: Duration::from_millis(300),
+            max_retries: 4,
+            retry_backoff: Duration::from_millis(5),
+        };
+        let metrics = Arc::new(Registry::default());
+        let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics, &faults);
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&got, &local);
+    }
+}
+
+// ------------------------------------------------------ unsurvivable path
+
+#[test]
+fn corrupt_result_frame_fails_typed_without_retry() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0's result frame is garbled in flight. A deterministic
+    // decode failure is not retried: worker 0's pairs fail with a typed
+    // wire error while worker 1's half stays bitwise correct.
+    let faults = FaultPlan::new(6).inject(0, Fault::CorruptRecv { nth: 0 });
+    let shard = ShardCoordinator::in_process_with_faults(2, calm_cfg(), metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_eq!(got.len(), 4);
+    // Chunks are contiguous: worker 0 held pairs 0..2, worker 1 pairs 2..4.
+    for slot in &got[..2] {
+        assert!(matches!(slot, Err(Error::Wire(_))), "corrupt chunk must fail typed: {slot:?}");
+    }
+    assert_bitwise(&got[2..], &local[2..]);
+    assert_eq!(metrics.counter("service.shard.corrupt_payloads").get(), 1);
+    assert_eq!(metrics.counter("service.shard.retries").get(), 0, "corruption is not retried");
+    assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 1);
+}
+
+#[test]
+fn all_workers_dead_is_typed_never_a_panic() {
+    let (mu, nu, weights, plan) = fixture(3);
+    let refs = as_refs(&weights);
+
+    let metrics = Arc::new(Registry::default());
+    let faults = FaultPlan::new(7)
+        .inject(0, Fault::KillOnTask { nth: 1 })
+        .inject(1, Fault::KillOnTask { nth: 1 });
+    let shard = ShardCoordinator::in_process_with_faults(2, calm_cfg(), metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_eq!(got.len(), 3);
+    for slot in &got {
+        assert!(matches!(slot, Err(Error::Service(_))), "expected typed error: {slot:?}");
+    }
+    assert_eq!(shard.live_workers(), 0);
+    // The coordinator stays usable: follow-up groups fail fast, typed.
+    let again = shard.solve_group(&plan, &mu, &nu, &refs[..1], None, &[]);
+    assert!(matches!(&again[0], Err(Error::Service(_))));
+}
+
+// ------------------------------------------------------------ cross-host
+
+#[test]
+fn tcp_loopback_workers_match_local_bitwise() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let (addr_a, join_a) = spawn_tcp_worker(0).unwrap();
+    let (addr_b, join_b) = spawn_tcp_worker(1).unwrap();
+    let metrics = Arc::new(Registry::default());
+    let shard = ShardCoordinator::connect(
+        &[addr_a.to_string(), addr_b.to_string()],
+        calm_cfg(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[7, 8, 9, 10]);
+    assert_bitwise(&got, &local);
+    assert_eq!(metrics.counter("service.shard.gathered_results").get(), 2);
+    drop(shard); // shutdown frames / closed links let the workers exit
+    join_a.join().unwrap();
+    join_b.join().unwrap();
+}

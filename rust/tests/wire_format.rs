@@ -1,0 +1,241 @@
+//! Wire-format exactness and robustness suite (`runtime::wire`,
+//! `api::envelope`).
+//!
+//! The shard tier's bitwise contract rests on the wire round trip being
+//! *exact*: every f32/f64 bit pattern a solve can produce — NaN payloads,
+//! subnormals, signed zeros, infinities — must come back identical, and
+//! every malformed frame must surface as a typed [`Error::Wire`], never a
+//! panic and never a silently-wrong column.
+
+use linear_sinkhorn::api::{OtProblem, Plan, TaskEnvelope};
+use linear_sinkhorn::data::Measure;
+use linear_sinkhorn::error::Error;
+use linear_sinkhorn::linalg::Mat;
+use linear_sinkhorn::runtime::WireDoc;
+use linear_sinkhorn::rng::Rng;
+use linear_sinkhorn::testing::{property, Gen};
+
+/// Draw an f32 that is pathological with reasonable probability: NaNs
+/// with varied payloads, subnormals, signed zeros, infinities, extremes,
+/// and ordinary values.
+fn nasty_f32(g: &mut Gen) -> f32 {
+    match g.usize_in(0, 9) {
+        0 => f32::from_bits(0x7FC0_0000 | g.rng.uniform_usize(1 << 22) as u32), // quiet NaN, payload
+        1 => f32::from_bits(0xFF80_0001 | (g.rng.uniform_usize(1 << 20) as u32)), // negative NaN
+        2 => f32::from_bits(g.rng.uniform_usize(0x0080_0000) as u32),           // +subnormal (or +0)
+        3 => -f32::from_bits(g.rng.uniform_usize(0x0080_0000) as u32),          // -subnormal (or -0)
+        4 => 0.0,
+        5 => -0.0,
+        6 => f32::INFINITY,
+        7 => f32::NEG_INFINITY,
+        8 => {
+            if g.usize_in(0, 1) == 0 {
+                f32::MAX
+            } else {
+                f32::MIN_POSITIVE
+            }
+        }
+        _ => g.f64_in(-1e3, 1e3) as f32,
+    }
+}
+
+fn nasty_f64(g: &mut Gen) -> f64 {
+    match g.usize_in(0, 6) {
+        0 => f64::from_bits(0x7FF8_0000_0000_0000 | g.rng.uniform_usize(1 << 30) as u64),
+        1 => f64::from_bits(g.rng.uniform_usize(1 << 40) as u64), // deep subnormal
+        2 => -0.0,
+        3 => f64::INFINITY,
+        4 => f64::MIN_POSITIVE,
+        5 => g.f64_in(-1.0, 1.0),
+        _ => f64::NEG_INFINITY,
+    }
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A small valid plan to ride along in task envelopes (the executor never
+/// cross-checks plan shapes against the shipped measures, and neither
+/// does the codec — the plan is opaque cargo here).
+fn carrier_plan() -> Plan {
+    let mut rng = Rng::seed_from(3);
+    let (mu, nu) = linear_sinkhorn::data::gaussian_blobs(10, &mut rng);
+    OtProblem::new(&mu, &nu).epsilon(0.5).rank(8).seed(7).plan().unwrap()
+}
+
+#[test]
+fn columns_round_trip_every_bit_pattern() {
+    property("wire_columns_bit_exact", 48, |g| {
+        let n32 = g.usize_in(0, 64);
+        let n64 = g.usize_in(0, 64);
+        let w32: Vec<f32> = (0..n32).map(|_| nasty_f32(g)).collect();
+        let w64: Vec<f64> = (0..n64).map(|_| nasty_f64(g)).collect();
+        let mut doc = WireDoc::with_kind("task");
+        doc.set_u64("task_id", g.rng.uniform_usize(usize::MAX) as u64);
+        doc.push_f32("w32", &w32).unwrap();
+        doc.push_f64("w64", &w64).unwrap();
+        let back = WireDoc::decode(&doc.encode()).expect("round trip");
+        assert_eq!(bits32(back.f32s("w32").unwrap()), bits32(&w32), "f32 bits must survive");
+        assert_eq!(bits64(back.f64s("w64").unwrap()), bits64(&w64), "f64 bits must survive");
+    });
+}
+
+#[test]
+fn task_envelopes_carry_pathological_weights_bitwise() {
+    // The plan comes from clean measures; the shipped measures and weight
+    // pairs are then replaced with pathological payloads. The codec must
+    // not inspect values — only shapes — so every bit comes back.
+    property("task_envelope_nasty_weights", 24, |g| {
+        let n = g.usize_in(1, 12);
+        let m = g.usize_in(1, 12);
+        let dim = g.usize_in(1, 4);
+        let mk = |g: &mut Gen, rows: usize| Measure {
+            points: Mat::from_fn(rows, dim, |_, _| nasty_f32(g)),
+            weights: (0..rows).map(|_| nasty_f32(g)).collect(),
+        };
+        let mu = mk(g, n);
+        let nu = mk(g, m);
+        let n_pairs = g.usize_in(0, 4);
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..n_pairs)
+            .map(|_| {
+                (
+                    (0..n).map(|_| nasty_f32(g)).collect(),
+                    (0..m).map(|_| nasty_f32(g)).collect(),
+                )
+            })
+            .collect();
+        let task = TaskEnvelope {
+            task_id: g.rng.uniform_usize(usize::MAX) as u64,
+            group_id: 1,
+            request_ids: (0..n_pairs as u64).collect(),
+            plan: carrier_plan(),
+            mu,
+            nu,
+            pairs,
+            map: None,
+        };
+        let back = TaskEnvelope::decode(&task.encode()).expect("round trip");
+        assert_eq!(back.task_id, task.task_id);
+        assert_eq!(back.request_ids, task.request_ids);
+        assert_eq!(bits32(back.mu.points.data()), bits32(task.mu.points.data()));
+        assert_eq!(bits32(&back.mu.weights), bits32(&task.mu.weights));
+        assert_eq!(bits32(back.nu.points.data()), bits32(task.nu.points.data()));
+        assert_eq!(bits32(&back.nu.weights), bits32(&task.nu.weights));
+        assert_eq!(back.pairs.len(), task.pairs.len());
+        for ((ba, bb), (ta, tb)) in back.pairs.iter().zip(&task.pairs) {
+            assert_eq!(bits32(ba), bits32(ta));
+            assert_eq!(bits32(bb), bits32(tb));
+        }
+    });
+}
+
+#[test]
+fn empty_measures_round_trip() {
+    let empty = Measure { points: Mat::from_vec(0, 2, vec![]), weights: vec![] };
+    let task = TaskEnvelope {
+        task_id: 9,
+        group_id: 0,
+        request_ids: vec![],
+        plan: carrier_plan(),
+        mu: empty.clone(),
+        nu: empty,
+        pairs: vec![],
+        map: None,
+    };
+    let back = TaskEnvelope::decode(&task.encode()).expect("empty measures must round trip");
+    assert_eq!(back.mu.len(), 0);
+    assert_eq!(back.nu.len(), 0);
+    assert!(back.pairs.is_empty());
+    assert!(back.request_ids.is_empty());
+}
+
+#[test]
+fn every_truncation_is_a_typed_error_never_a_panic() {
+    let mut doc = WireDoc::with_kind("task");
+    doc.set_u64("task_id", 1);
+    doc.push_f32("w", &[1.0, f32::NAN, -0.0, 3.5]).unwrap();
+    doc.push_f64("obj", &[0.25, f64::INFINITY]).unwrap();
+    let frame = doc.encode();
+    for cut in 0..frame.len() {
+        match WireDoc::decode(&frame[..cut]) {
+            Err(Error::Wire(_)) => {}
+            Err(other) => panic!("truncation at {cut} must be Error::Wire, got {other}"),
+            Ok(_) => panic!("truncation at {cut} decoded successfully"),
+        }
+    }
+    assert!(WireDoc::decode(&frame).is_ok(), "the untruncated frame stays valid");
+}
+
+#[test]
+fn header_payload_length_mismatches_are_rejected() {
+    let mut doc = WireDoc::new();
+    doc.push_f32("w", &[1.0, 2.0]).unwrap();
+    let frame = doc.encode();
+
+    // Declared header length shorter than the real header: the JSON
+    // parser sees a prefix and the directory no longer matches the
+    // payload. Either way: typed error.
+    let mut short = frame.clone();
+    let declared = u32::from_le_bytes(short[4..8].try_into().unwrap());
+    short[4..8].copy_from_slice(&(declared - 1).to_le_bytes());
+    assert!(matches!(WireDoc::decode(&short), Err(Error::Wire(_))));
+
+    // Declared header length longer than the whole frame.
+    let mut long = frame.clone();
+    long[4..8].copy_from_slice(&(frame.len() as u32 * 2).to_le_bytes());
+    assert!(matches!(WireDoc::decode(&long), Err(Error::Wire(_))));
+
+    // Payload shorter than the directory claims.
+    assert!(matches!(WireDoc::decode(&frame[..frame.len() - 4]), Err(Error::Wire(_))));
+
+    // Payload longer than the directory claims.
+    let mut padded = frame.clone();
+    padded.extend_from_slice(&[0u8; 4]);
+    assert!(matches!(WireDoc::decode(&padded), Err(Error::Wire(_))));
+}
+
+#[test]
+fn random_byte_flips_never_panic() {
+    // A flipped bit anywhere in the frame must yield either a clean
+    // decode (payload flips change values, not structure) or a typed
+    // error — never a panic, never an abort.
+    property("wire_byte_flip_fuzz", 64, |g| {
+        let mut doc = WireDoc::with_kind("result");
+        doc.set_u64("task_id", 77);
+        let vals: Vec<f32> = (0..g.usize_in(1, 32)).map(|_| nasty_f32(g)).collect();
+        doc.push_f32("w", &vals).unwrap();
+        let mut frame = doc.encode();
+        let idx = g.rng.uniform_usize(frame.len());
+        frame[idx] ^= 1 << g.usize_in(0, 7);
+        match WireDoc::decode(&frame) {
+            Ok(_) | Err(Error::Wire(_)) => {}
+            Err(other) => panic!("byte flip at {idx} produced non-wire error {other}"),
+        }
+    });
+}
+
+#[test]
+fn kind_confusion_is_rejected() {
+    let task = TaskEnvelope {
+        task_id: 1,
+        group_id: 1,
+        request_ids: vec![],
+        plan: carrier_plan(),
+        mu: Measure::uniform(Mat::ones(2, 2)),
+        nu: Measure::uniform(Mat::ones(2, 2)),
+        pairs: vec![],
+        map: None,
+    };
+    let frame = task.encode();
+    assert!(matches!(
+        linear_sinkhorn::api::ResultEnvelope::decode(&frame),
+        Err(Error::Wire(_))
+    ));
+    let ping = WireDoc::with_kind("ping").encode();
+    assert!(matches!(TaskEnvelope::decode(&ping), Err(Error::Wire(_))));
+}
