@@ -78,6 +78,7 @@ bench-smoke:
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench simd_kernels
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench parallel_scaling
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench coordinator_throughput
+	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench anneal_iterations
 
 clean:
 	$(CARGO) clean

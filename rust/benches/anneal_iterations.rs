@@ -1,0 +1,146 @@
+//! Annealing iteration-count bench: direct vs annealed vs
+//! annealed+symmetric divergence solves at decreasing target eps.
+//!
+//! The EXPERIMENTS.md §Annealing anchor: per target eps the table
+//! records, for the three-solve divergence on the same clouds,
+//!   * `direct`   — one solve pinned at the target eps (the planner's
+//!     automatic domain choice, log-domain at tiny eps),
+//!   * `anneal`   — the geometric eps schedule with dual warm starts
+//!     between rungs, two-sided self solves, and
+//!   * `anneal+sym` — the schedule plus the one-dual symmetric fixed
+//!     point for the xx/yy self solves,
+//! along with total iteration counts (all rungs, all three solves), rung
+//! counts, wall clock, and the relative deviation of each annealed
+//! divergence from the direct one (they solve the *same* problem — the
+//! schedule only changes the path to the target rung).
+//!
+//! The acceptance bar is >= 3x total-iteration reduction for
+//! `anneal+sym` vs `direct` at eps = 1e-3 (n = 1e4, r = 128) with the
+//! divergences in tolerance-level agreement.
+//!
+//! Run: `cargo bench --bench anneal_iterations`
+//!
+//! Setting `BENCH_SMOKE=1` overrides every size knob with CI-scale values
+//! (the `bench-smoke` job's quick mode); setting `BENCH_JSON=<path>`
+//! additionally appends the table there in JSON-lines form (see
+//! `bench::Table::emit`).
+
+use linear_sinkhorn::bench::{fmt_secs, Table};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+
+/// One measured variant: plan + divergence, returning the report and the
+/// end-to-end wall clock (kernel construction included — annealing pays
+/// a per-rung rebuild, and that cost belongs in the table).
+fn run_variant(
+    mu: &Measure,
+    nu: &Measure,
+    eps: f64,
+    r: usize,
+    max_iters: usize,
+    seed: u64,
+    anneal: bool,
+    symmetric: bool,
+) -> Result<(DivergenceReport, f64)> {
+    let sw = Stopwatch::start();
+    let report = OtProblem::new(mu, nu)
+        .epsilon(eps)
+        .rank(r)
+        .max_iters(max_iters)
+        .seed(seed)
+        .anneal(anneal)
+        .symmetric_self_solves(symmetric)
+        .divergence()?;
+    Ok((report, sw.elapsed_secs()))
+}
+
+fn main() {
+    let args = ArgSpec::new(
+        "anneal_iterations",
+        "direct vs annealed vs annealed+symmetric iteration counts",
+    )
+    .opt("n", "10000", "samples per cloud")
+    .opt("features", "128", "positive random features r")
+    .opt("eps", "0.1,0.01,0.001", "target eps values to sweep")
+    .opt("max-iters", "20000", "iteration cap per solve")
+    .opt("seed", "0", "RNG seed")
+    .opt("csv", "target/anneal_iterations.csv", "csv output")
+    .parse();
+
+    // CI quick mode: small clouds, moderate eps — enough to smoke every
+    // annealed path and record an iteration-count trajectory point.
+    let smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (n, r, eps_list, max_iters) = if smoke {
+        println!("(BENCH_SMOKE: reduced sizes)");
+        (600, 48, vec![0.1, 0.02], 4000)
+    } else {
+        (
+            args.get_usize("n"),
+            args.get_usize("features"),
+            args.get_f64_list("eps"),
+            args.get_usize("max-iters"),
+        )
+    };
+    let seed = args.get_u64("seed");
+    let mut rng = Rng::seed_from(seed);
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+
+    let mut t = Table::new(
+        "Annealing iteration counts (three-solve divergence, r fixed)",
+        &[
+            "eps", "variant", "iters", "rungs", "time", "divergence", "vs direct",
+            "iter reduction",
+        ],
+    );
+
+    for &eps in &eps_list {
+        let direct = match run_variant(&mu, &nu, eps, r, max_iters, seed, false, false) {
+            Ok(d) => d,
+            Err(e) => {
+                println!("eps {eps}: direct solve failed: {e}");
+                continue;
+            }
+        };
+        let direct_iters = direct.0.total_iterations();
+        t.row(vec![
+            format!("{eps}"),
+            "direct".into(),
+            direct_iters.to_string(),
+            "1".into(),
+            fmt_secs(direct.1),
+            format!("{:.6}", direct.0.divergence),
+            "-".into(),
+            "1.00x".into(),
+        ]);
+        for (label, symmetric) in [("anneal", false), ("anneal+sym", true)] {
+            match run_variant(&mu, &nu, eps, r, max_iters, seed, true, symmetric) {
+                Ok((rep, secs)) => {
+                    let iters = rep.total_iterations();
+                    let scale = direct.0.divergence.abs().max(1e-9);
+                    t.row(vec![
+                        format!("{eps}"),
+                        label.into(),
+                        iters.to_string(),
+                        rep.xy.rung_iterations.len().to_string(),
+                        fmt_secs(secs),
+                        format!("{:.6}", rep.divergence),
+                        format!(
+                            "{:.2e}",
+                            (rep.divergence - direct.0.divergence).abs() / scale
+                        ),
+                        format!("{:.2}x", direct_iters as f64 / iters.max(1) as f64),
+                    ]);
+                }
+                Err(e) => println!("eps {eps}: {label} failed: {e}"),
+            }
+        }
+    }
+
+    t.emit(Some(args.get_str("csv")));
+    println!(
+        "\nacceptance bar: anneal+sym iter reduction >= 3x vs direct at eps=1e-3 \
+         (n=10000, r=128) with `vs direct` at tolerance level \
+         (EXPERIMENTS.md §Annealing)"
+    );
+}

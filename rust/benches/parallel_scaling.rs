@@ -141,6 +141,9 @@ fn main() {
             threads: 1,
             stabilize: false,
             max_batch: 1,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         };
         let k_xy = FactoredKernel::from_measures(&map, &mu, &nu);
         let k_xx = FactoredKernel::from_measures(&map, &mu, &mu);

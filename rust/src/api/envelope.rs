@@ -261,6 +261,17 @@ impl ResultEnvelope {
             doc.push_f32(&format!("p{i}.xx.v"), &rep.xx.v).expect("unique result column");
             doc.push_f32(&format!("p{i}.yy.u"), &rep.yy.u).expect("unique result column");
             doc.push_f32(&format!("p{i}.yy.v"), &rep.yy.v).expect("unique result column");
+            // Annealed solves carry their per-rung iteration counts as an
+            // optional column per solve; direct solves (empty vec) push
+            // nothing, keeping pre-annealing frames byte-compatible.
+            for (role, sol) in [("xy", &rep.xy), ("xx", &rep.xx), ("yy", &rep.yy)] {
+                if !sol.rung_iterations.is_empty() {
+                    let rungs: Vec<f64> =
+                        sol.rung_iterations.iter().map(|&x| x as f64).collect();
+                    doc.push_f64(&format!("p{i}.{role}.rungs"), &rungs)
+                        .expect("unique result column");
+                }
+            }
         }
         doc.encode()
     }
@@ -302,11 +313,19 @@ impl ResultEnvelope {
                     scalars.len()
                 )));
             }
-            let sol = |slot: usize, u: Vec<f32>, v: Vec<f32>| -> Solution {
-                Solution {
+            let sol = |slot: usize, role: &str| -> Result<Solution> {
+                // Absent rungs column = direct solve (pre-annealing frames
+                // included), decoding to the same empty vec it encoded.
+                let rungs_col = format!("p{i}.{role}.rungs");
+                let rung_iterations = if doc.has_col(&rungs_col) {
+                    doc.f64s(&rungs_col)?.iter().map(|&x| x as usize).collect()
+                } else {
+                    Vec::new()
+                };
+                Ok(Solution {
                     objective: scalars[slot],
-                    u,
-                    v,
+                    u: doc.f32s(&format!("p{i}.{role}.u"))?.to_vec(),
+                    v: doc.f32s(&format!("p{i}.{role}.v"))?.to_vec(),
                     iterations: scalars[6 + slot] as usize,
                     marginal_error: scalars[3 + slot],
                     converged: scalars[9 + slot] != 0.0,
@@ -316,23 +335,12 @@ impl ResultEnvelope {
                     grad_norm: None,
                     wall_us: scalars[15 + slot] as u64,
                     simd_arm: arm,
-                }
+                    rung_iterations,
+                })
             };
-            let xy = sol(
-                0,
-                doc.f32s(&format!("p{i}.xy.u"))?.to_vec(),
-                doc.f32s(&format!("p{i}.xy.v"))?.to_vec(),
-            );
-            let xx = sol(
-                1,
-                doc.f32s(&format!("p{i}.xx.u"))?.to_vec(),
-                doc.f32s(&format!("p{i}.xx.v"))?.to_vec(),
-            );
-            let yy = sol(
-                2,
-                doc.f32s(&format!("p{i}.yy.u"))?.to_vec(),
-                doc.f32s(&format!("p{i}.yy.v"))?.to_vec(),
-            );
+            let xy = sol(0, "xy")?;
+            let xx = sol(1, "xx")?;
+            let yy = sol(2, "yy")?;
             // `assemble` recomputes the divergence from the shipped f64
             // objectives — the identical arithmetic the worker ran, hence
             // the identical bits.
@@ -439,5 +447,28 @@ mod tests {
                 other => panic!("slot mismatch: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn result_round_trips_annealed_rung_counts() {
+        // Annealed reports ship optional per-rung columns; direct
+        // reports ship none — both decode to exactly what was encoded.
+        let mut rng = Rng::seed_from(9);
+        let (mu, nu) = data::gaussian_blobs(12, &mut rng);
+        let problem = OtProblem::new(&mu, &nu).epsilon(0.3).rank(8).seed(7).anneal(true);
+        let plan = problem.plan().unwrap();
+        let report = problem.divergence_planned(&plan).unwrap();
+        assert!(report.xy.rung_iterations.len() > 1, "annealed solve has rungs");
+        let env = ResultEnvelope::new(1, 1, vec![Ok(report)]);
+        let back = ResultEnvelope::decode(&env.encode()).unwrap();
+        let (a, b) = match (&back.results[0], &env.results[0]) {
+            (Ok(a), Ok(b)) => (a, b),
+            other => panic!("slot mismatch: {other:?}"),
+        };
+        assert_eq!(a.xy.rung_iterations, b.xy.rung_iterations);
+        assert_eq!(a.xx.rung_iterations, b.xx.rung_iterations);
+        assert_eq!(a.yy.rung_iterations, b.yy.rung_iterations);
+        assert_eq!(a.total_iterations(), b.total_iterations());
+        assert_eq!(a.divergence.to_bits(), b.divergence.to_bits());
     }
 }

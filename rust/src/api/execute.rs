@@ -35,14 +35,20 @@ use crate::kernels::{DenseKernel, FactoredKernel, KernelOp, NystromKernel};
 use crate::metrics::Stopwatch;
 use crate::rng::Rng;
 use crate::runtime::pool::Pool;
+use crate::config::SinkhornConfig;
 use crate::sinkhorn::{
-    sinkhorn, sinkhorn_accelerated, sinkhorn_log_domain, sinkhorn_stabilized,
-    solve_batch_log_domain, solve_batch_stabilized, SinkhornSolution,
+    sinkhorn, sinkhorn_accelerated, sinkhorn_log_domain, sinkhorn_log_domain_warm,
+    sinkhorn_stabilized, sinkhorn_stabilized_warm, sinkhorn_symmetric,
+    sinkhorn_symmetric_log, sinkhorn_symmetric_log_warm, sinkhorn_symmetric_stabilized,
+    sinkhorn_symmetric_stabilized_warm, sinkhorn_symmetric_warm, sinkhorn_warm,
+    solve_batch_log_domain, solve_batch_log_domain_warm, solve_batch_stabilized,
+    solve_batch_stabilized_warm, EpsSchedule, SinkhornSolution, WarmSolve,
 };
 
 use super::plan::{Backend, Domain, Plan};
 use super::problem::{OtProblem, Source};
 use super::solution::{DivergenceReport, Solution};
+use super::UNDERFLOW_LOG_SPREAD;
 
 fn us(sw: &Stopwatch) -> u64 {
     (sw.elapsed_secs() * 1e6) as u64
@@ -106,6 +112,9 @@ impl<'a> OtProblem<'a> {
         }
         let (a, b) = pairs[0];
         let solver_pool = self.resolve_solver_pool(plan);
+        if let Some(sch) = annealed_schedule(plan)? {
+            return self.run_single_annealed(plan, &sch, a, b, &solver_pool);
+        }
         match self.build_kernel(plan, &solver_pool)? {
             BuiltKernel::Dense(k) => self.run_single(plan, &k, a, b),
             BuiltKernel::Factored(k) => self.run_single(plan, &k, a, b),
@@ -134,6 +143,11 @@ impl<'a> OtProblem<'a> {
             Err(e) => return err_per_pair(self.pairs.len(), e),
         };
         let solver_pool = self.resolve_solver_pool(plan);
+        match annealed_schedule(plan) {
+            Ok(Some(sch)) => return self.run_batch_annealed(plan, &sch, &pairs, &solver_pool),
+            Ok(None) => {}
+            Err(e) => return err_per_pair(pairs.len(), e),
+        }
         let kernel = match self.build_kernel(plan, &solver_pool) {
             Ok(k) => k,
             Err(e) => return err_per_pair(pairs.len(), e),
@@ -173,6 +187,9 @@ impl<'a> OtProblem<'a> {
         }
         let (a, b) = pairs[0];
         let sw = Stopwatch::start();
+        if let Some(sch) = annealed_schedule(plan)? {
+            return self.run_divergence_annealed(plan, &sch, a, b, &sw);
+        }
         self.with_divergence_kernels(plan, |k_xy, k_xx, k_yy| {
             self.run_divergence(plan, k_xy, k_xx, k_yy, a, b, &sw)
         })
@@ -210,6 +227,16 @@ impl<'a> OtProblem<'a> {
             );
         }
         let sw = Stopwatch::start();
+        match annealed_schedule(plan) {
+            Ok(Some(sch)) => {
+                return match self.run_divergence_batch_annealed(plan, &sch, &pairs, &sw) {
+                    Ok(v) => v,
+                    Err(e) => err_per_pair(pairs.len(), e),
+                }
+            }
+            Ok(None) => {}
+            Err(e) => return err_per_pair(pairs.len(), e),
+        }
         match self.with_divergence_kernels(plan, |k_xy, k_xx, k_yy| {
             Ok(self.run_divergence_batch(plan, k_xy, k_xx, k_yy, &pairs, &sw))
         }) {
@@ -319,12 +346,74 @@ impl<'a> OtProblem<'a> {
         }
     }
 
+    /// [`Self::build_kernel`] at a specific annealing rung. The target
+    /// rung (`target = true`, eps = `plan.epsilon`) resolves exactly as a
+    /// direct solve — prebuilt map, shared cache, recorded cache key.
+    /// Intermediate rungs are scaffolding at a *different* eps: they
+    /// bypass the problem's map and cache (both are fitted at the target
+    /// eps) and draw a fresh seeded map, so the rung kernel is exactly
+    /// `GaussianFeatureMap::fit(mu, nu, rung_eps, r, Rng::seed_from(seed))`
+    /// on every host that executes the plan.
+    fn build_kernel_at(
+        &self,
+        plan: &Plan,
+        solver_pool: &Pool,
+        eps: f64,
+        target: bool,
+    ) -> Result<BuiltKernel> {
+        if target {
+            return self.build_kernel(plan, solver_pool);
+        }
+        let (mu, nu) = self.measures().map_err(|_| {
+            Error::Config(
+                "annealed plans rebuild the kernel per rung and need point-cloud \
+                 measures; prebuilt factors are fixed at one eps"
+                    .into(),
+            )
+        })?;
+        match plan.backend {
+            Backend::Dense => Ok(BuiltKernel::Dense(DenseKernel::from_measures(mu, nu, eps))),
+            Backend::Nystrom { .. } => Err(Error::Config(
+                "annealed plans do not support the nystrom backend (no log-domain view \
+                 to land the target rung in)"
+                    .into(),
+            )),
+            Backend::Factored { rank } => {
+                let mut rng = Rng::seed_from(plan.seed);
+                let map = GaussianFeatureMap::fit(mu, nu, eps, rank, &mut rng);
+                Ok(BuiltKernel::Factored(self.factored_from_measures(
+                    plan,
+                    &map,
+                    mu,
+                    nu,
+                    solver_pool.clone(),
+                )))
+            }
+        }
+    }
+
     /// Build the divergence kernel triple (xy, xx, yy) and hand it to
     /// `f`. One feature map serves all three — the same sharing the
     /// legacy CLI and coordinator worker hand-wired.
     fn with_divergence_kernels<T>(
         &self,
         plan: &Plan,
+        f: impl FnOnce(
+            &(dyn KernelOp + Sync),
+            &(dyn KernelOp + Sync),
+            &(dyn KernelOp + Sync),
+        ) -> Result<T>,
+    ) -> Result<T> {
+        self.with_divergence_kernels_at(plan, plan.epsilon, true, f)
+    }
+
+    /// [`Self::with_divergence_kernels`] at a specific annealing rung;
+    /// see [`Self::build_kernel_at`] for the target/intermediate split.
+    fn with_divergence_kernels_at<T>(
+        &self,
+        plan: &Plan,
+        eps: f64,
+        target: bool,
         f: impl FnOnce(
             &(dyn KernelOp + Sync),
             &(dyn KernelOp + Sync),
@@ -340,13 +429,20 @@ impl<'a> OtProblem<'a> {
             )),
             Backend::Dense => {
                 let (mu, nu) = self.measures()?;
-                let k_xy = DenseKernel::from_measures(mu, nu, plan.epsilon);
-                let k_xx = DenseKernel::from_measures(mu, mu, plan.epsilon);
-                let k_yy = DenseKernel::from_measures(nu, nu, plan.epsilon);
+                let k_xy = DenseKernel::from_measures(mu, nu, eps);
+                let k_xx = DenseKernel::from_measures(mu, mu, eps);
+                let k_yy = DenseKernel::from_measures(nu, nu, eps);
                 f(&k_xy, &k_xx, &k_yy)
             }
             Backend::Factored { rank } => match self.source {
                 Source::Factors { phi_x, phi_y } => {
+                    if !target {
+                        return Err(Error::Config(
+                            "annealed plans rebuild the kernel per rung and need \
+                             point-cloud measures; prebuilt factors are fixed at one eps"
+                                .into(),
+                        ));
+                    }
                     let k_xy = FactoredKernel::from_factors(phi_x.clone(), phi_y.clone())
                         .with_pool(solver_pool.clone());
                     let k_xx = FactoredKernel::from_factors(phi_x.clone(), phi_x.clone())
@@ -356,11 +452,21 @@ impl<'a> OtProblem<'a> {
                     f(&k_xy, &k_xx, &k_yy)
                 }
                 Source::Measures { mu, nu } => {
-                    let key = plan
-                        .cache_key
-                        .unwrap_or_else(|| FeatureKey::new(mu.dim(), plan.epsilon, rank));
-                    let map = self.resolve_map(plan, key)?;
-                    let m = map.get();
+                    // One map serves all three kernels of the rung; the
+                    // intermediate-rung fit is the same seeded draw on
+                    // every host (see `build_kernel_at`).
+                    let (map, fresh);
+                    let m: &GaussianFeatureMap = if target {
+                        let key = plan
+                            .cache_key
+                            .unwrap_or_else(|| FeatureKey::new(mu.dim(), plan.epsilon, rank));
+                        map = self.resolve_map(plan, key)?;
+                        map.get()
+                    } else {
+                        let mut rng = Rng::seed_from(plan.seed);
+                        fresh = GaussianFeatureMap::fit(mu, nu, eps, rank, &mut rng);
+                        &fresh
+                    };
                     let k_xy =
                         self.factored_from_measures(plan, m, mu, nu, solver_pool.clone());
                     let k_xx =
@@ -472,10 +578,31 @@ impl<'a> OtProblem<'a> {
                 }
             }
         };
+        // The self solves take the one-dual symmetric fixed point when
+        // the plan asks for it, same domain routing as above.
+        let solve_self = |k: &K, w: &[f32]| -> Result<Solution> {
+            if !plan.symmetric_self_solves {
+                return solve_one(k, w, w);
+            }
+            let sw = Stopwatch::start();
+            match plan.domain {
+                Domain::Plain => sinkhorn_symmetric(k, w, &cfg)
+                    .map(|s| Solution::from_sinkhorn(s, false, us(&sw))),
+                Domain::AutoEscalate => sinkhorn_symmetric_stabilized(k, w, &cfg)
+                    .map(|(s, esc)| Solution::from_sinkhorn(s, esc, us(&sw))),
+                Domain::LogDomain => {
+                    let log = k.as_log_kernel().ok_or_else(|| {
+                        Error::Config(format!("kernel {} has no log-domain view", k.label()))
+                    })?;
+                    sinkhorn_symmetric_log(log, w, &cfg)
+                        .map(|s| Solution::from_sinkhorn(s, false, us(&sw)))
+                }
+            }
+        };
         let (r_xy, r_xx, r_yy) = solve_pool.join3(
             || solve_one(k_xy, a, b),
-            || solve_one(k_xx, a, a),
-            || solve_one(k_yy, b, b),
+            || solve_self(k_xx, a),
+            || solve_self(k_yy, b),
         );
         // Error priority matches the legacy path: xy, then xx, then yy.
         Ok(DivergenceReport::assemble(r_xy?, r_xx?, r_yy?, us(sw)))
@@ -502,10 +629,32 @@ impl<'a> OtProblem<'a> {
             }
             out
         };
+        // Symmetric self solves have no fused batch form (one dual per
+        // pair already halves the state); they run pair-at-a-time.
+        let run_self = |k: &K, prs: &[(&[f32], &[f32])]| -> Vec<Result<(SinkhornSolution, bool)>> {
+            if !plan.symmetric_self_solves {
+                return run(k, prs);
+            }
+            prs.iter()
+                .map(|&(w, _)| match plan.domain {
+                    Domain::Plain => sinkhorn_symmetric(k, w, &cfg).map(|s| (s, false)),
+                    Domain::AutoEscalate => sinkhorn_symmetric_stabilized(k, w, &cfg),
+                    Domain::LogDomain => {
+                        let log = k.as_log_kernel().ok_or_else(|| {
+                            Error::Config(format!(
+                                "kernel {} has no log-domain view",
+                                k.label()
+                            ))
+                        })?;
+                        sinkhorn_symmetric_log(log, w, &cfg).map(|s| (s, false))
+                    }
+                })
+                .collect()
+        };
         let (r_xy, r_xx, r_yy) = solve_pool.join3(
             || run(k_xy, pairs),
-            || run(k_xx, &xx_pairs),
-            || run(k_yy, &yy_pairs),
+            || run_self(k_xx, &xx_pairs),
+            || run_self(k_yy, &yy_pairs),
         );
         let wall = us(sw);
         r_xy.into_iter()
@@ -523,6 +672,263 @@ impl<'a> OtProblem<'a> {
                 ))
             })
             .collect()
+    }
+
+    // ----------------------------------------------------------------
+    // Annealed execution: the eps-schedule rung loop. Each rung rebuilds
+    // the kernel at its eps (eps is baked into kernels at construction)
+    // and warm-starts the solve from the previous rung's f64 dual.
+    // ----------------------------------------------------------------
+
+    fn run_single_annealed(
+        &self,
+        plan: &Plan,
+        sch: &crate::sinkhorn::EpsSchedule,
+        a: &[f32],
+        b: &[f32],
+        solver_pool: &Pool,
+    ) -> Result<Solution> {
+        let sw = Stopwatch::start();
+        let rungs = sch.rungs(plan.epsilon);
+        let mut warm: Option<Vec<f64>> = None;
+        let mut rung_iters = Vec::with_capacity(rungs.len());
+        let mut last: Option<(SinkhornSolution, bool)> = None;
+        for (i, &eps) in rungs.iter().enumerate() {
+            let target = i + 1 == rungs.len();
+            let ws = match self.build_kernel_at(plan, solver_pool, eps, target)? {
+                BuiltKernel::Dense(k) => solve_rung(&k, a, b, plan, eps, warm.as_deref())?,
+                BuiltKernel::Factored(k) => solve_rung(&k, a, b, plan, eps, warm.as_deref())?,
+                BuiltKernel::Nystrom(k) => solve_rung(&k, a, b, plan, eps, warm.as_deref())?,
+            };
+            rung_iters.push(ws.solution.iterations);
+            let WarmSolve { solution, escalated, alpha } = ws;
+            warm = Some(alpha);
+            last = Some((solution, escalated));
+        }
+        let (solution, escalated) = last.expect("a schedule always has >= 1 rung");
+        let mut sol = Solution::from_sinkhorn(solution, escalated, us(&sw));
+        sol.rung_iterations = rung_iters;
+        Ok(sol)
+    }
+
+    fn run_batch_annealed(
+        &self,
+        plan: &Plan,
+        sch: &crate::sinkhorn::EpsSchedule,
+        pairs: &[(&[f32], &[f32])],
+        solver_pool: &Pool,
+    ) -> Vec<Result<Solution>> {
+        let sw = Stopwatch::start();
+        let rungs = sch.rungs(plan.epsilon);
+        let width = plan.batch_width.max(1);
+        let mut out: Vec<Option<Result<Solution>>> = (0..pairs.len()).map(|_| None).collect();
+        let mut rung_iters: Vec<Vec<usize>> =
+            vec![Vec::with_capacity(rungs.len()); pairs.len()];
+        // Pairs whose every rung so far succeeded, with their warm duals;
+        // a pair failing a rung takes its error and leaves the chain
+        // without poisoning its batch-mates.
+        let mut alive: Vec<usize> = (0..pairs.len()).collect();
+        let mut warms: Vec<Vec<f64>> = Vec::new();
+        for (i, &eps) in rungs.iter().enumerate() {
+            if alive.is_empty() {
+                break;
+            }
+            let target = i + 1 == rungs.len();
+            let kernel = match self.build_kernel_at(plan, solver_pool, eps, target) {
+                Ok(k) => k,
+                Err(e) => {
+                    let msg = match e {
+                        Error::Config(m) => m,
+                        other => other.to_string(),
+                    };
+                    for &p in &alive {
+                        out[p] = Some(Err(Error::Config(msg.clone())));
+                    }
+                    alive.clear();
+                    break;
+                }
+            };
+            let sub: Vec<(&[f32], &[f32])> = alive.iter().map(|&p| pairs[p]).collect();
+            let warm_opt = if i == 0 { None } else { Some(&warms[..]) };
+            let results = match &kernel {
+                BuiltKernel::Dense(k) => batch_rung(k, &sub, plan, eps, warm_opt, width),
+                BuiltKernel::Factored(k) => batch_rung(k, &sub, plan, eps, warm_opt, width),
+                BuiltKernel::Nystrom(k) => batch_rung(k, &sub, plan, eps, warm_opt, width),
+            };
+            let mut next_alive = Vec::with_capacity(alive.len());
+            let mut next_warms = Vec::with_capacity(alive.len());
+            for (j, r) in results.into_iter().enumerate() {
+                let p = alive[j];
+                match r {
+                    Ok(ws) => {
+                        rung_iters[p].push(ws.solution.iterations);
+                        if target {
+                            let mut sol =
+                                Solution::from_sinkhorn(ws.solution, ws.escalated, us(&sw));
+                            sol.rung_iterations = std::mem::take(&mut rung_iters[p]);
+                            out[p] = Some(Ok(sol));
+                        } else {
+                            next_alive.push(p);
+                            next_warms.push(ws.alpha);
+                        }
+                    }
+                    Err(e) => out[p] = Some(Err(e)),
+                }
+            }
+            alive = next_alive;
+            warms = next_warms;
+        }
+        out.into_iter()
+            .map(|o| o.expect("every pair ends resolved or errored"))
+            .collect()
+    }
+
+    fn run_divergence_annealed(
+        &self,
+        plan: &Plan,
+        sch: &crate::sinkhorn::EpsSchedule,
+        a: &[f32],
+        b: &[f32],
+        sw: &Stopwatch,
+    ) -> Result<DivergenceReport> {
+        let rungs = sch.rungs(plan.epsilon);
+        let solve_pool = self.resolve_solve_pool(plan);
+        let mut w_xy: Option<Vec<f64>> = None;
+        let mut w_xx: Option<Vec<f64>> = None;
+        let mut w_yy: Option<Vec<f64>> = None;
+        let mut it_xy = Vec::with_capacity(rungs.len());
+        let mut it_xx = Vec::with_capacity(rungs.len());
+        let mut it_yy = Vec::with_capacity(rungs.len());
+        let mut fin: Option<(WarmSolve, WarmSolve, WarmSolve)> = None;
+        for (i, &eps) in rungs.iter().enumerate() {
+            let target = i + 1 == rungs.len();
+            let (r_xy, r_xx, r_yy) =
+                self.with_divergence_kernels_at(plan, eps, target, |k_xy, k_xx, k_yy| {
+                    Ok(solve_pool.join3(
+                        || solve_rung(k_xy, a, b, plan, eps, w_xy.as_deref()),
+                        || solve_self_rung(k_xx, a, plan, eps, w_xx.as_deref()),
+                        || solve_self_rung(k_yy, b, plan, eps, w_yy.as_deref()),
+                    ))
+                })?;
+            // Error priority matches the legacy path: xy, then xx, then yy.
+            let (ws_xy, ws_xx, ws_yy) = (r_xy?, r_xx?, r_yy?);
+            it_xy.push(ws_xy.solution.iterations);
+            it_xx.push(ws_xx.solution.iterations);
+            it_yy.push(ws_yy.solution.iterations);
+            if target {
+                fin = Some((ws_xy, ws_xx, ws_yy));
+            } else {
+                w_xy = Some(ws_xy.alpha);
+                w_xx = Some(ws_xx.alpha);
+                w_yy = Some(ws_yy.alpha);
+            }
+        }
+        let (ws_xy, ws_xx, ws_yy) = fin.expect("a schedule always has >= 1 rung");
+        let wall = us(sw);
+        let mut s_xy = Solution::from_sinkhorn(ws_xy.solution, ws_xy.escalated, wall);
+        let mut s_xx = Solution::from_sinkhorn(ws_xx.solution, ws_xx.escalated, wall);
+        let mut s_yy = Solution::from_sinkhorn(ws_yy.solution, ws_yy.escalated, wall);
+        s_xy.rung_iterations = it_xy;
+        s_xx.rung_iterations = it_xx;
+        s_yy.rung_iterations = it_yy;
+        Ok(DivergenceReport::assemble(s_xy, s_xx, s_yy, wall))
+    }
+
+    fn run_divergence_batch_annealed(
+        &self,
+        plan: &Plan,
+        sch: &crate::sinkhorn::EpsSchedule,
+        pairs: &[(&[f32], &[f32])],
+        sw: &Stopwatch,
+    ) -> Result<Vec<Result<DivergenceReport>>> {
+        let rungs = sch.rungs(plan.epsilon);
+        let width = plan.batch_width.max(1);
+        let solve_pool = self.resolve_solve_pool(plan);
+        let mut out: Vec<Option<Result<DivergenceReport>>> =
+            (0..pairs.len()).map(|_| None).collect();
+        let mut iters: Vec<[Vec<usize>; 3]> = (0..pairs.len())
+            .map(|_| [Vec::new(), Vec::new(), Vec::new()])
+            .collect();
+        let mut alive: Vec<usize> = (0..pairs.len()).collect();
+        // Per-role warm duals, aligned with `alive`.
+        let mut warms: [Vec<Vec<f64>>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for (i, &eps) in rungs.iter().enumerate() {
+            if alive.is_empty() {
+                break;
+            }
+            let target = i + 1 == rungs.len();
+            let xy_pairs: Vec<(&[f32], &[f32])> =
+                alive.iter().map(|&p| pairs[p]).collect();
+            let xx_pairs: Vec<(&[f32], &[f32])> =
+                alive.iter().map(|&p| (pairs[p].0, pairs[p].0)).collect();
+            let yy_pairs: Vec<(&[f32], &[f32])> =
+                alive.iter().map(|&p| (pairs[p].1, pairs[p].1)).collect();
+            let (w_xy, w_xx, w_yy) = if i == 0 {
+                (None, None, None)
+            } else {
+                (Some(&warms[0][..]), Some(&warms[1][..]), Some(&warms[2][..]))
+            };
+            let (r_xy, r_xx, r_yy) =
+                self.with_divergence_kernels_at(plan, eps, target, |k_xy, k_xx, k_yy| {
+                    Ok(solve_pool.join3(
+                        || batch_rung(k_xy, &xy_pairs, plan, eps, w_xy, width),
+                        || batch_self_rung(k_xx, &xx_pairs, plan, eps, w_xx, width),
+                        || batch_self_rung(k_yy, &yy_pairs, plan, eps, w_yy, width),
+                    ))
+                })?;
+            let mut next_alive = Vec::with_capacity(alive.len());
+            let mut next_warms: [Vec<Vec<f64>>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+            for (j, ((xy, xx), yy)) in
+                r_xy.into_iter().zip(r_xx).zip(r_yy).enumerate()
+            {
+                let p = alive[j];
+                // Error priority: xy, then xx, then yy.
+                let trio = (|| Ok::<_, Error>((xy?, xx?, yy?)))();
+                match trio {
+                    Ok((ws_xy, ws_xx, ws_yy)) => {
+                        iters[p][0].push(ws_xy.solution.iterations);
+                        iters[p][1].push(ws_xx.solution.iterations);
+                        iters[p][2].push(ws_yy.solution.iterations);
+                        if target {
+                            let wall = us(sw);
+                            let mut s_xy = Solution::from_sinkhorn(
+                                ws_xy.solution,
+                                ws_xy.escalated,
+                                wall,
+                            );
+                            let mut s_xx = Solution::from_sinkhorn(
+                                ws_xx.solution,
+                                ws_xx.escalated,
+                                wall,
+                            );
+                            let mut s_yy = Solution::from_sinkhorn(
+                                ws_yy.solution,
+                                ws_yy.escalated,
+                                wall,
+                            );
+                            let [i_xy, i_xx, i_yy] = std::mem::take(&mut iters[p]);
+                            s_xy.rung_iterations = i_xy;
+                            s_xx.rung_iterations = i_xx;
+                            s_yy.rung_iterations = i_yy;
+                            out[p] =
+                                Some(Ok(DivergenceReport::assemble(s_xy, s_xx, s_yy, wall)));
+                        } else {
+                            next_alive.push(p);
+                            next_warms[0].push(ws_xy.alpha);
+                            next_warms[1].push(ws_xx.alpha);
+                            next_warms[2].push(ws_yy.alpha);
+                        }
+                    }
+                    Err(e) => out[p] = Some(Err(e)),
+                }
+            }
+            alive = next_alive;
+            warms = next_warms;
+        }
+        Ok(out
+            .into_iter()
+            .map(|o| o.expect("every pair ends resolved or errored"))
+            .collect())
     }
 }
 
@@ -555,6 +961,170 @@ fn batch_by_domain<K: KernelOp + ?Sized>(
                 .collect(),
         },
     }
+}
+
+/// The plan's annealing schedule, if any, validated against the backend.
+/// Plans built by [`OtProblem::plan`] never pair a schedule with an
+/// incompatible backend, but deserialized plans are arbitrary documents.
+fn annealed_schedule(plan: &Plan) -> Result<Option<EpsSchedule>> {
+    match plan.schedule {
+        None => Ok(None),
+        Some(_) if plan.accelerated => Err(Error::Config(
+            "plan pairs an eps schedule with the accelerated solver; \
+             accelerated plans do not anneal"
+                .into(),
+        )),
+        Some(sch) => Ok(Some(sch)),
+    }
+}
+
+/// The solve domain for one annealing rung. Early (large-eps) rungs of
+/// an `AutoEscalate` plan run plain — that is the entire point of
+/// annealing — but once the *remaining* eps drop from the schedule start
+/// would overflow `exp`, plain arithmetic is hopeless and the rung goes
+/// straight to the log domain instead of burning a failed plain pass.
+/// Pure plan-data arithmetic, so every host picks the same domain.
+fn rung_domain(plan: &Plan, eps: f64) -> Domain {
+    let hopeless = match plan.schedule {
+        Some(sch) => sch.eps_start / (4.0 * eps) >= UNDERFLOW_LOG_SPREAD,
+        None => false,
+    };
+    match plan.domain {
+        Domain::Plain => Domain::Plain,
+        Domain::LogDomain => Domain::LogDomain,
+        Domain::AutoEscalate => {
+            if hopeless {
+                Domain::LogDomain
+            } else {
+                Domain::AutoEscalate
+            }
+        }
+    }
+}
+
+/// The per-rung solver config: the plan's config with the rung's eps
+/// patched in and stabilisation tied to the rung's domain.
+fn rung_config(plan: &Plan, eps: f64, domain: Domain) -> SinkhornConfig {
+    SinkhornConfig {
+        epsilon: eps,
+        stabilize: domain == Domain::AutoEscalate,
+        ..plan.sinkhorn_config()
+    }
+}
+
+/// One two-sided rung solve, routed by the rung's domain.
+fn solve_rung<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    b: &[f32],
+    plan: &Plan,
+    eps: f64,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
+    let domain = rung_domain(plan, eps);
+    let cfg = rung_config(plan, eps, domain);
+    match domain {
+        Domain::Plain => sinkhorn_warm(kernel, a, b, &cfg, warm),
+        Domain::AutoEscalate => sinkhorn_stabilized_warm(kernel, a, b, &cfg, warm),
+        Domain::LogDomain => match kernel.as_log_kernel() {
+            Some(log) => sinkhorn_log_domain_warm(log, a, b, &cfg, warm),
+            None => Err(Error::Config(format!(
+                "kernel {} has no log-domain view",
+                kernel.label()
+            ))),
+        },
+    }
+}
+
+/// One self-solve rung W(w, w): the symmetric fixed point when the plan
+/// asks for it, the plain two-sided solve otherwise.
+fn solve_self_rung<K: KernelOp + ?Sized>(
+    kernel: &K,
+    w: &[f32],
+    plan: &Plan,
+    eps: f64,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
+    if !plan.symmetric_self_solves {
+        return solve_rung(kernel, w, w, plan, eps, warm);
+    }
+    let domain = rung_domain(plan, eps);
+    let cfg = rung_config(plan, eps, domain);
+    match domain {
+        Domain::Plain => sinkhorn_symmetric_warm(kernel, w, &cfg, warm),
+        Domain::AutoEscalate => sinkhorn_symmetric_stabilized_warm(kernel, w, &cfg, warm),
+        Domain::LogDomain => match kernel.as_log_kernel() {
+            Some(log) => sinkhorn_symmetric_log_warm(log, w, &cfg, warm),
+            None => Err(Error::Config(format!(
+                "kernel {} has no log-domain view",
+                kernel.label()
+            ))),
+        },
+    }
+}
+
+/// One batched rung over `pairs`, chunked by `width` exactly like the
+/// direct batched path, with per-pair warm duals index-aligned to
+/// `pairs`. `Plain` and `AutoEscalate` share the stabilized batch core
+/// (gated by `cfg.stabilize`, so a `Plain` rung never escalates),
+/// mirroring [`batch_by_domain`].
+fn batch_rung<K: KernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    plan: &Plan,
+    eps: f64,
+    warms: Option<&[Vec<f64>]>,
+    width: usize,
+) -> Vec<Result<WarmSolve>> {
+    let domain = rung_domain(plan, eps);
+    let cfg = rung_config(plan, eps, domain);
+    let mut out = Vec::with_capacity(pairs.len());
+    for (ci, chunk) in pairs.chunks(width).enumerate() {
+        let warm_chunk = warms.map(|w| &w[ci * width..ci * width + chunk.len()]);
+        let results = match domain {
+            Domain::Plain | Domain::AutoEscalate => {
+                solve_batch_stabilized_warm(kernel, chunk, &cfg, warm_chunk)
+            }
+            Domain::LogDomain => match kernel.as_log_kernel() {
+                Some(log) => solve_batch_log_domain_warm(log, chunk, &cfg, warm_chunk),
+                None => chunk
+                    .iter()
+                    .map(|_| {
+                        Err(Error::Config(format!(
+                            "kernel {} has no log-domain view",
+                            kernel.label()
+                        )))
+                    })
+                    .collect(),
+            },
+        };
+        out.extend(results);
+    }
+    out
+}
+
+/// One batched self-solve rung over `(w, w)` pairs. Symmetric solves
+/// have no batched core (one dual vector per pair is already the cheap
+/// path), so they run sequentially per pair; the two-sided fallback
+/// reuses [`batch_rung`].
+fn batch_self_rung<K: KernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    plan: &Plan,
+    eps: f64,
+    warms: Option<&[Vec<f64>]>,
+    width: usize,
+) -> Vec<Result<WarmSolve>> {
+    if !plan.symmetric_self_solves {
+        return batch_rung(kernel, pairs, plan, eps, warms, width);
+    }
+    pairs
+        .iter()
+        .enumerate()
+        .map(|(j, &(w, _))| {
+            solve_self_rung(kernel, w, plan, eps, warms.map(|x| &x[j][..]))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -663,5 +1233,137 @@ mod tests {
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 2);
         assert_eq!(metrics.counter("service.feature_cache.hits").get(), 2);
+    }
+
+    #[test]
+    fn annealed_solve_matches_direct_at_the_target_eps() {
+        // The schedule only changes *how* the target rung is reached;
+        // the answer must agree with a direct solve at the same eps.
+        let (mu, nu) = clouds(60);
+        let base = || OtProblem::new(&mu, &nu).epsilon(0.3).rank(32).seed(5);
+        let direct = base().anneal(false).solve().unwrap();
+        let annealed = base().anneal(true).solve().unwrap();
+        assert!(
+            annealed.rung_iterations.len() > 1,
+            "an annealed solve records one count per rung"
+        );
+        assert_eq!(
+            *annealed.rung_iterations.last().unwrap(),
+            annealed.iterations,
+            "`iterations` is the target-rung count"
+        );
+        assert!(annealed.total_iterations() >= annealed.iterations);
+        assert!(direct.rung_iterations.is_empty());
+        let rel = ((annealed.objective - direct.objective) / direct.objective).abs();
+        assert!(rel < 1e-3, "annealed {} vs direct {}", annealed.objective, direct.objective);
+    }
+
+    #[test]
+    fn annealed_plan_roundtrips_through_json_bitwise() {
+        // The schedule rides the Plan; a worker decoding the document
+        // must anneal through bitwise-identical rungs.
+        let (mu, nu) = clouds(40);
+        let problem = OtProblem::new(&mu, &nu).epsilon(0.3).rank(24).seed(7).anneal(true);
+        let plan = problem.plan().unwrap();
+        assert!(plan.schedule.is_some());
+        let wire = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(wire, plan);
+        let local = problem.solve_planned(&plan).unwrap();
+        let shipped = problem.solve_planned(&wire).unwrap();
+        assert_eq!(local.objective.to_bits(), shipped.objective.to_bits());
+        assert_eq!(local.rung_iterations, shipped.rung_iterations);
+        let d1 = problem.divergence_planned(&plan).unwrap();
+        let d2 = problem.divergence_planned(&wire).unwrap();
+        assert_eq!(d1.divergence.to_bits(), d2.divergence.to_bits());
+    }
+
+    #[test]
+    fn annealed_batch_matches_single_annealed_solves() {
+        let (mu, nu) = clouds(30);
+        let a = vec![1.0f32 / 30.0; 30];
+        let pairs: Vec<(&[f32], &[f32])> = vec![(&a[..], &a[..]); 3];
+        let p = OtProblem::new(&mu, &nu)
+            .epsilon(0.3)
+            .rank(16)
+            .seed(3)
+            .anneal(true)
+            .weight_pairs(&pairs);
+        let batch = p.solve_all();
+        let single = OtProblem::new(&mu, &nu)
+            .epsilon(0.3)
+            .rank(16)
+            .seed(3)
+            .anneal(true)
+            .weights(&a, &a)
+            .solve()
+            .unwrap();
+        for sol in batch {
+            let sol = sol.unwrap();
+            assert_eq!(sol.objective.to_bits(), single.objective.to_bits());
+            assert_eq!(sol.rung_iterations, single.rung_iterations);
+        }
+    }
+
+    #[test]
+    fn symmetric_self_solves_match_two_sided_divergence() {
+        // The one-dual fixed point reaches the same self-transport
+        // objective as the full two-sided solve (up to the solver
+        // tolerance), so the debiased divergence agrees too.
+        let (mu, nu) = clouds(50);
+        let base = || OtProblem::new(&mu, &nu).epsilon(0.4).rank(32).seed(11);
+        let two_sided = base().symmetric_self_solves(false).divergence().unwrap();
+        let symmetric = base().symmetric_self_solves(true).divergence().unwrap();
+        assert_eq!(
+            two_sided.xy.objective.to_bits(),
+            symmetric.xy.objective.to_bits(),
+            "the cross solve is untouched by the self-solve strategy"
+        );
+        let diff = (two_sided.divergence - symmetric.divergence).abs();
+        let scale = two_sided.divergence.abs().max(1e-6);
+        assert!(
+            diff / scale < 5e-2,
+            "two-sided {} vs symmetric {}",
+            two_sided.divergence,
+            symmetric.divergence
+        );
+    }
+
+    #[test]
+    fn annealed_divergence_batch_matches_single() {
+        let (mu, nu) = clouds(30);
+        let a = vec![1.0f32 / 30.0; 30];
+        let pairs: Vec<(&[f32], &[f32])> = vec![(&a[..], &a[..]); 2];
+        let p = OtProblem::new(&mu, &nu)
+            .epsilon(0.3)
+            .rank(16)
+            .seed(13)
+            .anneal(true)
+            .weight_pairs(&pairs);
+        let reports = p.divergence_all();
+        let single = OtProblem::new(&mu, &nu)
+            .epsilon(0.3)
+            .rank(16)
+            .seed(13)
+            .anneal(true)
+            .weights(&a, &a)
+            .divergence()
+            .unwrap();
+        assert!(single.xx.rung_iterations.len() > 1);
+        for r in reports {
+            let r = r.unwrap();
+            assert_eq!(r.divergence.to_bits(), single.divergence.to_bits());
+            assert_eq!(r.per_solve_iterations(), single.per_solve_iterations());
+        }
+    }
+
+    #[test]
+    fn deserialized_accelerated_plan_with_schedule_is_rejected() {
+        // The planner never emits this combination; a hand-crafted wire
+        // document must get a typed error, not a silent wrong solve.
+        let (mu, nu) = clouds(20);
+        let p = OtProblem::new(&mu, &nu).epsilon(0.3).rank(8).anneal(true);
+        let mut plan = p.plan().unwrap();
+        plan.accelerated = true;
+        assert!(matches!(p.solve_planned(&plan), Err(Error::Config(_))));
     }
 }

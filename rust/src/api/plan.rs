@@ -21,6 +21,7 @@ use crate::config::SinkhornConfig;
 use crate::coordinator::cache::FeatureKey;
 use crate::error::{Error, Result};
 use crate::runtime::Json;
+use crate::sinkhorn::EpsSchedule;
 
 /// Kernel backend chosen by the planner.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -141,6 +142,17 @@ pub struct Plan {
     /// Seed for the Lemma-1 anchor draw (and the Nyström landmark draw)
     /// when the executor fits a map itself.
     pub seed: u64,
+    /// Eps-annealing schedule: geometric rungs from `schedule.eps_start`
+    /// down to `epsilon`, each rung warm-starting the next from the row
+    /// dual it converged to. `None` = direct solve at the target eps.
+    /// The schedule is pure f64 data, so a plan shipped to a shard worker
+    /// anneals through bit-identical rungs on every host.
+    pub schedule: Option<EpsSchedule>,
+    /// Use the one-dual symmetric fixed point `u <- sqrt(u * a/(Ku))` for
+    /// the xx/yy self-solves of a divergence instead of full two-sided
+    /// solves. Halves the dual state and roughly halves the applies per
+    /// iteration on those legs.
+    pub symmetric_self_solves: bool,
 }
 
 impl Plan {
@@ -156,6 +168,12 @@ impl Plan {
             threads: self.threads,
             stabilize: self.domain == Domain::AutoEscalate,
             max_batch: self.batch_width.max(1),
+            // The executor drives annealing and symmetric routing itself;
+            // these mirror the plan so a config round-tripped through the
+            // free functions stays faithful to what was planned.
+            anneal: self.schedule.is_some().then_some(true),
+            anneal_decay: self.schedule.map_or(0.5, |s| s.decay),
+            symmetric: Some(self.symmetric_self_solves),
         }
     }
 
@@ -168,7 +186,7 @@ impl Plan {
         };
         format!(
             "plan: backend={backend} domain={} stabilized_factors={} pairs={} width={} \
-             threads={}/{} simd={} eps={} cache_key={}",
+             threads={}/{} simd={} eps={} anneal={} symmetric={} cache_key={}",
             self.domain.tag(),
             self.stabilized_factors,
             self.pairs,
@@ -177,6 +195,16 @@ impl Plan {
             self.solver_threads,
             self.simd_arm,
             self.epsilon,
+            match self.schedule {
+                Some(s) => format!(
+                    "geo(start={},decay={},rungs={})",
+                    s.eps_start,
+                    s.decay,
+                    s.rungs(self.epsilon).len()
+                ),
+                None => "off".into(),
+            },
+            self.symmetric_self_solves,
             match self.cache_key {
                 Some(k) => format!("(d={},eps,r={})", k.dim, k.r),
                 None => "-".into(),
@@ -214,6 +242,13 @@ impl Plan {
         s.push_str(&format!(",\"check_every\":{}", self.check_every));
         s.push_str(&format!(",\"n\":{},\"m\":{}", self.n, self.m));
         s.push_str(&format!(",\"seed\":\"{}\"", self.seed));
+        if let Some(sch) = self.schedule {
+            s.push_str(&format!(
+                ",\"schedule\":{{\"eps_start\":{},\"decay\":{}}}",
+                sch.eps_start, sch.decay
+            ));
+        }
+        s.push_str(&format!(",\"symmetric_self_solves\":{}", self.symmetric_self_solves));
         s.push('}');
         s
     }
@@ -285,6 +320,25 @@ impl Plan {
         let seed = str_field("seed")?
             .parse::<u64>()
             .map_err(|_| Error::Config("plan json: seed must be a decimal u64 string".into()))?;
+        // `schedule` and `symmetric_self_solves` entered the format after
+        // v1 shipped: absent keys decode to the direct-solve behaviour so
+        // plans written by older coordinators still execute.
+        let schedule = match j.get("schedule") {
+            Some(sch) => {
+                let eps_start = sch
+                    .get("eps_start")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| Error::Config("plan json: schedule.eps_start".into()))?;
+                let decay = sch
+                    .get("decay")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| Error::Config("plan json: schedule.decay".into()))?;
+                // Re-assert the schedule invariants on the wire path too.
+                Some(EpsSchedule::new(eps_start, decay)?)
+            }
+            None => None,
+        };
+        let symmetric_self_solves = matches!(j.get("symmetric_self_solves"), Some(Json::Bool(true)));
 
         Ok(Plan {
             backend,
@@ -304,6 +358,8 @@ impl Plan {
             n: usize_field("n")?,
             m: usize_field("m")?,
             seed,
+            schedule,
+            symmetric_self_solves,
         })
     }
 }
@@ -331,6 +387,8 @@ mod tests {
             n: 1000,
             m: 900,
             seed: u64::MAX, // exercise the beyond-f64 seed path
+            schedule: None,
+            symmetric_self_solves: false,
         }
     }
 
@@ -346,6 +404,44 @@ mod tests {
             let back = Plan::from_json(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
             assert_eq!(back, plan, "{text}");
         }
+    }
+
+    #[test]
+    fn json_round_trips_schedule_and_symmetric() {
+        let mut plan = sample(Backend::Factored { rank: 64 }, Domain::AutoEscalate, true);
+        plan.schedule = Some(EpsSchedule::new(8.0, 0.5).unwrap());
+        plan.symmetric_self_solves = true;
+        let text = plan.to_json();
+        assert!(text.contains("\"schedule\""), "{text}");
+        let back = Plan::from_json(&text).unwrap();
+        assert_eq!(back, plan, "{text}");
+        // Awkward float bits survive the round trip exactly.
+        plan.schedule = Some(EpsSchedule::new(0.1f64.powi(2) * 7.0, 1.0 / 3.0).unwrap());
+        let back = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(
+            back.schedule.unwrap().eps_start.to_bits(),
+            plan.schedule.unwrap().eps_start.to_bits()
+        );
+        assert_eq!(
+            back.schedule.unwrap().decay.to_bits(),
+            plan.schedule.unwrap().decay.to_bits()
+        );
+    }
+
+    #[test]
+    fn from_json_tolerates_pre_schedule_documents() {
+        // Plans written before the schedule fields existed must decode to
+        // the direct-solve behaviour, not error.
+        let plan = sample(Backend::Dense, Domain::Plain, false);
+        let text = plan.to_json().replace(",\"symmetric_self_solves\":false", "");
+        let back = Plan::from_json(&text).unwrap();
+        assert_eq!(back.schedule, None);
+        assert!(!back.symmetric_self_solves);
+        // But a present-and-invalid schedule is still a typed error.
+        let bad = plan
+            .to_json()
+            .replace(",\"symmetric_self_solves\":false", ",\"schedule\":{\"eps_start\":8.0,\"decay\":1.5}");
+        assert!(Plan::from_json(&bad).is_err());
     }
 
     #[test]
@@ -396,5 +492,12 @@ mod tests {
         assert!(s.contains("factored(r=256"), "{s}");
         assert!(s.contains("auto_escalate"), "{s}");
         assert!(s.contains("width=4"), "{s}");
+        assert!(s.contains("anneal=off"), "{s}");
+        let mut annealed = sample(Backend::Factored { rank: 256 }, Domain::AutoEscalate, true);
+        annealed.schedule = Some(EpsSchedule::new(0.8, 0.5).unwrap());
+        annealed.symmetric_self_solves = true;
+        let s = annealed.summary();
+        assert!(s.contains("anneal=geo(start=0.8,decay=0.5,rungs=5)"), "{s}");
+        assert!(s.contains("symmetric=true"), "{s}");
     }
 }

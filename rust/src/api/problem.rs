@@ -36,6 +36,7 @@ use crate::runtime::pool::Pool;
 
 use super::plan::{Backend, Domain, Plan};
 use super::{DEFAULT_RANK, UNDERFLOW_LOG_SPREAD};
+use crate::sinkhorn::EpsSchedule;
 
 /// Requested kernel backend (the planner resolves `Auto`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -117,6 +118,9 @@ pub struct OtProblem<'a> {
     pub(crate) solver_threads: usize,
     pub(crate) max_batch: usize,
     pub(crate) seed: u64,
+    pub(crate) anneal: Option<bool>,
+    pub(crate) anneal_decay: f64,
+    pub(crate) symmetric: Option<bool>,
     pub(crate) simd: SimdPreference,
     pub(crate) map: Option<&'a GaussianFeatureMap>,
     pub(crate) cache: Option<&'a FeatureCache>,
@@ -144,6 +148,9 @@ impl<'a> OtProblem<'a> {
             solver_threads: 1,
             max_batch: d.max_batch,
             seed: 0,
+            anneal: d.anneal,
+            anneal_decay: d.anneal_decay,
+            symmetric: d.symmetric,
             simd: SimdPreference::Auto,
             map: None,
             cache: None,
@@ -270,6 +277,34 @@ impl<'a> OtProblem<'a> {
         self
     }
 
+    /// Force eps-annealing on or off. Default (`Auto`): the planner
+    /// anneals exactly when the target eps is hopeless for f32 (the
+    /// [`UNDERFLOW_LOG_SPREAD`] rule) and nothing else pins the domain —
+    /// high-eps rungs converge in a handful of plain-domain iterations
+    /// and warm-start the next, so the expensive target rung starts next
+    /// to its fixed point. Explicit `anneal(true)` requires a
+    /// measure-built, non-accelerated, non-Nyström problem (those kernels
+    /// cannot be rebuilt at intermediate eps).
+    pub fn anneal(mut self, on: bool) -> Self {
+        self.anneal = Some(on);
+        self
+    }
+
+    /// Geometric decay factor between annealing rungs (in `(0, 1)`,
+    /// default 0.5). Smaller = fewer, steeper rungs.
+    pub fn anneal_decay(mut self, decay: f64) -> Self {
+        self.anneal_decay = decay;
+        self
+    }
+
+    /// Force the one-dual symmetric fixed point for the xx/yy self-solves
+    /// of a divergence on or off. Default (`Auto`): on exactly when the
+    /// plan anneals.
+    pub fn symmetric_self_solves(mut self, on: bool) -> Self {
+        self.symmetric = Some(on);
+        self
+    }
+
     /// Seed for the Lemma-1 anchor draw (and Nyström landmarks) when the
     /// executor fits a map itself. The executor's draw is exactly
     /// `GaussianFeatureMap::fit(mu, nu, eps, r, &mut Rng::seed_from(seed))`,
@@ -337,6 +372,9 @@ impl<'a> OtProblem<'a> {
         self.check_every = cfg.check_every;
         self.threads = cfg.threads;
         self.max_batch = cfg.max_batch;
+        self.anneal = cfg.anneal;
+        self.anneal_decay = cfg.anneal_decay;
+        self.symmetric = cfg.symmetric;
         self.domain =
             if cfg.stabilize { DomainChoice::AutoEscalate } else { DomainChoice::Plain };
         self
@@ -453,6 +491,57 @@ impl<'a> OtProblem<'a> {
             _ => false,
         };
 
+        // Annealing: resolve the tri-state. Auto anneals exactly when the
+        // target eps is hopeless for f32 (the same rule that would send
+        // the domain straight to log) and nothing else pins the solve —
+        // the high-eps rungs are then cheap plain-domain iterations that
+        // warm-start the expensive target rung next to its fixed point.
+        let anneal_on = match self.anneal {
+            Some(on) => {
+                if on && self.accelerated {
+                    return Err(Error::Config(
+                        "the accelerated solver (Alg. 2) has its own momentum schedule; \
+                         .anneal(true) does not compose with it"
+                            .into(),
+                    ));
+                }
+                if on && matches!(self.source, Source::Factors { .. }) {
+                    return Err(Error::Config(
+                        "annealing rebuilds the kernel at each rung's eps; prebuilt \
+                         factors are fixed at one eps, so .anneal(true) cannot apply"
+                            .into(),
+                    ));
+                }
+                if on && matches!(backend, Backend::Nystrom { .. }) {
+                    return Err(Error::Config(
+                        "annealing is not planned for the nystrom baseline (no \
+                         log-domain view to land the small-eps target rung in)"
+                            .into(),
+                    ));
+                }
+                on
+            }
+            None => {
+                self.underflow_risk()
+                    && self.domain == DomainChoice::Auto
+                    && !self.accelerated
+                    && matches!(self.source, Source::Measures { .. })
+                    && !matches!(backend, Backend::Nystrom { .. })
+            }
+        };
+        let schedule = if anneal_on {
+            let (mu, nu) = self.measures()?;
+            // The support diameter bounds the cost range: at eps ~ 4R^2
+            // the Gibbs kernel is nearly flat and Sinkhorn converges in a
+            // handful of iterations from cold.
+            let radius = mu.radius().max(nu.radius());
+            let eps_start = (4.0 * radius * radius).max(self.epsilon);
+            Some(EpsSchedule::new(eps_start, self.anneal_decay)?)
+        } else {
+            None
+        };
+        let symmetric_self_solves = self.symmetric.unwrap_or(schedule.is_some());
+
         // Domain: explicit choice validated against the backend's
         // log-view capability; Auto applies the underflow heuristic.
         let mut domain = match self.domain {
@@ -473,7 +562,14 @@ impl<'a> OtProblem<'a> {
                     // escalate to — keep its divergence a typed error.
                     Domain::Plain
                 } else if self.underflow_risk() {
-                    Domain::LogDomain
+                    // Annealed solves reach the target rung warm: give the
+                    // plain domain a chance and keep log as the escape
+                    // hatch. Direct solves skip the doomed plain attempt.
+                    if anneal_on {
+                        Domain::AutoEscalate
+                    } else {
+                        Domain::LogDomain
+                    }
                 } else {
                     Domain::AutoEscalate
                 }
@@ -552,6 +648,8 @@ impl<'a> OtProblem<'a> {
             n,
             m,
             seed: self.seed,
+            schedule,
+            symmetric_self_solves,
         })
     }
 
@@ -600,8 +698,74 @@ mod tests {
         let (mu, nu) = clouds(100);
         let moderate = OtProblem::new(&mu, &nu).epsilon(0.5).rank(32).plan().unwrap();
         assert_eq!(moderate.domain, Domain::AutoEscalate);
+        assert_eq!(moderate.schedule, None, "no annealing at comfortable eps");
+        assert!(!moderate.symmetric_self_solves);
+        // Tiny eps now auto-anneals: the annealed solve arrives at the
+        // target rung warm, so the domain stays escalate-on-demand
+        // instead of going straight to log.
         let tiny = OtProblem::new(&mu, &nu).epsilon(1e-4).rank(32).plan().unwrap();
-        assert_eq!(tiny.domain, Domain::LogDomain, "R^2/eps >> {UNDERFLOW_LOG_SPREAD}");
+        assert!(tiny.schedule.is_some(), "R^2/eps >> {UNDERFLOW_LOG_SPREAD} must anneal");
+        assert_eq!(tiny.domain, Domain::AutoEscalate);
+        assert!(tiny.symmetric_self_solves, "symmetric follows annealing by default");
+        // Annealing off restores the straight-to-log rule.
+        let direct =
+            OtProblem::new(&mu, &nu).epsilon(1e-4).rank(32).anneal(false).plan().unwrap();
+        assert_eq!(direct.schedule, None);
+        assert_eq!(direct.domain, Domain::LogDomain);
+    }
+
+    #[test]
+    fn schedule_starts_at_the_support_diameter_scale() {
+        let (mu, nu) = clouds(100);
+        let plan = OtProblem::new(&mu, &nu).epsilon(1e-4).rank(32).plan().unwrap();
+        let sch = plan.schedule.unwrap();
+        let radius = mu.radius().max(nu.radius());
+        assert_eq!(sch.eps_start.to_bits(), (4.0 * radius * radius).to_bits());
+        let rungs = sch.rungs(plan.epsilon);
+        assert_eq!(*rungs.last().unwrap(), 1e-4, "last rung is exactly the target");
+        assert!(rungs.len() >= 2);
+        // An explicit decay reshapes the ladder.
+        let steep = OtProblem::new(&mu, &nu)
+            .epsilon(1e-4)
+            .rank(32)
+            .anneal_decay(0.1)
+            .plan()
+            .unwrap();
+        assert!(steep.schedule.unwrap().rungs(1e-4).len() < rungs.len());
+    }
+
+    #[test]
+    fn explicit_anneal_requests_validate_against_the_backend() {
+        let (mu, nu) = clouds(50);
+        // Pinned domains don't auto-anneal...
+        let pinned = OtProblem::new(&mu, &nu)
+            .epsilon(1e-4)
+            .rank(16)
+            .domain(DomainChoice::LogDomain)
+            .plan()
+            .unwrap();
+        assert_eq!(pinned.schedule, None);
+        // ...but an explicit request composes with them.
+        let explicit = OtProblem::new(&mu, &nu)
+            .epsilon(0.5)
+            .rank(16)
+            .anneal(true)
+            .symmetric_self_solves(false)
+            .plan()
+            .unwrap();
+        assert!(explicit.schedule.is_some());
+        assert!(!explicit.symmetric_self_solves, "explicit symmetric choice wins");
+        // Invalid combinations are typed planning errors.
+        assert!(OtProblem::new(&mu, &nu).accelerated().anneal(true).plan().is_err());
+        assert!(OtProblem::new(&mu, &nu).nystrom(8).anneal(true).plan().is_err());
+        let phi = Mat::from_fn(5, 2, |_, _| 1.0);
+        let w = vec![0.2f32; 5];
+        assert!(OtProblem::from_factors(&phi, &phi)
+            .weights(&w, &w)
+            .anneal(true)
+            .plan()
+            .is_err());
+        assert!(OtProblem::new(&mu, &nu).anneal(true).anneal_decay(1.5).plan().is_err());
     }
 
     #[test]

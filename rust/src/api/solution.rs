@@ -39,6 +39,11 @@ pub struct Solution {
     /// The SIMD dispatch arm that actually executed ("scalar" /
     /// "avx2+fma"), matching the `cpu` field of BENCH_*.json.
     pub simd_arm: &'static str,
+    /// Iterations per annealing rung, outermost (largest eps) first.
+    /// Empty for direct (unscheduled) solves; for annealed solves
+    /// `iterations` is the *target-rung* count and
+    /// `rung_iterations.iter().sum()` is the whole chain.
+    pub rung_iterations: Vec<usize>,
 }
 
 impl Solution {
@@ -61,6 +66,17 @@ impl Solution {
             grad_norm: None,
             wall_us,
             simd_arm: crate::linalg::simd::active_level().label(),
+            rung_iterations: Vec::new(),
+        }
+    }
+
+    /// Total iterations including any annealing rungs (equals
+    /// `iterations` for direct solves).
+    pub fn total_iterations(&self) -> usize {
+        if self.rung_iterations.is_empty() {
+            self.iterations
+        } else {
+            self.rung_iterations.iter().sum()
         }
     }
 
@@ -76,6 +92,7 @@ impl Solution {
             grad_norm: Some(sol.grad_norm),
             wall_us,
             simd_arm: crate::linalg::simd::active_level().label(),
+            rung_iterations: Vec::new(),
         }
     }
 }
@@ -117,9 +134,25 @@ impl DivergenceReport {
         self.xy.objective
     }
 
-    /// Total Sinkhorn iterations across the three solves.
+    /// Total Sinkhorn iterations across the three solves (target rungs
+    /// only for annealed plans — see [`DivergenceReport::total_iterations`]).
     pub fn iterations(&self) -> usize {
         self.xy.iterations + self.xx.iterations + self.yy.iterations
+    }
+
+    /// Total iterations across the three solves *and* all annealing
+    /// rungs — the cost metric the iteration-count benches record.
+    pub fn total_iterations(&self) -> usize {
+        self.xy.total_iterations() + self.xx.total_iterations() + self.yy.total_iterations()
+    }
+
+    /// Per-solve iteration counts `[xy, xx, yy]`, rungs included.
+    pub fn per_solve_iterations(&self) -> [usize; 3] {
+        [
+            self.xy.total_iterations(),
+            self.xx.total_iterations(),
+            self.yy.total_iterations(),
+        ]
     }
 
     /// How many of the three solves escalated to the log domain (the

@@ -77,6 +77,10 @@ pub fn ground_truth(mu: &Measure, nu: &Measure, eps: f64) -> f64 {
         threads: 1,
         stabilize: false,
         max_batch: 1,
+        // Pinned off: this is the exact log-domain reference solve.
+        anneal: Some(false),
+        anneal_decay: 0.5,
+        symmetric: Some(false),
     };
     sinkhorn_log_domain(&CostMatrixLogKernel::new(&cost, eps), &mu.weights, &nu.weights, &cfg)
         .expect("log-domain ground truth cannot diverge")
@@ -171,6 +175,9 @@ pub fn run_sweep(
             threads: 1,
             stabilize: false,
             max_batch: 1,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         };
         // All three contenders run through the planned API with the
         // domain pinned to Plain (`stabilize: false` in `cfg`): the sweep
@@ -212,6 +219,9 @@ pub fn run_sweep(
             let mut rf_devs = Vec::new();
             let mut rf_times = Vec::new();
             let mut rf_fail = None;
+            let mut an_devs = Vec::new();
+            let mut an_times = Vec::new();
+            let mut an_fail: Option<String> = None;
             let mut ny_devs = Vec::new();
             let mut ny_times = Vec::new();
             let mut ny_fail: Option<String> = None;
@@ -236,6 +246,26 @@ pub fn run_sweep(
                         rf_times.push(sw.elapsed_secs());
                     }
                     Err(e) => rf_fail = Some(e.to_string()),
+                }
+                // RF with the eps-annealing schedule: same features, same
+                // pinned plain domain, but the solve walks a geometric eps
+                // ladder with dual warm starts (intermediate-rung map
+                // refits included in the timing — that is the real cost).
+                let sw = Stopwatch::start();
+                let an = OtProblem::new(mu, nu)
+                    .config(&cfg)
+                    .rank(r)
+                    .seed(rep_seed)
+                    .with_feature_map(&map)
+                    .stabilized_factors(true)
+                    .anneal(true)
+                    .solve();
+                match an {
+                    Ok(sol) => {
+                        an_devs.push(deviation_score(truth, sol.objective));
+                        an_times.push(sw.elapsed_secs());
+                    }
+                    Err(e) => an_fail = Some(e.to_string()),
                 }
                 // Nys: no pre-validation — Sinkhorn itself is the judge.
                 // (Its iterates only touch K^T u / K v for the actual
@@ -281,6 +311,9 @@ pub fn run_sweep(
             let rf = mk("RF", &rf_devs, &rf_times, rf_fail);
             progress(&rf);
             cells.push(rf);
+            let an = mk("RF+an", &an_devs, &an_times, an_fail);
+            progress(&an);
+            cells.push(an);
             let ny = mk("Nys", &ny_devs, &ny_times, ny_fail);
             progress(&ny);
             cells.push(ny);
@@ -334,8 +367,8 @@ mod tests {
             max_iters: 2000,
         };
         let cells = run_sweep(&mu, &nu, &sweep, 0, |_| {});
-        // 1 Sin + 2 ranks x 2 methods = 5 cells.
-        assert_eq!(cells.len(), 5);
+        // 1 Sin + 2 ranks x 3 methods (RF, RF+an, Nys) = 7 cells.
+        assert_eq!(cells.len(), 7);
         let sin = &cells[0];
         assert_eq!(sin.method, "Sin");
         assert!((sin.deviation - 100.0).abs() < 1.0, "Sin dev {}", sin.deviation);
@@ -346,6 +379,11 @@ mod tests {
         let rf = cells.iter().find(|c| c.method == "RF" && c.rank == 200).unwrap();
         assert!(rf.ok == 1);
         assert!((rf.deviation - 100.0).abs() < 50.0, "RF dev {}", rf.deviation);
+        // The annealed RF contender solves the same problem through the
+        // eps ladder; its deviation plumbing holds to the same band.
+        let an = cells.iter().find(|c| c.method == "RF+an" && c.rank == 200).unwrap();
+        assert!(an.ok == 1, "annealed RF failed: {:?}", an.failure);
+        assert!((an.deviation - 100.0).abs() < 50.0, "RF+an dev {}", an.deviation);
     }
 
     #[test]

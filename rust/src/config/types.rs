@@ -37,6 +37,27 @@ pub struct SinkhornConfig {
     /// this knob trades per-request latency against throughput only.
     /// `sinkhorn.max_batch` in config files, `--max-batch` on the CLI.
     pub max_batch: usize,
+    /// Eps-annealing: run each solve down a geometric eps ladder
+    /// ([`EpsSchedule`](crate::sinkhorn::EpsSchedule)), warm-starting the
+    /// duals between rungs. `None` (the default) lets the planner decide
+    /// — it anneals exactly where the direct solve would pay for
+    /// log-domain escalation (small eps relative to the squared support
+    /// radius). `Some(true)`/`Some(false)` forces the choice.
+    /// `sinkhorn.anneal` in config files, `--anneal auto|on|off` on the
+    /// CLI.
+    pub anneal: Option<bool>,
+    /// Geometric damping factor of the annealing ladder, in (0, 1): each
+    /// rung's eps is the previous rung's times this. 0.5 halves eps per
+    /// rung (geomloss' default scaling). `sinkhorn.anneal_decay` in
+    /// config files, `--anneal-decay` on the CLI.
+    pub anneal_decay: f64,
+    /// Use the one-dual symmetric fixed-point iteration for the xx/yy
+    /// self-solves of a Sinkhorn divergence (half the kernel applies per
+    /// self-iteration). `None` (default) lets the planner decide — on
+    /// whenever a schedule is on; `Some(true)`/`Some(false)` forces it.
+    /// `sinkhorn.symmetric` in config files, `--symmetric auto|on|off`
+    /// on the CLI.
+    pub symmetric: Option<bool>,
 }
 
 impl Default for SinkhornConfig {
@@ -49,6 +70,9 @@ impl Default for SinkhornConfig {
             threads: 1,
             stabilize: true,
             max_batch: 8,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         }
     }
 }
@@ -65,6 +89,10 @@ impl SinkhornConfig {
             threads: doc.get_int("sinkhorn.threads").unwrap_or(d.threads as i64) as usize,
             stabilize: doc.get_bool("sinkhorn.stabilize").unwrap_or(d.stabilize),
             max_batch: doc.get_int("sinkhorn.max_batch").unwrap_or(d.max_batch as i64) as usize,
+            // Tri-state: an absent key stays `None` (planner decides).
+            anneal: doc.get_bool("sinkhorn.anneal").or(d.anneal),
+            anneal_decay: doc.get_float("sinkhorn.anneal_decay").unwrap_or(d.anneal_decay),
+            symmetric: doc.get_bool("sinkhorn.symmetric").or(d.symmetric),
         }
     }
 }

@@ -406,6 +406,7 @@ fn solve_one(
     if stabilized > 0 {
         metrics.counter("service.stabilized_solves").add(stabilized);
     }
+    metrics.counter("service.sinkhorn.iterations").add(report.total_iterations() as u64);
     Ok(Response {
         id: req.id,
         divergence: report.divergence,
@@ -470,6 +471,9 @@ fn solve_group(
             if stabilized > 0 {
                 metrics.counter("service.stabilized_solves").add(stabilized);
             }
+            metrics
+                .counter("service.sinkhorn.iterations")
+                .add(report.total_iterations() as u64);
             Ok(Response {
                 id: req.id,
                 divergence: report.divergence,
@@ -537,6 +541,9 @@ fn solve_group_sharded(
             if stabilized > 0 {
                 metrics.counter("service.stabilized_solves").add(stabilized);
             }
+            metrics
+                .counter("service.sinkhorn.iterations")
+                .add(report.total_iterations() as u64);
             Ok(Response {
                 id: req.id,
                 divergence: report.divergence,
@@ -567,6 +574,9 @@ mod tests {
                 threads: 1,
                 stabilize: true,
                 max_batch: 8,
+                anneal: None,
+                anneal_decay: 0.5,
+                symmetric: None,
             },
             num_features: 128,
             solver_threads: 1,
@@ -649,6 +659,9 @@ mod tests {
                 threads: 1,
                 stabilize: true,
                 max_batch: 8,
+                anneal: None,
+                anneal_decay: 0.5,
+                symmetric: None,
             },
             num_features: 256,
             solver_threads: 1,
@@ -692,6 +705,7 @@ mod tests {
         let m = h.metrics_text();
         assert!(m.contains("service.feature_cache.misses = 1"), "{m}");
         assert!(m.contains("service.feature_cache.hits = 4"), "{m}");
+        assert!(m.contains("service.sinkhorn.iterations = "), "{m}");
         drop(h);
         svc.shutdown();
     }

@@ -72,6 +72,9 @@ impl GanTrainer {
             threads: 1,
             stabilize: false,
             max_batch: 1,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         };
         GanTrainer {
             opt_gen: Adam::new(generator.num_params(), cfg.lr),

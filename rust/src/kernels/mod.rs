@@ -899,6 +899,9 @@ mod debug_nystrom2 {
                     threads: 1,
                     stabilize: false,
                     max_batch: 1,
+                    anneal: None,
+                    anneal_decay: 0.5,
+                    symmetric: None,
                 };
                 match sinkhorn(&nk, &mu.weights, &nu.weights, &cfg) {
                     Ok(s) => println!(

@@ -141,7 +141,7 @@ pub mod prelude {
     pub use crate::linalg::Mat;
     pub use crate::rng::Rng;
     pub use crate::runtime::pool::Pool;
-    pub use crate::sinkhorn::SinkhornSolution;
+    pub use crate::sinkhorn::{EpsSchedule, SinkhornSolution};
 
     /// The pre-API free-function solver surface, demoted to an explicit
     /// opt-in. These are the reference implementations the planned
@@ -152,8 +152,9 @@ pub mod prelude {
     pub mod legacy {
         pub use crate::sinkhorn::{
             sinkhorn, sinkhorn_accelerated, sinkhorn_divergence, sinkhorn_divergence_batch,
-            sinkhorn_log_domain, sinkhorn_stabilized, solve_batch, solve_batch_log_domain,
-            solve_batch_stabilized, SinkhornSolution,
+            sinkhorn_log_domain, sinkhorn_stabilized, sinkhorn_symmetric,
+            sinkhorn_symmetric_log, sinkhorn_symmetric_stabilized, solve_batch,
+            solve_batch_log_domain, solve_batch_stabilized, SinkhornSolution,
         };
     }
 }

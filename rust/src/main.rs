@@ -66,6 +66,14 @@ fn parse_on_off(name: &str, value: &str) -> bool {
     }
 }
 
+/// Parse an `auto`/`on`/`off` CLI value; `auto` defers to the planner.
+fn parse_auto_on_off(name: &str, value: &str) -> Option<bool> {
+    match value {
+        "auto" => None,
+        other => Some(parse_on_off(name, other)),
+    }
+}
+
 fn cmd_divergence(argv: Vec<String>) -> i32 {
     let a = parse(
         ArgSpec::new("divergence", "Sinkhorn divergence between two Gaussian clouds")
@@ -79,8 +87,26 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
                 "escalate to the log-domain solver on small-eps divergence (on/off); \
                  the planner may still pick the log domain outright at tiny eps",
             )
+            .opt(
+                "anneal",
+                "auto",
+                "eps-annealing: geometric eps schedule from the support-diameter scale \
+                 down to --eps with dual warm starts between rungs (auto/on/off; auto \
+                 lets the planner anneal when tiny eps would underflow)",
+            )
+            .opt("anneal-decay", "0.5", "geometric decay per annealing rung, in (0,1)")
+            .opt(
+                "symmetric",
+                "auto",
+                "one-dual symmetric fixed point for the xx/yy self solves \
+                 (auto/on/off; auto follows the annealing choice)",
+            )
             .opt("seed", "0", "RNG seed")
-            .flag("explain", "print the solver plan (summary + JSON) before executing"),
+            .flag(
+                "explain",
+                "print the solver plan (summary + JSON) before executing; annealed \
+                 plans carry `schedule` {eps_start, decay} and `symmetric_self_solves`",
+            ),
         argv,
     );
     let (n, eps, r, seed) =
@@ -109,6 +135,13 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
     if !stabilize {
         problem = problem.domain(DomainChoice::Plain);
     }
+    problem = problem.anneal_decay(a.get_f64("anneal-decay"));
+    if let Some(on) = parse_auto_on_off("anneal", a.get_str("anneal")) {
+        problem = problem.anneal(on);
+    }
+    if let Some(on) = parse_auto_on_off("symmetric", a.get_str("symmetric")) {
+        problem = problem.symmetric_self_solves(on);
+    }
     let plan = match problem.plan() {
         Ok(p) => p,
         Err(e) => {
@@ -125,10 +158,11 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
         Ok(report) => {
             println!(
                 "sinkhorn divergence (n={n}, eps={eps}, r={r}, threads={threads}): {:.6}  \
-                 [{:.1} ms, {} iters, {} escalations, arm {}]",
+                 [{:.1} ms, {} iters over {} rung(s), {} escalations, arm {}]",
                 report.divergence,
                 sw.elapsed_secs() * 1e3,
-                report.iterations(),
+                report.total_iterations(),
+                report.xy.rung_iterations.len().max(1),
                 report.escalations(),
                 report.simd_arm
             );
@@ -306,6 +340,18 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
             .opt("cache", "8", "feature-map cache capacity (0 = disabled)")
             .opt("stabilize", "on", "log-domain escalation for small-eps requests (on/off)")
             .opt(
+                "anneal",
+                "auto",
+                "eps-annealing for served solves (auto/on/off; auto = planner decides \
+                 per request)",
+            )
+            .opt("anneal-decay", "0.5", "geometric decay per annealing rung, in (0,1)")
+            .opt(
+                "symmetric",
+                "auto",
+                "one-dual symmetric self solves (auto/on/off; auto follows annealing)",
+            )
+            .opt(
                 "max-batch",
                 "8",
                 "fused multi-pair solve width cap (1 = solve every request alone)",
@@ -331,6 +377,9 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     };
     cfg.sinkhorn.stabilize = parse_on_off("stabilize", a.get_str("stabilize"));
     cfg.sinkhorn.max_batch = a.get_usize("max-batch");
+    cfg.sinkhorn.anneal = parse_auto_on_off("anneal", a.get_str("anneal"));
+    cfg.sinkhorn.anneal_decay = a.get_f64("anneal-decay");
+    cfg.sinkhorn.symmetric = parse_auto_on_off("symmetric", a.get_str("symmetric"));
     let cfg_path = a.get_str("config");
     if !cfg_path.is_empty() {
         match linear_sinkhorn::config::ConfigDoc::parse_file(cfg_path) {
@@ -338,7 +387,8 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
                 cfg = ServiceConfig::from_doc(&doc);
                 eprintln!(
                     "note: --config replaces all service flags (--workers/--solver-threads/\
-                     --cache/--stabilize/--max-batch/--shard-workers ignored)"
+                     --cache/--stabilize/--anneal/--anneal-decay/--symmetric/--max-batch/\
+                     --shard-workers ignored)"
                 );
             }
             Err(e) => {

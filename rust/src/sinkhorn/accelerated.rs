@@ -273,6 +273,9 @@ mod tests {
             threads: 1,
             stabilize: false,
             max_batch: 1,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         }
     }
 

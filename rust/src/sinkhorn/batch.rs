@@ -43,7 +43,8 @@ use crate::linalg::Mat;
 use crate::runtime::pool::Pool;
 
 use super::logdomain::first_non_finite;
-use super::{first_bad, objective, SinkhornSolution};
+use super::schedule::{alpha_from_scalings, warm_scalings, WarmSolve};
+use super::{first_bad, objective, PlainOutcome, SinkhornSolution};
 
 /// Copy the kept rows of a pair-major block into a fresh, smaller block.
 fn retain_rows(mat: &Mat, keep: &[usize]) -> Mat {
@@ -98,21 +99,59 @@ pub fn solve_batch<K: KernelOp + ?Sized>(
     pairs: &[(&[f32], &[f32])],
     cfg: &SinkhornConfig,
 ) -> Vec<Result<SinkhornSolution>> {
+    solve_batch_core(kernel, pairs, cfg, None).into_iter().map(|o| o.result).collect()
+}
+
+/// [`solve_batch`] with optional per-pair warm duals and the final dual
+/// reported per pair — the batched rung-to-rung chaining entry point of
+/// an [`EpsSchedule`](super::EpsSchedule). `warms`, when given, is
+/// index-aligned with `pairs`.
+pub fn solve_batch_warm<K: KernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    cfg: &SinkhornConfig,
+    warms: Option<&[Vec<f64>]>,
+) -> Vec<Result<WarmSolve>> {
+    solve_batch_core(kernel, pairs, cfg, warms)
+        .into_iter()
+        .map(|o| o.result.map(|solution| WarmSolve { solution, escalated: false, alpha: o.alpha }))
+        .collect()
+}
+
+fn solve_batch_core<K: KernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    cfg: &SinkhornConfig,
+    warms: Option<&[Vec<f64>]>,
+) -> Vec<PlainOutcome> {
     let (n, m) = (kernel.rows(), kernel.cols());
-    let mut slots: Vec<Option<Result<SinkhornSolution>>> =
-        (0..pairs.len()).map(|_| None).collect();
+    if let Some(ws) = warms {
+        assert_eq!(ws.len(), pairs.len(), "solve_batch: warms must align with pairs");
+    }
+    let mut slots: Vec<Option<PlainOutcome>> = (0..pairs.len()).map(|_| None).collect();
     // `live[row]` = index into `pairs` occupying row `row` of the
     // column-blocked state; finished rows are compacted away.
     let mut live: Vec<usize> = Vec::new();
     for (p, &(a, b)) in pairs.iter().enumerate() {
         if a.len() != n || b.len() != m {
-            slots[p] = Some(Err(Error::Shape(format!(
-                "sinkhorn: kernel {}x{} vs a[{}], b[{}]",
-                n,
-                m,
-                a.len(),
-                b.len()
-            ))));
+            slots[p] = Some(PlainOutcome {
+                result: Err(Error::Shape(format!(
+                    "sinkhorn: kernel {}x{} vs a[{}], b[{}]",
+                    n,
+                    m,
+                    a.len(),
+                    b.len()
+                ))),
+                alpha: Vec::new(),
+            });
+        } else if warms.is_some_and(|ws| ws[p].len() != n) {
+            slots[p] = Some(PlainOutcome {
+                result: Err(Error::Shape(format!(
+                    "sinkhorn: warm dual [{}] vs kernel {n}x{m}",
+                    warms.expect("checked")[p].len()
+                ))),
+                alpha: Vec::new(),
+            });
         } else {
             live.push(p);
         }
@@ -120,9 +159,26 @@ pub fn solve_batch<K: KernelOp + ?Sized>(
 
     let mut us = Mat::ones(live.len(), n);
     let mut vs = Mat::ones(live.len(), m);
+    // Warm rows replace the all-ones init with the same expression the
+    // sequential warm solver uses — bitwise per pair.
+    if let Some(ws) = warms {
+        for (row, &p) in live.iter().enumerate() {
+            us.row_mut(row).copy_from_slice(&warm_scalings(cfg.epsilon, pairs[p].0, &ws[p]));
+        }
+    }
     let mut kv = Mat::zeros(live.len(), n);
     let mut ktu = Mat::zeros(live.len(), m);
     let mut marginals = vec![f64::INFINITY; live.len()];
+    // Per-row last dual that passed a checkpoint, mirroring the
+    // sequential core (escalation warm starts).
+    let mut last_goods: Vec<Vec<f64>> = live
+        .iter()
+        .enumerate()
+        .map(|(row, &p)| match warms {
+            Some(ws) => ws[p].clone(),
+            None => alpha_from_scalings(cfg.epsilon, pairs[p].0, us.row(row)),
+        })
+        .collect();
 
     let check_every = cfg.check_every.max(1);
     let mut iter = 0;
@@ -147,17 +203,23 @@ pub fn solve_batch<K: KernelOp + ?Sized>(
         iter += 1;
 
         if iter % check_every == 0 || iter == cfg.max_iters {
-            // Divergence check on the scalings, pair by pair.
+            // Divergence check on the scalings, pair by pair; surviving
+            // rows refresh their last-good dual like the sequential core.
             for (row, &p) in live.iter().enumerate() {
                 if let Some(bad) = first_bad(us.row(row)).or_else(|| first_bad(vs.row(row))) {
-                    slots[p] = Some(Err(Error::SinkhornDiverged {
-                        iter,
-                        reason: format!(
-                            "non-finite or non-positive scaling ({bad}); kernel {} lost \
-                             positivity or eps is too small for f32",
-                            kernel.label()
-                        ),
-                    }));
+                    slots[p] = Some(PlainOutcome {
+                        result: Err(Error::SinkhornDiverged {
+                            iter,
+                            reason: format!(
+                                "non-finite or non-positive scaling ({bad}); kernel {} lost \
+                                 positivity or eps is too small for f32",
+                                kernel.label()
+                            ),
+                        }),
+                        alpha: std::mem::take(&mut last_goods[row]),
+                    });
+                } else {
+                    last_goods[row] = alpha_from_scalings(cfg.epsilon, pairs[p].0, us.row(row));
                 }
             }
             // Marginal errors: one fused transposed apply serves every
@@ -178,16 +240,19 @@ pub fn solve_batch<K: KernelOp + ?Sized>(
                     .sum();
                 marginals[row] = marginal;
                 if marginal < cfg.tol {
-                    slots[p] = Some(Ok(finish(
-                        kernel,
-                        pairs[p],
-                        cfg,
-                        us.row(row),
-                        vs.row(row),
-                        iter,
-                        marginal,
-                        true,
-                    )));
+                    slots[p] = Some(PlainOutcome {
+                        result: Ok(finish(
+                            kernel,
+                            pairs[p],
+                            cfg,
+                            us.row(row),
+                            vs.row(row),
+                            iter,
+                            marginal,
+                            true,
+                        )),
+                        alpha: std::mem::take(&mut last_goods[row]),
+                    });
                 }
             }
             // Freeze finished pairs: compact their rows out of the block.
@@ -199,6 +264,7 @@ pub fn solve_batch<K: KernelOp + ?Sized>(
                 kv = Mat::zeros(keep.len(), n);
                 ktu = Mat::zeros(keep.len(), m);
                 marginals = keep.iter().map(|&row| marginals[row]).collect();
+                last_goods = retain_vecs(last_goods, &keep);
                 live = keep.iter().map(|&row| live[row]).collect();
             }
         }
@@ -207,16 +273,19 @@ pub fn solve_batch<K: KernelOp + ?Sized>(
     // Pairs still live at the iteration cap exit un-converged, mirroring
     // the sequential loop's fall-through.
     for (row, &p) in live.iter().enumerate() {
-        slots[p] = Some(Ok(finish(
-            kernel,
-            pairs[p],
-            cfg,
-            us.row(row),
-            vs.row(row),
-            iter,
-            marginals[row],
-            false,
-        )));
+        slots[p] = Some(PlainOutcome {
+            result: Ok(finish(
+                kernel,
+                pairs[p],
+                cfg,
+                us.row(row),
+                vs.row(row),
+                iter,
+                marginals[row],
+                false,
+            )),
+            alpha: std::mem::take(&mut last_goods[row]),
+        });
     }
 
     slots.into_iter().map(|s| s.expect("every pair resolved")).collect()
@@ -260,10 +329,28 @@ pub fn solve_batch_log_domain<K: LogKernelOp + ?Sized>(
     pairs: &[(&[f32], &[f32])],
     cfg: &SinkhornConfig,
 ) -> Vec<Result<SinkhornSolution>> {
+    solve_batch_log_domain_warm(kernel, pairs, cfg, None)
+        .into_iter()
+        .map(|r| r.map(|ws| ws.solution))
+        .collect()
+}
+
+/// [`solve_batch_log_domain`] with optional per-pair warm duals and the
+/// final f64 dual reported per pair (the escalation/annealing currency —
+/// see [`sinkhorn_log_domain_warm`](super::sinkhorn_log_domain_warm)).
+/// `warms`, when given, is index-aligned with `pairs`.
+pub fn solve_batch_log_domain_warm<K: LogKernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    cfg: &SinkhornConfig,
+    warms: Option<&[Vec<f64>]>,
+) -> Vec<Result<WarmSolve>> {
     let (n, m) = kernel.shape();
     let eps = cfg.epsilon;
-    let mut slots: Vec<Option<Result<SinkhornSolution>>> =
-        (0..pairs.len()).map(|_| None).collect();
+    if let Some(ws) = warms {
+        assert_eq!(ws.len(), pairs.len(), "solve_batch_log_domain: warms must align with pairs");
+    }
+    let mut slots: Vec<Option<Result<WarmSolve>>> = (0..pairs.len()).map(|_| None).collect();
     let mut live: Vec<usize> = Vec::new();
     for (p, &(a, b)) in pairs.iter().enumerate() {
         if a.len() != n || b.len() != m {
@@ -271,6 +358,11 @@ pub fn solve_batch_log_domain<K: LogKernelOp + ?Sized>(
                 "log-domain sinkhorn: kernel {n}x{m} vs a[{}], b[{}]",
                 a.len(),
                 b.len()
+            ))));
+        } else if warms.is_some_and(|ws| ws[p].len() != n) {
+            slots[p] = Some(Err(Error::Shape(format!(
+                "log-domain sinkhorn: warm dual [{}] vs kernel {n}x{m}",
+                warms.expect("checked")[p].len()
             ))));
         } else {
             live.push(p);
@@ -282,7 +374,13 @@ pub fn solve_batch_log_domain<K: LogKernelOp + ?Sized>(
         live.iter().map(|&p| pairs[p].0.iter().map(|&x| (x as f64).ln()).collect()).collect();
     let mut log_bs: Vec<Vec<f64>> =
         live.iter().map(|&p| pairs[p].1.iter().map(|&x| (x as f64).ln()).collect()).collect();
-    let mut alphas: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; n]).collect();
+    let mut alphas: Vec<Vec<f64>> = live
+        .iter()
+        .map(|&p| match warms {
+            Some(ws) => ws[p].clone(),
+            None => vec![0.0f64; n],
+        })
+        .collect();
     let mut betas: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; m]).collect();
     let mut row_ins: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; n]).collect();
     let mut col_ins: Vec<Vec<f64>> = (0..bsize).map(|_| vec![0.0f64; m]).collect();
@@ -367,15 +465,13 @@ pub fn solve_batch_log_domain<K: LogKernelOp + ?Sized>(
                 }
                 marginals[row] = marginal;
                 if marginal < cfg.tol {
-                    slots[p] = Some(Ok(finish_log(
-                        pairs[p],
-                        eps,
-                        &alphas[row],
-                        &betas[row],
-                        iter,
-                        marginal,
-                        true,
-                    )));
+                    let solution =
+                        finish_log(pairs[p], eps, &alphas[row], &betas[row], iter, marginal, true);
+                    slots[p] = Some(Ok(WarmSolve {
+                        solution,
+                        escalated: false,
+                        alpha: std::mem::take(&mut alphas[row]),
+                    }));
                 }
             }
             // Compact finished rows out of every state vector.
@@ -397,15 +493,13 @@ pub fn solve_batch_log_domain<K: LogKernelOp + ?Sized>(
     }
 
     for (row, &p) in live_rows.iter().enumerate() {
-        slots[p] = Some(Ok(finish_log(
-            pairs[p],
-            eps,
-            &alphas[row],
-            &betas[row],
-            iter,
-            marginals[row],
-            false,
-        )));
+        let solution =
+            finish_log(pairs[p], eps, &alphas[row], &betas[row], iter, marginals[row], false);
+        slots[p] = Some(Ok(WarmSolve {
+            solution,
+            escalated: false,
+            alpha: std::mem::take(&mut alphas[row]),
+        }));
     }
 
     slots.into_iter().map(|s| s.expect("every pair resolved")).collect()
@@ -424,16 +518,37 @@ pub fn solve_batch_stabilized<K: KernelOp + ?Sized>(
     pairs: &[(&[f32], &[f32])],
     cfg: &SinkhornConfig,
 ) -> Vec<Result<(SinkhornSolution, bool)>> {
-    let plain = solve_batch(kernel, pairs, cfg);
-    let mut out: Vec<Option<Result<(SinkhornSolution, bool)>>> =
-        (0..pairs.len()).map(|_| None).collect();
+    solve_batch_stabilized_warm(kernel, pairs, cfg, None)
+        .into_iter()
+        .map(|r| r.map(|ws| (ws.solution, ws.escalated)))
+        .collect()
+}
+
+/// [`solve_batch_stabilized`] with warm-start chaining: optional per-pair
+/// warm duals in, final per-pair duals out. Escalated pairs warm-start
+/// the batched log-domain solve from their last checkpoint-good plain
+/// dual, exactly as [`sinkhorn_stabilized_warm`](super::sinkhorn_stabilized_warm)
+/// does one pair at a time — the bitwise lockstep the batched-equivalence
+/// suite pins.
+pub fn solve_batch_stabilized_warm<K: KernelOp + ?Sized>(
+    kernel: &K,
+    pairs: &[(&[f32], &[f32])],
+    cfg: &SinkhornConfig,
+    warms: Option<&[Vec<f64>]>,
+) -> Vec<Result<WarmSolve>> {
+    let plain = solve_batch_core(kernel, pairs, cfg, warms);
+    let mut out: Vec<Option<Result<WarmSolve>>> = (0..pairs.len()).map(|_| None).collect();
     let mut escalate: Vec<usize> = Vec::new();
-    for (p, res) in plain.into_iter().enumerate() {
-        match res {
-            Ok(sol) => out[p] = Some(Ok((sol, false))),
+    let mut esc_warms: Vec<Vec<f64>> = Vec::new();
+    for (p, o) in plain.into_iter().enumerate() {
+        match o.result {
+            Ok(solution) => {
+                out[p] = Some(Ok(WarmSolve { solution, escalated: false, alpha: o.alpha }))
+            }
             Err(Error::SinkhornDiverged { iter, reason }) if cfg.stabilize => {
                 if kernel.as_log_kernel().is_some() {
                     escalate.push(p);
+                    esc_warms.push(o.alpha);
                 } else {
                     out[p] = Some(Err(Error::SinkhornDiverged { iter, reason }));
                 }
@@ -445,9 +560,14 @@ pub fn solve_batch_stabilized<K: KernelOp + ?Sized>(
         let log_kernel = kernel.as_log_kernel().expect("escalation implies a log view");
         let esc_pairs: Vec<(&[f32], &[f32])> = escalate.iter().map(|&p| pairs[p]).collect();
         for (i, res) in
-            solve_batch_log_domain(log_kernel, &esc_pairs, cfg).into_iter().enumerate()
+            solve_batch_log_domain_warm(log_kernel, &esc_pairs, cfg, Some(&esc_warms))
+                .into_iter()
+                .enumerate()
         {
-            out[escalate[i]] = Some(res.map(|sol| (sol, true)));
+            out[escalate[i]] = Some(res.map(|mut ws| {
+                ws.escalated = true;
+                ws
+            }));
         }
     }
     out.into_iter().map(|o| o.expect("every pair resolved")).collect()
@@ -506,6 +626,9 @@ mod tests {
             threads: 1,
             stabilize: false,
             max_batch: 8,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         }
     }
 

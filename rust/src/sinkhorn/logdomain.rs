@@ -28,6 +28,7 @@ use crate::error::{Error, Result};
 use crate::kernels::LogKernelOp;
 use crate::linalg::Mat;
 
+use super::schedule::WarmSolve;
 use super::SinkhornSolution;
 
 /// Log-domain Sinkhorn over any log-space kernel operator.
@@ -44,6 +45,21 @@ pub fn sinkhorn_log_domain<K: LogKernelOp + ?Sized>(
     b: &[f32],
     cfg: &SinkhornConfig,
 ) -> Result<SinkhornSolution> {
+    sinkhorn_log_domain_warm(kernel, a, b, cfg, None).map(|ws| ws.solution)
+}
+
+/// [`sinkhorn_log_domain`] with an optional warm dual and the final f64
+/// dual reported back. The f64 dual is the escalation/annealing currency
+/// — extracting it from the solution's f32 scalings would saturate at
+/// the small eps this solver exists for, so it travels directly. With
+/// `warm = None` (or a zero dual) this is exactly the cold solve.
+pub fn sinkhorn_log_domain_warm<K: LogKernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    b: &[f32],
+    cfg: &SinkhornConfig,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
     let (n, m) = kernel.shape();
     if a.len() != n || b.len() != m {
         return Err(Error::Shape(format!(
@@ -52,10 +68,21 @@ pub fn sinkhorn_log_domain<K: LogKernelOp + ?Sized>(
             b.len()
         )));
     }
+    if let Some(w) = warm {
+        if w.len() != n {
+            return Err(Error::Shape(format!(
+                "log-domain sinkhorn: warm dual [{}] vs kernel {n}x{m}",
+                w.len()
+            )));
+        }
+    }
     let eps = cfg.epsilon;
     let log_a: Vec<f64> = a.iter().map(|&x| (x as f64).ln()).collect();
     let log_b: Vec<f64> = b.iter().map(|&x| (x as f64).ln()).collect();
-    let mut alpha = vec![0.0f64; n];
+    let mut alpha: Vec<f64> = match warm {
+        Some(w) => w.to_vec(),
+        None => vec![0.0f64; n],
+    };
     let mut beta = vec![0.0f64; m];
 
     let check_every = cfg.check_every.max(1);
@@ -132,7 +159,7 @@ pub fn sinkhorn_log_domain<K: LogKernelOp + ?Sized>(
         + b.iter().zip(&beta).map(|(&bi, &be)| bi as f64 * be).sum::<f64>()
         + offset;
 
-    Ok(SinkhornSolution {
+    let solution = SinkhornSolution {
         u: alpha
             .iter()
             .zip(a)
@@ -147,7 +174,8 @@ pub fn sinkhorn_log_domain<K: LogKernelOp + ?Sized>(
         iterations: iter,
         marginal_error: marginal,
         converged,
-    })
+    };
+    Ok(WarmSolve { solution, escalated: false, alpha })
 }
 
 pub(crate) fn first_non_finite(xs: &[f64]) -> Option<String> {
@@ -187,6 +215,9 @@ mod tests {
             threads: 1,
             stabilize: false,
             max_batch: 1,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         }
     }
 

@@ -42,14 +42,21 @@ mod batch;
 mod exact;
 mod flow;
 mod logdomain;
+mod schedule;
 
 pub use accelerated::{sinkhorn_accelerated, AccelSolution};
 pub use batch::{
-    sinkhorn_divergence_batch, solve_batch, solve_batch_log_domain, solve_batch_stabilized,
+    sinkhorn_divergence_batch, solve_batch, solve_batch_log_domain, solve_batch_log_domain_warm,
+    solve_batch_stabilized, solve_batch_stabilized_warm, solve_batch_warm,
 };
 pub use exact::{exact_ot_uniform, hungarian};
 pub use flow::{divergence_grad_locations, gradient_flow_step, FlowEval};
-pub use logdomain::{sinkhorn_log_domain, sq_euclidean_cost};
+pub use logdomain::{sinkhorn_log_domain, sinkhorn_log_domain_warm, sq_euclidean_cost};
+pub use schedule::{
+    sinkhorn_symmetric, sinkhorn_symmetric_log, sinkhorn_symmetric_log_warm,
+    sinkhorn_symmetric_stabilized, sinkhorn_symmetric_stabilized_warm, sinkhorn_symmetric_warm,
+    EpsSchedule, WarmSolve, MAX_RUNGS,
+};
 
 use crate::config::SinkhornConfig;
 use crate::error::{Error, Result};
@@ -103,9 +110,44 @@ pub fn sinkhorn<K: KernelOp + ?Sized>(
     b: &[f32],
     cfg: &SinkhornConfig,
 ) -> Result<SinkhornSolution> {
+    sinkhorn_core(kernel, a, b, cfg, None).result
+}
+
+/// Alg. 1 with an optional warm dual and the final dual reported back —
+/// the rung-to-rung chaining entry point of an [`EpsSchedule`]. The
+/// warm dual is the a⊗b-relative row potential (see [`WarmSolve`]); with
+/// `warm = None` this is exactly [`sinkhorn`].
+pub fn sinkhorn_warm<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    b: &[f32],
+    cfg: &SinkhornConfig,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
+    let out = sinkhorn_core(kernel, a, b, cfg, warm);
+    out.result.map(|solution| WarmSolve { solution, escalated: false, alpha: out.alpha })
+}
+
+/// Outcome of the plain core: the sequential result plus the dual the
+/// solve ended on — the final dual on success, the dual from the last
+/// checkpoint that passed the finite-positive check on divergence (which
+/// is what the log-domain escalation warm-starts from).
+pub(crate) struct PlainOutcome {
+    pub(crate) result: Result<SinkhornSolution>,
+    pub(crate) alpha: Vec<f64>,
+}
+
+pub(crate) fn sinkhorn_core<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    b: &[f32],
+    cfg: &SinkhornConfig,
+    warm: Option<&[f64]>,
+) -> PlainOutcome {
+    let fail = |e: Error| PlainOutcome { result: Err(e), alpha: Vec::new() };
     let (n, m) = (kernel.rows(), kernel.cols());
     if a.len() != n || b.len() != m {
-        return Err(Error::Shape(format!(
+        return fail(Error::Shape(format!(
             "sinkhorn: kernel {}x{} vs a[{}], b[{}]",
             n,
             m,
@@ -113,11 +155,28 @@ pub fn sinkhorn<K: KernelOp + ?Sized>(
             b.len()
         )));
     }
-    let mut u = vec![1.0f32; n];
+    if let Some(w) = warm {
+        if w.len() != n {
+            return fail(Error::Shape(format!(
+                "sinkhorn: warm dual [{}] vs kernel {n}x{m}",
+                w.len()
+            )));
+        }
+    }
+    let mut u: Vec<f32> = match warm {
+        Some(w) => schedule::warm_scalings(cfg.epsilon, a, w),
+        None => vec![1.0f32; n],
+    };
     let mut v = vec![1.0f32; m];
     // Preallocated work buffers — the loop is allocation-free.
     let mut kv = vec![0.0f32; n];
     let mut ktu = vec![0.0f32; m];
+    // Last dual that passed a checkpoint (init: the warm dual itself, or
+    // the dual of u = 1) — kept in f64 so escalation never restarts cold.
+    let mut last_good: Vec<f64> = match warm {
+        Some(w) => w.to_vec(),
+        None => schedule::alpha_from_scalings(cfg.epsilon, a, &u),
+    };
 
     let check_every = cfg.check_every.max(1);
     let mut iter = 0;
@@ -140,15 +199,19 @@ pub fn sinkhorn<K: KernelOp + ?Sized>(
         if iter % check_every == 0 || iter == cfg.max_iters {
             // Divergence check on the scalings themselves.
             if let Some(bad) = first_bad(&u).or_else(|| first_bad(&v)) {
-                return Err(Error::SinkhornDiverged {
-                    iter,
-                    reason: format!(
-                        "non-finite or non-positive scaling ({bad}); kernel {} lost positivity \
-                         or eps is too small for f32",
-                        kernel.label()
-                    ),
-                });
+                return PlainOutcome {
+                    result: Err(Error::SinkhornDiverged {
+                        iter,
+                        reason: format!(
+                            "non-finite or non-positive scaling ({bad}); kernel {} lost \
+                             positivity or eps is too small for f32",
+                            kernel.label()
+                        ),
+                    }),
+                    alpha: last_good,
+                };
             }
+            last_good = schedule::alpha_from_scalings(cfg.epsilon, a, &u);
             // Marginal error ||v o K^T u - b||_1.
             kernel.apply_t_into(&u, &mut ktu);
             marginal = (0..m)
@@ -161,16 +224,19 @@ pub fn sinkhorn<K: KernelOp + ?Sized>(
         }
     }
 
-    Ok(SinkhornSolution {
-        // `-eps log_scale` compensates stabilised kernels (K_true = c K):
-        // scaling K by c shifts the dual estimate by -eps log c.
-        objective: objective(cfg.epsilon, a, b, &u, &v) - cfg.epsilon * kernel.log_scale(),
-        u,
-        v,
-        iterations: iter,
-        marginal_error: marginal,
-        converged,
-    })
+    PlainOutcome {
+        result: Ok(SinkhornSolution {
+            // `-eps log_scale` compensates stabilised kernels (K_true = c K):
+            // scaling K by c shifts the dual estimate by -eps log c.
+            objective: objective(cfg.epsilon, a, b, &u, &v) - cfg.epsilon * kernel.log_scale(),
+            u,
+            v,
+            iterations: iter,
+            marginal_error: marginal,
+            converged,
+        }),
+        alpha: last_good,
+    }
 }
 
 pub(crate) fn first_bad(xs: &[f32]) -> Option<String> {
@@ -184,9 +250,11 @@ pub(crate) fn first_bad(xs: &[f32]) -> Option<String> {
 
 /// Alg. 1 with automatic small-eps escalation: when the plain iteration
 /// reports non-finite scalings ([`Error::SinkhornDiverged`]) and
-/// `cfg.stabilize` is set, retry on the matrix-free log-domain solver
-/// ([`sinkhorn_log_domain`]) through the kernel's
-/// [`KernelOp::as_log_kernel`] view. Returns the solution plus whether
+/// `cfg.stabilize` is set, continue on the matrix-free log-domain solver
+/// ([`sinkhorn_log_domain_warm`]) through the kernel's
+/// [`KernelOp::as_log_kernel`] view, **warm-started from the last dual
+/// that passed a checkpoint** — the plain iterations done before the
+/// blow-up are no longer thrown away. Returns the solution plus whether
 /// the stabilised path was taken (the coordinator exports that as the
 /// `service.stabilized_solves` metric).
 ///
@@ -199,12 +267,28 @@ pub fn sinkhorn_stabilized<K: KernelOp + ?Sized>(
     b: &[f32],
     cfg: &SinkhornConfig,
 ) -> Result<(SinkhornSolution, bool)> {
-    match sinkhorn(kernel, a, b, cfg) {
-        Ok(sol) => Ok((sol, false)),
+    sinkhorn_stabilized_warm(kernel, a, b, cfg, None).map(|ws| (ws.solution, ws.escalated))
+}
+
+/// [`sinkhorn_stabilized`] with warm-start chaining: the annealed
+/// executor's per-rung work-horse for the auto-escalate domain.
+pub fn sinkhorn_stabilized_warm<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    b: &[f32],
+    cfg: &SinkhornConfig,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
+    let out = sinkhorn_core(kernel, a, b, cfg, warm);
+    match out.result {
+        Ok(solution) => Ok(WarmSolve { solution, escalated: false, alpha: out.alpha }),
         Err(Error::SinkhornDiverged { iter, reason }) if cfg.stabilize => {
             match kernel.as_log_kernel() {
                 Some(log_kernel) => {
-                    sinkhorn_log_domain(log_kernel, a, b, cfg).map(|sol| (sol, true))
+                    let mut ws =
+                        sinkhorn_log_domain_warm(log_kernel, a, b, cfg, Some(&out.alpha))?;
+                    ws.escalated = true;
+                    Ok(ws)
                 }
                 None => Err(Error::SinkhornDiverged { iter, reason }),
             }
@@ -224,6 +308,14 @@ pub fn sinkhorn_stabilized<K: KernelOp + ?Sized>(
 /// historical sequential path (xy, then xx, then yy). Each solve runs
 /// through [`sinkhorn_stabilized`], so small-eps divergences escalate to
 /// the log-domain path when `cfg.stabilize` is set.
+///
+/// When `cfg.symmetric` is `Some(true)` the xx/yy self-terms run the
+/// dedicated one-dual symmetric fixed point
+/// ([`sinkhorn_symmetric_stabilized`]) instead of full two-sided solves —
+/// half the kernel applies per self-iteration, with the same objective up
+/// to solver tolerance (the fixed points differ by a constant that
+/// cancels). `None`/`Some(false)` keeps the historical two-sided path;
+/// the planned API resolves `None` per plan (`symmetric_self_solves`).
 pub fn sinkhorn_divergence<K: KernelOp + Sync + ?Sized>(
     k_xy: &K,
     k_xx: &K,
@@ -233,6 +325,14 @@ pub fn sinkhorn_divergence<K: KernelOp + Sync + ?Sized>(
     cfg: &SinkhornConfig,
 ) -> Result<f64> {
     let pool = Pool::new_capped(cfg.threads, 3);
+    if cfg.symmetric == Some(true) {
+        let (r_xy, r_xx, r_yy) = pool.join3(
+            || sinkhorn_stabilized(k_xy, a, b, cfg),
+            || sinkhorn_symmetric_stabilized(k_xx, a, cfg),
+            || sinkhorn_symmetric_stabilized(k_yy, b, cfg),
+        );
+        return Ok(r_xy?.0.objective - 0.5 * (r_xx?.0.objective + r_yy?.0.objective));
+    }
     let (r_xy, r_xx, r_yy) = pool.join3(
         || sinkhorn_stabilized(k_xy, a, b, cfg),
         || sinkhorn_stabilized(k_xx, a, a, cfg),
@@ -284,6 +384,11 @@ pub fn ground_truth_config(eps: f64) -> SinkhornConfig {
         threads: 1,
         stabilize: false,
         max_batch: 1,
+        // Ground truth is always the direct, two-sided solve: no
+        // annealing schedule, no symmetric shortcut.
+        anneal: Some(false),
+        anneal_decay: 0.5,
+        symmetric: Some(false),
     }
 }
 
@@ -331,6 +436,9 @@ mod tests {
             threads: 1,
             stabilize: false,
             max_batch: 1,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         }
     }
 

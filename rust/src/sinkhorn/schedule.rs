@@ -1,0 +1,543 @@
+//! Eps-annealing schedules and the symmetric fixed-point iteration.
+//!
+//! **Annealing.** Sinkhorn's contraction factor degrades as eps shrinks
+//! (iteration complexity scales like 1/eps — Altschuler–Weed–Rigollet,
+//! arXiv:1705.09634), so solving at a small target eps from cold duals is
+//! the expensive way in. [`EpsSchedule`] describes the standard fix: a
+//! geometric ladder of regularisations from roughly the squared support
+//! diameter (where Sinkhorn converges in a handful of iterations) down to
+//! the target, each rung warm-started from the previous rung's dual
+//! potential. The schedule itself is a pure function of two f64 scalars,
+//! so every executor — local, batched, or a remote shard worker that
+//! received the plan over the wire — derives bit-identical rungs.
+//!
+//! **Warm starts.** The currency between rungs (and between the plain and
+//! log-domain solvers on escalation) is the f64 row dual `alpha` of the
+//! a⊗b-relative formulation used by the log-domain solver: the plain
+//! solver's scaling is `u_i = a_i exp(alpha_i / eps)`. Both solvers update
+//! the column dual first, so only `alpha` needs to travel. [`WarmSolve`]
+//! carries a solution together with its final `alpha`.
+//!
+//! **Symmetric self-solves.** The xx/yy terms of the Sinkhorn divergence
+//! are transport problems of a measure against itself; their fixed point
+//! is symmetric (u = v up to an irrelevant constant), so a dedicated
+//! damped iteration on a *single* dual vector
+//! (`f ← 0.5 (f + T(f))`, the classic averaged update) halves the work
+//! per iteration and converges monotonically where the alternating
+//! two-sided update can oscillate. [`sinkhorn_symmetric`] runs it in f32
+//! scalings (`u ← sqrt(u ∘ a / Ku)`, the same update in exp form),
+//! [`sinkhorn_symmetric_log`] in f64 duals, and
+//! [`sinkhorn_symmetric_stabilized`] glues them with the same
+//! escalate-on-divergence contract as
+//! [`sinkhorn_stabilized`](super::sinkhorn_stabilized).
+
+use crate::config::SinkhornConfig;
+use crate::error::{Error, Result};
+use crate::kernels::{KernelOp, LogKernelOp};
+
+use super::logdomain::first_non_finite;
+use super::{first_bad, objective, SinkhornSolution};
+
+/// Hard cap on schedule length: a decay pathologically close to 1 must
+/// not turn one solve into thousands. 64 geometric rungs at decay 0.5
+/// span 19 orders of magnitude — far beyond any representable regime.
+pub const MAX_RUNGS: usize = 64;
+
+/// A geometric eps-annealing schedule: start at `eps_start` and multiply
+/// by `decay` until the target regularisation is reached.
+///
+/// The target eps is *not* stored here — it lives in the
+/// [`Plan`](crate::api::Plan) / [`SinkhornConfig`] next to this schedule,
+/// so the two can never disagree. [`EpsSchedule::rungs`] materialises the
+/// ladder for a given target; the last rung is always exactly the target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpsSchedule {
+    /// First (largest) regularisation. The planner picks `4 R^2` where
+    /// `R` is the larger support radius — the scale at which the Gibbs
+    /// kernel is nearly flat and Sinkhorn converges almost immediately.
+    pub eps_start: f64,
+    /// Geometric damping factor in (0, 1); 0.5 halves eps per rung.
+    pub decay: f64,
+}
+
+impl EpsSchedule {
+    /// Validating constructor.
+    pub fn new(eps_start: f64, decay: f64) -> Result<Self> {
+        if !(eps_start.is_finite() && eps_start > 0.0) {
+            return Err(Error::Config(format!(
+                "eps schedule: eps_start must be positive and finite, got {eps_start}"
+            )));
+        }
+        if !(decay.is_finite() && decay > 0.0 && decay < 1.0) {
+            return Err(Error::Config(format!(
+                "eps schedule: decay must lie in (0, 1), got {decay}"
+            )));
+        }
+        Ok(EpsSchedule { eps_start, decay })
+    }
+
+    /// The eps ladder down to (and ending exactly at) `target`.
+    ///
+    /// Pure f64 arithmetic on two scalars: every host that holds the same
+    /// schedule and target derives the same rungs bit for bit, which is
+    /// what lets sharded workers anneal identically to the local solve.
+    /// Degenerate inputs (`eps_start <= target`) yield `[target]` — a
+    /// single-rung schedule is exactly the direct solve.
+    pub fn rungs(&self, target: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut e = self.eps_start;
+        while e > target && out.len() < MAX_RUNGS - 1 {
+            out.push(e);
+            e *= self.decay;
+        }
+        out.push(target);
+        out
+    }
+}
+
+/// A solve result carrying the f64 dual it ended on, so the next rung of
+/// an annealing schedule (or a log-domain escalation) can warm-start.
+#[derive(Clone, Debug)]
+pub struct WarmSolve {
+    /// The solution, exactly as the underlying solver reports it.
+    pub solution: SinkhornSolution,
+    /// Whether the log-domain path produced it (plain-solver escalation).
+    pub escalated: bool,
+    /// Final a⊗b-relative row dual: `u_i = a_i exp(alpha_i / eps)`.
+    pub alpha: Vec<f64>,
+}
+
+/// f32 scalings from a warm dual: `u_i = a_i exp(alpha_i / eps)` — the
+/// same expression the log-domain solver uses to report its scalings, so
+/// plain rungs warm-started from log rungs round-trip consistently.
+pub(crate) fn warm_scalings(eps: f64, a: &[f32], alpha: &[f64]) -> Vec<f32> {
+    alpha.iter().zip(a).map(|(&al, &ai)| (ai as f64 * (al / eps).exp()) as f32).collect()
+}
+
+/// The inverse map, used to snapshot a plain solver's state as a warm
+/// dual: `alpha_i = eps (ln u_i - ln a_i)`. Callers only invoke this on
+/// scalings that passed the finite-positive check.
+pub(crate) fn alpha_from_scalings(eps: f64, a: &[f32], u: &[f32]) -> Vec<f64> {
+    u.iter().zip(a).map(|(&ui, &ai)| eps * ((ui as f64).ln() - (ai as f64).ln())).collect()
+}
+
+/// Validate a square self-transport setup.
+fn check_symmetric<K: ?Sized>(n: usize, m: usize, a: &[f32], _k: &K) -> Result<()> {
+    if n != m {
+        return Err(Error::Shape(format!(
+            "symmetric sinkhorn: kernel {n}x{m} is not square"
+        )));
+    }
+    if a.len() != n {
+        return Err(Error::Shape(format!(
+            "symmetric sinkhorn: kernel {n}x{n} vs a[{}]",
+            a.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Symmetric fixed-point Sinkhorn on one dual vector, in f32 scalings.
+///
+/// For a self-transport problem (square kernel, both marginals `a`) the
+/// damped update `u <- sqrt(u ∘ a / Ku)` is the exp-form of the averaged
+/// dual iteration `f <- 0.5 (f + T(f))`; one kernel apply per iteration
+/// instead of two, one dual vector instead of two. The objective is
+/// Eq. (6) with v = u, directly comparable to a two-sided self-solve
+/// (whose fixed point differs from the symmetric one only by a constant
+/// factor that cancels in the objective).
+pub fn sinkhorn_symmetric<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    cfg: &SinkhornConfig,
+) -> Result<SinkhornSolution> {
+    sinkhorn_symmetric_warm(kernel, a, cfg, None).map(|ws| ws.solution)
+}
+
+/// [`sinkhorn_symmetric`] with an optional warm dual, reporting the final
+/// dual for annealing chains. Diverged solves error like the plain
+/// solver; use [`sinkhorn_symmetric_stabilized_warm`] for escalation.
+pub fn sinkhorn_symmetric_warm<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    cfg: &SinkhornConfig,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
+    match symmetric_core(kernel, a, cfg, warm) {
+        SymOutcome::Done(ws) => Ok(ws),
+        SymOutcome::Diverged { error, .. } | SymOutcome::Failed(error) => Err(error),
+    }
+}
+
+/// Outcome of the plain symmetric core: either a finished solve, a
+/// divergence carrying the last known-good dual (escalation warm start),
+/// or a hard setup error.
+enum SymOutcome {
+    Done(WarmSolve),
+    Diverged { error: Error, alpha: Vec<f64> },
+    Failed(Error),
+}
+
+fn symmetric_core<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    cfg: &SinkhornConfig,
+    warm: Option<&[f64]>,
+) -> SymOutcome {
+    let (n, m) = (kernel.rows(), kernel.cols());
+    if let Err(e) = check_symmetric(n, m, a, kernel) {
+        return SymOutcome::Failed(e);
+    }
+    if let Some(w) = warm {
+        if w.len() != n {
+            return SymOutcome::Failed(Error::Shape(format!(
+                "symmetric sinkhorn: warm dual [{}] vs kernel {n}x{n}",
+                w.len()
+            )));
+        }
+    }
+    let eps = cfg.epsilon;
+    let mut u: Vec<f32> = match warm {
+        Some(w) => warm_scalings(eps, a, w),
+        None => vec![1.0f32; n],
+    };
+    let mut ku = vec![0.0f32; n];
+    // Last dual that passed a finite-positive check (init: the warm dual
+    // itself, or the u = 1 dual), handed to the log-domain escalation.
+    let mut last_good: Vec<f64> = match warm {
+        Some(w) => w.to_vec(),
+        None => alpha_from_scalings(eps, a, &u),
+    };
+
+    let check_every = cfg.check_every.max(1);
+    let mut iter = 0;
+    let mut marginal = f64::INFINITY;
+    let mut converged = false;
+
+    while iter < cfg.max_iters {
+        // u <- sqrt(u ∘ a / Ku): the 0.5-damped symmetric update.
+        kernel.apply_into(&u, &mut ku);
+        for i in 0..n {
+            u[i] = (u[i] * (a[i] / ku[i])).sqrt();
+        }
+        iter += 1;
+
+        if iter % check_every == 0 || iter == cfg.max_iters {
+            if let Some(bad) = first_bad(&u) {
+                return SymOutcome::Diverged {
+                    error: Error::SinkhornDiverged {
+                        iter,
+                        reason: format!(
+                            "non-finite or non-positive scaling ({bad}) in symmetric \
+                             sinkhorn; kernel {} lost positivity or eps is too small for f32",
+                            kernel.label()
+                        ),
+                    },
+                    alpha: last_good,
+                };
+            }
+            last_good = alpha_from_scalings(eps, a, &u);
+            // Row marginal of P = diag(u) K diag(u) against a.
+            kernel.apply_into(&u, &mut ku);
+            marginal = (0..n).map(|i| ((u[i] * ku[i] - a[i]) as f64).abs()).sum();
+            if marginal < cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    let sol = SinkhornSolution {
+        objective: objective(eps, a, a, &u, &u) - eps * kernel.log_scale(),
+        v: u.clone(),
+        u,
+        iterations: iter,
+        marginal_error: marginal,
+        converged,
+    };
+    SymOutcome::Done(WarmSolve { solution: sol, escalated: false, alpha: last_good })
+}
+
+/// Symmetric fixed-point iteration in the log domain: the averaged dual
+/// update `f <- 0.5 (f + T(f))` with
+/// `T(f)_i = -eps lse_j(log K_ij + f_j/eps + log a_j)`, matrix-free over
+/// any [`LogKernelOp`] — the small-eps-safe arm of the symmetric solve.
+pub fn sinkhorn_symmetric_log<K: LogKernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    cfg: &SinkhornConfig,
+) -> Result<SinkhornSolution> {
+    sinkhorn_symmetric_log_warm(kernel, a, cfg, None).map(|ws| ws.solution)
+}
+
+/// [`sinkhorn_symmetric_log`] with an optional warm dual, reporting the
+/// final dual for annealing chains.
+pub fn sinkhorn_symmetric_log_warm<K: LogKernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    cfg: &SinkhornConfig,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
+    let (n, m) = kernel.shape();
+    check_symmetric(n, m, a, kernel)?;
+    if let Some(w) = warm {
+        if w.len() != n {
+            return Err(Error::Shape(format!(
+                "symmetric sinkhorn: warm dual [{}] vs kernel {n}x{n}",
+                w.len()
+            )));
+        }
+    }
+    let eps = cfg.epsilon;
+    let log_a: Vec<f64> = a.iter().map(|&x| (x as f64).ln()).collect();
+    let mut f: Vec<f64> = match warm {
+        Some(w) => w.to_vec(),
+        None => vec![0.0f64; n],
+    };
+    let mut t_in = vec![0.0f64; n];
+    let mut t_out = vec![0.0f64; n];
+
+    let check_every = cfg.check_every.max(1);
+    let mut iter = 0;
+    let mut marginal = f64::INFINITY;
+    let mut converged = false;
+
+    while iter < cfg.max_iters {
+        // f <- 0.5 (f + T(f)).
+        for i in 0..n {
+            t_in[i] = f[i] / eps + log_a[i];
+        }
+        kernel.apply_log(&t_in, &mut t_out);
+        for i in 0..n {
+            f[i] = 0.5 * (f[i] - eps * t_out[i]);
+        }
+        iter += 1;
+
+        if iter % check_every == 0 || iter == cfg.max_iters {
+            if let Some(bad) = first_non_finite(&f) {
+                return Err(Error::SinkhornDiverged {
+                    iter,
+                    reason: format!(
+                        "non-finite dual potential ({bad}) in symmetric log-domain \
+                         sinkhorn on {}; the kernel has an empty (all -inf) row",
+                        kernel.describe()
+                    ),
+                });
+            }
+            // Row marginal of P_ij = a_i a_j exp((f_i + f_j)/eps + log K_ij).
+            for i in 0..n {
+                t_in[i] = f[i] / eps + log_a[i];
+            }
+            kernel.apply_log(&t_in, &mut t_out);
+            marginal = 0.0;
+            for i in 0..n {
+                let row_mass = (t_out[i] + f[i] / eps + log_a[i]).exp();
+                marginal += (row_mass - a[i] as f64).abs();
+            }
+            if marginal < cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    // Objective: Eq. (6) with alpha = beta = f plus the entropy offset
+    // for both marginals, exactly as the two-sided log solver computes it
+    // with a = b.
+    let offset: f64 =
+        2.0 * eps * a.iter().map(|&ai| (ai as f64) * (ai as f64).ln()).sum::<f64>();
+    let obj: f64 =
+        2.0 * a.iter().zip(&f).map(|(&ai, &fi)| ai as f64 * fi).sum::<f64>() + offset;
+    let u: Vec<f32> =
+        f.iter().zip(a).map(|(&x, &ai)| (ai as f64 * (x / eps).exp()) as f32).collect();
+    let sol = SinkhornSolution {
+        objective: obj,
+        v: u.clone(),
+        u,
+        iterations: iter,
+        marginal_error: marginal,
+        converged,
+    };
+    Ok(WarmSolve { solution: sol, escalated: false, alpha: f })
+}
+
+/// Symmetric solve with automatic small-eps escalation: run the f32
+/// fixed point, and when it reports non-finite scalings under
+/// `cfg.stabilize`, continue on the log-domain symmetric iteration warm-
+/// started from the last known-good dual — the same contract as
+/// [`sinkhorn_stabilized`](super::sinkhorn_stabilized), one dual instead
+/// of two.
+pub fn sinkhorn_symmetric_stabilized<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    cfg: &SinkhornConfig,
+) -> Result<(SinkhornSolution, bool)> {
+    sinkhorn_symmetric_stabilized_warm(kernel, a, cfg, None)
+        .map(|ws| (ws.solution, ws.escalated))
+}
+
+/// [`sinkhorn_symmetric_stabilized`] with warm-start chaining.
+pub fn sinkhorn_symmetric_stabilized_warm<K: KernelOp + ?Sized>(
+    kernel: &K,
+    a: &[f32],
+    cfg: &SinkhornConfig,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
+    match symmetric_core(kernel, a, cfg, warm) {
+        SymOutcome::Done(ws) => Ok(ws),
+        SymOutcome::Diverged { error, alpha } if cfg.stabilize => match kernel.as_log_kernel() {
+            Some(log_kernel) => {
+                let mut ws = sinkhorn_symmetric_log_warm(log_kernel, a, cfg, Some(&alpha))?;
+                ws.escalated = true;
+                Ok(ws)
+            }
+            None => Err(error),
+        },
+        SymOutcome::Diverged { error, .. } | SymOutcome::Failed(error) => Err(error),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::features::GaussianFeatureMap;
+    use crate::kernels::{DenseKernel, FactoredKernel};
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+    use crate::sinkhorn::sinkhorn_stabilized;
+
+    fn cfg(eps: f64) -> SinkhornConfig {
+        SinkhornConfig {
+            epsilon: eps,
+            max_iters: 5000,
+            tol: 1e-6,
+            check_every: 5,
+            threads: 1,
+            stabilize: false,
+            max_batch: 1,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
+        }
+    }
+
+    #[test]
+    fn rungs_descend_geometrically_and_end_at_target() {
+        let s = EpsSchedule::new(8.0, 0.5).unwrap();
+        let r = s.rungs(1e-1);
+        assert_eq!(r.first().copied(), Some(8.0));
+        assert_eq!(r.last().copied(), Some(1e-1));
+        for w in r.windows(2) {
+            assert!(w[1] < w[0], "rungs must strictly descend: {r:?}");
+        }
+        // 8, 4, 2, 1, 0.5, 0.25, 0.125, 0.1.
+        assert_eq!(r.len(), 8);
+    }
+
+    #[test]
+    fn degenerate_schedule_is_the_direct_solve() {
+        let s = EpsSchedule::new(0.05, 0.5).unwrap();
+        assert_eq!(s.rungs(0.5), vec![0.5]);
+        assert_eq!(s.rungs(0.05), vec![0.05]);
+    }
+
+    #[test]
+    fn rung_count_is_capped() {
+        let s = EpsSchedule::new(1e30, 0.999).unwrap();
+        let r = s.rungs(1e-12);
+        assert_eq!(r.len(), MAX_RUNGS);
+        assert_eq!(r.last().copied(), Some(1e-12));
+    }
+
+    #[test]
+    fn schedule_validation_rejects_bad_parameters() {
+        assert!(EpsSchedule::new(0.0, 0.5).is_err());
+        assert!(EpsSchedule::new(f64::NAN, 0.5).is_err());
+        assert!(EpsSchedule::new(1.0, 0.0).is_err());
+        assert!(EpsSchedule::new(1.0, 1.0).is_err());
+        assert!(EpsSchedule::new(1.0, -0.5).is_err());
+    }
+
+    #[test]
+    fn symmetric_matches_two_sided_self_solve_objective() {
+        let mut rng = Rng::seed_from(40);
+        let (mu, _) = data::gaussian_blobs(40, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &mu, 0.5);
+        let sym = sinkhorn_symmetric(&k, &mu.weights, &cfg(0.5)).unwrap();
+        let (two, _) = sinkhorn_stabilized(&k, &mu.weights, &mu.weights, &cfg(0.5)).unwrap();
+        assert!(sym.converged, "symmetric solve should converge: err {}", sym.marginal_error);
+        let rel = (sym.objective - two.objective).abs() / two.objective.abs().max(1.0);
+        assert!(rel < 1e-4, "sym {} vs two-sided {} (rel {rel:.2e})", sym.objective, two.objective);
+    }
+
+    #[test]
+    fn symmetric_log_matches_plain_symmetric_at_moderate_eps() {
+        let mut rng = Rng::seed_from(41);
+        let (mu, _) = data::gaussian_blobs(30, &mut rng);
+        let fm = GaussianFeatureMap::fit(&mu, &mu, 0.5, 64, &mut rng);
+        let k = FactoredKernel::from_measures_stabilized(&fm, &mu, &mu);
+        let plain = sinkhorn_symmetric(&k, &mu.weights, &cfg(0.5)).unwrap();
+        let logd = sinkhorn_symmetric_log(&k, &mu.weights, &cfg(0.5)).unwrap();
+        let rel = (plain.objective - logd.objective).abs() / plain.objective.abs().max(1.0);
+        assert!(
+            rel < 1e-3,
+            "plain {} vs log {} (rel {rel:.2e})",
+            plain.objective,
+            logd.objective
+        );
+    }
+
+    #[test]
+    fn symmetric_stabilized_escalates_on_underflowing_factors() {
+        let n = 12;
+        let phi = Mat::from_fn(n, 6, |i, k| 1e-30f32 * (1.0 + 0.1 * (((i + 2 * k) % 5) as f32)));
+        let k = FactoredKernel::from_factors(phi.clone(), phi);
+        let a = vec![1.0 / n as f32; n];
+        let c = SinkhornConfig { stabilize: true, ..cfg(1e-3) };
+        let (sol, escalated) = sinkhorn_symmetric_stabilized(&k, &a, &c).unwrap();
+        assert!(escalated, "underflowing factors must take the log-domain path");
+        assert!(sol.objective.is_finite());
+        assert!(sol.marginal_error < 1e-3, "err {}", sol.marginal_error);
+        // Stabilize off: the typed error surfaces.
+        let off = cfg(1e-3);
+        let k2 = {
+            let phi = Mat::from_fn(n, 6, |i, k| {
+                1e-30f32 * (1.0 + 0.1 * (((i + 2 * k) % 5) as f32))
+            });
+            FactoredKernel::from_factors(phi.clone(), phi)
+        };
+        assert!(matches!(
+            sinkhorn_symmetric(&k2, &a, &off),
+            Err(Error::SinkhornDiverged { .. })
+        ));
+    }
+
+    #[test]
+    fn symmetric_rejects_non_square_kernels() {
+        let mut rng = Rng::seed_from(42);
+        let (mu, nu) = data::gaussian_blobs(10, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &nu, 0.5);
+        assert!(matches!(
+            sinkhorn_symmetric(&k, &mu.weights, &cfg(0.5)),
+            Err(Error::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn warm_started_symmetric_finishes_faster() {
+        let mut rng = Rng::seed_from(43);
+        let (mu, _) = data::gaussian_blobs(40, &mut rng);
+        let k = DenseKernel::from_measures(&mu, &mu, 0.3);
+        let c = SinkhornConfig { check_every: 1, ..cfg(0.3) };
+        let cold = sinkhorn_symmetric_warm(&k, &mu.weights, &c, None).unwrap();
+        let warm = sinkhorn_symmetric_warm(&k, &mu.weights, &c, Some(&cold.alpha)).unwrap();
+        assert!(
+            warm.solution.iterations <= cold.solution.iterations,
+            "warm {} vs cold {}",
+            warm.solution.iterations,
+            cold.solution.iterations
+        );
+        assert!(warm.solution.iterations <= 2, "restart from the fixed point should be instant");
+    }
+}

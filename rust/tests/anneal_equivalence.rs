@@ -1,0 +1,168 @@
+//! Eps-annealing equivalence suite (integration tier).
+//!
+//! The annealed solve is an *accelerator*, not a different estimator: at
+//! the target eps it must land on the same fixed point as the direct
+//! solve (within solver tolerance), and the whole ladder must be
+//! bitwise deterministic — across thread counts, across a Plan JSON
+//! round-trip, and regardless of which host replays the Plan. The SIMD
+//! dispatch arms are covered by CI running this suite under
+//! `LINEAR_SINKHORN_SIMD=scalar` as well as the default arm.
+
+use linear_sinkhorn::api::OtProblem;
+use linear_sinkhorn::api::Plan;
+use linear_sinkhorn::data;
+use linear_sinkhorn::rng::Rng;
+
+fn clouds(seed: u64) -> (linear_sinkhorn::data::Measure, linear_sinkhorn::data::Measure) {
+    let mut rng = Rng::seed_from(seed);
+    data::gaussian_blobs(60, &mut rng)
+}
+
+// ------------------------------------------------------------- tolerance
+
+/// Annealing only changes *how we get there*: at the target eps the
+/// annealed divergence agrees with the direct one to solver tolerance.
+#[test]
+fn annealed_divergence_agrees_with_direct_at_target_eps() {
+    let (mu, nu) = clouds(7);
+    let base = || OtProblem::new(&mu, &nu).epsilon(0.1).rank(24).seed(11).max_iters(8000);
+
+    let direct = base()
+        .anneal(false)
+        .symmetric_self_solves(false)
+        .divergence()
+        .expect("direct divergence");
+    let annealed = base().anneal(true).divergence().expect("annealed divergence");
+
+    assert!(annealed.xy.rung_iterations.len() > 1, "the schedule must actually anneal");
+    assert!(direct.xy.rung_iterations.is_empty(), "the direct solve must not anneal");
+    let scale = direct.divergence.abs().max(1e-6);
+    let rel = (annealed.divergence - direct.divergence).abs() / scale;
+    assert!(rel < 5e-2, "annealed vs direct divergence rel diff {rel} too large");
+}
+
+/// Symmetric self-solves replace the two-sided xx/yy solves with a
+/// one-dual fixed point for the *same* optimum.
+#[test]
+fn symmetric_self_solves_agree_with_two_sided() {
+    let (mu, nu) = clouds(13);
+    let base = || OtProblem::new(&mu, &nu).epsilon(0.2).rank(24).seed(17).max_iters(8000);
+
+    let two_sided =
+        base().symmetric_self_solves(false).divergence().expect("two-sided divergence");
+    let symmetric =
+        base().symmetric_self_solves(true).divergence().expect("symmetric divergence");
+
+    // The cross term is untouched by the flag: bitwise identical.
+    assert_eq!(
+        symmetric.xy.objective.to_bits(),
+        two_sided.xy.objective.to_bits(),
+        "xy solve must be unaffected by the self-solve strategy"
+    );
+    let scale = two_sided.divergence.abs().max(1e-6);
+    let rel = (symmetric.divergence - two_sided.divergence).abs() / scale;
+    assert!(rel < 5e-2, "symmetric vs two-sided divergence rel diff {rel} too large");
+}
+
+// ----------------------------------------------------------- determinism
+
+/// Pool widths must stay numerically transparent through the annealed
+/// ladder — the same 1-vs-N contract the direct path already holds.
+#[test]
+fn annealed_divergence_is_bitwise_across_thread_counts() {
+    let (mu, nu) = clouds(23);
+    let solve = |threads: usize, solver_threads: usize| {
+        let plan = OtProblem::new(&mu, &nu)
+            .epsilon(0.1)
+            .rank(16)
+            .seed(5)
+            .anneal(true)
+            .threads(threads)
+            .solver_threads(solver_threads)
+            .plan()
+            .expect("annealed plan");
+        assert!(plan.schedule.is_some());
+        OtProblem::new(&mu, &nu)
+            .divergence_planned(&plan)
+            .expect("annealed divergence")
+    };
+
+    let one = solve(1, 1);
+    let many = solve(4, 3);
+
+    assert_eq!(one.divergence.to_bits(), many.divergence.to_bits(), "divergence bits");
+    assert_eq!(one.xy.objective.to_bits(), many.xy.objective.to_bits(), "xy bits");
+    assert_eq!(one.xx.objective.to_bits(), many.xx.objective.to_bits(), "xx bits");
+    assert_eq!(one.yy.objective.to_bits(), many.yy.objective.to_bits(), "yy bits");
+    assert_eq!(one.xy.u, many.xy.u, "xy row scalings");
+    assert_eq!(one.xy.rung_iterations, many.xy.rung_iterations, "xy rung ladder");
+    assert_eq!(one.xx.rung_iterations, many.xx.rung_iterations, "xx rung ladder");
+    assert_eq!(one.yy.rung_iterations, many.yy.rung_iterations, "yy rung ladder");
+}
+
+/// A Plan that went through JSON carries the schedule and the symmetric
+/// flag exactly; replaying it reproduces the original bits.
+#[test]
+fn annealed_plan_json_roundtrip_replays_bitwise() {
+    let (mu, nu) = clouds(31);
+    let plan = OtProblem::new(&mu, &nu)
+        .epsilon(0.15)
+        .rank(16)
+        .seed(3)
+        .anneal(true)
+        .anneal_decay(0.4)
+        .plan()
+        .expect("annealed plan");
+    let wired = Plan::from_json(&plan.to_json()).expect("plan json roundtrip");
+    assert_eq!(plan.to_json(), wired.to_json(), "schedule must survive serialization");
+
+    let here = OtProblem::new(&mu, &nu).divergence_planned(&plan).expect("original plan");
+    let there = OtProblem::new(&mu, &nu).divergence_planned(&wired).expect("replayed plan");
+    assert_eq!(here.divergence.to_bits(), there.divergence.to_bits());
+    assert_eq!(here.xy.u, there.xy.u);
+    assert_eq!(here.xy.rung_iterations, there.xy.rung_iterations);
+}
+
+/// Batch and single annealed solves share one code path per rung; the
+/// batch must reproduce the single-pair bits for every pair.
+#[test]
+fn annealed_batch_replays_single_pair_bits() {
+    let (mu, nu) = clouds(43);
+    let mut rng = Rng::seed_from(97);
+    let mut weights = Vec::new();
+    for _ in 0..3 {
+        let mut a = rng.normal_vec(mu.len());
+        let mut b = rng.normal_vec(nu.len());
+        for w in a.iter_mut().chain(b.iter_mut()) {
+            *w = w.abs() + 0.05;
+        }
+        let (sa, sb) = (a.iter().sum::<f32>(), b.iter().sum::<f32>());
+        a.iter_mut().for_each(|w| *w /= sa);
+        b.iter_mut().for_each(|w| *w /= sb);
+        weights.push((a, b));
+    }
+    let refs: Vec<(&[f32], &[f32])> =
+        weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+
+    let plan = OtProblem::new(&mu, &nu)
+        .epsilon(0.1)
+        .rank(16)
+        .seed(59)
+        .weight_pairs(&refs)
+        .anneal(true)
+        .plan()
+        .expect("annealed batch plan");
+    assert!(plan.schedule.is_some());
+
+    let batch =
+        OtProblem::new(&mu, &nu).weight_pairs(&refs).divergence_all_planned(&plan);
+    for (i, (r, (a, b))) in batch.iter().zip(&weights).enumerate() {
+        let r = r.as_ref().unwrap_or_else(|e| panic!("batch pair {i} failed: {e}"));
+        let single = OtProblem::new(&mu, &nu)
+            .weights(a, b)
+            .divergence_planned(&plan)
+            .unwrap_or_else(|e| panic!("single pair {i} failed: {e}"));
+        assert_eq!(r.divergence.to_bits(), single.divergence.to_bits(), "pair {i}");
+        assert_eq!(r.xy.rung_iterations, single.xy.rung_iterations, "pair {i} rungs");
+    }
+}

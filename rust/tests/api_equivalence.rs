@@ -38,6 +38,9 @@ fn cfg(eps: f64) -> SinkhornConfig {
         threads: 1,
         stabilize: false,
         max_batch: 8,
+        anneal: None,
+        anneal_decay: 0.5,
+        symmetric: None,
     }
 }
 

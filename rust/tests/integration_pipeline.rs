@@ -20,6 +20,9 @@ fn cfg(eps: f64) -> SinkhornConfig {
         threads: 1,
         stabilize: false,
         max_batch: 1,
+        anneal: None,
+        anneal_decay: 0.5,
+        symmetric: None,
     }
 }
 

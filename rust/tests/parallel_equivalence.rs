@@ -245,6 +245,9 @@ fn divergence_identical_with_1_and_n_threads() {
             threads,
             stabilize: false,
             max_batch: 1,
+            anneal: None,
+            anneal_decay: 0.5,
+            symmetric: None,
         };
         sinkhorn_divergence(&k_xy, &k_xx, &k_yy, &mu.weights, &nu.weights, &cfg).unwrap()
     };
@@ -509,6 +512,9 @@ fn divergence_agrees_with_historical_serial_path() {
         threads: 1,
         stabilize: false,
         max_batch: 1,
+        anneal: None,
+        anneal_decay: 0.5,
+        symmetric: None,
     };
 
     let phi_mu = map.feature_matrix(&mu.points);

@@ -336,6 +336,65 @@ fn all_workers_dead_is_typed_never_a_panic() {
     assert!(matches!(&again[0], Err(Error::Service(_))));
 }
 
+// ------------------------------------------------------------- annealing
+
+/// An annealed plan for the fixture's clouds: the eps schedule and the
+/// symmetric self-solve flag ride the Plan, so every worker anneals
+/// through bitwise-identical rungs.
+fn annealed_plan(mu: &Measure, nu: &Measure, refs: &[(&[f32], &[f32])]) -> Plan {
+    let plan = OtProblem::new(mu, nu)
+        .epsilon(0.3)
+        .rank(8)
+        .seed(29)
+        .weight_pairs(refs)
+        .anneal(true)
+        .plan()
+        .unwrap();
+    assert!(plan.schedule.is_some(), "explicit anneal must ride the plan");
+    assert!(plan.symmetric_self_solves, "symmetric self solves follow annealing");
+    plan
+}
+
+#[test]
+fn annealed_plan_shards_bitwise_with_rung_counts() {
+    let (mu, nu, weights, _) = fixture(4);
+    let refs = as_refs(&weights);
+    let plan = annealed_plan(&mu, &nu, &refs);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    let shard = ShardCoordinator::in_process(2, calm_cfg(), metrics.clone());
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert_eq!(metrics.counter("service.shard.retries").get(), 0);
+    // The per-rung iteration counts survive the wire exactly.
+    for (i, (s, l)) in got.iter().zip(&local).enumerate() {
+        let (s, l) = (s.as_ref().unwrap(), l.as_ref().unwrap());
+        assert!(s.xy.rung_iterations.len() > 1, "pair {i} must have annealed");
+        assert_eq!(s.xy.rung_iterations, l.xy.rung_iterations, "pair {i} xy rungs");
+        assert_eq!(s.xx.rung_iterations, l.xx.rung_iterations, "pair {i} xx rungs");
+        assert_eq!(s.yy.rung_iterations, l.yy.rung_iterations, "pair {i} yy rungs");
+    }
+}
+
+#[test]
+fn annealed_plan_survives_worker_crash_bitwise() {
+    let (mu, nu, weights, _) = fixture(4);
+    let refs = as_refs(&weights);
+    let plan = annealed_plan(&mu, &nu, &refs);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Same crash schedule as the direct-plan test: the re-scattered chunk
+    // re-anneals from the schedule in the plan and lands identical bits.
+    let faults = FaultPlan::new(8).inject(0, Fault::KillOnTask { nth: 1 });
+    let shard = ShardCoordinator::in_process_with_faults(2, calm_cfg(), metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 1);
+    assert!(metrics.counter("service.shard.retries").get() >= 1);
+}
+
 // ------------------------------------------------------------ cross-host
 
 #[test]
