@@ -79,6 +79,7 @@ bench-smoke:
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench parallel_scaling
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench coordinator_throughput
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench anneal_iterations
+	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench tradeoff_headtohead
 
 clean:
 	$(CARGO) clean

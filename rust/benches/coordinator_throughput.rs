@@ -50,6 +50,7 @@ fn service_cfg(workers: usize, max_batch: usize, fuse_width: usize) -> ServiceCo
         solver_threads: 1,
         cache_capacity: 8,
         shard_workers: 0,
+        backend: "factored".to_string(),
     }
 }
 

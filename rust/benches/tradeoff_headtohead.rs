@@ -1,0 +1,63 @@
+//! PR-8 head-to-head: the paper's positive features vs adaptive Nyström
+//! vs uniform Nyström at one matched rank, error vs time across
+//! eps ∈ {1e-1, 1e-2, 1e-3}.
+//!
+//! Expected shape: at eps = 1e-1 all three answer and the Nyström arms
+//! are competitive (adaptive at or below uniform's error — spread
+//! landmarks cover the union cloud better at the same rank); at
+//! eps ∈ {1e-2, 1e-3} the Gibbs kernel's numerical rank explodes,
+//! Nyström loses positivity and both arms record FAILED (the clamped
+//! signed log view gates itself off, so escalation fails typed instead
+//! of converging wrong), while the positive-feature kernel escalates to
+//! the log domain and still answers — the paper's central contrast,
+//! measured end to end through the planned API.
+//!
+//! Run: `cargo bench --bench tradeoff_headtohead`
+//!
+//! Setting `BENCH_SMOKE=1` shrinks the clouds and repetitions to CI
+//! scale (the eps sweep is untouched — the contrast is the point);
+//! `BENCH_JSON=<path>` appends the table there as JSON lines (the CI
+//! `bench-smoke` job records it into `BENCH_ci.json` on every push).
+
+use linear_sinkhorn::bench::tradeoff::{cells_to_table, run_headtohead};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::prelude::*;
+
+fn main() {
+    let args = ArgSpec::new("tradeoff_headtohead", "RF vs adaptive vs uniform Nyström")
+        .opt("n", "1000", "samples per cloud")
+        .opt("rank", "64", "matched rank: feature count r = landmark count")
+        .opt("eps", "0.1,0.01,0.001", "regularisations")
+        .opt("reps", "3", "repetitions per cell")
+        .opt("seed", "0", "RNG seed")
+        .opt("csv", "target/tradeoff_headtohead.csv", "csv output path")
+        .parse();
+
+    let smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (n, rank, reps) = if smoke {
+        println!("(BENCH_SMOKE: reduced sizes)");
+        (200, 32, 1)
+    } else {
+        (args.get_usize("n"), args.get_usize("rank"), args.get_usize("reps"))
+    };
+    let epsilons = args.get_f64_list("eps");
+    let seed = args.get_u64("seed");
+    let mut rng = Rng::seed_from(seed);
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+    println!("tradeoff_headtohead: n={n}, rank={rank}, reps={reps}, eps={epsilons:?}");
+
+    let cells = run_headtohead(&mu, &nu, &epsilons, rank, reps, seed, |c| {
+        eprintln!(
+            "  {:<5} eps={} r={} -> dev {} in {} ({}/{})",
+            c.method,
+            c.eps,
+            c.rank,
+            if c.deviation.is_nan() { "FAILED".into() } else { format!("{:.2}", c.deviation) },
+            if c.time_s.is_nan() { "-".into() } else { format!("{:.3}s", c.time_s) },
+            c.ok,
+            c.reps
+        );
+    });
+    cells_to_table("Tradeoff head-to-head — RF vs Nys+a vs Nys at matched rank", &cells)
+        .emit(Some(args.get_str("csv")));
+}

@@ -12,6 +12,13 @@
 //!   per-anchor constants deterministically from the same bits. Without a
 //!   map the worker falls back to the executor's seeded refit
 //!   (`Rng::seed_from(plan.seed)`), which is equally deterministic.
+//!   Nyström plans need no extra columns at all: the landmark draw
+//!   (uniform or farthest-point) is a pure function of `plan.seed`, so
+//!   the seed riding the serialised plan *is* the landmark set and the
+//!   worker rebuilds the bit-identical kernel. The plan's `v` field is
+//!   checked in [`Plan::from_json`] during decode, so a worker handed a
+//!   newer-major plan fails with a typed wire error instead of
+//!   misinterpreting fields (mixed-version fleets fail loudly).
 //! * [`ResultEnvelope`] — the gather unit: per-pair scalar diagnostics as
 //!   f64 columns and the three solves' dual scalings as f32 columns, so
 //!   the reassembled [`DivergenceReport`]s are bit-for-bit the ones the
@@ -411,6 +418,26 @@ mod tests {
         let frame = task.encode();
         assert!(matches!(ResultEnvelope::decode(&frame), Err(Error::Wire(_))));
         assert!(matches!(TaskEnvelope::decode(b"LSW1junk"), Err(Error::Wire(_))));
+    }
+
+    #[test]
+    fn task_decode_rejects_newer_plan_format_major() {
+        // A mixed-version shard fleet must fail typed at envelope decode:
+        // re-encode the task with its plan's `v` bumped past what this
+        // build supports and watch the worker-side decode refuse it.
+        let task = sample_task(false);
+        let mut doc = WireDoc::decode(&task.encode()).unwrap();
+        let mut plan_json = doc.meta.get("plan").unwrap().encode();
+        let v = super::super::plan::PLAN_FORMAT_MAJOR;
+        let old = format!("\"v\":{v}");
+        let new = format!("\"v\":{}", v + 1);
+        assert!(plan_json.contains(&old), "{plan_json}");
+        plan_json = plan_json.replace(&old, &new);
+        doc.set_json("plan", Json::parse(&plan_json).unwrap());
+        match TaskEnvelope::decode(&doc.encode()) {
+            Err(Error::Wire(msg)) => assert!(msg.contains("newer than this build"), "{msg}"),
+            other => panic!("expected typed wire error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -21,9 +21,13 @@
 //!
 //! When the executor fits a feature map itself, the draw is
 //! `GaussianFeatureMap::fit(mu, nu, eps, rank, &mut Rng::seed_from(plan.seed))`
-//! — seeded, so the same plan refits the same anchors. The property
-//! suite in `rust/tests/api_equivalence.rs` asserts the table above bit
-//! for bit.
+//! — seeded, so the same plan refits the same anchors. The Nyström
+//! backend is built the same way:
+//! `NystromKernel::from_measures[_adaptive](mu, nu, eps, rank, &mut
+//! Rng::seed_from(plan.seed))`, so the landmark draw (uniform or
+//! farthest-point) rides the plan seed and a shard worker decoding the
+//! plan rebuilds the bit-identical kernel. The property suite in
+//! `rust/tests/api_equivalence.rs` asserts the table above bit for bit.
 
 use std::sync::Arc;
 
@@ -307,21 +311,46 @@ impl<'a> OtProblem<'a> {
         }
     }
 
+    /// Build a Nyström kernel exactly as a shard worker would: the
+    /// landmark draw (uniform or farthest-point) replays from
+    /// `Rng::seed_from(plan.seed)` at the given eps, applies run on the
+    /// solver pool — so the same plan builds the bit-identical kernel on
+    /// every host, rung and divergence leg.
+    fn nystrom_from_measures(
+        &self,
+        plan: &Plan,
+        mu: &Measure,
+        nu: &Measure,
+        eps: f64,
+        rank: usize,
+        adaptive: bool,
+        solver_pool: &Pool,
+    ) -> NystromKernel {
+        let mut rng = Rng::seed_from(plan.seed);
+        let kernel = if adaptive {
+            NystromKernel::from_measures_adaptive(mu, nu, eps, rank, &mut rng)
+        } else {
+            NystromKernel::from_measures(mu, nu, eps, rank, &mut rng)
+        };
+        kernel.with_pool(solver_pool.clone())
+    }
+
     fn build_kernel(&self, plan: &Plan, solver_pool: &Pool) -> Result<BuiltKernel> {
         match plan.backend {
             Backend::Dense => {
                 let (mu, nu) = self.measures()?;
                 Ok(BuiltKernel::Dense(DenseKernel::from_measures(mu, nu, plan.epsilon)))
             }
-            Backend::Nystrom { rank } => {
+            Backend::Nystrom { rank, adaptive } => {
                 let (mu, nu) = self.measures()?;
-                let mut rng = Rng::seed_from(plan.seed);
-                Ok(BuiltKernel::Nystrom(NystromKernel::from_measures(
+                Ok(BuiltKernel::Nystrom(self.nystrom_from_measures(
+                    plan,
                     mu,
                     nu,
                     plan.epsilon,
                     rank,
-                    &mut rng,
+                    adaptive,
+                    solver_pool,
                 )))
             }
             Backend::Factored { rank } => match self.source {
@@ -373,11 +402,14 @@ impl<'a> OtProblem<'a> {
         })?;
         match plan.backend {
             Backend::Dense => Ok(BuiltKernel::Dense(DenseKernel::from_measures(mu, nu, eps))),
-            Backend::Nystrom { .. } => Err(Error::Config(
-                "annealed plans do not support the nystrom backend (no log-domain view \
-                 to land the target rung in)"
-                    .into(),
-            )),
+            Backend::Nystrom { rank, adaptive } => {
+                // Same seeded landmark draw at the rung's eps on every
+                // host; the target rung lands in the kernel's gated
+                // signed log view when plain arithmetic gives out.
+                Ok(BuiltKernel::Nystrom(self.nystrom_from_measures(
+                    plan, mu, nu, eps, rank, adaptive, solver_pool,
+                )))
+            }
             Backend::Factored { rank } => {
                 let mut rng = Rng::seed_from(plan.seed);
                 let map = GaussianFeatureMap::fit(mu, nu, eps, rank, &mut rng);
@@ -422,11 +454,19 @@ impl<'a> OtProblem<'a> {
     ) -> Result<T> {
         let solver_pool = self.resolve_solver_pool(plan);
         match plan.backend {
-            Backend::Nystrom { .. } => Err(Error::Config(
-                "the nystrom backend supports solve() only (no positivity guarantee, no \
-                 debiased divergence in the baseline)"
-                    .into(),
-            )),
+            Backend::Nystrom { rank, adaptive } => {
+                let (mu, nu) = self.measures()?;
+                // Each leg replays its own seeded landmark draw over its
+                // own union cloud, so all three kernels are deterministic
+                // functions of (plan.seed, eps) on every host.
+                let k_xy =
+                    self.nystrom_from_measures(plan, mu, nu, eps, rank, adaptive, &solver_pool);
+                let k_xx =
+                    self.nystrom_from_measures(plan, mu, mu, eps, rank, adaptive, &solver_pool);
+                let k_yy =
+                    self.nystrom_from_measures(plan, nu, nu, eps, rank, adaptive, &solver_pool);
+                f(&k_xy, &k_xx, &k_yy)
+            }
             Backend::Dense => {
                 let (mu, nu) = self.measures()?;
                 let k_xy = DenseKernel::from_measures(mu, nu, eps);
@@ -1130,7 +1170,7 @@ fn batch_self_rung<K: KernelOp + ?Sized>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::DomainChoice;
+    use crate::api::{BackendPref, DomainChoice};
     use crate::data;
 
     fn clouds(n: usize) -> (Measure, Measure) {
@@ -1183,13 +1223,40 @@ mod tests {
     }
 
     #[test]
-    fn nystrom_divergence_is_a_typed_error() {
+    fn nystrom_executes_solve_and_divergence_end_to_end() {
         // eps = 5.0 with rank ~ n/3 is the regime where Nyström is known
-        // accurate and positive (`nystrom_accurate_at_large_eps`).
+        // accurate and positive (`nystrom_accurate_at_large_eps`). The
+        // old `Error::Config` walls are gone: both the single solve and
+        // the three-leg divergence run on this backend.
         let (mu, nu) = clouds(30);
         let p = OtProblem::new(&mu, &nu).epsilon(5.0).nystrom(10);
         assert!(p.solve().is_ok());
-        assert!(matches!(p.divergence(), Err(Error::Config(_))));
+        let d = p.divergence().unwrap();
+        assert!(d.divergence.is_finite());
+        // The adaptive arm takes the identical paths.
+        let pa = OtProblem::new(&mu, &nu)
+            .epsilon(5.0)
+            .backend(BackendPref::Nystrom { rank: 10, adaptive: true });
+        assert!(pa.solve().is_ok());
+        let da = pa.divergence().unwrap();
+        assert!(da.divergence.is_finite());
+    }
+
+    #[test]
+    fn nystrom_annealed_solve_matches_direct_at_the_target_eps() {
+        // The annealed driver now refits the Nyström kernel at each
+        // rung's eps from the plan seed; staying in the flat regime
+        // (eps = 5.0, generous rank) keeps every rung positive.
+        let (mu, nu) = clouds(40);
+        let base = || OtProblem::new(&mu, &nu).epsilon(5.0).nystrom(16).seed(5);
+        let direct = base().anneal(false).solve().unwrap();
+        let annealed = base().anneal(true).solve().unwrap();
+        assert!(
+            annealed.rung_iterations.len() > 1,
+            "an annealed nystrom solve records one count per rung"
+        );
+        let rel = ((annealed.objective - direct.objective) / direct.objective).abs();
+        assert!(rel < 1e-2, "annealed {} vs direct {}", annealed.objective, direct.objective);
     }
 
     #[test]

@@ -35,7 +35,7 @@ mod solution;
 
 pub use envelope::{ResultEnvelope, TaskEnvelope};
 pub use plan::{Backend, Domain, Plan};
-pub use problem::{DomainChoice, KernelChoice, OtProblem, SimdPreference};
+pub use problem::{BackendPref, DomainChoice, KernelChoice, OtProblem, SimdPreference};
 pub use solution::{DivergenceReport, Solution};
 
 /// Feature count the planner assumes when no rank is requested and the

@@ -23,6 +23,17 @@ use crate::error::{Error, Result};
 use crate::runtime::Json;
 use crate::sinkhorn::EpsSchedule;
 
+/// Major version of the `Plan` JSON wire format (the `"v"` key).
+///
+/// Decode policy is strict forward-compatibility: documents carrying the
+/// **same** major may contain unknown fields (they are ignored, which is
+/// how minor additions like `schedule` shipped), while a **newer** major
+/// is rejected as a typed [`Error::Config`] — a mixed-version shard
+/// fleet fails loudly at `TaskEnvelope` decode instead of silently
+/// garbling semantics it cannot represent. Documents with no `"v"` key
+/// predate the field and decode as v1.
+pub const PLAN_FORMAT_MAJOR: usize = 1;
+
 /// Kernel backend chosen by the planner.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -35,11 +46,16 @@ pub enum Backend {
         /// Feature count r.
         rank: usize,
     },
-    /// Nyström low-rank baseline — O(r(n+m)) but **not** positivity-safe
-    /// (`Nys`); only planned on explicit request.
+    /// Nyström low-rank arm — O(r(n+m)) but **not** positivity-safe
+    /// (`Nys`); auto-planned only in the flat-kernel regime, adaptive
+    /// sampling on explicit preference only.
     Nystrom {
         /// Landmark count.
         rank: usize,
+        /// Farthest-point (adaptive) landmark selection instead of
+        /// uniform sampling (arXiv:1812.05189); both replay from
+        /// [`Plan::seed`].
+        adaptive: bool,
     },
 }
 
@@ -48,7 +64,7 @@ impl Backend {
     pub fn rank(&self) -> usize {
         match *self {
             Backend::Dense => 0,
-            Backend::Factored { rank } | Backend::Nystrom { rank } => rank,
+            Backend::Factored { rank } | Backend::Nystrom { rank, .. } => rank,
         }
     }
 
@@ -182,7 +198,12 @@ impl Plan {
         let backend = match self.backend {
             Backend::Dense => format!("dense({}x{})", self.n, self.m),
             Backend::Factored { rank } => format!("factored(r={rank} {}x{})", self.n, self.m),
-            Backend::Nystrom { rank } => format!("nystrom(r={rank} {}x{})", self.n, self.m),
+            Backend::Nystrom { rank, adaptive } => format!(
+                "nystrom(r={rank}{} {}x{})",
+                if adaptive { ",adaptive" } else { "" },
+                self.n,
+                self.m
+            ),
         };
         format!(
             "plan: backend={backend} domain={} stabilized_factors={} pairs={} width={} \
@@ -219,11 +240,14 @@ impl Plan {
     /// equal by construction).
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(320);
-        s.push_str("{\"v\":1,\"backend\":\"");
+        s.push_str(&format!("{{\"v\":{PLAN_FORMAT_MAJOR},\"backend\":\""));
         s.push_str(self.backend.tag());
         s.push('"');
         if self.backend.rank() > 0 {
             s.push_str(&format!(",\"rank\":{}", self.backend.rank()));
+        }
+        if let Backend::Nystrom { adaptive, .. } = self.backend {
+            s.push_str(&format!(",\"adaptive\":{adaptive}"));
         }
         s.push_str(&format!(",\"domain\":\"{}\"", self.domain.tag()));
         s.push_str(&format!(",\"stabilized_factors\":{}", self.stabilized_factors));
@@ -256,6 +280,21 @@ impl Plan {
     /// Decode a plan previously encoded with [`Plan::to_json`].
     pub fn from_json(text: &str) -> Result<Plan> {
         let j = Json::parse(text).map_err(|e| Error::Config(format!("plan json: {e}")))?;
+        // Version gate first (see [`PLAN_FORMAT_MAJOR`]): a document from
+        // a newer major may carry semantics this build cannot represent,
+        // so it must fail typed before any field is interpreted. Absent
+        // `"v"` predates the field and decodes as v1.
+        if let Some(v) = j.get("v") {
+            let v = v.as_usize().ok_or_else(|| {
+                Error::Config("plan json: `v` must be a non-negative integer".into())
+            })?;
+            if v > PLAN_FORMAT_MAJOR {
+                return Err(Error::Config(format!(
+                    "plan json: format version {v} is newer than this build supports \
+                     ({PLAN_FORMAT_MAJOR}); upgrade this worker"
+                )));
+            }
+        }
         let str_field = |name: &str| -> Result<&str> {
             j.get(name)
                 .and_then(Json::as_str)
@@ -281,10 +320,13 @@ impl Plan {
         let backend = match str_field("backend")? {
             "dense" => Backend::Dense,
             "factored" => Backend::Factored { rank: usize_field("rank")? },
-            "nystrom" => Backend::Nystrom { rank: usize_field("rank")? },
+            "nystrom" => Backend::Nystrom {
+                rank: usize_field("rank")?,
+                adaptive: matches!(j.get("adaptive"), Some(Json::Bool(true))),
+            },
             other => return Err(Error::Config(format!("plan json: unknown backend `{other}`"))),
         };
-        if matches!(backend, Backend::Factored { rank: 0 } | Backend::Nystrom { rank: 0 }) {
+        if matches!(backend, Backend::Factored { rank: 0 } | Backend::Nystrom { rank: 0, .. }) {
             return Err(Error::Config("plan json: rank must be >= 1".into()));
         }
         let domain = match str_field("domain")? {
@@ -397,7 +439,8 @@ mod tests {
         for plan in [
             sample(Backend::Factored { rank: 256 }, Domain::AutoEscalate, true),
             sample(Backend::Dense, Domain::Plain, false),
-            sample(Backend::Nystrom { rank: 32 }, Domain::Plain, false),
+            sample(Backend::Nystrom { rank: 32, adaptive: false }, Domain::Plain, false),
+            sample(Backend::Nystrom { rank: 32, adaptive: true }, Domain::AutoEscalate, false),
             sample(Backend::Factored { rank: 8 }, Domain::LogDomain, true),
         ] {
             let text = plan.to_json();
@@ -478,6 +521,51 @@ mod tests {
     }
 
     #[test]
+    fn version_gate_is_strict_forward_compatible() {
+        let plan = sample(Backend::Nystrom { rank: 16, adaptive: true }, Domain::Plain, false);
+        let text = plan.to_json();
+        assert!(text.starts_with(&format!("{{\"v\":{PLAN_FORMAT_MAJOR},")), "{text}");
+        // Same-major unknown fields are ignored (how minor additions ship).
+        let extended = text.replace(",\"domain\"", ",\"future_hint\":true,\"domain\"");
+        assert_eq!(Plan::from_json(&extended).unwrap(), plan);
+        // Pre-version documents (no `"v"` key) decode as v1.
+        let unversioned = text.replace(&format!("{{\"v\":{PLAN_FORMAT_MAJOR},"), "{");
+        assert!(!unversioned.contains("\"v\":"), "{unversioned}");
+        assert_eq!(Plan::from_json(&unversioned).unwrap(), plan);
+        // A newer major is a typed Config error naming the versions, so a
+        // mixed-version shard fleet fails loudly at envelope decode.
+        let newer = text.replace(
+            &format!("{{\"v\":{PLAN_FORMAT_MAJOR},"),
+            &format!("{{\"v\":{},", PLAN_FORMAT_MAJOR + 1),
+        );
+        match Plan::from_json(&newer) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("newer than this build"), "{msg}");
+            }
+            other => panic!("expected typed Config error, got {other:?}"),
+        }
+        // And a malformed version is not silently accepted.
+        let junk = text.replace(
+            &format!("{{\"v\":{PLAN_FORMAT_MAJOR},"),
+            "{\"v\":\"one\",",
+        );
+        assert!(Plan::from_json(&junk).is_err());
+    }
+
+    #[test]
+    fn nystrom_adaptive_flag_round_trips_and_defaults_off() {
+        let plan = sample(Backend::Nystrom { rank: 24, adaptive: true }, Domain::Plain, false);
+        let text = plan.to_json();
+        assert!(text.contains("\"adaptive\":true"), "{text}");
+        assert_eq!(Plan::from_json(&text).unwrap(), plan);
+        // Pre-adaptive documents (no `"adaptive"` key) decode as uniform
+        // sampling — the only behaviour old writers could have meant.
+        let stripped = text.replace(",\"adaptive\":true", "");
+        let back = Plan::from_json(&stripped).unwrap();
+        assert_eq!(back.backend, Backend::Nystrom { rank: 24, adaptive: false });
+    }
+
+    #[test]
     fn sinkhorn_config_mirrors_the_domain() {
         let esc = sample(Backend::Dense, Domain::AutoEscalate, false);
         assert!(esc.sinkhorn_config().stabilize);
@@ -499,5 +587,7 @@ mod tests {
         let s = annealed.summary();
         assert!(s.contains("anneal=geo(start=0.8,decay=0.5,rungs=5)"), "{s}");
         assert!(s.contains("symmetric=true"), "{s}");
+        let s = sample(Backend::Nystrom { rank: 32, adaptive: true }, Domain::Plain, false).summary();
+        assert!(s.contains("nystrom(r=32,adaptive"), "{s}");
     }
 }

@@ -4,9 +4,13 @@
 //! The planner is where the repo's previously scattered heuristics now
 //! live, in one auditable place:
 //!
-//! * **Backend choice** — factored vs dense by per-iteration flops
-//!   (`r(n+m)` vs `nm`, the paper's headline complexity contrast);
-//!   Nyström only on explicit request (it can lose positivity).
+//! * **Backend choice** — factored vs dense vs Nyström by per-iteration
+//!   flops (`r(n+m)` vs `nm`, the paper's headline complexity contrast).
+//!   Auto-selection is conservative about the Nyström arm: uniform
+//!   sampling only in the flat-kernel regime (`eps >= R^2`, where the
+//!   Gibbs kernel is numerically low-rank and positivity-safe), and
+//!   adaptive farthest-point sampling only on explicit preference
+//!   ([`BackendPref::Nystrom`]) until the tradeoff bench justifies more.
 //! * **f32-underflow escalation** — the production default is
 //!   [`Domain::AutoEscalate`] (plain Alg. 1, retry in the log domain on a
 //!   typed divergence), but when the regularisation is hopeless for f32 —
@@ -38,19 +42,68 @@ use super::plan::{Backend, Domain, Plan};
 use super::{DEFAULT_RANK, UNDERFLOW_LOG_SPREAD};
 use crate::sinkhorn::EpsSchedule;
 
-/// Requested kernel backend (the planner resolves `Auto`).
+/// Requested kernel backend — the single backend-preference surface of
+/// the builder ([`OtProblem::backend`]). The planner resolves `Auto`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum KernelChoice {
-    /// Let the planner pick factored-vs-dense by per-iteration flops.
+pub enum BackendPref {
+    /// Let the planner pick dense / factored / (flat-regime uniform)
+    /// Nyström by per-iteration flops.
     Auto,
     /// Force the dense Gibbs baseline.
     Dense,
     /// Force the positive-feature factored kernel with this rank.
-    Factored { rank: usize },
-    /// Force the Nyström baseline with this rank (solve-only; may lose
-    /// positivity — that failure surfaces as a typed error).
-    Nystrom { rank: usize },
+    Factored {
+        /// Feature count r.
+        rank: usize,
+    },
+    /// Force the Nyström arm with `rank` landmarks; `adaptive` selects
+    /// seeded farthest-point sampling (arXiv:1812.05189) instead of
+    /// uniform. May lose positivity at small eps — the paper's central
+    /// contrast — and that failure surfaces as a typed error (plain
+    /// domain) or a gated-off log view (escalation).
+    Nystrom {
+        /// Landmark count.
+        rank: usize,
+        /// Adaptive (farthest-point) landmark selection.
+        adaptive: bool,
+    },
 }
+
+impl BackendPref {
+    /// Parse a CLI `--backend` value. Accepted forms:
+    /// `auto`, `dense`, `factored[:rank]`, `nystrom[:rank]`,
+    /// `nystrom-adaptive[:rank]` — a missing `:rank` suffix falls back to
+    /// `default_rank` (the CLI's `--features` value), so
+    /// `--backend nystrom` and `--backend nystrom:128` both work.
+    pub fn parse_flag(value: &str, default_rank: usize) -> Result<BackendPref> {
+        let (name, rank) = match value.split_once(':') {
+            Some((n, r)) => {
+                let rank: usize = r.parse().map_err(|_| {
+                    Error::Config(format!("--backend {value}: `{r}` is not a rank"))
+                })?;
+                (n, rank)
+            }
+            None => (value, default_rank),
+        };
+        match name {
+            "auto" => Ok(BackendPref::Auto),
+            "dense" => Ok(BackendPref::Dense),
+            "factored" => Ok(BackendPref::Factored { rank }),
+            "nystrom" => Ok(BackendPref::Nystrom { rank, adaptive: false }),
+            "nystrom-adaptive" => Ok(BackendPref::Nystrom { rank, adaptive: true }),
+            other => Err(Error::Config(format!(
+                "--backend {other}: expected auto|dense|factored|nystrom|nystrom-adaptive \
+                 (optionally with a :rank suffix)"
+            ))),
+        }
+    }
+}
+
+/// Pre-PR-8 name of [`BackendPref`].
+///
+/// Deprecated alias, kept for one release: prefer
+/// [`OtProblem::backend`] with [`BackendPref`].
+pub type KernelChoice = BackendPref;
 
 /// Requested numeric domain (the planner resolves `Auto`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,7 +160,7 @@ pub struct OtProblem<'a> {
     pub(crate) weights: Option<(&'a [f32], &'a [f32])>,
     pub(crate) pairs: Vec<(&'a [f32], &'a [f32])>,
     pub(crate) epsilon: f64,
-    pub(crate) kernel: KernelChoice,
+    pub(crate) kernel: BackendPref,
     pub(crate) domain: DomainChoice,
     pub(crate) accelerated: bool,
     pub(crate) stabilized: Option<bool>,
@@ -137,7 +190,7 @@ impl<'a> OtProblem<'a> {
             weights: None,
             pairs: Vec::new(),
             epsilon: d.epsilon,
-            kernel: KernelChoice::Auto,
+            kernel: BackendPref::Auto,
             domain: DomainChoice::Auto,
             accelerated: false,
             stabilized: None,
@@ -195,28 +248,39 @@ impl<'a> OtProblem<'a> {
         self
     }
 
-    /// Use the factored backend with `rank` positive features.
-    pub fn rank(mut self, rank: usize) -> Self {
-        self.kernel = KernelChoice::Factored { rank };
+    /// Set the backend preference explicitly — the unified selection
+    /// surface (`Auto` lets the planner run its flops rule; see
+    /// [`OtProblem::explain`] for the narrated decision).
+    pub fn backend(mut self, pref: BackendPref) -> Self {
+        self.kernel = pref;
         self
     }
 
-    /// Force the dense Gibbs baseline.
-    pub fn dense(mut self) -> Self {
-        self.kernel = KernelChoice::Dense;
-        self
+    /// Use the factored backend with `rank` positive features
+    /// (shorthand for `.backend(BackendPref::Factored { rank })`).
+    pub fn rank(self, rank: usize) -> Self {
+        self.backend(BackendPref::Factored { rank })
     }
 
-    /// Force the Nyström baseline with `rank` landmarks.
-    pub fn nystrom(mut self, rank: usize) -> Self {
-        self.kernel = KernelChoice::Nystrom { rank };
-        self
+    /// Force the dense Gibbs baseline
+    /// (shorthand for `.backend(BackendPref::Dense)`).
+    pub fn dense(self) -> Self {
+        self.backend(BackendPref::Dense)
     }
 
-    /// Set the kernel choice explicitly.
-    pub fn kernel(mut self, choice: KernelChoice) -> Self {
-        self.kernel = choice;
-        self
+    /// Force the uniform-sampling Nyström arm with `rank` landmarks.
+    ///
+    /// Deprecated alias, kept for one release: prefer
+    /// `.backend(BackendPref::Nystrom { rank, adaptive })`, which also
+    /// exposes adaptive landmark selection.
+    pub fn nystrom(self, rank: usize) -> Self {
+        self.backend(BackendPref::Nystrom { rank, adaptive: false })
+    }
+
+    /// Deprecated alias of [`OtProblem::backend`] (pre-PR-8 name), kept
+    /// for one release.
+    pub fn kernel(self, choice: KernelChoice) -> Self {
+        self.backend(choice)
     }
 
     /// Set the numeric-domain choice explicitly.
@@ -283,8 +347,9 @@ impl<'a> OtProblem<'a> {
     /// high-eps rungs converge in a handful of plain-domain iterations
     /// and warm-start the next, so the expensive target rung starts next
     /// to its fixed point. Explicit `anneal(true)` requires a
-    /// measure-built, non-accelerated, non-Nyström problem (those kernels
-    /// cannot be rebuilt at intermediate eps).
+    /// measure-built, non-accelerated problem (prebuilt factors cannot
+    /// be rebuilt at intermediate eps; measure-built backends — factored
+    /// and Nyström alike — refit deterministically at each rung).
     pub fn anneal(mut self, on: bool) -> Self {
         self.anneal = Some(on);
         self
@@ -430,11 +495,11 @@ impl<'a> OtProblem<'a> {
 
         // Backend: explicit choice validated, Auto by per-iteration flops.
         let backend = match self.kernel {
-            KernelChoice::Dense => {
+            BackendPref::Dense => {
                 self.measures()?;
                 Backend::Dense
             }
-            KernelChoice::Factored { rank } => {
+            BackendPref::Factored { rank } => {
                 if rank == 0 {
                     return Err(Error::Config("factored backend needs rank >= 1".into()));
                 }
@@ -451,21 +516,37 @@ impl<'a> OtProblem<'a> {
                 }
                 Backend::Factored { rank }
             }
-            KernelChoice::Nystrom { rank } => {
+            BackendPref::Nystrom { rank, adaptive } => {
                 self.measures()?;
-                if !(1..=m).contains(&rank) {
+                // min(n, m): a divergence builds (mu, mu) and (nu, nu)
+                // legs too, so the rank must fit the smaller cloud.
+                if !(1..=n.min(m)).contains(&rank) {
                     return Err(Error::Config(format!(
-                        "nystrom rank must be in 1..={m}, got {rank}"
+                        "nystrom rank must be in 1..=min(n,m)={}, got {rank}",
+                        n.min(m)
                     )));
                 }
-                Backend::Nystrom { rank }
+                Backend::Nystrom { rank, adaptive }
             }
-            KernelChoice::Auto => match self.source {
+            BackendPref::Auto => match self.source {
                 Source::Factors { phi_x, .. } => Backend::Factored { rank: phi_x.cols() },
-                Source::Measures { .. } => {
+                Source::Measures { mu, nu } => {
                     // The paper's complexity contrast, as a planning rule:
-                    // factored iterations cost O(r(n+m)), dense O(nm).
-                    if DEFAULT_RANK * (n + m) < n * m {
+                    // factored iterations cost O(r(n+m)), dense O(nm), and
+                    // the Nyström arm O(r_nys(n+m)) at a quarter of the
+                    // feature rank. Auto stays conservative about Nyström:
+                    // uniform sampling only in the flat-kernel regime
+                    // (eps >= R^2, where exp(-C/eps) is numerically
+                    // low-rank and positivity-safe), and the adaptive arm
+                    // never — explicit preference only.
+                    let radius = mu.radius().max(nu.radius());
+                    let nys_rank = (DEFAULT_RANK / 4).clamp(1, m);
+                    if self.epsilon >= radius * radius
+                        && nys_rank * (n + m) < n * m
+                        && nys_rank < DEFAULT_RANK
+                    {
+                        Backend::Nystrom { rank: nys_rank, adaptive: false }
+                    } else if DEFAULT_RANK * (n + m) < n * m {
                         Backend::Factored { rank: DEFAULT_RANK }
                     } else {
                         Backend::Dense
@@ -512,13 +593,6 @@ impl<'a> OtProblem<'a> {
                             .into(),
                     ));
                 }
-                if on && matches!(backend, Backend::Nystrom { .. }) {
-                    return Err(Error::Config(
-                        "annealing is not planned for the nystrom baseline (no \
-                         log-domain view to land the small-eps target rung in)"
-                            .into(),
-                    ));
-                }
                 on
             }
             None => {
@@ -526,7 +600,6 @@ impl<'a> OtProblem<'a> {
                     && self.domain == DomainChoice::Auto
                     && !self.accelerated
                     && matches!(self.source, Source::Measures { .. })
-                    && !matches!(backend, Backend::Nystrom { .. })
             }
         };
         let schedule = if anneal_on {
@@ -542,24 +615,18 @@ impl<'a> OtProblem<'a> {
         };
         let symmetric_self_solves = self.symmetric.unwrap_or(schedule.is_some());
 
-        // Domain: explicit choice validated against the backend's
-        // log-view capability; Auto applies the underflow heuristic.
+        // Domain: every backend now carries a log-domain view (Nyström's
+        // clamped signed view is gated at runtime — escalation onto a
+        // distorted kernel fails typed instead of converging wrong), so
+        // the domain choice is backend-independent; Auto applies the
+        // underflow heuristic.
         let mut domain = match self.domain {
             DomainChoice::Plain => Domain::Plain,
-            DomainChoice::LogDomain => {
-                if matches!(backend, Backend::Nystrom { .. }) {
-                    return Err(Error::Config(
-                        "nystrom kernels have no log-domain view (they can lose positivity)"
-                            .into(),
-                    ));
-                }
-                Domain::LogDomain
-            }
+            DomainChoice::LogDomain => Domain::LogDomain,
             DomainChoice::AutoEscalate => Domain::AutoEscalate,
             DomainChoice::Auto => {
-                if self.accelerated || matches!(backend, Backend::Nystrom { .. }) {
-                    // Accelerated runs plainly; Nyström has nothing to
-                    // escalate to — keep its divergence a typed error.
+                if self.accelerated {
+                    // Accelerated runs plainly (Alg. 2 never escalates).
                     Domain::Plain
                 } else if self.underflow_risk() {
                     // Annealed solves reach the target rung warm: give the
@@ -651,6 +718,98 @@ impl<'a> OtProblem<'a> {
             schedule,
             symmetric_self_solves,
         })
+    }
+
+    /// Plan, then narrate *why*: the flops-rule numbers behind the
+    /// backend choice and any demotions the planner applied. This is the
+    /// CLI's `--explain` output; the first line is [`Plan::summary`].
+    pub fn explain(&self) -> Result<String> {
+        let plan = self.plan()?;
+        let (n, m) = (plan.n, plan.m);
+        let mut out = String::with_capacity(640);
+        out.push_str(&plan.summary());
+        out.push('\n');
+
+        // Backend: either an explicit request (validated, no rule ran)
+        // or the per-iteration flops comparison Auto resolved.
+        match self.kernel {
+            BackendPref::Auto => {
+                let dense_flops = n * m;
+                let fact_flops = DEFAULT_RANK * (n + m);
+                out.push_str(&format!(
+                    "backend: auto flops rule per apply — dense {n}x{m} = {dense_flops}, \
+                     factored r={DEFAULT_RANK} -> {fact_flops}"
+                ));
+                if let Source::Measures { mu, nu } = self.source {
+                    let radius = mu.radius().max(nu.radius());
+                    let nys_rank = (DEFAULT_RANK / 4).clamp(1, m);
+                    out.push_str(&format!(
+                        ", nystrom r={nys_rank} -> {} (flat-kernel gate eps >= R^2: \
+                         eps={} vs R^2={} -> {})",
+                        nys_rank * (n + m),
+                        self.epsilon,
+                        radius * radius,
+                        if self.epsilon >= radius * radius { "open" } else { "closed" }
+                    ));
+                }
+                let chosen = match plan.backend {
+                    Backend::Dense => "dense".to_string(),
+                    Backend::Factored { rank } => format!("factored(r={rank})"),
+                    Backend::Nystrom { rank, adaptive } => {
+                        format!("nystrom(r={rank}{})", if adaptive { ",adaptive" } else { "" })
+                    }
+                };
+                out.push_str(&format!(" => chose {chosen}\n"));
+                if matches!(plan.backend, Backend::Nystrom { .. }) {
+                    out.push_str(
+                        "backend: adaptive nystrom sampling is never auto-planned \
+                         (explicit .backend(BackendPref::Nystrom { adaptive: true, .. }) only)\n",
+                    );
+                }
+            }
+            _ => out.push_str(&format!(
+                "backend: explicit request {:?} (validated, no auto rule ran)\n",
+                self.kernel
+            )),
+        }
+
+        // Domain: the underflow heuristic with its numbers, plus any
+        // demotion (accelerated -> plain).
+        if let Source::Measures { mu, nu } = self.source {
+            let radius = mu.radius().max(nu.radius());
+            let spread = radius * radius / self.epsilon;
+            out.push_str(&format!(
+                "domain: f32 underflow spread R^2/eps = {spread:.1} vs threshold \
+                 {UNDERFLOW_LOG_SPREAD} -> {} risk",
+                if self.underflow_risk() { "at" } else { "no" }
+            ));
+        } else {
+            out.push_str("domain: prebuilt factors taken as given (no underflow probe)");
+        }
+        out.push_str(&format!(
+            " => {}\n",
+            match plan.domain {
+                Domain::Plain => "plain",
+                Domain::LogDomain => "log_domain",
+                Domain::AutoEscalate => "auto_escalate",
+            }
+        ));
+        if self.accelerated && self.domain != DomainChoice::Plain {
+            out.push_str("domain: demoted to plain — the accelerated solver never escalates\n");
+        }
+        match plan.schedule {
+            Some(s) => out.push_str(&format!(
+                "anneal: geometric rungs from eps_start={} (4R^2 scale) by decay={} down \
+                 to {} ({} rungs), symmetric self-solves {}\n",
+                s.eps_start,
+                s.decay,
+                plan.epsilon,
+                s.rungs(plan.epsilon).len(),
+                if plan.symmetric_self_solves { "on" } else { "off" }
+            )),
+            None => out.push_str("anneal: off (direct solve at the target eps)\n"),
+        }
+        Ok(out)
     }
 
     /// The planner's straight-to-log-domain rule (see
@@ -757,7 +916,6 @@ mod tests {
         assert!(!explicit.symmetric_self_solves, "explicit symmetric choice wins");
         // Invalid combinations are typed planning errors.
         assert!(OtProblem::new(&mu, &nu).accelerated().anneal(true).plan().is_err());
-        assert!(OtProblem::new(&mu, &nu).nystrom(8).anneal(true).plan().is_err());
         let phi = Mat::from_fn(5, 2, |_, _| 1.0);
         let w = vec![0.2f32; 5];
         assert!(OtProblem::from_factors(&phi, &phi)
@@ -766,6 +924,107 @@ mod tests {
             .plan()
             .is_err());
         assert!(OtProblem::new(&mu, &nu).anneal(true).anneal_decay(1.5).plan().is_err());
+    }
+
+    #[test]
+    fn nystrom_plans_across_domains_and_annealing() {
+        let (mu, nu) = clouds(60);
+        // The old walls are gone: Nyström composes with every domain
+        // choice and with annealing (the executor refits the kernel at
+        // each rung's eps from the plan seed).
+        let annealed = OtProblem::new(&mu, &nu).nystrom(8).anneal(true).plan().unwrap();
+        assert!(annealed.schedule.is_some());
+        assert_eq!(annealed.backend, Backend::Nystrom { rank: 8, adaptive: false });
+        let logged = OtProblem::new(&mu, &nu)
+            .backend(BackendPref::Nystrom { rank: 8, adaptive: true })
+            .domain(DomainChoice::LogDomain)
+            .plan()
+            .unwrap();
+        assert_eq!(logged.domain, Domain::LogDomain);
+        assert_eq!(logged.backend, Backend::Nystrom { rank: 8, adaptive: true });
+        // Auto domain treats the arm like any other: escalate-on-demand.
+        let auto = OtProblem::new(&mu, &nu).epsilon(0.5).nystrom(8).plan().unwrap();
+        assert_eq!(auto.domain, Domain::AutoEscalate);
+        // The deprecated aliases still steer the same field.
+        let aliased = OtProblem::new(&mu, &nu)
+            .kernel(KernelChoice::Nystrom { rank: 8, adaptive: true })
+            .plan()
+            .unwrap();
+        assert_eq!(aliased.backend, Backend::Nystrom { rank: 8, adaptive: true });
+    }
+
+    #[test]
+    fn auto_backend_picks_uniform_nystrom_only_in_the_flat_regime() {
+        let (mu, nu) = clouds(2000);
+        let radius = mu.radius().max(nu.radius());
+        // Flat kernel (eps >= R^2) on a big cloud: the cheap uniform
+        // Nyström arm wins the flops race. Never the adaptive variant.
+        let flat = OtProblem::new(&mu, &nu).epsilon(2.0 * radius * radius).plan().unwrap();
+        assert_eq!(
+            flat.backend,
+            Backend::Nystrom { rank: DEFAULT_RANK / 4, adaptive: false },
+            "flat regime on large clouds should auto-plan uniform nystrom"
+        );
+        // Sharp kernel: same clouds, small eps — gate closed, factored.
+        let sharp = OtProblem::new(&mu, &nu).epsilon(0.05).plan().unwrap();
+        assert_eq!(sharp.backend, Backend::Factored { rank: DEFAULT_RANK });
+        // Tiny clouds: dense is cheaper than any low-rank arm even flat.
+        let (mu, nu) = clouds(50);
+        let radius = mu.radius().max(nu.radius());
+        let tiny = OtProblem::new(&mu, &nu).epsilon(2.0 * radius * radius).plan().unwrap();
+        assert_eq!(tiny.backend, Backend::Dense);
+    }
+
+    #[test]
+    fn explain_narrates_the_flops_rule_and_demotions() {
+        let (mu, nu) = clouds(2000);
+        let text = OtProblem::new(&mu, &nu).epsilon(0.05).explain().unwrap();
+        assert!(text.contains("plan: backend=factored"), "{text}");
+        assert!(text.contains(&format!("dense 2000x2000 = {}", 2000 * 2000)), "{text}");
+        assert!(text.contains("flat-kernel gate"), "{text}");
+        assert!(text.contains("closed"), "{text}");
+        assert!(text.contains("=> chose factored(r=256)"), "{text}");
+        assert!(text.contains("R^2/eps"), "{text}");
+        // Explicit requests say so instead of pretending a rule ran.
+        let text = OtProblem::new(&mu, &nu)
+            .backend(BackendPref::Nystrom { rank: 16, adaptive: true })
+            .explain()
+            .unwrap();
+        assert!(text.contains("explicit request Nystrom"), "{text}");
+        // Demotions are called out.
+        let (mu, nu) = clouds(40);
+        let cfg = SinkhornConfig::default();
+        assert!(cfg.stabilize);
+        let text =
+            OtProblem::new(&mu, &nu).config(&cfg).rank(8).accelerated().explain().unwrap();
+        assert!(text.contains("demoted to plain"), "{text}");
+        // An annealed plan narrates its ladder.
+        let text = OtProblem::new(&mu, &nu).epsilon(1e-4).rank(8).explain().unwrap();
+        assert!(text.contains("anneal: geometric rungs"), "{text}");
+    }
+
+    #[test]
+    fn backend_flag_parses_every_cli_form() {
+        assert_eq!(BackendPref::parse_flag("auto", 64).unwrap(), BackendPref::Auto);
+        assert_eq!(BackendPref::parse_flag("dense", 64).unwrap(), BackendPref::Dense);
+        assert_eq!(
+            BackendPref::parse_flag("factored", 64).unwrap(),
+            BackendPref::Factored { rank: 64 }
+        );
+        assert_eq!(
+            BackendPref::parse_flag("factored:300", 64).unwrap(),
+            BackendPref::Factored { rank: 300 }
+        );
+        assert_eq!(
+            BackendPref::parse_flag("nystrom", 64).unwrap(),
+            BackendPref::Nystrom { rank: 64, adaptive: false }
+        );
+        assert_eq!(
+            BackendPref::parse_flag("nystrom-adaptive:32", 64).unwrap(),
+            BackendPref::Nystrom { rank: 32, adaptive: true }
+        );
+        assert!(BackendPref::parse_flag("cholesky", 64).is_err());
+        assert!(BackendPref::parse_flag("nystrom:many", 64).is_err());
     }
 
     #[test]
@@ -815,11 +1074,6 @@ mod tests {
         assert!(OtProblem::new(&mu, &nu).epsilon(0.0).plan().is_err());
         assert!(OtProblem::new(&mu, &nu).rank(0).plan().is_err());
         assert!(OtProblem::new(&mu, &nu).nystrom(1000).plan().is_err());
-        assert!(OtProblem::new(&mu, &nu)
-            .nystrom(8)
-            .domain(DomainChoice::LogDomain)
-            .plan()
-            .is_err());
         assert!(OtProblem::new(&mu, &nu)
             .accelerated()
             .domain(DomainChoice::LogDomain)

@@ -3,12 +3,20 @@
 //! count / rank r, measure wall-clock and the deviation score
 //! `D = 100 (ROT - ROT_hat)/|ROT| + 100` for the three contenders:
 //!
-//! * `Sin` — converged dense Sinkhorn (also defines the ground truth),
-//! * `RF`  — the paper's positive random features (always runs),
-//! * `Nys` — Nyström low-rank (recorded as FAILED when it loses
-//!           positivity or diverges — the paper's central contrast).
+//! * `Sin`   — converged dense Sinkhorn (also defines the ground truth),
+//! * `RF`    — the paper's positive random features (always runs),
+//! * `Nys`   — uniform-landmark Nyström low-rank (recorded as FAILED when
+//!             it loses positivity or diverges — the paper's central
+//!             contrast),
+//! * `Nys+a` — Nyström with adaptive farthest-point landmarks
+//!             (arXiv:1812.05189): better-spread landmarks at the same
+//!             rank, the same broken-positivity failure mode.
+//!
+//! [`run_headtohead`] is the focused variant: positive features vs
+//! adaptive Nyström vs uniform Nyström at one matched rank, error vs
+//! time per eps.
 
-use crate::api::OtProblem;
+use crate::api::{BackendPref, OtProblem};
 use crate::config::SinkhornConfig;
 use crate::data::Measure;
 use crate::features::GaussianFeatureMap;
@@ -225,6 +233,9 @@ pub fn run_sweep(
             let mut ny_devs = Vec::new();
             let mut ny_times = Vec::new();
             let mut ny_fail: Option<String> = None;
+            let mut na_devs = Vec::new();
+            let mut na_times = Vec::new();
+            let mut na_fail: Option<String> = None;
             for rep in 0..sweep.reps {
                 let rep_seed = seed ^ (rep as u64) << 32 ^ r as u64;
                 let mut rng = Rng::seed_from(rep_seed);
@@ -286,6 +297,22 @@ pub fn run_sweep(
                     }
                     Err(e) => ny_fail = Some(e.to_string()),
                 }
+                // Adaptive Nyström: same rank, farthest-point landmarks
+                // (the greedy pass is part of the measured time — spread
+                // landmarks are only worth what they cost).
+                let sw = Stopwatch::start();
+                let nysa = OtProblem::new(mu, nu)
+                    .config(&cfg)
+                    .backend(BackendPref::Nystrom { rank: r.min(mu.len()), adaptive: true })
+                    .seed(rep_seed ^ 0x4E5A)
+                    .solve();
+                match nysa {
+                    Ok(sol) => {
+                        na_devs.push(deviation_score(truth, sol.objective));
+                        na_times.push(sw.elapsed_secs());
+                    }
+                    Err(e) => na_fail = Some(e.to_string()),
+                }
             }
             let mk = |method: &'static str,
                       devs: &[f64],
@@ -317,6 +344,97 @@ pub fn run_sweep(
             let ny = mk("Nys", &ny_devs, &ny_times, ny_fail);
             progress(&ny);
             cells.push(ny);
+            let na = mk("Nys+a", &na_devs, &na_times, na_fail);
+            progress(&na);
+            cells.push(na);
+        }
+    }
+    cells
+}
+
+/// The PR-8 head-to-head: positive features vs adaptive Nyström vs
+/// uniform Nyström at one matched rank, error vs time per eps (the
+/// acceptance sweep runs eps ∈ {1e-1, 1e-2, 1e-3}).
+///
+/// Solves run with log-domain escalation *on* (unlike [`run_sweep`]'s
+/// pinned plain domain): at small eps the positive-feature kernel
+/// escalates and still answers, while Nyström's clamped signed log view
+/// gates itself off exactly where clamping would distort the apply — so
+/// its broken-positivity regime lands as a FAILED cell, which is the
+/// paper's contrast measured end to end.
+pub fn run_headtohead(
+    mu: &Measure,
+    nu: &Measure,
+    epsilons: &[f64],
+    rank: usize,
+    reps: usize,
+    seed: u64,
+    progress: impl Fn(&Cell),
+) -> Vec<Cell> {
+    // Matched rank: the divergence-free solve only needs rank <= m, but
+    // keep the cap symmetric so the comparison is honest for any clouds.
+    let r = rank.min(mu.len()).min(nu.len());
+    let mut cells = Vec::new();
+    for &eps in epsilons {
+        let truth = ground_truth(mu, nu, eps);
+        let cfg = SinkhornConfig {
+            epsilon: eps,
+            max_iters: 5000,
+            tol: 1e-4,
+            check_every: 10,
+            threads: 1,
+            stabilize: true,
+            max_batch: 1,
+            // Direct solves: annealing would blur the per-backend timing.
+            anneal: Some(false),
+            anneal_decay: 0.5,
+            symmetric: Some(false),
+        };
+        let mut devs = [Vec::new(), Vec::new(), Vec::new()];
+        let mut times = [Vec::new(), Vec::new(), Vec::new()];
+        let mut fails: [Option<String>; 3] = [None, None, None];
+        for rep in 0..reps {
+            let rep_seed = seed ^ ((rep as u64) << 32) ^ r as u64;
+            let contenders: [(usize, BackendPref, u64); 3] = [
+                (0, BackendPref::Factored { rank: r }, rep_seed),
+                (1, BackendPref::Nystrom { rank: r, adaptive: true }, rep_seed ^ 0x4E5A),
+                (2, BackendPref::Nystrom { rank: r, adaptive: false }, rep_seed ^ 0x4E59),
+            ];
+            for (slot, pref, s) in contenders {
+                let sw = Stopwatch::start();
+                let res = OtProblem::new(mu, nu).config(&cfg).backend(pref).seed(s).solve();
+                match res {
+                    Ok(sol) => {
+                        devs[slot].push(deviation_score(truth, sol.objective));
+                        times[slot].push(sw.elapsed_secs());
+                    }
+                    Err(e) => fails[slot] = Some(e.to_string()),
+                }
+            }
+        }
+        for (slot, method) in [(0usize, "RF"), (1, "Nys+a"), (2, "Nys")] {
+            let d = &devs[slot];
+            let t = &times[slot];
+            let cell = Cell {
+                method,
+                eps,
+                rank: r,
+                deviation: if d.is_empty() {
+                    f64::NAN
+                } else {
+                    d.iter().sum::<f64>() / d.len() as f64
+                },
+                time_s: if t.is_empty() {
+                    f64::NAN
+                } else {
+                    t.iter().sum::<f64>() / t.len() as f64
+                },
+                ok: d.len(),
+                reps,
+                failure: if d.is_empty() { fails[slot].take() } else { None },
+            };
+            progress(&cell);
+            cells.push(cell);
         }
     }
     cells
@@ -367,8 +485,8 @@ mod tests {
             max_iters: 2000,
         };
         let cells = run_sweep(&mu, &nu, &sweep, 0, |_| {});
-        // 1 Sin + 2 ranks x 3 methods (RF, RF+an, Nys) = 7 cells.
-        assert_eq!(cells.len(), 7);
+        // 1 Sin + 2 ranks x 4 methods (RF, RF+an, Nys, Nys+a) = 9 cells.
+        assert_eq!(cells.len(), 9);
         let sin = &cells[0];
         assert_eq!(sin.method, "Sin");
         assert!((sin.deviation - 100.0).abs() < 1.0, "Sin dev {}", sin.deviation);
@@ -384,6 +502,25 @@ mod tests {
         let an = cells.iter().find(|c| c.method == "RF+an" && c.rank == 200).unwrap();
         assert!(an.ok == 1, "annealed RF failed: {:?}", an.failure);
         assert!((an.deviation - 100.0).abs() < 50.0, "RF+an dev {}", an.deviation);
+    }
+
+    #[test]
+    fn headtohead_emits_three_methods_per_eps() {
+        let mut rng = Rng::seed_from(3);
+        let (mu, nu) = data::gaussian_blobs(60, &mut rng);
+        // One comfortable eps: all three contenders should answer here
+        // (small-eps Nyström failures are the bench's business, not this
+        // shape test's).
+        let cells = run_headtohead(&mu, &nu, &[5.0], 12, 1, 7, |_| {});
+        assert_eq!(cells.len(), 3);
+        let methods: Vec<&str> = cells.iter().map(|c| c.method).collect();
+        assert_eq!(methods, vec!["RF", "Nys+a", "Nys"]);
+        for c in &cells {
+            assert_eq!(c.rank, 12);
+            assert_eq!(c.ok, 1, "{} failed: {:?}", c.method, c.failure);
+            assert!(c.time_s.is_finite() && c.time_s >= 0.0);
+            assert!(c.deviation.is_finite());
+        }
     }
 
     #[test]

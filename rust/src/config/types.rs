@@ -197,6 +197,14 @@ pub struct ServiceConfig {
     /// `service.shard_workers` in config files, `--shard-workers` on the
     /// CLI.
     pub shard_workers: usize,
+    /// Planner backend preference for served solves, in the CLI's
+    /// `--backend` syntax (`auto`, `dense`, `factored[:rank]`,
+    /// `nystrom[:rank]`, `nystrom-adaptive[:rank]`; a missing rank falls
+    /// back to `num_features`). The default `factored` is the pre-PR-8
+    /// service behaviour — the positive-feature kernel with
+    /// `num_features` features and the shared feature-map cache.
+    /// `service.backend` in config files, `--backend` on the CLI.
+    pub backend: String,
 }
 
 impl Default for ServiceConfig {
@@ -209,6 +217,7 @@ impl Default for ServiceConfig {
             solver_threads: 1,
             cache_capacity: 8,
             shard_workers: 0,
+            backend: "factored".to_string(),
         }
     }
 }
@@ -231,6 +240,10 @@ impl ServiceConfig {
             shard_workers: doc
                 .get_int("service.shard_workers")
                 .unwrap_or(d.shard_workers as i64) as usize,
+            backend: doc
+                .get_str("service.backend")
+                .map(str::to_string)
+                .unwrap_or(d.backend),
         }
     }
 }

@@ -71,7 +71,7 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::api::OtProblem;
+use crate::api::{BackendPref, OtProblem};
 use crate::config::ServiceConfig;
 use crate::data::Measure;
 use crate::error::{Error, Result};
@@ -386,22 +386,28 @@ fn solve_one(
         skcfg.epsilon = e;
     }
     let eps = skcfg.epsilon;
-    let radius = req.mu.radius().max(req.nu.radius());
-    let map =
-        cache.get_or_fit(req.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
+    let backend = BackendPref::parse_flag(&cfg.backend, cfg.num_features)?;
     // One planned divergence = the three concurrent transport solves the
-    // worker used to hand-wire: stabilised factors (arbitrary client data
-    // must not underflow f32), the cached feature map shared across all
-    // three kernels, the worker's persistent pools, and log-domain
-    // escalation per `sinkhorn.stabilize` (absorbed by `.config`).
-    // Execution is bitwise identical to the pre-API worker path.
-    let report = OtProblem::new(&req.mu, &req.nu)
+    // worker used to hand-wire: the worker's persistent pools and
+    // log-domain escalation per `sinkhorn.stabilize` (absorbed by
+    // `.config`). Under the default factored backend the cached feature
+    // map is shared across all three kernels with stabilised factors
+    // (arbitrary client data must not underflow f32) and execution is
+    // bitwise identical to the pre-API worker path; other `--backend`
+    // choices skip the map — the dense and Nyström kernels build from
+    // the measures themselves (Nyström deterministically from the plan
+    // seed).
+    let radius = req.mu.radius().max(req.nu.radius());
+    let map = matches!(backend, BackendPref::Factored { .. } | BackendPref::Auto)
+        .then(|| cache.get_or_fit(req.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics)));
+    let mut problem = OtProblem::new(&req.mu, &req.nu)
         .config(&skcfg)
-        .rank(cfg.num_features)
-        .with_feature_map(&map)
-        .stabilized_factors(true)
-        .pools(solver_pool.clone(), solve_pool.clone())
-        .divergence()?;
+        .backend(backend)
+        .pools(solver_pool.clone(), solve_pool.clone());
+    if let Some(map) = map.as_ref() {
+        problem = problem.with_feature_map(map).stabilized_factors(true);
+    }
+    let report = problem.divergence()?;
     let stabilized = report.escalations() as u64;
     if stabilized > 0 {
         metrics.counter("service.stabilized_solves").add(stabilized);
@@ -443,10 +449,17 @@ fn solve_group(
         skcfg.epsilon = e;
     }
     let eps = skcfg.epsilon;
+    let backend = match BackendPref::parse_flag(&cfg.backend, cfg.num_features) {
+        Ok(b) => b,
+        Err(e) => {
+            let msg = e.to_string();
+            return group.iter().map(|_| Err(Error::Config(msg.clone()))).collect();
+        }
+    };
     // All group members share rep's support, hence also its radius.
     let radius = rep.mu.radius().max(rep.nu.radius());
-    let map =
-        cache.get_or_fit(rep.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
+    let map = matches!(backend, BackendPref::Factored { .. } | BackendPref::Auto)
+        .then(|| cache.get_or_fit(rep.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics)));
     // One planned B-pair divergence = three width-B batched solves on a
     // shared kernel triple, concurrent over the solve pool — the fused
     // path the worker used to hand-wire, bitwise identical per request
@@ -454,14 +467,15 @@ fn solve_group(
     // plan's fuse width covers the whole group in one chunk).
     let pairs: Vec<(&[f32], &[f32])> =
         group.iter().map(|r| (r.mu.weights.as_slice(), r.nu.weights.as_slice())).collect();
-    let reports = OtProblem::new(&rep.mu, &rep.nu)
+    let mut problem = OtProblem::new(&rep.mu, &rep.nu)
         .config(&skcfg)
-        .rank(cfg.num_features)
-        .with_feature_map(&map)
-        .stabilized_factors(true)
+        .backend(backend)
         .pools(solver_pool.clone(), solve_pool.clone())
-        .weight_pairs(&pairs)
-        .divergence_all();
+        .weight_pairs(&pairs);
+    if let Some(map) = map.as_ref() {
+        problem = problem.with_feature_map(map).stabilized_factors(true);
+    }
+    let reports = problem.divergence_all();
     group
         .iter()
         .zip(reports)
@@ -509,21 +523,32 @@ fn solve_group_sharded(
         skcfg.epsilon = e;
     }
     let eps = skcfg.epsilon;
+    let backend = match BackendPref::parse_flag(&cfg.backend, cfg.num_features) {
+        Ok(b) => b,
+        Err(e) => {
+            let msg = e.to_string();
+            return group.iter().map(|_| Err(Error::Config(msg.clone()))).collect();
+        }
+    };
     let radius = rep.mu.radius().max(rep.nu.radius());
-    let map =
-        cache.get_or_fit(rep.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics));
+    // Only factored plans ship the cache-resolved map with the task;
+    // a Nyström plan needs no artifact at all — its landmark draw is a
+    // pure function of the plan seed, so the shard worker rebuilds the
+    // bit-identical kernel from the plan alone.
+    let map = matches!(backend, BackendPref::Factored { .. } | BackendPref::Auto)
+        .then(|| cache.get_or_fit(rep.mu.dim(), eps, cfg.num_features, radius, rng, Some(metrics)));
     let pairs: Vec<(&[f32], &[f32])> =
         group.iter().map(|r| (r.mu.weights.as_slice(), r.nu.weights.as_slice())).collect();
     let ids: Vec<u64> = group.iter().map(|r| r.id).collect();
-    let plan = match OtProblem::new(&rep.mu, &rep.nu)
+    let mut problem = OtProblem::new(&rep.mu, &rep.nu)
         .config(&skcfg)
-        .rank(cfg.num_features)
-        .with_feature_map(&map)
-        .stabilized_factors(true)
+        .backend(backend)
         .solver_threads(cfg.solver_threads)
-        .weight_pairs(&pairs)
-        .plan()
-    {
+        .weight_pairs(&pairs);
+    if let Some(map) = map.as_ref() {
+        problem = problem.with_feature_map(map).stabilized_factors(true);
+    }
+    let plan = match problem.plan() {
         Ok(p) => p,
         Err(e) => {
             let msg = e.to_string();
@@ -531,7 +556,7 @@ fn solve_group_sharded(
         }
     };
     metrics.counter("service.shard.delegated_groups").inc();
-    let reports = shard.solve_group(&plan, &rep.mu, &rep.nu, &pairs, Some(&map), &ids);
+    let reports = shard.solve_group(&plan, &rep.mu, &rep.nu, &pairs, map.as_deref(), &ids);
     group
         .iter()
         .zip(reports)
@@ -582,6 +607,7 @@ mod tests {
             solver_threads: 1,
             cache_capacity: 8,
             shard_workers: 0,
+            backend: "factored".to_string(),
         }
     }
 
@@ -667,6 +693,7 @@ mod tests {
             solver_threads: 1,
             cache_capacity: 8,
             shard_workers: 0,
+            backend: "factored".to_string(),
         };
         let svc = Service::start(cfg);
         let h = svc.handle();

@@ -8,10 +8,12 @@
 //!   O(nm) per apply.
 //! * [`FactoredKernel`] — the paper's `RF` method: `K = Phi_x Phi_y^T`,
 //!   O(r(n+m)) per apply, positive by construction.
-//! * [`NystromKernel`] — the `Nys` baseline (Altschuler et al. '18):
-//!   data-adaptive low rank, O(r(n+m)) per apply but **not** positivity-
-//!   safe; [`NystromKernel::validate_positive`] surfaces the failure mode
-//!   the paper contrasts against.
+//! * [`NystromKernel`] — the `Nys` arm (Altschuler et al. '18, adaptive
+//!   sampling per arXiv:1812.05189): data-adaptive low rank, O(r(n+m))
+//!   per apply but **not** positivity-safe;
+//!   [`NystromKernel::validate_positive`] surfaces the failure mode the
+//!   paper contrasts against, and its clamped signed log view is gated
+//!   off whenever clamping would distort the apply (see [`nystrom`]).
 //!
 //! Kernels that can also stream *log-space* applies — the row/column
 //! logsumexp of `log K + input` that log-domain Sinkhorn iterates —
@@ -21,15 +23,15 @@
 //! concrete kernel type.
 
 use crate::data::Measure;
-use crate::error::{Error, Result};
 use crate::features::{self, FeatureMap};
 use crate::linalg::{self, Mat};
-use crate::rng::Rng;
 use crate::runtime::pool::Pool;
 
 pub mod logspace;
+pub mod nystrom;
 
 pub use logspace::{CostMatrixLogKernel, LogKernelOp};
+pub use nystrom::NystromKernel;
 
 /// Matrix-free kernel operator.
 pub trait KernelOp {
@@ -109,8 +111,10 @@ pub trait KernelOp {
     /// The log-domain view of this kernel, when it supports matrix-free
     /// log-space applies ([`LogKernelOp`]). Solvers use this to escalate
     /// to the stabilised log-domain iteration when plain Alg. 1 produces
-    /// non-finite scalings at small eps. Defaults to `None` (e.g.
-    /// Nyström, whose approximation can go negative, has no log kernel).
+    /// non-finite scalings at small eps. Defaults to `None`; kernels may
+    /// also gate the view at runtime (Nyström exposes its clamped signed
+    /// log view only where it agrees with the plain apply — see
+    /// [`nystrom`]).
     fn as_log_kernel(&self) -> Option<&dyn LogKernelOp> {
         None
     }
@@ -469,215 +473,12 @@ impl KernelOp for FactoredKernel {
     }
 }
 
-/// Nyström low-rank approximation of the Gibbs kernel — the `Nys` baseline.
-///
-/// Uniform column sampling: pick `rank` landmark points `L` from `nu`,
-/// form `K_xL (K_LL + ridge I)^{-1} K_Ly` as the approximation
-/// `A W^+ B`. Applies in O(rank (n+m)) like the factored kernel, but the
-/// approximation can produce *negative* entries, which breaks Sinkhorn at
-/// small epsilon — the paper's central contrast.
-pub struct NystromKernel {
-    /// (n, rank) = K(x, landmarks).
-    a: Mat,
-    /// (rank, rank) pseudo-inverse of the landmark block.
-    w_pinv: Mat,
-    /// (rank, m) = K(landmarks, y).
-    b: Mat,
-    pub eps: f64,
-    scratch: std::cell::RefCell<(Vec<f32>, Vec<f32>)>,
-}
-
-impl NystromKernel {
-    /// Build with `rank` uniformly-sampled landmarks and a small ridge.
-    pub fn from_measures(
-        mu: &Measure,
-        nu: &Measure,
-        eps: f64,
-        rank: usize,
-        rng: &mut Rng,
-    ) -> Self {
-        assert!((1..=nu.len()).contains(&rank));
-        let gibbs = |x: &[f32], y: &[f32]| -> f32 {
-            let d2: f64 =
-                x.iter().zip(y).map(|(&a, &b)| ((a - b) as f64) * ((a - b) as f64)).sum();
-            (-d2 / eps).exp() as f32
-        };
-        // Landmarks from both clouds (union sampling keeps the column space
-        // relevant for the K_xy rectangle).
-        let idx = rng.sample_indices(mu.len() + nu.len(), rank);
-        let landmark = |t: usize| -> &[f32] {
-            if t < mu.len() {
-                mu.points.row(t)
-            } else {
-                nu.points.row(t - mu.len())
-            }
-        };
-        let mut a = Mat::zeros(mu.len(), rank);
-        for i in 0..mu.len() {
-            for (c, &l) in idx.iter().enumerate() {
-                a[(i, c)] = gibbs(mu.points.row(i), landmark(l));
-            }
-        }
-        let mut b = Mat::zeros(rank, nu.len());
-        for (r_, &l) in idx.iter().enumerate() {
-            for j in 0..nu.len() {
-                b[(r_, j)] = gibbs(landmark(l), nu.points.row(j));
-            }
-        }
-        let mut w = Mat::zeros(rank, rank);
-        for (r1, &l1) in idx.iter().enumerate() {
-            for (r2, &l2) in idx.iter().enumerate() {
-                w[(r1, r2)] = gibbs(landmark(l1), landmark(l2));
-            }
-        }
-        let w_pinv = ridge_inverse(&w, 1e-3);
-        NystromKernel {
-            a,
-            w_pinv,
-            b,
-            eps,
-            scratch: std::cell::RefCell::new((vec![0.0; rank], vec![0.0; rank])),
-        }
-    }
-
-    pub fn rank(&self) -> usize {
-        self.w_pinv.rows()
-    }
-
-    /// Materialise the approximation (tests / small problems only).
-    pub fn to_dense(&self) -> Mat {
-        linalg::matmul(&linalg::matmul(&self.a, &self.w_pinv), &self.b)
-    }
-
-    /// The paper's point: check whether applying this kernel to a positive
-    /// probe keeps positivity. Returns `Err(Error::NotPositive)` if the
-    /// approximation drives any output coordinate ≤ 0 (the regime where
-    /// Sinkhorn with Nyström diverges). Probes with the uniform vector and
-    /// `trials` random positive vectors.
-    pub fn validate_positive(&self, rng: &mut Rng, trials: usize) -> Result<()> {
-        let check = |v: &[f32]| -> Result<()> {
-            let out = self.apply(v);
-            let out_t = self.apply_t(&vec![1.0; self.rows()]);
-            let min = out
-                .iter()
-                .chain(out_t.iter())
-                .cloned()
-                .fold(f32::INFINITY, f32::min);
-            if min <= 0.0 {
-                return Err(Error::NotPositive { min_entry: min as f64, rank: self.rank() });
-            }
-            Ok(())
-        };
-        check(&vec![1.0; self.cols()])?;
-        for _ in 0..trials {
-            let v: Vec<f32> = (0..self.cols()).map(|_| rng.uniform_in(0.01, 1.0) as f32).collect();
-            check(&v)?;
-        }
-        Ok(())
-    }
-}
-
-impl KernelOp for NystromKernel {
-    fn rows(&self) -> usize {
-        self.a.rows()
-    }
-
-    fn cols(&self) -> usize {
-        self.b.cols()
-    }
-
-    fn apply_into(&self, v: &[f32], out: &mut [f32]) {
-        let mut s = self.scratch.borrow_mut();
-        let (t1, t2) = &mut *s;
-        linalg::matvec_into(&self.b, v, t1);
-        linalg::matvec_into(&self.w_pinv, t1, t2);
-        linalg::matvec_into(&self.a, t2, out);
-    }
-
-    fn apply_t_into(&self, u: &[f32], out: &mut [f32]) {
-        let mut s = self.scratch.borrow_mut();
-        let (t1, t2) = &mut *s;
-        linalg::matvec_t_into(&self.a, u, t1);
-        linalg::matvec_t_into(&self.w_pinv, t1, t2);
-        linalg::matvec_t_into(&self.b, t2, out);
-    }
-
-    fn min_entry(&self) -> f64 {
-        // Estimate by probing; can be ≤ 0 (that's the point).
-        let e = self.apply(&vec![1.0; self.cols()]);
-        e.iter().cloned().fold(f32::INFINITY, f32::min) as f64 / self.cols() as f64
-    }
-
-    fn flops_per_apply(&self) -> u64 {
-        let r = self.rank() as u64;
-        2 * r * (self.rows() as u64 + self.cols() as u64) + 2 * r * r
-    }
-
-    fn label(&self) -> String {
-        format!("Nys(r={} {}x{})", self.rank(), self.rows(), self.cols())
-    }
-}
-
-/// Ridge-regularised inverse via Gauss–Jordan in f64 (rank x rank, small).
-///
-/// The landmark block K_LL is severely ill-conditioned at large eps (all
-/// entries near 1), so the elimination runs in f64 and the ridge is scaled
-/// to the matrix's mean diagonal — otherwise f32 cancellation noise in
-/// W^+ dominates the whole Nyström apply.
-fn ridge_inverse(w: &Mat, rel_ridge: f64) -> Mat {
-    let n = w.rows();
-    assert_eq!(w.cols(), n);
-    let mean_diag: f64 =
-        (0..n).map(|i| w[(i, i)] as f64).sum::<f64>() / n as f64;
-    let ridge = rel_ridge * mean_diag.max(1e-30);
-    // Augmented [W + ridge I | I] in f64.
-    let mut aug = vec![0.0f64; n * 2 * n];
-    let idx = |i: usize, j: usize| i * 2 * n + j;
-    for i in 0..n {
-        for j in 0..n {
-            aug[idx(i, j)] = w[(i, j)] as f64 + if i == j { ridge } else { 0.0 };
-        }
-        aug[idx(i, n + i)] = 1.0;
-    }
-    for col in 0..n {
-        // Partial pivot.
-        let mut piv = col;
-        for i in col + 1..n {
-            if aug[idx(i, col)].abs() > aug[idx(piv, col)].abs() {
-                piv = i;
-            }
-        }
-        if piv != col {
-            for j in 0..2 * n {
-                aug.swap(idx(col, j), idx(piv, j));
-            }
-        }
-        let p = aug[idx(col, col)];
-        let p = if p.abs() < 1e-300 { 1e-300_f64.copysign(p) } else { p };
-        for j in 0..2 * n {
-            aug[idx(col, j)] /= p;
-        }
-        for i in 0..n {
-            if i == col {
-                continue;
-            }
-            let f = aug[idx(i, col)];
-            if f == 0.0 {
-                continue;
-            }
-            for j in 0..2 * n {
-                aug[idx(i, j)] -= f * aug[idx(col, j)];
-            }
-        }
-    }
-    Mat::from_fn(n, n, |i, j| aug[idx(i, n + j)] as f32)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data;
     use crate::features::GaussianFeatureMap;
+    use crate::rng::Rng;
 
     fn clouds(seed: u64, n: usize) -> (Measure, Measure) {
         let mut rng = Rng::seed_from(seed);
@@ -781,136 +582,9 @@ mod tests {
     }
 
     #[test]
-    fn ridge_inverse_inverts() {
-        let w = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
-        let wi = ridge_inverse(&w, 0.0);
-        let prod = linalg::matmul(&w, &wi);
-        assert!((prod[(0, 0)] - 1.0).abs() < 1e-4);
-        assert!((prod[(1, 1)] - 1.0).abs() < 1e-4);
-        assert!(prod[(0, 1)].abs() < 1e-4);
-    }
-
-    #[test]
-    fn nystrom_accurate_at_large_eps() {
-        // Large eps -> K is near low-rank -> Nyström is accurate: the
-        // regime where the paper says Nys and RF both work.
-        let (mu, nu) = clouds(9, 40);
-        let mut rng = Rng::seed_from(10);
-        let nk = NystromKernel::from_measures(&mu, &nu, 5.0, 20, &mut rng);
-        let dk = DenseKernel::from_measures(&mu, &nu, 5.0);
-        let approx = nk.to_dense();
-        let mut max_rel = 0.0f64;
-        for i in 0..40 {
-            for j in 0..40 {
-                let rel = ((approx[(i, j)] - dk.k[(i, j)]).abs() / dk.k[(i, j)]) as f64;
-                max_rel = max_rel.max(rel);
-            }
-        }
-        // The 1e-3 relative ridge biases the approximation slightly; ~5%
-        // max relative entry error at rank n/4 is the expected regime.
-        assert!(max_rel < 0.08, "max rel err {max_rel}");
-        assert!(nk.validate_positive(&mut rng, 3).is_ok());
-    }
-
-    #[test]
-    fn nystrom_loses_positivity_at_small_eps() {
-        // Small eps -> K is effectively full-rank -> low-rank Nyström
-        // produces non-positive outputs: the failure the paper fixes.
-        let (mu, nu) = clouds(11, 60);
-        let mut rng = Rng::seed_from(12);
-        let nk = NystromKernel::from_measures(&mu, &nu, 0.01, 10, &mut rng);
-        let err = nk.validate_positive(&mut rng, 5);
-        assert!(err.is_err(), "expected positivity failure at eps=0.01, rank 10");
-        if let Err(Error::NotPositive { min_entry, .. }) = err {
-            assert!(min_entry <= 0.0);
-        }
-    }
-
-    #[test]
-    fn nystrom_apply_matches_dense_materialisation() {
-        let (mu, nu) = clouds(13, 25);
-        let mut rng = Rng::seed_from(14);
-        let nk = NystromKernel::from_measures(&mu, &nu, 2.0, 12, &mut rng);
-        let dense = nk.to_dense();
-        let v: Vec<f32> = (0..25).map(|i| (i as f32 * 0.07).sin().abs() + 0.1).collect();
-        // Tolerance reflects f32 matvecs against W^+ entries of size
-        // O(1/ridge): the two evaluation orders agree to ~1e-3 relative.
-        let want = linalg::matvec(&dense, &v);
-        let scale = (linalg::l1_norm(&want) / 25.0).max(1.0);
-        let got = nk.apply(&v);
-        assert!(linalg::max_abs_diff(&got, &want) < 1e-3 * scale);
-        let got_t = nk.apply_t(&v);
-        let want_t = linalg::matvec_t(&dense, &v);
-        assert!(linalg::max_abs_diff(&got_t, &want_t) < 1e-3 * scale);
-    }
-
-    #[test]
     fn kernel_labels() {
         let (mu, nu) = clouds(15, 5);
         let dk = DenseKernel::from_measures(&mu, &nu, 1.0);
         assert!(dk.label().starts_with("Sin"));
-    }
-}
-
-#[cfg(test)]
-mod debug_nystrom {
-    use super::*;
-    use crate::data;
-    use crate::rng::Rng;
-
-    #[test]
-    #[ignore]
-    fn probe() {
-        for eps in [0.5f64, 1.0] {
-            for rank in [100usize, 600] {
-                let mut rng = Rng::seed_from(0);
-                let (mu, nu) = data::gaussian_blobs(2000, &mut rng);
-                let nk = NystromKernel::from_measures(&mu, &nu, eps, rank, &mut rng);
-                let out = nk.apply(&vec![1.0; nu.len()]);
-                let min = out.iter().cloned().fold(f32::INFINITY, f32::min);
-                let neg = out.iter().filter(|&&x| x <= 0.0).count();
-                println!("eps={eps} rank={rank}: min(K1)={min:e} negatives={neg}/{}", out.len());
-            }
-        }
-    }
-}
-
-#[cfg(test)]
-mod debug_nystrom2 {
-    use super::*;
-    use crate::config::SinkhornConfig;
-    use crate::data;
-    use crate::rng::Rng;
-    use crate::sinkhorn::sinkhorn;
-
-    #[test]
-    #[ignore]
-    fn probe_solve() {
-        for eps in [1.0f64, 2.0, 5.0] {
-            for rank in [300usize, 1000] {
-                let mut rng = Rng::seed_from(3);
-                let (mu, nu) = data::gaussian_blobs(2000, &mut rng);
-                let nk = NystromKernel::from_measures(&mu, &nu, eps, rank, &mut rng);
-                let cfg = SinkhornConfig {
-                    epsilon: eps,
-                    max_iters: 2000,
-                    tol: 1e-4,
-                    check_every: 10,
-                    threads: 1,
-                    stabilize: false,
-                    max_batch: 1,
-                    anneal: None,
-                    anneal_decay: 0.5,
-                    symmetric: None,
-                };
-                match sinkhorn(&nk, &mu.weights, &nu.weights, &cfg) {
-                    Ok(s) => println!(
-                        "eps={eps} rank={rank}: OK obj={:.4} iters={}",
-                        s.objective, s.iterations
-                    ),
-                    Err(e) => println!("eps={eps} rank={rank}: FAIL {e:.60}"),
-                }
-            }
-        }
     }
 }

@@ -1,0 +1,907 @@
+//! Nyström low-rank approximation of the Gibbs kernel — the `Nys` arm.
+//!
+//! The planner's third backend ([`crate::api::Backend::Nystrom`]): pick
+//! `rank` landmark points `L` from the union of the two clouds, form
+//!
+//! ```text
+//! K  ≈  A W⁺ B,    A = K(x, L),  W = K(L, L),  B = K(L, y)
+//! ```
+//!
+//! and apply in O(rank·(n+m)) like the factored kernel. Two landmark
+//! selection schemes, both driven by a seeded [`Rng`] so a plan replays
+//! bit-identically on every host and shard (the seed rides the plan
+//! through [`crate::api::TaskEnvelope`]; workers rebuild the same
+//! landmarks):
+//!
+//! * **uniform** ([`NystromKernel::from_measures`]) — `rank` indices
+//!   sampled uniformly without replacement from the union cloud; the
+//!   classical baseline.
+//! * **adaptive** ([`NystromKernel::from_measures_adaptive`]) — greedy
+//!   farthest-point (k-center) sampling, the geometric variant of the
+//!   recursive leverage-score sampling of Altschuler–Bach–Rudi–
+//!   Niles-Weed (arXiv:1812.05189): after a seeded uniform first pick,
+//!   each landmark maximises the squared distance to the chosen set
+//!   (ties resolve to the lowest index, so the sequence is a pure
+//!   function of the seed). For the Gibbs kernel, well-spread landmarks
+//!   approximate the leverage-score distribution without the O(n r²)
+//!   score recursion.
+//!
+//! Factor construction routes the O((n+m)·rank·dim) inner-product work
+//! through the pooled/SIMD [`crate::linalg`] mat-mat kernels
+//! (`d²(p, l) = |p|² + |l|² − 2⟨p, l⟩` with the cross terms as one
+//! column-blocked product per factor), not scalar per-entry loops.
+//!
+//! ## The clamped log view
+//!
+//! Unlike the paper's positive features, `A W⁺ B` is **not** positivity
+//! safe: `W⁺` is signed, so the approximation can produce negative
+//! entries — the failure mode the paper contrasts against
+//! ([`NystromKernel::validate_positive`]). The kernel still exposes a
+//! [`LogKernelOp`] view so log-domain escalation and eps-annealing work
+//! on this arm where the approximation is sound: the composed factor
+//! `P = A·W⁺` (n×rank) is split into its positive and negative parts,
+//! entries are clamped at the documented positive floor
+//! `exp(`[`LOG_FLOOR`]`)` (smaller-magnitude entries behave as absent
+//! logsumexp terms), and a log apply runs the two positive-factor chains
+//! `P⁺·(B eᵗ)` and `P⁻·(B eᵗ)` as nested logsumexps, combining them by
+//! signed subtraction in f64. Where a signed combination is non-positive
+//! the result is `-inf`/NaN and the solvers surface a typed
+//! [`Error::SinkhornDiverged`] instead of garbage. The view is gated:
+//! [`KernelOp::as_log_kernel`] returns `None` (and
+//! [`NystromKernel::validate_positive`] escalates to
+//! [`Error::NotPositive`]) whenever the clamped view disagrees with the
+//! plain apply on a ones probe by more than [`LOG_VIEW_TOL`] — i.e.
+//! whenever clamping would distort the apply.
+
+use crate::data::Measure;
+use crate::error::{Error, Result};
+use crate::features::LOG_FLOOR;
+use crate::linalg::{self, Mat};
+use crate::rng::Rng;
+use crate::runtime::pool::Pool;
+
+use super::logspace::LogKernelOp;
+use super::KernelOp;
+
+/// Relative ones-probe agreement required between the plain apply and
+/// the clamped log view before the log view is exposed through
+/// [`KernelOp::as_log_kernel`]. Beyond this, clamping (or a loss of
+/// positivity) has materially distorted the operator and the log-domain
+/// solvers would converge to the wrong kernel.
+pub const LOG_VIEW_TOL: f64 = 0.05;
+
+/// The clamped signed log factors backing the [`LogKernelOp`] view.
+struct LogView {
+    /// (n, rank): `ln(max(P, 0))` for `P = A·W⁺`, floored at [`LOG_FLOOR`].
+    lpp: Mat,
+    /// (n, rank): `ln(max(-P, 0))`, floored at [`LOG_FLOOR`].
+    lpn: Mat,
+    /// (m, rank): `ln(Bᵀ)`, floored at [`LOG_FLOOR`] (B ≥ 0 by construction).
+    lbt: Mat,
+    /// Smallest composed-factor entry before clamping (diagnostic for
+    /// [`Error::NotPositive`]; ≤ 0 whenever the split is non-trivial).
+    composed_min: f64,
+}
+
+/// Nyström kernel `A W⁺ B` over seeded landmarks. `Sync` (scratch lives
+/// behind a `Mutex`, like [`super::FactoredKernel`]), so the three
+/// transport problems of a divergence solve concurrently; applies
+/// row-chunk over an embedded [`Pool`] ([`NystromKernel::with_pool`]).
+pub struct NystromKernel {
+    /// (n, rank) = K(x, landmarks).
+    a: Mat,
+    /// (rank, rank) ridge pseudo-inverse of the landmark block.
+    w_pinv: Mat,
+    /// (rank, m) = K(landmarks, y).
+    b: Mat,
+    pub eps: f64,
+    /// Landmark selection scheme used (for labels and plan explain).
+    adaptive: bool,
+    /// Landmark indices into the union cloud (`< n` → `mu`, else `nu`).
+    landmarks: Vec<usize>,
+    /// Scratch for the two rank-vectors between the three matvecs.
+    scratch: std::sync::Mutex<(Vec<f32>, Vec<f32>)>,
+    /// Intra-apply parallelism policy (serial by default).
+    pool: Pool,
+    /// Lazily-composed clamped log factors (first log-domain use).
+    log_view: std::sync::OnceLock<LogView>,
+    /// Lazily-evaluated ones-probe gate for the log view.
+    log_view_ok: std::sync::OnceLock<bool>,
+}
+
+impl NystromKernel {
+    /// Build with `rank` uniformly-sampled landmarks and a small ridge.
+    ///
+    /// Landmarks come from both clouds (union sampling keeps the column
+    /// space relevant for the `K_xy` rectangle). Deterministic in `rng`:
+    /// the same seed rebuilds the same kernel on any host.
+    pub fn from_measures(
+        mu: &Measure,
+        nu: &Measure,
+        eps: f64,
+        rank: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!((1..=nu.len()).contains(&rank));
+        let idx = rng.sample_indices(mu.len() + nu.len(), rank);
+        Self::build(mu, nu, eps, idx, false, Pool::serial())
+    }
+
+    /// Build with `rank` adaptively-selected landmarks: greedy
+    /// farthest-point sampling over the union cloud (see module docs),
+    /// seeded by `rng` (one uniform draw for the first landmark; the
+    /// rest of the sequence is deterministic given that pick).
+    pub fn from_measures_adaptive(
+        mu: &Measure,
+        nu: &Measure,
+        eps: f64,
+        rank: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!((1..=nu.len()).contains(&rank));
+        let pool = Pool::serial();
+        let union = union_matrix(mu, nu);
+        let norms = row_sq_norms(&union);
+        let idx = farthest_point_landmarks(&union, &norms, rank, rng, &pool);
+        Self::build(mu, nu, eps, idx, true, pool)
+    }
+
+    /// Shared factor construction from chosen landmark indices. The
+    /// cross inner products run through the pooled column-blocked
+    /// mat-mat kernels; only the final `exp` is per-entry.
+    fn build(
+        mu: &Measure,
+        nu: &Measure,
+        eps: f64,
+        idx: Vec<usize>,
+        adaptive: bool,
+        pool: Pool,
+    ) -> Self {
+        assert_eq!(mu.dim(), nu.dim());
+        let rank = idx.len();
+        let d = mu.dim();
+        let lmk = Mat::from_fn(rank, d, |k, j| {
+            let t = idx[k];
+            if t < mu.len() { mu.points.row(t)[j] } else { nu.points.row(t - mu.len())[j] }
+        });
+        let lnorms = row_sq_norms(&lmk);
+        let xnorms = row_sq_norms(&mu.points);
+        let ynorms = row_sq_norms(&nu.points);
+        let a = gibbs_block(&mu.points, &xnorms, &lmk, &lnorms, eps, &pool);
+        let b = gibbs_block(&nu.points, &ynorms, &lmk, &lnorms, eps, &pool).transpose();
+        let w = gibbs_block(&lmk, &lnorms, &lmk, &lnorms, eps, &pool);
+        let w_pinv = ridge_inverse(&w, 1e-3);
+        NystromKernel {
+            a,
+            w_pinv,
+            b,
+            eps,
+            adaptive,
+            landmarks: idx,
+            scratch: std::sync::Mutex::new((vec![0.0; rank], vec![0.0; rank])),
+            pool,
+            log_view: std::sync::OnceLock::new(),
+            log_view_ok: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Set the intra-apply parallelism policy. The pooled kernels are
+    /// deterministic in the thread count, so this changes wall-clock
+    /// only, never the numbers (rust/tests/parallel_equivalence.rs).
+    pub fn with_pool(mut self, pool: Pool) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    pub fn rank(&self) -> usize {
+        self.w_pinv.rows()
+    }
+
+    /// Whether the landmarks were adaptively (farthest-point) selected.
+    pub fn adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    /// The chosen landmark indices into the union cloud (`t < n` is
+    /// `mu.points.row(t)`, else `nu.points.row(t - n)`). A pure function
+    /// of the construction seed — what "landmark seed rides the
+    /// envelope" means for sharded dispatch.
+    pub fn landmarks(&self) -> &[usize] {
+        &self.landmarks
+    }
+
+    /// Materialise the approximation (tests / small problems only).
+    pub fn to_dense(&self) -> Mat {
+        linalg::matmul(&linalg::matmul(&self.a, &self.w_pinv), &self.b)
+    }
+
+    /// The clamped signed log factors, composed on first log-domain use:
+    /// `P = A·W⁺` (one rank-wide matmul), split by sign, logs floored at
+    /// [`LOG_FLOOR`].
+    fn log_view(&self) -> &LogView {
+        self.log_view.get_or_init(|| {
+            let p = linalg::matmul(&self.a, &self.w_pinv);
+            let mut composed_min = f64::INFINITY;
+            for i in 0..p.rows() {
+                for &v in p.row(i) {
+                    composed_min = composed_min.min(v as f64);
+                }
+            }
+            for k in 0..self.b.rows() {
+                for &v in self.b.row(k) {
+                    composed_min = composed_min.min(v as f64);
+                }
+            }
+            let floored_ln = |v: f32| if v > 0.0 { v.ln().max(LOG_FLOOR) } else { LOG_FLOOR };
+            LogView {
+                lpp: p.map(floored_ln),
+                lpn: p.map(|v| floored_ln(-v)),
+                lbt: self.b.transpose().map(floored_ln),
+                composed_min,
+            }
+        })
+    }
+
+    /// Ones-probe gate for the log view, both directions: the clamped
+    /// signed log apply must reproduce the plain f32 apply to
+    /// [`LOG_VIEW_TOL`] relative, with every plain output positive and
+    /// every log output finite. Evaluated once, lazily.
+    fn log_view_agrees(&self) -> bool {
+        *self.log_view_ok.get_or_init(|| {
+            let agree = |plain: &[f32], logd: &[f64]| {
+                plain.iter().zip(logd).all(|(&p, &l)| {
+                    p > 0.0
+                        && l.is_finite()
+                        && ((l.exp() - p as f64) / p as f64).abs() <= LOG_VIEW_TOL
+                })
+            };
+            let mut fwd = vec![0.0f64; self.rows()];
+            self.apply_log(&vec![0.0f64; self.cols()], &mut fwd);
+            if !agree(&self.apply(&vec![1.0f32; self.cols()]), &fwd) {
+                return false;
+            }
+            let mut bwd = vec![0.0f64; self.cols()];
+            self.apply_log_t(&vec![0.0f64; self.rows()], &mut bwd);
+            agree(&self.apply_t(&vec![1.0f32; self.rows()]), &bwd)
+        })
+    }
+
+    /// The paper's point: check whether this approximation behaves like a
+    /// positive kernel. Probes `K v` **and** `Kᵀ u` with the uniform
+    /// vector and `trials` random positive vectors (a fresh `v`/`u` pair
+    /// per trial — a transpose-side-only negative entry triggers too),
+    /// then checks that the clamped log view has not distorted the apply
+    /// ([`LOG_VIEW_TOL`]). Returns [`Error::NotPositive`] in the regime
+    /// where Sinkhorn with Nyström diverges.
+    pub fn validate_positive(&self, rng: &mut Rng, trials: usize) -> Result<()> {
+        let check = |v: &[f32], u: &[f32]| -> Result<()> {
+            let out = self.apply(v);
+            let out_t = self.apply_t(u);
+            let min = out
+                .iter()
+                .chain(out_t.iter())
+                .cloned()
+                .fold(f32::INFINITY, f32::min);
+            if min <= 0.0 {
+                return Err(Error::NotPositive { min_entry: min as f64, rank: self.rank() });
+            }
+            Ok(())
+        };
+        check(&vec![1.0; self.cols()], &vec![1.0; self.rows()])?;
+        for _ in 0..trials {
+            let v: Vec<f32> = (0..self.cols()).map(|_| rng.uniform_in(0.01, 1.0) as f32).collect();
+            let u: Vec<f32> = (0..self.rows()).map(|_| rng.uniform_in(0.01, 1.0) as f32).collect();
+            check(&v, &u)?;
+        }
+        if !self.log_view_agrees() {
+            return Err(Error::NotPositive {
+                min_entry: self.log_view().composed_min,
+                rank: self.rank(),
+            });
+        }
+        Ok(())
+    }
+}
+
+impl KernelOp for NystromKernel {
+    fn rows(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.b.cols()
+    }
+
+    fn apply_into(&self, v: &[f32], out: &mut [f32]) {
+        let mut s = self.scratch.lock().unwrap();
+        let (t1, t2) = &mut *s;
+        linalg::matvec_into_pooled(&self.b, v, t1, &self.pool);
+        linalg::matvec_into_pooled(&self.w_pinv, t1, t2, &self.pool);
+        linalg::matvec_into_pooled(&self.a, t2, out, &self.pool);
+    }
+
+    fn apply_t_into(&self, u: &[f32], out: &mut [f32]) {
+        let mut s = self.scratch.lock().unwrap();
+        let (t1, t2) = &mut *s;
+        linalg::matvec_t_into_pooled(&self.a, u, t1, &self.pool);
+        linalg::matvec_t_into_pooled(&self.w_pinv, t1, t2, &self.pool);
+        linalg::matvec_t_into_pooled(&self.b, t2, out, &self.pool);
+    }
+
+    /// Fused multi-pair apply: three column-blocked mat-mats with one
+    /// stream over each factor for all B pairs. Each pair row is bitwise
+    /// identical to [`KernelOp::apply_into`] on that pair's vector at
+    /// every pool size (the column-blocked kernels share row kernels and
+    /// chunk grids with the vector ones).
+    fn apply_batch_into(&self, vs: &Mat, out: &mut Mat) {
+        let r = self.rank();
+        let mut m1 = Mat::zeros(vs.rows(), r);
+        let mut m2 = Mat::zeros(vs.rows(), r);
+        linalg::matmat_into_pooled(&self.b, vs, &mut m1, &self.pool);
+        linalg::matmat_into_pooled(&self.w_pinv, &m1, &mut m2, &self.pool);
+        linalg::matmat_into_pooled(&self.a, &m2, out, &self.pool);
+    }
+
+    fn apply_batch_t_into(&self, us: &Mat, out: &mut Mat) {
+        let r = self.rank();
+        let mut m1 = Mat::zeros(us.rows(), r);
+        let mut m2 = Mat::zeros(us.rows(), r);
+        linalg::matmat_t_into_pooled(&self.a, us, &mut m1, &self.pool);
+        linalg::matmat_t_into_pooled(&self.w_pinv, &m1, &mut m2, &self.pool);
+        linalg::matmat_t_into_pooled(&self.b, &m2, out, &self.pool);
+    }
+
+    fn min_entry(&self) -> f64 {
+        // Estimate by probing; can be ≤ 0 (that's the point).
+        let e = self.apply(&vec![1.0; self.cols()]);
+        e.iter().cloned().fold(f32::INFINITY, f32::min) as f64 / self.cols() as f64
+    }
+
+    fn flops_per_apply(&self) -> u64 {
+        let r = self.rank() as u64;
+        2 * r * (self.rows() as u64 + self.cols() as u64) + 2 * r * r
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "Nys({}r={} {}x{})",
+            if self.adaptive { "adaptive " } else { "" },
+            self.rank(),
+            self.rows(),
+            self.cols()
+        )
+    }
+
+    /// The clamped signed log view — gated on the ones probe: `None`
+    /// whenever clamping (or lost positivity) would distort the apply,
+    /// so escalation fails typed instead of converging on the wrong
+    /// kernel.
+    fn as_log_kernel(&self) -> Option<&dyn LogKernelOp> {
+        if self.log_view_agrees() {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl LogKernelOp for NystromKernel {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    /// `logsumexp_j(log K_ij + t_j)` through the clamped signed split:
+    ///
+    /// ```text
+    /// s   = ln(B eᵗ)                    (exact: B ≥ 0)
+    /// out = ln(P⁺ eˢ) ⊖ ln(P⁻ eˢ)       (signed combine, f64)
+    /// ```
+    ///
+    /// Three skinny logsumexp matvecs, O(rank·(n+m)) time, O(rank) extra
+    /// memory. Rows whose negative part dominates produce `-inf`/NaN,
+    /// which the log-domain solver reports as a typed divergence.
+    fn apply_log(&self, t: &[f64], out: &mut [f64]) {
+        let lv = self.log_view();
+        let mut s = vec![0.0f64; self.rank()];
+        linalg::lse_matvec_t_into_pooled(&lv.lbt, 1.0, t, &mut s, &self.pool);
+        let mut pos = vec![0.0f64; out.len()];
+        let mut neg = vec![0.0f64; out.len()];
+        linalg::lse_matvec_into_pooled(&lv.lpp, 1.0, &s, &mut pos, &self.pool);
+        linalg::lse_matvec_into_pooled(&lv.lpn, 1.0, &s, &mut neg, &self.pool);
+        signed_combine(&pos, &neg, out);
+    }
+
+    fn apply_log_t(&self, u: &[f64], out: &mut [f64]) {
+        let lv = self.log_view();
+        let mut sp = vec![0.0f64; self.rank()];
+        let mut sn = vec![0.0f64; self.rank()];
+        linalg::lse_matvec_t_into_pooled(&lv.lpp, 1.0, u, &mut sp, &self.pool);
+        linalg::lse_matvec_t_into_pooled(&lv.lpn, 1.0, u, &mut sn, &self.pool);
+        let mut pos = vec![0.0f64; out.len()];
+        let mut neg = vec![0.0f64; out.len()];
+        linalg::lse_matvec_into_pooled(&lv.lbt, 1.0, &sp, &mut pos, &self.pool);
+        linalg::lse_matvec_into_pooled(&lv.lbt, 1.0, &sn, &mut neg, &self.pool);
+        signed_combine(&pos, &neg, out);
+    }
+
+    // Batch log applies use the trait's per-pair loop default, which is
+    // trivially bitwise identical per pair to the vector applies.
+
+    fn describe(&self) -> String {
+        format!(
+            "Nys-log({}r={} {}x{})",
+            if self.adaptive { "adaptive " } else { "" },
+            self.rank(),
+            self.rows(),
+            self.cols()
+        )
+    }
+}
+
+/// `out_i = pos_i ⊖ neg_i = pos_i + ln(1 − exp(neg_i − pos_i))`:
+/// the signed logsumexp combine. `-inf` where the parts cancel exactly,
+/// NaN where the negative part dominates — both non-finite, both caught
+/// by the log-domain solver's finiteness checks.
+fn signed_combine(pos: &[f64], neg: &[f64], out: &mut [f64]) {
+    for ((&p, &n), o) in pos.iter().zip(neg).zip(out.iter_mut()) {
+        *o = p + (-((n - p).exp())).ln_1p();
+    }
+}
+
+/// Union cloud as one (n+m, dim) matrix (mu rows first).
+fn union_matrix(mu: &Measure, nu: &Measure) -> Mat {
+    let d = mu.dim();
+    Mat::from_fn(mu.len() + nu.len(), d, |t, j| {
+        if t < mu.len() { mu.points.row(t)[j] } else { nu.points.row(t - mu.len())[j] }
+    })
+}
+
+/// Squared Euclidean norm per row, accumulated in f64.
+fn row_sq_norms(points: &Mat) -> Vec<f64> {
+    (0..points.rows())
+        .map(|i| points.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())
+        .collect()
+}
+
+/// Greedy farthest-point (k-center) landmark selection over the union
+/// cloud. One seeded uniform draw picks the first landmark; every later
+/// pick maximises the squared distance to the chosen set, ties to the
+/// lowest index — deterministic given the seed at any pool size. The
+/// per-round distance update is one pooled matvec (`⟨p_i, l⟩` for all i).
+fn farthest_point_landmarks(
+    union: &Mat,
+    norms: &[f64],
+    rank: usize,
+    rng: &mut Rng,
+    pool: &Pool,
+) -> Vec<usize> {
+    let total = union.rows();
+    debug_assert!(rank <= total);
+    let mut chosen = Vec::with_capacity(rank);
+    let mut taken = vec![false; total];
+    let first = rng.uniform_usize(total);
+    chosen.push(first);
+    taken[first] = true;
+    let mut mind = vec![f64::INFINITY; total];
+    let mut dots = vec![0.0f32; total];
+    while chosen.len() < rank {
+        let l = *chosen.last().unwrap();
+        linalg::matvec_into_pooled(union, union.row(l), &mut dots, pool);
+        let ln = norms[l];
+        for (i, md) in mind.iter_mut().enumerate() {
+            let d2 = (norms[i] + ln - 2.0 * dots[i] as f64).max(0.0);
+            if d2 < *md {
+                *md = d2;
+            }
+        }
+        let mut best = usize::MAX;
+        let mut best_d = f64::NEG_INFINITY;
+        for (i, (&md, &tk)) in mind.iter().zip(&taken).enumerate() {
+            if !tk && md > best_d {
+                best_d = md;
+                best = i;
+            }
+        }
+        chosen.push(best);
+        taken[best] = true;
+    }
+    chosen
+}
+
+/// Gibbs block `K(points, lmk)` (points.rows × lmk.rows): the cross
+/// inner products run as one pooled column-blocked mat-mat, then
+/// `exp(−d²/eps)` per entry with the same `exp(LOG_FLOOR)` positivity
+/// floor as the dense kernel (f32-positive entries; tiny-eps failures
+/// surface in the marginals, not via 0-division).
+fn gibbs_block(
+    points: &Mat,
+    norms: &[f64],
+    lmk: &Mat,
+    lnorms: &[f64],
+    eps: f64,
+    pool: &Pool,
+) -> Mat {
+    let n = points.rows();
+    let r = lmk.rows();
+    let mut dots = Mat::zeros(r, n);
+    linalg::matmat_into_pooled(points, lmk, &mut dots, pool);
+    let mut out = Mat::zeros(n, r);
+    for i in 0..n {
+        let row = out.row_mut(i);
+        for (k, cell) in row.iter_mut().enumerate() {
+            let d2 = (norms[i] + lnorms[k] - 2.0 * (dots[(k, i)] as f64)).max(0.0);
+            *cell = ((-d2 / eps).max(LOG_FLOOR as f64)).exp() as f32;
+        }
+    }
+    out
+}
+
+/// Ridge-regularised inverse via Gauss–Jordan in f64 (rank x rank, small).
+///
+/// The landmark block K_LL is severely ill-conditioned at large eps (all
+/// entries near 1), so the elimination runs in f64 and the ridge is scaled
+/// to the matrix's mean diagonal — otherwise f32 cancellation noise in
+/// W^+ dominates the whole Nyström apply.
+fn ridge_inverse(w: &Mat, rel_ridge: f64) -> Mat {
+    let n = w.rows();
+    assert_eq!(w.cols(), n);
+    let mean_diag: f64 =
+        (0..n).map(|i| w[(i, i)] as f64).sum::<f64>() / n as f64;
+    let ridge = rel_ridge * mean_diag.max(1e-30);
+    // Augmented [W + ridge I | I] in f64.
+    let mut aug = vec![0.0f64; n * 2 * n];
+    let idx = |i: usize, j: usize| i * 2 * n + j;
+    for i in 0..n {
+        for j in 0..n {
+            aug[idx(i, j)] = w[(i, j)] as f64 + if i == j { ridge } else { 0.0 };
+        }
+        aug[idx(i, n + i)] = 1.0;
+    }
+    for col in 0..n {
+        // Partial pivot.
+        let mut piv = col;
+        for i in col + 1..n {
+            if aug[idx(i, col)].abs() > aug[idx(piv, col)].abs() {
+                piv = i;
+            }
+        }
+        if piv != col {
+            for j in 0..2 * n {
+                aug.swap(idx(col, j), idx(piv, j));
+            }
+        }
+        let p = aug[idx(col, col)];
+        let p = if p.abs() < 1e-300 { 1e-300_f64.copysign(p) } else { p };
+        for j in 0..2 * n {
+            aug[idx(col, j)] /= p;
+        }
+        for i in 0..n {
+            if i == col {
+                continue;
+            }
+            let f = aug[idx(i, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..2 * n {
+                aug[idx(i, j)] -= f * aug[idx(col, j)];
+            }
+        }
+    }
+    Mat::from_fn(n, n, |i, j| aug[idx(i, n + j)] as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::DenseKernel;
+    use super::*;
+    use crate::data;
+
+    fn clouds(seed: u64, n: usize) -> (Measure, Measure) {
+        let mut rng = Rng::seed_from(seed);
+        data::gaussian_blobs(n, &mut rng)
+    }
+
+    /// Test-only construction from explicit factors (same module, so the
+    /// private fields are reachable): `K = a · w_pinv · b`.
+    fn kernel_from_parts(a: Mat, w_pinv: Mat, b: Mat) -> NystromKernel {
+        let r = w_pinv.rows();
+        NystromKernel {
+            a,
+            w_pinv,
+            b,
+            eps: 1.0,
+            adaptive: false,
+            landmarks: Vec::new(),
+            scratch: std::sync::Mutex::new((vec![0.0; r], vec![0.0; r])),
+            pool: Pool::serial(),
+            log_view: std::sync::OnceLock::new(),
+            log_view_ok: std::sync::OnceLock::new(),
+        }
+    }
+
+    #[test]
+    fn ridge_inverse_inverts() {
+        let w = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let wi = ridge_inverse(&w, 0.0);
+        let prod = linalg::matmul(&w, &wi);
+        assert!((prod[(0, 0)] - 1.0).abs() < 1e-4);
+        assert!((prod[(1, 1)] - 1.0).abs() < 1e-4);
+        assert!(prod[(0, 1)].abs() < 1e-4);
+    }
+
+    #[test]
+    fn nystrom_accurate_at_large_eps() {
+        // Large eps -> K is near low-rank -> Nyström is accurate: the
+        // regime where the paper says Nys and RF both work.
+        let (mu, nu) = clouds(9, 40);
+        let mut rng = Rng::seed_from(10);
+        let nk = NystromKernel::from_measures(&mu, &nu, 5.0, 20, &mut rng);
+        let dk = DenseKernel::from_measures(&mu, &nu, 5.0);
+        let approx = nk.to_dense();
+        let mut max_rel = 0.0f64;
+        for i in 0..40 {
+            for j in 0..40 {
+                let rel = ((approx[(i, j)] - dk.k[(i, j)]).abs() / dk.k[(i, j)]) as f64;
+                max_rel = max_rel.max(rel);
+            }
+        }
+        // The 1e-3 relative ridge biases the approximation slightly; ~5%
+        // max relative entry error at rank n/4 is the expected regime.
+        assert!(max_rel < 0.08, "max rel err {max_rel}");
+        assert!(nk.validate_positive(&mut rng, 3).is_ok());
+    }
+
+    #[test]
+    fn adaptive_beats_or_matches_uniform_on_entry_error() {
+        // Farthest-point landmarks cover the cloud; at matched rank the
+        // adaptive approximation should not be substantially worse than
+        // uniform on max relative entry error (usually better).
+        let (mu, nu) = clouds(21, 40);
+        let dk = DenseKernel::from_measures(&mu, &nu, 5.0);
+        let max_rel = |nk: &NystromKernel| {
+            let approx = nk.to_dense();
+            let mut worst = 0.0f64;
+            for i in 0..40 {
+                for j in 0..40 {
+                    let rel = ((approx[(i, j)] - dk.k[(i, j)]).abs() / dk.k[(i, j)]) as f64;
+                    worst = worst.max(rel);
+                }
+            }
+            worst
+        };
+        let mut rng_u = Rng::seed_from(22);
+        let uni = NystromKernel::from_measures(&mu, &nu, 5.0, 12, &mut rng_u);
+        let mut rng_a = Rng::seed_from(22);
+        let ada = NystromKernel::from_measures_adaptive(&mu, &nu, 5.0, 12, &mut rng_a);
+        assert!(ada.adaptive() && !uni.adaptive());
+        let (eu, ea) = (max_rel(&uni), max_rel(&ada));
+        assert!(ea < eu * 2.0 + 0.02, "adaptive {ea} vs uniform {eu}");
+        assert!(ea < 0.5, "adaptive approximation unusable: {ea}");
+    }
+
+    #[test]
+    fn adaptive_landmarks_are_seed_deterministic_and_spread() {
+        let (mu, nu) = clouds(23, 30);
+        let mk = |seed: u64| {
+            let mut rng = Rng::seed_from(seed);
+            NystromKernel::from_measures_adaptive(&mu, &nu, 1.0, 10, &mut rng)
+        };
+        let k1 = mk(5);
+        let k2 = mk(5);
+        assert_eq!(k1.landmarks(), k2.landmarks(), "same seed, same landmarks");
+        // No duplicate landmarks (farthest-point never re-picks).
+        let mut seen = k1.landmarks().to_vec();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), k1.landmarks().len());
+        // A different seed moves the (uniform) first pick and thus the set.
+        let k3 = mk(6);
+        assert!(
+            k1.landmarks() != k3.landmarks() || k1.landmarks().len() <= 1,
+            "different seed should generally select differently"
+        );
+    }
+
+    #[test]
+    fn nystrom_loses_positivity_at_small_eps() {
+        // Small eps -> K is effectively full-rank -> low-rank Nyström
+        // produces non-positive outputs: the failure the paper fixes.
+        let (mu, nu) = clouds(11, 60);
+        let mut rng = Rng::seed_from(12);
+        let nk = NystromKernel::from_measures(&mu, &nu, 0.01, 10, &mut rng);
+        let err = nk.validate_positive(&mut rng, 5);
+        assert!(err.is_err(), "expected positivity failure at eps=0.01, rank 10");
+        if let Err(Error::NotPositive { min_entry, .. }) = err {
+            assert!(min_entry <= 0.0);
+        }
+        // And the log view is gated off: escalation cannot silently
+        // converge on the distorted clamped kernel.
+        assert!(nk.as_log_kernel().is_none());
+    }
+
+    #[test]
+    fn nystrom_apply_matches_dense_materialisation() {
+        let (mu, nu) = clouds(13, 25);
+        let mut rng = Rng::seed_from(14);
+        let nk = NystromKernel::from_measures(&mu, &nu, 2.0, 12, &mut rng);
+        let dense = nk.to_dense();
+        let v: Vec<f32> = (0..25).map(|i| (i as f32 * 0.07).sin().abs() + 0.1).collect();
+        // Tolerance reflects f32 matvecs against W^+ entries of size
+        // O(1/ridge): the two evaluation orders agree to ~1e-3 relative.
+        let want = linalg::matvec(&dense, &v);
+        let scale = (linalg::l1_norm(&want) / 25.0).max(1.0);
+        let got = nk.apply(&v);
+        assert!(linalg::max_abs_diff(&got, &want) < 1e-3 * scale);
+        let got_t = nk.apply_t(&v);
+        let want_t = linalg::matvec_t(&dense, &v);
+        assert!(linalg::max_abs_diff(&got_t, &want_t) < 1e-3 * scale);
+    }
+
+    #[test]
+    fn batched_applies_match_vector_applies_bitwise() {
+        let (mu, nu) = clouds(31, 20);
+        let mut rng = Rng::seed_from(32);
+        let nk = NystromKernel::from_measures(&mu, &nu, 2.0, 8, &mut rng);
+        let b = 3;
+        let vs = Mat::from_fn(b, nu.len(), |p, j| 0.1 + 0.01 * (p * 7 + j) as f32);
+        let us = Mat::from_fn(b, mu.len(), |p, i| 0.2 + 0.01 * (p * 5 + i) as f32);
+        let mut out = Mat::zeros(b, nk.rows());
+        nk.apply_batch_into(&vs, &mut out);
+        let mut out_t = Mat::zeros(b, nk.cols());
+        nk.apply_batch_t_into(&us, &mut out_t);
+        for p in 0..b {
+            let want = nk.apply(vs.row(p));
+            let want_t = nk.apply_t(us.row(p));
+            for (got, want) in out.row(p).iter().zip(&want) {
+                assert_eq!(got.to_bits(), want.to_bits(), "pair {p}");
+            }
+            for (got, want) in out_t.row(p).iter().zip(&want_t) {
+                assert_eq!(got.to_bits(), want.to_bits(), "pair {p} ^T");
+            }
+        }
+    }
+
+    #[test]
+    fn log_view_matches_plain_apply_where_sound() {
+        // Where the approximation is positive, exp(apply_log(ln v)) must
+        // track the plain apply: the two views are the same operator, so
+        // escalation and annealing land on the same numbers.
+        let (mu, nu) = clouds(33, 30);
+        let mut rng = Rng::seed_from(34);
+        let nk = NystromKernel::from_measures(&mu, &nu, 5.0, 15, &mut rng);
+        assert!(nk.as_log_kernel().is_some(), "sound regime must expose the log view");
+        let v: Vec<f32> = (0..30).map(|j| 0.2 + 0.01 * j as f32).collect();
+        let plain = nk.apply(&v);
+        let log_v: Vec<f64> = v.iter().map(|&x| (x as f64).ln()).collect();
+        let mut log_out = vec![0.0f64; 30];
+        nk.apply_log(&log_v, &mut log_out);
+        for i in 0..30 {
+            let want = log_out[i].exp();
+            let rel = ((plain[i] as f64) - want).abs() / want.abs().max(1e-30);
+            assert!(rel < 1e-2, "row {i}: plain {} vs exp(log) {}", plain[i], want);
+        }
+        // Transposed direction too.
+        let u: Vec<f32> = (0..30).map(|i| 0.3 + 0.005 * i as f32).collect();
+        let plain_t = nk.apply_t(&u);
+        let log_u: Vec<f64> = u.iter().map(|&x| (x as f64).ln()).collect();
+        let mut log_out_t = vec![0.0f64; 30];
+        nk.apply_log_t(&log_u, &mut log_out_t);
+        for j in 0..30 {
+            let want = log_out_t[j].exp();
+            let rel = ((plain_t[j] as f64) - want).abs() / want.abs().max(1e-30);
+            assert!(rel < 1e-2, "col {j}");
+        }
+    }
+
+    #[test]
+    fn validate_positive_catches_transpose_side_negative() {
+        // Regression for the all-ones transpose probe bug: a kernel whose
+        // forward applies stay positive on every positive probe, and whose
+        // *uniform* transpose probe stays positive, but where a random
+        // positive u drives a transpose output negative. Only probing
+        // `Kᵀ u` with the trial vector catches it.
+        //
+        // K = [[1, -0.0099], [0.0099, 0.01]]:
+        //   K v  = (v1 − 0.0099 v2, 0.0099 v1 + 0.01 v2) > 0 on [0.01,1]²
+        //   Kᵀ 1 = (1.0099, 0.0001) > 0           (the old probe passes)
+        //   Kᵀ u = (…, −0.0099 u1 + 0.01 u2) < 0 iff u2 < 0.99 u1
+        let eye = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let k = Mat::from_rows(&[vec![1.0, -0.0099], vec![0.0099, 0.01]]);
+        let nk = kernel_from_parts(k, eye.clone(), eye);
+        // The directions the buggy probe exercised stay positive.
+        assert!(nk.apply(&[1.0, 1.0]).iter().all(|&x| x > 0.0));
+        assert!(nk.apply_t(&[1.0, 1.0]).iter().all(|&x| x > 0.0));
+        // Enough trials that some u with u2 < 0.99 u1 is drawn (each trial
+        // hits that half-plane with probability ~1/2).
+        let mut rng = Rng::seed_from(35);
+        let err = nk.validate_positive(&mut rng, 64);
+        match err {
+            Err(Error::NotPositive { min_entry, .. }) => {
+                assert!(min_entry <= 0.0, "negative transpose entry, got {min_entry}")
+            }
+            other => panic!("expected NotPositive from a transpose-side trial, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn uniform_landmarks_ride_the_seed() {
+        let (mu, nu) = clouds(41, 25);
+        let mk = |seed: u64| {
+            let mut rng = Rng::seed_from(seed);
+            NystromKernel::from_measures(&mu, &nu, 1.0, 6, &mut rng)
+        };
+        let (k1, k2) = (mk(9), mk(9));
+        assert_eq!(k1.landmarks(), k2.landmarks());
+        // Identical landmarks + deterministic pooled construction ⇒
+        // bitwise-identical applies: the sharded-dispatch contract.
+        let v = vec![0.5f32; nu.len()];
+        let (o1, o2) = (k1.apply(&v), k2.apply(&v));
+        for (x, y) in o1.iter().zip(&o2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+#[cfg(test)]
+mod debug_nystrom {
+    use super::*;
+    use crate::data;
+    use crate::rng::Rng;
+
+    #[test]
+    #[ignore]
+    fn probe() {
+        for eps in [0.5f64, 1.0] {
+            for rank in [100usize, 600] {
+                let mut rng = Rng::seed_from(0);
+                let (mu, nu) = data::gaussian_blobs(2000, &mut rng);
+                let nk = NystromKernel::from_measures(&mu, &nu, eps, rank, &mut rng);
+                let out = nk.apply(&vec![1.0; nu.len()]);
+                let min = out.iter().cloned().fold(f32::INFINITY, f32::min);
+                let neg = out.iter().filter(|&&x| x <= 0.0).count();
+                println!("eps={eps} rank={rank}: min(K1)={min:e} negatives={neg}/{}", out.len());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod debug_nystrom2 {
+    use super::*;
+    use crate::config::SinkhornConfig;
+    use crate::data;
+    use crate::rng::Rng;
+    use crate::sinkhorn::sinkhorn;
+
+    #[test]
+    #[ignore]
+    fn probe_solve() {
+        for eps in [1.0f64, 2.0, 5.0] {
+            for rank in [300usize, 1000] {
+                let mut rng = Rng::seed_from(3);
+                let (mu, nu) = data::gaussian_blobs(2000, &mut rng);
+                let nk = NystromKernel::from_measures(&mu, &nu, eps, rank, &mut rng);
+                let cfg = SinkhornConfig {
+                    epsilon: eps,
+                    max_iters: 2000,
+                    tol: 1e-4,
+                    check_every: 10,
+                    threads: 1,
+                    stabilize: false,
+                    max_batch: 1,
+                    anneal: None,
+                    anneal_decay: 0.5,
+                    symmetric: None,
+                };
+                match sinkhorn(&nk, &mu.weights, &nu.weights, &cfg) {
+                    Ok(s) => println!(
+                        "eps={eps} rank={rank}: OK obj={:.4} iters={}",
+                        s.objective, s.iterations
+                    ),
+                    Err(e) => println!("eps={eps} rank={rank}: FAIL {e:.60}"),
+                }
+            }
+        }
+    }
+}

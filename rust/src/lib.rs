@@ -128,8 +128,8 @@ pub mod testing;
 /// explicitly (and warning-free) where it still needs them.
 pub mod prelude {
     pub use crate::api::{
-        Backend, DivergenceReport, Domain, DomainChoice, KernelChoice, OtProblem, Plan,
-        SimdPreference, Solution,
+        Backend, BackendPref, DivergenceReport, Domain, DomainChoice, KernelChoice, OtProblem,
+        Plan, SimdPreference, Solution,
     };
     pub use crate::config::{GanConfig, ServiceConfig, SinkhornConfig, TradeoffConfig};
     pub use crate::data::{self, Measure};

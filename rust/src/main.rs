@@ -101,16 +101,32 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
                 "one-dual symmetric fixed point for the xx/yy self solves \
                  (auto/on/off; auto follows the annealing choice)",
             )
+            .opt(
+                "backend",
+                "factored",
+                "kernel backend: auto|dense|factored|nystrom|nystrom-adaptive, each \
+                 optionally with a :rank suffix (default rank = --features); auto \
+                 runs the planner's flops rule, nystrom-* may lose positivity at \
+                 small eps and then fails typed",
+            )
             .opt("seed", "0", "RNG seed")
             .flag(
                 "explain",
-                "print the solver plan (summary + JSON) before executing; annealed \
-                 plans carry `schedule` {eps_start, decay} and `symmetric_self_solves`",
+                "print the solver plan (narrated decision + JSON) before executing; \
+                 annealed plans carry `schedule` {eps_start, decay} and \
+                 `symmetric_self_solves`",
             ),
         argv,
     );
     let (n, eps, r, seed) =
         (a.get_usize("n"), a.get_f64("eps"), a.get_usize("features"), a.get_u64("seed"));
+    let backend = match BackendPref::parse_flag(a.get_str("backend"), r) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let stabilize = parse_on_off("stabilize", a.get_str("stabilize"));
     // One --threads budget split across the two parallelism levels: up
     // to 3 concurrent solves, with the remainder row-chunking each
@@ -128,7 +144,7 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
     // small-eps failures surface as typed errors instead.
     let mut problem = OtProblem::new(&mu, &nu)
         .epsilon(eps)
-        .rank(r)
+        .backend(backend)
         .threads(threads.min(3))
         .solver_threads(threads.div_ceil(3))
         .seed(seed);
@@ -150,7 +166,15 @@ fn cmd_divergence(argv: Vec<String>) -> i32 {
         }
     };
     if a.get_flag("explain") {
-        println!("{}", plan.summary());
+        // The narrated decision record: the flops numbers behind the
+        // backend choice, the underflow heuristic, and any demotions.
+        match problem.explain() {
+            Ok(text) => println!("{text}"),
+            Err(e) => {
+                eprintln!("planning error: {e}");
+                return 1;
+            }
+        }
         println!("{}", plan.to_json());
     }
     let sw = Stopwatch::start();
@@ -180,7 +204,14 @@ fn cmd_tradeoff(argv: Vec<String>) -> i32 {
         ArgSpec::new("tradeoff", "time–accuracy tradeoff (Fig. 1 workload, one cell)")
             .opt("n", "2000", "samples per cloud")
             .opt("eps", "0.5", "regularisation")
-            .opt("ranks", "100,300,600,1000", "feature counts to sweep")
+            .opt("ranks", "100,300,600,1000", "feature counts / landmark counts to sweep")
+            .opt(
+                "backend",
+                "factored",
+                "estimator to sweep: factored (positive features, the paper's RF), \
+                 nystrom, nystrom-adaptive, dense or auto; each rank in --ranks \
+                 becomes that backend's rank",
+            )
             .opt("seed", "0", "RNG seed"),
         argv,
     );
@@ -188,6 +219,11 @@ fn cmd_tradeoff(argv: Vec<String>) -> i32 {
     let eps = a.get_f64("eps");
     let ranks = a.get_usize_list("ranks");
     let seed = a.get_u64("seed");
+    let backend_flag = a.get_str("backend").to_string();
+    if let Err(e) = BackendPref::parse_flag(&backend_flag, 1) {
+        eprintln!("{e}");
+        return 2;
+    }
     let mut rng = Rng::seed_from(seed);
     let (mu, nu) = data::gaussian_blobs(n, &mut rng);
 
@@ -203,20 +239,32 @@ fn cmd_tradeoff(argv: Vec<String>) -> i32 {
     };
     println!("Sin ground truth: {truth:.6} in {:.2}s", sw.elapsed_secs());
 
-    println!("{:>6} {:>12} {:>12} {:>10}", "r", "RF estimate", "deviation", "time");
+    println!("{:>6} {:>12} {:>12} {:>10}", "r", "estimate", "deviation", "time");
     for &r in &ranks {
         let sw = Stopwatch::start();
-        let map = GaussianFeatureMap::fit(&mu, &nu, eps, r, &mut rng);
-        // Plain domain, like the fig-bench sweep: a small-eps RF failure
-        // should print as `failed`, not silently escalate — that
-        // contrast is what the table is for.
-        let res = OtProblem::new(&mu, &nu)
-            .epsilon(eps)
-            .rank(r)
-            .with_feature_map(&map)
-            .stabilized_factors(false)
-            .domain(DomainChoice::Plain)
-            .solve();
+        // Plain domain, like the fig-bench sweep: a small-eps failure
+        // (RF underflow, Nyström broken positivity) should print as
+        // `failed`, not silently escalate — that contrast is what the
+        // table is for.
+        let pref = BackendPref::parse_flag(&backend_flag, r).expect("validated above");
+        let res = match pref {
+            BackendPref::Factored { rank } => {
+                let map = GaussianFeatureMap::fit(&mu, &nu, eps, rank, &mut rng);
+                OtProblem::new(&mu, &nu)
+                    .epsilon(eps)
+                    .rank(rank)
+                    .with_feature_map(&map)
+                    .stabilized_factors(false)
+                    .domain(DomainChoice::Plain)
+                    .solve()
+            }
+            pref => OtProblem::new(&mu, &nu)
+                .epsilon(eps)
+                .backend(pref)
+                .seed(seed)
+                .domain(DomainChoice::Plain)
+                .solve(),
+        };
         match res {
             Ok(sol) => {
                 let dev = linear_sinkhorn::sinkhorn::deviation_score(truth, sol.objective);
@@ -363,6 +411,14 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
                  wire-format scatter/gather path (0 = solve in-process); results are \
                  bitwise identical either way",
             )
+            .opt(
+                "backend",
+                "factored",
+                "planner backend for served solves: auto|dense|factored|nystrom|\
+                 nystrom-adaptive, optionally with a :rank suffix (default rank = \
+                 the service's num_features); factored is the pre-PR-8 behaviour \
+                 with the shared feature-map cache",
+            )
             .opt("requests", "32", "number of requests to send")
             .opt("n", "500", "samples per cloud per request")
             .opt("config", "", "optional TOML config file (replaces ALL service flags)"),
@@ -380,6 +436,12 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     cfg.sinkhorn.anneal = parse_auto_on_off("anneal", a.get_str("anneal"));
     cfg.sinkhorn.anneal_decay = a.get_f64("anneal-decay");
     cfg.sinkhorn.symmetric = parse_auto_on_off("symmetric", a.get_str("symmetric"));
+    cfg.backend = a.get_str("backend").to_string();
+    // Fail malformed backend values at startup, not per request.
+    if let Err(e) = BackendPref::parse_flag(&cfg.backend, cfg.num_features) {
+        eprintln!("{e}");
+        return 2;
+    }
     let cfg_path = a.get_str("config");
     if !cfg_path.is_empty() {
         match linear_sinkhorn::config::ConfigDoc::parse_file(cfg_path) {
@@ -388,7 +450,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
                 eprintln!(
                     "note: --config replaces all service flags (--workers/--solver-threads/\
                      --cache/--stabilize/--anneal/--anneal-decay/--symmetric/--max-batch/\
-                     --shard-workers ignored)"
+                     --shard-workers/--backend ignored)"
                 );
             }
             Err(e) => {

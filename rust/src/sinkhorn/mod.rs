@@ -258,9 +258,11 @@ pub(crate) fn first_bad(xs: &[f32]) -> Option<String> {
 /// the stabilised path was taken (the coordinator exports that as the
 /// `service.stabilized_solves` metric).
 ///
-/// Kernels without a log-domain view (e.g. Nyström, which can lose
-/// positivity) propagate the original divergence error — escalation
-/// never masks a genuinely broken kernel.
+/// Kernels without a usable log-domain view propagate the original
+/// divergence error — escalation never masks a genuinely broken kernel.
+/// (Nyström gates its clamped signed log view off at runtime exactly
+/// when clamping would distort the apply, so its broken-positivity
+/// regime lands here.)
 pub fn sinkhorn_stabilized<K: KernelOp + ?Sized>(
     kernel: &K,
     a: &[f32],
@@ -693,8 +695,12 @@ mod tests {
 
     #[test]
     fn stabilized_does_not_mask_kernels_without_log_view() {
-        // Nyström has no log-domain view: even with stabilize on, its
-        // small-eps divergence stays a typed error.
+        // Nyström gates its clamped signed log view off whenever
+        // clamping would distort the apply — which is exactly the
+        // broken-positivity small-eps regime. So even with stabilize
+        // on, escalation finds no log view to land in and the
+        // divergence stays a typed error instead of converging on a
+        // silently-wrong kernel.
         let mut rng = Rng::seed_from(24);
         let (mu, nu) = data::gaussian_blobs(80, &mut rng);
         let nk = NystromKernel::from_measures(&mu, &nu, 0.01, 8, &mut rng);

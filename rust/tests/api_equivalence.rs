@@ -404,3 +404,57 @@ fn assert_solution_matches_api(a: &Solution, b: &Solution) {
         assert_eq!(x.to_bits(), y.to_bits());
     }
 }
+
+#[test]
+fn nystrom_plan_round_trips_json_and_executes_bitwise() {
+    // PR-8 acceptance: a Nyström plan survives serialisation (adaptive
+    // flag included) and the decoded plan executes bit-for-bit — the
+    // landmark draw is a pure function of the plan seed, so the decoded
+    // side rebuilds the identical kernel with no shipped artifact.
+    let (mu, nu) = clouds(14, 50);
+    for adaptive in [false, true] {
+        let problem = OtProblem::new(&mu, &nu)
+            .epsilon(5.0)
+            .backend(BackendPref::Nystrom { rank: 10, adaptive })
+            .seed(9);
+        let plan = problem.plan().unwrap();
+        assert_eq!(plan.backend, Backend::Nystrom { rank: 10, adaptive });
+        let decoded = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(decoded, plan, "adaptive={adaptive}");
+        let a = problem.solve_planned(&plan).unwrap();
+        let b = problem.solve_planned(&decoded).unwrap();
+        assert_solution_matches_api(&a, &b);
+        let da = problem.divergence_planned(&plan).unwrap();
+        let db = problem.divergence_planned(&decoded).unwrap();
+        assert_eq!(da.divergence.to_bits(), db.divergence.to_bits(), "adaptive={adaptive}");
+        assert!(da.divergence.is_finite());
+    }
+}
+
+#[test]
+fn nystrom_solver_threads_are_transparent_through_the_api() {
+    // Pool transparency holds for the new backend too: 1 vs 4 intra-solve
+    // threads and 1 vs 3 solve threads produce identical bits (n = 700
+    // crosses the pooled-matvec chunk threshold, so the pooled apply path
+    // actually engages).
+    let (mu, nu) = clouds(15, 700);
+    let run = |solver_threads: usize, threads: usize, adaptive: bool| {
+        OtProblem::new(&mu, &nu)
+            .epsilon(5.0)
+            .backend(BackendPref::Nystrom { rank: 24, adaptive })
+            .seed(6)
+            .max_iters(60)
+            .threads(threads)
+            .solver_threads(solver_threads)
+            .divergence()
+            .unwrap()
+            .divergence
+    };
+    for adaptive in [false, true] {
+        let d11 = run(1, 1, adaptive);
+        let d41 = run(4, 1, adaptive);
+        let d43 = run(4, 3, adaptive);
+        assert_eq!(d11.to_bits(), d41.to_bits(), "solver threads changed the bits");
+        assert_eq!(d11.to_bits(), d43.to_bits(), "combined threading changed the bits");
+    }
+}

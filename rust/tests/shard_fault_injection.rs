@@ -21,7 +21,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use linear_sinkhorn::api::{Backend, DivergenceReport, OtProblem, Plan};
+use linear_sinkhorn::api::{Backend, BackendPref, DivergenceReport, OtProblem, Plan};
 use linear_sinkhorn::data::{self, Measure};
 use linear_sinkhorn::error::{Error, Result};
 use linear_sinkhorn::features::GaussianFeatureMap;
@@ -334,6 +334,45 @@ fn all_workers_dead_is_typed_never_a_panic() {
     // The coordinator stays usable: follow-up groups fail fast, typed.
     let again = shard.solve_group(&plan, &mu, &nu, &refs[..1], None, &[]);
     assert!(matches!(&again[0], Err(Error::Service(_))));
+}
+
+// -------------------------------------------------------------- nystrom
+
+#[test]
+fn nystrom_plan_shards_bitwise_with_no_shipped_artifact() {
+    // A Nyström plan ships no feature map at all: the landmark draw
+    // (uniform or farthest-point) is a pure function of `plan.seed`, so
+    // every worker rebuilds the bit-identical kernel from the plan alone.
+    // Same crash schedule as the factored test: the re-scattered chunk
+    // re-draws the same landmarks and lands identical bits.
+    let (mu, nu, weights, _) = fixture(4);
+    let refs = as_refs(&weights);
+    for adaptive in [false, true] {
+        let plan = OtProblem::new(&mu, &nu)
+            .epsilon(5.0)
+            .backend(BackendPref::Nystrom { rank: 6, adaptive })
+            .seed(29)
+            .weight_pairs(&refs)
+            .plan()
+            .unwrap();
+        assert_eq!(plan.backend, Backend::Nystrom { rank: 6, adaptive });
+        let local = local_baseline(&mu, &nu, &refs, &plan);
+
+        let metrics = Arc::new(Registry::default());
+        let shard = ShardCoordinator::in_process(2, calm_cfg(), metrics.clone());
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&got, &local);
+        assert_eq!(metrics.counter("service.shard.retries").get(), 0);
+
+        let metrics = Arc::new(Registry::default());
+        let faults = FaultPlan::new(9).inject(0, Fault::KillOnTask { nth: 1 });
+        let shard =
+            ShardCoordinator::in_process_with_faults(2, calm_cfg(), metrics.clone(), &faults);
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&got, &local);
+        assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 1);
+        assert!(metrics.counter("service.shard.retries").get() >= 1, "adaptive={adaptive}");
+    }
 }
 
 // ------------------------------------------------------------- annealing
