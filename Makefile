@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-scalar shard-fault doc doc-test examples fmt fmt-check clippy check artifacts perf bench-smoke clean
+.PHONY: all build test test-scalar shard-fault shard-soak doc doc-test examples fmt fmt-check clippy check artifacts perf bench-smoke clean
 
 all: build
 
@@ -41,6 +41,15 @@ shard-fault:
 	$(CARGO) test -q --test shard_fault_injection --test wire_format
 	LINEAR_SINKHORN_SIMD=scalar $(CARGO) test -q --test shard_fault_injection --test wire_format
 
+# The chaos soak: multi-round kill/flap/rejoin storms, straggler hedging,
+# partition windows, overload shed, mid-flight drain and mixed-version
+# rejoiners — every answered pair bitwise identical to the local fused
+# solve, under both SIMD dispatch arms (CI runs this as the `shard-soak`
+# job).
+shard-soak:
+	$(CARGO) test -q --test shard_chaos_soak
+	LINEAR_SINKHORN_SIMD=scalar $(CARGO) test -q --test shard_chaos_soak
+
 # Rustdoc with warnings denied: broken intra-doc links fail the build, so
 # documentation drift (e.g. a citation of a section that no longer exists)
 # is caught here rather than in review.
@@ -59,7 +68,7 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-check: build test shard-fault doc doc-test examples fmt-check clippy
+check: build test shard-fault shard-soak doc doc-test examples fmt-check clippy
 	@echo "check: OK"
 
 # AOT-lower the Pallas/JAX graphs to HLO text + manifest. The binary never

@@ -28,12 +28,13 @@ fn main() {
         num_features: 256,
         solver_threads: 1,
         cache_capacity: 8,
+        ..Default::default()
     };
     println!(
         "starting divergence service: {} workers, batch<= {}, queue {}",
         cfg.workers, cfg.batcher.max_batch, cfg.batcher.queue_depth
     );
-    let svc = Service::start(cfg);
+    let svc = Service::start(cfg).expect("service start");
     let handle = svc.handle();
 
     // Three client threads with different workload mixes.

@@ -50,7 +50,7 @@ fn service_cfg(workers: usize, max_batch: usize, fuse_width: usize) -> ServiceCo
         solver_threads: 1,
         cache_capacity: 8,
         shard_workers: 0,
-        backend: "factored".to_string(),
+        ..Default::default()
     }
 }
 
@@ -58,7 +58,7 @@ fn service_cfg(workers: usize, max_batch: usize, fuse_width: usize) -> ServiceCo
 /// (req/s, p50 ms, p99 ms, shed).
 fn run_load(cfg: ServiceConfig, workload: Vec<(Measure, Measure)>) -> (f64, f64, f64, u64) {
     let n_req = workload.len();
-    let svc = Service::start(cfg);
+    let svc = Service::start(cfg).expect("service start");
     let h = svc.handle();
     let sw = Stopwatch::start();
     let mut pendings = Vec::with_capacity(n_req);

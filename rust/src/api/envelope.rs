@@ -23,9 +23,12 @@
 //!   f64 columns and the three solves' dual scalings as f32 columns, so
 //!   the reassembled [`DivergenceReport`]s are bit-for-bit the ones the
 //!   worker computed (NaN marginal errors included — scalars travel as
-//!   bit patterns, not text). Failed pairs travel as their error message
-//!   and decode to [`Error::Config`], the same replication convention as
-//!   the executor's whole-batch failures (`err_per_pair`).
+//!   bit patterns, not text). Failed pairs travel as a tagged status
+//!   string `error[{tag}]: {message}` and decode back to the matching
+//!   [`Error`] variant (`service`/`wire`/`overloaded`/`config`; every
+//!   other variant normalises to `config` carrying its Display text).
+//!   Untagged `error: {message}` statuses from pre-tag frames still
+//!   decode — to [`Error::Config`], the old convention.
 //!
 //! Envelope identity: results are matched to tasks by `task_id` alone, so
 //! a duplicated or re-scattered task yields interchangeable result frames
@@ -190,6 +193,38 @@ impl TaskEnvelope {
     }
 }
 
+/// Status-string form of a per-pair failure: `error[{tag}]: {message}`.
+/// The tag picks the [`Error`] variant back at the gather site, so typed
+/// failures (a worker shedding under [`Error::Overloaded`], a wire-level
+/// refusal) survive the hop instead of flattening to `Config`.
+fn encode_status_error(e: &Error) -> String {
+    let (tag, msg) = match e {
+        Error::Service(s) => ("service", s.clone()),
+        Error::Wire(s) => ("wire", s.clone()),
+        Error::Overloaded(s) => ("overloaded", s.clone()),
+        Error::Config(s) => ("config", s.clone()),
+        other => ("config", other.to_string()),
+    };
+    format!("error[{tag}]: {msg}")
+}
+
+/// Inverse of [`encode_status_error`]; untagged `error: …` statuses from
+/// pre-tag frames fall back to [`Error::Config`] (the old convention).
+fn decode_status_error(status: &str) -> Error {
+    if let Some(rest) = status.strip_prefix("error[") {
+        if let Some((tag, msg)) = rest.split_once("]: ") {
+            let msg = msg.to_string();
+            return match tag {
+                "service" => Error::Service(msg),
+                "wire" => Error::Wire(msg),
+                "overloaded" => Error::Overloaded(msg),
+                _ => Error::Config(msg),
+            };
+        }
+    }
+    Error::Config(status.strip_prefix("error: ").unwrap_or(status).to_string())
+}
+
 fn decode_measure(doc: &WireDoc, prefix: &str, rows: usize, dim: usize) -> Result<Measure> {
     let points = doc.f32s(&format!("{prefix}.points"))?;
     let weights = doc.f32s(&format!("{prefix}.weights"))?;
@@ -237,7 +272,7 @@ impl ResultEnvelope {
             .iter()
             .map(|r| match r {
                 Ok(_) => Json::Str("ok".to_string()),
-                Err(e) => Json::Str(format!("error: {e}")),
+                Err(e) => Json::Str(encode_status_error(e)),
             })
             .collect();
         doc.set_json("statuses", Json::Arr(statuses));
@@ -305,12 +340,7 @@ impl ResultEnvelope {
             let status =
                 status.as_str().ok_or_else(|| Error::Wire("status must be a string".into()))?;
             if status != "ok" {
-                // Same convention as the executor's `err_per_pair`:
-                // remote failures rematerialise as `Error::Config`
-                // carrying the original message.
-                results.push(Err(Error::Config(
-                    status.strip_prefix("error: ").unwrap_or(status).to_string(),
-                )));
+                results.push(Err(decode_status_error(status)));
                 continue;
             }
             let scalars = doc.f64s(&format!("p{i}.scalars"))?;
@@ -452,6 +482,8 @@ mod tests {
             .weight_pairs(&pair_refs)
             .divergence_all_planned(&task.plan);
         results.push(Err(Error::Service("worker exploded".into())));
+        results.push(Err(Error::Overloaded("budget full".into())));
+        results.push(Err(Error::SinkhornDiverged { iter: 3, reason: "nan".into() }));
         let env = ResultEnvelope::new(task.task_id, 2, results);
         let back = ResultEnvelope::decode(&env.encode()).unwrap();
         assert_eq!(back.task_id, env.task_id);
@@ -468,8 +500,14 @@ mod tests {
                     assert_eq!(x.converged(), y.converged());
                     assert_eq!(x.simd_arm, y.simd_arm);
                 }
-                (Err(Error::Config(msg)), Err(orig)) => {
-                    assert_eq!(msg, &orig.to_string(), "message survives, type normalises");
+                (Err(Error::Service(msg)), Err(Error::Service(orig))) => {
+                    assert_eq!(msg, orig, "typed service error survives the hop");
+                }
+                (Err(Error::Overloaded(msg)), Err(Error::Overloaded(orig))) => {
+                    assert_eq!(msg, orig, "typed overload shed survives the hop");
+                }
+                (Err(Error::Config(msg)), Err(orig @ Error::SinkhornDiverged { .. })) => {
+                    assert_eq!(msg, &orig.to_string(), "unlisted variants normalise to config");
                 }
                 other => panic!("slot mismatch: {other:?}"),
             }

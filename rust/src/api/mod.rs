@@ -34,7 +34,7 @@ mod problem;
 mod solution;
 
 pub use envelope::{ResultEnvelope, TaskEnvelope};
-pub use plan::{Backend, Domain, Plan};
+pub use plan::{Backend, Domain, Plan, PLAN_FORMAT_MAJOR};
 pub use problem::{BackendPref, DomainChoice, KernelChoice, OtProblem, SimdPreference};
 pub use solution::{DivergenceReport, Solution};
 

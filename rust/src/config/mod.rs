@@ -10,7 +10,9 @@ mod parser;
 mod types;
 
 pub use parser::{ConfigDoc, ConfigError, Value};
-pub use types::{BatcherConfig, GanConfig, ServiceConfig, SinkhornConfig, TradeoffConfig};
+pub use types::{
+    BatcherConfig, GanConfig, ServiceConfig, ShardSettings, SinkhornConfig, TradeoffConfig,
+};
 
 #[cfg(test)]
 mod tests {
@@ -55,6 +57,52 @@ max_delay_us = 500
         assert_eq!(doc.get_int("sinkhorn.max_iters"), Some(5000));
         assert_eq!(doc.get_float("sinkhorn.tol"), Some(1e-3));
         assert_eq!(doc.get_int("service.batcher.max_batch"), Some(32));
+    }
+
+    #[test]
+    fn shard_settings_defaults_match_shard_config() {
+        // The config-file view and the coordinator's own defaults must
+        // not drift apart.
+        let d = crate::shard::ShardConfig::default();
+        let s = ShardSettings::default().to_shard_config();
+        assert_eq!(s.heartbeat_interval, d.heartbeat_interval);
+        assert_eq!(s.heartbeat_timeout, d.heartbeat_timeout);
+        assert_eq!(s.task_deadline, d.task_deadline);
+        assert_eq!(s.max_retries, d.max_retries);
+        assert_eq!(s.retry_backoff, d.retry_backoff);
+        assert_eq!(s.hedge_fraction, d.hedge_fraction);
+        assert_eq!(s.max_inflight_groups, d.max_inflight_groups);
+        assert_eq!(s.rejoin_backoff, d.rejoin_backoff);
+    }
+
+    #[test]
+    fn shard_settings_and_roster_parse_from_doc() {
+        let doc = ConfigDoc::parse(
+            r#"
+[service]
+shard_addrs = "10.0.0.1:7000, 10.0.0.2:7000"
+
+[service.shard]
+heartbeat_interval_ms = 25
+task_deadline_ms = 2000
+hedge_fraction = 0.25
+max_inflight_groups = 4
+rejoin_backoff_ms = 100
+"#,
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_doc(&doc);
+        assert_eq!(cfg.shard_addrs, vec!["10.0.0.1:7000", "10.0.0.2:7000"]);
+        assert_eq!(cfg.shard.heartbeat_interval_ms, 25);
+        assert_eq!(cfg.shard.task_deadline_ms, 2000);
+        assert_eq!(cfg.shard.hedge_fraction, 0.25);
+        assert_eq!(cfg.shard.max_inflight_groups, 4);
+        assert_eq!(cfg.shard.rejoin_backoff_ms, 100);
+        // Untouched keys keep their defaults.
+        let d = ShardSettings::default();
+        assert_eq!(cfg.shard.heartbeat_timeout_ms, d.heartbeat_timeout_ms);
+        assert_eq!(cfg.shard.max_retries, d.max_retries);
+        assert_eq!(cfg.shard.drain_deadline_ms, d.drain_deadline_ms);
     }
 
     #[test]

@@ -172,6 +172,112 @@ impl BatcherConfig {
     }
 }
 
+/// Shard-coordinator policy knobs (liveness, retry, hedging, admission,
+/// rejoin), the config-file / CLI view of
+/// [`crate::shard::ShardConfig`]. All durations are millisecond
+/// integers here; `to_shard_config` converts.
+#[derive(Clone, Debug)]
+pub struct ShardSettings {
+    /// Ping cadence while tasks are outstanding.
+    /// `service.shard.heartbeat_interval_ms`, `--shard-heartbeat-ms`.
+    pub heartbeat_interval_ms: u64,
+    /// Silence longer than this declares a worker dead.
+    /// `service.shard.heartbeat_timeout_ms`, `--shard-timeout-ms`.
+    pub heartbeat_timeout_ms: u64,
+    /// Unanswered tasks older than this are re-scattered.
+    /// `service.shard.task_deadline_ms`, `--shard-deadline-ms`.
+    pub task_deadline_ms: u64,
+    /// Re-scatter attempts before a task fails typed.
+    /// `service.shard.max_retries`, `--shard-retries`.
+    pub max_retries: usize,
+    /// Base linear re-scatter backoff.
+    /// `service.shard.retry_backoff_ms`, `--shard-backoff-ms`.
+    pub retry_backoff_ms: u64,
+    /// Straggler-hedging threshold as a fraction of the task deadline
+    /// (`0` disables). `service.shard.hedge_fraction`, `--shard-hedge`.
+    pub hedge_fraction: f64,
+    /// Bounded in-flight group budget; beyond it groups shed with
+    /// `Error::Overloaded`. `service.shard.max_inflight_groups`,
+    /// `--shard-max-inflight`.
+    pub max_inflight_groups: usize,
+    /// Minimum wait between rejoin attempts for a dead worker.
+    /// `service.shard.rejoin_backoff_ms`, `--shard-rejoin-ms`.
+    pub rejoin_backoff_ms: u64,
+    /// Budget for the graceful drain at service shutdown.
+    /// `service.shard.drain_deadline_ms`, `--shard-drain-ms`.
+    pub drain_deadline_ms: u64,
+}
+
+impl Default for ShardSettings {
+    fn default() -> Self {
+        // Mirrors `crate::shard::ShardConfig::default()` (asserted by
+        // the `shard_settings_defaults_match_shard_config` test), plus
+        // the service-only drain budget.
+        ShardSettings {
+            heartbeat_interval_ms: 50,
+            heartbeat_timeout_ms: 1_000,
+            task_deadline_ms: 30_000,
+            max_retries: 2,
+            retry_backoff_ms: 20,
+            hedge_fraction: 0.5,
+            max_inflight_groups: 16,
+            rejoin_backoff_ms: 250,
+            drain_deadline_ms: 5_000,
+        }
+    }
+}
+
+impl ShardSettings {
+    pub fn from_doc(doc: &ConfigDoc) -> Self {
+        let d = ShardSettings::default();
+        ShardSettings {
+            heartbeat_interval_ms: doc
+                .get_int("service.shard.heartbeat_interval_ms")
+                .unwrap_or(d.heartbeat_interval_ms as i64) as u64,
+            heartbeat_timeout_ms: doc
+                .get_int("service.shard.heartbeat_timeout_ms")
+                .unwrap_or(d.heartbeat_timeout_ms as i64) as u64,
+            task_deadline_ms: doc
+                .get_int("service.shard.task_deadline_ms")
+                .unwrap_or(d.task_deadline_ms as i64) as u64,
+            max_retries: doc
+                .get_int("service.shard.max_retries")
+                .unwrap_or(d.max_retries as i64) as usize,
+            retry_backoff_ms: doc
+                .get_int("service.shard.retry_backoff_ms")
+                .unwrap_or(d.retry_backoff_ms as i64) as u64,
+            hedge_fraction: doc
+                .get_float("service.shard.hedge_fraction")
+                .unwrap_or(d.hedge_fraction),
+            max_inflight_groups: doc
+                .get_int("service.shard.max_inflight_groups")
+                .unwrap_or(d.max_inflight_groups as i64) as usize,
+            rejoin_backoff_ms: doc
+                .get_int("service.shard.rejoin_backoff_ms")
+                .unwrap_or(d.rejoin_backoff_ms as i64) as u64,
+            drain_deadline_ms: doc
+                .get_int("service.shard.drain_deadline_ms")
+                .unwrap_or(d.drain_deadline_ms as i64) as u64,
+        }
+    }
+
+    /// The coordinator-facing view (everything but the drain budget,
+    /// which belongs to service shutdown, not the coordinator).
+    pub fn to_shard_config(&self) -> crate::shard::ShardConfig {
+        use std::time::Duration;
+        crate::shard::ShardConfig {
+            heartbeat_interval: Duration::from_millis(self.heartbeat_interval_ms),
+            heartbeat_timeout: Duration::from_millis(self.heartbeat_timeout_ms),
+            task_deadline: Duration::from_millis(self.task_deadline_ms),
+            max_retries: self.max_retries,
+            retry_backoff: Duration::from_millis(self.retry_backoff_ms),
+            hedge_fraction: self.hedge_fraction,
+            max_inflight_groups: self.max_inflight_groups,
+            rejoin_backoff: Duration::from_millis(self.rejoin_backoff_ms),
+        }
+    }
+}
+
 /// Divergence service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -197,6 +303,17 @@ pub struct ServiceConfig {
     /// `service.shard_workers` in config files, `--shard-workers` on the
     /// CLI.
     pub shard_workers: usize,
+    /// Roster of already-listening cross-host shard workers
+    /// (`host:port` each). Non-empty takes precedence over
+    /// `shard_workers`: the service dials and handshakes every entry
+    /// instead of spawning in-process workers, and dead entries are
+    /// periodically re-dialled (rejoin). Comma-separated in
+    /// `service.shard_addrs` config keys and the `--shard-addrs` flag;
+    /// `--shard-worker-file` loads one `host:port` per line.
+    pub shard_addrs: Vec<String>,
+    /// Shard liveness / retry / hedging / admission / rejoin policy
+    /// (only consulted when sharding is on).
+    pub shard: ShardSettings,
     /// Planner backend preference for served solves, in the CLI's
     /// `--backend` syntax (`auto`, `dense`, `factored[:rank]`,
     /// `nystrom[:rank]`, `nystrom-adaptive[:rank]`; a missing rank falls
@@ -217,6 +334,8 @@ impl Default for ServiceConfig {
             solver_threads: 1,
             cache_capacity: 8,
             shard_workers: 0,
+            shard_addrs: Vec::new(),
+            shard: ShardSettings::default(),
             backend: "factored".to_string(),
         }
     }
@@ -240,6 +359,17 @@ impl ServiceConfig {
             shard_workers: doc
                 .get_int("service.shard_workers")
                 .unwrap_or(d.shard_workers as i64) as usize,
+            shard_addrs: doc
+                .get_str("service.shard_addrs")
+                .map(|s| {
+                    s.split(',')
+                        .map(str::trim)
+                        .filter(|a| !a.is_empty())
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or(d.shard_addrs),
+            shard: ShardSettings::from_doc(doc),
             backend: doc
                 .get_str("service.backend")
                 .map(str::to_string)

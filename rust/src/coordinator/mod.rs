@@ -32,7 +32,8 @@
 //!   request's data; hit/miss counters are exported through the metrics
 //!   registry (`service.feature_cache.*`).
 //! * **Backpressure**: the submit queue is bounded (`queue_depth`);
-//!   overflow sheds with [`Error::Service`] instead of queueing unboundedly.
+//!   overflow sheds with typed [`Error::Overloaded`] instead of queueing
+//!   unboundedly (retryable by construction — nothing was attempted).
 //! * **Workers** solve each request with the native factored-kernel
 //!   Sinkhorn (O(r(n+m)) per iteration); `solver_threads` additionally
 //!   parallelises each solve's matvecs and feature evaluation over the
@@ -46,16 +47,21 @@
 //!   `sinkhorn.stabilize` is on; escalations are counted by the
 //!   `service.stabilized_solves` metric.
 //!
-//! * **Sharded serving** (`service.shard_workers > 0`): every fuse group
-//!   is delegated through a [`crate::shard::ShardCoordinator`] — the
-//!   plan, measures, weight pairs, and the cache-resolved feature map
-//!   ship as wire envelopes to shard workers, and the gathered
+//! * **Sharded serving** (`service.shard_workers > 0`, or a
+//!   `service.shard_addrs` roster of `host:port` TCP workers): every
+//!   fuse group is delegated through a
+//!   [`crate::shard::ShardCoordinator`] — the plan, measures, weight
+//!   pairs, and the cache-resolved feature map ship as wire envelopes
+//!   to shard workers, and the gathered
 //!   [`crate::api::DivergenceReport`]s are bitwise identical to the
 //!   in-process fused solve (the map travels with the task precisely so
-//!   the worker does not have to refit it). Worker crashes, hangs, and
-//!   lost messages are absorbed by heartbeat liveness + bounded retry;
-//!   see `crate::shard` for the failure ladder and the
-//!   `service.shard.*` metrics.
+//!   the worker does not have to refit it). Worker crashes, hangs,
+//!   stragglers, and lost messages are absorbed by heartbeat liveness,
+//!   bounded retry, hedging, and rejoin, all tuned by
+//!   `service.shard.*` config keys ([`crate::config::ShardSettings`]);
+//!   [`Service::shutdown`] drains the shard tier gracefully. See
+//!   `crate::shard` for the failure ladder and the `service.shard.*`
+//!   metrics.
 //!
 //! Everything is std::thread + mpsc (the offline crate set has no tokio);
 //! for a compute-bound service this is the right tool anyway.
@@ -132,8 +138,8 @@ pub struct ServiceHandle {
 
 impl ServiceHandle {
     /// Submit a divergence request. Errors immediately with
-    /// [`Error::Service`] if the queue is full (load shed) or the service
-    /// has shut down.
+    /// [`Error::Overloaded`] if the queue is full (load shed) or
+    /// [`Error::Service`] if the service has shut down.
     pub fn submit(&self, mu: Measure, nu: Measure) -> Result<Pending> {
         self.submit_with(mu, nu, None)
     }
@@ -168,7 +174,7 @@ impl ServiceHandle {
             }
             Err(TrySendError::Full(_)) => {
                 self.metrics.counter("service.shed").inc();
-                Err(Error::Service("queue full (load shed)".into()))
+                Err(Error::Overloaded("submit queue full (load shed)".into()))
             }
             Err(TrySendError::Disconnected(_)) => {
                 Err(Error::Service("service is shut down".into()))
@@ -194,15 +200,21 @@ pub struct Service {
     handle: Option<ServiceHandle>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
-    /// Shard tier, when `shard_workers > 0`. Held so the shard workers
-    /// outlive the service workers and are joined when the last `Arc`
-    /// drops at shutdown.
+    /// Shard tier, when `shard_workers > 0` or a `shard_addrs` roster is
+    /// configured. Held so the shard workers outlive the service workers,
+    /// get drained gracefully at [`Service::shutdown`], and are joined
+    /// when the last `Arc` drops.
     shard: Option<Arc<crate::shard::ShardCoordinator>>,
+    /// Budget for the graceful shard drain at shutdown.
+    shard_drain: std::time::Duration,
 }
 
 impl Service {
-    /// Start the service with the given configuration.
-    pub fn start(cfg: ServiceConfig) -> Service {
+    /// Start the service with the given configuration. Fails typed when
+    /// a configured shard roster cannot be dialled and handshaken — a
+    /// fleet that is wrong at startup (unreachable, version-mismatched)
+    /// should fail fast, not limp.
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
         let metrics = Arc::new(Registry::default());
         let (req_tx, req_rx) = sync_channel::<Request>(cfg.batcher.queue_depth);
         let (batch_tx, batch_rx) = sync_channel::<Batch>(cfg.workers * 2);
@@ -230,14 +242,24 @@ impl Service {
         let cache = Arc::new(FeatureCache::new(cfg.cache_capacity));
 
         // Optional shard tier: one coordinator shared by every service
-        // worker, with `shard_workers` in-process executors behind it.
-        let shard = (cfg.shard_workers > 0).then(|| {
-            Arc::new(crate::shard::ShardCoordinator::in_process(
-                cfg.shard_workers,
-                crate::shard::ShardConfig::default(),
+        // worker. A non-empty roster of cross-host TCP workers takes
+        // precedence (each entry dialled + version-handshaken up front);
+        // otherwise `shard_workers` in-process executors spawn behind it.
+        let shard = if !cfg.shard_addrs.is_empty() {
+            Some(Arc::new(crate::shard::ShardCoordinator::connect(
+                &cfg.shard_addrs,
+                cfg.shard.to_shard_config(),
                 metrics.clone(),
-            ))
-        });
+            )?))
+        } else if cfg.shard_workers > 0 {
+            Some(Arc::new(crate::shard::ShardCoordinator::in_process(
+                cfg.shard_workers,
+                cfg.shard.to_shard_config(),
+                metrics.clone(),
+            )))
+        } else {
+            None
+        };
 
         // Worker pool.
         for w in 0..cfg.workers.max(1) {
@@ -259,7 +281,13 @@ impl Service {
             next_id: Arc::new(AtomicU64::new(0)),
             metrics,
         };
-        Service { handle: Some(handle), shutdown, threads, shard }
+        Ok(Service {
+            handle: Some(handle),
+            shutdown,
+            threads,
+            shard,
+            shard_drain: std::time::Duration::from_millis(cfg.shard.drain_deadline_ms),
+        })
     }
 
     pub fn handle(&self) -> ServiceHandle {
@@ -278,6 +306,13 @@ impl Service {
         drop(self.handle.take());
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+        // With every service worker joined there are no in-flight shard
+        // groups left, so a graceful drain (best-effort within the
+        // `service.shard.drain_deadline_ms` budget) just tells shard
+        // workers to exit cleanly instead of yanking their links.
+        if let Some(shard) = self.shard.take() {
+            let _ = shard.drain(self.shard_drain);
         }
     }
 }
@@ -584,7 +619,7 @@ fn solve_group_sharded(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{BatcherConfig, SinkhornConfig};
+    use crate::config::{BatcherConfig, ShardSettings, SinkhornConfig};
     use crate::data;
 
     fn test_cfg(workers: usize) -> ServiceConfig {
@@ -607,6 +642,8 @@ mod tests {
             solver_threads: 1,
             cache_capacity: 8,
             shard_workers: 0,
+            shard_addrs: Vec::new(),
+            shard: ShardSettings::default(),
             backend: "factored".to_string(),
         }
     }
@@ -618,7 +655,7 @@ mod tests {
 
     #[test]
     fn single_request_roundtrip() {
-        let svc = Service::start(test_cfg(2));
+        let svc = Service::start(test_cfg(2)).unwrap();
         let h = svc.handle();
         let (mu, nu) = clouds(0, 60);
         let resp = h.divergence(mu, nu).unwrap();
@@ -631,7 +668,7 @@ mod tests {
 
     #[test]
     fn identical_measures_near_zero() {
-        let svc = Service::start(test_cfg(1));
+        let svc = Service::start(test_cfg(1)).unwrap();
         let h = svc.handle();
         let (mu, _) = clouds(1, 40);
         let resp = h.divergence(mu.clone(), mu).unwrap();
@@ -642,7 +679,7 @@ mod tests {
 
     #[test]
     fn many_concurrent_requests_all_complete() {
-        let svc = Service::start(test_cfg(4));
+        let svc = Service::start(test_cfg(4)).unwrap();
         let h = svc.handle();
         let mut pendings = Vec::new();
         for i in 0..16 {
@@ -661,7 +698,7 @@ mod tests {
 
     #[test]
     fn dim_mismatch_rejected_at_submit() {
-        let svc = Service::start(test_cfg(1));
+        let svc = Service::start(test_cfg(1)).unwrap();
         let h = svc.handle();
         let (mu, _) = clouds(3, 10);
         let mut rng = Rng::seed_from(4);
@@ -693,9 +730,11 @@ mod tests {
             solver_threads: 1,
             cache_capacity: 8,
             shard_workers: 0,
+            shard_addrs: Vec::new(),
+            shard: ShardSettings::default(),
             backend: "factored".to_string(),
         };
-        let svc = Service::start(cfg);
+        let svc = Service::start(cfg).unwrap();
         let h = svc.handle();
         let mut accepted = 0;
         let mut shed = 0;
@@ -707,7 +746,7 @@ mod tests {
                     accepted += 1;
                     pendings.push(p);
                 }
-                Err(Error::Service(_)) => shed += 1,
+                Err(Error::Overloaded(_)) => shed += 1,
                 Err(e) => panic!("unexpected {e}"),
             }
         }
@@ -723,7 +762,7 @@ mod tests {
     fn feature_cache_hits_across_requests() {
         // Same (dim, eps, r) and same data => first request fits, the
         // rest reuse the cached map; counters are exported via metrics.
-        let svc = Service::start(test_cfg(2));
+        let svc = Service::start(test_cfg(2)).unwrap();
         let h = svc.handle();
         let (mu, nu) = clouds(0, 40);
         for _ in 0..5 {
@@ -741,7 +780,7 @@ mod tests {
     fn cache_disabled_still_serves() {
         let mut cfg = test_cfg(1);
         cfg.cache_capacity = 0;
-        let svc = Service::start(cfg);
+        let svc = Service::start(cfg).unwrap();
         let h = svc.handle();
         let (mu, nu) = clouds(2, 30);
         for _ in 0..3 {
@@ -766,7 +805,7 @@ mod tests {
             let mut cfg = test_cfg(1);
             cfg.solver_threads = threads;
             cfg.sinkhorn.max_iters = 60;
-            let svc = Service::start(cfg);
+            let svc = Service::start(cfg).unwrap();
             let h = svc.handle();
             let (mu, nu) = clouds(7, 700);
             let d = h.divergence(mu, nu).unwrap().divergence;
@@ -791,7 +830,7 @@ mod tests {
         let mut cfg = test_cfg(1);
         cfg.sinkhorn.max_iters = 500;
         cfg.num_features = 32;
-        let svc = Service::start(cfg);
+        let svc = Service::start(cfg).unwrap();
         let h = svc.handle();
         for eps in [1e-2, 1e-3] {
             let (mu, nu) = clouds(9, 30);
@@ -812,7 +851,7 @@ mod tests {
         // burst below reliably lands in one batch (and one fuse group —
         // the four requests share their clouds).
         cfg.batcher = BatcherConfig { max_batch: 4, max_delay_us: 500_000, queue_depth: 64 };
-        let svc = Service::start(cfg);
+        let svc = Service::start(cfg).unwrap();
         let h = svc.handle();
         let (mu, nu) = clouds(11, 50);
         let solo = h.divergence(mu.clone(), nu.clone()).unwrap().divergence;
@@ -839,7 +878,7 @@ mod tests {
         let mut cfg = test_cfg(1);
         cfg.sinkhorn.max_batch = 1;
         cfg.batcher = BatcherConfig { max_batch: 4, max_delay_us: 500_000, queue_depth: 64 };
-        let svc = Service::start(cfg);
+        let svc = Service::start(cfg).unwrap();
         let h = svc.handle();
         let (mu, nu) = clouds(12, 30);
         let pendings: Vec<_> =
@@ -865,7 +904,7 @@ mod tests {
             // Size-triggered flush so the burst fuses into one group on
             // both sides.
             cfg.batcher = BatcherConfig { max_batch: 4, max_delay_us: 500_000, queue_depth: 64 };
-            let svc = Service::start(cfg);
+            let svc = Service::start(cfg).unwrap();
             let h = svc.handle();
             let (mu, nu) = clouds(21, 40);
             let solo = h.divergence(mu.clone(), nu.clone()).unwrap();
@@ -895,7 +934,7 @@ mod tests {
     #[test]
     fn batching_groups_requests() {
         // Submit a burst, then check the batch-size histogram saw > 1.
-        let svc = Service::start(test_cfg(1));
+        let svc = Service::start(test_cfg(1)).unwrap();
         let h = svc.handle();
         let mut pendings = Vec::new();
         for i in 0..8 {

@@ -40,6 +40,12 @@ pub enum Error {
     /// this typed error, never as a panic or a wrong answer.
     Wire(String),
 
+    /// Admission control shed the request: the coordinator's bounded
+    /// in-flight budget is full (or the submit queue overflowed). Unlike
+    /// [`Error::Service`] this is retryable by construction — nothing was
+    /// attempted, the caller should back off and resubmit.
+    Overloaded(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -60,6 +66,7 @@ impl fmt::Display for Error {
             Error::Runtime(s) => write!(f, "runtime: {s}"),
             Error::Service(s) => write!(f, "service: {s}"),
             Error::Wire(s) => write!(f, "wire: {s}"),
+            Error::Overloaded(s) => write!(f, "overloaded: {s}"),
             Error::Io(e) => write!(f, "{e}"),
         }
     }

@@ -6,6 +6,7 @@
 //!   barycenter   Fig-6 barycenter on the positive sphere
 //!   gan-train    train the adversarial-kernel GAN on the synthetic corpus
 //!   serve        start the divergence service and drive it with a workload
+//!   shard-worker run a standalone shard worker for `serve --shard-addrs` rosters
 //!   runtime      smoke-check the PJRT runtime against the AOT artifacts
 //!
 //! Every subcommand accepts `--help`.
@@ -24,7 +25,8 @@ fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         eprintln!(
-            "usage: linear-sinkhorn <divergence|tradeoff|barycenter|gan-train|serve|runtime> [--help]"
+            "usage: linear-sinkhorn \
+             <divergence|tradeoff|barycenter|gan-train|serve|shard-worker|runtime> [--help]"
         );
         std::process::exit(2);
     }
@@ -35,6 +37,7 @@ fn main() {
         "barycenter" => cmd_barycenter(args),
         "gan-train" => cmd_gan(args),
         "serve" => cmd_serve(args),
+        "shard-worker" => cmd_shard_worker(args),
         "runtime" => cmd_runtime(args),
         other => {
             eprintln!("unknown subcommand `{other}`");
@@ -412,6 +415,37 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
                  bitwise identical either way",
             )
             .opt(
+                "shard-addrs",
+                "",
+                "comma-separated host:port roster of already-listening shard workers \
+                 (see `linear-sinkhorn shard-worker`); non-empty takes precedence \
+                 over --shard-workers, and dead entries are re-dialled (rejoin)",
+            )
+            .opt(
+                "shard-worker-file",
+                "",
+                "file with one shard worker host:port per line (blank lines and # \
+                 comments skipped), appended to --shard-addrs",
+            )
+            .opt("shard-heartbeat-ms", "50", "shard heartbeat ping cadence")
+            .opt("shard-timeout-ms", "1000", "silence before a shard worker is declared dead")
+            .opt("shard-deadline-ms", "30000", "per-task deadline before re-scatter")
+            .opt("shard-retries", "2", "re-scatter attempts before a shard task fails typed")
+            .opt("shard-backoff-ms", "20", "base linear backoff between re-scatters")
+            .opt(
+                "shard-hedge",
+                "0.5",
+                "straggler-hedging threshold as a fraction of the task deadline \
+                 (0 = no hedging)",
+            )
+            .opt(
+                "shard-max-inflight",
+                "16",
+                "in-flight group budget; beyond it groups shed typed (overloaded)",
+            )
+            .opt("shard-rejoin-ms", "250", "backoff between rejoin attempts for dead workers")
+            .opt("shard-drain-ms", "5000", "graceful shard drain budget at shutdown")
+            .opt(
                 "backend",
                 "factored",
                 "planner backend for served solves: auto|dense|factored|nystrom|\
@@ -442,6 +476,40 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         eprintln!("{e}");
         return 2;
     }
+    cfg.shard_addrs = a
+        .get_str("shard-addrs")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let roster_path = a.get_str("shard-worker-file");
+    if !roster_path.is_empty() {
+        match std::fs::read_to_string(roster_path) {
+            Ok(text) => {
+                for line in text.lines() {
+                    let line = line.trim();
+                    if line.is_empty() || line.starts_with('#') {
+                        continue;
+                    }
+                    cfg.shard_addrs.push(line.to_string());
+                }
+            }
+            Err(e) => {
+                eprintln!("--shard-worker-file {roster_path}: {e}");
+                return 2;
+            }
+        }
+    }
+    cfg.shard.heartbeat_interval_ms = a.get_usize("shard-heartbeat-ms") as u64;
+    cfg.shard.heartbeat_timeout_ms = a.get_usize("shard-timeout-ms") as u64;
+    cfg.shard.task_deadline_ms = a.get_usize("shard-deadline-ms") as u64;
+    cfg.shard.max_retries = a.get_usize("shard-retries");
+    cfg.shard.retry_backoff_ms = a.get_usize("shard-backoff-ms") as u64;
+    cfg.shard.hedge_fraction = a.get_f64("shard-hedge");
+    cfg.shard.max_inflight_groups = a.get_usize("shard-max-inflight");
+    cfg.shard.rejoin_backoff_ms = a.get_usize("shard-rejoin-ms") as u64;
+    cfg.shard.drain_deadline_ms = a.get_usize("shard-drain-ms") as u64;
     let cfg_path = a.get_str("config");
     if !cfg_path.is_empty() {
         match linear_sinkhorn::config::ConfigDoc::parse_file(cfg_path) {
@@ -450,7 +518,8 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
                 eprintln!(
                     "note: --config replaces all service flags (--workers/--solver-threads/\
                      --cache/--stabilize/--anneal/--anneal-decay/--symmetric/--max-batch/\
-                     --shard-workers/--backend ignored)"
+                     --shard-workers/--shard-addrs/--shard-worker-file/--shard-*-ms/\
+                     --shard-retries/--shard-hedge/--shard-max-inflight/--backend ignored)"
                 );
             }
             Err(e) => {
@@ -459,7 +528,13 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
             }
         }
     }
-    let svc = coordinator::Service::start(cfg);
+    let svc = match coordinator::Service::start(cfg) {
+        Ok(svc) => svc,
+        Err(e) => {
+            eprintln!("service start failed: {e}");
+            return 1;
+        }
+    };
     let h = svc.handle();
     let n_req = a.get_usize("requests");
     let n = a.get_usize("n");
@@ -494,6 +569,55 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     drop(h);
     svc.shutdown();
     0
+}
+
+fn cmd_shard_worker(argv: Vec<String>) -> i32 {
+    let a = parse(
+        ArgSpec::new(
+            "shard-worker",
+            "run a standalone shard worker; point `serve --shard-addrs` (or a \
+             --shard-worker-file roster) at its listen address",
+        )
+        .opt("listen", "127.0.0.1:0", "host:port to listen on (port 0 = ephemeral, printed)")
+        .opt("id", "0", "worker id reported in wire frames"),
+        argv,
+    );
+    let listener = match std::net::TcpListener::bind(a.get_str("listen")) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("bind {}: {e}", a.get_str("listen"));
+            return 1;
+        }
+    };
+    match listener.local_addr() {
+        Ok(addr) => println!("shard worker listening on {addr}"),
+        Err(e) => eprintln!("local_addr: {e}"),
+    }
+    let id = a.get_usize("id") as u64;
+    // Serve coordinator connections until killed. One run_worker life per
+    // connection: the life ends at shutdown, drain, or link loss, and the
+    // next accept is what makes this worker *rejoinable* — a coordinator
+    // that declared us dead re-dials the same roster address.
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                eprintln!("coordinator connected from {peer}");
+                match linear_sinkhorn::shard::TcpTransport::from_stream(stream) {
+                    Ok(t) => linear_sinkhorn::shard::run_worker(
+                        id,
+                        std::sync::Arc::new(t),
+                        linear_sinkhorn::shard::WorkerOptions::default(),
+                    ),
+                    Err(e) => eprintln!("transport setup failed: {e}"),
+                }
+                eprintln!("coordinator connection closed; awaiting reconnect");
+            }
+            Err(e) => {
+                eprintln!("accept: {e}");
+                return 1;
+            }
+        }
+    }
 }
 
 fn cmd_runtime(argv: Vec<String>) -> i32 {

@@ -34,6 +34,27 @@ use crate::runtime::Json;
 /// Frame magic: "LSW1" = linear-sinkhorn wire v1.
 pub const WIRE_MAGIC: [u8; 4] = *b"LSW1";
 
+/// Shard control-frame kinds (`meta["kind"]` values). Data frames use
+/// `"task"` / `"result"` / `"reject"` (see [`crate::api::envelope`]);
+/// these are the membership/lifecycle frames the coordinator and
+/// workers exchange around them.
+pub mod kinds {
+    /// Coordinator → worker liveness probe; also carries `group_id`.
+    pub const PING: &str = "ping";
+    /// Worker → coordinator liveness reply; carries `worker_id`.
+    pub const PONG: &str = "pong";
+    /// Rejoin/connect handshake, both directions: carries `plan_v`
+    /// (decimal [`crate::api::PLAN_FORMAT_MAJOR`]) so mixed-version
+    /// fleets fail typed instead of mis-decoding tasks.
+    pub const HELLO: &str = "hello";
+    /// Coordinator → worker: stop after in-flight work and exit cleanly.
+    pub const DRAIN: &str = "drain";
+    /// Worker → coordinator: drain observed, exiting.
+    pub const DRAIN_ACK: &str = "drain-ack";
+    /// Coordinator → worker: exit immediately (legacy hard stop).
+    pub const SHUTDOWN: &str = "shutdown";
+}
+
 /// Hard cap on the declared header length (1 MiB). A corrupt length
 /// prefix must produce a typed error, not a giant allocation.
 pub const MAX_HEADER_LEN: usize = 1 << 20;
@@ -115,6 +136,15 @@ impl WireDoc {
     pub fn with_kind(kind: &str) -> WireDoc {
         let mut doc = WireDoc::new();
         doc.set_str("kind", kind);
+        doc
+    }
+
+    /// Build a [`kinds::HELLO`] handshake frame advertising a plan
+    /// format version. Sent by the coordinator on (re)connect and echoed
+    /// by the worker; a version mismatch fails the rejoin typed.
+    pub fn hello(plan_major: u64) -> WireDoc {
+        let mut doc = WireDoc::with_kind(kinds::HELLO);
+        doc.set_u64("plan_v", plan_major);
         doc
     }
 

@@ -1,5 +1,6 @@
 //! The shard coordinator: scatter a fuse group over workers, gather the
-//! results, and keep the answer correct when workers fail.
+//! results, and keep the answer correct when workers fail — then heal
+//! the fleet and keep serving.
 //!
 //! ## Scatter
 //!
@@ -32,28 +33,69 @@
 //! outstanding pairs with [`Error::Wire`] (retrying a deterministic
 //! decode failure would burn the budget for nothing).
 //!
+//! ## Self-healing membership
+//!
+//! Death is no longer terminal. Every worker slot carries a *respawn*
+//! factory — re-dial the roster address for TCP workers, spawn a fresh
+//! thread for in-process ones — and the coordinator periodically
+//! re-attempts dead slots (at group start and on every heartbeat tick,
+//! throttled by `rejoin_backoff`). A rejoin runs the
+//! [`crate::runtime::wire::kinds::HELLO`] handshake first: both sides
+//! exchange their [`crate::api::PLAN_FORMAT_MAJOR`], and a mismatch
+//! fails the rejoin typed (`service.shard.rejoin_failures`) so a
+//! mixed-version fleet can never mis-decode a task. A successful rejoin
+//! bumps the slot's incarnation, counts `service.shard.rejoins`, and the
+//! slot is immediately eligible for new tasks and retries.
+//!
+//! ## Straggler hedging
+//!
+//! A slow-but-alive worker (answers pings, sits on a long solve) used to
+//! stall its chunk until the task deadline. Now, once a task has been
+//! outstanding for `hedge_fraction × task_deadline` and some live worker
+//! is idle, the coordinator speculatively re-sends the *identical*
+//! frame (same `task_id`, same bytes) to the idle worker
+//! (`service.shard.hedged_tasks`). First result wins, the loser dedups —
+//! and since both copies compute bitwise-identical answers by the batch
+//! contract, hedging can never change a result, only its latency. If the
+//! primary dies, a live hedge inherits the task without burning a retry.
+//!
+//! ## Admission control and graceful drain
+//!
+//! Concurrent groups are admitted against a bounded in-flight budget
+//! (`max_inflight_groups`); beyond it, [`solve_group`] sheds the whole
+//! group as typed [`Error::Overloaded`] *before* queueing on the worker
+//! set (`service.shard.shed_groups`, gauge
+//! `service.shard.inflight_groups`). [`ShardCoordinator::drain`] stops
+//! admissions, waits for in-flight groups, then sends every live worker
+//! a [`crate::runtime::wire::kinds::DRAIN`] frame; workers finish queued
+//! solves, acknowledge, and exit — zero orphaned tasks
+//! (`service.shard.drained_workers`).
+//!
 //! Everything is observable under `service.shard.*` — see
 //! [`METRIC_NAMES`].
+//!
+//! [`solve_group`]: ShardCoordinator::solve_group
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
-use crate::api::{DivergenceReport, Plan, ResultEnvelope, TaskEnvelope};
+use crate::api::{DivergenceReport, Plan, ResultEnvelope, TaskEnvelope, PLAN_FORMAT_MAJOR};
 use crate::data::Measure;
 use crate::error::{Error, Result};
 use crate::features::GaussianFeatureMap;
 use crate::metrics::Registry;
+use crate::runtime::wire::kinds;
 use crate::runtime::WireDoc;
 
-use super::testing::FaultPlan;
+use super::testing::{FaultPlan, FaultyTransport};
 use super::transport::{in_proc_pair, TcpTransport, Transport};
-use super::worker::{run_worker, WorkerOptions};
+use super::worker::run_worker;
 
 /// Every counter the shard layer emits (the histogram
-/// `service.shard.task_us` rides along), kept in one place so docs,
-/// tests, and dashboards agree.
+/// `service.shard.task_us` and the gauge `service.shard.inflight_groups`
+/// ride along), kept in one place so docs, tests, and dashboards agree.
 pub const METRIC_NAMES: &[&str] = &[
     "service.shard.scattered_tasks",
     "service.shard.gathered_results",
@@ -64,9 +106,15 @@ pub const METRIC_NAMES: &[&str] = &[
     "service.shard.corrupt_payloads",
     "service.shard.heartbeats",
     "service.shard.delegated_groups",
+    "service.shard.rejoins",
+    "service.shard.rejoin_failures",
+    "service.shard.hedged_tasks",
+    "service.shard.hedge_wins",
+    "service.shard.shed_groups",
+    "service.shard.drained_workers",
 ];
 
-/// Liveness / retry policy.
+/// Liveness / retry / membership policy.
 #[derive(Clone, Debug)]
 pub struct ShardConfig {
     /// Ping cadence while tasks are outstanding.
@@ -82,6 +130,15 @@ pub struct ShardConfig {
     /// Base backoff before a re-scatter; grows linearly with the attempt
     /// number, capped at 500 ms.
     pub retry_backoff: Duration,
+    /// Fraction of `task_deadline` after which an unanswered task is
+    /// speculatively re-sent to an idle live worker (straggler hedging).
+    /// `0.0` disables hedging.
+    pub hedge_fraction: f64,
+    /// Bounded in-flight group budget: groups beyond this shed with
+    /// typed [`Error::Overloaded`] instead of queueing.
+    pub max_inflight_groups: usize,
+    /// Minimum wait between rejoin attempts for a dead worker slot.
+    pub rejoin_backoff: Duration,
 }
 
 impl Default for ShardConfig {
@@ -92,21 +149,39 @@ impl Default for ShardConfig {
             task_deadline: Duration::from_secs(30),
             max_retries: 2,
             retry_backoff: Duration::from_millis(20),
+            hedge_fraction: 0.5,
+            max_inflight_groups: 16,
+            rejoin_backoff: Duration::from_millis(250),
         }
     }
 }
+
+/// Factory for a fresh incarnation of one worker's link: given the new
+/// incarnation number, re-establish a transport (re-dial the roster
+/// address, or spawn a fresh in-process thread). The thread handle is
+/// `None` for remote workers.
+type Respawn = Box<dyn Fn(u64) -> Result<(Arc<dyn Transport>, Option<JoinHandle<()>>)> + Send>;
 
 struct WorkerSlot {
     id: u64,
     transport: Arc<dyn Transport>,
     alive: bool,
     last_seen: Instant,
+    /// When the slot was declared dead (throttles rejoin attempts).
+    died_at: Option<Instant>,
+    /// 0 = initial spawn, +1 per successful rejoin. Keys the fault
+    /// plan's incarnation-scoped injections.
+    incarnation: u64,
     join: Option<JoinHandle<()>>,
+    /// `None` = this slot cannot rejoin (drained, or no factory).
+    respawn: Option<Respawn>,
 }
 
 struct Inner {
     workers: Vec<WorkerSlot>,
     next_group: u64,
+    /// Threads of superseded incarnations, joined at drain/drop.
+    graveyard: Vec<JoinHandle<()>>,
 }
 
 /// One in-flight scatter unit and its retry bookkeeping.
@@ -115,17 +190,21 @@ struct TaskState {
     /// Pair range `start..start + len` of the group this task covers.
     start: usize,
     len: usize,
-    /// The encoded envelope, kept verbatim for re-scatter: identical
-    /// bytes + identical `task_id` = idempotent retries.
+    /// The encoded envelope, kept verbatim for re-scatter *and* hedging:
+    /// identical bytes + identical `task_id` = idempotent copies.
     frame: Vec<u8>,
     worker: usize,
     sent_at: Instant,
     attempts: usize,
+    /// Speculative second home, if hedged (and when the copy went out).
+    hedge_worker: Option<usize>,
+    hedged_at: Option<Instant>,
     done: bool,
 }
 
-/// A transport whose peer is gone; swapped in at shutdown so in-process
-/// workers observe a dropped link even if the shutdown frame was lost.
+/// A transport whose peer is gone; swapped in at shutdown/drain so
+/// in-process workers observe a dropped link even if the control frame
+/// was lost.
 struct ClosedTransport;
 
 impl Transport for ClosedTransport {
@@ -137,11 +216,29 @@ impl Transport for ClosedTransport {
     }
 }
 
+/// Decrements the in-flight group count (and gauge) however
+/// [`ShardCoordinator::solve_group`] exits.
+struct InflightGuard<'a> {
+    coordinator: &'a ShardCoordinator,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        let now = self.coordinator.inflight.fetch_sub(1, Ordering::SeqCst) - 1;
+        self.coordinator.metrics.gauge("service.shard.inflight_groups").set(now as i64);
+    }
+}
+
 pub struct ShardCoordinator {
     inner: Mutex<Inner>,
     cfg: ShardConfig,
     metrics: Arc<Registry>,
     next_task: AtomicU64,
+    /// Set by [`Self::drain`]: no further groups are admitted and dead
+    /// slots stop rejoining.
+    draining: AtomicBool,
+    /// Groups currently inside (or queued on) [`Self::solve_group`].
+    inflight: AtomicUsize,
 }
 
 impl ShardCoordinator {
@@ -151,7 +248,9 @@ impl ShardCoordinator {
     }
 
     /// Like [`Self::in_process`], with a scripted fault schedule (the
-    /// fault-injection harness entry point).
+    /// fault-injection harness entry point). Each worker slot gets a
+    /// respawn factory, so a killed worker rejoins as its next
+    /// incarnation with that incarnation's scripted faults.
     pub fn in_process_with_faults(
         n: usize,
         cfg: ShardConfig,
@@ -159,45 +258,57 @@ impl ShardCoordinator {
         faults: &FaultPlan,
     ) -> ShardCoordinator {
         let n = n.max(1);
+        let faults = Arc::new(faults.clone());
         let mut workers = Vec::with_capacity(n);
         for idx in 0..n {
-            let (coord_end, worker_end) = in_proc_pair();
-            let opts = WorkerOptions {
-                exit_on_task: faults.kill_on_task(idx),
-                mute_on_task: faults.mute_on_task(idx),
-            };
-            let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
-            let wid = idx as u64;
-            let join = thread::Builder::new()
-                .name(format!("ls-shard-worker-{idx}"))
-                .spawn(move || run_worker(wid, worker_end, opts))
-                .expect("spawn shard worker");
-            let transport: Arc<dyn Transport> = if faults.has_transport_faults(idx) {
-                Arc::new(super::testing::FaultyTransport::new(
-                    coord_end,
-                    faults.transport_faults(idx),
-                ))
-            } else {
-                Arc::new(coord_end)
-            };
+            let faults = Arc::clone(&faults);
+            let respawn: Respawn = Box::new(move |inc: u64| {
+                let (coord_end, worker_end) = in_proc_pair();
+                let opts = faults.worker_options(idx, inc);
+                let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
+                let wid = idx as u64;
+                let join = thread::Builder::new()
+                    .name(format!("ls-shard-worker-{idx}-i{inc}"))
+                    .spawn(move || run_worker(wid, worker_end, opts))
+                    .map_err(|e| Error::Service(format!("spawn shard worker: {e}")))?;
+                let transport: Arc<dyn Transport> = if faults.has_transport_faults_at(idx, inc) {
+                    Arc::new(FaultyTransport::new(
+                        coord_end,
+                        faults.transport_faults_at(idx, inc),
+                    ))
+                } else {
+                    Arc::new(coord_end)
+                };
+                Ok((transport, Some(join)))
+            });
+            let (transport, join) = respawn(0).expect("spawn shard worker");
             workers.push(WorkerSlot {
-                id: wid,
+                id: idx as u64,
                 transport,
                 alive: true,
                 last_seen: Instant::now(),
-                join: Some(join),
+                died_at: None,
+                incarnation: 0,
+                join,
+                respawn: Some(respawn),
             });
         }
         ShardCoordinator {
-            inner: Mutex::new(Inner { workers, next_group: 0 }),
+            inner: Mutex::new(Inner { workers, next_group: 0, graveyard: Vec::new() }),
             cfg,
             metrics,
             next_task: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
         }
     }
 
-    /// Connect to already-listening cross-host workers (see
-    /// `shard::worker::serve_listener`).
+    /// Connect to already-listening cross-host workers (the roster: see
+    /// `shard::worker::serve_listener` and `--shard-worker-file`). Each
+    /// address is dialled and handshaken up front — a version-mismatched
+    /// or unreachable roster entry fails construction typed — and kept
+    /// as the slot's respawn target, so a worker that later dies is
+    /// re-dialled and rejoins.
     pub fn connect(
         addrs: &[String],
         cfg: ShardConfig,
@@ -208,40 +319,205 @@ impl ShardCoordinator {
         }
         let mut workers = Vec::with_capacity(addrs.len());
         for (idx, addr) in addrs.iter().enumerate() {
-            let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(addr)?);
+            let addr = addr.clone();
+            let respawn: Respawn = Box::new(move |_inc: u64| {
+                let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&addr)?);
+                Ok((transport, None))
+            });
+            let (transport, join) = respawn(0)?;
+            handshake(&transport, cfg.heartbeat_timeout)?;
             workers.push(WorkerSlot {
                 id: idx as u64,
                 transport,
                 alive: true,
                 last_seen: Instant::now(),
-                join: None,
+                died_at: None,
+                incarnation: 0,
+                join,
+                respawn: Some(respawn),
             });
         }
         Ok(ShardCoordinator {
-            inner: Mutex::new(Inner { workers, next_group: 0 }),
+            inner: Mutex::new(Inner { workers, next_group: 0, graveyard: Vec::new() }),
             cfg,
             metrics,
             next_task: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
         })
     }
 
+    /// Poison-recovering lock: a panicked thread (a test assertion, a
+    /// worker bug) must not cascade into every later `solve_group`
+    /// panicking on a poisoned mutex — the coordinator state is valid at
+    /// every point a panic can unwind through.
+    fn lock_inner(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     pub fn worker_count(&self) -> usize {
-        self.inner.lock().unwrap().workers.len()
+        self.lock_inner().workers.len()
     }
 
     /// Workers not yet declared dead.
     pub fn live_workers(&self) -> usize {
-        self.inner.lock().unwrap().workers.iter().filter(|w| w.alive).count()
+        self.lock_inner().workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Groups currently admitted into [`Self::solve_group`].
+    pub fn inflight_groups(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
     }
 
     pub fn metrics(&self) -> &Arc<Registry> {
         &self.metrics
     }
 
+    /// Attempt to rejoin dead worker slots whose backoff has elapsed
+    /// (also runs automatically at group start and on every heartbeat
+    /// tick). Returns how many workers rejoined. Public so tests and
+    /// maintenance loops can pump membership without traffic.
+    pub fn pump_rejoins(&self) -> usize {
+        let mut inner = self.lock_inner();
+        self.try_rejoins(&mut inner)
+    }
+
+    fn try_rejoins(&self, inner: &mut Inner) -> usize {
+        if self.draining.load(Ordering::SeqCst) {
+            return 0;
+        }
+        let mut rejoined = 0usize;
+        let Inner { workers, graveyard, .. } = inner;
+        for w in workers.iter_mut() {
+            if w.alive {
+                continue;
+            }
+            let Some(respawn) = w.respawn.as_ref() else { continue };
+            if let Some(died_at) = w.died_at {
+                if died_at.elapsed() < self.cfg.rejoin_backoff {
+                    continue;
+                }
+            }
+            let next_inc = w.incarnation + 1;
+            match respawn(next_inc) {
+                Err(_) => {
+                    // Unreachable (TCP refused, spawn failed): re-arm the
+                    // backoff and try again later.
+                    w.died_at = Some(Instant::now());
+                    self.metrics.counter("service.shard.rejoin_failures").inc();
+                }
+                Ok((transport, join)) => {
+                    match handshake(&transport, self.cfg.heartbeat_timeout) {
+                        Ok(()) => {
+                            // The superseded life's thread parks in the
+                            // graveyard (joined at drain/drop — its link
+                            // is long dead, so it has already exited or
+                            // will the moment it polls).
+                            if let Some(old) = w.join.take() {
+                                graveyard.push(old);
+                            }
+                            w.transport = transport;
+                            w.join = join;
+                            w.incarnation = next_inc;
+                            w.alive = true;
+                            w.last_seen = Instant::now();
+                            w.died_at = None;
+                            self.metrics.counter("service.shard.rejoins").inc();
+                            rejoined += 1;
+                        }
+                        Err(_) => {
+                            // Version mismatch or a dead handshake: the
+                            // fresh life is unusable. Dropping its
+                            // transport closes the link so the spawned
+                            // side exits; its thread parks for joining.
+                            if let Some(join) = join {
+                                graveyard.push(join);
+                            }
+                            w.died_at = Some(Instant::now());
+                            self.metrics.counter("service.shard.rejoin_failures").inc();
+                        }
+                    }
+                }
+            }
+        }
+        rejoined
+    }
+
+    /// Stop admitting groups, wait out the in-flight ones, then tell
+    /// every live worker to finish and exit cleanly. Returns the number
+    /// of workers that acknowledged the drain. Fails typed if in-flight
+    /// groups outlast `deadline`. Terminal: after a drain (even a failed
+    /// one) the coordinator sheds every new group and never rejoins
+    /// workers.
+    pub fn drain(&self, deadline: Duration) -> Result<usize> {
+        self.draining.store(true, Ordering::SeqCst);
+        let until = Instant::now() + deadline;
+        // Phase 1: no new groups are admitted now; wait for the ones
+        // already inside solve_group to finish or re-home their tasks.
+        while self.inflight.load(Ordering::SeqCst) > 0 {
+            if Instant::now() >= until {
+                return Err(Error::Service(format!(
+                    "drain deadline elapsed with {} groups still in flight",
+                    self.inflight.load(Ordering::SeqCst)
+                )));
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        let mut inner = self.lock_inner();
+        // Phase 2: ask live workers to finish queued solves and exit.
+        let drain_frame = WireDoc::with_kind(kinds::DRAIN).encode();
+        for w in inner.workers.iter_mut().filter(|w| w.alive) {
+            if w.transport.send(&drain_frame).is_err() {
+                self.mark_dead(w);
+            }
+        }
+        let mut acked = 0usize;
+        for w in inner.workers.iter_mut().filter(|w| w.alive) {
+            loop {
+                let remaining = until.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break; // no ack in time: treated like a crash below
+                }
+                match w.transport.recv_timeout(remaining.min(Duration::from_millis(20))) {
+                    Ok(Some(frame)) => {
+                        let is_ack = WireDoc::decode(&frame)
+                            .map(|d| d.kind() == kinds::DRAIN_ACK)
+                            .unwrap_or(false);
+                        if is_ack {
+                            acked += 1;
+                            break;
+                        }
+                        // Stale results/pongs from the final group: skip.
+                    }
+                    Ok(None) => continue,
+                    Err(_) => break, // link already closed — worker left
+                }
+            }
+        }
+        // Phase 3: close every link and join what we own. Slots are
+        // retired (not "died"): no death metrics, no rejoins.
+        let Inner { workers, graveyard, .. } = &mut *inner;
+        for w in workers.iter_mut() {
+            w.alive = false;
+            w.died_at = None;
+            w.respawn = None;
+            w.transport = Arc::new(ClosedTransport);
+            if let Some(join) = w.join.take() {
+                graveyard.push(join);
+            }
+        }
+        for join in graveyard.drain(..) {
+            let _ = join.join();
+        }
+        self.metrics.counter("service.shard.drained_workers").add(acked as u64);
+        Ok(acked)
+    }
+
     /// Solve one fuse group across the worker set. Returns one slot per
     /// pair, index-aligned with `pairs`; survivable faults are absorbed
-    /// by retry, unsurvivable ones surface as typed errors in the
-    /// affected slots.
+    /// by retry and hedging, unsurvivable ones surface as typed errors
+    /// in the affected slots, and overload sheds the whole group as
+    /// [`Error::Overloaded`] without touching a worker.
     ///
     /// `map` should be the exact feature map the local path would solve
     /// with (service cache maps are not refittable from `plan.seed` —
@@ -260,8 +536,40 @@ impl ShardCoordinator {
         if b == 0 {
             return Vec::new();
         }
-        let mut guard = self.inner.lock().unwrap();
+        // Admission control, before any lock or worker contact: a
+        // draining coordinator refuses, a full budget sheds typed.
+        if self.draining.load(Ordering::SeqCst) {
+            return (0..b)
+                .map(|_| Err(Error::Service("shard coordinator is draining".into())))
+                .collect();
+        }
+        let budget = self.cfg.max_inflight_groups.max(1);
+        let admitted = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        if admitted > budget {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.counter("service.shard.shed_groups").inc();
+            return (0..b)
+                .map(|_| {
+                    Err(Error::Overloaded(format!(
+                        "shard in-flight budget full ({budget} groups)"
+                    )))
+                })
+                .collect();
+        }
+        if self.draining.load(Ordering::SeqCst) {
+            // Lost the race with a concurrent drain(): back out before
+            // touching the (now draining) worker set.
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return (0..b)
+                .map(|_| Err(Error::Service("shard coordinator is draining".into())))
+                .collect();
+        }
+        self.metrics.gauge("service.shard.inflight_groups").set(admitted as i64);
+        let _inflight = InflightGuard { coordinator: self };
+
+        let mut guard = self.lock_inner();
         let inner = &mut *guard;
+        self.try_rejoins(inner);
         let group_id = inner.next_group;
         inner.next_group += 1;
 
@@ -320,10 +628,16 @@ impl ShardCoordinator {
                 worker: widx,
                 sent_at: Instant::now(),
                 attempts: 0,
+                hedge_worker: None,
+                hedged_at: None,
                 done: false,
             });
             start += len;
         }
+
+        // Hedge threshold: a fraction of the task deadline (0 = off).
+        let hedge_after = (self.cfg.hedge_fraction > 0.0)
+            .then(|| self.cfg.task_deadline.mul_f64(self.cfg.hedge_fraction.min(1.0)));
 
         // Gather until every task resolved (result, typed failure, or
         // total worker loss).
@@ -355,18 +669,53 @@ impl ShardCoordinator {
                 }
             }
 
-            // Heartbeats.
+            // Heartbeats — and, on the same cadence, rejoin attempts for
+            // dead slots whose backoff has elapsed (a mid-group rejoin
+            // makes the new incarnation a retry/hedge target right away).
             if last_ping.elapsed() >= self.cfg.heartbeat_interval {
                 last_ping = Instant::now();
-                let mut ping = WireDoc::with_kind("ping");
+                self.try_rejoins(inner);
+                let mut ping = WireDoc::with_kind(kinds::PING);
                 ping.set_u64("group_id", group_id);
                 let ping = ping.encode();
                 for w in inner.workers.iter_mut().filter(|w| w.alive) {
                     self.metrics.counter("service.shard.heartbeats").inc();
                     if w.transport.send(&ping).is_err() {
-                        w.alive = false;
-                        self.metrics.counter("service.shard.worker_deaths").inc();
+                        self.mark_dead(w);
                     }
+                }
+            }
+
+            // Straggler hedging: an old-enough task whose primary still
+            // looks alive gets an identical copy on an idle live worker.
+            if let Some(hedge_after) = hedge_after {
+                let mut busy = vec![false; inner.workers.len()];
+                for t in tasks.iter().filter(|t| !t.done) {
+                    busy[t.worker] = true;
+                    if let Some(h) = t.hedge_worker {
+                        busy[h] = true;
+                    }
+                }
+                for t in tasks.iter_mut() {
+                    if t.done || t.hedge_worker.is_some() {
+                        continue;
+                    }
+                    if t.sent_at.elapsed() <= hedge_after {
+                        continue;
+                    }
+                    let Some(idle) = (0..inner.workers.len())
+                        .find(|&c| c != t.worker && inner.workers[c].alive && !busy[c])
+                    else {
+                        continue; // nobody idle: the retry ladder covers it
+                    };
+                    if inner.workers[idle].transport.send(&t.frame).is_err() {
+                        self.mark_dead(&mut inner.workers[idle]);
+                        continue;
+                    }
+                    busy[idle] = true;
+                    t.hedge_worker = Some(idle);
+                    t.hedged_at = Some(Instant::now());
+                    self.metrics.counter("service.shard.hedged_tasks").inc();
                 }
             }
 
@@ -385,6 +734,19 @@ impl ShardCoordinator {
                 }
                 if stale && !worker_dead {
                     self.mark_dead(&mut inner.workers[widx]);
+                }
+                // A live, unexpired hedge inherits the task before any
+                // retry is burned: its identical copy is already running
+                // on a healthy worker.
+                if let Some(h) = tasks[ti].hedge_worker.take() {
+                    let hedged_at = tasks[ti].hedged_at.take().unwrap_or_else(Instant::now);
+                    if inner.workers[h].alive
+                        && hedged_at.elapsed() <= self.cfg.task_deadline
+                    {
+                        tasks[ti].worker = h;
+                        tasks[ti].sent_at = hedged_at;
+                        continue;
+                    }
                 }
                 tasks[ti].attempts += 1;
                 let attempts = tasks[ti].attempts;
@@ -431,8 +793,8 @@ impl ShardCoordinator {
         }
 
         // Final sweep: collect whatever is still in flight (late
-        // originals after a retry won the race) so duplicates are
-        // observed rather than left queued.
+        // originals after a retry or hedge won the race) so duplicates
+        // are observed rather than left queued.
         for widx in 0..inner.workers.len() {
             if !inner.workers[widx].alive {
                 continue;
@@ -460,6 +822,7 @@ impl ShardCoordinator {
     fn mark_dead(&self, w: &mut WorkerSlot) {
         if w.alive {
             w.alive = false;
+            w.died_at = Some(Instant::now());
             self.metrics.counter("service.shard.worker_deaths").inc();
         }
     }
@@ -483,7 +846,7 @@ impl ShardCoordinator {
         };
         workers[widx].last_seen = Instant::now();
         match doc.kind() {
-            "pong" => {}
+            kinds::PONG => {}
             "reject" => {
                 // The worker could not even decode the task: a
                 // deterministic failure, so fail typed instead of
@@ -522,6 +885,12 @@ impl ShardCoordinator {
                         });
                         return;
                     }
+                    if t.hedge_worker == Some(widx) {
+                        // The speculative copy beat the primary (both
+                        // compute identical bits — this is a latency win,
+                        // never a different answer).
+                        self.metrics.counter("service.shard.hedge_wins").inc();
+                    }
                     let elapsed = t.sent_at.elapsed();
                     for (off, r) in env.results.into_iter().enumerate() {
                         out[t.start + off] = Some(r);
@@ -540,7 +909,8 @@ impl ShardCoordinator {
 
     /// A frame from `widx` failed to decode: unsurvivable for that
     /// worker's outstanding work (retrying a deterministic decode
-    /// failure is pointless), and the link is no longer trusted.
+    /// failure is pointless), and the link is no longer trusted. Tasks
+    /// with a live hedge elsewhere migrate to it instead of failing.
     fn corrupt_from(
         &self,
         workers: &mut [WorkerSlot],
@@ -554,9 +924,56 @@ impl ShardCoordinator {
         let worker_id = workers[widx].id;
         self.mark_dead(&mut workers[widx]);
         let msg = format!("corrupt frame from shard worker {worker_id}: {err}");
-        for t in tasks.iter_mut().filter(|t| !t.done && t.worker == widx) {
+        for t in tasks.iter_mut().filter(|t| !t.done) {
+            if t.hedge_worker == Some(widx) {
+                // Only the speculative copy is tainted: forget it.
+                t.hedge_worker = None;
+                t.hedged_at = None;
+            }
+            if t.worker != widx {
+                continue;
+            }
+            if let Some(h) = t.hedge_worker.take() {
+                let hedged_at = t.hedged_at.take().unwrap_or_else(Instant::now);
+                if workers[h].alive {
+                    t.worker = h;
+                    t.sent_at = hedged_at;
+                    continue;
+                }
+            }
             fail_task(t, out, outstanding, &|| Error::Wire(msg.clone()));
         }
+    }
+}
+
+/// The hello handshake, coordinator side: advertise our plan format
+/// major, wait for the worker's, and require exact agreement — a
+/// mixed-version rejoiner must fail typed here, before it can ever
+/// mis-decode a task.
+fn handshake(transport: &Arc<dyn Transport>, timeout: Duration) -> Result<()> {
+    transport.send(&WireDoc::hello(PLAN_FORMAT_MAJOR as u64).encode())?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(Error::Service("shard handshake timed out".into()));
+        }
+        let Some(frame) = transport.recv_timeout(remaining.min(Duration::from_millis(20)))?
+        else {
+            continue;
+        };
+        let doc = WireDoc::decode(&frame)?;
+        if doc.kind() != kinds::HELLO {
+            continue; // stale pong/result from a previous life
+        }
+        let theirs = doc.get_u64("plan_v")?;
+        let ours = PLAN_FORMAT_MAJOR as u64;
+        if theirs != ours {
+            return Err(Error::Wire(format!(
+                "worker plan format v{theirs} != coordinator v{ours}; refusing rejoin"
+            )));
+        }
+        return Ok(());
     }
 }
 
@@ -576,19 +993,23 @@ fn fail_task(
 
 impl Drop for ShardCoordinator {
     fn drop(&mut self) {
-        let mut inner = self.inner.lock().unwrap();
-        let shutdown = WireDoc::with_kind("shutdown").encode();
-        for w in inner.workers.iter_mut() {
+        let mut inner = self.lock_inner();
+        let shutdown = WireDoc::with_kind(kinds::SHUTDOWN).encode();
+        let Inner { workers, graveyard, .. } = &mut *inner;
+        for w in workers.iter_mut() {
             let _ = w.transport.send(&shutdown);
             // Drop our endpoint too: a worker that missed the frame
             // (dropped by a fault, or mid-solve) still sees the link
             // close and exits.
             w.transport = Arc::new(ClosedTransport);
         }
-        for w in inner.workers.iter_mut() {
+        for w in workers.iter_mut() {
             if let Some(join) = w.join.take() {
                 let _ = join.join();
             }
+        }
+        for join in graveyard.drain(..) {
+            let _ = join.join();
         }
     }
 }
@@ -608,6 +1029,11 @@ mod tests {
             task_deadline: Duration::from_secs(5),
             max_retries: 2,
             retry_backoff: Duration::from_millis(5),
+            // Membership churn off by default in unit tests: rejoins and
+            // hedges fire only where a test asks for them.
+            hedge_fraction: 0.0,
+            max_inflight_groups: 16,
+            rejoin_backoff: Duration::from_secs(60),
         }
     }
 
@@ -665,6 +1091,7 @@ mod tests {
         assert_eq!(metrics.counter("service.shard.gathered_results").get(), 2);
         assert_eq!(metrics.counter("service.shard.retries").get(), 0);
         assert_eq!(shard.live_workers(), 2);
+        assert_eq!(shard.inflight_groups(), 0, "inflight guard released");
     }
 
     #[test]
@@ -693,7 +1120,9 @@ mod tests {
         let refs: Vec<(&[f32], &[f32])> =
             weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
         let metrics = Arc::new(Registry::default());
-        // Every worker crashes on its first task: no survivors.
+        // Every worker crashes on its first task: no survivors (the
+        // quick_cfg rejoin backoff is far beyond the test window, so the
+        // fleet stays down).
         let faults = FaultPlan::new(1)
             .inject(0, Fault::KillOnTask { nth: 1 })
             .inject(1, Fault::KillOnTask { nth: 1 });
@@ -712,5 +1141,63 @@ mod tests {
         // A follow-up group fails fast, also typed.
         let again = shard.solve_group(&plan, &mu, &nu, &refs[..1], None, &[]);
         assert!(matches!(&again[0], Err(Error::Service(_))));
+    }
+
+    #[test]
+    fn dead_workers_rejoin_and_serve_again() {
+        let (mu, nu, weights, plan) = fixture(4);
+        let refs: Vec<(&[f32], &[f32])> =
+            weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let local = OtProblem::new(&mu, &nu).weight_pairs(&refs).divergence_all_planned(&plan);
+        let metrics = Arc::new(Registry::default());
+        // Worker 0 crashes on its first task of life 0; life 1 is clean.
+        let faults = FaultPlan::new(2).inject(0, Fault::KillOnTask { nth: 1 });
+        let mut cfg = quick_cfg();
+        cfg.rejoin_backoff = Duration::from_millis(10);
+        let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&got, &local);
+        // The survivor covered the crashed worker's chunk; the crashed
+        // slot may already have rejoined mid-group (the heartbeat tick
+        // pumps membership), so only an upper bound is deterministic.
+        assert!(shard.live_workers() >= 1);
+        assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 1);
+
+        // After the backoff the fleet heals to full strength.
+        std::thread::sleep(Duration::from_millis(15));
+        shard.pump_rejoins();
+        assert_eq!(shard.live_workers(), 2);
+        assert!(metrics.counter("service.shard.rejoins").get() >= 1);
+
+        // The rejoined incarnation serves new tasks, bitwise intact.
+        let again = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&again, &local);
+        assert_eq!(shard.live_workers(), 2);
+    }
+
+    #[test]
+    fn drain_finishes_work_and_refuses_new_groups() {
+        let (mu, nu, weights, plan) = fixture(3);
+        let refs: Vec<(&[f32], &[f32])> =
+            weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let local = OtProblem::new(&mu, &nu).weight_pairs(&refs).divergence_all_planned(&plan);
+        let metrics = Arc::new(Registry::default());
+        let shard = ShardCoordinator::in_process(2, quick_cfg(), metrics.clone());
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&got, &local);
+
+        let acked = shard.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(acked, 2, "both idle workers acknowledge the drain");
+        assert_eq!(metrics.counter("service.shard.drained_workers").get(), 2);
+        assert_eq!(shard.live_workers(), 0);
+        assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 0, "drain is not death");
+
+        // Drained means drained: new groups are refused typed, and the
+        // slots never rejoin.
+        let after = shard.solve_group(&plan, &mu, &nu, &refs[..1], None, &[]);
+        assert!(matches!(&after[0], Err(Error::Service(_))));
+        assert_eq!(shard.pump_rejoins(), 0);
+        assert_eq!(shard.live_workers(), 0);
     }
 }

@@ -18,23 +18,45 @@
 //! * [`worker`] — the executor loop: ping-responsive receive thread +
 //!   solver thread running [`crate::api::OtProblem::divergence_all_planned`].
 //! * [`coordinator`] — scatter/gather, heartbeat liveness, deadlines,
-//!   bounded retry with re-scatter, `service.shard.*` metrics.
+//!   bounded retry with re-scatter, straggler hedging, admission
+//!   control, worker rejoin, graceful drain, `service.shard.*` metrics.
 //! * [`testing`] — the deterministic fault-injection harness
-//!   ([`FaultPlan`]) driving `rust/tests/shard_fault_injection.rs`.
+//!   ([`FaultPlan`], now incarnation-scoped) driving
+//!   `rust/tests/shard_fault_injection.rs` and the multi-round chaos
+//!   soak in `rust/tests/shard_chaos_soak.rs`.
 //!
 //! The failure ladder, from mildest to terminal:
 //!
-//! 1. Lost or late message → task deadline → re-scatter (bounded by
+//! 1. Straggler (slow but alive) → after `hedge_fraction ×
+//!    task_deadline`, an identical copy goes to an idle live worker;
+//!    first result wins, the loser dedups by `task_id`. Bitwise
+//!    harmless by construction — both copies compute the same bits.
+//! 2. Lost or late message → task deadline → re-scatter (bounded by
 //!    `max_retries`, linear backoff). Duplicates are deduped by
 //!    `task_id`; first result wins.
-//! 2. Worker crash (link error) or hang (heartbeat timeout) → worker
-//!    marked dead, its tasks re-scattered to survivors.
-//! 3. Corrupt frame → that worker's outstanding pairs fail with
+//! 3. Worker crash (link error) or hang (heartbeat timeout) → worker
+//!    marked dead, its tasks re-scattered to survivors (a live hedge
+//!    inherits first, without burning a retry).
+//! 4. Corrupt frame → that worker's outstanding pairs fail with
 //!    [`crate::error::Error::Wire`] (deterministic failures are not
 //!    retried).
-//! 4. No survivors / retries exhausted →
+//! 5. No survivors / retries exhausted →
 //!    [`crate::error::Error::Service`]. Always typed, never a panic,
 //!    never a wrong answer.
+//!
+//! And the healing / protection rungs around it:
+//!
+//! * **Rejoin** — dead slots are re-dialled (TCP roster) or re-spawned
+//!   (in-process) after `rejoin_backoff`, gated by a
+//!   [`crate::runtime::wire::kinds::HELLO`] handshake that re-verifies
+//!   [`crate::api::PLAN_FORMAT_MAJOR`]; a mixed-version rejoiner fails
+//!   typed and never receives a task.
+//! * **Shed** — groups beyond `max_inflight_groups` fail immediately
+//!   with [`crate::error::Error::Overloaded`], before touching a
+//!   worker.
+//! * **Drain** — [`ShardCoordinator::drain`] stops admissions, lets
+//!   in-flight groups finish, then tells workers to exit cleanly: zero
+//!   orphaned tasks.
 
 pub mod coordinator;
 pub mod testing;
@@ -44,4 +66,7 @@ pub mod worker;
 pub use coordinator::{ShardConfig, ShardCoordinator, METRIC_NAMES};
 pub use testing::{Fault, FaultPlan, FaultyTransport};
 pub use transport::{in_proc_pair, InProcTransport, TcpTransport, Transport};
-pub use worker::{execute_task, run_worker, serve_listener, spawn_tcp_worker, WorkerOptions};
+pub use worker::{
+    execute_task, run_worker, serve_connections, serve_listener, spawn_tcp_worker,
+    spawn_tcp_worker_with, WorkerOptions,
+};

@@ -1,12 +1,15 @@
 //! Deterministic fault injection for the shard layer.
 //!
 //! A [`FaultPlan`] is a reproducible schedule of message- and
-//! worker-level failures, keyed by worker index and by a per-transport
-//! message counter (`nth`, 0-based) — no clocks, no randomness at
-//! injection time. The same plan against the same workload replays the
-//! same fault sequence, which is what lets
-//! `rust/tests/shard_fault_injection.rs` assert *bitwise* agreement with
-//! the single-host solve under every survivable fault.
+//! worker-level failures, keyed by worker index, by the worker's
+//! **incarnation** (0 = initial spawn, +1 per rejoin — so a plan can
+//! script "crash on first life, clean on rejoin"), and by a
+//! per-transport message counter (`nth`, 0-based) — no clocks, no
+//! randomness at injection time. The same plan against the same
+//! workload replays the same fault sequence, which is what lets
+//! `rust/tests/shard_fault_injection.rs` and
+//! `rust/tests/shard_chaos_soak.rs` assert *bitwise* agreement with the
+//! single-host solve under every survivable fault.
 //!
 //! Two delivery mechanisms:
 //!
@@ -16,24 +19,32 @@
 //!   (task or ping never arrives), [`Fault::DropRecv`] /
 //!   [`Fault::DelayRecv`] / [`Fault::DuplicateRecv`] /
 //!   [`Fault::CorruptRecv`] perturb the nth inbound frame (result or
-//!   pong).
+//!   pong), and [`Fault::PartitionSend`] / [`Fault::PartitionRecv`]
+//!   black-hole a whole *window* of frames in one direction — a network
+//!   partition that later heals.
 //! * **Worker faults** are handed to the worker loop as
 //!   [`crate::shard::worker::WorkerOptions`]: [`Fault::KillOnTask`] makes
 //!   the worker exit the moment its nth task arrives (a crash — the link
 //!   drops), [`Fault::MuteOnTask`] makes it keep solving but never send
-//!   again (a hang — only the heartbeat timeout can detect it).
+//!   again (a hang — only the heartbeat timeout can detect it),
+//!   [`Fault::SlowOnTask`] makes one solve take an extra `delay`
+//!   (a straggler — pongs keep flowing, so hedging covers it, not
+//!   liveness), and [`Fault::AdvertiseVersion`] makes the worker's hello
+//!   handshake claim a foreign plan format major (a mixed-version
+//!   rejoiner the coordinator must refuse typed).
 //!
 //! [`FaultPlan::random`] derives a schedule from a seed via the crate's
 //! own [`Rng`], restricted to survivable message-level faults, for
 //! property-style sweeps.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::rng::Rng;
 
 use super::transport::Transport;
+use super::worker::WorkerOptions;
 
 /// One injected failure. `nth` counters are 0-based per direction and
 /// per transport, except the task-indexed worker faults which are
@@ -51,18 +62,46 @@ pub enum Fault {
     DelayRecv { nth: usize, delay: Duration },
     /// Garble the nth inbound frame's bytes (decode must fail typed).
     CorruptRecv { nth: usize },
+    /// Black-hole `count` outbound frames starting at the `from`th —
+    /// one half of a partition window (frames in flight die).
+    PartitionSend { from: usize, count: usize },
+    /// Black-hole `count` inbound frames starting at the `from`th — the
+    /// other half of a partition window.
+    PartitionRecv { from: usize, count: usize },
     /// Worker exits (crash) upon receiving its nth task, 1-based.
     KillOnTask { nth: usize },
     /// Worker stops sending (results *and* pongs) from its nth task on,
     /// 1-based, but keeps running — detectable only via heartbeats.
     MuteOnTask { nth: usize },
+    /// Worker's nth solve (1-based) takes an extra `delay` — a straggler
+    /// that still answers pings.
+    SlowOnTask { nth: usize, delay: Duration },
+    /// Worker's hello handshake advertises plan format `major` instead
+    /// of this build's — a mixed-version rejoiner.
+    AdvertiseVersion { major: u64 },
 }
 
-/// A reproducible schedule of faults, addressed by worker index.
+impl Fault {
+    fn is_transport(&self) -> bool {
+        matches!(
+            self,
+            Fault::DropSend { .. }
+                | Fault::DropRecv { .. }
+                | Fault::DuplicateRecv { .. }
+                | Fault::DelayRecv { .. }
+                | Fault::CorruptRecv { .. }
+                | Fault::PartitionSend { .. }
+                | Fault::PartitionRecv { .. }
+        )
+    }
+}
+
+/// A reproducible schedule of faults, addressed by worker index and
+/// incarnation (0 = initial spawn, incremented on every rejoin).
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     seed: u64,
-    injections: Vec<(usize, Fault)>,
+    injections: Vec<(usize, u64, Fault)>,
 }
 
 impl FaultPlan {
@@ -76,9 +115,18 @@ impl FaultPlan {
         FaultPlan { seed, injections: Vec::new() }
     }
 
-    /// Add one fault against `worker` (builder style).
-    pub fn inject(mut self, worker: usize, fault: Fault) -> FaultPlan {
-        self.injections.push((worker, fault));
+    /// Add one fault against `worker`'s initial incarnation (builder
+    /// style).
+    pub fn inject(self, worker: usize, fault: Fault) -> FaultPlan {
+        self.inject_at(worker, 0, fault)
+    }
+
+    /// Add one fault against a specific incarnation of `worker`:
+    /// incarnation 0 is the initial spawn, each successful rejoin
+    /// increments it. Lets a plan script flapping workers ("crash on
+    /// life 0 *and* life 1, serve cleanly from life 2").
+    pub fn inject_at(mut self, worker: usize, incarnation: u64, fault: Fault) -> FaultPlan {
+        self.injections.push((worker, incarnation, fault));
         self
     }
 
@@ -113,36 +161,58 @@ impl FaultPlan {
         self.injections.is_empty()
     }
 
-    /// The 1-based task index at which `worker` crashes, if scheduled.
+    /// The 1-based task index at which `worker`'s initial incarnation
+    /// crashes, if scheduled.
     pub fn kill_on_task(&self, worker: usize) -> Option<usize> {
-        self.injections.iter().find_map(|(w, f)| match f {
-            Fault::KillOnTask { nth } if *w == worker => Some(*nth),
-            _ => None,
-        })
+        self.worker_options(worker, 0).exit_on_task
     }
 
-    /// The 1-based task index at which `worker` goes mute, if scheduled.
+    /// The 1-based task index at which `worker`'s initial incarnation
+    /// goes mute, if scheduled.
     pub fn mute_on_task(&self, worker: usize) -> Option<usize> {
-        self.injections.iter().find_map(|(w, f)| match f {
-            Fault::MuteOnTask { nth } if *w == worker => Some(*nth),
-            _ => None,
-        })
+        self.worker_options(worker, 0).mute_on_task
     }
 
-    /// Message-level faults against `worker`'s link, in injection order.
+    /// The [`WorkerOptions`] scripting one incarnation of `worker` —
+    /// what the coordinator hands the worker loop at (re)spawn time.
+    pub fn worker_options(&self, worker: usize, incarnation: u64) -> WorkerOptions {
+        let mut opts = WorkerOptions::default();
+        for (w, inc, fault) in &self.injections {
+            if *w != worker || *inc != incarnation {
+                continue;
+            }
+            match fault {
+                Fault::KillOnTask { nth } => opts.exit_on_task = Some(*nth),
+                Fault::MuteOnTask { nth } => opts.mute_on_task = Some(*nth),
+                Fault::SlowOnTask { nth, delay } => opts.slow_on_task = Some((*nth, *delay)),
+                Fault::AdvertiseVersion { major } => opts.hello_plan_major = Some(*major),
+                _ => {}
+            }
+        }
+        opts
+    }
+
+    /// Message-level faults against `worker`'s initial link, in
+    /// injection order.
     pub fn transport_faults(&self, worker: usize) -> Vec<Fault> {
+        self.transport_faults_at(worker, 0)
+    }
+
+    /// Message-level faults against one incarnation of `worker`'s link.
+    pub fn transport_faults_at(&self, worker: usize, incarnation: u64) -> Vec<Fault> {
         self.injections
             .iter()
-            .filter(|(w, f)| {
-                *w == worker
-                    && !matches!(f, Fault::KillOnTask { .. } | Fault::MuteOnTask { .. })
-            })
-            .map(|(_, f)| f.clone())
+            .filter(|(w, inc, f)| *w == worker && *inc == incarnation && f.is_transport())
+            .map(|(_, _, f)| f.clone())
             .collect()
     }
 
     pub fn has_transport_faults(&self, worker: usize) -> bool {
-        !self.transport_faults(worker).is_empty()
+        self.has_transport_faults_at(worker, 0)
+    }
+
+    pub fn has_transport_faults_at(&self, worker: usize, incarnation: u64) -> bool {
+        !self.transport_faults_at(worker, incarnation).is_empty()
     }
 }
 
@@ -168,14 +238,27 @@ impl<T: Transport> FaultyTransport<T> {
             held: Mutex::new(Vec::new()),
         }
     }
+
+    /// Poison-recovering lock: the held-frame list stays usable even if
+    /// a test thread panicked while holding it (the list of delayed
+    /// frames is valid at every intermediate state).
+    fn held(&self) -> MutexGuard<'_, Vec<(Instant, Vec<u8>)>> {
+        self.held.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
 }
 
 impl<T: Transport> Transport for FaultyTransport<T> {
     fn send(&self, frame: &[u8]) -> crate::error::Result<()> {
         let n = self.sends.fetch_add(1, Ordering::SeqCst);
         for fault in &self.faults {
-            if matches!(fault, Fault::DropSend { nth } if *nth == n) {
-                return Ok(()); // swallowed: the peer never sees it
+            match fault {
+                Fault::DropSend { nth } if *nth == n => {
+                    return Ok(()); // swallowed: the peer never sees it
+                }
+                Fault::PartitionSend { from, count } if n >= *from && n < from + count => {
+                    return Ok(()); // inside the partition window
+                }
+                _ => {}
             }
         }
         self.inner.send(frame)
@@ -184,7 +267,7 @@ impl<T: Transport> Transport for FaultyTransport<T> {
     fn recv_timeout(&self, timeout: Duration) -> crate::error::Result<Option<Vec<u8>>> {
         // Matured held-back frames are delivered before live ones.
         {
-            let mut held = self.held.lock().unwrap();
+            let mut held = self.held();
             if let Some(pos) = held.iter().position(|(at, _)| *at <= Instant::now()) {
                 return Ok(Some(held.remove(pos).1));
             }
@@ -196,12 +279,17 @@ impl<T: Transport> Transport for FaultyTransport<T> {
         for fault in &self.faults {
             match fault {
                 Fault::DropRecv { nth } if *nth == n => return Ok(None),
+                Fault::PartitionRecv { from, count } if n >= *from && n < from + count => {
+                    // The frame was read off the link and died in the
+                    // partition — unlike a delay, it never arrives.
+                    return Ok(None);
+                }
                 Fault::DuplicateRecv { nth } if *nth == n => {
-                    self.held.lock().unwrap().push((Instant::now(), frame.clone()));
+                    self.held().push((Instant::now(), frame.clone()));
                     return Ok(Some(frame));
                 }
                 Fault::DelayRecv { nth, delay } if *nth == n => {
-                    self.held.lock().unwrap().push((Instant::now() + *delay, frame));
+                    self.held().push((Instant::now() + *delay, frame));
                     return Ok(None);
                 }
                 Fault::CorruptRecv { nth } if *nth == n => {
@@ -243,6 +331,29 @@ mod tests {
     }
 
     #[test]
+    fn plan_scopes_faults_by_incarnation() {
+        let plan = FaultPlan::new(4)
+            .inject(0, Fault::KillOnTask { nth: 1 })
+            .inject_at(0, 1, Fault::KillOnTask { nth: 2 })
+            .inject_at(0, 1, Fault::CorruptRecv { nth: 0 })
+            .inject_at(0, 2, Fault::AdvertiseVersion { major: 9 })
+            .inject_at(0, 2, Fault::SlowOnTask { nth: 1, delay: Duration::from_millis(3) });
+        // Life 0: crash on first task, clean link.
+        assert_eq!(plan.worker_options(0, 0).exit_on_task, Some(1));
+        assert!(!plan.has_transport_faults_at(0, 0));
+        // Life 1 (first rejoin): crash on second task, corrupt link.
+        assert_eq!(plan.worker_options(0, 1).exit_on_task, Some(2));
+        assert_eq!(plan.transport_faults_at(0, 1), vec![Fault::CorruptRecv { nth: 0 }]);
+        // Life 2: no crash, but a straggler advertising a foreign version.
+        let opts = plan.worker_options(0, 2);
+        assert_eq!(opts.exit_on_task, None);
+        assert_eq!(opts.hello_plan_major, Some(9));
+        assert_eq!(opts.slow_on_task, Some((1, Duration::from_millis(3))));
+        // Another worker sees none of it.
+        assert_eq!(plan.worker_options(1, 0).exit_on_task, None);
+    }
+
+    #[test]
     fn random_plans_are_reproducible_and_survivable() {
         let a = FaultPlan::random(42, 3, 8);
         let b = FaultPlan::random(42, 3, 8);
@@ -254,6 +365,10 @@ mod tests {
             assert_eq!(a.mute_on_task(w), None, "random plans never mute");
             for f in a.transport_faults(w) {
                 assert!(!matches!(f, Fault::CorruptRecv { .. }), "random plans never corrupt");
+                assert!(
+                    !matches!(f, Fault::PartitionSend { .. } | Fault::PartitionRecv { .. }),
+                    "random plans never partition"
+                );
             }
         }
     }
@@ -297,5 +412,30 @@ mod tests {
         assert_eq!(got.len(), frame.len());
         assert_ne!(got, frame);
         assert_eq!(&got[..8], &frame[..8], "prefix intact, payload garbled");
+    }
+
+    #[test]
+    fn partition_windows_blackhole_then_heal() {
+        let timeout = Duration::from_millis(50);
+        // Outbound window [1, 3): frames 1 and 2 die, 0 and 3 arrive.
+        let (coord, worker) = in_proc_pair();
+        let faulty = FaultyTransport::new(coord, vec![Fault::PartitionSend { from: 1, count: 2 }]);
+        for frame in [&b"a"[..], b"b", b"c", b"d"] {
+            faulty.send(frame).unwrap();
+        }
+        assert_eq!(worker.recv_timeout(timeout).unwrap().unwrap(), b"a");
+        assert_eq!(worker.recv_timeout(timeout).unwrap().unwrap(), b"d");
+        assert!(worker.recv_timeout(Duration::from_millis(5)).unwrap().is_none());
+
+        // Inbound window [0, 2): the first two frames die *in flight*
+        // (unlike a delay they never arrive), the third gets through.
+        let (coord, worker) = in_proc_pair();
+        let faulty = FaultyTransport::new(coord, vec![Fault::PartitionRecv { from: 0, count: 2 }]);
+        for frame in [&b"x"[..], b"y", b"z"] {
+            worker.send(frame).unwrap();
+        }
+        assert!(faulty.recv_timeout(timeout).unwrap().is_none());
+        assert!(faulty.recv_timeout(timeout).unwrap().is_none());
+        assert_eq!(faulty.recv_timeout(timeout).unwrap().unwrap(), b"z");
     }
 }

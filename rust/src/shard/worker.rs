@@ -22,8 +22,9 @@ use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
-use crate::api::{OtProblem, ResultEnvelope, TaskEnvelope};
+use crate::api::{OtProblem, ResultEnvelope, TaskEnvelope, PLAN_FORMAT_MAJOR};
 use crate::error::{Error, Result};
+use crate::runtime::wire::kinds;
 use crate::runtime::WireDoc;
 
 use super::transport::{TcpTransport, Transport};
@@ -42,6 +43,14 @@ pub struct WorkerOptions {
     /// From the nth received task on (1-based), keep solving but never
     /// send another frame — results *and* pongs go dark.
     pub mute_on_task: Option<usize>,
+    /// Sleep this long before solving the nth task (1-based): a
+    /// slow-but-alive straggler. Pongs keep flowing (the receive loop is
+    /// unaffected), so this exercises hedging, not liveness.
+    pub slow_on_task: Option<(usize, Duration)>,
+    /// Plan format major to advertise in the hello handshake instead of
+    /// this build's [`PLAN_FORMAT_MAJOR`] — a scripted mixed-version
+    /// rejoiner, which the coordinator must refuse typed.
+    pub hello_plan_major: Option<u64>,
 }
 
 /// Solve one task envelope. Public so tests can run the exact worker
@@ -61,14 +70,17 @@ pub fn execute_task(worker_id: u64, env: &TaskEnvelope) -> ResultEnvelope {
 /// the calling thread; spawn it.
 pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOptions) {
     let muted = Arc::new(AtomicBool::new(false));
-    let (task_tx, task_rx) = mpsc::channel::<TaskEnvelope>();
+    let (task_tx, task_rx) = mpsc::channel::<(TaskEnvelope, Option<Duration>)>();
     let solver = {
         let transport = Arc::clone(&transport);
         let muted = Arc::clone(&muted);
         thread::Builder::new()
             .name(format!("ls-shard-solve-{worker_id}"))
             .spawn(move || {
-                while let Ok(env) = task_rx.recv() {
+                while let Ok((env, delay)) = task_rx.recv() {
+                    if let Some(delay) = delay {
+                        thread::sleep(delay); // scripted straggler
+                    }
                     let result = execute_task(worker_id, &env);
                     if !muted.load(Ordering::SeqCst) && transport.send(&result.encode()).is_err()
                     {
@@ -80,6 +92,7 @@ pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOpt
     };
 
     let mut tasks_seen = 0usize;
+    let mut draining = false;
     loop {
         let frame = match transport.recv_timeout(POLL_INTERVAL) {
             Ok(Some(frame)) => frame,
@@ -91,11 +104,25 @@ pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOpt
         // answer.
         let Ok(doc) = WireDoc::decode(&frame) else { continue };
         match doc.kind() {
-            "ping" => {
+            kinds::PING => {
                 if !muted.load(Ordering::SeqCst) {
-                    let mut pong = WireDoc::with_kind("pong");
+                    let mut pong = WireDoc::with_kind(kinds::PONG);
                     pong.set_u64("worker_id", worker_id);
                     if transport.send(&pong.encode()).is_err() {
+                        break;
+                    }
+                }
+            }
+            kinds::HELLO => {
+                // Rejoin handshake: echo the plan format major this build
+                // executes (or a scripted impostor version) so the
+                // coordinator can refuse mixed-version rejoiners typed.
+                if !muted.load(Ordering::SeqCst) {
+                    let mut hello = WireDoc::hello(
+                        opts.hello_plan_major.unwrap_or(PLAN_FORMAT_MAJOR as u64),
+                    );
+                    hello.set_u64("worker_id", worker_id);
+                    if transport.send(&hello.encode()).is_err() {
                         break;
                     }
                 }
@@ -108,9 +135,13 @@ pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOpt
                 if opts.mute_on_task == Some(tasks_seen) {
                     muted.store(true, Ordering::SeqCst);
                 }
+                let delay = match opts.slow_on_task {
+                    Some((nth, delay)) if nth == tasks_seen => Some(delay),
+                    _ => None,
+                };
                 match TaskEnvelope::decode(&frame) {
                     Ok(env) => {
-                        if task_tx.send(env).is_err() {
+                        if task_tx.send((env, delay)).is_err() {
                             break;
                         }
                     }
@@ -132,16 +163,31 @@ pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOpt
                     }
                 }
             }
-            "shutdown" => break,
+            kinds::DRAIN => {
+                // Graceful drain: stop accepting, finish queued solves
+                // (below, via the solver join), then acknowledge.
+                draining = true;
+                break;
+            }
+            kinds::SHUTDOWN => break,
             _ => {}
         }
     }
     drop(task_tx);
     let _ = solver.join();
+    if draining && !muted.load(Ordering::SeqCst) {
+        // Every queued task has now been solved and sent; tell the
+        // coordinator this exit was clean (best effort — a dead link at
+        // this point just looks like a crash, which drain tolerates).
+        let mut ack = WireDoc::with_kind(kinds::DRAIN_ACK);
+        ack.set_u64("worker_id", worker_id);
+        let _ = transport.send(&ack.encode());
+    }
 }
 
 /// Serve exactly one coordinator connection on an accepted listener
-/// (the cross-host entry point, used by `serve-shard` in the CLI).
+/// (the cross-host entry point; the `shard-worker` CLI subcommand loops
+/// over accepted connections itself so it can serve forever).
 pub fn serve_listener(
     listener: std::net::TcpListener,
     worker_id: u64,
@@ -154,16 +200,46 @@ pub fn serve_listener(
     Ok(())
 }
 
+/// Serve a bounded sequence of coordinator connections: one
+/// [`run_worker`] life per entry in `opts_per_conn`, in order. This is
+/// what makes a TCP worker *rejoinable* — after a crash or drain of one
+/// connection the listener accepts the coordinator's reconnect and the
+/// next life begins (with its own scripted faults, in tests).
+pub fn serve_connections(
+    listener: std::net::TcpListener,
+    worker_id: u64,
+    opts_per_conn: Vec<WorkerOptions>,
+) -> Result<()> {
+    for opts in opts_per_conn {
+        let (stream, peer) = listener.accept().map_err(Error::Io)?;
+        let transport: Arc<dyn Transport> = Arc::new(TcpTransport::from_stream(stream)?);
+        let _ = peer; // observability hooks could log this
+        run_worker(worker_id, transport, opts);
+    }
+    Ok(())
+}
+
 /// Spawn a loopback TCP worker on an ephemeral port (test/bench helper).
 /// Returns the address to hand to `ShardCoordinator::connect` and the
 /// serving thread's handle.
 pub fn spawn_tcp_worker(worker_id: u64) -> Result<(std::net::SocketAddr, JoinHandle<()>)> {
+    spawn_tcp_worker_with(worker_id, vec![WorkerOptions::default()])
+}
+
+/// [`spawn_tcp_worker`] with scripted per-connection options: the worker
+/// serves `opts_per_conn.len()` sequential coordinator connections (life
+/// N uses `opts_per_conn[N]`), then exits. Lets tests script "crash on
+/// first life, clean on rejoin".
+pub fn spawn_tcp_worker_with(
+    worker_id: u64,
+    opts_per_conn: Vec<WorkerOptions>,
+) -> Result<(std::net::SocketAddr, JoinHandle<()>)> {
     let listener = super::transport::loopback_listener()?;
     let addr = listener.local_addr().map_err(Error::Io)?;
     let handle = thread::Builder::new()
         .name(format!("ls-shard-tcp-{worker_id}"))
         .spawn(move || {
-            let _ = serve_listener(listener, worker_id, WorkerOptions::default());
+            let _ = serve_connections(listener, worker_id, opts_per_conn);
         })
         .expect("spawn tcp shard worker");
     Ok((addr, handle))
@@ -248,6 +324,32 @@ mod tests {
         assert_eq!(ResultEnvelope::decode(&frame).unwrap().task_id, 5);
 
         drop(coord);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn hello_handshake_and_graceful_drain_ack() {
+        let (coord, worker_end) = in_proc_pair();
+        let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
+        let handle = thread::spawn(move || run_worker(4, worker_end, WorkerOptions::default()));
+
+        // Handshake: the worker echoes this build's plan format major.
+        coord.send(&WireDoc::hello(PLAN_FORMAT_MAJOR as u64).encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let hello = WireDoc::decode(&frame).unwrap();
+        assert_eq!(hello.kind(), kinds::HELLO);
+        assert_eq!(hello.get_u64("plan_v").unwrap(), PLAN_FORMAT_MAJOR as u64);
+        assert_eq!(hello.get_u64("worker_id").unwrap(), 4);
+
+        // Drain with a task still queued: the result must arrive before
+        // the ack — the drain orphans nothing.
+        let task = sample_task(9);
+        coord.send(&task.encode()).unwrap();
+        coord.send(&WireDoc::with_kind(kinds::DRAIN).encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(ResultEnvelope::decode(&frame).unwrap().task_id, 9);
+        let frame = coord.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(WireDoc::decode(&frame).unwrap().kind(), kinds::DRAIN_ACK);
         handle.join().unwrap();
     }
 

@@ -1,0 +1,489 @@
+//! Chaos soak for the self-healing shard layer: multi-round seeded
+//! storms of kills, flaps, stragglers, partitions, rejoins, overload,
+//! and drains — with one invariant throughout: **every answered pair is
+//! bitwise identical to the single-host fused solve**, and everything
+//! unanswered fails typed (`Service` / `Wire` / `Overloaded`), never a
+//! panic, never a wrong answer.
+//!
+//! Soak matrix (the healing rungs on top of
+//! `rust/tests/shard_fault_injection.rs`'s classic ladder):
+//!
+//! | scenario                    | mechanism                          | expected                 |
+//! |-----------------------------|------------------------------------|--------------------------|
+//! | kill/flap/rejoin storm      | `inject_at` per incarnation        | rejoin, bitwise          |
+//! | straggler hedging           | `Fault::SlowOnTask` + hedge cfg    | hedge win, bitwise       |
+//! | partition then heal         | `Fault::Partition{Send,Recv}`      | retry absorbs, bitwise   |
+//! | overload                    | `max_inflight_groups` exceeded     | typed `Overloaded` shed  |
+//! | graceful drain mid-flight   | `drain()` racing a live group      | zero orphans, then typed |
+//! | TCP worker crash + rejoin   | `spawn_tcp_worker_with` lives      | re-dial, bitwise         |
+//! | mixed-version rejoiner      | `Fault::AdvertiseVersion`          | refused typed, survivors |
+//! | seeded random soak rounds   | `FaultPlan::random` per round      | bitwise, every round     |
+//!
+//! Every schedule is deterministic given its seed, so a red run replays
+//! exactly: `cargo test -q --test shard_chaos_soak` (or `make
+//! shard-soak` for both SIMD arms).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use linear_sinkhorn::api::{DivergenceReport, OtProblem, Plan, PLAN_FORMAT_MAJOR};
+use linear_sinkhorn::data::{self, Measure};
+use linear_sinkhorn::error::{Error, Result};
+use linear_sinkhorn::metrics::Registry;
+use linear_sinkhorn::rng::Rng;
+use linear_sinkhorn::shard::worker::{spawn_tcp_worker, spawn_tcp_worker_with};
+use linear_sinkhorn::shard::{Fault, FaultPlan, ShardConfig, ShardCoordinator, WorkerOptions};
+
+// ---------------------------------------------------------------- fixture
+
+fn fixture(pairs: usize) -> (Measure, Measure, Vec<(Vec<f32>, Vec<f32>)>, Plan) {
+    let mut rng = Rng::seed_from(61);
+    let (mu, nu) = data::gaussian_blobs(14, &mut rng);
+    let mut weights = Vec::with_capacity(pairs);
+    for _ in 0..pairs {
+        let mut a = rng.normal_vec(mu.len());
+        let mut b = rng.normal_vec(nu.len());
+        for w in a.iter_mut().chain(b.iter_mut()) {
+            *w = w.abs() + 0.05;
+        }
+        let (sa, sb) = (a.iter().sum::<f32>(), b.iter().sum::<f32>());
+        a.iter_mut().for_each(|w| *w /= sa);
+        b.iter_mut().for_each(|w| *w /= sb);
+        weights.push((a, b));
+    }
+    let refs: Vec<(&[f32], &[f32])> =
+        weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+    let plan = OtProblem::new(&mu, &nu)
+        .epsilon(0.5)
+        .rank(8)
+        .seed(31)
+        .weight_pairs(&refs)
+        .plan()
+        .unwrap();
+    (mu, nu, weights, plan)
+}
+
+fn as_refs(weights: &[(Vec<f32>, Vec<f32>)]) -> Vec<(&[f32], &[f32])> {
+    weights.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect()
+}
+
+fn local_baseline(
+    mu: &Measure,
+    nu: &Measure,
+    refs: &[(&[f32], &[f32])],
+    plan: &Plan,
+) -> Vec<Result<DivergenceReport>> {
+    OtProblem::new(mu, nu).weight_pairs(refs).divergence_all_planned(plan)
+}
+
+fn assert_bitwise(shard: &[Result<DivergenceReport>], local: &[Result<DivergenceReport>]) {
+    assert_eq!(shard.len(), local.len());
+    for (i, (s, l)) in shard.iter().zip(local).enumerate() {
+        let s = s.as_ref().unwrap_or_else(|e| panic!("pair {i} failed over shards: {e}"));
+        let l = l.as_ref().expect("local baseline must succeed");
+        assert_eq!(s.divergence.to_bits(), l.divergence.to_bits(), "pair {i} divergence");
+        assert_eq!(s.xy.objective.to_bits(), l.xy.objective.to_bits(), "pair {i} xy");
+        assert_eq!(s.xx.objective.to_bits(), l.xx.objective.to_bits(), "pair {i} xx");
+        assert_eq!(s.yy.objective.to_bits(), l.yy.objective.to_bits(), "pair {i} yy");
+        assert_eq!(s.xy.u, l.xy.u, "pair {i} duals");
+        assert_eq!(s.xy.iterations, l.xy.iterations, "pair {i} iterations");
+    }
+}
+
+/// The soak baseline config: fast liveness, bounded retries, healing
+/// rungs (hedging / rejoin) pinned off by default — each scenario turns
+/// on exactly the rung it soaks.
+fn soak_cfg() -> ShardConfig {
+    ShardConfig {
+        heartbeat_interval: Duration::from_millis(10),
+        heartbeat_timeout: Duration::from_millis(300),
+        task_deadline: Duration::from_millis(800),
+        max_retries: 3,
+        retry_backoff: Duration::from_millis(5),
+        hedge_fraction: 0.0,
+        max_inflight_groups: 16,
+        rejoin_backoff: Duration::from_secs(60),
+        ..ShardConfig::default()
+    }
+}
+
+/// Pump rejoins until `want` workers are live (or a generous deadline
+/// passes — the assertion then reports the real count).
+fn heal(shard: &ShardCoordinator, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while shard.live_workers() < want && Instant::now() < deadline {
+        shard.pump_rejoins();
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ------------------------------------------------------ kill/flap/rejoin
+
+#[test]
+fn kill_flap_rejoin_storm_stays_bitwise_every_round() {
+    let (mu, nu, weights, plan) = fixture(6);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0 flaps: crashes on its first task in life 0 AND again in
+    // life 1, serving cleanly only from life 2. Worker 1 crashes once.
+    // Worker 2 never fails.
+    let faults = FaultPlan::new(71)
+        .inject_at(0, 0, Fault::KillOnTask { nth: 1 })
+        .inject_at(0, 1, Fault::KillOnTask { nth: 1 })
+        .inject_at(1, 0, Fault::KillOnTask { nth: 1 });
+    let mut cfg = soak_cfg();
+    cfg.rejoin_backoff = Duration::from_millis(150);
+    let shard = ShardCoordinator::in_process_with_faults(3, cfg, metrics.clone(), &faults);
+
+    // Round 0: two of three workers die mid-group; the survivor absorbs
+    // their chunks through the retry ladder, bit for bit.
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert!(metrics.counter("service.shard.worker_deaths").get() >= 2);
+    assert!(shard.live_workers() >= 1);
+
+    // Heal: both dead slots rejoin after the backoff.
+    std::thread::sleep(Duration::from_millis(160));
+    heal(&shard, 3);
+    assert_eq!(shard.live_workers(), 3, "fleet must heal to full strength");
+
+    // Round 1: worker 0's rejoined life crashes again (the flap); the
+    // other two carry the round, still bitwise.
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+
+    // Heal again: worker 0's second rejoin is its clean life.
+    std::thread::sleep(Duration::from_millis(160));
+    heal(&shard, 3);
+    assert_eq!(shard.live_workers(), 3);
+    assert!(
+        metrics.counter("service.shard.rejoins").get() >= 3,
+        "w0 rejoined twice and w1 once: {}",
+        metrics.render()
+    );
+
+    // Round 2: a fully healed fleet serves with no new faults.
+    let deaths_before = metrics.counter("service.shard.worker_deaths").get();
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert_eq!(metrics.counter("service.shard.worker_deaths").get(), deaths_before);
+    assert_eq!(shard.live_workers(), 3);
+}
+
+// ------------------------------------------------------------- hedging
+
+#[test]
+fn straggler_hedging_wins_without_changing_bits() {
+    let (mu, nu, weights, plan) = fixture(1);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0 sits on its first solve for 800 ms while answering pings;
+    // with a 2 s deadline and hedge fraction 0.1, the idle worker 1 gets
+    // an identical copy after ~200 ms and wins the race. The primary is
+    // never declared dead and no retry is burned — hedging is purely a
+    // latency rung.
+    let faults = FaultPlan::new(72)
+        .inject(0, Fault::SlowOnTask { nth: 1, delay: Duration::from_millis(800) });
+    let mut cfg = soak_cfg();
+    cfg.task_deadline = Duration::from_secs(2);
+    cfg.hedge_fraction = 0.1;
+    let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+
+    let start = Instant::now();
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    let elapsed = start.elapsed();
+    assert_bitwise(&got, &local);
+    assert!(metrics.counter("service.shard.hedged_tasks").get() >= 1, "{}", metrics.render());
+    assert!(metrics.counter("service.shard.hedge_wins").get() >= 1, "{}", metrics.render());
+    assert_eq!(metrics.counter("service.shard.retries").get(), 0);
+    assert_eq!(metrics.counter("service.shard.worker_deaths").get(), 0);
+    assert_eq!(shard.live_workers(), 2);
+    assert!(
+        elapsed < Duration::from_millis(800),
+        "the hedge must beat the {} ms straggler (took {elapsed:?})",
+        800
+    );
+}
+
+// ------------------------------------------------------------ partitions
+
+#[test]
+fn partition_windows_heal_via_retry_bitwise() {
+    let (mu, nu, weights, plan) = fixture(2);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    // Outbound partition: worker 0's task frame dies in flight (the
+    // coordinator believes it sent). The task deadline re-scatters to
+    // worker 1.
+    let metrics = Arc::new(Registry::default());
+    let faults = FaultPlan::new(73).inject(0, Fault::PartitionSend { from: 0, count: 1 });
+    let mut cfg = soak_cfg();
+    cfg.task_deadline = Duration::from_millis(250);
+    let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert!(metrics.counter("service.shard.retries").get() >= 1, "{}", metrics.render());
+
+    // Inbound partition: worker 0 solves and answers, but the result dies
+    // in the window (read off the link, never delivered — unlike a
+    // delay). Same healing: deadline, retry, bitwise.
+    let metrics = Arc::new(Registry::default());
+    let faults = FaultPlan::new(74).inject(0, Fault::PartitionRecv { from: 0, count: 1 });
+    let mut cfg = soak_cfg();
+    cfg.task_deadline = Duration::from_millis(250);
+    let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert!(metrics.counter("service.shard.retries").get() >= 1, "{}", metrics.render());
+}
+
+// -------------------------------------------------------------- overload
+
+#[test]
+fn overload_sheds_typed_and_recovers() {
+    let (mu, nu, weights, plan) = fixture(1);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Budget of one in-flight group, and a worker slow enough to hold
+    // that budget while we poke the admission gate from outside.
+    let faults = FaultPlan::new(75)
+        .inject(0, Fault::SlowOnTask { nth: 1, delay: Duration::from_millis(400) });
+    let mut cfg = soak_cfg();
+    cfg.task_deadline = Duration::from_secs(5);
+    cfg.max_inflight_groups = 1;
+    let shard = Arc::new(ShardCoordinator::in_process_with_faults(
+        1,
+        cfg,
+        metrics.clone(),
+        &faults,
+    ));
+
+    let slow = {
+        let shard = Arc::clone(&shard);
+        let (mu, nu, plan) = (mu.clone(), nu.clone(), plan.clone());
+        let weights = weights.clone();
+        std::thread::spawn(move || {
+            let refs = as_refs(&weights);
+            shard.solve_group(&plan, &mu, &nu, &refs, None, &[])
+        })
+    };
+    // Wait until the slow group is actually admitted...
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while shard.inflight_groups() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(shard.inflight_groups(), 1, "slow group must be in flight");
+    // ...then the budget is full: the next group sheds typed, instantly,
+    // without touching a worker.
+    let shed = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    for slot in &shed {
+        assert!(
+            matches!(slot, Err(Error::Overloaded(_))),
+            "expected typed overload shed, got {slot:?}"
+        );
+    }
+    assert!(metrics.counter("service.shard.shed_groups").get() >= 1);
+
+    // The shed never corrupted the in-flight group: it completes bitwise.
+    let slow = slow.join().expect("slow solver thread");
+    assert_bitwise(&slow, &local);
+    assert_eq!(shard.inflight_groups(), 0);
+
+    // And with the budget free again, the coordinator serves once more.
+    let again = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&again, &local);
+}
+
+// ----------------------------------------------------------------- drain
+
+#[test]
+fn drain_mid_flight_finishes_work_then_refuses() {
+    let (mu, nu, weights, plan) = fixture(2);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // One straggling solve keeps a group in flight while drain() arrives:
+    // phase 1 must wait it out (zero orphaned tasks), then the workers
+    // acknowledge and exit.
+    let faults = FaultPlan::new(76)
+        .inject(0, Fault::SlowOnTask { nth: 1, delay: Duration::from_millis(300) });
+    let mut cfg = soak_cfg();
+    cfg.task_deadline = Duration::from_secs(5);
+    let shard = Arc::new(ShardCoordinator::in_process_with_faults(
+        2,
+        cfg,
+        metrics.clone(),
+        &faults,
+    ));
+
+    let inflight = {
+        let shard = Arc::clone(&shard);
+        let (mu, nu, plan) = (mu.clone(), nu.clone(), plan.clone());
+        let weights = weights.clone();
+        std::thread::spawn(move || {
+            let refs = as_refs(&weights);
+            shard.solve_group(&plan, &mu, &nu, &refs, None, &[])
+        })
+    };
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while shard.inflight_groups() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(shard.inflight_groups(), 1);
+
+    let acked = shard.drain(Duration::from_secs(10)).expect("drain within deadline");
+    assert_eq!(acked, 2, "both workers must acknowledge the drain");
+    assert_eq!(metrics.counter("service.shard.drained_workers").get(), 2);
+
+    // The in-flight group was never orphaned: every pair answered,
+    // bitwise.
+    let inflight = inflight.join().expect("in-flight solver thread");
+    assert_bitwise(&inflight, &local);
+
+    // Drained is terminal: new groups refuse typed, nobody rejoins.
+    let after = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert!(matches!(&after[0], Err(Error::Service(_))), "{:?}", after[0]);
+    assert_eq!(shard.pump_rejoins(), 0);
+    assert_eq!(shard.live_workers(), 0);
+    assert_eq!(
+        metrics.counter("service.shard.worker_deaths").get(),
+        0,
+        "drain retires workers, it does not kill them"
+    );
+}
+
+// ------------------------------------------------------------ TCP rejoin
+
+#[test]
+fn tcp_worker_crashes_then_rejoins_over_a_fresh_connection() {
+    let (mu, nu, weights, plan) = fixture(2);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    // Worker 0 serves two connection lives: the first crashes on its
+    // first task, the second is clean — exactly what a supervised
+    // `shard-worker` process restart looks like from the coordinator.
+    let crashy = WorkerOptions { exit_on_task: Some(1), ..WorkerOptions::default() };
+    let (addr_a, join_a) =
+        spawn_tcp_worker_with(0, vec![crashy, WorkerOptions::default()]).unwrap();
+    let (addr_b, join_b) = spawn_tcp_worker(1).unwrap();
+
+    let metrics = Arc::new(Registry::default());
+    let mut cfg = soak_cfg();
+    cfg.rejoin_backoff = Duration::from_millis(20);
+    let shard = ShardCoordinator::connect(
+        &[addr_a.to_string(), addr_b.to_string()],
+        cfg,
+        metrics.clone(),
+    )
+    .unwrap();
+
+    // Round 0: the crash drops the link; the survivor absorbs the chunk.
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert!(metrics.counter("service.shard.worker_deaths").get() >= 1);
+
+    // Heal: the coordinator re-dials the same roster address; the
+    // listener's second life answers the handshake and rejoins.
+    heal(&shard, 2);
+    assert_eq!(shard.live_workers(), 2, "TCP worker must rejoin: {}", metrics.render());
+    assert!(metrics.counter("service.shard.rejoins").get() >= 1);
+
+    // Round 1: the rejoined fleet serves bitwise again.
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+
+    drop(shard); // shutdown frames / closed links end both workers' lives
+    join_a.join().unwrap();
+    join_b.join().unwrap();
+}
+
+// --------------------------------------------------------- mixed version
+
+#[test]
+fn mixed_version_rejoiner_is_refused_typed_and_survivors_serve() {
+    let (mu, nu, weights, plan) = fixture(2);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0 crashes, and its rejoined life comes back speaking a
+    // different plan format major — a half-upgraded fleet. The handshake
+    // must refuse it (it would mis-decode tasks), count the failure, and
+    // keep serving on the survivor.
+    let faults = FaultPlan::new(77)
+        .inject_at(0, 0, Fault::KillOnTask { nth: 1 })
+        .inject_at(0, 1, Fault::AdvertiseVersion { major: PLAN_FORMAT_MAJOR as u64 + 1 });
+    let mut cfg = soak_cfg();
+    cfg.rejoin_backoff = Duration::from_millis(20);
+    let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+
+    // Give the rejoin machinery several chances: the wrong-version life
+    // must never be admitted.
+    for _ in 0..5 {
+        std::thread::sleep(Duration::from_millis(25));
+        shard.pump_rejoins();
+    }
+    assert_eq!(shard.live_workers(), 1, "mixed-version rejoiner must stay out");
+    assert!(
+        metrics.counter("service.shard.rejoin_failures").get() >= 1,
+        "{}",
+        metrics.render()
+    );
+    assert_eq!(metrics.counter("service.shard.rejoins").get(), 0);
+
+    // The surviving worker keeps answering, bitwise.
+    let again = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&again, &local);
+}
+
+// ------------------------------------------------------------ seeded soak
+
+#[test]
+fn seeded_random_soak_rounds_stay_bitwise() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    // Multi-round soak: each round layers a fresh seeded schedule of
+    // survivable message faults (drops, delays, duplicates) over a kill
+    // + rejoin cycle. Whatever the round throws, every answered pair
+    // must carry the single-host bits.
+    for round in 0..4u64 {
+        let faults = FaultPlan::random(100 + round, 2, 3)
+            .inject_at(0, 0, Fault::KillOnTask { nth: 1 });
+        let mut cfg = soak_cfg();
+        cfg.max_retries = 5; // kills + random drops stack; keep headroom
+        cfg.task_deadline = Duration::from_millis(400);
+        cfg.rejoin_backoff = Duration::from_millis(30);
+        let metrics = Arc::new(Registry::default());
+        let shard =
+            ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+
+        let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&got, &local);
+
+        // The killed worker heals and the next group uses the full
+        // fleet, still bitwise.
+        heal(&shard, 2);
+        assert_eq!(shard.live_workers(), 2, "round {round}: {}", metrics.render());
+        let again = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+        assert_bitwise(&again, &local);
+        assert!(
+            metrics.counter("service.shard.rejoins").get() >= 1,
+            "round {round}: {}",
+            metrics.render()
+        );
+    }
+}

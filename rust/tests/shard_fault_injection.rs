@@ -14,9 +14,12 @@
 //! | late result past deadline | `Fault::DelayRecv` + deadline | retry, bitwise |
 //! | corrupt result frame      | `Fault::CorruptRecv`        | typed `Wire`   |
 //! | all workers dead          | `Fault::KillOnTask` on all  | typed `Service`|
+//! | slow solve, live worker   | `Fault::SlowOnTask`         | no false death |
 //!
 //! Every schedule is deterministic (`shard::testing::FaultPlan`), so a
-//! failure replays exactly.
+//! failure replays exactly. The multi-round membership faults (rejoin
+//! storms, flapping workers, partitions that heal, hedging races,
+//! overload shed, drain) live in `rust/tests/shard_chaos_soak.rs`.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -93,7 +96,9 @@ fn assert_bitwise(shard: &[Result<DivergenceReport>], local: &[Result<Divergence
 }
 
 /// A config with no accidental timeouts: faults fire only where the test
-/// scripts them.
+/// scripts them. Hedging and rejoin are pinned off so this suite's
+/// counter assertions see exactly the classic retry ladder (the chaos
+/// soak exercises the healing rungs).
 fn calm_cfg() -> ShardConfig {
     ShardConfig {
         heartbeat_interval: Duration::from_secs(10),
@@ -101,6 +106,9 @@ fn calm_cfg() -> ShardConfig {
         task_deadline: Duration::from_secs(60),
         max_retries: 2,
         retry_backoff: Duration::from_millis(5),
+        hedge_fraction: 0.0,
+        rejoin_backoff: Duration::from_secs(60),
+        ..ShardConfig::default()
     }
 }
 
@@ -184,6 +192,9 @@ fn heartbeat_timeout_detects_hung_worker() {
         task_deadline: Duration::from_secs(60),
         max_retries: 2,
         retry_backoff: Duration::from_millis(5),
+        hedge_fraction: 0.0,
+        rejoin_backoff: Duration::from_secs(60),
+        ..ShardConfig::default()
     };
     let faults = FaultPlan::new(2).inject(0, Fault::MuteOnTask { nth: 1 });
     let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
@@ -253,6 +264,9 @@ fn late_result_past_deadline_forces_retry_and_stays_bitwise() {
         task_deadline: Duration::from_millis(150),
         max_retries: 2,
         retry_backoff: Duration::from_millis(5),
+        hedge_fraction: 0.0,
+        rejoin_backoff: Duration::from_secs(60),
+        ..ShardConfig::default()
     };
     let faults = FaultPlan::new(5)
         .inject(0, Fault::DelayRecv { nth: 0, delay: Duration::from_millis(600) });
@@ -261,6 +275,46 @@ fn late_result_past_deadline_forces_retry_and_stays_bitwise() {
     assert_bitwise(&got, &local);
     assert!(metrics.counter("service.shard.retries").get() >= 1, "deadline must fire");
     assert!(metrics.counter("service.shard.rescattered_pairs").get() >= 1);
+}
+
+#[test]
+fn slow_solve_answers_pings_and_is_not_falsely_declared_dead() {
+    let (mu, nu, weights, plan) = fixture(4);
+    let refs = as_refs(&weights);
+    let local = local_baseline(&mu, &nu, &refs, &plan);
+
+    let metrics = Arc::new(Registry::default());
+    // Worker 0 sits on its first solve for 600 ms — three times the
+    // heartbeat timeout — but its receive loop keeps answering pings the
+    // whole time. Liveness must distinguish "slow" from "dead": no false
+    // death, no retry, just a late (bitwise-identical) result. Hedging is
+    // pinned off so the speculative path cannot mask a false death.
+    let cfg = ShardConfig {
+        heartbeat_interval: Duration::from_millis(20),
+        heartbeat_timeout: Duration::from_millis(200),
+        task_deadline: Duration::from_secs(5),
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(5),
+        hedge_fraction: 0.0,
+        rejoin_backoff: Duration::from_secs(60),
+        ..ShardConfig::default()
+    };
+    let faults = FaultPlan::new(10)
+        .inject(0, Fault::SlowOnTask { nth: 1, delay: Duration::from_millis(600) });
+    let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics.clone(), &faults);
+    let got = shard.solve_group(&plan, &mu, &nu, &refs, None, &[]);
+    assert_bitwise(&got, &local);
+    assert_eq!(
+        metrics.counter("service.shard.worker_deaths").get(),
+        0,
+        "a ping-answering straggler must not be declared dead"
+    );
+    assert_eq!(metrics.counter("service.shard.retries").get(), 0);
+    assert_eq!(shard.live_workers(), 2);
+    assert!(
+        metrics.counter("service.shard.heartbeats").get() >= 1,
+        "the wait must actually have been bridged by heartbeats"
+    );
 }
 
 #[test]
@@ -281,6 +335,9 @@ fn random_survivable_fault_plans_preserve_bits() {
             task_deadline: Duration::from_millis(300),
             max_retries: 4,
             retry_backoff: Duration::from_millis(5),
+            hedge_fraction: 0.0,
+            rejoin_backoff: Duration::from_secs(60),
+            ..ShardConfig::default()
         };
         let metrics = Arc::new(Registry::default());
         let shard = ShardCoordinator::in_process_with_faults(2, cfg, metrics, &faults);
