@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-scalar shard-fault shard-soak doc doc-test examples fmt fmt-check clippy check artifacts perf bench-smoke clean
+.PHONY: all build test test-scalar shard-fault shard-soak stream doc doc-test examples fmt fmt-check clippy check artifacts perf bench-smoke clean
 
 all: build
 
@@ -50,6 +50,15 @@ shard-soak:
 	$(CARGO) test -q --test shard_chaos_soak
 	LINEAR_SINKHORN_SIMD=scalar $(CARGO) test -q --test shard_chaos_soak
 
+# The streaming-session equivalence suite under both SIMD dispatch arms:
+# incremental sessions must match from-scratch solves, zero-delta updates
+# and thread counts must be bitwise invisible, and sharded session
+# serving must answer with the local path's bits (CI runs this as the
+# `stream` job).
+stream:
+	$(CARGO) test -q --test streaming_equivalence
+	LINEAR_SINKHORN_SIMD=scalar $(CARGO) test -q --test streaming_equivalence
+
 # Rustdoc with warnings denied: broken intra-doc links fail the build, so
 # documentation drift (e.g. a citation of a section that no longer exists)
 # is caught here rather than in review.
@@ -68,7 +77,7 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-check: build test shard-fault shard-soak doc doc-test examples fmt-check clippy
+check: build test shard-fault shard-soak stream doc doc-test examples fmt-check clippy
 	@echo "check: OK"
 
 # AOT-lower the Pallas/JAX graphs to HLO text + manifest. The binary never
@@ -89,6 +98,7 @@ bench-smoke:
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench coordinator_throughput
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench anneal_iterations
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench tradeoff_headtohead
+	BENCH_SMOKE=1 BENCH_JSON=BENCH_ci.json $(CARGO) bench --bench streaming_updates
 
 clean:
 	$(CARGO) clean

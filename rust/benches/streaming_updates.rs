@@ -1,0 +1,160 @@
+//! Streaming-session update/query bench: warm-started incremental
+//! queries vs cold from-scratch solves under single-point churn.
+//!
+//! The EXPERIMENTS.md §Online updates anchor. Per round the table
+//! records, on one long-lived [`StreamingSession`]:
+//!   * `update` — wall clock of applying one single-point swap
+//!     (O(r·d): one feature row re-evaluated, nothing else touched),
+//!   * `warm`   — the incremental query's iteration count (dual
+//!     warm-started through the provenance remap),
+//!   * `cold`   — a from-scratch baseline: a fresh session opened on
+//!     the *same* snapshot with the *same* map, solved cold, so the
+//!     iteration gap is exactly what warm-starting buys,
+//!   * the relative objective deviation warm vs cold (same support,
+//!     same kernel — tolerance-level agreement expected).
+//!
+//! The acceptance bar is >= 5x fewer iterations for the warm query than
+//! the cold baseline for single-point swaps at n = 1e4, r = 128,
+//! eps = 1e-2.
+//!
+//! Run: `cargo bench --bench streaming_updates`
+//!
+//! Setting `BENCH_SMOKE=1` overrides every size knob with CI-scale
+//! values (the `bench-smoke` job's quick mode); setting
+//! `BENCH_JSON=<path>` additionally appends the table there in
+//! JSON-lines form (see `bench::Table::emit`).
+
+use linear_sinkhorn::bench::{fmt_secs, Table};
+use linear_sinkhorn::cli::ArgSpec;
+use linear_sinkhorn::metrics::Stopwatch;
+use linear_sinkhorn::prelude::*;
+
+fn main() {
+    let args = ArgSpec::new(
+        "streaming_updates",
+        "warm-started incremental session queries vs cold from-scratch solves",
+    )
+    .opt("n", "10000", "samples per cloud")
+    .opt("features", "128", "positive random features r")
+    .opt("eps", "0.01", "regularisation eps")
+    .opt("rounds", "8", "single-point-swap rounds (one warm query each)")
+    .opt("max-iters", "20000", "iteration cap per solve")
+    .opt("seed", "0", "RNG seed")
+    .opt("csv", "target/streaming_updates.csv", "csv output")
+    .parse();
+
+    // CI quick mode: small cloud, moderate eps — enough to smoke the
+    // update path, the warm/cold split, and the JSON artifact.
+    let smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (n, r, eps, rounds, max_iters) = if smoke {
+        println!("(BENCH_SMOKE: reduced sizes)");
+        (600, 48, 0.05, 4, 4000)
+    } else {
+        (
+            args.get_usize("n"),
+            args.get_usize("features"),
+            args.get_f64("eps"),
+            args.get_usize("rounds"),
+            args.get_usize("max-iters"),
+        )
+    };
+    let seed = args.get_u64("seed");
+    let mut rng = Rng::seed_from(seed);
+    let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+    let dim = mu.dim();
+
+    let cfg = SessionConfig {
+        sinkhorn: SinkhornConfig { epsilon: eps, max_iters, ..SinkhornConfig::default() },
+        rank: r,
+        seed,
+        solver_threads: 1,
+    };
+    let mut session = StreamingSession::new(&mu, &nu, cfg.clone()).expect("open session");
+
+    let mut t = Table::new(
+        "Streaming updates: warm incremental queries vs cold from-scratch (1-pt swap)",
+        &["round", "update", "warm iters", "cold iters", "speedup", "warm vs cold obj"],
+    );
+
+    // Round 0: the session's own cold solve (nothing to warm-start from).
+    let first = session.query().expect("initial query");
+    t.row(vec![
+        "0".into(),
+        "-".into(),
+        "-".into(),
+        first.iterations.to_string(),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    let mut warm_total = 0usize;
+    let mut cold_total = 0usize;
+    for round in 1..=rounds {
+        let sw = Stopwatch::start();
+        session
+            .update(&[SessionOp::SwapX {
+                index: rng.uniform_usize(n),
+                point: (0..dim).map(|_| rng.normal_f32()).collect(),
+                weight: 1.0 / n as f32,
+            }])
+            .expect("apply swap");
+        let update_secs = sw.elapsed_secs();
+
+        let warm = session.query().expect("warm query");
+        assert!(warm.warm_started, "a single swap must keep the dual warm");
+
+        // Cold baseline on the identical support: fresh session sharing
+        // the map Arc, so the only difference is the missing dual.
+        let (cmu, cnu) = session.state().snapshot();
+        let map = session.state().map().clone();
+        let mut scratch =
+            StreamingSession::with_map(&cmu, &cnu, map, cfg.clone()).expect("open scratch");
+        let cold = scratch.query().expect("cold query");
+
+        warm_total += warm.iterations;
+        cold_total += cold.iterations;
+        let rel = (warm.objective - cold.objective).abs() / cold.objective.abs().max(1e-12);
+        t.row(vec![
+            round.to_string(),
+            fmt_secs(update_secs),
+            warm.iterations.to_string(),
+            cold.iterations.to_string(),
+            format!("{:.2}x", cold.iterations as f64 / warm.iterations.max(1) as f64),
+            format!("{rel:.2e}"),
+        ]);
+    }
+
+    let speedup = cold_total as f64 / warm_total.max(1) as f64;
+    t.row(vec![
+        "total".into(),
+        "-".into(),
+        warm_total.to_string(),
+        cold_total.to_string(),
+        format!("{speedup:.2}x"),
+        "-".into(),
+    ]);
+    t.emit(Some(args.get_str("csv")));
+
+    // Raw update throughput: single-point swaps applied back to back,
+    // no query in between — the O(r·d) per-op cost in isolation.
+    let burst = if smoke { 2000 } else { 20000 };
+    let sw = Stopwatch::start();
+    for _ in 0..burst {
+        session
+            .update(&[SessionOp::SwapX {
+                index: rng.uniform_usize(n),
+                point: (0..dim).map(|_| rng.normal_f32()).collect(),
+                weight: 1.0 / n as f32,
+            }])
+            .expect("burst swap");
+    }
+    let secs = sw.elapsed_secs();
+    println!("\nupdate throughput: {burst} single-point swaps in {} ({:.0} ops/s)",
+        fmt_secs(secs),
+        burst as f64 / secs
+    );
+    println!(
+        "acceptance bar: warm >= 5x fewer iterations than cold for single-point swaps \
+         at n=10000, r=128, eps=1e-2 (EXPERIMENTS.md §Online updates); this run: {speedup:.2}x"
+    );
+}

@@ -33,13 +33,25 @@
 //! Envelope identity: results are matched to tasks by `task_id` alone, so
 //! a duplicated or re-scattered task yields interchangeable result frames
 //! — dedup at the gather site is safe by construction.
+//!
+//! Streaming sessions ride the same frames as a backward-compatible
+//! extension: a task may carry an optional [`SessionDelta`] (session
+//! identity, an op log or full-snapshot marker, and the coordinator's
+//! remapped warm dual as an f64 column), and the worker answers with a
+//! [`SessionResultEnvelope`] (`kind = "session_result"`) carrying the
+//! solved x-side dual back so the coordinator — the owner of all dual
+//! state — can warm-start the next query. Frames without a session
+//! extension are byte-identical to pre-session frames: the extra meta
+//! key and columns are only emitted when present.
 
 use crate::data::Measure;
 use crate::error::{Error, Result};
 use crate::features::GaussianFeatureMap;
 use crate::linalg::simd::SimdLevel;
 use crate::linalg::Mat;
+use crate::runtime::wire::kinds;
 use crate::runtime::{Json, WireDoc};
+use crate::session::SessionOp;
 
 use super::plan::Plan;
 use super::solution::{DivergenceReport, Solution};
@@ -69,6 +81,44 @@ pub struct TaskEnvelope {
     /// The exact feature map to solve with (see the module docs); `None`
     /// lets the worker refit from `plan.seed`.
     pub map: Option<GaussianFeatureMap>,
+    /// Streaming-session extension (see the module docs); `None` for
+    /// ordinary fuse-group tasks, whose frames stay byte-identical to
+    /// pre-session builds.
+    pub session: Option<SessionDelta>,
+}
+
+/// The session extension of a [`TaskEnvelope`]: everything a worker
+/// needs to bring its resident copy of session `session_id` from
+/// `base_version` to `version` and solve it.
+///
+/// Two shapes travel:
+///
+/// * **snapshot** (`snapshot = true`, `ops` empty): the envelope's
+///   `mu`/`nu` are the full support in the session's deterministic
+///   column layout and `map` is the session's exact feature map. Sent
+///   on first contact with a worker and whenever residency was lost —
+///   the unconditional fallback.
+/// * **delta** (`snapshot = false`): `ops` replay on the worker's
+///   resident state at `base_version`. The envelope's `mu`/`nu` are
+///   then empty placeholders — the resident support plus the op log
+///   fully determine the post-update state — keeping the frame O(ops),
+///   not O(n). The op points' dimension travels in the session meta
+///   (`dim`) so decode never leans on the placeholder measures.
+///
+/// `warm_alpha` is the coordinator's remapped previous dual and always
+/// ships when available: the worker never owns dual state, so local and
+/// sharded queries warm-start from the same bits by construction.
+#[derive(Clone, Debug)]
+pub struct SessionDelta {
+    pub session_id: u64,
+    /// Version the ops apply on top of (ignored for snapshots).
+    pub base_version: u64,
+    /// Version after applying `ops` — what the worker's residency table
+    /// records for the next delta.
+    pub version: u64,
+    pub snapshot: bool,
+    pub ops: Vec<SessionOp>,
+    pub warm_alpha: Option<Vec<f64>>,
 }
 
 impl TaskEnvelope {
@@ -106,6 +156,9 @@ impl TaskEnvelope {
             obj.insert("r".to_string(), Json::Num(map.anchors.rows() as f64));
             doc.set_json("map", Json::Obj(obj));
             doc.push_f32("map.anchors", map.anchors.data()).expect("fresh doc");
+        }
+        if let Some(session) = &self.session {
+            encode_session(&mut doc, session);
         }
         doc.encode()
     }
@@ -180,6 +233,10 @@ impl TaskEnvelope {
             }
             None => None,
         };
+        let session = match doc.meta.get("session") {
+            Some(meta) => Some(decode_session(meta, &doc)?),
+            None => None,
+        };
         Ok(TaskEnvelope {
             task_id: doc.get_u64("task_id")?,
             group_id: doc.get_u64("group_id")?,
@@ -189,8 +246,166 @@ impl TaskEnvelope {
             nu,
             pairs,
             map,
+            session,
         })
     }
+}
+
+/// Serialise a [`SessionDelta`] into the task doc: one `session` meta
+/// object (identity, versions, snapshot flag, op-dim, and the op log as
+/// compact `tag[:index]` strings) plus up to three optional columns —
+/// `session.ops.points` / `session.ops.weights` (the payloads of
+/// point-carrying ops, in op order) and `session.warm` (the remapped
+/// warm dual, f64 so the warm-start bits survive the hop).
+fn encode_session(doc: &mut WireDoc, session: &SessionDelta) {
+    let op_dim = session
+        .ops
+        .iter()
+        .find_map(|op| match op {
+            SessionOp::InsertX { point, .. }
+            | SessionOp::SwapX { point, .. }
+            | SessionOp::InsertY { point, .. }
+            | SessionOp::SwapY { point, .. } => Some(point.len()),
+            _ => None,
+        })
+        .unwrap_or(0);
+    let ops: Vec<Json> = session
+        .ops
+        .iter()
+        .map(|op| {
+            Json::Str(match op {
+                SessionOp::InsertX { .. } | SessionOp::InsertY { .. } => op.tag().to_string(),
+                SessionOp::EvictX { index }
+                | SessionOp::SwapX { index, .. }
+                | SessionOp::EvictY { index }
+                | SessionOp::SwapY { index, .. } => format!("{}:{index}", op.tag()),
+            })
+        })
+        .collect();
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("id".to_string(), Json::Str(session.session_id.to_string()));
+    obj.insert("base".to_string(), Json::Str(session.base_version.to_string()));
+    obj.insert("version".to_string(), Json::Str(session.version.to_string()));
+    obj.insert("snapshot".to_string(), Json::Bool(session.snapshot));
+    obj.insert("dim".to_string(), Json::Num(op_dim as f64));
+    obj.insert("ops".to_string(), Json::Arr(ops));
+    doc.set_json("session", Json::Obj(obj));
+    let mut points = Vec::new();
+    let mut weights = Vec::new();
+    for op in &session.ops {
+        match op {
+            SessionOp::InsertX { point, weight }
+            | SessionOp::SwapX { point, weight, .. }
+            | SessionOp::InsertY { point, weight }
+            | SessionOp::SwapY { point, weight, .. } => {
+                points.extend_from_slice(point);
+                weights.push(*weight);
+            }
+            SessionOp::EvictX { .. } | SessionOp::EvictY { .. } => {}
+        }
+    }
+    if !weights.is_empty() {
+        doc.push_f32("session.ops.points", &points).expect("fresh doc");
+        doc.push_f32("session.ops.weights", &weights).expect("fresh doc");
+    }
+    if let Some(alpha) = &session.warm_alpha {
+        doc.push_f64("session.warm", alpha).expect("fresh doc");
+    }
+}
+
+/// Inverse of [`encode_session`]. Strict about payload accounting: the
+/// op strings must consume `session.ops.points` / `.weights` exactly, so
+/// a truncated or padded frame fails typed instead of replaying a
+/// mis-sliced op log into a resident session.
+fn decode_session(meta: &Json, doc: &WireDoc) -> Result<SessionDelta> {
+    let get_u64 = |k: &str| -> Result<u64> {
+        meta.get(k)
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| Error::Wire(format!("session meta missing u64 `{k}`")))
+    };
+    let snapshot = match meta.get("snapshot") {
+        Some(Json::Bool(b)) => *b,
+        _ => return Err(Error::Wire("session meta missing `snapshot`".into())),
+    };
+    let dim = meta
+        .get("dim")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Wire("session meta missing `dim`".into()))?;
+    let tags = match meta.get("ops") {
+        Some(Json::Arr(items)) => items,
+        _ => return Err(Error::Wire("session meta missing `ops`".into())),
+    };
+    let (points, weights) = if doc.has_col("session.ops.weights") {
+        (doc.f32s("session.ops.points")?, doc.f32s("session.ops.weights")?)
+    } else {
+        (&[][..], &[][..])
+    };
+    let mut at = 0usize;
+    let mut take = |what: &str| -> Result<(Vec<f32>, f32)> {
+        if (at + 1) * dim > points.len() || at + 1 > weights.len() {
+            return Err(Error::Wire(format!("session op `{what}` payload truncated")));
+        }
+        let point = points[at * dim..(at + 1) * dim].to_vec();
+        let weight = weights[at];
+        at += 1;
+        Ok((point, weight))
+    };
+    let mut ops = Vec::with_capacity(tags.len());
+    for tag in tags {
+        let tag =
+            tag.as_str().ok_or_else(|| Error::Wire("session op tag must be a string".into()))?;
+        let (kind, index) = match tag.split_once(':') {
+            Some((kind, idx)) => (
+                kind,
+                Some(idx.parse::<usize>().map_err(|_| {
+                    Error::Wire(format!("session op `{tag}` has a bad index"))
+                })?),
+            ),
+            None => (tag, None),
+        };
+        let need_index = || index.ok_or_else(|| Error::Wire(format!("op `{kind}` needs an index")));
+        ops.push(match kind {
+            "ix" => {
+                let (point, weight) = take(kind)?;
+                SessionOp::InsertX { point, weight }
+            }
+            "iy" => {
+                let (point, weight) = take(kind)?;
+                SessionOp::InsertY { point, weight }
+            }
+            "sx" => {
+                let index = need_index()?;
+                let (point, weight) = take(kind)?;
+                SessionOp::SwapX { index, point, weight }
+            }
+            "sy" => {
+                let index = need_index()?;
+                let (point, weight) = take(kind)?;
+                SessionOp::SwapY { index, point, weight }
+            }
+            "ex" => SessionOp::EvictX { index: need_index()? },
+            "ey" => SessionOp::EvictY { index: need_index()? },
+            other => return Err(Error::Wire(format!("unknown session op `{other}`"))),
+        });
+    }
+    if at != weights.len() || at * dim != points.len() {
+        return Err(Error::Wire(format!(
+            "session op payload mismatch: {at} ops consumed, {} weights / {} coords shipped",
+            weights.len(),
+            points.len()
+        )));
+    }
+    let warm_alpha =
+        if doc.has_col("session.warm") { Some(doc.f64s("session.warm")?.to_vec()) } else { None };
+    Ok(SessionDelta {
+        session_id: get_u64("id")?,
+        base_version: get_u64("base")?,
+        version: get_u64("version")?,
+        snapshot,
+        ops,
+        warm_alpha,
+    })
 }
 
 /// Status-string form of a per-pair failure: `error[{tag}]: {message}`.
@@ -391,6 +606,102 @@ impl ResultEnvelope {
     }
 }
 
+/// What a worker's streaming-session solve produced: the scalar
+/// diagnostics the coordinator folds into its [`crate::session::QueryReport`]
+/// plus the solved x-side dual `alpha` — the warm-start currency that
+/// travels back to the coordinator, the sole owner of dual state.
+#[derive(Clone, Debug)]
+pub struct SessionSolveOut {
+    pub objective: f64,
+    pub iterations: usize,
+    pub marginal_error: f64,
+    pub converged: bool,
+    pub escalated: bool,
+    pub warm_started: bool,
+    pub alpha: Vec<f64>,
+}
+
+/// The gather unit for a streaming-session solve (`kind =
+/// "session_result"`): one task, one solve, one dual. Failures travel
+/// as the same tagged status strings as [`ResultEnvelope`] pairs, so a
+/// worker that lost residency surfaces a typed error the coordinator
+/// answers with a snapshot retry.
+#[derive(Debug)]
+pub struct SessionResultEnvelope {
+    pub task_id: u64,
+    pub worker_id: u64,
+    pub result: Result<SessionSolveOut>,
+}
+
+/// Scalar layout of a session result's `scalars` column: objective,
+/// iterations, marginal error, converged, escalated, warm-started.
+const SESSION_SCALARS: usize = 6;
+
+impl SessionResultEnvelope {
+    pub fn new(task_id: u64, worker_id: u64, result: Result<SessionSolveOut>) -> Self {
+        SessionResultEnvelope { task_id, worker_id, result }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut doc = WireDoc::with_kind(kinds::SESSION_RESULT);
+        doc.set_u64("task_id", self.task_id);
+        doc.set_u64("worker_id", self.worker_id);
+        match &self.result {
+            Ok(out) => {
+                doc.set_str("status", "ok");
+                let scalars = [
+                    out.objective,
+                    out.iterations as f64,
+                    out.marginal_error,
+                    out.converged as u8 as f64,
+                    out.escalated as u8 as f64,
+                    out.warm_started as u8 as f64,
+                ];
+                doc.push_f64("scalars", &scalars).expect("fresh doc");
+                doc.push_f64("alpha", &out.alpha).expect("fresh doc");
+            }
+            Err(e) => doc.set_str("status", &encode_status_error(e)),
+        }
+        doc.encode()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<SessionResultEnvelope> {
+        let doc = WireDoc::decode(bytes)?;
+        if doc.kind() != kinds::SESSION_RESULT {
+            return Err(Error::Wire(format!(
+                "expected session result envelope, got `{}`",
+                doc.kind()
+            )));
+        }
+        let status = doc.get_str("status")?;
+        let result = if status == "ok" {
+            let scalars = doc.f64s("scalars")?;
+            if scalars.len() != SESSION_SCALARS {
+                return Err(Error::Wire(format!(
+                    "session scalars has {} entries, expected {SESSION_SCALARS}",
+                    scalars.len()
+                )));
+            }
+            Ok(SessionSolveOut {
+                objective: scalars[0],
+                iterations: scalars[1] as usize,
+                marginal_error: scalars[2],
+                converged: scalars[3] != 0.0,
+                escalated: scalars[4] != 0.0,
+                warm_started: scalars[5] != 0.0,
+                alpha: doc.f64s("alpha")?.to_vec(),
+            })
+        } else {
+            Err(decode_status_error(status))
+        };
+        Ok(SessionResultEnvelope {
+            task_id: doc.get_u64("task_id")?,
+            worker_id: doc.get_u64("worker_id")?,
+            result,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -416,6 +727,27 @@ mod tests {
             nu,
             pairs,
             map,
+            session: None,
+        }
+    }
+
+    fn sample_delta(snapshot: bool, warm: bool) -> SessionDelta {
+        SessionDelta {
+            session_id: 42,
+            base_version: 3,
+            version: 5,
+            snapshot,
+            ops: if snapshot {
+                Vec::new()
+            } else {
+                vec![
+                    SessionOp::InsertX { point: vec![0.25, -1.5], weight: 0.125 },
+                    SessionOp::EvictX { index: 7 },
+                    SessionOp::SwapY { index: 2, point: vec![3.0, 4.0], weight: 0.5 },
+                    SessionOp::EvictY { index: 0 },
+                ]
+            },
+            warm_alpha: warm.then(|| vec![0.1, -0.25, f64::from_bits(0x3FF123456789ABCD)]),
         }
     }
 
@@ -439,6 +771,92 @@ mod tests {
                 }
                 _ => panic!("map presence must round trip"),
             }
+        }
+    }
+
+    #[test]
+    fn session_extension_round_trips_and_is_absent_when_off() {
+        // No session → byte-identical to a pre-session frame (the meta
+        // key and columns are simply never emitted).
+        let plain = sample_task(false);
+        let frame = plain.encode();
+        assert!(!String::from_utf8_lossy(&frame[..200.min(frame.len())]).contains("session"));
+        for (snapshot, warm) in [(true, true), (false, true), (false, false)] {
+            let mut task = sample_task(false);
+            task.session = Some(sample_delta(snapshot, warm));
+            let back = TaskEnvelope::decode(&task.encode()).unwrap();
+            let (a, b) = (back.session.unwrap(), task.session.unwrap());
+            assert_eq!(a.session_id, b.session_id);
+            assert_eq!(a.base_version, b.base_version);
+            assert_eq!(a.version, b.version);
+            assert_eq!(a.snapshot, b.snapshot);
+            assert_eq!(a.ops.len(), b.ops.len());
+            for (x, y) in a.ops.iter().zip(&b.ops) {
+                assert_eq!(format!("{x:?}"), format!("{y:?}"));
+            }
+            match (&a.warm_alpha, &b.warm_alpha) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    // Warm-start currency must survive the hop bit-for-bit.
+                    let xb: Vec<u64> = x.iter().map(|v| v.to_bits()).collect();
+                    let yb: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(xb, yb);
+                }
+                _ => panic!("warm alpha presence must round trip"),
+            }
+        }
+    }
+
+    #[test]
+    fn session_decode_rejects_mis_sliced_op_payloads() {
+        let mut task = sample_task(false);
+        task.session = Some(sample_delta(false, false));
+        let mut doc = WireDoc::decode(&task.encode()).unwrap();
+        // Append a phantom insert to the op log: it now over-consumes
+        // the shipped point/weight payload.
+        let mut session = doc.meta.get("session").cloned().unwrap();
+        match session {
+            Json::Obj(ref mut obj) => match obj.get_mut("ops") {
+                Some(Json::Arr(ops)) => ops.push(Json::Str("ix".to_string())),
+                other => panic!("session ops must be an array, got {other:?}"),
+            },
+            other => panic!("session meta must be an object, got {other:?}"),
+        }
+        doc.set_json("session", session);
+        match TaskEnvelope::decode(&doc.encode()) {
+            Err(Error::Wire(msg)) => assert!(msg.contains("truncated"), "{msg}"),
+            other => panic!("expected typed wire error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_result_round_trips_ok_and_error() {
+        let out = SessionSolveOut {
+            objective: 1.25,
+            iterations: 37,
+            marginal_error: f64::NAN,
+            converged: true,
+            escalated: false,
+            warm_started: true,
+            alpha: vec![0.5, -0.5, f64::from_bits(0xBFF0000000000001)],
+        };
+        let env = SessionResultEnvelope::new(9, 2, Ok(out.clone()));
+        let back = SessionResultEnvelope::decode(&env.encode()).unwrap();
+        assert_eq!(back.task_id, 9);
+        assert_eq!(back.worker_id, 2);
+        let got = back.result.unwrap();
+        assert_eq!(got.objective.to_bits(), out.objective.to_bits());
+        assert_eq!(got.iterations, 37);
+        assert!(got.marginal_error.is_nan(), "NaN scalars travel as bit patterns");
+        assert!(got.converged && !got.escalated && got.warm_started);
+        let ab: Vec<u64> = got.alpha.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u64> = out.alpha.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb);
+
+        let err = SessionResultEnvelope::new(9, 2, Err(Error::Service("no resident state".into())));
+        match SessionResultEnvelope::decode(&err.encode()).unwrap().result {
+            Err(Error::Service(msg)) => assert_eq!(msg, "no resident state"),
+            other => panic!("typed session failure survives the hop, got {other:?}"),
         }
     }
 

@@ -31,7 +31,7 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::cache::FeatureKey;
+use crate::coordinator::cache::{support_fingerprint, FeatureKey, LandmarkKey};
 use crate::data::Measure;
 use crate::error::{Error, Result};
 use crate::features::GaussianFeatureMap;
@@ -326,6 +326,30 @@ impl<'a> OtProblem<'a> {
         adaptive: bool,
         solver_pool: &Pool,
     ) -> NystromKernel {
+        // With a shared landmark cache attached, hot groups skip the
+        // O(r·(n+m)·d) selection: the cached indices are exactly what
+        // the seeded selection would return for these fingerprinted
+        // supports, so `from_landmarks` rebuilds the bit-identical
+        // kernel (rust/src/coordinator/cache.rs, `LandmarkCache`).
+        if let Some(cache) = self.landmarks {
+            let key = LandmarkKey::new(
+                mu.dim(),
+                eps,
+                rank,
+                plan.seed,
+                support_fingerprint(mu, nu),
+            );
+            let idx = cache.get_or_select(key, self.metrics, || {
+                let mut rng = Rng::seed_from(plan.seed);
+                if adaptive {
+                    NystromKernel::select_landmarks_adaptive(mu, nu, rank, &mut rng)
+                } else {
+                    NystromKernel::select_landmarks_uniform(mu, nu, rank, &mut rng)
+                }
+            });
+            return NystromKernel::from_landmarks(mu, nu, eps, idx.as_ref().clone(), adaptive)
+                .with_pool(solver_pool.clone());
+        }
         let mut rng = Rng::seed_from(plan.seed);
         let kernel = if adaptive {
             NystromKernel::from_measures_adaptive(mu, nu, eps, rank, &mut rng)
@@ -1300,6 +1324,33 @@ mod tests {
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 2);
         assert_eq!(metrics.counter("service.feature_cache.hits").get(), 2);
+    }
+
+    #[test]
+    fn landmark_cache_is_honoured_and_preserves_the_answer() {
+        use crate::coordinator::cache::LandmarkCache;
+        use crate::metrics::Registry;
+        let (mu, nu) = clouds(40);
+        let base = || OtProblem::new(&mu, &nu).epsilon(5.0).nystrom(16).seed(5).anneal(false);
+        let uncached = base().solve().unwrap();
+        let cache = LandmarkCache::new(4);
+        let metrics = Registry::default();
+        let mut objectives = Vec::new();
+        for _ in 0..3 {
+            let sol =
+                base().landmark_cache(&cache).metrics(&metrics).solve().unwrap();
+            objectives.push(sol.objective);
+        }
+        assert_eq!(cache.misses(), 1, "one selection, then reuse");
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(metrics.counter("service.landmark_cache.hits").get(), 2);
+        assert_eq!(metrics.counter("service.landmark_cache.misses").get(), 1);
+        // Cached landmark indices rebuild the same kernel: bit-identical
+        // objectives across cached repeats, and agreement with the
+        // seeded uncached path that picks the same indices.
+        assert_eq!(objectives[0].to_bits(), objectives[1].to_bits());
+        assert_eq!(objectives[1].to_bits(), objectives[2].to_bits());
+        assert_eq!(objectives[0].to_bits(), uncached.objective.to_bits());
     }
 
     #[test]

@@ -33,7 +33,9 @@ mod plan;
 mod problem;
 mod solution;
 
-pub use envelope::{ResultEnvelope, TaskEnvelope};
+pub use envelope::{
+    ResultEnvelope, SessionDelta, SessionResultEnvelope, SessionSolveOut, TaskEnvelope,
+};
 pub use plan::{Backend, Domain, Plan, PLAN_FORMAT_MAJOR};
 pub use problem::{BackendPref, DomainChoice, KernelChoice, OtProblem, SimdPreference};
 pub use solution::{DivergenceReport, Solution};

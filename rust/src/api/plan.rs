@@ -169,6 +169,13 @@ pub struct Plan {
     /// solves. Halves the dual state and roughly halves the applies per
     /// iteration on those legs.
     pub symmetric_self_solves: bool,
+    /// The solves this plan describes may warm-start from
+    /// caller-provided duals (streaming-session queries: the coordinator
+    /// ships the session's remapped previous dual alongside the
+    /// envelope, and the executor/worker enters through the `*_warm`
+    /// solver entry points). Pure metadata for direct solves — the
+    /// executor's own routing is unchanged when no warm dual arrives.
+    pub warm_start: bool,
 }
 
 impl Plan {
@@ -207,7 +214,7 @@ impl Plan {
         };
         format!(
             "plan: backend={backend} domain={} stabilized_factors={} pairs={} width={} \
-             threads={}/{} simd={} eps={} anneal={} symmetric={} cache_key={}",
+             threads={}/{} simd={} eps={} anneal={} symmetric={} warm_start={} cache_key={}",
             self.domain.tag(),
             self.stabilized_factors,
             self.pairs,
@@ -226,6 +233,7 @@ impl Plan {
                 None => "off".into(),
             },
             self.symmetric_self_solves,
+            self.warm_start,
             match self.cache_key {
                 Some(k) => format!("(d={},eps,r={})", k.dim, k.r),
                 None => "-".into(),
@@ -273,6 +281,12 @@ impl Plan {
             ));
         }
         s.push_str(&format!(",\"symmetric_self_solves\":{}", self.symmetric_self_solves));
+        if self.warm_start {
+            // Same-major minor addition (like `schedule`): emitted only
+            // when set, so pre-session workers see byte-identical plans
+            // for every non-session solve.
+            s.push_str(",\"warm_start\":true");
+        }
         s.push('}');
         s
     }
@@ -381,6 +395,10 @@ impl Plan {
             None => None,
         };
         let symmetric_self_solves = matches!(j.get("symmetric_self_solves"), Some(Json::Bool(true)));
+        // `warm_start` entered with the streaming-session subsystem:
+        // absent decodes to false (direct solve), the only behaviour
+        // older writers could have meant.
+        let warm_start = matches!(j.get("warm_start"), Some(Json::Bool(true)));
 
         Ok(Plan {
             backend,
@@ -402,6 +420,7 @@ impl Plan {
             seed,
             schedule,
             symmetric_self_solves,
+            warm_start,
         })
     }
 }
@@ -431,6 +450,7 @@ mod tests {
             seed: u64::MAX, // exercise the beyond-f64 seed path
             schedule: None,
             symmetric_self_solves: false,
+            warm_start: false,
         }
     }
 
@@ -550,6 +570,22 @@ mod tests {
             "{\"v\":\"one\",",
         );
         assert!(Plan::from_json(&junk).is_err());
+    }
+
+    #[test]
+    fn warm_start_round_trips_and_is_absent_when_off() {
+        let mut plan = sample(Backend::Factored { rank: 64 }, Domain::AutoEscalate, true);
+        // Off: the key is omitted entirely, so non-session plans are
+        // byte-identical to what pre-session coordinators emitted.
+        let text = plan.to_json();
+        assert!(!text.contains("warm_start"), "{text}");
+        assert!(!Plan::from_json(&text).unwrap().warm_start);
+        // On: round-trips exactly.
+        plan.warm_start = true;
+        let text = plan.to_json();
+        assert!(text.contains("\"warm_start\":true"), "{text}");
+        assert_eq!(Plan::from_json(&text).unwrap(), plan);
+        assert!(plan.summary().contains("warm_start=true"), "{}", plan.summary());
     }
 
     #[test]

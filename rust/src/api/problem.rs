@@ -29,7 +29,7 @@
 //!   fallback.
 
 use crate::config::SinkhornConfig;
-use crate::coordinator::cache::{FeatureCache, FeatureKey};
+use crate::coordinator::cache::{FeatureCache, FeatureKey, LandmarkCache};
 use crate::data::Measure;
 use crate::error::{Error, Result};
 use crate::features::GaussianFeatureMap;
@@ -175,8 +175,10 @@ pub struct OtProblem<'a> {
     pub(crate) anneal_decay: f64,
     pub(crate) symmetric: Option<bool>,
     pub(crate) simd: SimdPreference,
+    pub(crate) warm_start: bool,
     pub(crate) map: Option<&'a GaussianFeatureMap>,
     pub(crate) cache: Option<&'a FeatureCache>,
+    pub(crate) landmarks: Option<&'a LandmarkCache>,
     pub(crate) metrics: Option<&'a Registry>,
     pub(crate) solver_pool: Option<Pool>,
     pub(crate) solve_pool: Option<Pool>,
@@ -205,8 +207,10 @@ impl<'a> OtProblem<'a> {
             anneal_decay: d.anneal_decay,
             symmetric: d.symmetric,
             simd: SimdPreference::Auto,
+            warm_start: false,
             map: None,
             cache: None,
+            landmarks: None,
             metrics: None,
             solver_pool: None,
             solve_pool: None,
@@ -398,6 +402,25 @@ impl<'a> OtProblem<'a> {
     /// miss with the cache's radius-headroom rule).
     pub fn feature_cache(mut self, cache: &'a FeatureCache) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Resolve Nyström landmark sets through a shared [`LandmarkCache`]:
+    /// hot groups skip the O(r·(n+m)·d) adaptive re-selection. Cache
+    /// hits rebuild the bit-identical kernel (the landmark indices are
+    /// what the selection would have produced; a support fingerprint
+    /// guards against reusing indices across different clouds).
+    pub fn landmark_cache(mut self, cache: &'a LandmarkCache) -> Self {
+        self.landmarks = Some(cache);
+        self
+    }
+
+    /// Mark the plan as warm-startable ([`Plan::warm_start`]): the
+    /// serving layer may attach a caller-provided dual (streaming
+    /// sessions) and the executor/worker enters through the `*_warm`
+    /// solver entry points. Metadata only for direct solves.
+    pub fn warm_start(mut self, on: bool) -> Self {
+        self.warm_start = on;
         self
     }
 
@@ -717,6 +740,7 @@ impl<'a> OtProblem<'a> {
             seed: self.seed,
             schedule,
             symmetric_self_solves,
+            warm_start: self.warm_start,
         })
     }
 

@@ -322,6 +322,11 @@ pub struct ServiceConfig {
     /// `num_features` features and the shared feature-map cache.
     /// `service.backend` in config files, `--backend` on the CLI.
     pub backend: String,
+    /// Maximum number of live streaming sessions the coordinator's
+    /// session table will hold; `session_create` sheds with
+    /// `Error::Overloaded` beyond this. `service.session_capacity` in
+    /// config files, `--session-capacity` on the CLI.
+    pub session_capacity: usize,
 }
 
 impl Default for ServiceConfig {
@@ -337,6 +342,7 @@ impl Default for ServiceConfig {
             shard_addrs: Vec::new(),
             shard: ShardSettings::default(),
             backend: "factored".to_string(),
+            session_capacity: 64,
         }
     }
 }
@@ -374,6 +380,9 @@ impl ServiceConfig {
                 .get_str("service.backend")
                 .map(str::to_string)
                 .unwrap_or(d.backend),
+            session_capacity: doc
+                .get_int("service.session_capacity")
+                .unwrap_or(d.session_capacity as i64) as usize,
         }
     }
 }

@@ -192,6 +192,190 @@ impl FeatureCache {
     }
 }
 
+// ---------------------------------------------------------------------
+// Nyström landmark cache
+// ---------------------------------------------------------------------
+
+/// Landmark cache key: the `(dim, eps, rank, seed)` tuple the ROADMAP
+/// names (eps by exact bit pattern, like [`FeatureKey`]), **plus** a
+/// fingerprint of the two supports. Unlike the Lemma-1 anchor draw —
+/// which is data-independent, so `(dim, eps, r)` suffices — a landmark
+/// set is a function of the actual point clouds: reusing indices across
+/// different clouds would silently build a different kernel than the
+/// seeded selection, so the fingerprint is part of the key and a
+/// changed support is a miss.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct LandmarkKey {
+    /// Ground-space dimension d.
+    pub dim: usize,
+    /// Bit pattern of the regularisation epsilon (exact match only).
+    pub eps_bits: u64,
+    /// Landmark count.
+    pub rank: usize,
+    /// Selection seed (the plan seed the draw replays from).
+    pub seed: u64,
+    /// FNV-1a over both supports' point bits (see
+    /// [`support_fingerprint`]).
+    pub fingerprint: u64,
+}
+
+impl LandmarkKey {
+    /// Key for a `(dim, eps, rank, seed)` combination over fingerprinted
+    /// supports.
+    pub fn new(dim: usize, eps: f64, rank: usize, seed: u64, fingerprint: u64) -> LandmarkKey {
+        LandmarkKey { dim, eps_bits: eps.to_bits(), rank, seed, fingerprint }
+    }
+}
+
+/// FNV-1a over the exact f32 bit patterns of both supports (lengths and
+/// dim mixed in), so "same clouds" means bitwise-same clouds — the only
+/// equality under which a cached landmark set replays the seeded
+/// selection exactly.
+pub fn support_fingerprint(mu: &crate::data::Measure, nu: &crate::data::Measure) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        for byte in v.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    mix(mu.len() as u64);
+    mix(nu.len() as u64);
+    mix(mu.dim() as u64);
+    for m in [mu, nu] {
+        for i in 0..m.len() {
+            for &x in m.points.row(i) {
+                mix(x.to_bits() as u64);
+            }
+        }
+    }
+    h
+}
+
+struct LandmarkEntry {
+    landmarks: Arc<Vec<usize>>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct LandmarkInner {
+    entries: HashMap<LandmarkKey, LandmarkEntry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// LRU cache of selected Nyström landmark index sets, living beside the
+/// coordinator's feature-map cache: hot groups skip the O(r·(n+m)·d)
+/// adaptive re-selection (the selection, not the factor construction,
+/// is what dominates Nyström setup). Hits/misses export as
+/// `service.landmark_cache.hits` / `service.landmark_cache.misses`.
+///
+/// Cached indices rebuild the **bit-identical** kernel: selection is a
+/// pure function of `(supports, rank, seed)`, all of which are in the
+/// key, and `NystromKernel::from_landmarks` is a pure function of the
+/// indices.
+pub struct LandmarkCache {
+    inner: Mutex<LandmarkInner>,
+    capacity: usize,
+}
+
+impl LandmarkCache {
+    /// A cache holding at most `capacity` landmark sets; `0` disables
+    /// caching (every lookup selects afresh and counts as a miss).
+    pub fn new(capacity: usize) -> LandmarkCache {
+        LandmarkCache { inner: Mutex::new(LandmarkInner::default()), capacity }
+    }
+
+    /// The configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fetch the landmark set for `key`, running `select` (the seeded
+    /// selection) on a miss. Counters go to `metrics` when provided.
+    /// The selection runs outside the lock, like the feature cache's
+    /// fit: two racers produce identical sets (selection is seeded and
+    /// pure), so last-insert-wins is harmless.
+    pub fn get_or_select(
+        &self,
+        key: LandmarkKey,
+        metrics: Option<&Registry>,
+        select: impl FnOnce() -> Vec<usize>,
+    ) -> Arc<Vec<usize>> {
+        if self.capacity > 0 {
+            let hit = {
+                let mut guard = self.inner.lock().unwrap();
+                let inner = &mut *guard;
+                inner.tick += 1;
+                let tick = inner.tick;
+                match inner.entries.get_mut(&key) {
+                    Some(e) => {
+                        e.last_used = tick;
+                        inner.hits += 1;
+                        Some(e.landmarks.clone())
+                    }
+                    None => None,
+                }
+            };
+            if let Some(set) = hit {
+                if let Some(m) = metrics {
+                    m.counter("service.landmark_cache.hits").inc();
+                }
+                return set;
+            }
+        }
+        let selected = Arc::new(select());
+        if let Some(m) = metrics {
+            m.counter("service.landmark_cache.misses").inc();
+        }
+        if self.capacity > 0 {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            inner.misses += 1;
+            inner.tick += 1;
+            let tick = inner.tick;
+            inner
+                .entries
+                .insert(key, LandmarkEntry { landmarks: selected.clone(), last_used: tick });
+            while inner.entries.len() > self.capacity {
+                let victim: Option<LandmarkKey> = inner
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| *k);
+                match victim {
+                    Some(k) => inner.entries.remove(&k),
+                    None => break,
+                };
+            }
+        } else {
+            self.inner.lock().unwrap().misses += 1;
+        }
+        selected
+    }
+
+    /// Total hits since construction.
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
+    }
+
+    /// Total misses since construction.
+    pub fn misses(&self) -> u64 {
+        self.inner.lock().unwrap().misses
+    }
+
+    /// Cached entry count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,5 +463,61 @@ mod tests {
         let _ = c.get_or_fit(2, 0.5, 16, 3.0, &mut rng, Some(&m));
         assert_eq!(m.counter("service.feature_cache.misses").get(), 1);
         assert_eq!(m.counter("service.feature_cache.hits").get(), 1);
+    }
+
+    #[test]
+    fn landmark_cache_hits_same_key_and_skips_selection() {
+        let c = LandmarkCache::new(4);
+        let m = Registry::default();
+        let key = LandmarkKey::new(2, 0.5, 8, 7, 0xF00D);
+        let mut selections = 0;
+        let first = c.get_or_select(key, Some(&m), || {
+            selections += 1;
+            vec![1, 2, 3]
+        });
+        let second = c.get_or_select(key, Some(&m), || {
+            selections += 1;
+            vec![9, 9, 9] // must not run
+        });
+        assert_eq!(selections, 1, "hit must skip the selection closure");
+        assert!(Arc::ptr_eq(&first, &second));
+        assert_eq!(m.counter("service.landmark_cache.hits").get(), 1);
+        assert_eq!(m.counter("service.landmark_cache.misses").get(), 1);
+    }
+
+    #[test]
+    fn landmark_cache_misses_on_different_support_fingerprint() {
+        let c = LandmarkCache::new(4);
+        let a = LandmarkKey::new(2, 0.5, 8, 7, 0xAAAA);
+        let b = LandmarkKey::new(2, 0.5, 8, 7, 0xBBBB);
+        let _ = c.get_or_select(a, None, || vec![1]);
+        let _ = c.get_or_select(b, None, || vec![2]);
+        assert_eq!(c.misses(), 2);
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.len(), 2, "different fingerprints are distinct entries");
+    }
+
+    #[test]
+    fn landmark_cache_zero_capacity_disables() {
+        let c = LandmarkCache::new(0);
+        let key = LandmarkKey::new(2, 0.5, 8, 7, 1);
+        let _ = c.get_or_select(key, None, || vec![1]);
+        let _ = c.get_or_select(key, None, || vec![1]);
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn support_fingerprint_tracks_point_bits() {
+        use crate::data::Measure;
+        use crate::linalg::Mat;
+        let m1 = Measure::uniform(Mat::from_vec(2, 2, vec![0.0, 1.0, 2.0, 3.0]));
+        let m2 = Measure::uniform(Mat::from_vec(2, 2, vec![0.0, 1.0, 2.0, 3.0]));
+        let m3 = Measure::uniform(Mat::from_vec(2, 2, vec![0.0, 1.0, 2.0, 3.5]));
+        assert_eq!(support_fingerprint(&m1, &m2), support_fingerprint(&m2, &m1));
+        assert_ne!(support_fingerprint(&m1, &m2), support_fingerprint(&m1, &m3));
+        // Side order matters (xy vs yx are different selections).
+        assert_ne!(support_fingerprint(&m1, &m3), support_fingerprint(&m3, &m1));
     }
 }

@@ -63,6 +63,23 @@
 //!   `crate::shard` for the failure ladder and the `service.shard.*`
 //!   metrics.
 //!
+//! * **Streaming sessions** ([`crate::session`]): long-lived *mutating*
+//!   transport problems served through the same handle —
+//!   [`ServiceHandle::session_create`] / [`ServiceHandle::session_update`]
+//!   / [`ServiceHandle::session_query`] /
+//!   [`ServiceHandle::session_close`]. The coordinator keeps a bounded
+//!   session table (`service.session_capacity`, shed with
+//!   [`Error::Overloaded`]); queries warm-start from the session's
+//!   cached dual remapped across updates. With a shard tier configured,
+//!   the session's factored support stays **resident** on a pinned
+//!   shard worker and only the op delta plus the warm dual ship per
+//!   query — a residency miss (worker death, version skew, eviction)
+//!   surfaces as a typed error the coordinator answers with a full
+//!   snapshot retry, so correctness never depends on the residency
+//!   cache. Metrics: `service.session.{live,created,closed,updates,
+//!   queries,warm_solves,cold_solves,warm_iterations_saved,
+//!   sharded_queries,snapshot_retries}`.
+//!
 //! Everything is std::thread + mpsc (the offline crate set has no tokio);
 //! for a compute-bound service this is the right tool anyway.
 
@@ -70,20 +87,25 @@ pub mod batcher;
 pub mod cache;
 
 pub use batcher::{Batch, BatcherPolicy};
-pub use cache::{FeatureCache, FeatureKey};
+pub use cache::{support_fingerprint, FeatureCache, FeatureKey, LandmarkCache, LandmarkKey};
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::api::{BackendPref, OtProblem};
+use crate::api::{BackendPref, OtProblem, SessionDelta};
 use crate::config::ServiceConfig;
 use crate::data::Measure;
 use crate::error::{Error, Result};
+use crate::linalg::Mat;
 use crate::metrics::Registry;
 use crate::rng::Rng;
 use crate::runtime::pool::Pool;
+use crate::session::{
+    QueryReport, SessionConfig, SessionOp, SessionStats, StreamingSession, DEFAULT_SESSION_SEED,
+};
 
 /// A divergence request: two measures on the same ground space.
 pub struct Request {
@@ -128,12 +150,53 @@ impl Pending {
     }
 }
 
+/// One live streaming session plus the serving-side state that does not
+/// belong in [`StreamingSession`] itself: the op log accumulated since
+/// the last successful sharded solve, and where (if anywhere) the
+/// session's support is resident on the shard tier.
+struct SessionEntry {
+    session: StreamingSession,
+    /// Ops applied locally but not yet replayed on the resident shard
+    /// copy. Cleared on every successful sharded solve (the worker is
+    /// then at the current version) and whenever residency is dropped.
+    pending: Vec<SessionOp>,
+    /// `(shard worker index, version resident there)` after a
+    /// successful sharded solve; `None` forces the next sharded query
+    /// to ship a full snapshot.
+    resident: Option<(usize, u64)>,
+}
+
+/// The coordinator's bounded table of live sessions. Two-level locking:
+/// the outer map lock is held only to look up / insert / remove entry
+/// `Arc`s, so a long-running solve on one session never blocks
+/// create/update/query traffic on another.
+struct SessionTable {
+    entries: Mutex<HashMap<u64, Arc<Mutex<SessionEntry>>>>,
+    next_id: AtomicU64,
+    capacity: usize,
+}
+
+impl SessionTable {
+    fn new(capacity: usize) -> SessionTable {
+        SessionTable {
+            entries: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            capacity,
+        }
+    }
+}
+
 /// Client handle; cloneable, cheap.
 #[derive(Clone)]
 pub struct ServiceHandle {
     tx: SyncSender<Request>,
     next_id: Arc<AtomicU64>,
     metrics: Arc<Registry>,
+    sessions: Arc<SessionTable>,
+    /// The service's shard tier, when configured — sharded session
+    /// queries pin the session's support to one worker through it.
+    shard: Option<Arc<crate::shard::ShardCoordinator>>,
+    cfg: Arc<ServiceConfig>,
 }
 
 impl ServiceHandle {
@@ -191,6 +254,241 @@ impl ServiceHandle {
     pub fn metrics_text(&self) -> String {
         self.metrics.render()
     }
+
+    // ------------------------------------------------------------------
+    // Streaming sessions
+    // ------------------------------------------------------------------
+
+    /// Open a streaming session on the given supports; returns the
+    /// session id for [`ServiceHandle::session_update`] /
+    /// [`ServiceHandle::session_query`] / [`ServiceHandle::session_close`].
+    /// Sheds with [`Error::Overloaded`] when the table is at
+    /// `service.session_capacity`. The session inherits the service's
+    /// solver settings (with `epsilon` overridden per session when
+    /// given), `num_features` as its rank, and the fixed session seed —
+    /// annealing and symmetric-divergence schedules are per-request
+    /// conveniences that do not apply to a long-lived cached-dual
+    /// session, so they are stripped.
+    pub fn session_create(&self, mu: Measure, nu: Measure, epsilon: Option<f64>) -> Result<u64> {
+        if mu.dim() != nu.dim() {
+            return Err(Error::Shape(format!(
+                "measures have different dims ({} vs {})",
+                mu.dim(),
+                nu.dim()
+            )));
+        }
+        if let Some(e) = epsilon {
+            if !(e > 0.0 && e.is_finite()) {
+                return Err(Error::Config(format!("epsilon override must be positive, got {e}")));
+            }
+        }
+        let mut sinkhorn = self.cfg.sinkhorn.clone();
+        if let Some(e) = epsilon {
+            sinkhorn.epsilon = e;
+        }
+        sinkhorn.anneal = None;
+        sinkhorn.symmetric = None;
+        let scfg = SessionConfig {
+            sinkhorn,
+            rank: self.cfg.num_features,
+            seed: DEFAULT_SESSION_SEED,
+            solver_threads: self.cfg.solver_threads,
+        };
+        let session = StreamingSession::new(&mu, &nu, scfg)?;
+        let mut entries = self.sessions.entries.lock().unwrap();
+        if entries.len() >= self.sessions.capacity {
+            return Err(Error::Overloaded(format!(
+                "session table full ({} live sessions)",
+                entries.len()
+            )));
+        }
+        let id = self.sessions.next_id.fetch_add(1, Ordering::Relaxed);
+        entries.insert(
+            id,
+            Arc::new(Mutex::new(SessionEntry { session, pending: Vec::new(), resident: None })),
+        );
+        self.metrics.counter("service.session.created").inc();
+        self.metrics.gauge("service.session.live").add(1);
+        Ok(id)
+    }
+
+    /// Apply a batch of support edits to a session; returns the new
+    /// version. On an op error the batch may be partially applied (the
+    /// version still bumps) and the shard-resident copy can no longer be
+    /// reached by delta replay, so residency is dropped — the next
+    /// sharded query re-snapshots.
+    pub fn session_update(&self, id: u64, ops: &[SessionOp]) -> Result<u64> {
+        let entry = self.session_entry(id)?;
+        let mut e = entry.lock().unwrap();
+        match e.session.update(ops) {
+            Ok(version) => {
+                e.pending.extend_from_slice(ops);
+                self.metrics.counter("service.session.updates").add(ops.len() as u64);
+                Ok(version)
+            }
+            Err(err) => {
+                e.pending.clear();
+                e.resident = None;
+                Err(err)
+            }
+        }
+    }
+
+    /// Solve `W_eps` on the session's current support, warm-starting
+    /// from the cached dual when it survived the updates since the last
+    /// solve. In-process this is exactly [`StreamingSession::query`];
+    /// with a shard tier the solve runs on the session's pinned worker
+    /// (delta replay against the resident support, snapshot on miss)
+    /// and returns bit-identical numbers — both routes go through
+    /// [`crate::session::solve_support`].
+    pub fn session_query(&self, id: u64) -> Result<QueryReport> {
+        let entry = self.session_entry(id)?;
+        let mut e = entry.lock().unwrap();
+        let saved_before = e.session.stats().iterations_saved;
+        let report = match self.shard.clone() {
+            None => e.session.query()?,
+            Some(shard) => self.session_query_sharded(&shard, &mut e, id)?,
+        };
+        self.metrics.counter("service.session.queries").inc();
+        if report.warm_started {
+            self.metrics.counter("service.session.warm_solves").inc();
+        } else {
+            self.metrics.counter("service.session.cold_solves").inc();
+        }
+        let saved = e.session.stats().iterations_saved.saturating_sub(saved_before);
+        if saved > 0 {
+            self.metrics.counter("service.session.warm_iterations_saved").add(saved);
+        }
+        Ok(report)
+    }
+
+    /// Change a session's regularisation: cold restart (map refit from
+    /// the session seed over the current support, duals dropped), and
+    /// any shard-resident copy is invalidated.
+    pub fn session_set_epsilon(&self, id: u64, eps: f64) -> Result<()> {
+        let entry = self.session_entry(id)?;
+        let mut e = entry.lock().unwrap();
+        e.session.set_epsilon(eps)?;
+        e.pending.clear();
+        e.resident = None;
+        Ok(())
+    }
+
+    /// Lifetime counters for one session (updates, queries, warm/cold
+    /// split, iteration savings).
+    pub fn session_stats(&self, id: u64) -> Result<SessionStats> {
+        let entry = self.session_entry(id)?;
+        let stats = entry.lock().unwrap().session.stats().clone();
+        Ok(stats)
+    }
+
+    /// Close a session: drop it from the table and tell the shard tier
+    /// to evict any resident copy.
+    pub fn session_close(&self, id: u64) -> Result<()> {
+        let removed = self.sessions.entries.lock().unwrap().remove(&id);
+        match removed {
+            Some(_) => {
+                if let Some(shard) = self.shard.as_deref() {
+                    shard.close_session(id);
+                }
+                self.metrics.counter("service.session.closed").inc();
+                self.metrics.gauge("service.session.live").add(-1);
+                Ok(())
+            }
+            None => Err(Error::Service(format!("unknown session {id}"))),
+        }
+    }
+
+    fn session_entry(&self, id: u64) -> Result<Arc<Mutex<SessionEntry>>> {
+        self.sessions
+            .entries
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::Service(format!("unknown session {id}")))
+    }
+
+    /// The sharded leg of [`ServiceHandle::session_query`]. Ships the
+    /// cheapest frame that reaches the session's current version: a
+    /// delta (pending ops + warm dual, empty placeholder measures) when
+    /// a resident copy exists, a full snapshot (supports + the exact
+    /// feature map) otherwise. A failed delta — worker death, residency
+    /// eviction, version skew — is answered with one snapshot retry
+    /// (`service.session.snapshot_retries`); the solve itself is
+    /// [`crate::session::solve_support`] on the worker, so results are
+    /// bitwise the local path's.
+    fn session_query_sharded(
+        &self,
+        shard: &crate::shard::ShardCoordinator,
+        e: &mut SessionEntry,
+        id: u64,
+    ) -> Result<QueryReport> {
+        let version = e.session.version();
+        let warm = e.session.warm_dual();
+        let (mu, nu) = e.session.state().snapshot();
+        let map = e.session.state().map().clone();
+        let rank = e.session.config().rank;
+        let skcfg = e.session.config().sinkhorn.clone();
+        // The worker consults only the plan's solver config, but a plan
+        // is always built against real measures — use the snapshot.
+        let plan = OtProblem::new(&mu, &nu)
+            .config(&skcfg)
+            .backend(BackendPref::Factored { rank })
+            .with_feature_map(&map)
+            .stabilized_factors(true)
+            .plan()?;
+        let mut solved = None;
+        if let Some((widx, resident_version)) = e.resident {
+            let delta = SessionDelta {
+                session_id: id,
+                base_version: resident_version,
+                version,
+                snapshot: false,
+                ops: e.pending.clone(),
+                warm_alpha: warm.clone(),
+            };
+            // Delta frames carry no support data: dim-0 placeholder
+            // measures and no map (the resident state owns both).
+            let empty_mu = Measure { points: Mat::from_vec(0, 0, Vec::new()), weights: Vec::new() };
+            let empty_nu = Measure { points: Mat::from_vec(0, 0, Vec::new()), weights: Vec::new() };
+            match shard.solve_session(&plan, &empty_mu, &empty_nu, None, delta, Some(widx)) {
+                Ok(out) => solved = Some(out),
+                Err(_) => {
+                    self.metrics.counter("service.session.snapshot_retries").inc();
+                }
+            }
+        }
+        let (out, widx) = match solved {
+            Some(s) => s,
+            None => {
+                let delta = SessionDelta {
+                    session_id: id,
+                    base_version: version,
+                    version,
+                    snapshot: true,
+                    ops: Vec::new(),
+                    warm_alpha: warm,
+                };
+                shard.solve_session(&plan, &mu, &nu, Some(map.as_ref()), delta, None)?
+            }
+        };
+        e.resident = Some((widx, version));
+        e.pending.clear();
+        e.session.install_result(out.alpha, out.iterations, out.warm_started);
+        self.metrics.counter("service.session.sharded_queries").inc();
+        Ok(QueryReport {
+            objective: out.objective,
+            iterations: out.iterations,
+            marginal_error: out.marginal_error,
+            converged: out.converged,
+            warm_started: out.warm_started,
+            escalated: out.escalated,
+            n: mu.len(),
+            m: nu.len(),
+            version,
+        })
+    }
 }
 
 /// The running service: batcher thread + worker pool.
@@ -238,8 +536,13 @@ impl Service {
             );
         }
 
-        // Shared feature-map cache (one per service, all workers).
+        // Shared feature-map cache (one per service, all workers), and
+        // its Nyström sibling: selected landmark index sets keyed by
+        // `(dim, eps, rank, seed, support fingerprint)` so hot groups
+        // under a `nystrom*` backend skip re-selection
+        // (`service.landmark_cache.*`).
         let cache = Arc::new(FeatureCache::new(cfg.cache_capacity));
+        let landmarks = Arc::new(LandmarkCache::new(cfg.cache_capacity));
 
         // Optional shard tier: one coordinator shared by every service
         // worker. A non-empty roster of cross-host TCP workers takes
@@ -267,11 +570,12 @@ impl Service {
             let metrics = metrics.clone();
             let cfg = cfg.clone();
             let cache = cache.clone();
+            let landmarks = landmarks.clone();
             let shard = shard.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("ls-worker-{w}"))
-                    .spawn(move || worker_loop(w as u64, rx, cfg, metrics, cache, shard))
+                    .spawn(move || worker_loop(w as u64, rx, cfg, metrics, cache, landmarks, shard))
                     .expect("spawn worker"),
             );
         }
@@ -280,6 +584,9 @@ impl Service {
             tx: req_tx,
             next_id: Arc::new(AtomicU64::new(0)),
             metrics,
+            sessions: Arc::new(SessionTable::new(cfg.session_capacity)),
+            shard: shard.clone(),
+            cfg: Arc::new(cfg.clone()),
         };
         Ok(Service {
             handle: Some(handle),
@@ -330,6 +637,7 @@ fn worker_loop(
     cfg: ServiceConfig,
     metrics: Arc<Registry>,
     cache: Arc<FeatureCache>,
+    landmarks: Arc<LandmarkCache>,
     shard: Option<Arc<crate::shard::ShardCoordinator>>,
 ) {
     let mut rng = Rng::seed_from(0xC0FFEE ^ worker_id);
@@ -375,6 +683,7 @@ fn worker_loop(
                     &mut rng,
                     bsize,
                     &cache,
+                    &landmarks,
                     &metrics,
                     &solver_pool,
                     &solve_pool,
@@ -387,6 +696,7 @@ fn worker_loop(
                     &mut rng,
                     bsize,
                     &cache,
+                    &landmarks,
                     &metrics,
                     &solver_pool,
                     &solve_pool,
@@ -412,6 +722,7 @@ fn solve_one(
     rng: &mut Rng,
     batch_size: usize,
     cache: &FeatureCache,
+    landmarks: &LandmarkCache,
     metrics: &Registry,
     solver_pool: &Pool,
     solve_pool: &Pool,
@@ -438,7 +749,9 @@ fn solve_one(
     let mut problem = OtProblem::new(&req.mu, &req.nu)
         .config(&skcfg)
         .backend(backend)
-        .pools(solver_pool.clone(), solve_pool.clone());
+        .pools(solver_pool.clone(), solve_pool.clone())
+        .landmark_cache(landmarks)
+        .metrics(metrics);
     if let Some(map) = map.as_ref() {
         problem = problem.with_feature_map(map).stabilized_factors(true);
     }
@@ -474,6 +787,7 @@ fn solve_group(
     rng: &mut Rng,
     batch_size: usize,
     cache: &FeatureCache,
+    landmarks: &LandmarkCache,
     metrics: &Registry,
     solver_pool: &Pool,
     solve_pool: &Pool,
@@ -506,6 +820,8 @@ fn solve_group(
         .config(&skcfg)
         .backend(backend)
         .pools(solver_pool.clone(), solve_pool.clone())
+        .landmark_cache(landmarks)
+        .metrics(metrics)
         .weight_pairs(&pairs);
     if let Some(map) = map.as_ref() {
         problem = problem.with_feature_map(map).stabilized_factors(true);
@@ -645,6 +961,7 @@ mod tests {
             shard_addrs: Vec::new(),
             shard: ShardSettings::default(),
             backend: "factored".to_string(),
+            session_capacity: 4,
         }
     }
 
@@ -733,6 +1050,7 @@ mod tests {
             shard_addrs: Vec::new(),
             shard: ShardSettings::default(),
             backend: "factored".to_string(),
+            session_capacity: 4,
         };
         let svc = Service::start(cfg).unwrap();
         let h = svc.handle();
@@ -929,6 +1247,124 @@ mod tests {
         }
         assert!(metrics.contains("service.shard.delegated_groups = 2"), "{metrics}");
         assert!(metrics.contains("service.shard.gathered_results"), "{metrics}");
+    }
+
+    #[test]
+    fn session_lifecycle_create_update_query_close() {
+        let svc = Service::start(test_cfg(1)).unwrap();
+        let h = svc.handle();
+        let (mu, nu) = clouds(30, 50);
+        let dim = mu.dim();
+        let id = h.session_create(mu, nu, None).unwrap();
+
+        // First query is cold; a repeat on the same support warm-starts.
+        let cold = h.session_query(id).unwrap();
+        assert!(!cold.warm_started);
+        assert!(cold.objective.is_finite());
+        let warm = h.session_query(id).unwrap();
+        assert!(warm.warm_started);
+
+        // An update bumps the version; the next query still warm-starts
+        // (the dual survives a single swap by provenance remap).
+        let v = h
+            .session_update(
+                id,
+                &[SessionOp::SwapX { index: 0, point: vec![0.25; dim], weight: 0.01 }],
+            )
+            .unwrap();
+        assert!(v > 0);
+        let after = h.session_query(id).unwrap();
+        assert!(after.warm_started);
+        assert_eq!(after.version, v);
+
+        let stats = h.session_stats(id).unwrap();
+        assert_eq!(stats.queries, 3);
+        assert_eq!(stats.cold_solves, 1);
+        assert_eq!(stats.warm_solves, 2);
+
+        let m = h.metrics_text();
+        assert!(m.contains("service.session.live = 1"), "{m}");
+        assert!(m.contains("service.session.created = 1"), "{m}");
+        assert!(m.contains("service.session.queries = 3"), "{m}");
+        assert!(m.contains("service.session.warm_solves = 2"), "{m}");
+        assert!(m.contains("service.session.cold_solves = 1"), "{m}");
+
+        h.session_close(id).unwrap();
+        assert!(matches!(h.session_query(id), Err(Error::Service(_))));
+        assert!(matches!(h.session_close(id), Err(Error::Service(_))));
+        let m = h.metrics_text();
+        assert!(m.contains("service.session.live = 0"), "{m}");
+        assert!(m.contains("service.session.closed = 1"), "{m}");
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn session_table_sheds_at_capacity() {
+        let mut cfg = test_cfg(1);
+        cfg.session_capacity = 2;
+        let svc = Service::start(cfg).unwrap();
+        let h = svc.handle();
+        let (mu, nu) = clouds(31, 20);
+        let a = h.session_create(mu.clone(), nu.clone(), None).unwrap();
+        let _b = h.session_create(mu.clone(), nu.clone(), None).unwrap();
+        assert!(matches!(
+            h.session_create(mu.clone(), nu.clone(), None),
+            Err(Error::Overloaded(_))
+        ));
+        // Closing one frees a slot.
+        h.session_close(a).unwrap();
+        h.session_create(mu, nu, None).unwrap();
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_session_query_matches_local_bitwise() {
+        // The same session driven through an in-process service and a
+        // sharded one (2 shard workers) must answer with identical bits
+        // on every query: cold, warm after updates (delta replay on the
+        // resident copy), and warm after a second update batch.
+        let run = |shard_workers: usize| {
+            let mut cfg = test_cfg(1);
+            cfg.shard_workers = shard_workers;
+            let svc = Service::start(cfg).unwrap();
+            let h = svc.handle();
+            let (mu, nu) = clouds(32, 40);
+            let dim = mu.dim();
+            let id = h.session_create(mu, nu, None).unwrap();
+            let mut out = Vec::new();
+            let q = h.session_query(id).unwrap();
+            out.push((q.objective, q.iterations, q.warm_started));
+            h.session_update(
+                id,
+                &[
+                    SessionOp::SwapX { index: 1, point: vec![0.5; dim], weight: 0.02 },
+                    SessionOp::InsertY { point: vec![-0.5; dim], weight: 0.01 },
+                ],
+            )
+            .unwrap();
+            let q = h.session_query(id).unwrap();
+            out.push((q.objective, q.iterations, q.warm_started));
+            h.session_update(id, &[SessionOp::EvictY { index: 0 }]).unwrap();
+            let q = h.session_query(id).unwrap();
+            out.push((q.objective, q.iterations, q.warm_started));
+            let m = h.metrics_text();
+            h.session_close(id).unwrap();
+            drop(h);
+            svc.shutdown();
+            (out, m)
+        };
+        let (local, _) = run(0);
+        let (sharded, metrics) = run(2);
+        for (l, s) in local.iter().zip(&sharded) {
+            assert_eq!(l.0.to_bits(), s.0.to_bits(), "objective {l:?} vs {s:?}");
+            assert_eq!(l.1, s.1, "iterations {l:?} vs {s:?}");
+            assert_eq!(l.2, s.2, "warm flag {l:?} vs {s:?}");
+        }
+        assert!(metrics.contains("service.session.sharded_queries = 3"), "{metrics}");
+        // Queries 2 and 3 rode the resident copy — no snapshot retries.
+        assert!(!metrics.contains("service.session.snapshot_retries"), "{metrics}");
     }
 
     #[test]

@@ -146,6 +146,57 @@ impl NystromKernel {
         Self::build(mu, nu, eps, idx, true, pool)
     }
 
+    /// The landmark **selection** of [`NystromKernel::from_measures`],
+    /// without the factor construction: `rank` indices into the union
+    /// cloud, sampled uniformly without replacement. Split out so the
+    /// coordinator's landmark cache can amortise the selection across
+    /// hot groups and rebuild via [`NystromKernel::from_landmarks`].
+    pub fn select_landmarks_uniform(
+        mu: &Measure,
+        nu: &Measure,
+        rank: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        assert!((1..=nu.len()).contains(&rank));
+        rng.sample_indices(mu.len() + nu.len(), rank)
+    }
+
+    /// The landmark **selection** of
+    /// [`NystromKernel::from_measures_adaptive`], without the factor
+    /// construction: the seeded greedy farthest-point sequence over the
+    /// union cloud — the O(r·(n+m)·d) setup cost the landmark cache
+    /// amortises.
+    pub fn select_landmarks_adaptive(
+        mu: &Measure,
+        nu: &Measure,
+        rank: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        assert!((1..=nu.len()).contains(&rank));
+        let pool = Pool::serial();
+        let union = union_matrix(mu, nu);
+        let norms = row_sq_norms(&union);
+        farthest_point_landmarks(&union, &norms, rank, rng, &pool)
+    }
+
+    /// Build from pre-selected landmark indices (what
+    /// [`NystromKernel::select_landmarks_uniform`] /
+    /// [`NystromKernel::select_landmarks_adaptive`] return — e.g. out of
+    /// the coordinator's landmark cache). Bit-identical to the
+    /// corresponding `from_measures*` constructor for the same indices:
+    /// the factor construction is a pure function of `(mu, nu, eps, idx)`.
+    pub fn from_landmarks(
+        mu: &Measure,
+        nu: &Measure,
+        eps: f64,
+        idx: Vec<usize>,
+        adaptive: bool,
+    ) -> Self {
+        assert!(!idx.is_empty());
+        assert!(idx.iter().all(|&t| t < mu.len() + nu.len()), "landmark index out of bounds");
+        Self::build(mu, nu, eps, idx, adaptive, Pool::serial())
+    }
+
     /// Shared factor construction from chosen landmark indices. The
     /// cross inner products run through the pooled column-blocked
     /// mat-mat kernels; only the final `exp` is per-entry.

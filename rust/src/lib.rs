@@ -52,6 +52,13 @@
 //!   identical to B sequential solves; the coordinator fuses compatible
 //!   in-flight requests onto it (`sinkhorn.max_batch`,
 //!   `service.batched_solves`; EXPERIMENTS.md §Throughput).
+//! * [`session`] — streaming sessions for long-lived *mutating*
+//!   measures: Φ maintained incrementally (O(r) per inserted / evicted /
+//!   swapped point — the factored kernel is append-only along n for a
+//!   fixed map), duals cached and remapped across updates so queries
+//!   warm-start in a handful of iterations, served through the
+//!   coordinator's session table and the sharded tier's resident
+//!   per-session Φ replicas (README.md §Streaming sessions).
 //! * [`shard`] — cross-host sharded serving: fuse groups scatter over
 //!   in-process or TCP workers as binary wire envelopes
 //!   ([`runtime::wire`], [`api::envelope`]) and gather bitwise identical
@@ -112,6 +119,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod session;
 pub mod shard;
 pub mod sinkhorn;
 pub mod special;
@@ -141,6 +149,7 @@ pub mod prelude {
     pub use crate::linalg::Mat;
     pub use crate::rng::Rng;
     pub use crate::runtime::pool::Pool;
+    pub use crate::session::{QueryReport, SessionConfig, SessionOp, StreamingSession};
     pub use crate::sinkhorn::{EpsSchedule, SinkhornSolution};
 
     /// The pre-API free-function solver surface, demoted to an explicit

@@ -455,6 +455,23 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
             )
             .opt("requests", "32", "number of requests to send")
             .opt("n", "500", "samples per cloud per request")
+            .opt(
+                "sessions",
+                "0",
+                "also drive this many streaming sessions through the handle's \
+                 session API (create / update / warm query / close)",
+            )
+            .opt(
+                "session-updates",
+                "4",
+                "single-point swap ops applied between session queries",
+            )
+            .opt("session-queries", "4", "queries per streaming session (first is cold)")
+            .opt(
+                "session-capacity",
+                "64",
+                "live-session table bound; creates beyond it shed typed",
+            )
             .opt("config", "", "optional TOML config file (replaces ALL service flags)"),
         argv,
     );
@@ -463,6 +480,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         solver_threads: a.get_usize("solver-threads"),
         cache_capacity: a.get_usize("cache"),
         shard_workers: a.get_usize("shard-workers"),
+        session_capacity: a.get_usize("session-capacity"),
         ..Default::default()
     };
     cfg.sinkhorn.stabilize = parse_on_off("stabilize", a.get_str("stabilize"));
@@ -561,11 +579,71 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         }
     }
     println!(
-        "{ok}/{n_req} requests served in {:.2}s ({:.1} req/s)\n{}",
+        "{ok}/{n_req} requests served in {:.2}s ({:.1} req/s)",
         sw.elapsed_secs(),
         ok as f64 / sw.elapsed_secs(),
-        h.metrics_text()
     );
+    // Optional streaming-session workload: long-lived mutating problems
+    // with dual warm-starts, alongside the one-shot request traffic.
+    let n_sessions = a.get_usize("sessions");
+    if n_sessions > 0 {
+        let n_updates = a.get_usize("session-updates");
+        let n_queries = a.get_usize("session-queries");
+        let sw = Stopwatch::start();
+        for s in 0..n_sessions {
+            let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+            let dim = mu.dim();
+            let id = match h.session_create(mu, nu, None) {
+                Ok(id) => id,
+                Err(e) => {
+                    eprintln!("session create shed: {e}");
+                    continue;
+                }
+            };
+            let mut cold_iters = 0;
+            let mut last = None;
+            for q in 0..n_queries.max(1) {
+                if q > 0 && n_updates > 0 {
+                    let ops: Vec<SessionOp> = (0..n_updates)
+                        .map(|_| SessionOp::SwapX {
+                            index: rng.uniform_usize(n),
+                            point: (0..dim).map(|_| rng.normal_f32()).collect(),
+                            weight: 1.0 / n as f32,
+                        })
+                        .collect();
+                    if let Err(e) = h.session_update(id, &ops) {
+                        eprintln!("session {id} update: {e}");
+                    }
+                }
+                match h.session_query(id) {
+                    Ok(rep) => {
+                        if q == 0 {
+                            cold_iters = rep.iterations;
+                        }
+                        last = Some(rep);
+                    }
+                    Err(e) => eprintln!("session {id} query: {e}"),
+                }
+            }
+            if let Some(rep) = last {
+                if s < 3 {
+                    println!(
+                        "session id={id} objective={:.6} iters={} (cold {cold_iters}) \
+                         warm={} version={}",
+                        rep.objective, rep.iterations, rep.warm_started, rep.version
+                    );
+                }
+            }
+            if let Err(e) = h.session_close(id) {
+                eprintln!("session {id} close: {e}");
+            }
+        }
+        println!(
+            "{n_sessions} sessions x {n_queries} queries in {:.2}s",
+            sw.elapsed_secs()
+        );
+    }
+    println!("{}", h.metrics_text());
     drop(h);
     svc.shutdown();
     0

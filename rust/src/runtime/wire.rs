@@ -53,6 +53,14 @@ pub mod kinds {
     pub const DRAIN_ACK: &str = "drain-ack";
     /// Coordinator → worker: exit immediately (legacy hard stop).
     pub const SHUTDOWN: &str = "shutdown";
+    /// Worker → coordinator: one streaming-session solve result (the
+    /// session analogue of a `"result"` frame — carries the updated
+    /// x-side dual back so the coordinator can warm-start the next
+    /// query; see [`crate::api::SessionResultEnvelope`]).
+    pub const SESSION_RESULT: &str = "session_result";
+    /// Coordinator → worker: a streaming session closed; drop any
+    /// resident support state for it. Carries `session.id`.
+    pub const SESSION_CLOSE: &str = "session_close";
 }
 
 /// Hard cap on the declared header length (1 MiB). A corrupt length

@@ -1,0 +1,833 @@
+//! Streaming sessions: long-lived transport problems over *mutating*
+//! measures, served incrementally.
+//!
+//! The paper's factored kernel `k(x, y) = ⟨φ(x), φ(y)⟩` makes a Sinkhorn
+//! iteration O(r(n+m)) — and a corollary this module exploits is that
+//! the feature matrix Φ is **append-only along n for a fixed map**: a
+//! mutating measure (sliding-window point cloud, GAN minibatch stream)
+//! costs O(r) per inserted/evicted/swapped point instead of a kernel
+//! rebuild. Combined with warm-starting duals from the previous solve
+//! (the eps-independent `alpha = eps·ln(u/a)` currency the annealing
+//! rungs already use), an incremental query converges in a handful of
+//! iterations versus hundreds from scratch — the warm-start economics of
+//! Cuturi (arXiv:1306.0895) with the iteration-count sensitivity of
+//! Altschuler–Weed–Rigollet (arXiv:1705.09634).
+//!
+//! ## Anatomy
+//!
+//! * [`SupportState`] — the incrementally-maintained factored support:
+//!   raw points, weights, and per-row **log**-feature rows
+//!   (`map.log_eval_into`, O(r) per point) for both sides, in flat
+//!   `Vec<f32>` buffers with amortised geometric growth. Queries
+//!   materialise a [`FactoredKernel::from_log_factors`] from the rows,
+//!   so small-eps stabilisation (max-shift + clamped factors + the
+//!   log-domain escalation view) keeps working on streamed supports.
+//! * [`StreamingSession`] — [`SupportState`] plus the cached row dual
+//!   from the last solve and the provenance tracker that remaps it
+//!   across updates ([`remap_warm_dual`]).
+//! * [`SessionOp`] — the update vocabulary (insert / evict / swap per
+//!   side). The same op log drives the local session and a shard
+//!   worker's resident Φ replica ([`crate::api::SessionDelta`]).
+//!
+//! ## Determinism contract
+//!
+//! The row layout is a **pure function of the update log**: inserts
+//! append, evictions `swap_remove` (the last row moves into the hole),
+//! swaps overwrite in place — no hashing, no thread-dependent order.
+//! Feature rows are evaluated one point at a time, and the solve runs on
+//! the thread-count-deterministic pooled kernels, so replaying an update
+//! log is bitwise-reproducible at any thread count, on any host
+//! (rust/tests/streaming_equivalence.rs pins this per SIMD arm).
+//!
+//! ## Warm-start contract
+//!
+//! `query()` warm-starts from the previous solve's row dual, remapped to
+//! the current layout: surviving rows keep their dual **bit-exactly**
+//! (an explicit identity fast path makes a zero-delta update bitwise
+//! invisible), evicted rows are dropped, inserted/swapped rows start at
+//! the mean of the surviving duals. The warm start falls back to a cold
+//! solve when nothing survives, and an eps change refits the feature map
+//! from the session seed and drops the dual entirely (cold restart).
+
+use std::sync::Arc;
+
+use crate::config::SinkhornConfig;
+use crate::data::Measure;
+use crate::error::{Error, Result};
+use crate::features::{FeatureMap, GaussianFeatureMap};
+use crate::kernels::FactoredKernel;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::runtime::pool::Pool;
+use crate::sinkhorn::{
+    sinkhorn_stabilized_warm, sinkhorn_warm, solve_batch_stabilized_warm, WarmSolve,
+};
+
+/// Default anchor-draw seed for sessions that don't pin one.
+pub const DEFAULT_SESSION_SEED: u64 = 0x5E55;
+
+/// One incremental update to a streaming session's support. Indices are
+/// into the side's *current* row layout (see the module docs for the
+/// swap-remove layout rule).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SessionOp {
+    /// Append a point to the x side.
+    InsertX { point: Vec<f32>, weight: f32 },
+    /// Remove x row `index`; the last x row moves into the hole.
+    EvictX { index: usize },
+    /// Replace x row `index` in place (dual restarts at the mean).
+    SwapX { index: usize, point: Vec<f32>, weight: f32 },
+    /// Append a point to the y side.
+    InsertY { point: Vec<f32>, weight: f32 },
+    /// Remove y row `index`; the last y row moves into the hole.
+    EvictY { index: usize },
+    /// Replace y row `index` in place.
+    SwapY { index: usize, point: Vec<f32>, weight: f32 },
+}
+
+impl SessionOp {
+    /// Compact wire tag (see [`crate::api::SessionDelta`] encoding).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SessionOp::InsertX { .. } => "ix",
+            SessionOp::EvictX { .. } => "ex",
+            SessionOp::SwapX { .. } => "sx",
+            SessionOp::InsertY { .. } => "iy",
+            SessionOp::EvictY { .. } => "ey",
+            SessionOp::SwapY { .. } => "sy",
+        }
+    }
+}
+
+/// Configuration for a [`StreamingSession`].
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Solver settings; `sinkhorn.epsilon` is the session's target eps
+    /// (changing it later is a cold restart, see
+    /// [`StreamingSession::set_epsilon`]).
+    pub sinkhorn: SinkhornConfig,
+    /// Positive random features r for the session's map.
+    pub rank: usize,
+    /// Seed for the Lemma-1 anchor draw (map fit and refit).
+    pub seed: u64,
+    /// Threads for the kernel's pooled applies (`1` = serial, `0` =
+    /// auto). Never changes the numbers — the pooled kernels are
+    /// deterministic in the thread count.
+    pub solver_threads: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            sinkhorn: SinkhornConfig::default(),
+            rank: 128,
+            seed: DEFAULT_SESSION_SEED,
+            solver_threads: 1,
+        }
+    }
+}
+
+/// One side (x or y) of an incrementally-maintained factored support:
+/// flat row-major buffers for points, weights, and log-feature rows,
+/// all growing/shrinking by whole rows with `Vec`'s amortised geometric
+/// reallocation.
+pub struct SupportSide {
+    dim: usize,
+    r: usize,
+    points: Vec<f32>,
+    weights: Vec<f32>,
+    log_phi: Vec<f32>,
+}
+
+impl SupportSide {
+    fn from_measure(map: &GaussianFeatureMap, m: &Measure) -> SupportSide {
+        let (n, dim, r) = (m.len(), m.dim(), map.num_features());
+        let mut side = SupportSide {
+            dim,
+            r,
+            points: Vec::with_capacity(n * dim),
+            weights: Vec::with_capacity(n),
+            log_phi: vec![0.0; n * r],
+        };
+        for i in 0..n {
+            side.points.extend_from_slice(m.points.row(i));
+            map.log_eval_into(m.points.row(i), &mut side.log_phi[i * r..(i + 1) * r]);
+        }
+        side.weights.extend_from_slice(&m.weights);
+        side
+    }
+
+    /// Current row count.
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// True when the side has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    fn check_point(&self, point: &[f32], weight: f32) -> Result<()> {
+        if point.len() != self.dim {
+            return Err(Error::Shape(format!(
+                "session point has dim {} but the support has dim {}",
+                point.len(),
+                self.dim
+            )));
+        }
+        if !(weight.is_finite() && weight > 0.0) {
+            return Err(Error::Config(format!("session weight must be finite and > 0, got {weight}")));
+        }
+        Ok(())
+    }
+
+    /// O(r): append a row (one `log_eval_into` per point).
+    fn insert(&mut self, map: &GaussianFeatureMap, point: &[f32], weight: f32) -> Result<()> {
+        self.check_point(point, weight)?;
+        self.points.extend_from_slice(point);
+        self.weights.push(weight);
+        let old = self.log_phi.len();
+        self.log_phi.resize(old + self.r, 0.0);
+        map.log_eval_into(point, &mut self.log_phi[old..]);
+        Ok(())
+    }
+
+    /// O(r): swap-remove a row (the last row moves into the hole).
+    fn evict(&mut self, index: usize) -> Result<()> {
+        let n = self.len();
+        if index >= n {
+            return Err(Error::Shape(format!("evict index {index} out of bounds (n = {n})")));
+        }
+        let last = n - 1;
+        if index != last {
+            let (d, r) = (self.dim, self.r);
+            self.points.copy_within(last * d..(last + 1) * d, index * d);
+            self.log_phi.copy_within(last * r..(last + 1) * r, index * r);
+            self.weights[index] = self.weights[last];
+        }
+        self.points.truncate(last * self.dim);
+        self.log_phi.truncate(last * self.r);
+        self.weights.truncate(last);
+        Ok(())
+    }
+
+    /// O(r): overwrite a row in place.
+    fn swap(
+        &mut self,
+        map: &GaussianFeatureMap,
+        index: usize,
+        point: &[f32],
+        weight: f32,
+    ) -> Result<()> {
+        let n = self.len();
+        if index >= n {
+            return Err(Error::Shape(format!("swap index {index} out of bounds (n = {n})")));
+        }
+        self.check_point(point, weight)?;
+        let (d, r) = (self.dim, self.r);
+        self.points[index * d..(index + 1) * d].copy_from_slice(point);
+        self.weights[index] = weight;
+        map.log_eval_into(point, &mut self.log_phi[index * r..(index + 1) * r]);
+        Ok(())
+    }
+
+    /// Snapshot this side as a [`Measure`] in the current row layout.
+    pub fn measure(&self) -> Measure {
+        Measure {
+            points: Mat::from_vec(self.len(), self.dim, self.points.clone()),
+            weights: self.weights.clone(),
+        }
+    }
+
+    fn normalized_weights(&self) -> Result<Vec<f32>> {
+        if self.is_empty() {
+            return Err(Error::Shape("session support side is empty; insert points first".into()));
+        }
+        let sum: f64 = self.weights.iter().map(|&w| w as f64).sum();
+        if !(sum.is_finite() && sum > 0.0) {
+            return Err(Error::Config(format!("session weights sum to {sum}")));
+        }
+        Ok(self.weights.iter().map(|&w| (w as f64 / sum) as f32).collect())
+    }
+}
+
+/// Both sides of an incrementally-maintained factored support plus the
+/// fixed feature map that defines the rows. Shared by the local
+/// [`StreamingSession`] and a shard worker's resident per-session Φ
+/// replica — applying the same [`SessionOp`] log to either produces
+/// bit-identical rows.
+pub struct SupportState {
+    map: Arc<GaussianFeatureMap>,
+    x: SupportSide,
+    y: SupportSide,
+}
+
+impl SupportState {
+    /// Evaluate both sides' log-feature rows under `map` (O(r·(n+m))).
+    pub fn from_measures(
+        map: Arc<GaussianFeatureMap>,
+        mu: &Measure,
+        nu: &Measure,
+    ) -> Result<SupportState> {
+        if mu.dim() != nu.dim() {
+            return Err(Error::Shape(format!(
+                "measure dims differ: {} vs {}",
+                mu.dim(),
+                nu.dim()
+            )));
+        }
+        if mu.len() == 0 || nu.len() == 0 {
+            return Err(Error::Shape("streaming sessions need non-empty initial supports".into()));
+        }
+        let x = SupportSide::from_measure(&map, mu);
+        let y = SupportSide::from_measure(&map, nu);
+        Ok(SupportState { map, x, y })
+    }
+
+    /// Apply one update op (O(r)).
+    pub fn apply(&mut self, op: &SessionOp) -> Result<()> {
+        let map = self.map.clone();
+        match op {
+            SessionOp::InsertX { point, weight } => self.x.insert(&map, point, *weight),
+            SessionOp::EvictX { index } => self.x.evict(*index),
+            SessionOp::SwapX { index, point, weight } => self.x.swap(&map, *index, point, *weight),
+            SessionOp::InsertY { point, weight } => self.y.insert(&map, point, *weight),
+            SessionOp::EvictY { index } => self.y.evict(*index),
+            SessionOp::SwapY { index, point, weight } => self.y.swap(&map, *index, point, *weight),
+        }
+    }
+
+    /// The x side.
+    pub fn x(&self) -> &SupportSide {
+        &self.x
+    }
+
+    /// The y side.
+    pub fn y(&self) -> &SupportSide {
+        &self.y
+    }
+
+    /// The fixed feature map defining the rows.
+    pub fn map(&self) -> &Arc<GaussianFeatureMap> {
+        &self.map
+    }
+
+    /// Snapshot both sides as measures in the current row layout.
+    pub fn snapshot(&self) -> (Measure, Measure) {
+        (self.x.measure(), self.y.measure())
+    }
+
+    /// Normalised marginals `(a, b)` from the stored weights.
+    pub fn marginals(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        Ok((self.x.normalized_weights()?, self.y.normalized_weights()?))
+    }
+
+    /// Materialise the factored kernel from the stored log rows
+    /// (max-shift + clamp happen inside [`FactoredKernel::from_log_factors`],
+    /// so small-eps stabilisation and log-domain escalation keep working).
+    pub fn kernel(&self, pool: &Pool) -> FactoredKernel {
+        let r = self.x.r;
+        let lx = Mat::from_vec(self.x.len(), r, self.x.log_phi.clone());
+        let ly = Mat::from_vec(self.y.len(), r, self.y.log_phi.clone());
+        FactoredKernel::from_log_factors(lx, ly).with_pool(pool.clone())
+    }
+}
+
+/// Remap a cached row dual onto the current layout: `slots[i]` names the
+/// pre-update row the current row `i` descends from (`None` for
+/// inserted/swapped rows, which start at the mean of the survivors).
+///
+/// The identity permutation takes an explicit fast path that copies the
+/// dual verbatim — no mean computation, no per-element arithmetic — so a
+/// zero-delta update is **bit-exactly** invisible to the next solve. The
+/// general path also copies surviving entries verbatim (`f64` moves, no
+/// round-trip through scalings), so the untouched index range stays
+/// bit-exact under any permutation.
+///
+/// Returns `None` when nothing survives (every original row evicted or
+/// swapped): the caller must fall back to a cold solve.
+pub fn remap_warm_dual(alpha: &[f64], slots: &[Option<usize>]) -> Option<Vec<f64>> {
+    if slots.len() == alpha.len() && slots.iter().enumerate().all(|(i, s)| *s == Some(i)) {
+        return Some(alpha.to_vec());
+    }
+    let mut sum = 0.0;
+    let mut kept = 0usize;
+    for s in slots {
+        if let Some(j) = s {
+            sum += alpha[*j];
+            kept += 1;
+        }
+    }
+    if kept == 0 {
+        return None;
+    }
+    let mean = sum / kept as f64;
+    Some(slots.iter().map(|s| match s { Some(j) => alpha[*j], None => mean }).collect())
+}
+
+/// Warm-startable single solve over a [`SupportState`] — the one code
+/// path shared by the local [`StreamingSession::query`] and a shard
+/// worker executing a session task, so the two are bitwise identical by
+/// construction. Routes through [`sinkhorn_stabilized_warm`] when
+/// `cfg.stabilize` (plain Alg. 1 with log-domain escalation on
+/// divergence) and [`sinkhorn_warm`] otherwise.
+pub fn solve_support(
+    state: &SupportState,
+    cfg: &SinkhornConfig,
+    pool: &Pool,
+    warm: Option<&[f64]>,
+) -> Result<WarmSolve> {
+    let (a, b) = state.marginals()?;
+    let kernel = state.kernel(pool);
+    if cfg.stabilize {
+        sinkhorn_stabilized_warm(&kernel, &a, &b, cfg, warm)
+    } else {
+        sinkhorn_warm(&kernel, &a, &b, cfg, warm)
+    }
+}
+
+/// What one `query()` returned.
+#[derive(Clone, Debug)]
+pub struct QueryReport {
+    /// Entropic OT objective `W_eps(a, b)` on the current support.
+    pub objective: f64,
+    /// Sinkhorn iterations this solve ran.
+    pub iterations: usize,
+    /// Final L1 marginal error.
+    pub marginal_error: f64,
+    /// Whether the stopping tolerance was met within the iteration cap.
+    pub converged: bool,
+    /// Whether the solve warm-started from a remapped previous dual.
+    pub warm_started: bool,
+    /// Whether the solve escalated to the log-domain path.
+    pub escalated: bool,
+    /// Support sizes at solve time.
+    pub n: usize,
+    /// See `n`.
+    pub m: usize,
+    /// Session version the solve saw.
+    pub version: u64,
+}
+
+/// Lifetime counters for one session.
+#[derive(Clone, Debug, Default)]
+pub struct SessionStats {
+    /// Ops applied via `update()`.
+    pub updates: u64,
+    /// Total `query()`/`query_pairs()` solves.
+    pub queries: u64,
+    /// Solves that warm-started from a remapped dual.
+    pub warm_solves: u64,
+    /// Solves that started cold.
+    pub cold_solves: u64,
+    /// Sum over warm solves of `cold_baseline_iters - iterations`
+    /// (floored at 0): the iteration savings attributable to
+    /// warm-starting, against the most recent cold solve as baseline.
+    pub iterations_saved: u64,
+    /// Iteration count of the most recent cold solve.
+    pub cold_baseline_iters: u64,
+}
+
+/// A long-lived, incrementally-updated transport problem: support state,
+/// the cached row dual from the last solve, and the provenance tracker
+/// that remaps it across updates. See the module docs for the
+/// determinism and warm-start contracts.
+pub struct StreamingSession {
+    cfg: SessionConfig,
+    state: SupportState,
+    /// Provenance of each current x row relative to the last solve.
+    slots: Vec<Option<usize>>,
+    /// Row dual of the last single solve (`WarmSolve::alpha`).
+    alpha: Option<Vec<f64>>,
+    /// Per-pair row duals of the last `query_pairs` solve.
+    pair_alphas: Option<Vec<Vec<f64>>>,
+    version: u64,
+    stats: SessionStats,
+    pool: Pool,
+}
+
+impl StreamingSession {
+    /// Open a session over initial supports, fitting the feature map
+    /// from the session seed (so the same inputs open the bit-identical
+    /// session on any host).
+    pub fn new(mu: &Measure, nu: &Measure, cfg: SessionConfig) -> Result<StreamingSession> {
+        let mut rng = Rng::seed_from(cfg.seed);
+        let map = Arc::new(GaussianFeatureMap::fit(mu, nu, cfg.sinkhorn.epsilon, cfg.rank, &mut rng));
+        Self::with_map(mu, nu, map, cfg)
+    }
+
+    /// Open a session with a pre-fitted map (e.g. shared from the
+    /// coordinator's feature cache). The map's eps should match
+    /// `cfg.sinkhorn.epsilon`.
+    pub fn with_map(
+        mu: &Measure,
+        nu: &Measure,
+        map: Arc<GaussianFeatureMap>,
+        cfg: SessionConfig,
+    ) -> Result<StreamingSession> {
+        let state = SupportState::from_measures(map, mu, nu)?;
+        let n = state.x().len();
+        let pool = Pool::new(cfg.solver_threads);
+        Ok(StreamingSession {
+            cfg,
+            state,
+            slots: (0..n).map(Some).collect(),
+            alpha: None,
+            pair_alphas: None,
+            version: 0,
+            stats: SessionStats::default(),
+            pool,
+        })
+    }
+
+    /// The session's configuration.
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// The session's target eps.
+    pub fn epsilon(&self) -> f64 {
+        self.cfg.sinkhorn.epsilon
+    }
+
+    /// Monotonic version, bumped by every `update()` and eps change.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The support state (sides, map, snapshot).
+    pub fn state(&self) -> &SupportState {
+        &self.state
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> &SessionStats {
+        &self.stats
+    }
+
+    /// Apply an op batch atomically-ish: ops apply in order, the version
+    /// bumps once. An op error (bad index/shape) surfaces immediately
+    /// with earlier ops of the batch already applied — the version still
+    /// bumps so replicas never silently diverge.
+    pub fn update(&mut self, ops: &[SessionOp]) -> Result<u64> {
+        let out = self.apply_ops(ops);
+        self.version += 1;
+        out.map(|()| self.version)
+    }
+
+    fn apply_ops(&mut self, ops: &[SessionOp]) -> Result<()> {
+        for op in ops {
+            self.state.apply(op)?;
+            match op {
+                SessionOp::InsertX { .. } => self.slots.push(None),
+                SessionOp::EvictX { index } => {
+                    self.slots.swap_remove(*index);
+                }
+                SessionOp::SwapX { index, .. } => self.slots[*index] = None,
+                SessionOp::InsertY { .. } | SessionOp::EvictY { .. } | SessionOp::SwapY { .. } => {}
+            }
+            self.stats.updates += 1;
+        }
+        Ok(())
+    }
+
+    /// True when no x-side op has touched the layout since the last
+    /// solve (the remap would be the identity).
+    fn slots_identity(&self) -> bool {
+        self.slots.iter().enumerate().all(|(i, s)| *s == Some(i))
+    }
+
+    /// Fold pending layout changes into the cached duals, so both caches
+    /// always describe the *current* layout and one provenance tracker
+    /// serves them. Bit-exact no-op on the identity.
+    fn resync(&mut self) {
+        if !self.slots_identity() {
+            if let Some(al) = self.alpha.take() {
+                self.alpha = remap_warm_dual(&al, &self.slots);
+            }
+            if let Some(pal) = self.pair_alphas.take() {
+                self.pair_alphas = pal
+                    .iter()
+                    .map(|al| remap_warm_dual(al, &self.slots))
+                    .collect::<Option<Vec<_>>>();
+            }
+        }
+        self.slots = (0..self.state.x().len()).map(Some).collect();
+    }
+
+    /// The warm dual a query would start from right now (remapped to the
+    /// current layout), or `None` for a cold start. Exposed so the
+    /// sharded serving path can ship the exact same warm start a local
+    /// query would use.
+    pub fn warm_dual(&mut self) -> Option<Vec<f64>> {
+        self.resync();
+        self.alpha.clone()
+    }
+
+    /// Record a finished solve (local or returned by a shard worker):
+    /// cache the dual, reset provenance to the identity, update stats.
+    pub fn install_result(&mut self, alpha: Vec<f64>, iterations: usize, warm: bool) {
+        debug_assert_eq!(alpha.len(), self.state.x().len());
+        self.alpha = Some(alpha);
+        self.slots = (0..self.state.x().len()).map(Some).collect();
+        self.stats.queries += 1;
+        if warm {
+            self.stats.warm_solves += 1;
+            self.stats.iterations_saved +=
+                self.stats.cold_baseline_iters.saturating_sub(iterations as u64);
+        } else {
+            self.stats.cold_solves += 1;
+            self.stats.cold_baseline_iters = iterations as u64;
+        }
+    }
+
+    /// Solve `W_eps(a, b)` on the current support, warm-starting from
+    /// the remapped previous dual when one survives.
+    pub fn query(&mut self) -> Result<QueryReport> {
+        let warm = self.warm_dual();
+        let ws = solve_support(&self.state, &self.cfg.sinkhorn, &self.pool, warm.as_deref())?;
+        let warm_started = warm.is_some();
+        let report = QueryReport {
+            objective: ws.solution.objective,
+            iterations: ws.solution.iterations,
+            marginal_error: ws.solution.marginal_error,
+            converged: ws.solution.converged,
+            warm_started,
+            escalated: ws.escalated,
+            n: self.state.x().len(),
+            m: self.state.y().len(),
+            version: self.version,
+        };
+        self.install_result(ws.alpha, report.iterations, warm_started);
+        Ok(report)
+    }
+
+    /// Batched variant: solve several weight pairs over the session's
+    /// current kernel in one column-blocked batch
+    /// ([`solve_batch_stabilized_warm`]), warm-starting every pair from
+    /// its cached dual when the previous batch had the same width and
+    /// every dual survived the remap. Slices must have the current
+    /// side lengths.
+    pub fn query_pairs(&mut self, pairs: &[(&[f32], &[f32])]) -> Vec<Result<QueryReport>> {
+        if pairs.is_empty() {
+            return Vec::new();
+        }
+        let (n, m) = (self.state.x().len(), self.state.y().len());
+        for (a, b) in pairs {
+            if a.len() != n || b.len() != m {
+                let msg = format!(
+                    "query_pairs weight shapes ({}, {}) do not match the support ({n}, {m})",
+                    a.len(),
+                    b.len()
+                );
+                return pairs.iter().map(|_| Err(Error::Shape(msg.clone()))).collect();
+            }
+        }
+        self.resync();
+        let warms: Option<Vec<Vec<f64>>> = match &self.pair_alphas {
+            Some(pal) if pal.len() == pairs.len() => Some(pal.clone()),
+            _ => None,
+        };
+        let warm_started = warms.is_some();
+        let kernel = self.state.kernel(&self.pool);
+        let outs =
+            solve_batch_stabilized_warm(&kernel, pairs, &self.cfg.sinkhorn, warms.as_deref());
+        let mut new_alphas: Vec<Vec<f64>> = Vec::with_capacity(pairs.len());
+        let mut all_ok = true;
+        let reports: Vec<Result<QueryReport>> = outs
+            .into_iter()
+            .map(|res| match res {
+                Ok(ws) => {
+                    let report = QueryReport {
+                        objective: ws.solution.objective,
+                        iterations: ws.solution.iterations,
+                        marginal_error: ws.solution.marginal_error,
+                        converged: ws.solution.converged,
+                        warm_started,
+                        escalated: ws.escalated,
+                        n,
+                        m,
+                        version: self.version,
+                    };
+                    self.stats.queries += 1;
+                    if warm_started {
+                        self.stats.warm_solves += 1;
+                    } else {
+                        self.stats.cold_solves += 1;
+                    }
+                    new_alphas.push(ws.alpha);
+                    Ok(report)
+                }
+                Err(e) => {
+                    all_ok = false;
+                    Err(e)
+                }
+            })
+            .collect();
+        self.pair_alphas = if all_ok { Some(new_alphas) } else { None };
+        reports
+    }
+
+    /// Change the target eps: refit the feature map from the session
+    /// seed over the *current* support, rebuild every log-feature row
+    /// (O(r·(n+m))), and drop all cached duals — the next query solves
+    /// cold. A no-op when `eps` is bit-identical to the current eps.
+    pub fn set_epsilon(&mut self, eps: f64) -> Result<()> {
+        if !(eps.is_finite() && eps > 0.0) {
+            return Err(Error::Config(format!("session eps must be finite and > 0, got {eps}")));
+        }
+        if eps.to_bits() == self.cfg.sinkhorn.epsilon.to_bits() {
+            return Ok(());
+        }
+        self.cfg.sinkhorn.epsilon = eps;
+        let (mu, nu) = self.state.snapshot();
+        let mut rng = Rng::seed_from(self.cfg.seed);
+        let map = Arc::new(GaussianFeatureMap::fit(&mu, &nu, eps, self.cfg.rank, &mut rng));
+        self.state = SupportState::from_measures(map, &mu, &nu)?;
+        self.alpha = None;
+        self.pair_alphas = None;
+        self.slots = (0..self.state.x().len()).map(Some).collect();
+        self.version += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    fn session(n: usize, eps: f64) -> StreamingSession {
+        let mut rng = Rng::seed_from(7);
+        let (mu, nu) = data::gaussian_blobs(n, &mut rng);
+        let cfg = SessionConfig {
+            sinkhorn: SinkhornConfig { epsilon: eps, ..SinkhornConfig::default() },
+            rank: 32,
+            seed: 11,
+            solver_threads: 1,
+        };
+        StreamingSession::new(&mu, &nu, cfg).unwrap()
+    }
+
+    fn point(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        (0..dim).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect()
+    }
+
+    #[test]
+    fn remap_identity_is_bit_exact_passthrough() {
+        let alpha = vec![0.1, -0.7, 3.25e-17, f64::from_bits(0x3FF123456789ABCD)];
+        let slots: Vec<Option<usize>> = (0..4).map(Some).collect();
+        let out = remap_warm_dual(&alpha, &slots).unwrap();
+        for (a, b) in alpha.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn remap_preserves_survivors_bitwise_and_means_new_rows() {
+        let alpha = vec![1.0, 2.0, 4.0];
+        // Row 1 evicted via swap-remove (last row moved into slot 1),
+        // then a new row appended.
+        let slots = vec![Some(0), Some(2), None];
+        let out = remap_warm_dual(&alpha, &slots).unwrap();
+        assert_eq!(out[0].to_bits(), 1.0f64.to_bits());
+        assert_eq!(out[1].to_bits(), 4.0f64.to_bits());
+        assert_eq!(out[2], (1.0 + 4.0) / 2.0);
+    }
+
+    #[test]
+    fn remap_with_no_survivors_is_cold() {
+        assert!(remap_warm_dual(&[1.0, 2.0], &[None, None]).is_none());
+        assert!(remap_warm_dual(&[1.0], &[]).is_none());
+    }
+
+    #[test]
+    fn warm_query_after_single_swap_converges_in_fewer_iters() {
+        let mut s = session(300, 0.1);
+        let cold = s.query().unwrap();
+        assert!(!cold.warm_started);
+        assert!(cold.converged);
+        let mut rng = Rng::seed_from(99);
+        let p = point(&mut rng, 2);
+        s.update(&[SessionOp::SwapX { index: 5, point: p, weight: 1.0 }]).unwrap();
+        let warm = s.query().unwrap();
+        assert!(warm.warm_started);
+        assert!(warm.converged);
+        assert!(
+            warm.iterations <= cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert_eq!(s.stats().warm_solves, 1);
+        assert_eq!(s.stats().cold_solves, 1);
+    }
+
+    #[test]
+    fn update_log_layout_is_deterministic() {
+        let mut rng = Rng::seed_from(3);
+        let (mu, nu) = data::gaussian_blobs(40, &mut rng);
+        let cfg = SessionConfig { rank: 16, ..SessionConfig::default() };
+        let run = |cfg: SessionConfig| {
+            let mut s = StreamingSession::new(&mu, &nu, cfg).unwrap();
+            let mut r2 = Rng::seed_from(17);
+            let mut ops = Vec::new();
+            for i in 0..10 {
+                ops.push(SessionOp::InsertX { point: point(&mut r2, 2), weight: 1.0 });
+                ops.push(SessionOp::EvictX { index: i });
+                ops.push(SessionOp::SwapY { index: i, point: point(&mut r2, 2), weight: 0.5 });
+            }
+            s.update(&ops).unwrap();
+            let (a, b) = s.state().snapshot();
+            (a.points.data().to_vec(), b.points.data().to_vec())
+        };
+        let one = run(SessionConfig { solver_threads: 1, ..cfg.clone() });
+        let four = run(SessionConfig { solver_threads: 4, ..cfg });
+        assert_eq!(one.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   four.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        assert_eq!(one.1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   four.1.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bad_ops_surface_typed_errors() {
+        let mut s = session(10, 0.5);
+        assert!(matches!(
+            s.update(&[SessionOp::EvictX { index: 99 }]),
+            Err(Error::Shape(_))
+        ));
+        assert!(matches!(
+            s.update(&[SessionOp::InsertX { point: vec![1.0, 2.0, 3.0], weight: 1.0 }]),
+            Err(Error::Shape(_))
+        ));
+        assert!(matches!(
+            s.update(&[SessionOp::InsertX { point: vec![0.0, 0.0], weight: -1.0 }]),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn query_pairs_warm_starts_second_batch() {
+        let mut s = session(60, 0.2);
+        let n = s.state().x().len();
+        let m = s.state().y().len();
+        let a: Vec<f32> = vec![1.0 / n as f32; n];
+        let b: Vec<f32> = vec![1.0 / m as f32; m];
+        let pairs: Vec<(&[f32], &[f32])> = vec![(&a, &b), (&a, &b)];
+        let first = s.query_pairs(&pairs);
+        assert!(first.iter().all(|r| r.is_ok()));
+        assert!(!first[0].as_ref().unwrap().warm_started);
+        let second = s.query_pairs(&pairs);
+        assert!(second.iter().all(|r| r.is_ok()));
+        assert!(second[0].as_ref().unwrap().warm_started);
+    }
+
+    #[test]
+    fn eps_change_drops_the_dual() {
+        let mut s = session(50, 0.5);
+        let _ = s.query().unwrap();
+        s.set_epsilon(0.25).unwrap();
+        let q = s.query().unwrap();
+        assert!(!q.warm_started, "eps change must cold-restart");
+    }
+}

@@ -81,7 +81,10 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
-use crate::api::{DivergenceReport, Plan, ResultEnvelope, TaskEnvelope, PLAN_FORMAT_MAJOR};
+use crate::api::{
+    DivergenceReport, Plan, ResultEnvelope, SessionDelta, SessionResultEnvelope, SessionSolveOut,
+    TaskEnvelope, PLAN_FORMAT_MAJOR,
+};
 use crate::data::Measure;
 use crate::error::{Error, Result};
 use crate::features::GaussianFeatureMap;
@@ -613,6 +616,7 @@ impl ShardCoordinator {
                     .map(|(a, bw)| (a.to_vec(), bw.to_vec()))
                     .collect(),
                 map: map.cloned(),
+                session: None,
             };
             let frame = env.encode();
             self.metrics.counter("service.shard.scattered_tasks").inc();
@@ -817,6 +821,138 @@ impl ShardCoordinator {
                 slot.unwrap_or_else(|| Err(Error::Service("shard gather left a hole".into())))
             })
             .collect()
+    }
+
+    /// Solve one streaming-session query on a single worker. Unlike
+    /// [`Self::solve_group`] there is no scatter, hedging, or retry
+    /// ladder here: a session query is pinned to one worker (its
+    /// residency home, `prefer`, when that slot is alive — otherwise the
+    /// first live slot), and any failure surfaces typed so the *service*
+    /// coordinator — the owner of the session and its duals — can retry
+    /// with a full snapshot. Returns the worker slot index that served
+    /// the query so the caller can record the new residency home.
+    pub fn solve_session(
+        &self,
+        plan: &Plan,
+        mu: &Measure,
+        nu: &Measure,
+        map: Option<&GaussianFeatureMap>,
+        delta: SessionDelta,
+        prefer: Option<usize>,
+    ) -> Result<(SessionSolveOut, usize)> {
+        if self.draining.load(Ordering::SeqCst) {
+            return Err(Error::Service("shard coordinator is draining".into()));
+        }
+        let mut guard = self.lock_inner();
+        let inner = &mut *guard;
+        self.try_rejoins(inner);
+        let widx = prefer
+            .filter(|&i| i < inner.workers.len() && inner.workers[i].alive)
+            .or_else(|| (0..inner.workers.len()).find(|&i| inner.workers[i].alive))
+            .ok_or_else(|| Error::Service("no live shard workers".into()))?;
+        let group_id = inner.next_group;
+        inner.next_group += 1;
+        let task_id = self.next_task.fetch_add(1, Ordering::SeqCst);
+        let env = TaskEnvelope {
+            task_id,
+            group_id,
+            request_ids: Vec::new(),
+            plan: plan.clone(),
+            mu: mu.clone(),
+            nu: nu.clone(),
+            pairs: Vec::new(),
+            map: map.cloned(),
+            session: Some(delta),
+        };
+        self.metrics.counter("service.shard.scattered_tasks").inc();
+        let w = &mut inner.workers[widx];
+        w.last_seen = Instant::now();
+        if w.transport.send(&env.encode()).is_err() {
+            self.mark_dead(w);
+            return Err(Error::Service(format!("session task send to worker {} failed", w.id)));
+        }
+        let deadline = Instant::now() + self.cfg.task_deadline;
+        let mut last_ping = Instant::now();
+        loop {
+            let w = &mut inner.workers[widx];
+            if Instant::now() >= deadline
+                || w.last_seen.elapsed() > self.cfg.heartbeat_timeout
+            {
+                self.mark_dead(w);
+                return Err(Error::Service(format!(
+                    "session task {task_id} timed out on worker {}",
+                    w.id
+                )));
+            }
+            if last_ping.elapsed() >= self.cfg.heartbeat_interval {
+                last_ping = Instant::now();
+                self.metrics.counter("service.shard.heartbeats").inc();
+                let mut ping = WireDoc::with_kind(kinds::PING);
+                ping.set_u64("group_id", group_id);
+                if w.transport.send(&ping.encode()).is_err() {
+                    self.mark_dead(w);
+                    return Err(Error::Service("session worker link lost".into()));
+                }
+            }
+            let frame = match w.transport.recv_timeout(Duration::from_millis(1)) {
+                Ok(Some(frame)) => frame,
+                Ok(None) => continue,
+                Err(_) => {
+                    self.mark_dead(w);
+                    return Err(Error::Service("session worker link lost".into()));
+                }
+            };
+            let doc = match WireDoc::decode(&frame) {
+                Ok(doc) => doc,
+                Err(e) => {
+                    self.metrics.counter("service.shard.corrupt_payloads").inc();
+                    self.mark_dead(w);
+                    return Err(Error::Wire(format!("corrupt session frame: {e}")));
+                }
+            };
+            w.last_seen = Instant::now();
+            match doc.kind() {
+                kinds::PONG => {}
+                "reject" => {
+                    if doc.get_u64("task_id").ok() == Some(task_id) {
+                        let msg =
+                            doc.get_str("error").unwrap_or("task rejected by worker").to_string();
+                        return Err(Error::Wire(format!("worker rejected session task: {msg}")));
+                    }
+                }
+                kinds::SESSION_RESULT => match SessionResultEnvelope::decode(&frame) {
+                    Err(e) => {
+                        self.metrics.counter("service.shard.corrupt_payloads").inc();
+                        self.mark_dead(w);
+                        return Err(e);
+                    }
+                    Ok(env) if env.task_id == task_id => {
+                        self.metrics.counter("service.shard.gathered_results").inc();
+                        return env.result.map(|out| (out, widx));
+                    }
+                    Ok(_) => {
+                        // A stale frame from an earlier query.
+                        self.metrics.counter("service.shard.duplicate_results").inc();
+                    }
+                },
+                _ => {} // stale results/pongs from earlier groups
+            }
+        }
+    }
+
+    /// Tell every live worker a session closed so its resident support
+    /// state can be dropped. Best-effort: a dead or unreachable worker
+    /// simply never held (or will naturally evict) the residency.
+    pub fn close_session(&self, session_id: u64) {
+        let mut inner = self.lock_inner();
+        let mut doc = WireDoc::with_kind(kinds::SESSION_CLOSE);
+        doc.set_u64("session.id", session_id);
+        let frame = doc.encode();
+        for w in inner.workers.iter_mut().filter(|w| w.alive) {
+            if w.transport.send(&frame).is_err() {
+                self.mark_dead(w);
+            }
+        }
     }
 
     fn mark_dead(&self, w: &mut WorkerSlot) {

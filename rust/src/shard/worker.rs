@@ -16,21 +16,42 @@
 //! thread count, and which worker runs it — the foundation of the
 //! shard layer's bitwise-identity guarantee.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
-use crate::api::{OtProblem, ResultEnvelope, TaskEnvelope, PLAN_FORMAT_MAJOR};
+use crate::api::{
+    OtProblem, ResultEnvelope, SessionResultEnvelope, SessionSolveOut, TaskEnvelope,
+    PLAN_FORMAT_MAJOR,
+};
 use crate::error::{Error, Result};
 use crate::runtime::wire::kinds;
-use crate::runtime::WireDoc;
+use crate::runtime::{Pool, WireDoc};
+use crate::session::{solve_support, SupportState};
 
 use super::transport::{TcpTransport, Transport};
 
 /// How often the receive loop wakes to poll the transport.
 const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// How many streaming sessions a worker keeps resident support state
+/// for. Residency is a pure performance cache — a miss surfaces a typed
+/// error the coordinator answers with a full-snapshot retry — so the
+/// bound only caps memory, never correctness. Eviction (smallest
+/// session id first) is deterministic so replicas with identical traffic
+/// hold identical state.
+const SESSION_RESIDENCY_CAP: usize = 16;
+
+/// What the receive loop hands the solver thread.
+enum SolverMsg {
+    /// One task envelope plus a scripted straggler delay.
+    Task(TaskEnvelope, Option<Duration>),
+    /// A streaming session closed: drop its resident state.
+    CloseSession(u64),
+}
 
 /// Behaviour knobs, used by the fault harness to script worker-level
 /// failures (see [`crate::shard::testing::FaultPlan`]). Default = no
@@ -66,24 +87,116 @@ pub fn execute_task(worker_id: u64, env: &TaskEnvelope) -> ResultEnvelope {
     ResultEnvelope::new(env.task_id, worker_id, results)
 }
 
+/// Solve one streaming-session task against the worker's residency
+/// store. Public so tests can run the exact worker computation locally.
+///
+/// Determinism: the solve runs [`crate::session::solve_support`] — the
+/// *same* function the coordinator's local session path calls — on a
+/// serial pool (pool width never changes bits; see
+/// `rust/tests/streaming_equivalence.rs`), with the warm dual the
+/// coordinator shipped. The worker owns no dual state: the solved alpha
+/// travels back in the [`SessionResultEnvelope`].
+pub fn execute_session(
+    worker_id: u64,
+    env: &TaskEnvelope,
+    resident: &mut HashMap<u64, (SupportState, u64)>,
+) -> SessionResultEnvelope {
+    SessionResultEnvelope::new(env.task_id, worker_id, session_solve(env, resident))
+}
+
+fn session_solve(
+    env: &TaskEnvelope,
+    resident: &mut HashMap<u64, (SupportState, u64)>,
+) -> Result<SessionSolveOut> {
+    let delta = env
+        .session
+        .as_ref()
+        .ok_or_else(|| Error::Wire("session solve on a task without a session".into()))?;
+    let mut state = if delta.snapshot {
+        // Full rebuild: the envelope's measures are the support in the
+        // session's deterministic layout; the exact map must ride along
+        // (a refit from `plan.seed` would be fit over the *current*
+        // snapshot, not the session's original one — different anchors,
+        // different bits).
+        let map = env
+            .map
+            .as_ref()
+            .ok_or_else(|| Error::Wire("session snapshot task without a feature map".into()))?;
+        SupportState::from_measures(Arc::new(map.clone()), &env.mu, &env.nu)?
+    } else {
+        // Delta replay on the resident copy. Any mismatch — never held,
+        // evicted, or a version skew after a lost frame — is a typed
+        // miss the coordinator answers with a snapshot retry.
+        match resident.remove(&delta.session_id) {
+            Some((state, version)) if version == delta.base_version => state,
+            Some((_, version)) => {
+                return Err(Error::Service(format!(
+                    "resident session {} is at version {version}, task expects {}",
+                    delta.session_id, delta.base_version
+                )))
+            }
+            None => {
+                return Err(Error::Service(format!(
+                    "no resident state for session {}",
+                    delta.session_id
+                )))
+            }
+        }
+    };
+    for op in &delta.ops {
+        state.apply(op)?;
+    }
+    let cfg = env.plan.sinkhorn_config();
+    let warm = delta.warm_alpha.as_deref();
+    let solve = solve_support(&state, &cfg, &Pool::serial(), warm)?;
+    if !resident.contains_key(&delta.session_id) && resident.len() >= SESSION_RESIDENCY_CAP {
+        if let Some(&evict) = resident.keys().min() {
+            resident.remove(&evict);
+        }
+    }
+    resident.insert(delta.session_id, (state, delta.version));
+    Ok(SessionSolveOut {
+        objective: solve.solution.objective,
+        iterations: solve.solution.iterations,
+        marginal_error: solve.solution.marginal_error,
+        converged: solve.solution.converged,
+        escalated: solve.escalated,
+        warm_started: warm.is_some(),
+        alpha: solve.alpha,
+    })
+}
+
 /// Run a worker until its link drops (or a scripted crash fires). Blocks
 /// the calling thread; spawn it.
 pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOptions) {
     let muted = Arc::new(AtomicBool::new(false));
-    let (task_tx, task_rx) = mpsc::channel::<(TaskEnvelope, Option<Duration>)>();
+    let (task_tx, task_rx) = mpsc::channel::<SolverMsg>();
     let solver = {
         let transport = Arc::clone(&transport);
         let muted = Arc::clone(&muted);
         thread::Builder::new()
             .name(format!("ls-shard-solve-{worker_id}"))
             .spawn(move || {
-                while let Ok((env, delay)) = task_rx.recv() {
+                // Resident session state lives with the solver thread —
+                // single-owner, no locking, dropped with the connection.
+                let mut resident: HashMap<u64, (SupportState, u64)> = HashMap::new();
+                while let Ok(msg) = task_rx.recv() {
+                    let (env, delay) = match msg {
+                        SolverMsg::Task(env, delay) => (env, delay),
+                        SolverMsg::CloseSession(id) => {
+                            resident.remove(&id);
+                            continue;
+                        }
+                    };
                     if let Some(delay) = delay {
                         thread::sleep(delay); // scripted straggler
                     }
-                    let result = execute_task(worker_id, &env);
-                    if !muted.load(Ordering::SeqCst) && transport.send(&result.encode()).is_err()
-                    {
+                    let frame = if env.session.is_some() {
+                        execute_session(worker_id, &env, &mut resident).encode()
+                    } else {
+                        execute_task(worker_id, &env).encode()
+                    };
+                    if !muted.load(Ordering::SeqCst) && transport.send(&frame).is_err() {
                         break; // link gone: nobody to report to
                     }
                 }
@@ -141,7 +254,7 @@ pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOpt
                 };
                 match TaskEnvelope::decode(&frame) {
                     Ok(env) => {
-                        if task_tx.send((env, delay)).is_err() {
+                        if task_tx.send(SolverMsg::Task(env, delay)).is_err() {
                             break;
                         }
                     }
@@ -160,6 +273,13 @@ pub fn run_worker(worker_id: u64, transport: Arc<dyn Transport>, opts: WorkerOpt
                                 break;
                             }
                         }
+                    }
+                }
+            }
+            kinds::SESSION_CLOSE => {
+                if let Ok(id) = doc.get_u64("session.id") {
+                    if task_tx.send(SolverMsg::CloseSession(id)).is_err() {
+                        break;
                     }
                 }
             }
@@ -266,6 +386,7 @@ mod tests {
             nu,
             pairs,
             map: None,
+            session: None,
         }
     }
 
@@ -297,6 +418,104 @@ mod tests {
         assert_eq!(remote.xy.u, local.xy.u);
 
         drop(coord); // link gone: worker exits
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn worker_serves_session_snapshot_then_delta_then_close() {
+        use crate::api::SessionDelta;
+        use crate::features::GaussianFeatureMap;
+        use crate::session::SessionOp;
+
+        let mut rng = Rng::seed_from(6);
+        let (mu, nu) = data::gaussian_blobs(10, &mut rng);
+        let map = GaussianFeatureMap::fit(&mu, &nu, 0.5, 8, &mut Rng::seed_from(11));
+        let plan = OtProblem::new(&mu, &nu).epsilon(0.5).rank(8).seed(11).plan().unwrap();
+        let session_task = |task_id: u64, delta: SessionDelta| TaskEnvelope {
+            task_id,
+            group_id: 0,
+            request_ids: Vec::new(),
+            plan: plan.clone(),
+            mu: mu.clone(),
+            nu: nu.clone(),
+            pairs: Vec::new(),
+            map: Some(map.clone()),
+            session: Some(delta),
+        };
+        let snapshot = SessionDelta {
+            session_id: 7,
+            base_version: 0,
+            version: 0,
+            snapshot: true,
+            ops: Vec::new(),
+            warm_alpha: None,
+        };
+
+        let (coord, worker_end) = in_proc_pair();
+        let worker_end: Arc<dyn Transport> = Arc::new(worker_end);
+        let handle = thread::spawn(move || run_worker(3, worker_end, WorkerOptions::default()));
+
+        coord.send(&session_task(1, snapshot.clone()).encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        let first = SessionResultEnvelope::decode(&frame).unwrap();
+        assert_eq!(first.task_id, 1);
+        let first = first.result.unwrap();
+        assert!(!first.warm_started, "no dual shipped on first contact");
+        assert!(!first.alpha.is_empty());
+
+        // Delta on the resident copy, warm-started from the returned dual.
+        let delta = SessionDelta {
+            session_id: 7,
+            base_version: 0,
+            version: 1,
+            snapshot: false,
+            ops: vec![SessionOp::SwapX {
+                index: 0,
+                point: mu.points.row(1).to_vec(),
+                weight: mu.weights[0],
+            }],
+            warm_alpha: Some(first.alpha.clone()),
+        };
+        coord.send(&session_task(2, delta.clone()).encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        let second = SessionResultEnvelope::decode(&frame).unwrap().result.unwrap();
+        assert!(second.warm_started);
+        assert!(second.objective.is_finite());
+
+        // A stale base version is a typed residency miss, not a panic.
+        let mut stale = delta;
+        stale.base_version = 0; // resident copy is now at version 1
+        stale.version = 2;
+        coord.send(&session_task(3, stale).encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        match SessionResultEnvelope::decode(&frame).unwrap().result {
+            Err(Error::Service(msg)) => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("expected typed residency miss, got {other:?}"),
+        }
+
+        // After a close, even the right base version misses (state gone).
+        coord.send(&session_task(4, snapshot).encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert!(SessionResultEnvelope::decode(&frame).unwrap().result.is_ok());
+        let mut close = WireDoc::with_kind(kinds::SESSION_CLOSE);
+        close.set_u64("session.id", 7);
+        coord.send(&close.encode()).unwrap();
+        let miss = SessionDelta {
+            session_id: 7,
+            base_version: 0,
+            version: 1,
+            snapshot: false,
+            ops: Vec::new(),
+            warm_alpha: None,
+        };
+        coord.send(&session_task(5, miss).encode()).unwrap();
+        let frame = coord.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        match SessionResultEnvelope::decode(&frame).unwrap().result {
+            Err(Error::Service(msg)) => assert!(msg.contains("no resident"), "{msg}"),
+            other => panic!("expected typed residency miss after close, got {other:?}"),
+        }
+
+        drop(coord);
         handle.join().unwrap();
     }
 

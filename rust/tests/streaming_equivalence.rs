@@ -1,0 +1,254 @@
+//! Streaming-session equivalence properties — the acceptance suite of
+//! the session subsystem:
+//!
+//! * **Incremental = from-scratch**: a session mutated through an op log
+//!   answers (within solver tolerance) what a fresh session opened on
+//!   the final snapshot with the *same map* answers. The supports are
+//!   bit-identical rows in a possibly different order (swap-remove
+//!   layout), so the objectives agree to tolerance, not bits.
+//! * **Zero-delta is invisible**: an empty `update()` between two
+//!   queries changes nothing — the identity remap fast path hands the
+//!   next solve the bit-exact dual, so objective and iteration count
+//!   match a session that never saw the empty update.
+//! * **Thread-count transparency**: the same op log replayed at
+//!   `solver_threads` 1 and 4 yields bitwise-identical queries.
+//! * **Full eviction degrades gracefully**: evicting every x row leaves
+//!   a session that errors typed on query and recovers (cold) once
+//!   points are inserted again.
+//! * **Eps change = cold restart**: after `set_epsilon` the session is
+//!   bit-identical to a fresh session opened at the new eps with the
+//!   same seed over the current snapshot.
+//! * **Sharded = local**: the service's session API answers with the
+//!   same bits whether queries solve in-process or on a shard worker's
+//!   resident copy (delta replay + warm dual over the wire).
+//!
+//! SIMD arms: the suite runs under whatever arm the process dispatches;
+//! CI runs it twice (default + `LINEAR_SINKHORN_SIMD=scalar`), which is
+//! what "both arms" means everywhere in this repo.
+
+use std::sync::Arc;
+
+use linear_sinkhorn::config::BatcherConfig;
+use linear_sinkhorn::coordinator::Service;
+use linear_sinkhorn::prelude::*;
+
+fn clouds(seed: u64, n: usize) -> (Measure, Measure) {
+    let mut rng = Rng::seed_from(seed);
+    data::gaussian_blobs(n, &mut rng)
+}
+
+fn session_cfg(eps: f64, threads: usize) -> SessionConfig {
+    SessionConfig {
+        sinkhorn: SinkhornConfig { epsilon: eps, ..SinkhornConfig::default() },
+        rank: 32,
+        seed: 23,
+        solver_threads: threads,
+    }
+}
+
+fn point(rng: &mut Rng, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect()
+}
+
+/// A mixed op log touching both sides: inserts, swap-remove evictions,
+/// and in-place swaps, all deterministic from `seed`.
+fn op_log(seed: u64, dim: usize, rounds: usize) -> Vec<SessionOp> {
+    let mut rng = Rng::seed_from(seed);
+    let mut ops = Vec::new();
+    for i in 0..rounds {
+        ops.push(SessionOp::InsertX { point: point(&mut rng, dim), weight: 1.0 });
+        ops.push(SessionOp::SwapY { index: i, point: point(&mut rng, dim), weight: 0.5 });
+        ops.push(SessionOp::EvictX { index: i });
+        ops.push(SessionOp::InsertY { point: point(&mut rng, dim), weight: 0.25 });
+    }
+    ops
+}
+
+#[test]
+fn incremental_session_matches_from_scratch_within_tolerance() {
+    let (mu, nu) = clouds(1, 80);
+    let mut s = StreamingSession::new(&mu, &nu, session_cfg(0.2, 1)).unwrap();
+    s.update(&op_log(5, mu.dim(), 12)).unwrap();
+    let incremental = s.query().unwrap();
+
+    // From scratch on the final snapshot, sharing the session's exact
+    // map (the supports are the same points in the session's layout, so
+    // this isolates the incremental row maintenance).
+    let (mu2, nu2) = s.state().snapshot();
+    let map = s.state().map().clone();
+    let mut fresh =
+        StreamingSession::with_map(&mu2, &nu2, map, session_cfg(0.2, 1)).unwrap();
+    let scratch = fresh.query().unwrap();
+
+    // Identical layout + identical rows => identical marginals and
+    // kernel: the cold solves are actually bitwise here, but the
+    // contract we promise is tolerance-level agreement.
+    let rel = (incremental.objective - scratch.objective).abs()
+        / scratch.objective.abs().max(1e-12);
+    assert!(
+        rel < 1e-6,
+        "incremental {} vs scratch {} (rel {rel:.3e})",
+        incremental.objective,
+        scratch.objective
+    );
+}
+
+#[test]
+fn zero_delta_update_is_bitwise_invisible() {
+    let build = || {
+        let (mu, nu) = clouds(2, 60);
+        StreamingSession::new(&mu, &nu, session_cfg(0.3, 1)).unwrap()
+    };
+    let mut plain = build();
+    let mut nudged = build();
+    let p1 = plain.query().unwrap();
+    let n1 = nudged.query().unwrap();
+    assert_eq!(p1.objective.to_bits(), n1.objective.to_bits());
+
+    // The empty update bumps the version but must not perturb the warm
+    // start: the identity remap copies the dual verbatim.
+    nudged.update(&[]).unwrap();
+    let p2 = plain.query().unwrap();
+    let n2 = nudged.query().unwrap();
+    assert!(p2.warm_started && n2.warm_started);
+    assert_eq!(p2.objective.to_bits(), n2.objective.to_bits());
+    assert_eq!(p2.iterations, n2.iterations);
+    assert_eq!(p2.marginal_error.to_bits(), n2.marginal_error.to_bits());
+    assert_eq!(n2.version, 1);
+}
+
+#[test]
+fn update_log_replay_is_bitwise_across_thread_counts() {
+    let (mu, nu) = clouds(3, 90);
+    let run = |threads: usize| {
+        let mut s =
+            StreamingSession::new(&mu, &nu, session_cfg(0.2, threads)).unwrap();
+        let mut out = Vec::new();
+        let q = s.query().unwrap();
+        out.push((q.objective, q.iterations));
+        for chunk in op_log(9, mu.dim(), 10).chunks(4) {
+            s.update(chunk).unwrap();
+            let q = s.query().unwrap();
+            out.push((q.objective, q.iterations));
+        }
+        out
+    };
+    let one = run(1);
+    let four = run(4);
+    for (a, b) in one.iter().zip(&four) {
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "{a:?} vs {b:?}");
+        assert_eq!(a.1, b.1, "{a:?} vs {b:?}");
+    }
+}
+
+#[test]
+fn evicting_every_row_degrades_gracefully_and_recovers_cold() {
+    let (mu, nu) = clouds(4, 16);
+    let n = mu.len();
+    let dim = mu.dim();
+    let mut s = StreamingSession::new(&mu, &nu, session_cfg(0.4, 1)).unwrap();
+    let _ = s.query().unwrap();
+    // High -> low evicts the tail row each time: no swap-remove moves,
+    // and after n ops the x side is empty.
+    let evictions: Vec<SessionOp> =
+        (0..n).rev().map(|i| SessionOp::EvictX { index: i }).collect();
+    s.update(&evictions).unwrap();
+    assert!(matches!(s.query(), Err(Error::Shape(_))), "empty side must error typed");
+
+    // Recovery: new points, cold solve (the old dual has no survivors).
+    let mut rng = Rng::seed_from(44);
+    let inserts: Vec<SessionOp> = (0..8)
+        .map(|_| SessionOp::InsertX { point: point(&mut rng, dim), weight: 1.0 })
+        .collect();
+    s.update(&inserts).unwrap();
+    let q = s.query().unwrap();
+    assert!(!q.warm_started, "nothing survived eviction; the solve must be cold");
+    assert!(q.objective.is_finite());
+}
+
+#[test]
+fn eps_change_matches_fresh_session_at_new_eps_bitwise() {
+    let (mu, nu) = clouds(5, 70);
+    let mut s = StreamingSession::new(&mu, &nu, session_cfg(0.5, 1)).unwrap();
+    let _ = s.query().unwrap();
+    s.update(&op_log(13, mu.dim(), 6)).unwrap();
+    s.set_epsilon(0.125).unwrap();
+    let restarted = s.query().unwrap();
+    assert!(!restarted.warm_started, "eps change must drop the dual");
+
+    // A fresh session at the new eps over the current snapshot, same
+    // seed: set_epsilon refits from the session seed, so the two maps —
+    // and everything downstream — are bit-identical.
+    let (mu2, nu2) = s.state().snapshot();
+    let mut fresh =
+        StreamingSession::new(&mu2, &nu2, session_cfg(0.125, 1)).unwrap();
+    let cold = fresh.query().unwrap();
+    assert_eq!(restarted.objective.to_bits(), cold.objective.to_bits());
+    assert_eq!(restarted.iterations, cold.iterations);
+    assert_eq!(restarted.marginal_error.to_bits(), cold.marginal_error.to_bits());
+}
+
+#[test]
+fn shared_map_arc_sessions_agree_bitwise() {
+    // Two sessions sharing one map Arc (the coordinator's cache-sharing
+    // pattern) answer identically to a session owning its own fit.
+    let (mu, nu) = clouds(6, 50);
+    let cfg = session_cfg(0.25, 1);
+    let mut rng = Rng::seed_from(cfg.seed);
+    let map = Arc::new(GaussianFeatureMap::fit(
+        &mu,
+        &nu,
+        cfg.sinkhorn.epsilon,
+        cfg.rank,
+        &mut rng,
+    ));
+    let mut owned = StreamingSession::new(&mu, &nu, cfg.clone()).unwrap();
+    let mut shared = StreamingSession::with_map(&mu, &nu, map, cfg).unwrap();
+    let a = owned.query().unwrap();
+    let b = shared.query().unwrap();
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    assert_eq!(a.iterations, b.iterations);
+}
+
+#[test]
+fn sharded_session_serving_is_bitwise_local() {
+    // The service-level contract: create / update / query through a
+    // sharded service (resident delta replay on a pinned worker) returns
+    // the same bits as the in-process session path, across a cold query,
+    // warm queries over deltas, and a post-update warm query.
+    let run = |shard_workers: usize| {
+        let cfg = ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig { max_batch: 2, max_delay_us: 100, queue_depth: 16 },
+            sinkhorn: SinkhornConfig { epsilon: 0.3, max_iters: 300, ..SinkhornConfig::default() },
+            num_features: 32,
+            shard_workers,
+            ..ServiceConfig::default()
+        };
+        let svc = Service::start(cfg).unwrap();
+        let h = svc.handle();
+        let (mu, nu) = clouds(7, 40);
+        let dim = mu.dim();
+        let id = h.session_create(mu, nu, None).unwrap();
+        let mut out = Vec::new();
+        let q = h.session_query(id).unwrap();
+        out.push((q.objective, q.iterations, q.warm_started));
+        for chunk in op_log(21, dim, 6).chunks(6) {
+            h.session_update(id, chunk).unwrap();
+            let q = h.session_query(id).unwrap();
+            out.push((q.objective, q.iterations, q.warm_started));
+        }
+        h.session_close(id).unwrap();
+        drop(h);
+        svc.shutdown();
+        out
+    };
+    let local = run(0);
+    let sharded = run(2);
+    assert!(local.len() >= 3, "need a cold query plus >= 2 delta queries");
+    for (l, s) in local.iter().zip(&sharded) {
+        assert_eq!(l.0.to_bits(), s.0.to_bits(), "objective {l:?} vs {s:?}");
+        assert_eq!(l.1, s.1, "iterations {l:?} vs {s:?}");
+        assert_eq!(l.2, s.2, "warm flag {l:?} vs {s:?}");
+    }
+}

@@ -118,6 +118,7 @@ fn task_envelopes_carry_pathological_weights_bitwise() {
             nu,
             pairs,
             map: None,
+            session: None,
         };
         let back = TaskEnvelope::decode(&task.encode()).expect("round trip");
         assert_eq!(back.task_id, task.task_id);
@@ -146,6 +147,7 @@ fn empty_measures_round_trip() {
         nu: empty,
         pairs: vec![],
         map: None,
+        session: None,
     };
     let back = TaskEnvelope::decode(&task.encode()).expect("empty measures must round trip");
     assert_eq!(back.mu.len(), 0);
@@ -230,6 +232,7 @@ fn kind_confusion_is_rejected() {
         nu: Measure::uniform(Mat::ones(2, 2)),
         pairs: vec![],
         map: None,
+        session: None,
     };
     let frame = task.encode();
     assert!(matches!(
